@@ -1,0 +1,7 @@
+"""Repo-root pytest shim: make `pytest python/tests/` work from the root
+by putting the build-time python package (python/compile) on sys.path."""
+
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "python"))

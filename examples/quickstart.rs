@@ -1,0 +1,55 @@
+//! Quickstart: select a checkpointing interval for a malleable application.
+//!
+//! ```bash
+//! cargo run --release --example quickstart
+//! ```
+//!
+//! Builds the paper's `M^mall` model for a 64-processor system, probes
+//! checkpointing intervals, and prints the UWT-optimal selection along
+//! with the probed curve.
+
+use malleable_ckpt::apps::AppProfile;
+use malleable_ckpt::config::SystemParams;
+use malleable_ckpt::markov::ModelInputs;
+use malleable_ckpt::policies::ReschedulingPolicy;
+use malleable_ckpt::runtime::ComputeEngine;
+use malleable_ckpt::search::{select_interval, SearchConfig};
+use malleable_ckpt::util::stats::fmt_duration;
+
+fn main() -> anyhow::Result<()> {
+    // A 64-processor system where each node fails about every 6 days and
+    // takes ~50 minutes to repair (Condor-pool-like volatility).
+    let system = SystemParams::from_mttf_mttr(64, 6.42, 47.13);
+
+    // The ScaLAPACK QR solver profile (workinunittime / C / R calibrated
+    // to the paper's Table I and Figure 4).
+    let app = AppProfile::qr(system.n);
+
+    // Greedy rescheduling: after every failure, continue on all
+    // functional processors.
+    let policy = ReschedulingPolicy::greedy(system.n);
+
+    // AOT JAX/Pallas artifacts through PJRT when artifacts/ exists,
+    // otherwise the native mirror.
+    let engine = ComputeEngine::auto();
+    println!("compute engine: {}\n", engine.name());
+
+    let inputs = ModelInputs::new(system, &app, &policy)?;
+    let result = select_interval(&inputs, &engine, &SearchConfig::default())?;
+
+    println!("probed UWT(I) curve:");
+    for (interval, uwt) in &result.probes {
+        let bar = "#".repeat((uwt / result.uwt * 40.0) as usize);
+        println!("  {:>10}  {uwt:7.4}  {bar}", fmt_duration(*interval));
+    }
+    println!(
+        "\nI_model = {} (UWT {:.4}, {} model builds)",
+        fmt_duration(result.interval),
+        result.uwt,
+        result.evaluations
+    );
+    println!(
+        "paper reference point (Table II, 64 procs, system-1): I_model ≈ 2.81 h"
+    );
+    Ok(())
+}

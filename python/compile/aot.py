@@ -1,0 +1,98 @@
+"""AOT compile path: lower the Layer-2 model to HLO-text artifacts.
+
+Run once by ``make artifacts`` (no-op when outputs are newer than inputs);
+the rust coordinator loads the text with ``HloModuleProto::from_text_file``
+and executes through the PJRT CPU client. HLO *text* -- NOT
+``lowered.compile()`` / proto ``.serialize()`` -- is the interchange format:
+jax >= 0.5 emits HloModuleProto with 64-bit instruction ids which the xla
+crate's xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text
+parser reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+One artifact per size bucket n in BUCKETS:
+  chain_probs_{n}.hlo.txt : (R[n,n], a_lambda, delta) -> (q_delta, q_up, q_rec)
+  expm_{n}.hlo.txt        : (R[n,n], delta)           -> (expm(R delta),)
+plus a manifest.json the rust runtime uses to discover buckets.
+
+Usage: python -m compile.aot --out-dir ../artifacts [--buckets 8,16,...]
+"""
+
+import argparse
+import json
+import os
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+# Size buckets for padded birth-death chains (chain size = S+1 <= N).
+# Power-of-two ladder keeps worst-case padding overhead at 2x rows.
+BUCKETS = [8, 16, 32, 64, 128, 256, 512]
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_chain_probs(n: int) -> str:
+    mat = jax.ShapeDtypeStruct((n, n), jnp.float64)
+    scalar = jax.ShapeDtypeStruct((), jnp.float64)
+    return to_hlo_text(jax.jit(model.chain_probs).lower(mat, scalar, scalar))
+
+
+def lower_expm(n: int) -> str:
+    mat = jax.ShapeDtypeStruct((n, n), jnp.float64)
+    scalar = jax.ShapeDtypeStruct((), jnp.float64)
+    return to_hlo_text(jax.jit(model.expm_only).lower(mat, scalar))
+
+
+def lower_chain_fast(n: int) -> str:
+    scalar = jax.ShapeDtypeStruct((), jnp.float64)
+    return to_hlo_text(
+        jax.jit(model.make_chain_probs_fast(n)).lower(scalar, scalar, scalar, scalar, scalar)
+    )
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument(
+        "--buckets",
+        default=",".join(str(b) for b in BUCKETS),
+        help="comma-separated chain size buckets",
+    )
+    args = ap.parse_args()
+    buckets = [int(b) for b in args.buckets.split(",") if b]
+
+    os.makedirs(args.out_dir, exist_ok=True)
+    manifest = {"dtype": "f64", "chain_probs": {}, "chain_fast": {}, "expm": {}}
+    for n in buckets:
+        for name, lower in (
+            ("chain_probs", lower_chain_probs),
+            ("chain_fast", lower_chain_fast),
+            ("expm", lower_expm),
+        ):
+            text = lower(n)
+            fname = f"{name}_{n}.hlo.txt"
+            path = os.path.join(args.out_dir, fname)
+            with open(path, "w") as f:
+                f.write(text)
+            manifest[name][str(n)] = fname
+            print(f"wrote {path} ({len(text)} chars)")
+
+    with open(os.path.join(args.out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2, sort_keys=True)
+    print(f"wrote {os.path.join(args.out_dir, 'manifest.json')}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,78 @@
+"""Closed-form spare-pool transition matrix (Ehrenfest fast path).
+
+The birth-death generator of the paper's Eq. 1 describes S *independent*
+two-state spares, so row s1 of ``expm(R * delta)`` is the pmf of
+
+    Bin(s1, p_uu) + Bin(S - s1, p_du)
+
+(see rust/src/markov/ehrenfest.rs for the derivation and the 2-state
+closed forms). Here the full matrix is built as a *batched convolution*
+of two binomial-pmf matrices -- O(n^2) values from O(n^3) vectorized work
+that lowers to a single HLO Convolution op, replacing the
+O(n^3 log ||R delta||) scaling-and-squaring ``expm`` on the AOT hot path.
+The generic kernel (kernels/expm.py) remains the paper-faithful oracle;
+python/tests/test_ehrenfest.py cross-checks the two.
+
+``s_max`` is passed as a *runtime* scalar so one artifact per size bucket
+serves every chain size <= bucket: rows and columns beyond ``s_max`` are
+masked and the padding block is inert for the consumer (rust reads the
+top-left (s_max+1)^2 block only).
+"""
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+import jax.numpy as jnp
+from jax.scipy.special import gammaln
+
+
+def spare_probs(lam, theta, delta):
+    """2-state closed forms (p_uu, p_du) for window delta."""
+    rho = lam + theta
+    decay = jnp.exp(-rho * delta)
+    p_stat = theta / rho
+    return p_stat + (lam / rho) * decay, p_stat * (1.0 - decay)
+
+
+def _binom_pmf_rows(counts, p, n):
+    """Row i = pmf of Bin(counts[i], p) over support 0..n-1 (masked)."""
+    k = jnp.arange(n, dtype=jnp.float64)[None, :]
+    c = counts[:, None]
+    valid = k <= c
+    # Guard the log terms: where masked, inputs are clamped to safe values.
+    p = jnp.clip(p, 1e-300, 1.0 - 1e-16)
+    log_c = gammaln(c + 1.0) - gammaln(k + 1.0) - gammaln(jnp.maximum(c - k, 0.0) + 1.0)
+    log_pmf = log_c + k * jnp.log(p) + (c - k) * jnp.log1p(-p)
+    return jnp.where(valid, jnp.exp(log_pmf), 0.0)
+
+
+def transition_matrix(s_max, lam, theta, delta, n):
+    """Full ``expm(R * delta)`` over a padded (n, n) block.
+
+    Args:
+      s_max: runtime scalar (f64), actual spare count S <= n - 1.
+      lam, theta, delta: runtime scalars.
+      n: static padded size.
+
+    Rows i <= S hold the true transition pmf; rows beyond are don't-care
+    (the row for the clamped count), never read by the consumer.
+    """
+    p_uu, p_du = spare_probs(lam, theta, delta)
+    i = jnp.minimum(jnp.arange(n, dtype=jnp.float64), s_max)
+    up_counts = i
+    down_counts = jnp.maximum(s_max - i, 0.0)
+    u = _binom_pmf_rows(up_counts, p_uu, n)  # Bin(i, p_uu)
+    v = _binom_pmf_rows(down_counts, p_du, n)  # Bin(S - i, p_du)
+
+    # Row-wise convolution E[i, :] = (u[i] * v[i])[:n] via FFT: XLA CPU's
+    # direct f64 Convolution op is naive-loop slow (~1 min at n = 256),
+    # while the FFT lowers to the fast DUCC path. Probabilities are
+    # clamped at 0 against fp ringing and renormalized to exact
+    # stochasticity.
+    m = 2 * n
+    fu = jnp.fft.rfft(u, n=m, axis=1)
+    fv = jnp.fft.rfft(v, n=m, axis=1)
+    e = jnp.fft.irfft(fu * fv, n=m, axis=1)[:, :n]
+    e = jnp.maximum(e, 0.0)
+    return e / jnp.sum(e, axis=1, keepdims=True)

@@ -1,0 +1,73 @@
+"""Layer-1 Pallas kernel: tiled dense matmul.
+
+This is the compute workhorse of model construction: the scaling-and-squaring
+matrix exponential (kernels/expm.py) performs O(log ||R*delta||) squarings of
+the birth-death generator, each of which is a dense n x n matmul. On a real
+TPU this kernel tiles (bm, bk) x (bk, bn) blocks into VMEM and drives the
+MXU; the BlockSpec index maps express the HBM<->VMEM schedule over the k
+reduction. On this image we lower with ``interpret=True`` so the kernel
+becomes plain HLO that the CPU PJRT client (xla_extension 0.5.1) can run --
+see DESIGN.md section "Hardware-Adaptation".
+
+The kernel is shape-polymorphic over square-ish sizes used by the chain
+builder (8..512) and is validated against the pure-jnp oracle in ref.py by
+python/tests/test_matmul_pallas.py (hypothesis sweeps shapes and dtypes).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Block edge used when the operand is large enough; matrices smaller than
+# the block are processed as a single tile. 64 keeps the f64 working set
+# (3 tiles) at 3 * 64*64 * 8 B = 96 KiB -- comfortably inside a TPU core's
+# VMEM budget and small enough that interpret-mode overhead stays low.
+DEFAULT_BLOCK = 64
+
+
+def _matmul_kernel(x_ref, y_ref, o_ref):
+    """Accumulating tile kernel: o[i,j] += x[i,k] @ y[k,j].
+
+    The k grid axis is innermost; the output tile is zero-initialised on the
+    first k step and accumulated on the rest.
+    """
+
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(x_ref[...], y_ref[...], preferred_element_type=o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block",))
+def matmul(x, y, *, block: int = DEFAULT_BLOCK):
+    """Tiled Pallas matmul ``x @ y`` for 2-D operands.
+
+    Requires ``x.shape = (m, k)``, ``y.shape = (k, n)``. Dimensions that are
+    not multiples of ``block`` fall back to a single whole-array tile (the
+    chain builder always passes power-of-two bucket sizes, so the tiled path
+    is the common one).
+    """
+    m, k = x.shape
+    k2, n = y.shape
+    if k != k2:
+        raise ValueError(f"contraction mismatch: {x.shape} @ {y.shape}")
+
+    bm = block if m % block == 0 else m
+    bk = block if k % block == 0 else k
+    bn = block if n % block == 0 else n
+
+    grid = (m // bm, n // bn, k // bk)
+    return pl.pallas_call(
+        _matmul_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), x.dtype),
+        interpret=True,  # CPU PJRT cannot execute Mosaic custom-calls
+    )(x, y)

@@ -1,0 +1,47 @@
+"""Pure-jnp correctness oracles for the Layer-1 kernels.
+
+These are the reference implementations the pytest suite compares the Pallas
+kernels and the AOT-lowered model functions against. They may use LAPACK-
+backed jnp.linalg / jax.scipy routines freely -- they run only at build/test
+time in Python, never through the rust PJRT path.
+"""
+
+import jax.numpy as jnp
+import jax.scipy.linalg as jsl
+
+
+def matmul(x, y):
+    """Oracle for kernels.matmul_pallas.matmul."""
+    return jnp.dot(x, y, preferred_element_type=x.dtype)
+
+
+def expm(a):
+    """Oracle for kernels.expm.expm (SciPy-grade Pade implementation)."""
+    return jsl.expm(a)
+
+
+def tridiag_solve(dl, dd, du, b):
+    """Oracle for kernels.tridiag.solve via dense jnp.linalg.solve."""
+    n = dd.shape[0]
+    t = jnp.diag(dd)
+    t = t.at[jnp.arange(1, n), jnp.arange(n - 1)].set(dl[1:])
+    t = t.at[jnp.arange(n - 1), jnp.arange(1, n)].set(du[: n - 1])
+    return jnp.linalg.solve(t, b)
+
+
+def chain_probs(r, a_lambda, delta):
+    """Oracle for model.chain_probs (dense inverse / scipy expm).
+
+    Returns (q_delta, q_up, q_rec); see python/compile/model.py for the
+    derivation and DESIGN.md section 3 for the closed forms.
+    """
+    n = r.shape[0]
+    eye = jnp.eye(n, dtype=r.dtype)
+    q_delta = jsl.expm(r * delta)
+    m = a_lambda * eye - r
+    m_inv = jnp.linalg.inv(m)
+    q_up = a_lambda * m_inv
+    decay = jnp.exp(-a_lambda * delta)
+    denom = -jnp.expm1(-a_lambda * delta)
+    q_rec = (a_lambda / denom) * (m_inv @ (eye - decay * q_delta))
+    return q_delta, q_up, q_rec

@@ -1,0 +1,119 @@
+"""Layer-2 JAX model: transition-likelihood matrices for one birth-death chain.
+
+The paper builds its malleable-application Markov model M^mall from N
+birth-death spare-pool chains, one per possible active-processor count ``a``.
+For each chain (generator ``R``, Eq. 1 of the paper) three matrices feed the
+P^mall assembly (done by the rust coordinator):
+
+  q_delta = expm(R * delta)
+      spare evolution over the fixed recovery window delta = R + I + L
+      (used for recovery -> up transitions, Eq. 2),
+
+  q_up = integral_0^inf expm(R t) * a*lam*exp(-a*lam*t) dt
+       = a*lam * (a*lam*I - R)^{-1}
+      spare evolution at the moment an up state is exited by a failure of
+      one of the ``a`` active processors (TTF-weighted, Eq. 3),
+
+  q_rec = integral_0^delta expm(R t) * f dt,  f = a*lam*e^{-a*lam*t}/(1-e^{-a*lam*delta})
+        = a*lam/(1 - e^{-a*lam*delta}) * (a*lam*I - R)^{-1} (I - e^{-a*lam*delta} expm(R delta))
+      spare evolution at a failure *within* the recovery window (Eq. 3
+      conditioned on tau < delta).
+
+The resolvent closed forms replace the eigendecomposition route of Plank &
+Thomason's MATLAB scripts: ``a*lam*I`` commutes with ``R``, so
+``integral_0^delta e^{(R - a*lam*I)t} dt = (a*lam*I - R)^{-1}(I - e^{-a*lam*delta}e^{R delta})``
+exactly. ``R`` is tridiagonal, so the resolvent is a Thomas solve
+(kernels/tridiag.py) and the exponential is scaling-and-squaring over the
+Layer-1 Pallas matmul (kernels/expm.py) -- everything lowers to pure HLO.
+
+Shapes are static per AOT artifact: the rust runtime pads a chain of size
+S+1 into the smallest bucket n >= S+1 with zero generator rows. Padding is
+inert: zero rows make expm the identity and the resolvent diagonal 1/(a*lam)
+on the pad block, so every q_* is exactly the identity there (verified by
+python/tests/test_model.py::test_padding_inert and by rust proptests).
+"""
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+import jax.numpy as jnp
+
+from .kernels import ehrenfest
+from .kernels import expm as expm_k
+from .kernels import tridiag
+
+
+def chain_probs(r, a_lambda, delta):
+    """Compute (q_delta, q_up, q_rec) for one padded birth-death generator.
+
+    Args:
+      r:        (n, n) f64 tridiagonal CTMC generator (rows sum to 0;
+                padding rows all-zero).
+      a_lambda: scalar f64, aggregate failure rate a * lambda of the active
+                processors.
+      delta:    scalar f64, recovery window R + I + L in seconds.
+
+    Returns:
+      Tuple of three (n, n) f64 row-stochastic matrices.
+    """
+    n = r.shape[0]
+    eye = jnp.eye(n, dtype=r.dtype)
+
+    q_delta = expm_k.expm(r * delta)
+
+    # Resolvent solves: M = a*lam*I - R, tridiagonal and strictly
+    # diagonally dominant (diag = a*lam + |offdiags|).
+    dl, dd, du = tridiag.bands_from_dense(-r)
+    dd = dd + a_lambda
+
+    q_up = a_lambda * tridiag.solve(dl, dd, du, eye)
+
+    decay = jnp.exp(-a_lambda * delta)
+    denom = -jnp.expm1(-a_lambda * delta)  # 1 - e^{-a lam delta}, stable
+    rhs = eye - decay * q_delta
+    q_rec = (a_lambda / denom) * tridiag.solve(dl, dd, du, rhs)
+
+    return q_delta, q_up, q_rec
+
+
+def expm_only(r, delta):
+    """Standalone ``expm(R * delta)`` entry point (perf-bench artifact)."""
+    return expm_k.expm(r * delta)
+
+
+def make_chain_probs_fast(n):
+    """Fast-path chain matrices from the spare-pool parameterization.
+
+    Returns a function of runtime scalars ``(s_max, lam, theta, a_lambda,
+    delta)`` producing the same (q_delta, q_up, q_rec) tuple as
+    ``chain_probs`` over a static (n, n) padded block, but via the
+    closed-form Ehrenfest transition matrix (kernels/ehrenfest.py) --
+    O(n^2) values instead of a scaling-and-squaring expm. One artifact per
+    bucket serves every chain size <= n because ``s_max`` is a runtime
+    input; the pad block rows/cols beyond s_max are inert for the rust
+    consumer (it reads the top-left (s_max+1)^2 block).
+    """
+
+    def chain_probs_fast(s_max, lam, theta, a_lambda, delta):
+        q_delta = ehrenfest.transition_matrix(s_max, lam, theta, delta, n)
+
+        # Bands of M = a*lam*I - R, masked beyond s_max so the padding
+        # rows decouple (fail/repair rates zero there).
+        s = jnp.arange(n, dtype=jnp.float64)
+        fail = jnp.where(s <= s_max, s * lam, 0.0)
+        repair = jnp.where(s < s_max, (s_max - s) * theta, 0.0)
+        dd = a_lambda + fail + repair
+        dl = -fail  # dl[0] ignored by the solver
+        du = -repair  # du[n-1] is zero by the mask for s_max <= n-1
+
+        eye = jnp.eye(n, dtype=jnp.float64)
+        q_up = a_lambda * tridiag.solve(dl, dd, du, eye)
+
+        decay = jnp.exp(-a_lambda * delta)
+        denom = -jnp.expm1(-a_lambda * delta)
+        rhs = eye - decay * q_delta
+        q_rec = (a_lambda / denom) * tridiag.solve(dl, dd, du, rhs)
+        return q_delta, q_up, q_rec
+
+    return chain_probs_fast

@@ -1,0 +1,26 @@
+"""Shared pytest fixtures/helpers for the compile-path test suite."""
+
+import numpy as np
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+
+def bd_generator(s_max: int, lam: float, theta: float, n: int | None = None):
+    """Dense birth-death CTMC generator over spare counts 0..s_max (Eq. 1).
+
+    State ``s`` = number of functional spares; failure of one of ``s`` spares
+    at rate ``s * lam``, repair of one of ``s_max - s`` broken spares at rate
+    ``(s_max - s) * theta``. Optionally zero-padded to ``n`` rows, matching
+    what the rust runtime ships to the AOT artifact.
+    """
+    m = s_max + 1
+    n = n or m
+    r = np.zeros((n, n))
+    for s in range(m):
+        if s > 0:
+            r[s, s - 1] = s * lam
+        if s < m - 1:
+            r[s, s + 1] = (s_max - s) * theta
+        r[s, s] = -(r[s].sum() - r[s, s])
+    return r

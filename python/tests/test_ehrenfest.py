@@ -1,0 +1,107 @@
+"""Closed-form Ehrenfest transition matrix vs the generic expm oracle,
+and the fast chain_probs path vs the paper-faithful one."""
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile import model
+from compile.kernels import ehrenfest, ref
+from .conftest import bd_generator
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    s_max=st.integers(0, 40),
+    mttf_days=st.floats(0.5, 150.0),
+    mttr_min=st.floats(5.0, 300.0),
+    delta=st.floats(1.0, 3.0e5),
+)
+def test_matches_generic_expm(s_max, mttf_days, mttr_min, delta):
+    lam = 1.0 / (mttf_days * 86_400.0)
+    theta = 1.0 / (mttr_min * 60.0)
+    n = s_max + 1
+    fast = ehrenfest.transition_matrix(
+        jnp.float64(s_max), jnp.float64(lam), jnp.float64(theta), jnp.float64(delta), n
+    )
+    oracle = ref.expm(jnp.asarray(bd_generator(s_max, lam, theta)) * delta)
+    np.testing.assert_allclose(np.asarray(fast), np.asarray(oracle), rtol=1e-8, atol=1e-11)
+
+
+@settings(max_examples=12, deadline=None)
+@given(s_max=st.integers(0, 20), pad_to=st.sampled_from([32, 64]), delta=st.floats(60.0, 1e5))
+def test_padding_rows_inert(s_max, pad_to, delta):
+    """With s_max < n, the live block must equal the unpadded computation."""
+    lam, theta = 3e-6, 4e-4
+    full = ehrenfest.transition_matrix(
+        jnp.float64(s_max), jnp.float64(lam), jnp.float64(theta), jnp.float64(delta), pad_to
+    )
+    live = ehrenfest.transition_matrix(
+        jnp.float64(s_max), jnp.float64(lam), jnp.float64(theta), jnp.float64(delta), s_max + 1
+    )
+    m = s_max + 1
+    np.testing.assert_allclose(np.asarray(full)[:m, :m], np.asarray(live), rtol=1e-10, atol=1e-13)
+    # Columns beyond s_max carry no probability in live rows.
+    np.testing.assert_allclose(np.asarray(full)[:m, m:], 0.0, atol=1e-13)
+
+
+@settings(max_examples=12, deadline=None)
+@given(
+    s_max=st.integers(0, 30),
+    a=st.integers(1, 256),
+    delta=st.floats(300.0, 2e5),
+)
+def test_chain_fast_matches_chain_probs(s_max, a, delta):
+    """The fast artifact path must agree with the paper-faithful one."""
+    lam, theta = 2.2e-6, 3.1e-4
+    a_lam = a * lam
+    n = s_max + 1
+    fast_fn = model.make_chain_probs_fast(n)
+    fast = fast_fn(
+        jnp.float64(s_max), jnp.float64(lam), jnp.float64(theta),
+        jnp.float64(a_lam), jnp.float64(delta),
+    )
+    slow = model.chain_probs(
+        jnp.asarray(bd_generator(s_max, lam, theta)), jnp.float64(a_lam), jnp.float64(delta)
+    )
+    for name, f, s in zip(("q_delta", "q_up", "q_rec"), fast, slow):
+        np.testing.assert_allclose(
+            np.asarray(f), np.asarray(s), rtol=1e-7, atol=1e-10, err_msg=name
+        )
+
+
+def test_chain_fast_padded_block_decoupled():
+    """Padding must not leak into the live block through the tridiag solve."""
+    n, s_max = 16, 9
+    lam, theta, a_lam, delta = 2e-6, 4e-4, 1e-4, 7200.0
+    fast_fn = model.make_chain_probs_fast(n)
+    padded = fast_fn(
+        jnp.float64(s_max), jnp.float64(lam), jnp.float64(theta),
+        jnp.float64(a_lam), jnp.float64(delta),
+    )
+    exact_fn = model.make_chain_probs_fast(s_max + 1)
+    exact = exact_fn(
+        jnp.float64(s_max), jnp.float64(lam), jnp.float64(theta),
+        jnp.float64(a_lam), jnp.float64(delta),
+    )
+    m = s_max + 1
+    for p, e in zip(padded, exact):
+        np.testing.assert_allclose(np.asarray(p)[:m, :m], np.asarray(e), rtol=1e-9, atol=1e-12)
+
+
+def test_spare_probs_limits():
+    p_uu, p_du = ehrenfest.spare_probs(jnp.float64(1e-6), jnp.float64(1e-3), jnp.float64(0.0))
+    assert abs(float(p_uu) - 1.0) < 1e-15
+    assert abs(float(p_du)) < 1e-15
+
+
+def test_aot_chain_fast_lowers_clean():
+    from compile import aot
+
+    text = aot.lower_chain_fast(8)
+    assert "custom-call" not in text
+    assert "f64[8,8]" in text

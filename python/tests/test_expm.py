@@ -1,0 +1,83 @@
+"""Scaling-and-squaring expm kernel vs jax.scipy Pade oracle."""
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import expm, ref
+from .conftest import bd_generator
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    s_max=st.integers(1, 48),
+    mttf_days=st.floats(0.5, 200.0),
+    mttr_min=st.floats(5.0, 300.0),
+    delta=st.floats(300.0, 3.0e5),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_bd_generator_matches_oracle(s_max, mttf_days, mttr_min, delta, seed):
+    """Exponentials of the actual model generators across the paper's
+    lambda/theta/delta ranges (LANL batch to Condor volatility)."""
+    lam = 1.0 / (mttf_days * 86400.0)
+    theta = 1.0 / (mttr_min * 60.0)
+    r = jnp.asarray(bd_generator(s_max, lam, theta)) * delta
+    got = expm.expm(r)
+    want = ref.expm(r)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-8, atol=1e-11)
+    # A CTMC transition matrix: row-stochastic, non-negative.
+    g = np.asarray(got)
+    np.testing.assert_allclose(g.sum(axis=1), np.ones(s_max + 1), rtol=1e-9)
+    assert (g > -1e-12).all()
+
+
+@settings(max_examples=15, deadline=None)
+@given(n=st.sampled_from([2, 5, 8, 16, 33]), scale=st.floats(1e-3, 50.0), seed=st.integers(0, 2**31 - 1))
+def test_random_dense_matches_oracle(n, scale, seed):
+    rng = np.random.default_rng(seed)
+    a = jnp.asarray(rng.standard_normal((n, n)) * scale / n)
+    got = expm.expm(a)
+    want = ref.expm(a)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-7, atol=1e-9)
+
+
+def test_zero_matrix_is_identity():
+    z = jnp.zeros((16, 16), dtype=jnp.float64)
+    np.testing.assert_allclose(np.asarray(expm.expm(z)), np.eye(16), atol=1e-15)
+
+
+def test_diagonal_matrix():
+    d = jnp.diag(jnp.asarray([-3.0, -1.0, 0.0, 2.0]))
+    got = np.asarray(expm.expm(d))
+    np.testing.assert_allclose(np.diag(got), np.exp([-3.0, -1.0, 0.0, 2.0]), rtol=1e-12)
+    assert np.allclose(got - np.diag(np.diag(got)), 0.0, atol=1e-14)
+
+
+def test_nilpotent():
+    """exp of strictly upper triangular 2x2 has closed form."""
+    a = jnp.asarray([[0.0, 5.0], [0.0, 0.0]])
+    np.testing.assert_allclose(
+        np.asarray(expm.expm(a)), np.array([[1.0, 5.0], [0.0, 1.0]]), atol=1e-14
+    )
+
+
+def test_semigroup_property():
+    """expm(A) @ expm(A) == expm(2A) -- exercised via different squaring counts."""
+    r = jnp.asarray(bd_generator(12, 2e-6, 4e-4)) * 5.0e4
+    e1 = np.asarray(expm.expm(r))
+    e2 = np.asarray(expm.expm(2.0 * r))
+    np.testing.assert_allclose(e1 @ e1, e2, rtol=1e-8, atol=1e-11)
+
+
+def test_large_norm_many_squarings():
+    """||A|| ~ 1e4: the dynamic while-loop must take ~16 squarings."""
+    r = jnp.asarray(bd_generator(63, 5e-6, 3.5e-4)) * 5.0e5
+    got = np.asarray(expm.expm(r))
+    # Long-horizon CTMC: every row approaches the stationary distribution.
+    np.testing.assert_allclose(got.sum(axis=1), np.ones(64), rtol=1e-8)
+    spread = got.max(axis=0) - got.min(axis=0)
+    assert spread.max() < 1e-6, "rows should have mixed to stationarity"

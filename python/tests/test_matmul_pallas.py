@@ -1,0 +1,96 @@
+"""Layer-1 Pallas matmul kernel vs pure-jnp oracle (hypothesis sweeps)."""
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import matmul_pallas, ref
+
+SEED = st.integers(0, 2**31 - 1)
+
+
+def _rand(rng, shape, dtype):
+    a = rng.standard_normal(shape)
+    return jnp.asarray(a, dtype=dtype)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    m=st.sampled_from([1, 3, 8, 17, 64, 128]),
+    k=st.sampled_from([1, 5, 8, 64, 96]),
+    n=st.sampled_from([1, 2, 8, 64, 128]),
+    seed=SEED,
+)
+def test_matches_oracle_shapes(m, k, n, seed):
+    rng = np.random.default_rng(seed)
+    x = _rand(rng, (m, k), jnp.float64)
+    y = _rand(rng, (k, n), jnp.float64)
+    got = matmul_pallas.matmul(x, y)
+    want = ref.matmul(x, y)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-12, atol=1e-12)
+
+
+@settings(max_examples=10, deadline=None)
+@given(dtype=st.sampled_from(["float32", "float64"]), seed=SEED)
+def test_dtypes(dtype, seed):
+    rng = np.random.default_rng(seed)
+    dt = jnp.dtype(dtype)
+    x = _rand(rng, (32, 32), dt)
+    y = _rand(rng, (32, 32), dt)
+    got = matmul_pallas.matmul(x, y)
+    assert got.dtype == dt
+    tol = 1e-4 if dtype == "float32" else 1e-12
+    np.testing.assert_allclose(
+        np.asarray(got), np.asarray(ref.matmul(x, y)), rtol=tol, atol=tol
+    )
+
+
+@settings(max_examples=8, deadline=None)
+@given(block=st.sampled_from([16, 32, 64, 128]), seed=SEED)
+def test_block_sizes_equivalent(block, seed):
+    """Tiling must not change the result (beyond fp addition order)."""
+    rng = np.random.default_rng(seed)
+    x = _rand(rng, (128, 128), jnp.float64)
+    y = _rand(rng, (128, 128), jnp.float64)
+    got = matmul_pallas.matmul(x, y, block=block)
+    np.testing.assert_allclose(
+        np.asarray(got), np.asarray(ref.matmul(x, y)), rtol=1e-11, atol=1e-11
+    )
+
+
+def test_identity():
+    eye = jnp.eye(64, dtype=jnp.float64)
+    rng = np.random.default_rng(7)
+    x = _rand(rng, (64, 64), jnp.float64)
+    np.testing.assert_allclose(np.asarray(matmul_pallas.matmul(x, eye)), np.asarray(x))
+    np.testing.assert_allclose(np.asarray(matmul_pallas.matmul(eye, x)), np.asarray(x))
+
+
+def test_zero():
+    z = jnp.zeros((16, 16), dtype=jnp.float64)
+    rng = np.random.default_rng(8)
+    x = _rand(rng, (16, 16), jnp.float64)
+    assert np.all(np.asarray(matmul_pallas.matmul(x, z)) == 0.0)
+
+
+def test_contraction_mismatch_raises():
+    x = jnp.zeros((4, 5), dtype=jnp.float64)
+    y = jnp.zeros((6, 4), dtype=jnp.float64)
+    with pytest.raises(ValueError, match="contraction mismatch"):
+        matmul_pallas.matmul(x, y)
+
+
+def test_associativity_with_oracle_chain():
+    """(x@y)@z via kernel equals oracle chain within fp tolerance."""
+    rng = np.random.default_rng(9)
+    x = _rand(rng, (64, 64), jnp.float64)
+    y = _rand(rng, (64, 64), jnp.float64)
+    z = _rand(rng, (64, 64), jnp.float64)
+    got = matmul_pallas.matmul(matmul_pallas.matmul(x, y), z)
+    want = ref.matmul(ref.matmul(x, y), z)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-10, atol=1e-10)

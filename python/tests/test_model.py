@@ -1,0 +1,104 @@
+"""Layer-2 chain_probs vs pure-jnp oracle; padding and stochasticity invariants."""
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile import model
+from compile.kernels import ref
+from .conftest import bd_generator
+
+
+def _params(s_max, a, mttf_days, mttr_min, delta):
+    lam = 1.0 / (mttf_days * 86400.0)
+    theta = 1.0 / (mttr_min * 60.0)
+    return lam, theta, a * lam, delta
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    s_max=st.integers(0, 40),
+    a=st.integers(1, 256),
+    mttf_days=st.floats(1.0, 150.0),
+    mttr_min=st.floats(10.0, 200.0),
+    delta=st.floats(600.0, 2.0e5),
+)
+def test_matches_oracle(s_max, a, mttf_days, mttr_min, delta):
+    lam, theta, a_lam, delta = _params(s_max, a, mttf_days, mttr_min, delta)
+    r = jnp.asarray(bd_generator(s_max, lam, theta))
+    got = model.chain_probs(r, jnp.float64(a_lam), jnp.float64(delta))
+    want = ref.chain_probs(r, jnp.float64(a_lam), jnp.float64(delta))
+    for g, w in zip(got, want):
+        np.testing.assert_allclose(np.asarray(g), np.asarray(w), rtol=1e-7, atol=1e-10)
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    s_max=st.integers(0, 20),
+    pad_to=st.sampled_from([32, 64]),
+    a=st.integers(1, 64),
+    delta=st.floats(600.0, 1.0e5),
+)
+def test_padding_inert(s_max, pad_to, a, delta):
+    """Zero-padded generator rows must yield an exact identity pad block and
+    leave the live block equal to the unpadded computation."""
+    lam, theta = 3e-6, 4e-4
+    a_lam = a * lam
+    r_pad = jnp.asarray(bd_generator(s_max, lam, theta, n=pad_to))
+    r_live = jnp.asarray(bd_generator(s_max, lam, theta))
+    got_pad = model.chain_probs(r_pad, jnp.float64(a_lam), jnp.float64(delta))
+    got_live = model.chain_probs(r_live, jnp.float64(a_lam), jnp.float64(delta))
+    m = s_max + 1
+    for gp, gl in zip(got_pad, got_live):
+        gp = np.asarray(gp)
+        np.testing.assert_allclose(gp[:m, :m], np.asarray(gl), rtol=1e-9, atol=1e-12)
+        np.testing.assert_allclose(gp[m:, m:], np.eye(pad_to - m), atol=1e-10)
+        np.testing.assert_allclose(gp[:m, m:], 0.0, atol=1e-10)
+        np.testing.assert_allclose(gp[m:, :m], 0.0, atol=1e-10)
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    s_max=st.integers(0, 48),
+    a=st.integers(1, 512),
+    mttf_days=st.floats(0.5, 200.0),
+    mttr_min=st.floats(5.0, 500.0),
+    delta=st.floats(300.0, 5.0e5),
+)
+def test_outputs_row_stochastic(s_max, a, mttf_days, mttr_min, delta):
+    lam, theta, a_lam, delta = _params(s_max, a, mttf_days, mttr_min, delta)
+    r = jnp.asarray(bd_generator(s_max, lam, theta))
+    for q in model.chain_probs(r, jnp.float64(a_lam), jnp.float64(delta)):
+        q = np.asarray(q)
+        np.testing.assert_allclose(q.sum(axis=1), np.ones(s_max + 1), rtol=1e-8)
+        assert (q > -1e-10).all()
+
+
+def test_single_state_chain():
+    """S = 0 (no spares): all matrices are the 1x1 identity."""
+    r = jnp.zeros((1, 1), dtype=jnp.float64)
+    for q in model.chain_probs(r, jnp.float64(1e-4), jnp.float64(3600.0)):
+        np.testing.assert_allclose(np.asarray(q), [[1.0]], atol=1e-12)
+
+
+def test_tiny_delta_qrec_stable():
+    """delta -> 0: conditioning denominator 1-e^{-a lam delta} underflows
+    without expm1; q_rec must stay row-stochastic."""
+    r = jnp.asarray(bd_generator(8, 2e-6, 4e-4))
+    _, _, q_rec = model.chain_probs(r, jnp.float64(1e-5), jnp.float64(1e-3))
+    q = np.asarray(q_rec)
+    np.testing.assert_allclose(q.sum(axis=1), np.ones(9), rtol=1e-6)
+    # In the delta->0 limit no spare transitions can happen: q_rec -> I.
+    np.testing.assert_allclose(q, np.eye(9), atol=1e-5)
+
+
+def test_huge_delta_qrec_approaches_qup():
+    """delta -> inf: conditioning on tau < delta vanishes, q_rec -> q_up."""
+    r = jnp.asarray(bd_generator(8, 2e-6, 4e-4))
+    q_delta, q_up, q_rec = model.chain_probs(r, jnp.float64(1e-4), jnp.float64(1e9))
+    np.testing.assert_allclose(np.asarray(q_rec), np.asarray(q_up), rtol=1e-6, atol=1e-9)
+    del q_delta

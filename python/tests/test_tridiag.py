@@ -1,0 +1,94 @@
+"""Thomas tridiagonal solve vs dense jnp.linalg.solve oracle."""
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref, tridiag
+from .conftest import bd_generator
+
+
+def _dd_system(rng, n, m):
+    """Random strictly diagonally dominant tridiagonal system."""
+    dl = rng.standard_normal(n)
+    du = rng.standard_normal(n)
+    dl[0] = 0.0
+    du[-1] = 0.0
+    dd = np.abs(rng.standard_normal(n)) + np.abs(dl) + np.abs(du) + 0.5
+    dd *= np.where(rng.random(n) < 0.5, -1.0, 1.0)  # sign-indefinite diagonal
+    b = rng.standard_normal((n, m))
+    return tuple(jnp.asarray(v) for v in (dl, dd, du, b))
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    n=st.sampled_from([2, 3, 5, 16, 64, 200]),
+    m=st.sampled_from([1, 2, 16, 64]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_matches_oracle(n, m, seed):
+    rng = np.random.default_rng(seed)
+    dl, dd, du, b = _dd_system(rng, n, m)
+    got = tridiag.solve(dl, dd, du, b)
+    want = ref.tridiag_solve(dl, dd, du, b)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-9, atol=1e-10)
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    s_max=st.integers(1, 64),
+    a_lambda=st.floats(1e-7, 1e-2),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_resolvent_of_generator(s_max, a_lambda, seed):
+    """The exact system the model solves: (a*lam*I - R) X = I."""
+    rng = np.random.default_rng(seed)
+    lam = 10.0 ** rng.uniform(-7, -4)
+    theta = 10.0 ** rng.uniform(-5, -2)
+    r = bd_generator(s_max, lam, theta)
+    n = s_max + 1
+    mneg = jnp.asarray(-r)
+    dl, dd, du = tridiag.bands_from_dense(mneg)
+    dd = dd + a_lambda
+    x = tridiag.solve(dl, dd, du, jnp.eye(n, dtype=jnp.float64))
+    m = a_lambda * np.eye(n) - r
+    np.testing.assert_allclose(m @ np.asarray(x), np.eye(n), atol=1e-9)
+    # a*lam * resolvent is row-stochastic (it's Q^Up).
+    np.testing.assert_allclose((a_lambda * np.asarray(x)).sum(axis=1), np.ones(n), rtol=1e-9)
+
+
+def test_residual_property():
+    """T @ solve(T, b) == b for assembled dense T."""
+    rng = np.random.default_rng(42)
+    n = 50
+    dl, dd, du, b = _dd_system(rng, n, 7)
+    x = np.asarray(tridiag.solve(dl, dd, du, b))
+    t = np.diag(np.asarray(dd))
+    t[np.arange(1, n), np.arange(n - 1)] = np.asarray(dl)[1:]
+    t[np.arange(n - 1), np.arange(1, n)] = np.asarray(du)[: n - 1]
+    np.testing.assert_allclose(t @ x, np.asarray(b), atol=1e-9)
+
+
+def test_diagonal_only():
+    dd = jnp.asarray([2.0, -4.0, 8.0])
+    z = jnp.zeros(3, dtype=jnp.float64)
+    b = jnp.asarray([[2.0], [8.0], [4.0]])
+    x = tridiag.solve(z, dd, z, b)
+    np.testing.assert_allclose(np.asarray(x)[:, 0], [1.0, -2.0, 0.5], atol=1e-14)
+
+
+def test_bands_from_dense_roundtrip():
+    rng = np.random.default_rng(3)
+    n = 10
+    dl, dd, du, _ = _dd_system(rng, n, 1)
+    t = np.diag(np.asarray(dd))
+    t[np.arange(1, n), np.arange(n - 1)] = np.asarray(dl)[1:]
+    t[np.arange(n - 1), np.arange(1, n)] = np.asarray(du)[: n - 1]
+    gl, gd, gu = tridiag.bands_from_dense(jnp.asarray(t))
+    np.testing.assert_allclose(np.asarray(gd), np.asarray(dd))
+    np.testing.assert_allclose(np.asarray(gl)[1:], np.asarray(dl)[1:])
+    np.testing.assert_allclose(np.asarray(gu)[: n - 1], np.asarray(du)[: n - 1])

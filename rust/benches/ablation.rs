@@ -1,0 +1,174 @@
+//! `cargo bench --bench ablation` — design-choice ablations called out in
+//! DESIGN.md:
+//!
+//! * paper §IV threshold study: Eq. 8 score `α(1−threserror) + β·elims`
+//!   over a grid of thresholds × (λ, I, C) experiments, reproducing the
+//!   thres = 0.0006 sweet spot and the 27–54% elimination range;
+//! * recovery-cost aggregation (predecessor-mean R̄ vs min/max) —
+//!   quantifying the paper-ambiguity documented in DESIGN.md §3;
+//! * assembly pruning epsilon sensitivity.
+
+use malleable_ckpt::config::SystemParams;
+use malleable_ckpt::markov::reduction::eliminate_up_states;
+use malleable_ckpt::markov::stationary::{stationary, StationaryOptions};
+use malleable_ckpt::markov::{uwt, BuildOptions, MalleableModel, ModelInputs};
+use malleable_ckpt::policies::ReschedulingPolicy;
+use malleable_ckpt::runtime::ComputeEngine;
+
+fn inputs(n: usize, mttf_days: f64, ckpt: f64, rec: f64) -> ModelInputs {
+    let sys = SystemParams::from_mttf_mttr(n, mttf_days, 50.0);
+    ModelInputs::from_raw(
+        sys,
+        vec![ckpt; n],
+        (1..=n).map(|a| (a as f64).powf(0.85)).collect(),
+        vec![rec; n],
+        ReschedulingPolicy::greedy(n),
+    )
+    .unwrap()
+}
+
+/// Paper §IV: score(thres) = α(1−threserror) + β·(elims fraction).
+fn thres_study() {
+    println!("\n### Ablation: up-state elimination threshold (paper sec. IV, Eq. 8)");
+    let engine = ComputeEngine::native();
+    let (alpha, beta) = (0.7, 0.3);
+    let thresholds = [1e-5, 6e-5, 2e-4, 6e-4, 2e-3, 6e-3, 2e-2, 6e-2];
+
+    // The paper's 750-experiment grid, scaled: λ × I × (R, C) variations.
+    let mut grid = Vec::new();
+    for &mttf in &[2.0, 20.0, 100.0] {
+        for &interval in &[900.0, 3_600.0, 14_400.0] {
+            for &(c, r) in &[(30.0, 15.0), (100.0, 30.0)] {
+                grid.push((inputs(24, mttf, c, r), interval));
+            }
+        }
+    }
+
+    println!(
+        "{:<10} {:>12} {:>12} {:>10} {:>10}",
+        "thres", "mean err", "mean elims%", "score", "wins"
+    );
+    let mut wins = vec![0usize; thresholds.len()];
+    let mut rows = Vec::new();
+    for (ti, &thres) in thresholds.iter().enumerate() {
+        let mut errs = Vec::new();
+        let mut elim_fracs = Vec::new();
+        let mut scores = Vec::new();
+        for (inp, interval) in &grid {
+            let full = MalleableModel::build(
+                inp,
+                &engine,
+                *interval,
+                &BuildOptions { thres: None, ..Default::default() },
+            )
+            .unwrap();
+            let ts = full.transitions();
+            let red = eliminate_up_states(ts, thres);
+            let (pi, _) = stationary(&red.ts.p, &StationaryOptions::default()).unwrap();
+            let reduced_uwt = uwt::evaluate(&red.ts, &pi).uwt;
+            let err = ((full.uwt() - reduced_uwt) / full.uwt()).abs().min(1.0);
+            let up_total = ts.kinds.iter().filter(|k| k.is_up()).count();
+            let elim_frac = red.eliminated as f64 / up_total.max(1) as f64;
+            errs.push(err);
+            elim_fracs.push(elim_frac);
+            scores.push(alpha * (1.0 - err) + beta * elim_frac);
+        }
+        let mean = |v: &[f64]| v.iter().sum::<f64>() / v.len() as f64;
+        rows.push((thres, mean(&errs), mean(&elim_fracs), scores.clone()));
+        println!(
+            "{:<10.0e} {:>12.5} {:>12.1} {:>10.4} {:>10}",
+            thres,
+            mean(&errs),
+            100.0 * mean(&elim_fracs),
+            alpha * (1.0 - mean(&errs)) + beta * mean(&elim_fracs),
+            "",
+        );
+        let _ = ti;
+    }
+    // Per-experiment winner count (the paper picks the thres winning most).
+    let n_exp = rows[0].3.len();
+    for e in 0..n_exp {
+        let best = (0..thresholds.len())
+            .max_by(|&a, &b| rows[a].3[e].partial_cmp(&rows[b].3[e]).unwrap())
+            .unwrap();
+        wins[best] += 1;
+    }
+    for (ti, &thres) in thresholds.iter().enumerate() {
+        if wins[ti] > 0 {
+            println!("thres {thres:.0e}: wins {} of {n_exp} experiments", wins[ti]);
+        }
+    }
+}
+
+/// Recovery-cost aggregation ablation (DESIGN.md §3).
+fn recovery_cost_model() {
+    println!("\n### Ablation: recovery-cost aggregation R̄ (mean vs min vs max)");
+    let engine = ComputeEngine::native();
+    let n = 24;
+    let sys = SystemParams::from_mttf_mttr(n, 6.0, 50.0);
+    let app = malleable_ckpt::apps::AppProfile::qr(n);
+    let policy = ReschedulingPolicy::greedy(n);
+    println!("{:<10} {:>12} {:>12}", "agg", "UWT@1h", "UWT@4h");
+    for agg in ["mean", "min", "max"] {
+        let rec_into: Vec<f64> = (1..=n)
+            .map(|l| {
+                let costs: Vec<f64> = (1..=n).map(|k| app.recovery_cost(k, l)).collect();
+                match agg {
+                    "min" => costs.iter().cloned().fold(f64::INFINITY, f64::min),
+                    "max" => costs.iter().cloned().fold(f64::NEG_INFINITY, f64::max),
+                    _ => costs.iter().sum::<f64>() / costs.len() as f64,
+                }
+            })
+            .collect();
+        let inp = ModelInputs::from_raw(
+            sys,
+            (1..=n).map(|a| app.checkpoint_cost(a)).collect(),
+            (1..=n).map(|a| app.work_per_sec(a)).collect(),
+            rec_into,
+            policy.clone(),
+        )
+        .unwrap();
+        let u1 = MalleableModel::build(&inp, &engine, 3_600.0, &BuildOptions::default())
+            .unwrap()
+            .uwt();
+        let u4 = MalleableModel::build(&inp, &engine, 4.0 * 3_600.0, &BuildOptions::default())
+            .unwrap()
+            .uwt();
+        println!("{agg:<10} {u1:>12.4} {u4:>12.4}");
+    }
+    println!("(spread quantifies the predecessor-average approximation error)");
+}
+
+/// Assembly pruning epsilon: UWT must be insensitive below 1e-10.
+fn pruning_sensitivity() {
+    println!("\n### Ablation: assembly pruning epsilon (PRUNE_EPS)");
+    // PRUNE_EPS is a compile-time constant; this ablation verifies the
+    // model is insensitive by comparing against reduction thresholds far
+    // above it (if UWT were sensitive at 1e-14, it would move at 1e-6).
+    let engine = ComputeEngine::native();
+    let inp = inputs(24, 10.0, 60.0, 20.0);
+    let base = MalleableModel::build(
+        &inp,
+        &engine,
+        3_600.0,
+        &BuildOptions { thres: None, ..Default::default() },
+    )
+    .unwrap();
+    for thres in [1e-10, 1e-8, 1e-6] {
+        let m = MalleableModel::build(
+            &inp,
+            &engine,
+            3_600.0,
+            &BuildOptions { thres: Some(thres), ..Default::default() },
+        )
+        .unwrap();
+        let rel = ((base.uwt() - m.uwt()) / base.uwt()).abs();
+        println!("thres {thres:.0e}: ΔUWT = {rel:.2e}, states {} -> {}", base.n_states(), m.n_states());
+    }
+}
+
+fn main() {
+    thres_study();
+    recovery_cost_model();
+    pruning_sensitivity();
+}

@@ -1,0 +1,32 @@
+//! `cargo bench --bench figures` — regenerates the paper's Figures 4–6
+//! and the §VI-D moldable-vs-malleable contrast.
+
+use malleable_ckpt::experiments::{extensions, figures, ExperimentOptions};
+use malleable_ckpt::runtime::ComputeEngine;
+use malleable_ckpt::util::bench::{bench_once, header};
+
+fn main() {
+    let engine = ComputeEngine::auto();
+    let opts = ExperimentOptions::default();
+    println!("engine: {}", engine.name());
+
+    header("Figure regeneration");
+    bench_once("fig4: workinunittime curves", || {
+        figures::fig4();
+    });
+    bench_once("fig5: 80-day condor run", || {
+        figures::fig5(&opts).expect("fig5");
+    });
+    bench_once("fig6a: inefficiency vs failure rate", || {
+        figures::fig6a(&engine, &opts).expect("fig6a");
+    });
+    bench_once("fig6b: inefficiency vs duration", || {
+        figures::fig6b(&engine, &opts).expect("fig6b");
+    });
+    bench_once("moldable vs malleable (sec. VI-D)", || {
+        figures::moldable_vs_malleable(&opts).expect("moldable");
+    });
+    bench_once("extension: weibull sensitivity (sec. IX)", || {
+        extensions::weibull_sensitivity(&engine, &opts).expect("weibull");
+    });
+}

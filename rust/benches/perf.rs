@@ -1,0 +1,135 @@
+//! `cargo bench --bench perf` — performance benchmarks for the three
+//! layers (EXPERIMENTS.md §Perf records the before/after iterations):
+//!
+//! * L1/L2: chain-matrix evaluation (AOT artifacts via PJRT vs the native
+//!   mirror) across bucket sizes;
+//! * L3: sparse assembly, stationary solve, full model build at paper
+//!   scale (N = 128/256/512), simulator event throughput.
+
+use malleable_ckpt::apps::AppProfile;
+use malleable_ckpt::config::SystemParams;
+use malleable_ckpt::markov::birth_death::bd_generator;
+use malleable_ckpt::markov::{BuildOptions, MalleableModel, ModelInputs};
+use malleable_ckpt::policies::ReschedulingPolicy;
+use malleable_ckpt::runtime::{native_chain_probs, native_chain_probs_fast, ComputeEngine};
+use malleable_ckpt::simulator::{SimConfig, Simulator};
+use malleable_ckpt::traces::synth::{generate, SynthSpec};
+use malleable_ckpt::util::bench::{bench, bench_once, header};
+use malleable_ckpt::util::rng::Rng;
+
+fn main() {
+    let day = 86_400.0;
+    let (lam, theta) = (1.0 / (6.0 * day), 1.0 / 3_300.0);
+
+    // --- L1/L2: chain matrices — generic expm vs Ehrenfest closed form,
+    // native vs AOT/PJRT ---------------------------------------------------
+    header("L1/L2: chain matrices (q_delta, q_up, q_rec) per chain");
+    let pjrt = match ComputeEngine::pjrt(std::path::Path::new("artifacts")) {
+        Ok(e) => Some(e),
+        Err(e) => {
+            println!("(pjrt unavailable: {e}; run `make artifacts`)");
+            None
+        }
+    };
+    for s_max in [15usize, 63, 127, 255, 511] {
+        let a_lam = 64.0 * lam;
+        if s_max <= 127 {
+            // Generic path is O(n^3 log ||R d||): skip the huge sizes.
+            let r = bd_generator(s_max, lam, theta);
+            bench(&format!("native generic expm S={s_max}"), 1, 8, 10.0, || {
+                std::hint::black_box(native_chain_probs(&r, a_lam, 40_000.0));
+            });
+        }
+        bench(&format!("native ehrenfest    S={s_max}"), 1, 16, 10.0, || {
+            std::hint::black_box(native_chain_probs_fast(s_max, lam, theta, a_lam, 40_000.0));
+        });
+        if let Some(ComputeEngine::Pjrt(e)) = pjrt.as_ref().map(|e| e as &ComputeEngine) {
+            bench(&format!("pjrt   chain_fast   S={s_max}"), 1, 8, 10.0, || {
+                std::hint::black_box(
+                    e.chain_probs_spares(s_max, lam, theta, a_lam, 40_000.0).unwrap(),
+                );
+            });
+        }
+    }
+
+    // --- L3: model build at paper scale --------------------------------
+    header("L3: full model build (assemble + reduce + stationary + UWT)");
+    for n in [64usize, 128, 256] {
+        let sys = SystemParams::new(n, lam, theta);
+        let app = AppProfile::qr(n);
+        let policy = ReschedulingPolicy::greedy(n);
+        let inputs = ModelInputs::new(sys, &app, &policy).unwrap();
+        let engine = ComputeEngine::native();
+        bench_once(&format!("model build N={n} (native)"), || {
+            let m = MalleableModel::build(&inputs, &engine, 3_600.0, &BuildOptions::default())
+                .unwrap();
+            std::hint::black_box(m.uwt());
+        });
+    }
+    // Paper's headline cost: one model run at N=512 "2-10 minutes" in
+    // MATLAB; target here is far below.
+    {
+        let n = 512usize;
+        let sys = SystemParams::new(n, lam, theta);
+        let app = AppProfile::qr(n);
+        let policy = ReschedulingPolicy::greedy(n);
+        let inputs = ModelInputs::new(sys, &app, &policy).unwrap();
+        let engine = ComputeEngine::native();
+        bench_once("model build N=512 (native, paper: 2-10 min)", || {
+            let m = MalleableModel::build(&inputs, &engine, 3_600.0, &BuildOptions::default())
+                .unwrap();
+            std::hint::black_box(m.uwt());
+        });
+        if let Ok(engine) = ComputeEngine::pjrt(std::path::Path::new("artifacts")) {
+            bench_once("model build N=512 (pjrt chain_fast)", || {
+                let m = MalleableModel::build(&inputs, &engine, 3_600.0, &BuildOptions::default())
+                    .unwrap();
+                std::hint::black_box(m.uwt());
+            });
+        }
+        // Pre-optimization baseline for EXPERIMENTS.md §Perf: the generic
+        // expm path the paper's MATLAB used.
+        let engine = ComputeEngine::native_generic();
+        bench_once("model build N=512 (native generic expm baseline)", || {
+            let m = MalleableModel::build(&inputs, &engine, 3_600.0, &BuildOptions::default())
+                .unwrap();
+            std::hint::black_box(m.uwt());
+        });
+    }
+
+    // --- L3: simulator throughput ---------------------------------------
+    header("L3: simulator");
+    let mut rng = Rng::new(99);
+    let trace = generate(&SynthSpec::exponential(128, lam, theta, 120.0 * day), &mut rng);
+    let app = AppProfile::qr(128);
+    let policy = ReschedulingPolicy::greedy(128);
+    let sim = Simulator::new(&trace, &app, &policy);
+    bench("simulate 80 days @128 procs (I=1.53h)", 1, 16, 15.0, || {
+        let cfg = SimConfig::new(5.0 * day, 80.0 * day, 1.53 * 3_600.0);
+        std::hint::black_box(sim.run(&cfg).unwrap());
+    });
+    bench("simulate sweep 16 intervals (20 days)", 1, 8, 15.0, || {
+        let cfg = SimConfig::new(5.0 * day, 20.0 * day, 3_600.0);
+        let grid: Vec<f64> = (0..16).map(|i| 300.0 * (1.5f64).powi(i)).collect();
+        std::hint::black_box(sim.sweep(&cfg, &grid).unwrap());
+    });
+
+    // --- L3: interval search end-to-end ---------------------------------
+    header("L3: interval search (doubling + refinement)");
+    for n in [32usize, 128] {
+        let sys = SystemParams::new(n, lam, theta);
+        let app = AppProfile::qr(n);
+        let policy = ReschedulingPolicy::greedy(n);
+        let inputs = ModelInputs::new(sys, &app, &policy).unwrap();
+        let engine = ComputeEngine::native();
+        bench_once(&format!("select_interval N={n} (native)"), || {
+            let cfg = malleable_ckpt::search::SearchConfig {
+                refine_steps: 2,
+                ..Default::default()
+            };
+            std::hint::black_box(
+                malleable_ckpt::search::select_interval(&inputs, &engine, &cfg).unwrap(),
+            );
+        });
+    }
+}

@@ -1,0 +1,30 @@
+//! `cargo bench --bench tables` — regenerates the paper's Tables I–IV via
+//! the experiment harness and times each regeneration.
+//!
+//! The *content* comparison with the paper lives in EXPERIMENTS.md; this
+//! target is the reproducible driver that prints the same rows the paper
+//! reports (per DESIGN.md §5).
+
+use malleable_ckpt::experiments::{tables, ExperimentOptions};
+use malleable_ckpt::runtime::ComputeEngine;
+use malleable_ckpt::util::bench::{bench_once, header};
+
+fn main() {
+    let engine = ComputeEngine::auto();
+    let opts = ExperimentOptions::default();
+    println!("engine: {}", engine.name());
+
+    header("Table regeneration");
+    bench_once("table1: C/R overheads (profiles)", || {
+        tables::table1();
+    });
+    bench_once("table2: efficiencies across systems", || {
+        tables::table2(&engine, &opts).expect("table2");
+    });
+    bench_once("table3: efficiencies across applications", || {
+        tables::table3(&engine, &opts).expect("table3");
+    });
+    bench_once("table4: rescheduling policies", || {
+        tables::table4(&engine, &opts).expect("table4");
+    });
+}

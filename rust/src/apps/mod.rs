@@ -1,0 +1,355 @@
+//! Application profiles: `workinunittime`, checkpoint-cost vector `C` and
+//! recovery-cost matrix `R` for the paper's three applications (§VI-B).
+//!
+//! The paper benchmarks ScaLAPACK QR (PDGELS), PETSc CG and a systolic
+//! Lennard-Jones MD code on a 48-core Opteron cluster instrumented with the
+//! SRS checkpointing library, then extrapolates to 512 processors with LAB
+//! Fit. That cluster is not available, so profiles are *analytic models
+//! calibrated to every number the paper publishes*:
+//!
+//! * Table I overhead ranges (C: QR ≈ 92–117 s, CG ≈ 9–9.8 s,
+//!   MD ≈ 1.3–2.7 s; R ≈ 8–33 s, comparable across apps);
+//! * Fig 4 work-rate shapes (MD most scalable, QR next, CG least) and
+//!   magnitudes implied by Tables II/III (QR ≈ 10, CG ≈ 0.9, MD ≈ 19
+//!   iterations/s near 128–512 processors).
+//!
+//! Work rates follow the Amdahl-communication law of [`crate::fitting`];
+//! checkpoint costs follow a slow power law; recovery costs depend on the
+//! redistribution distance `|log₂(k/l)|` between the old and new processor
+//! counts, floored at the paper's same-config minimum.
+//!
+//! [`synthetic_benchmark`] reproduces the paper's *pipeline* as well:
+//! "measure" noisy points on ≤ 48 cores from the analytic model, then
+//! extrapolate with the fitting module — used by examples and tests to
+//! validate that measure-then-extrapolate lands on the same curves.
+
+use crate::fitting::{self, AmdahlFit};
+use crate::util::rng::Rng;
+use anyhow::{bail, Result};
+
+/// Which of the paper's applications a profile models.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum AppKind {
+    /// ScaLAPACK QR factorization (PDGELS), 2-D block-cyclic.
+    Qr,
+    /// PETSc conjugate gradient solver.
+    Cg,
+    /// Systolic Lennard-Jones molecular dynamics.
+    Md,
+}
+
+impl AppKind {
+    pub const ALL: [AppKind; 3] = [AppKind::Qr, AppKind::Cg, AppKind::Md];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            AppKind::Qr => "QR",
+            AppKind::Cg => "CG",
+            AppKind::Md => "MD",
+        }
+    }
+
+    /// Amdahl-communication work-rate law (see module docs for calibration).
+    fn work_law(&self) -> AmdahlFit {
+        match self {
+            AppKind::Qr => AmdahlFit { serial: 0.0935, parallel: 0.92, comm: 1.0e-6 },
+            AppKind::Cg => AmdahlFit { serial: 1.05, parallel: 6.0, comm: 4.0e-4 },
+            AppKind::Md => AmdahlFit { serial: 0.050, parallel: 0.65, comm: 2.0e-7 },
+        }
+    }
+
+    /// Checkpoint cost power law `C(a) = c0 · a^p`, calibrated to Table I.
+    fn ckpt_law(&self) -> (f64, f64) {
+        match self {
+            AppKind::Qr => (89.1, 0.044),
+            AppKind::Cg => (8.87, 0.0152),
+            AppKind::Md => (1.24, 0.125),
+        }
+    }
+
+    /// Recovery cost parameters `(r_same, r_span)`, calibrated to Table I:
+    /// `R(k,l) = r_same + r_span · (|log₂ k − log₂ l| / 9)^0.8`.
+    fn rec_law(&self) -> (f64, f64) {
+        match self {
+            AppKind::Qr => (8.74, 24.2),
+            AppKind::Cg => (8.89, 6.2),
+            AppKind::Md => (8.27, 8.8),
+        }
+    }
+}
+
+/// Per-application cost model over `1..=n` processors.
+#[derive(Debug, Clone)]
+pub struct AppProfile {
+    pub name: String,
+    n: usize,
+    work: Vec<f64>,
+    ckpt: Vec<f64>,
+    rec_same: f64,
+    rec_span: f64,
+}
+
+impl AppProfile {
+    /// Analytic profile for one of the paper's applications.
+    pub fn paper_app(kind: AppKind, n: usize) -> AppProfile {
+        let law = kind.work_law();
+        let (c0, cp) = kind.ckpt_law();
+        let (rec_same, rec_span) = kind.rec_law();
+        AppProfile {
+            name: kind.name().to_string(),
+            n,
+            work: (1..=n).map(|a| law.rate(a)).collect(),
+            ckpt: (1..=n).map(|a| c0 * (a as f64).powf(cp)).collect(),
+            rec_same,
+            rec_span,
+        }
+    }
+
+    pub fn qr(n: usize) -> AppProfile {
+        Self::paper_app(AppKind::Qr, n)
+    }
+
+    pub fn cg(n: usize) -> AppProfile {
+        Self::paper_app(AppKind::Cg, n)
+    }
+
+    pub fn md(n: usize) -> AppProfile {
+        Self::paper_app(AppKind::Md, n)
+    }
+
+    /// Build a profile from explicit vectors (user-supplied benchmarks).
+    pub fn from_vectors(
+        name: &str,
+        work: Vec<f64>,
+        ckpt: Vec<f64>,
+        rec_same: f64,
+        rec_span: f64,
+    ) -> Result<AppProfile> {
+        if work.is_empty() || work.len() != ckpt.len() {
+            bail!("work/ckpt vectors must be equal-length and non-empty");
+        }
+        if work.iter().any(|&w| w <= 0.0) || ckpt.iter().any(|&c| c < 0.0) {
+            bail!("work rates must be positive, checkpoint costs non-negative");
+        }
+        if rec_same < 0.0 || rec_span < 0.0 {
+            bail!("recovery parameters must be non-negative");
+        }
+        Ok(AppProfile { name: name.to_string(), n: work.len(), work, ckpt, rec_same, rec_span })
+    }
+
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    /// `workinunittime_a` — iterations/second on `a` processors.
+    pub fn work_per_sec(&self, a: usize) -> f64 {
+        self.work[a - 1]
+    }
+
+    /// `C_a` — checkpoint overhead on `a` processors, seconds.
+    pub fn checkpoint_cost(&self, a: usize) -> f64 {
+        self.ckpt[a - 1]
+    }
+
+    /// `R_{k,l}` — recovery (redistribution) cost from `k` to `l`
+    /// processors, seconds.
+    pub fn recovery_cost(&self, from: usize, to: usize) -> f64 {
+        debug_assert!(from >= 1 && to >= 1);
+        let dist = ((from as f64).log2() - (to as f64).log2()).abs() / 9.0;
+        self.rec_same + self.rec_span * dist.powf(0.8)
+    }
+
+    /// Failure-free execution-time vector for a fixed amount of work
+    /// (1 work unit): `execTime_a = 1 / workinunittime_a` — the quantity
+    /// the PB policy minimizes.
+    pub fn exec_times(&self) -> Vec<f64> {
+        self.work.iter().map(|w| 1.0 / w).collect()
+    }
+
+    pub fn work_vector(&self) -> &[f64] {
+        &self.work
+    }
+
+    /// Table I-style (min, avg, max) of the checkpoint cost vector over the
+    /// benchmarked configurations (the paper measures parallel configs,
+    /// i.e. `a >= 2`).
+    pub fn ckpt_stats(&self) -> (f64, f64, f64) {
+        stats3(&self.ckpt[1.min(self.ckpt.len() - 1)..])
+    }
+
+    /// Table I-style (min, avg, max) over the recovery-cost matrix for
+    /// power-of-two configuration pairs (the configurations the paper
+    /// benchmarks).
+    pub fn rec_stats(&self) -> (f64, f64, f64) {
+        let mut v = Vec::new();
+        let mut k = 2usize;
+        while k <= self.n {
+            let mut l = 2usize;
+            while l <= self.n {
+                v.push(self.recovery_cost(k, l));
+                l *= 2;
+            }
+            k *= 2;
+        }
+        stats3(&v)
+    }
+}
+
+fn stats3(v: &[f64]) -> (f64, f64, f64) {
+    let mn = v.iter().copied().fold(f64::INFINITY, f64::min);
+    let mx = v.iter().copied().fold(f64::NEG_INFINITY, f64::max);
+    let avg = v.iter().sum::<f64>() / v.len() as f64;
+    (mn, avg, mx)
+}
+
+/// "Measured" benchmark points for sizes `2..=48` (the paper's cluster)
+/// with multiplicative noise, produced from the analytic law — input to
+/// the measure-then-extrapolate pipeline.
+pub struct BenchmarkPoints {
+    pub procs: Vec<f64>,
+    pub work_rate: Vec<f64>,
+    pub ckpt_cost: Vec<f64>,
+}
+
+/// Synthesize noisy ≤48-core measurements for `kind`.
+pub fn synthetic_benchmark(kind: AppKind, noise: f64, rng: &mut Rng) -> BenchmarkPoints {
+    let law = kind.work_law();
+    let (c0, cp) = kind.ckpt_law();
+    let sizes: Vec<usize> = vec![2, 4, 6, 8, 12, 16, 20, 24, 32, 40, 48];
+    let mut procs = Vec::new();
+    let mut work_rate = Vec::new();
+    let mut ckpt_cost = Vec::new();
+    for a in sizes {
+        procs.push(a as f64);
+        work_rate.push(law.rate(a) * (1.0 + noise * rng.normal(0.0, 1.0)));
+        ckpt_cost.push(c0 * (a as f64).powf(cp) * (1.0 + noise * rng.normal(0.0, 1.0)));
+    }
+    BenchmarkPoints { procs, work_rate, ckpt_cost }
+}
+
+/// The paper's §VI-B pipeline: fit measured ≤48-core points and
+/// extrapolate to `n` processors, returning a full profile.
+pub fn profile_from_benchmark(
+    kind: AppKind,
+    points: &BenchmarkPoints,
+    n: usize,
+) -> Result<AppProfile> {
+    let amdahl = fitting::fit_amdahl(&points.procs, &points.work_rate)?;
+    let (c0, cp) = fitting::fit_power_law(&points.procs, &points.ckpt_cost)?;
+    let (rec_same, rec_span) = kind.rec_law();
+    AppProfile::from_vectors(
+        &format!("{}(fit)", kind.name()),
+        (1..=n).map(|a| amdahl.rate(a)).collect(),
+        (1..=n).map(|a| c0 * (a as f64).powf(cp)).collect(),
+        rec_same,
+        rec_span,
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig4_shape_md_above_qr_above_cg() {
+        let (qr, cg, md) = (AppProfile::qr(512), AppProfile::cg(512), AppProfile::md(512));
+        for a in [64usize, 128, 256, 512] {
+            assert!(md.work_per_sec(a) > qr.work_per_sec(a));
+            assert!(qr.work_per_sec(a) > cg.work_per_sec(a));
+        }
+    }
+
+    #[test]
+    fn fig4_magnitudes_match_paper_anchors() {
+        let qr = AppProfile::qr(512);
+        let cg = AppProfile::cg(512);
+        let md = AppProfile::md(512);
+        // Failure-free maxima the paper's UWTs sit 4–11% below.
+        assert!((9.5..11.5).contains(&qr.work_per_sec(512)), "QR@512 {}", qr.work_per_sec(512));
+        assert!((0.8..1.0).contains(&cg.work_per_sec(128)), "CG@128 {}", cg.work_per_sec(128));
+        assert!((17.0..21.0).contains(&md.work_per_sec(512)), "MD@512 {}", md.work_per_sec(512));
+    }
+
+    #[test]
+    fn table1_checkpoint_ranges() {
+        // (paper min, paper max) per app over configs 2..=512.
+        for (app, lo, hi) in [
+            (AppProfile::qr(512), 91.90, 117.28),
+            (AppProfile::cg(512), 8.96, 9.75),
+            (AppProfile::md(512), 1.35, 2.70),
+        ] {
+            let (mn, avg, mx) = app.ckpt_stats();
+            assert!((mn - lo).abs() / lo < 0.05, "{} min {mn} vs {lo}", app.name);
+            assert!((mx - hi).abs() / hi < 0.05, "{} max {mx} vs {hi}", app.name);
+            assert!(mn <= avg && avg <= mx);
+        }
+    }
+
+    #[test]
+    fn table1_recovery_ranges() {
+        for (app, lo, hi) in [
+            (AppProfile::qr(512), 8.74, 32.97),
+            (AppProfile::cg(512), 8.89, 15.12),
+            (AppProfile::md(512), 8.27, 17.05),
+        ] {
+            let (mn, _, mx) = app.rec_stats();
+            assert!((mn - lo).abs() / lo < 0.05, "{} min {mn} vs {lo}", app.name);
+            assert!((mx - hi).abs() / hi < 0.10, "{} max {mx} vs {hi}", app.name);
+        }
+    }
+
+    #[test]
+    fn recovery_symmetric_and_floored() {
+        let qr = AppProfile::qr(256);
+        assert_eq!(qr.recovery_cost(64, 64), qr.recovery_cost(128, 128));
+        assert!((qr.recovery_cost(32, 128) - qr.recovery_cost(128, 32)).abs() < 1e-12);
+        assert!(qr.recovery_cost(2, 256) > qr.recovery_cost(128, 256));
+        assert!(qr.recovery_cost(10, 10) >= 8.74);
+    }
+
+    #[test]
+    fn cg_peaks_then_declines() {
+        let cg = AppProfile::cg(512);
+        let peak = (1..=512).max_by(|&a, &b| {
+            cg.work_per_sec(a).partial_cmp(&cg.work_per_sec(b)).unwrap()
+        })
+        .unwrap();
+        assert!((64..=256).contains(&peak), "CG peak at {peak}");
+        assert!(cg.work_per_sec(512) < cg.work_per_sec(peak));
+    }
+
+    #[test]
+    fn benchmark_extrapolation_matches_analytic() {
+        let mut rng = Rng::new(77);
+        for kind in AppKind::ALL {
+            let points = synthetic_benchmark(kind, 0.02, &mut rng);
+            let fit = profile_from_benchmark(kind, &points, 512).unwrap();
+            let truth = AppProfile::paper_app(kind, 512);
+            // Extrapolating 48 -> 512 from noisy data is exactly the
+            // paper's situation: expect the right ballpark, not precision.
+            for (a, tol) in [(64usize, 0.25), (256, 0.40), (512, 0.60)] {
+                let rel =
+                    (fit.work_per_sec(a) - truth.work_per_sec(a)).abs() / truth.work_per_sec(a);
+                assert!(rel < tol, "{} @{a}: rel err {rel}", truth.name);
+            }
+        }
+    }
+
+    #[test]
+    fn from_vectors_validates() {
+        assert!(AppProfile::from_vectors("x", vec![], vec![], 1.0, 1.0).is_err());
+        assert!(AppProfile::from_vectors("x", vec![1.0], vec![1.0, 2.0], 1.0, 1.0).is_err());
+        assert!(AppProfile::from_vectors("x", vec![-1.0], vec![1.0], 1.0, 1.0).is_err());
+        assert!(AppProfile::from_vectors("x", vec![1.0], vec![1.0], -1.0, 1.0).is_err());
+        assert!(AppProfile::from_vectors("x", vec![1.0], vec![1.0], 1.0, 1.0).is_ok());
+    }
+
+    #[test]
+    fn exec_times_reciprocal() {
+        let md = AppProfile::md(16);
+        let et = md.exec_times();
+        for a in 1..=16 {
+            assert!((et[a - 1] - 1.0 / md.work_per_sec(a)).abs() < 1e-15);
+        }
+    }
+}

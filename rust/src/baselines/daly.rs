@@ -1,0 +1,77 @@
+//! Young's and Daly's optimum-checkpoint-interval formulas — the classic
+//! closed-form baselines (paper §VII related work, ref [16]).
+//!
+//! Both take the *aggregate* MTBF `M = 1/(aλ)` of the processors in use and
+//! the checkpoint overhead `C`; neither models malleability, spares or
+//! per-configuration costs — which is exactly the gap the paper's model
+//! fills. They serve as comparison points in the benches.
+
+/// Young (1974) first-order optimum: `I = sqrt(2 C M)`.
+pub fn young_interval(ckpt_cost: f64, mtbf: f64) -> f64 {
+    (2.0 * ckpt_cost * mtbf).sqrt()
+}
+
+/// Daly (2006) higher-order optimum.
+///
+/// For `C < 2M`: `I = sqrt(2 C M) · [1 + (1/3)·sqrt(C/(2M)) + (C/(2M))/9] − C`,
+/// else `I = M` (checkpointing constantly; the system is hopeless anyway).
+pub fn daly_interval(ckpt_cost: f64, mtbf: f64) -> f64 {
+    let half = ckpt_cost / (2.0 * mtbf);
+    if half < 1.0 {
+        let base = (2.0 * ckpt_cost * mtbf).sqrt();
+        base * (1.0 + half.sqrt() / 3.0 + half / 9.0) - ckpt_cost
+    } else {
+        mtbf
+    }
+}
+
+/// First-order expected efficiency of an interval under MTBF `M`
+/// (fraction of time doing useful work): useful ≈ I, cycle ≈ I + C,
+/// expected rework ≈ (I+C)/2 per failure, failures per cycle ≈ (I+C)/M.
+pub fn expected_efficiency(interval: f64, ckpt_cost: f64, mtbf: f64) -> f64 {
+    let cycle = interval + ckpt_cost;
+    let waste = ckpt_cost + cycle * cycle / (2.0 * mtbf);
+    (interval / (interval + waste)).clamp(0.0, 1.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn young_closed_form() {
+        assert!((young_interval(50.0, 10_000.0) - 1_000.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn daly_close_to_young_for_small_c() {
+        // C << M: higher-order terms vanish.
+        let (c, m) = (1.0, 1.0e7);
+        let y = young_interval(c, m);
+        let d = daly_interval(c, m);
+        assert!((d - y).abs() / y < 0.01, "daly {d} vs young {y}");
+    }
+
+    #[test]
+    fn daly_shorter_for_large_c() {
+        let (c, m) = (600.0, 20_000.0);
+        assert!(daly_interval(c, m) < young_interval(c, m) * 1.2);
+        assert!(daly_interval(c, m) > 0.0);
+    }
+
+    #[test]
+    fn daly_degenerate_regime() {
+        // C >= 2M: fall back to I = M.
+        assert_eq!(daly_interval(5_000.0, 1_000.0), 1_000.0);
+    }
+
+    #[test]
+    fn efficiency_peaks_near_young() {
+        let (c, m) = (30.0, 50_000.0);
+        let opt = young_interval(c, m);
+        let e_opt = expected_efficiency(opt, c, m);
+        assert!(e_opt > expected_efficiency(opt / 8.0, c, m));
+        assert!(e_opt > expected_efficiency(opt * 8.0, c, m));
+        assert!(e_opt > 0.9, "efficiency at optimum: {e_opt}");
+    }
+}

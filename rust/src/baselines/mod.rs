@@ -1,0 +1,5 @@
+//! Baseline interval-selection methods and the moldable execution model
+//! the paper compares against.
+
+pub mod daly;
+pub mod moldable;

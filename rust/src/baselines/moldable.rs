@@ -1,0 +1,403 @@
+//! Moldable-application baseline (Plank & Thomason's execution model,
+//! paper §II): the processor count `a` is fixed for the whole run; when
+//! fewer than `a` processors are functional the application *halts* and
+//! waits — it cannot shrink.
+//!
+//! Two pieces:
+//! * a trace-driven **moldable simulator** (the §VI-D Condor comparison:
+//!   the paper notes moldable apps are unusable on volatile pools while
+//!   malleable ones thrive — `benches/figures.rs::moldable_vs_malleable`
+//!   regenerates that contrast);
+//! * an analytic **availability model** `A_{a,I}` built on the same
+//!   birth–death machinery as `M^mall`, giving Plank–Thomason's expected
+//!   runtime `RT_a / A_{a,I}`.
+
+use crate::apps::AppProfile;
+use crate::markov::birth_death::bd_generator;
+use crate::markov::sparse::SparseBuilder;
+use crate::markov::stationary::{stationary, StationaryOptions};
+use crate::runtime::ComputeEngine;
+use crate::traces::FailureTrace;
+use anyhow::{bail, Result};
+
+/// Result of a moldable trace simulation.
+#[derive(Debug, Clone)]
+pub struct MoldableSimResult {
+    pub useful_work: f64,
+    pub uwt: f64,
+    pub useful_seconds: f64,
+    pub wait_seconds: f64,
+    pub failures: usize,
+    pub checkpoints: usize,
+}
+
+/// Simulate a *moldable* run on `a` fixed processors over the segment in
+/// `cfg`: the first `a` functional processors are claimed; on any failure
+/// the app recovers (cost `R_{a,a}`, or `cfg.rec_override`) onto `a`
+/// functional processors once that many are available, halting meanwhile.
+/// Shares [`SimConfig`] with the malleable simulator so comparisons use
+/// identical overheads.
+pub fn simulate_moldable(
+    trace: &FailureTrace,
+    app: &AppProfile,
+    a: usize,
+    cfg: &crate::simulator::SimConfig,
+) -> Result<MoldableSimResult> {
+    if a == 0 || a > trace.n_procs() {
+        bail!("invalid processor count {a}");
+    }
+    let (start, duration, interval) = (cfg.start, cfg.duration, cfg.interval);
+    if interval <= 0.0 || duration <= 0.0 {
+        bail!("invalid interval/duration");
+    }
+    let end = start + duration;
+    if end > trace.horizon() {
+        bail!("segment exceeds trace horizon");
+    }
+
+    let rate = app.work_per_sec(a);
+    let c = cfg.ckpt_override.unwrap_or_else(|| app.checkpoint_cost(a));
+    let r_cost = cfg.rec_override.unwrap_or_else(|| app.recovery_cost(a, a));
+
+    let mut res = MoldableSimResult {
+        useful_work: 0.0,
+        uwt: 0.0,
+        useful_seconds: 0.0,
+        wait_seconds: 0.0,
+        failures: 0,
+        checkpoints: 0,
+    };
+
+    let mut t = start;
+    let mut first_start = true;
+    'outer: while t < end {
+        let avail = trace.available_at(t);
+        if avail.len() < a {
+            // Halt until enough processors are repaired.
+            let wake = match trace.next_repair_after(t) {
+                Some(w) => w.min(end),
+                None => end,
+            };
+            res.wait_seconds += wake - t;
+            t = wake;
+            continue;
+        }
+        let active: Vec<usize> = avail[..a].to_vec();
+
+        if !first_start {
+            let rec_end = (t + r_cost).min(end);
+            if let Some((ft, _)) = trace.next_failure_among(&active, t) {
+                if ft < rec_end {
+                    res.failures += 1;
+                    t = ft;
+                    continue 'outer;
+                }
+            }
+            t = rec_end;
+            if t >= end {
+                break;
+            }
+        }
+        first_start = false;
+
+        let next_fail = trace.next_failure_among(&active, t).map(|(ft, _)| ft);
+        loop {
+            let ckpt_end = t + interval + c;
+            if let Some(ft) = next_fail {
+                if ft < ckpt_end.min(end) {
+                    res.failures += 1;
+                    t = ft;
+                    continue 'outer;
+                }
+            }
+            if ckpt_end <= end {
+                res.useful_seconds += interval;
+                res.useful_work += rate * interval;
+                res.checkpoints += 1;
+                t = ckpt_end;
+                if t >= end {
+                    break 'outer;
+                }
+            } else {
+                break 'outer;
+            }
+        }
+    }
+    res.uwt = res.useful_work / duration;
+    Ok(res)
+}
+
+/// Plank–Thomason availability `A_{a,I}` from a compact up/recovery/down
+/// Markov chain over the spare pool (the §II model with our resolvent
+/// machinery). Returned with the expected-runtime objective
+/// `RT_a / A_{a,I}` left to the caller.
+pub fn moldable_availability(
+    n: usize,
+    a: usize,
+    lambda: f64,
+    theta: f64,
+    interval: f64,
+    ckpt_cost: f64,
+    recovery_cost: f64,
+    engine: &ComputeEngine,
+) -> Result<f64> {
+    if a == 0 || a > n {
+        bail!("invalid a={a} for N={n}");
+    }
+    let s_max = n - a;
+    let a_lam = a as f64 * lambda;
+    let delta = recovery_cost + interval + ckpt_cost;
+    let gen = bd_generator(s_max, lambda, theta);
+    let cm = engine.chain_probs(&gen, a_lam, delta)?;
+
+    // States: up 0..=S (ids 0..=S), recovery 0..=S (ids S+1..=2S+1),
+    // down (id 2S+2). Down is entered when a failure leaves no spare; it
+    // repairs to the zero-spare recovery state.
+    let m = s_max + 1;
+    let n_states = 2 * m + 1;
+    let down = 2 * m;
+    let mut b = SparseBuilder::new(n_states);
+    let mut row: Vec<(usize, f64)> = Vec::new();
+
+    // Up states: failure consumes a spare; with s2 spares after the
+    // transition epoch, land in recovery with s2-1 (one spare replaces the
+    // failed active proc) or down if s2 = 0.
+    for s1 in 0..m {
+        row.clear();
+        for s2 in 0..m {
+            let p = cm.q_up[(s1, s2)];
+            if p <= 0.0 {
+                continue;
+            }
+            if s2 == 0 {
+                row.push((down, p));
+            } else {
+                row.push((m + (s2 - 1), p));
+            }
+        }
+        b.push_row(&row);
+    }
+    // Recovery states.
+    let p_succ = (-a_lam * delta).exp();
+    for s1 in 0..m {
+        row.clear();
+        for s2 in 0..m {
+            let p = p_succ * cm.q_delta[(s1, s2)];
+            if p > 0.0 {
+                row.push((s2, p));
+            }
+        }
+        let mut acc_down = 0.0;
+        for s2 in 0..m {
+            let p = (1.0 - p_succ) * cm.q_rec[(s1, s2)];
+            if p <= 0.0 {
+                continue;
+            }
+            if s2 == 0 {
+                acc_down += p;
+            } else {
+                row.push((m + (s2 - 1), p));
+            }
+        }
+        if acc_down > 0.0 {
+            row.push((down, acc_down));
+        }
+        b.push_row(&row);
+    }
+    // Down: first repair restores one processor for the app (which was one
+    // short), entering zero-spare recovery.
+    b.push_row(&[(m, 1.0)]);
+
+    let mut p = b.finish();
+    p.normalize_rows();
+    let (pi, _) = stationary(&p, &StationaryOptions::default())?;
+
+    // Weights as in M^mall.
+    let t_cycle = interval + ckpt_cost;
+    let u_up = interval / (a_lam * t_cycle).exp_m1();
+    let d_up = 1.0 / a_lam - u_up;
+    let u_rec_s = interval;
+    let d_rec_s = delta - interval;
+    let d_rec_f = 1.0 / a_lam - delta / (a_lam * delta).exp_m1();
+    let d_down = 1.0 / (((n - a + 1) as f64) * theta); // repairs among the broken pool
+
+    let mut num = 0.0;
+    let mut den = 0.0;
+    for s1 in 0..m {
+        num += pi[s1] * u_up;
+        den += pi[s1] * (u_up + d_up);
+    }
+    for s1 in 0..m {
+        let id = m + s1;
+        let (cols, vals) = p.row(id);
+        let mut mass_up = 0.0;
+        for (&cc, &v) in cols.iter().zip(vals) {
+            if (cc as usize) < m {
+                mass_up += v;
+            }
+        }
+        let mass_fail = 1.0 - mass_up;
+        num += pi[id] * mass_up * u_rec_s;
+        den += pi[id] * (mass_up * (u_rec_s + d_rec_s) + mass_fail * d_rec_f);
+    }
+    den += pi[down] * d_down;
+
+    Ok(num / den)
+}
+
+/// Plank & Thomason's actual selection problem: jointly choose the
+/// processor count `a` and interval `I` minimizing the expected runtime
+/// `RT_a / A_{a,I}` of a fixed-size job (paper §II). `work` is the total
+/// work in `workinunittime` units; `RT_a = work / workinunittime_a`.
+#[derive(Debug, Clone, Copy)]
+pub struct MoldableChoice {
+    pub procs: usize,
+    pub interval: f64,
+    pub availability: f64,
+    /// Expected runtime in the presence of failures, seconds.
+    pub expected_runtime: f64,
+}
+
+/// Grid-search the Plank–Thomason objective over `a ∈ candidates` and a
+/// log-spaced interval grid.
+pub fn select_moldable(
+    n: usize,
+    lambda: f64,
+    theta: f64,
+    app: &AppProfile,
+    work: f64,
+    candidates: &[usize],
+    engine: &ComputeEngine,
+) -> Result<MoldableChoice> {
+    let mut best: Option<MoldableChoice> = None;
+    for &a in candidates {
+        if a == 0 || a > n {
+            bail!("candidate a={a} outside 1..={n}");
+        }
+        let rt = work / app.work_per_sec(a);
+        let c = app.checkpoint_cost(a);
+        let r = app.recovery_cost(a, a);
+        // Interval grid: log-spaced around the Daly point for this a.
+        let daly = crate::baselines::daly::daly_interval(c, 1.0 / (a as f64 * lambda)).max(60.0);
+        for mult in [0.25, 0.5, 1.0, 2.0, 4.0, 8.0] {
+            let interval = daly * mult;
+            let av = moldable_availability(n, a, lambda, theta, interval, c, r, engine)?;
+            if av <= 0.0 {
+                continue;
+            }
+            let expected = rt / av;
+            if best.map_or(true, |b| expected < b.expected_runtime) {
+                best = Some(MoldableChoice {
+                    procs: a,
+                    interval,
+                    availability: av,
+                    expected_runtime: expected,
+                });
+            }
+        }
+    }
+    best.ok_or_else(|| anyhow::anyhow!("no feasible moldable configuration"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::traces::synth::{generate, SynthSpec};
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn availability_in_unit_interval_and_sane() {
+        let engine = ComputeEngine::native();
+        let av = moldable_availability(
+            16, 8, 1.0 / (10.0 * 86_400.0), 1.0 / 3_600.0, 3_600.0, 60.0, 20.0, &engine,
+        )
+        .unwrap();
+        assert!(av > 0.5 && av < 1.0, "availability {av}");
+    }
+
+    #[test]
+    fn availability_drops_with_failure_rate() {
+        let engine = ComputeEngine::native();
+        let reliable = moldable_availability(
+            8, 4, 1.0 / (50.0 * 86_400.0), 1.0 / 3_600.0, 7_200.0, 30.0, 15.0, &engine,
+        )
+        .unwrap();
+        let volatile = moldable_availability(
+            8, 4, 1.0 / (0.5 * 86_400.0), 1.0 / 3_600.0, 7_200.0, 30.0, 15.0, &engine,
+        )
+        .unwrap();
+        assert!(reliable > volatile, "{reliable} !> {volatile}");
+    }
+
+    #[test]
+    fn moldable_halts_on_volatile_pool() {
+        // Condor-like volatility: a 12-of-16 moldable job waits often.
+        let mut rng = Rng::new(40);
+        let trace = generate(
+            &SynthSpec::exponential(16, 1.0 / (2.0 * 86_400.0), 1.0 / (6.0 * 3_600.0), 40.0 * 86_400.0),
+            &mut rng,
+        );
+        let app = AppProfile::qr(16);
+        let cfg = crate::simulator::SimConfig::new(0.0, 30.0 * 86_400.0, 3_600.0);
+        let res = simulate_moldable(&trace, &app, 12, &cfg).unwrap();
+        assert!(res.wait_seconds > 0.0, "expected waiting on a volatile pool");
+    }
+
+    #[test]
+    fn moldable_single_proc_never_waits_when_up() {
+        let trace = FailureTrace::new(vec![vec![]], 1.0e6).unwrap();
+        let app = AppProfile::qr(1);
+        let cfg = crate::simulator::SimConfig::new(0.0, 100_000.0, 1_000.0);
+        let res = simulate_moldable(&trace, &app, 1, &cfg).unwrap();
+        assert_eq!(res.wait_seconds, 0.0);
+        assert!(res.useful_work > 0.0);
+    }
+
+    #[test]
+    fn joint_selection_prefers_more_procs_when_reliable() {
+        let engine = ComputeEngine::native();
+        let app = AppProfile::qr(16);
+        // Very reliable system: scaling wins, pick the largest a.
+        let choice = select_moldable(
+            16,
+            1.0 / (500.0 * 86_400.0),
+            1.0 / 3_600.0,
+            &app,
+            1.0e6,
+            &[2, 4, 8, 14],
+            &engine,
+        )
+        .unwrap();
+        assert_eq!(choice.procs, 14);
+        assert!(choice.availability > 0.9);
+    }
+
+    #[test]
+    fn joint_selection_backs_off_under_volatility() {
+        let engine = ComputeEngine::native();
+        let app = AppProfile::qr(16);
+        // Hyper-volatile: large a thrashes (agg MTBF ~ minutes vs C ~ 100 s).
+        let choice = select_moldable(
+            16,
+            1.0 / (0.2 * 86_400.0),
+            1.0 / 3_600.0,
+            &app,
+            1.0e6,
+            &[2, 4, 8, 14],
+            &engine,
+        )
+        .unwrap();
+        assert!(choice.procs < 14, "picked {} procs", choice.procs);
+    }
+
+    #[test]
+    fn rejects_invalid() {
+        let trace = FailureTrace::new(vec![vec![]], 100.0).unwrap();
+        let app = AppProfile::qr(1);
+        let cfg = crate::simulator::SimConfig::new(0.0, 10.0, 1.0);
+        assert!(simulate_moldable(&trace, &app, 0, &cfg).is_err());
+        assert!(simulate_moldable(&trace, &app, 2, &cfg).is_err());
+        let engine = ComputeEngine::native();
+        assert!(moldable_availability(4, 0, 1e-6, 1e-3, 1.0, 1.0, 1.0, &engine).is_err());
+    }
+}

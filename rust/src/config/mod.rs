@@ -1,0 +1,144 @@
+//! System parameters and experiment configuration.
+//!
+//! `SystemParams` is the paper's `(N, λ, θ)` triple: total processors,
+//! per-processor failure rate (1/MTTF) and repair rate (1/MTTR), both in
+//! units of 1/second. Configs can be loaded from JSON files so experiment
+//! definitions live outside the binary.
+
+use crate::util::json::Json;
+use anyhow::{bail, Context, Result};
+
+/// The `(N, λ, θ)` triple describing a system (paper §III-C input 1).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SystemParams {
+    /// Total number of processors in the system.
+    pub n: usize,
+    /// Per-processor failure rate, 1/seconds (reciprocal MTTF).
+    pub lambda: f64,
+    /// Per-processor repair rate, 1/seconds (reciprocal MTTR).
+    pub theta: f64,
+}
+
+impl SystemParams {
+    pub fn new(n: usize, lambda: f64, theta: f64) -> SystemParams {
+        SystemParams { n, lambda, theta }
+    }
+
+    /// Construct from mean times: MTTF in days, MTTR in minutes — the units
+    /// Table II of the paper reports.
+    pub fn from_mttf_mttr(n: usize, mttf_days: f64, mttr_minutes: f64) -> SystemParams {
+        SystemParams {
+            n,
+            lambda: 1.0 / (mttf_days * 86_400.0),
+            theta: 1.0 / (mttr_minutes * 60.0),
+        }
+    }
+
+    /// Mean time to failure of one processor, seconds.
+    pub fn mttf(&self) -> f64 {
+        1.0 / self.lambda
+    }
+
+    /// Mean time to repair of one processor, seconds.
+    pub fn mttr(&self) -> f64 {
+        1.0 / self.theta
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        if self.n == 0 {
+            bail!("system must have at least one processor");
+        }
+        if !(self.lambda > 0.0) || !self.lambda.is_finite() {
+            bail!("lambda must be positive and finite, got {}", self.lambda);
+        }
+        if !(self.theta > 0.0) || !self.theta.is_finite() {
+            bail!("theta must be positive and finite, got {}", self.theta);
+        }
+        Ok(())
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut o = Json::obj();
+        o.set("n", Json::from(self.n))
+            .set("lambda", Json::from(self.lambda))
+            .set("theta", Json::from(self.theta));
+        o
+    }
+
+    pub fn from_json(j: &Json) -> Result<SystemParams> {
+        let n = j
+            .get("n")
+            .and_then(Json::as_f64)
+            .context("system.n missing")? as usize;
+        let lambda = j.get("lambda").and_then(Json::as_f64).context("system.lambda missing")?;
+        let theta = j.get("theta").and_then(Json::as_f64).context("system.theta missing")?;
+        let s = SystemParams { n, lambda, theta };
+        s.validate()?;
+        Ok(s)
+    }
+}
+
+/// Paper Table II's seven system rows, reused across experiments and tests.
+/// (name, processors, MTTF days, MTTR minutes)
+pub const TABLE2_SYSTEMS: &[(&str, usize, f64, f64)] = &[
+    ("system-1/64", 64, 6.42, 47.13),
+    ("system-1/128", 128, 104.61, 56.03),
+    ("system-2/256", 256, 81.82, 168.48),
+    ("system-2/512", 512, 68.36, 115.43),
+    ("condor/64", 64, 6.32, 52.377),
+    ("condor/128", 128, 6.36, 54.848),
+    ("condor/256", 256, 5.19, 125.23),
+];
+
+/// Look up one of the paper's published systems by name.
+pub fn paper_system(name: &str) -> Option<SystemParams> {
+    TABLE2_SYSTEMS
+        .iter()
+        .find(|(n, ..)| *n == name)
+        .map(|&(_, n, mttf, mttr)| SystemParams::from_mttf_mttr(n, mttf, mttr))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mttf_mttr_roundtrip() {
+        let s = SystemParams::from_mttf_mttr(128, 104.61, 56.03);
+        assert_eq!(s.n, 128);
+        assert!((s.mttf() - 104.61 * 86_400.0).abs() < 1e-6);
+        assert!((s.mttr() - 56.03 * 60.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn validation() {
+        assert!(SystemParams::new(0, 1e-6, 1e-3).validate().is_err());
+        assert!(SystemParams::new(4, 0.0, 1e-3).validate().is_err());
+        assert!(SystemParams::new(4, 1e-6, -1.0).validate().is_err());
+        assert!(SystemParams::new(4, 1e-6, 1e-3).validate().is_ok());
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let s = SystemParams::from_mttf_mttr(256, 81.82, 168.48);
+        let j = s.to_json();
+        let s2 = SystemParams::from_json(&j).unwrap();
+        assert_eq!(s, s2);
+    }
+
+    #[test]
+    fn paper_systems_resolve() {
+        for (name, ..) in TABLE2_SYSTEMS {
+            let s = paper_system(name).unwrap();
+            assert!(s.validate().is_ok());
+        }
+        assert!(paper_system("nope").is_none());
+    }
+
+    #[test]
+    fn condor_faster_failures_than_batch() {
+        let batch = paper_system("system-1/128").unwrap();
+        let condor = paper_system("condor/128").unwrap();
+        assert!(condor.lambda > batch.lambda * 10.0);
+    }
+}

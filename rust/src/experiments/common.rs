@@ -1,0 +1,104 @@
+//! Shared experiment plumbing: segment sampling, trace construction from
+//! the paper's published system rows, report tables.
+
+use crate::apps::AppProfile;
+use crate::config::SystemParams;
+use crate::metrics::{evaluate_segment, AggregateEvaluation};
+use crate::policies::ReschedulingPolicy;
+use crate::runtime::ComputeEngine;
+use crate::search::SearchConfig;
+use crate::traces::synth::{generate, SynthSpec};
+use crate::traces::FailureTrace;
+use crate::util::rng::Rng;
+use anyhow::Result;
+
+/// Knobs shared by all experiments (scaled down by default so the full
+/// suite completes on a laptop-class box; the paper's "large number of
+/// simulations" corresponds to raising `segments`).
+#[derive(Debug, Clone)]
+pub struct ExperimentOptions {
+    /// Random execution segments per table row.
+    pub segments: usize,
+    /// Segment duration range, days.
+    pub dur_days: (f64, f64),
+    /// Trace length, days.
+    pub trace_days: f64,
+    /// Base RNG seed (every experiment derives from it).
+    pub seed: u64,
+    /// Interval-search configuration.
+    pub search: SearchConfig,
+}
+
+impl Default for ExperimentOptions {
+    fn default() -> Self {
+        ExperimentOptions {
+            segments: 3,
+            dur_days: (10.0, 25.0),
+            trace_days: 160.0,
+            seed: 20_170_611,
+            search: SearchConfig { refine_steps: 2, ..Default::default() },
+        }
+    }
+}
+
+/// Synthesize the paper's trace for a published system row
+/// (DESIGN.md §6 substitution).
+pub fn trace_for_system(sys: &SystemParams, days: f64, rng: &mut Rng) -> FailureTrace {
+    generate(
+        &SynthSpec::exponential(sys.n, sys.lambda, sys.theta, days * 86_400.0),
+        rng,
+    )
+}
+
+/// Run `segments` random-segment evaluations of (trace, app, policy).
+pub fn run_segments(
+    trace: &FailureTrace,
+    app: &AppProfile,
+    policy: &ReschedulingPolicy,
+    engine: &ComputeEngine,
+    sys: &SystemParams,
+    opts: &ExperimentOptions,
+    rng: &mut Rng,
+) -> Result<AggregateEvaluation> {
+    let mut agg = AggregateEvaluation::default();
+    for _ in 0..opts.segments {
+        let dur = rng.range(opts.dur_days.0, opts.dur_days.1) * 86_400.0;
+        let latest = (trace.horizon() - dur).max(0.0);
+        // Leave some history before the segment for rate estimation.
+        let start = rng.range(0.2 * latest, latest);
+        let eval = evaluate_segment(
+            trace,
+            app,
+            policy,
+            engine,
+            start,
+            dur,
+            &opts.search,
+            Some((sys.lambda, sys.theta)),
+        )?;
+        agg.segments.push(eval);
+    }
+    Ok(agg)
+}
+
+/// Fixed-width table printer for experiment output.
+pub struct TablePrinter {
+    widths: Vec<usize>,
+}
+
+impl TablePrinter {
+    pub fn new(headers: &[&str], widths: &[usize]) -> TablePrinter {
+        let t = TablePrinter { widths: widths.to_vec() };
+        t.row(headers);
+        println!("{}", "-".repeat(widths.iter().sum::<usize>() + 2 * widths.len()));
+        t
+    }
+
+    pub fn row(&self, cells: &[&str]) {
+        let mut line = String::new();
+        for (cell, w) in cells.iter().zip(&self.widths) {
+            line.push_str(&format!("{cell:>w$}  ", w = w));
+        }
+        println!("{}", line.trim_end());
+    }
+}

@@ -1,0 +1,10 @@
+//! Experiment harness regenerating every table and figure of the paper's
+//! evaluation (§VI). Each experiment prints the paper's rows/series and
+//! returns a machine-readable [`crate::util::Json`] report.
+
+pub mod common;
+pub mod extensions;
+pub mod figures;
+pub mod tables;
+
+pub use common::ExperimentOptions;

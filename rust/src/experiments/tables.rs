@@ -1,0 +1,170 @@
+//! Regeneration of the paper's Tables I–IV.
+
+use anyhow::Result;
+
+use super::common::{run_segments, trace_for_system, ExperimentOptions, TablePrinter};
+use crate::apps::{AppKind, AppProfile};
+use crate::config::{paper_system, SystemParams, TABLE2_SYSTEMS};
+use crate::markov::ModelInputs;
+use crate::policies::ReschedulingPolicy;
+use crate::runtime::ComputeEngine;
+use crate::search::select_interval;
+use crate::util::json::Json;
+use crate::util::rng::Rng;
+
+/// Table I: checkpoint and recovery overheads (min/avg/max) per app.
+/// Pure profile regeneration — the paper's numbers are benchmark inputs.
+pub fn table1() -> Json {
+    println!("\n=== Table I: checkpointing (C) and recovery (R) overheads (seconds) ===");
+    let t = TablePrinter::new(
+        &["App", "C min", "C avg", "C max", "R min", "R avg", "R max"],
+        &[4, 8, 8, 8, 8, 8, 8],
+    );
+    let mut report = Json::obj();
+    for kind in AppKind::ALL {
+        let app = AppProfile::paper_app(kind, 512);
+        let (cmin, cavg, cmax) = app.ckpt_stats();
+        let (rmin, ravg, rmax) = app.rec_stats();
+        t.row(&[
+            kind.name(),
+            &format!("{cmin:.2}"),
+            &format!("{cavg:.2}"),
+            &format!("{cmax:.2}"),
+            &format!("{rmin:.2}"),
+            &format!("{ravg:.2}"),
+            &format!("{rmax:.2}"),
+        ]);
+        let mut o = Json::obj();
+        o.set("c", Json::from(vec![cmin, cavg, cmax]))
+            .set("r", Json::from(vec![rmin, ravg, rmax]));
+        report.set(kind.name(), o);
+    }
+    report
+}
+
+/// One row of Table II/III/IV-style evaluations.
+#[allow(clippy::too_many_arguments)]
+fn eval_row(
+    label: &str,
+    sys: &SystemParams,
+    app: &AppProfile,
+    policy_kind: &str,
+    engine: &ComputeEngine,
+    opts: &ExperimentOptions,
+    rng: &mut Rng,
+    printer: &TablePrinter,
+) -> Result<Json> {
+    let trace = trace_for_system(sys, opts.trace_days, rng);
+    let policy = match policy_kind {
+        "greedy" => ReschedulingPolicy::greedy(sys.n),
+        "pb" => ReschedulingPolicy::performance_based(app.work_vector())?,
+        "ab" => ReschedulingPolicy::availability_based(&trace, 50, rng)?,
+        other => anyhow::bail!("unknown policy {other}"),
+    };
+    let agg = run_segments(&trace, app, &policy, engine, sys, opts, rng)?;
+
+    printer.row(&[
+        label,
+        &format!("{:.0}", sys.n as f64),
+        &format!("1/({:.2} d)", 1.0 / (agg.mean_lambda() * 86_400.0)),
+        &format!("1/({:.1} m)", 1.0 / (agg.mean_theta() * 60.0)),
+        &format!("{:.2}", agg.mean_efficiency()),
+        &format!("{:.2}", agg.mean_i_model_hours()),
+        &format!("{:.2}", agg.mean_uwt_model()),
+        &format!("{:.2}", agg.mean_uwt_sim()),
+    ]);
+
+    let mut o = Json::obj();
+    o.set("label", Json::from(label))
+        .set("n", Json::from(sys.n))
+        .set("policy", Json::from(policy_kind))
+        .set("efficiency", Json::from(agg.mean_efficiency()))
+        .set("i_model_hours", Json::from(agg.mean_i_model_hours()))
+        .set("uwt_model", Json::from(agg.mean_uwt_model()))
+        .set("uwt_sim", Json::from(agg.mean_uwt_sim()))
+        .set("uw_model", Json::from(agg.mean_uw_model()))
+        .set("lambda", Json::from(agg.mean_lambda()))
+        .set("theta", Json::from(agg.mean_theta()));
+    Ok(o)
+}
+
+fn table_header() -> TablePrinter {
+    TablePrinter::new(
+        &["System", "Procs", "λ", "θ", "Eff %", "I_model h", "UWT(I_m)", "UWT(I_s)"],
+        &[14, 6, 13, 12, 7, 10, 9, 9],
+    )
+}
+
+/// Table II: QR + greedy across the seven published system rows.
+pub fn table2(engine: &ComputeEngine, opts: &ExperimentOptions) -> Result<Json> {
+    println!("\n=== Table II: model efficiencies across systems (QR, greedy) ===");
+    let printer = table_header();
+    let mut rng = Rng::new(opts.seed ^ 0x7ab1e2);
+    let mut rows = Vec::new();
+    for &(name, n, mttf, mttr) in TABLE2_SYSTEMS {
+        let sys = SystemParams::from_mttf_mttr(n, mttf, mttr);
+        let app = AppProfile::qr(n);
+        rows.push(eval_row(name, &sys, &app, "greedy", engine, opts, &mut rng, &printer)?);
+    }
+    let mut report = Json::obj();
+    report.set("rows", Json::Arr(rows));
+    Ok(report)
+}
+
+/// Table III: the three applications on system-1/128, greedy.
+pub fn table3(engine: &ComputeEngine, opts: &ExperimentOptions) -> Result<Json> {
+    println!("\n=== Table III: model efficiencies per application (system-1/128, greedy) ===");
+    let printer = table_header();
+    let mut rng = Rng::new(opts.seed ^ 0x7ab1e3);
+    let sys = paper_system("system-1/128").unwrap();
+    let mut rows = Vec::new();
+    for kind in AppKind::ALL {
+        let app = AppProfile::paper_app(kind, sys.n);
+        rows.push(eval_row(kind.name(), &sys, &app, "greedy", engine, opts, &mut rng, &printer)?);
+    }
+    let mut report = Json::obj();
+    report.set("rows", Json::Arr(rows));
+    Ok(report)
+}
+
+/// Table IV: the three rescheduling policies (QR, system-1/128).
+pub fn table4(engine: &ComputeEngine, opts: &ExperimentOptions) -> Result<Json> {
+    println!("\n=== Table IV: rescheduling policies (QR, system-1/128) ===");
+    let printer = table_header();
+    let mut rng = Rng::new(opts.seed ^ 0x7ab1e4);
+    let sys = paper_system("system-1/128").unwrap();
+    let app = AppProfile::qr(sys.n);
+    let mut rows = Vec::new();
+    for policy in ["greedy", "pb", "ab"] {
+        rows.push(eval_row(policy, &sys, &app, policy, engine, opts, &mut rng, &printer)?);
+    }
+    let mut report = Json::obj();
+    report.set("rows", Json::Arr(rows));
+    Ok(report)
+}
+
+/// Model-only interval listing (diagnostic: UWT_I curve for one config).
+pub fn interval_curve(
+    sys: &SystemParams,
+    app: &AppProfile,
+    engine: &ComputeEngine,
+    opts: &ExperimentOptions,
+) -> Result<Json> {
+    let policy = ReschedulingPolicy::greedy(sys.n);
+    let inputs = ModelInputs::new(*sys, app, &policy)?;
+    let res = select_interval(&inputs, engine, &opts.search)?;
+    let mut report = Json::obj();
+    report
+        .set("i_model_hours", Json::from(res.interval / 3_600.0))
+        .set("uwt", Json::from(res.uwt))
+        .set(
+            "probes",
+            Json::Arr(
+                res.probes
+                    .iter()
+                    .map(|&(i, u)| Json::from(vec![i / 3_600.0, u]))
+                    .collect(),
+            ),
+        );
+    Ok(report)
+}

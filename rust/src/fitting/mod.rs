@@ -1,0 +1,215 @@
+//! Curve fitting — the stand-in for the LAB Fit tool the paper uses to
+//! extrapolate benchmarked overheads to larger processor counts (§VI-B).
+//!
+//! Provides ordinary least squares on arbitrary basis functions, plus the
+//! two parametric families the application profiles need:
+//!
+//! * power law `y = c · x^p` (checkpoint/recovery cost growth), fitted in
+//!   log space;
+//! * Amdahl-like work rate `y = 1 / (t_serial + t_par/x + c_comm·x)`,
+//!   fitted by least squares on the *reciprocal* (which is linear in the
+//!   three coefficients).
+
+use anyhow::{bail, Result};
+
+/// Solve the normal equations `(XᵀX) β = Xᵀy` for a small design matrix
+/// (column count ≤ ~4) via Gaussian elimination with partial pivoting.
+pub fn least_squares(design: &[Vec<f64>], y: &[f64]) -> Result<Vec<f64>> {
+    let n = design.len();
+    if n == 0 || n != y.len() {
+        bail!("design/observation size mismatch");
+    }
+    let k = design[0].len();
+    if design.iter().any(|r| r.len() != k) {
+        bail!("ragged design matrix");
+    }
+    if n < k {
+        bail!("under-determined system: {n} rows, {k} coefficients");
+    }
+
+    // Normal equations.
+    let mut ata = vec![vec![0.0f64; k]; k];
+    let mut aty = vec![0.0f64; k];
+    for (row, &yi) in design.iter().zip(y) {
+        for i in 0..k {
+            aty[i] += row[i] * yi;
+            for j in 0..k {
+                ata[i][j] += row[i] * row[j];
+            }
+        }
+    }
+
+    // Gaussian elimination with partial pivoting.
+    for col in 0..k {
+        let pivot = (col..k)
+            .max_by(|&a, &b| ata[a][col].abs().partial_cmp(&ata[b][col].abs()).unwrap())
+            .unwrap();
+        if ata[pivot][col].abs() < 1e-12 {
+            bail!("singular normal equations (collinear basis?)");
+        }
+        ata.swap(col, pivot);
+        aty.swap(col, pivot);
+        for row in (col + 1)..k {
+            let f = ata[row][col] / ata[col][col];
+            for j in col..k {
+                ata[row][j] -= f * ata[col][j];
+            }
+            aty[row] -= f * aty[col];
+        }
+    }
+    let mut beta = vec![0.0f64; k];
+    for row in (0..k).rev() {
+        let mut s = aty[row];
+        for j in (row + 1)..k {
+            s -= ata[row][j] * beta[j];
+        }
+        beta[row] = s / ata[row][row];
+    }
+    Ok(beta)
+}
+
+/// Power-law fit `y ≈ c · x^p` (log-space OLS). Returns `(c, p)`.
+pub fn fit_power_law(x: &[f64], y: &[f64]) -> Result<(f64, f64)> {
+    if x.len() != y.len() || x.len() < 2 {
+        bail!("need at least two points");
+    }
+    if x.iter().chain(y).any(|&v| v <= 0.0) {
+        bail!("power-law fit requires positive data");
+    }
+    let design: Vec<Vec<f64>> = x.iter().map(|&xi| vec![1.0, xi.ln()]).collect();
+    let ly: Vec<f64> = y.iter().map(|&v| v.ln()).collect();
+    let beta = least_squares(&design, &ly)?;
+    Ok((beta[0].exp(), beta[1]))
+}
+
+/// Amdahl-communication model of parallel work rate. Work rate on `a`
+/// processors: `rate(a) = 1 / (s + p/a + c·a)` — serial fraction `s`,
+/// perfectly parallel work `p`, per-processor communication cost `c`.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct AmdahlFit {
+    pub serial: f64,
+    pub parallel: f64,
+    pub comm: f64,
+}
+
+impl AmdahlFit {
+    pub fn rate(&self, a: usize) -> f64 {
+        let a = a as f64;
+        1.0 / (self.serial + self.parallel / a + self.comm * a)
+    }
+
+    /// Processor count maximizing the rate (continuous optimum √(p/c),
+    /// clamped to ≥ 1).
+    pub fn optimal_procs(&self) -> f64 {
+        if self.comm <= 0.0 {
+            f64::INFINITY
+        } else {
+            (self.parallel / self.comm).sqrt().max(1.0)
+        }
+    }
+}
+
+/// Fit the Amdahl-communication model to (procs, rate) observations via
+/// OLS on `1/rate = s + p/a + c·a`. Coefficients are clamped non-negative
+/// (tiny negative values arise from noise).
+pub fn fit_amdahl(procs: &[f64], rate: &[f64]) -> Result<AmdahlFit> {
+    if procs.len() != rate.len() || procs.len() < 3 {
+        bail!("need at least three points");
+    }
+    if procs.iter().chain(rate).any(|&v| v <= 0.0) {
+        bail!("Amdahl fit requires positive data");
+    }
+    let design: Vec<Vec<f64>> = procs.iter().map(|&a| vec![1.0, 1.0 / a, a]).collect();
+    let inv_rate: Vec<f64> = rate.iter().map(|&r| 1.0 / r).collect();
+    let beta = least_squares(&design, &inv_rate)?;
+    Ok(AmdahlFit {
+        serial: beta[0].max(0.0),
+        parallel: beta[1].max(1e-12),
+        comm: beta[2].max(0.0),
+    })
+}
+
+/// R² goodness of fit for predictions vs observations.
+pub fn r_squared(y: &[f64], pred: &[f64]) -> f64 {
+    let mean = y.iter().sum::<f64>() / y.len() as f64;
+    let ss_tot: f64 = y.iter().map(|v| (v - mean) * (v - mean)).sum();
+    let ss_res: f64 = y.iter().zip(pred).map(|(v, p)| (v - p) * (v - p)).sum();
+    if ss_tot == 0.0 {
+        1.0
+    } else {
+        1.0 - ss_res / ss_tot
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn ols_exact_line() {
+        // y = 3 + 2x fitted exactly.
+        let design: Vec<Vec<f64>> = (0..10).map(|i| vec![1.0, i as f64]).collect();
+        let y: Vec<f64> = (0..10).map(|i| 3.0 + 2.0 * i as f64).collect();
+        let beta = least_squares(&design, &y).unwrap();
+        assert!((beta[0] - 3.0).abs() < 1e-10);
+        assert!((beta[1] - 2.0).abs() < 1e-10);
+    }
+
+    #[test]
+    fn power_law_recovers_exponent() {
+        let x: Vec<f64> = vec![2.0, 4.0, 8.0, 16.0, 32.0, 48.0];
+        let y: Vec<f64> = x.iter().map(|&v| 5.0 * v.powf(0.65)).collect();
+        let (c, p) = fit_power_law(&x, &y).unwrap();
+        assert!((c - 5.0).abs() < 1e-9);
+        assert!((p - 0.65).abs() < 1e-10);
+    }
+
+    #[test]
+    fn power_law_with_noise() {
+        let mut rng = Rng::new(21);
+        let x: Vec<f64> = (1..=24).map(|i| 2.0 * i as f64).collect();
+        let y: Vec<f64> = x.iter().map(|&v| 3.0 * v.powf(0.5) * (1.0 + 0.05 * rng.normal(0.0, 1.0))).collect();
+        let (c, p) = fit_power_law(&x, &y).unwrap();
+        assert!((p - 0.5).abs() < 0.08, "p = {p}");
+        assert!((c - 3.0).abs() / 3.0 < 0.15, "c = {c}");
+    }
+
+    #[test]
+    fn amdahl_recovers_parameters() {
+        let truth = AmdahlFit { serial: 0.02, parallel: 1.0, comm: 0.0005 };
+        let procs: Vec<f64> = (1..=48).map(|a| a as f64).collect();
+        let rate: Vec<f64> = procs.iter().map(|&a| truth.rate(a as usize)).collect();
+        let fit = fit_amdahl(&procs, &rate).unwrap();
+        assert!((fit.serial - truth.serial).abs() < 1e-8);
+        assert!((fit.parallel - truth.parallel).abs() < 1e-7);
+        assert!((fit.comm - truth.comm).abs() < 1e-9);
+        // Extrapolation far beyond the data stays close.
+        assert!((fit.rate(512) - truth.rate(512)).abs() / truth.rate(512) < 1e-6);
+    }
+
+    #[test]
+    fn amdahl_optimum() {
+        let f = AmdahlFit { serial: 0.0, parallel: 1.0, comm: 0.0001 };
+        assert!((f.optimal_procs() - 100.0).abs() < 1e-9);
+        // Rate indeed peaks near 100.
+        assert!(f.rate(100) > f.rate(50));
+        assert!(f.rate(100) > f.rate(200));
+    }
+
+    #[test]
+    fn rejects_degenerate_inputs() {
+        assert!(least_squares(&[], &[]).is_err());
+        assert!(fit_power_law(&[1.0], &[2.0]).is_err());
+        assert!(fit_power_law(&[1.0, -2.0], &[1.0, 2.0]).is_err());
+        assert!(fit_amdahl(&[1.0, 2.0], &[1.0, 2.0]).is_err());
+    }
+
+    #[test]
+    fn r_squared_perfect_and_poor() {
+        let y = [1.0, 2.0, 3.0];
+        assert!((r_squared(&y, &y) - 1.0).abs() < 1e-12);
+        let bad = [3.0, 1.0, 2.0];
+        assert!(r_squared(&y, &bad) < 0.5);
+    }
+}

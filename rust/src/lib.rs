@@ -1,0 +1,51 @@
+//! # malleable-ckpt
+//!
+//! Reproduction of **"Determination of Checkpointing Intervals for Malleable
+//! Applications"** (K. Raghavendra & Sathish S. Vadhiyar, 2017) as a
+//! three-layer Rust + JAX/Pallas system.
+//!
+//! A *malleable* parallel application can change its processor count at
+//! every recovery. This library builds the paper's Markov performance model
+//! `M^mall`, estimates the **useful work per unit time (UWT)** an
+//! application achieves in the presence of failures as a function of the
+//! checkpointing interval `I`, and selects the interval maximizing UWT. A
+//! trace-driven simulator evaluates the selected intervals exactly as the
+//! paper's §VI does.
+//!
+//! ## Layering
+//!
+//! * **Layer 1/2 (build time)** — JAX + Pallas kernels compute the
+//!   birth–death transition matrices (`expm`, resolvents) and are AOT
+//!   lowered to HLO text (`artifacts/`).
+//! * **Layer 3 (this crate)** — everything else: state-space construction,
+//!   sparse transition assembly, stationary analysis, interval search,
+//!   rescheduling policies, the simulator, baselines and the experiment
+//!   harness. The [`runtime`] module executes the AOT artifacts through the
+//!   PJRT CPU client; [`linalg`] provides a native oracle/fallback.
+
+pub mod apps;
+pub mod baselines;
+pub mod config;
+pub mod experiments;
+pub mod fitting;
+pub mod linalg;
+pub mod markov;
+pub mod metrics;
+pub mod policies;
+pub mod runtime;
+pub mod search;
+pub mod simulator;
+pub mod traces;
+pub mod util;
+
+/// Convenient re-exports of the types most users need.
+pub mod prelude {
+    pub use crate::apps::AppProfile;
+    pub use crate::config::SystemParams;
+    pub use crate::markov::{MalleableModel, ModelInputs};
+    pub use crate::policies::ReschedulingPolicy;
+    pub use crate::runtime::ComputeEngine;
+    pub use crate::search::{self, SearchConfig};
+    pub use crate::simulator::{SimConfig, Simulator};
+    pub use crate::traces::FailureTrace;
+}

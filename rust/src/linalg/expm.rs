@@ -1,0 +1,124 @@
+//! Matrix exponential — scaling-and-squaring with a Taylor core.
+//!
+//! Mirrors `python/compile/kernels/expm.py` exactly (same THETA, same
+//! order, same Horner recurrence), so PJRT-vs-native cross-checks agree to
+//! fp rounding. See that file for the numerical-error argument.
+
+use super::Matrix;
+
+const THETA: f64 = 0.25;
+const TAYLOR_ORDER: usize = 18;
+
+/// `expm(a)` for a square matrix.
+pub fn expm(a: &Matrix) -> Matrix {
+    assert_eq!(a.rows(), a.cols(), "expm requires a square matrix");
+    let n = a.rows();
+    let norm = a.norm_inf();
+    let s = if norm > THETA { ((norm / THETA).log2()).ceil() as u32 } else { 0 };
+    let scaled = a.scale(0.5f64.powi(s as i32));
+
+    // Horner: T = I + a/18; T <- I + (a @ T)/k for k = 17..1.
+    let eye = Matrix::identity(n);
+    let mut t = eye.add(&scaled.scale(1.0 / TAYLOR_ORDER as f64));
+    for k in (1..TAYLOR_ORDER).rev() {
+        t = eye.add(&scaled.matmul(&t).scale(1.0 / k as f64));
+    }
+
+    for _ in 0..s {
+        t = t.matmul(&t);
+    }
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn bd_generator(s_max: usize, lam: f64, theta: f64) -> Matrix {
+        let m = s_max + 1;
+        let mut r = Matrix::zeros(m, m);
+        for s in 0..m {
+            if s > 0 {
+                r[(s, s - 1)] = s as f64 * lam;
+            }
+            if s < m - 1 {
+                r[(s, s + 1)] = (s_max - s) as f64 * theta;
+            }
+            let off: f64 = r.row(s).iter().sum::<f64>() - r[(s, s)];
+            r[(s, s)] = -off;
+        }
+        r
+    }
+
+    #[test]
+    fn zero_is_identity() {
+        let e = expm(&Matrix::zeros(5, 5));
+        assert!(e.max_abs_diff(&Matrix::identity(5)) < 1e-15);
+    }
+
+    #[test]
+    fn diagonal_closed_form() {
+        let mut d = Matrix::zeros(3, 3);
+        d[(0, 0)] = -2.0;
+        d[(1, 1)] = 0.5;
+        d[(2, 2)] = 3.0;
+        let e = expm(&d);
+        for (i, want) in [(-2.0f64).exp(), 0.5f64.exp(), 3.0f64.exp()].iter().enumerate() {
+            assert!((e[(i, i)] - want).abs() < 1e-12 * want);
+        }
+    }
+
+    #[test]
+    fn nilpotent_closed_form() {
+        let mut a = Matrix::zeros(2, 2);
+        a[(0, 1)] = 5.0;
+        let e = expm(&a);
+        assert!((e[(0, 0)] - 1.0).abs() < 1e-14);
+        assert!((e[(0, 1)] - 5.0).abs() < 1e-13);
+        assert!((e[(1, 0)]).abs() < 1e-14);
+    }
+
+    #[test]
+    fn rotation_closed_form() {
+        // expm([[0, -t], [t, 0]]) = [[cos t, -sin t], [sin t, cos t]]
+        let t = 1.3;
+        let mut a = Matrix::zeros(2, 2);
+        a[(0, 1)] = -t;
+        a[(1, 0)] = t;
+        let e = expm(&a);
+        assert!((e[(0, 0)] - t.cos()).abs() < 1e-12);
+        assert!((e[(0, 1)] + t.sin()).abs() < 1e-12);
+        assert!((e[(1, 0)] - t.sin()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn generator_rows_stochastic() {
+        let r = bd_generator(20, 2e-6, 4e-4);
+        let e = expm(&r.scale(50_000.0));
+        for i in 0..21 {
+            let s: f64 = e.row(i).iter().sum();
+            assert!((s - 1.0).abs() < 1e-9, "row {i} sums to {s}");
+            assert!(e.row(i).iter().all(|&x| x > -1e-12));
+        }
+    }
+
+    #[test]
+    fn semigroup() {
+        let r = bd_generator(10, 3e-6, 2e-4).scale(30_000.0);
+        let e1 = expm(&r);
+        let e2 = expm(&r.scale(2.0));
+        assert!(e1.matmul(&e1).max_abs_diff(&e2) < 1e-10);
+    }
+
+    #[test]
+    fn large_norm_mixes_to_stationary() {
+        let r = bd_generator(31, 5e-6, 3.5e-4).scale(5.0e5);
+        let e = expm(&r);
+        for j in 0..32 {
+            let col: Vec<f64> = (0..32).map(|i| e[(i, j)]).collect();
+            let spread = col.iter().cloned().fold(f64::NEG_INFINITY, f64::max)
+                - col.iter().cloned().fold(f64::INFINITY, f64::min);
+            assert!(spread < 1e-6, "column {j} spread {spread}");
+        }
+    }
+}

@@ -1,0 +1,16 @@
+//! Native dense linear algebra: the oracle/fallback twin of the AOT
+//! JAX/Pallas kernels.
+//!
+//! Implements exactly the same algorithms as `python/compile/kernels/`
+//! (scaling-and-squaring Taylor `expm`, Thomas tridiagonal solve), so the
+//! PJRT path can be cross-checked bit-for-bit-ish (same operation order up
+//! to matmul tiling) in integration tests, and so everything still runs
+//! when `artifacts/` has not been built.
+
+mod expm;
+mod matrix;
+mod tridiag;
+
+pub use expm::expm;
+pub use matrix::Matrix;
+pub use tridiag::{tridiag_solve, Tridiag};

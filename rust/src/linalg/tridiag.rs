@@ -1,0 +1,201 @@
+//! Thomas tridiagonal solve with multiple right-hand sides.
+//!
+//! Mirrors `python/compile/kernels/tridiag.py`; used for the resolvent
+//! `(aλI − R)^{-1}` of the birth–death generator, which is strictly
+//! diagonally dominant, so no pivoting is required.
+
+use super::Matrix;
+
+/// Banded representation of a tridiagonal matrix.
+#[derive(Debug, Clone)]
+pub struct Tridiag {
+    /// Sub-diagonal; `dl[0]` is ignored.
+    pub dl: Vec<f64>,
+    /// Main diagonal.
+    pub dd: Vec<f64>,
+    /// Super-diagonal; `du[n-1]` is ignored.
+    pub du: Vec<f64>,
+}
+
+impl Tridiag {
+    /// Extract bands from a dense matrix (entries outside the three bands
+    /// are ignored; the caller asserts tridiagonality separately if needed).
+    pub fn from_dense(m: &Matrix) -> Tridiag {
+        let n = m.rows();
+        assert_eq!(n, m.cols());
+        let mut dl = vec![0.0; n];
+        let mut dd = vec![0.0; n];
+        let mut du = vec![0.0; n];
+        for i in 0..n {
+            dd[i] = m[(i, i)];
+            if i > 0 {
+                dl[i] = m[(i, i - 1)];
+            }
+            if i + 1 < n {
+                du[i] = m[(i, i + 1)];
+            }
+        }
+        Tridiag { dl, dd, du }
+    }
+
+    pub fn n(&self) -> usize {
+        self.dd.len()
+    }
+
+    /// Reconstruct a dense matrix (tests / diagnostics).
+    pub fn to_dense(&self) -> Matrix {
+        let n = self.n();
+        let mut m = Matrix::zeros(n, n);
+        for i in 0..n {
+            m[(i, i)] = self.dd[i];
+            if i > 0 {
+                m[(i, i - 1)] = self.dl[i];
+            }
+            if i + 1 < n {
+                m[(i, i + 1)] = self.du[i];
+            }
+        }
+        m
+    }
+}
+
+/// Solve `T X = B` where `B` is (n, m); returns X of the same shape.
+pub fn tridiag_solve(t: &Tridiag, b: &Matrix) -> Matrix {
+    let n = t.n();
+    assert_eq!(b.rows(), n, "rhs rows");
+    let m = b.cols();
+
+    let mut cp = vec![0.0; n]; // modified super-diagonal
+    let mut bp = Matrix::zeros(n, m); // modified rhs
+
+    // Forward sweep.
+    cp[0] = t.du[0] / t.dd[0];
+    {
+        let inv = 1.0 / t.dd[0];
+        let (bp0, b0) = (bp.row_mut(0), b.row(0));
+        for j in 0..m {
+            bp0[j] = b0[j] * inv;
+        }
+    }
+    for i in 1..n {
+        let denom = t.dd[i] - t.dl[i] * cp[i - 1];
+        cp[i] = t.du[i] / denom;
+        let inv = 1.0 / denom;
+        let dl_i = t.dl[i];
+        // bp[i] = (b[i] - dl[i] * bp[i-1]) / denom — needs split borrows.
+        let (head, tail) = bp.data_split_at_mut(i * m);
+        let prev = &head[(i - 1) * m..i * m];
+        let cur = &mut tail[..m];
+        let bi = b.row(i);
+        for j in 0..m {
+            cur[j] = (bi[j] - dl_i * prev[j]) * inv;
+        }
+    }
+
+    // Backward substitution: x[i] = bp[i] - cp[i] * x[i+1].
+    let mut x = bp; // reuse storage; overwrite in place from the bottom up
+    for i in (0..n.saturating_sub(1)).rev() {
+        let c = cp[i];
+        let (head, tail) = x.data_split_at_mut((i + 1) * m);
+        let cur = &mut head[i * m..(i + 1) * m];
+        let next = &tail[..m];
+        for j in 0..m {
+            cur[j] -= c * next[j];
+        }
+    }
+    x
+}
+
+impl Matrix {
+    /// Split the backing storage at a flat offset (row boundary) for
+    /// simultaneous mutable access to distinct row ranges.
+    fn data_split_at_mut(&mut self, at: usize) -> (&mut [f64], &mut [f64]) {
+        debug_assert_eq!(at % self.cols(), 0);
+        self.data_mut().split_at_mut(at)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn random_dd_system(rng: &mut Rng, n: usize, m: usize) -> (Tridiag, Matrix) {
+        let mut dl = vec![0.0; n];
+        let mut dd = vec![0.0; n];
+        let mut du = vec![0.0; n];
+        for i in 0..n {
+            if i > 0 {
+                dl[i] = rng.normal(0.0, 1.0);
+            }
+            if i + 1 < n {
+                du[i] = rng.normal(0.0, 1.0);
+            }
+            let dom = dl[i].abs() + du[i].abs() + 0.5 + rng.f64();
+            dd[i] = if rng.chance(0.5) { dom } else { -dom };
+        }
+        let mut b = Matrix::zeros(n, m);
+        for i in 0..n {
+            for j in 0..m {
+                b[(i, j)] = rng.normal(0.0, 2.0);
+            }
+        }
+        (Tridiag { dl, dd, du }, b)
+    }
+
+    #[test]
+    fn residual_small_random_systems() {
+        let mut rng = Rng::new(5);
+        for &(n, m) in &[(1usize, 1usize), (2, 3), (5, 5), (33, 7), (128, 4)] {
+            let (t, b) = random_dd_system(&mut rng, n, m);
+            let x = tridiag_solve(&t, &b);
+            let resid = t.to_dense().matmul(&x).max_abs_diff(&b);
+            assert!(resid < 1e-9, "n={n} m={m} resid={resid}");
+        }
+    }
+
+    #[test]
+    fn diagonal_system() {
+        let t = Tridiag { dl: vec![0.0; 3], dd: vec![2.0, -4.0, 8.0], du: vec![0.0; 3] };
+        let b = Matrix::from_rows(&[vec![2.0], vec![8.0], vec![4.0]]);
+        let x = tridiag_solve(&t, &b);
+        assert!((x[(0, 0)] - 1.0).abs() < 1e-14);
+        assert!((x[(1, 0)] + 2.0).abs() < 1e-14);
+        assert!((x[(2, 0)] - 0.5).abs() < 1e-14);
+    }
+
+    #[test]
+    fn from_dense_roundtrip() {
+        let mut rng = Rng::new(6);
+        let (t, _) = random_dd_system(&mut rng, 10, 1);
+        let t2 = Tridiag::from_dense(&t.to_dense());
+        assert_eq!(t.dd, t2.dd);
+        assert_eq!(t.dl[1..], t2.dl[1..]);
+        assert_eq!(t.du[..9], t2.du[..9]);
+    }
+
+    #[test]
+    fn resolvent_row_stochastic() {
+        // a*lam * (a*lam I - R)^{-1} rows sum to 1 for generator R.
+        let s_max = 12usize;
+        let (lam, theta, a_lam) = (3e-6, 4e-4, 64.0 * 3e-6);
+        let n = s_max + 1;
+        let mut r = Matrix::zeros(n, n);
+        for s in 0..n {
+            if s > 0 {
+                r[(s, s - 1)] = s as f64 * lam;
+            }
+            if s < n - 1 {
+                r[(s, s + 1)] = (s_max - s) as f64 * theta;
+            }
+            let off: f64 = r.row(s).iter().sum::<f64>() - r[(s, s)];
+            r[(s, s)] = -off;
+        }
+        let m = Matrix::identity(n).scale(a_lam).sub(&r);
+        let x = tridiag_solve(&Tridiag::from_dense(&m), &Matrix::identity(n));
+        for i in 0..n {
+            let s: f64 = x.row(i).iter().sum::<f64>() * a_lam;
+            assert!((s - 1.0).abs() < 1e-10, "row {i}: {s}");
+        }
+    }
+}

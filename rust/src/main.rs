@@ -1,0 +1,384 @@
+//! `malleable-ckpt` CLI — the Layer-3 coordinator entry point.
+//!
+//! Subcommands cover the full pipeline: build a model, select an interval,
+//! simulate an execution segment, generate traces, and regenerate every
+//! table/figure of the paper (see `DESIGN.md` §5).
+
+use anyhow::{anyhow, Result};
+use std::path::Path;
+
+use malleable_ckpt::apps::{AppKind, AppProfile};
+use malleable_ckpt::config::{paper_system, SystemParams};
+use malleable_ckpt::experiments::{common::trace_for_system, extensions, figures, tables, ExperimentOptions};
+use malleable_ckpt::markov::{BuildOptions, MalleableModel, ModelInputs};
+use malleable_ckpt::metrics::evaluate_segment;
+use malleable_ckpt::policies::ReschedulingPolicy;
+use malleable_ckpt::runtime::ComputeEngine;
+use malleable_ckpt::search::{select_interval, SearchConfig};
+use malleable_ckpt::traces::parse::to_lanl_csv;
+use malleable_ckpt::util::cli::{flag, switch, App, CommandSpec};
+use malleable_ckpt::util::json::Json;
+use malleable_ckpt::util::rng::Rng;
+use malleable_ckpt::util::stats::fmt_duration;
+
+fn app_spec() -> App {
+    App::new("malleable-ckpt", "checkpointing intervals for malleable applications (Raghavendra & Vadhiyar 2017)")
+        .command(CommandSpec {
+            name: "select",
+            about: "select the UWT-optimal checkpointing interval for a system/app/policy",
+            flags: vec![
+                flag("system", "NAME", "paper system name (e.g. system-1/128, condor/256)", Some("system-1/128")),
+                flag("app", "NAME", "application: qr, cg or md", Some("qr")),
+                flag("policy", "NAME", "rescheduling policy: greedy, pb", Some("greedy")),
+                flag("engine", "KIND", "compute engine: auto, native, pjrt", Some("auto")),
+                flag("mttf-days", "F", "override per-processor MTTF (days)", None),
+                flag("mttr-min", "F", "override per-processor MTTR (minutes)", None),
+                flag("procs", "N", "override processor count", None),
+                switch("probes", "print all probed (interval, UWT) pairs"),
+            ],
+            positionals: vec![],
+        })
+        .command(CommandSpec {
+            name: "model",
+            about: "build M^mall once and report UWT + model statistics",
+            flags: vec![
+                flag("system", "NAME", "paper system name", Some("system-1/128")),
+                flag("app", "NAME", "application: qr, cg or md", Some("qr")),
+                flag("interval", "SECS", "checkpointing interval (seconds)", Some("3600")),
+                flag("engine", "KIND", "compute engine: auto, native, pjrt", Some("auto")),
+                flag("thres", "P", "up-state elimination threshold (0 disables)", Some("0.0006")),
+                flag("mttf-days", "F", "override per-processor MTTF (days)", None),
+                flag("mttr-min", "F", "override per-processor MTTR (minutes)", None),
+                flag("procs", "N", "override processor count", None),
+            ],
+            positionals: vec![],
+        })
+        .command(CommandSpec {
+            name: "simulate",
+            about: "evaluate model efficiency on a synthetic trace segment",
+            flags: vec![
+                flag("system", "NAME", "paper system name", Some("condor/128")),
+                flag("app", "NAME", "application: qr, cg or md", Some("qr")),
+                flag("days", "F", "segment duration in days", Some("20")),
+                flag("seed", "U64", "RNG seed", Some("7")),
+                flag("engine", "KIND", "compute engine: auto, native, pjrt", Some("auto")),
+                flag("mttf-days", "F", "override per-processor MTTF (days)", None),
+                flag("mttr-min", "F", "override per-processor MTTR (minutes)", None),
+                flag("procs", "N", "override processor count", None),
+            ],
+            positionals: vec![],
+        })
+        .command(CommandSpec {
+            name: "gen-trace",
+            about: "generate a synthetic failure trace as LANL-style CSV on stdout",
+            flags: vec![
+                flag("system", "NAME", "paper system name", Some("condor/128")),
+                flag("days", "F", "trace length in days", Some("90")),
+                flag("seed", "U64", "RNG seed", Some("1")),
+                flag("mttf-days", "F", "override per-processor MTTF (days)", None),
+                flag("mttr-min", "F", "override per-processor MTTR (minutes)", None),
+                flag("procs", "N", "override processor count", None),
+            ],
+            positionals: vec![],
+        })
+        .command(CommandSpec {
+            name: "experiment",
+            about: "regenerate a paper table/figure: table1..table4, fig4, fig5, fig6a, fig6b, moldable, weibull, hetero, all",
+            flags: vec![
+                flag("segments", "N", "random segments per table row", Some("3")),
+                flag("seed", "U64", "base RNG seed", Some("20170611")),
+                flag("engine", "KIND", "compute engine: auto, native, pjrt", Some("auto")),
+                flag("json-out", "PATH", "write the machine-readable report to PATH", None),
+            ],
+            positionals: vec![("which", "experiment id")],
+        })
+        .command(CommandSpec {
+            name: "analyze-trace",
+            about: "estimate λ/θ, fit a Weibull TTF and report availability for a failure-trace file (paper §III-C's 'programs for standard failure traces')",
+            flags: vec![
+                flag("format", "FMT", "trace format: lanl (CSV) or condor", Some("lanl")),
+                flag("cutoff", "SECS", "only use history before this time", None),
+            ],
+            positionals: vec![("path", "trace file (LANL-style CSV or Condor-style rows)")],
+        })
+        .command(CommandSpec {
+            name: "info",
+            about: "report engine/artifact status",
+            flags: vec![],
+            positionals: vec![],
+        })
+}
+
+fn engine_from(name: &str) -> Result<ComputeEngine> {
+    match name {
+        "native" => Ok(ComputeEngine::native()),
+        "pjrt" => ComputeEngine::pjrt(Path::new("artifacts")),
+        "auto" => Ok(ComputeEngine::auto()),
+        other => Err(anyhow!("unknown engine '{other}' (native|pjrt|auto)")),
+    }
+}
+
+fn app_from(name: &str, n: usize) -> Result<AppProfile> {
+    match name {
+        "qr" => Ok(AppProfile::qr(n)),
+        "cg" => Ok(AppProfile::cg(n)),
+        "md" => Ok(AppProfile::md(n)),
+        other => Err(anyhow!("unknown app '{other}' (qr|cg|md)")),
+    }
+}
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let spec = app_spec();
+    let parsed = match spec.parse(&args) {
+        Ok(p) => p,
+        Err(e) => {
+            eprintln!("{e}");
+            std::process::exit(2);
+        }
+    };
+    if let Err(e) = run(&parsed) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn run(p: &malleable_ckpt::util::cli::Parsed) -> Result<()> {
+    match p.command.as_str() {
+        "select" => cmd_select(p),
+        "model" => cmd_model(p),
+        "simulate" => cmd_simulate(p),
+        "gen-trace" => cmd_gen_trace(p),
+        "experiment" => cmd_experiment(p),
+        "analyze-trace" => cmd_analyze_trace(p),
+        "info" => cmd_info(),
+        other => Err(anyhow!("unhandled command {other}")),
+    }
+}
+
+fn system_from(p: &malleable_ckpt::util::cli::Parsed) -> Result<SystemParams> {
+    let name = p.get_or("system", "system-1/128");
+    let mut sys =
+        paper_system(&name).ok_or_else(|| anyhow!("unknown system '{name}'; see config::TABLE2_SYSTEMS"))?;
+    if let Some(n) = p.get_usize("procs")? {
+        sys.n = n;
+    }
+    if let Some(mttf) = p.get_f64("mttf-days")? {
+        sys.lambda = 1.0 / (mttf * 86_400.0);
+    }
+    if let Some(mttr) = p.get_f64("mttr-min")? {
+        sys.theta = 1.0 / (mttr * 60.0);
+    }
+    Ok(sys)
+}
+
+fn cmd_select(p: &malleable_ckpt::util::cli::Parsed) -> Result<()> {
+    let sys = system_from(p)?;
+    let app = app_from(&p.get_or("app", "qr"), sys.n)?;
+    let engine = engine_from(&p.get_or("engine", "auto"))?;
+    let policy = match p.get_or("policy", "greedy").as_str() {
+        "greedy" => ReschedulingPolicy::greedy(sys.n),
+        "pb" => ReschedulingPolicy::performance_based(app.work_vector())?,
+        other => return Err(anyhow!("policy '{other}' not available here (greedy|pb)")),
+    };
+    let inputs = ModelInputs::new(sys, &app, &policy)?;
+    println!(
+        "selecting interval: system N={} λ=1/({:.2} d) θ=1/({:.1} min), app {}, policy {}, engine {}",
+        sys.n,
+        sys.mttf() / 86_400.0,
+        sys.mttr() / 60.0,
+        app.name,
+        policy.name,
+        engine.name()
+    );
+    let res = select_interval(&inputs, &engine, &SearchConfig::default())?;
+    if p.switch("probes") {
+        for (i, u) in &res.probes {
+            println!("  I = {:>10}  UWT = {u:.4}", fmt_duration(*i));
+        }
+    }
+    println!(
+        "I_model = {} (best probed {}), UWT = {:.4}, {} model builds",
+        fmt_duration(res.interval),
+        fmt_duration(res.best_probed),
+        res.uwt,
+        res.evaluations
+    );
+    Ok(())
+}
+
+fn cmd_model(p: &malleable_ckpt::util::cli::Parsed) -> Result<()> {
+    let sys = system_from(p)?;
+    let app = app_from(&p.get_or("app", "qr"), sys.n)?;
+    let engine = engine_from(&p.get_or("engine", "auto"))?;
+    let interval = p.get_f64("interval")?.unwrap_or(3_600.0);
+    let thres = p.get_f64("thres")?.unwrap_or(6e-4);
+    let policy = ReschedulingPolicy::greedy(sys.n);
+    let inputs = ModelInputs::new(sys, &app, &policy)?;
+    let opts = BuildOptions {
+        thres: if thres > 0.0 { Some(thres) } else { None },
+        ..Default::default()
+    };
+    let m = MalleableModel::build(&inputs, &engine, interval, &opts)?;
+    let b = m.uwt_breakdown();
+    println!("engine            : {}", engine.name());
+    println!("states            : {} (full {}, eliminated {})", m.n_states(), m.full_states, m.eliminated);
+    println!("transitions (nnz) : {}", m.n_transitions());
+    println!("stationary iters  : {}", m.solve_iters);
+    println!("build time        : {:.3} s", m.build_seconds);
+    println!("UWT               : {:.4}", b.uwt);
+    println!("availability      : {:.4}", b.availability);
+    println!("mean active procs : {:.2}", m.mean_active_procs());
+    Ok(())
+}
+
+fn cmd_simulate(p: &malleable_ckpt::util::cli::Parsed) -> Result<()> {
+    let sys = system_from(p)?;
+    let app = app_from(&p.get_or("app", "qr"), sys.n)?;
+    let engine = engine_from(&p.get_or("engine", "auto"))?;
+    let days = p.get_f64("days")?.unwrap_or(20.0);
+    let seed = p.get_u64("seed")?.unwrap_or(7);
+    let mut rng = Rng::new(seed);
+    let trace = trace_for_system(&sys, days * 2.0 + 30.0, &mut rng);
+    let policy = ReschedulingPolicy::greedy(sys.n);
+    let eval = evaluate_segment(
+        &trace,
+        &app,
+        &policy,
+        &engine,
+        15.0 * 86_400.0,
+        days * 86_400.0,
+        &SearchConfig::default(),
+        Some((sys.lambda, sys.theta)),
+    )?;
+    println!(
+        "segment: start day 15, duration {days:.1} d, λ̂=1/({:.2} d), θ̂=1/({:.1} min)",
+        1.0 / (eval.lambda * 86_400.0),
+        1.0 / (eval.theta * 60.0)
+    );
+    println!("I_model = {}  |  I_sim = {}", fmt_duration(eval.i_model), fmt_duration(eval.i_sim));
+    println!("UW(I_model) = {:.3e}  |  UW_highest = {:.3e}", eval.uw_model, eval.uw_highest);
+    println!("model efficiency = {:.2} %", eval.efficiency);
+    Ok(())
+}
+
+fn cmd_gen_trace(p: &malleable_ckpt::util::cli::Parsed) -> Result<()> {
+    let sys = system_from(p)?;
+    let days = p.get_f64("days")?.unwrap_or(90.0);
+    let seed = p.get_u64("seed")?.unwrap_or(1);
+    let mut rng = Rng::new(seed);
+    let trace = trace_for_system(&sys, days, &mut rng);
+    print!("{}", to_lanl_csv(&trace));
+    Ok(())
+}
+
+fn cmd_experiment(p: &malleable_ckpt::util::cli::Parsed) -> Result<()> {
+    let which = p
+        .positionals
+        .first()
+        .ok_or_else(|| anyhow!("missing experiment id (table1..table4, fig4..fig6b, moldable, weibull, hetero, all)"))?
+        .clone();
+    let engine = engine_from(&p.get_or("engine", "auto"))?;
+    let mut opts = ExperimentOptions::default();
+    if let Some(s) = p.get_usize("segments")? {
+        opts.segments = s;
+    }
+    if let Some(s) = p.get_u64("seed")? {
+        opts.seed = s;
+    }
+
+    let mut report = Json::obj();
+    let run_one = |id: &str, report: &mut Json| -> Result<()> {
+        let j = match id {
+            "table1" => tables::table1(),
+            "table2" => tables::table2(&engine, &opts)?,
+            "table3" => tables::table3(&engine, &opts)?,
+            "table4" => tables::table4(&engine, &opts)?,
+            "fig4" => figures::fig4(),
+            "fig5" => figures::fig5(&opts)?,
+            "fig6a" => figures::fig6a(&engine, &opts)?,
+            "fig6b" => figures::fig6b(&engine, &opts)?,
+            "moldable" => figures::moldable_vs_malleable(&opts)?,
+            "weibull" => extensions::weibull_sensitivity(&engine, &opts)?,
+            "hetero" => extensions::heterogeneous(&opts)?,
+            other => return Err(anyhow!("unknown experiment '{other}'")),
+        };
+        report.set(id, j);
+        Ok(())
+    };
+
+    if which == "all" {
+        for id in [
+            "table1", "table2", "table3", "table4", "fig4", "fig5", "fig6a", "fig6b", "moldable",
+            "weibull", "hetero",
+        ] {
+            run_one(id, &mut report)?;
+        }
+    } else {
+        run_one(&which, &mut report)?;
+    }
+
+    if let Some(path) = p.get("json-out") {
+        std::fs::write(path, report.to_string_pretty(0))?;
+        println!("\nwrote {path}");
+    }
+    Ok(())
+}
+
+fn cmd_analyze_trace(p: &malleable_ckpt::util::cli::Parsed) -> Result<()> {
+    use malleable_ckpt::traces::parse;
+    use malleable_ckpt::traces::stats;
+
+    let path = p.positionals.first().ok_or_else(|| anyhow!("missing trace file path"))?;
+    let text = std::fs::read_to_string(path)?;
+    let trace = match p.get_or("format", "lanl").as_str() {
+        "lanl" => parse::parse_lanl_csv(&text, None)?,
+        "condor" => parse::parse_condor(&text, None)?,
+        other => return Err(anyhow!("unknown format '{other}' (lanl|condor)")),
+    };
+    let cutoff = p.get_f64("cutoff")?.unwrap_or(trace.horizon());
+
+    let total_failures: usize =
+        (0..trace.n_procs()).map(|pr| trace.failure_count_before(pr, cutoff)).sum();
+    println!("processors          : {}", trace.n_procs());
+    println!("horizon             : {}", fmt_duration(trace.horizon()));
+    println!("failure events      : {total_failures} (before cutoff {})", fmt_duration(cutoff));
+    println!("machine availability: {:.4}", stats::machine_availability(&trace, cutoff));
+    match stats::estimate_rates(&trace, cutoff) {
+        Ok((lam, theta)) => {
+            println!("λ̂ (exp MLE)         : 1/({:.2} days)", 1.0 / (lam * 86_400.0));
+            println!("θ̂ (exp MLE)         : 1/({:.1} min)", 1.0 / (theta * 60.0));
+        }
+        Err(e) => println!("rate estimation     : unavailable ({e})"),
+    }
+    match stats::fit_weibull_ttf(&trace, cutoff) {
+        Ok((shape, scale)) => {
+            println!("Weibull TTF fit     : shape k = {shape:.3}, scale = {}", fmt_duration(scale));
+            if shape < 0.9 {
+                println!("                      (k < 1: decreasing hazard — exponential model optimistic)");
+            } else if shape > 1.1 {
+                println!("                      (k > 1: wear-out hazard — exponential model pessimistic)");
+            } else {
+                println!("                      (k ≈ 1: exponential assumption tenable)");
+            }
+        }
+        Err(e) => println!("Weibull TTF fit     : unavailable ({e})"),
+    }
+    Ok(())
+}
+
+fn cmd_info() -> Result<()> {
+    let engine = ComputeEngine::auto();
+    println!("engine: {}", engine.name());
+    if let ComputeEngine::Pjrt(e) = &engine {
+        println!("artifact buckets: {:?}", e.buckets());
+    } else {
+        println!("artifacts not found — run `make artifacts` for the PJRT path");
+    }
+    for kind in AppKind::ALL {
+        let app = AppProfile::paper_app(kind, 512);
+        let (cmin, cavg, cmax) = app.ckpt_stats();
+        println!("{}: C = {cmin:.2}/{cavg:.2}/{cmax:.2} s (min/avg/max)", kind.name());
+    }
+    Ok(())
+}

@@ -1,0 +1,138 @@
+//! Birth–death spare-pool chain (paper Eq. 1 / Figure 2).
+//!
+//! For an application executing on `a` processors in an `N`-processor
+//! system there are `S = N - a` spares. The spare pool evolves as a
+//! birth–death CTMC over `s ∈ 0..=S` functional spares: one of `s` spares
+//! fails at rate `s·λ`, one of `S - s` broken spares is repaired at rate
+//! `(S - s)·θ`.
+//!
+//! Convention: row/column index `s` *is* the number of functional spares
+//! (0-indexed, unlike the paper's 1-indexed `[B:s]` numbering that counts
+//! from `S` down; the `S-i+1` index gymnastics of §II disappear).
+
+use crate::linalg::Matrix;
+
+/// Dense (S+1)×(S+1) generator matrix `R` for a spare pool of size `s_max`.
+///
+/// Rows sum to zero; off-diagonals are non-negative; tridiagonal.
+pub fn bd_generator(s_max: usize, lambda: f64, theta: f64) -> Matrix {
+    let m = s_max + 1;
+    let mut r = Matrix::zeros(m, m);
+    for s in 0..m {
+        let mut total = 0.0;
+        if s > 0 {
+            let rate = s as f64 * lambda;
+            r[(s, s - 1)] = rate;
+            total += rate;
+        }
+        if s < m - 1 {
+            let rate = (s_max - s) as f64 * theta;
+            r[(s, s + 1)] = rate;
+            total += rate;
+        }
+        r[(s, s)] = -total;
+    }
+    r
+}
+
+/// Exact stationary distribution of the spare pool (ergodic birth–death
+/// chain): `π_s ∝ C(S, s) (θ/λ)^s`. Used for model sanity tests and for
+/// seeding the availability-based policy heuristics.
+pub fn bd_stationary(s_max: usize, lambda: f64, theta: f64) -> Vec<f64> {
+    let mut pi = vec![0.0f64; s_max + 1];
+    // Log-space to avoid overflow for large S.
+    let ratio = (theta / lambda).ln();
+    let mut logs = vec![0.0f64; s_max + 1];
+    let mut log_binom = 0.0f64;
+    for s in 0..=s_max {
+        if s > 0 {
+            log_binom += ((s_max - s + 1) as f64).ln() - (s as f64).ln();
+        }
+        logs[s] = log_binom + s as f64 * ratio;
+    }
+    let m = logs.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+    let mut z = 0.0;
+    for s in 0..=s_max {
+        pi[s] = (logs[s] - m).exp();
+        z += pi[s];
+    }
+    for p in pi.iter_mut() {
+        *p /= z;
+    }
+    pi
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rows_sum_to_zero() {
+        let r = bd_generator(10, 2e-6, 4e-4);
+        for i in 0..11 {
+            let s: f64 = r.row(i).iter().sum();
+            assert!(s.abs() < 1e-18, "row {i} sums to {s}");
+        }
+    }
+
+    #[test]
+    fn tridiagonal_structure() {
+        let r = bd_generator(6, 1e-5, 1e-3);
+        for i in 0..7 {
+            for j in 0..7 {
+                if (i as isize - j as isize).abs() > 1 {
+                    assert_eq!(r[(i, j)], 0.0);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn rates_match_eq1() {
+        let (lam, theta) = (3e-6, 5e-4);
+        let r = bd_generator(4, lam, theta);
+        // s=2: failure rate 2λ, repair rate 2θ.
+        assert!((r[(2, 1)] - 2.0 * lam).abs() < 1e-20);
+        assert!((r[(2, 3)] - 2.0 * theta).abs() < 1e-20);
+        // boundaries: s=0 no failures, s=S no repairs.
+        assert_eq!(r[(0, 0)], -(4.0 * theta));
+        assert_eq!(r[(4, 4)], -(4.0 * lam));
+    }
+
+    #[test]
+    fn degenerate_single_state() {
+        let r = bd_generator(0, 1e-6, 1e-3);
+        assert_eq!(r.rows(), 1);
+        assert_eq!(r[(0, 0)], 0.0);
+    }
+
+    #[test]
+    fn stationary_is_binomial() {
+        // π_s = C(S,s) p^s (1-p)^{S-s} with p = θ/(λ+θ).
+        let (s_max, lam, theta) = (12usize, 2e-6, 4e-4);
+        let pi = bd_stationary(s_max, lam, theta);
+        let p = theta / (lam + theta);
+        let mut binom = 1.0f64;
+        for (s, &pi_s) in pi.iter().enumerate() {
+            if s > 0 {
+                binom *= (s_max - s + 1) as f64 / s as f64;
+            }
+            let want = binom * p.powi(s as i32) * (1.0 - p).powi((s_max - s) as i32);
+            assert!((pi_s - want).abs() < 1e-12, "s={s}: {pi_s} vs {want}");
+        }
+        let sum: f64 = pi.iter().sum();
+        assert!((sum - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn stationary_solves_generator() {
+        // π R = 0.
+        let (s_max, lam, theta) = (8usize, 5e-6, 2e-4);
+        let r = bd_generator(s_max, lam, theta);
+        let pi = bd_stationary(s_max, lam, theta);
+        for j in 0..=s_max {
+            let v: f64 = (0..=s_max).map(|i| pi[i] * r[(i, j)]).sum();
+            assert!(v.abs() < 1e-15, "column {j}: {v}");
+        }
+    }
+}

@@ -1,0 +1,281 @@
+//! Closed-form transition probabilities of the spare-pool chain
+//! (Ehrenfest structure) — the Layer-3 fast path for `expm(R·δ)`.
+//!
+//! The birth–death generator of Eq. 1 describes `S` *independent* spares,
+//! each a 2-state (up/down) Markov machine with failure rate `λ` and
+//! repair rate `θ`: the aggregate count moves `s → s−1` at rate `sλ` and
+//! `s → s+1` at rate `(S−s)θ` exactly because the spares are independent.
+//! Hence the row `[B:s1]` of `expm(R·δ)` is the distribution of
+//!
+//! ```text
+//!   Bin(s1, p_uu(δ)) + Bin(S − s1, p_du(δ))
+//! ```
+//!
+//! with the 2-state closed forms (ρ = λ+θ):
+//!
+//! ```text
+//!   p_uu(δ) = θ/ρ + (λ/ρ)·e^{−ρδ}     (up spare still up after δ)
+//!   p_du(δ) = (θ/ρ)·(1 − e^{−ρδ})     (down spare repaired by δ)
+//! ```
+//!
+//! The full matrix is assembled in **O(n²)**: row 0 is a binomial pmf
+//! (log-space, stable), and row `i+1` follows from row `i` by swapping one
+//! `Bernoulli(p_du)` for a `Bernoulli(p_uu)` — one deconvolution plus one
+//! convolution, each O(n), with the deconvolution direction chosen by the
+//! parameter (forward for q ≤ ½, backward otherwise) so the recurrence is
+//! contractive. This replaces the O(n³·log‖Rδ‖) scaling-and-squaring
+//! `expm` on the model-build hot path (EXPERIMENTS.md §Perf records the
+//! ~100× build-time effect at N = 512); the generic kernel remains as the
+//! paper-faithful oracle and the two are cross-checked in tests here and
+//! in the AOT path.
+
+use crate::linalg::Matrix;
+
+/// 2-state closed forms `(p_uu, p_du)` for window `delta`.
+pub fn spare_probs(lambda: f64, theta: f64, delta: f64) -> (f64, f64) {
+    let rho = lambda + theta;
+    let decay = (-rho * delta).exp();
+    let p_stat = theta / rho;
+    (p_stat + (lambda / rho) * decay, p_stat * (1.0 - decay))
+}
+
+/// Log-space binomial pmf vector `P(Bin(n, p) = k)` for `k = 0..=n_total`
+/// (padded with zeros beyond `n`).
+fn binom_pmf(n: usize, p: f64, len: usize) -> Vec<f64> {
+    let mut out = vec![0.0; len];
+    if p <= 0.0 {
+        out[0] = 1.0;
+        return out;
+    }
+    if p >= 1.0 {
+        out[n] = 1.0;
+        return out;
+    }
+    let lp = p.ln();
+    let lq = (1.0 - p).ln();
+    let mut log_c = 0.0f64; // ln C(n, k)
+    for k in 0..=n {
+        if k > 0 {
+            log_c += ((n - k + 1) as f64).ln() - (k as f64).ln();
+        }
+        out[k] = (log_c + k as f64 * lp + (n - k) as f64 * lq).exp();
+    }
+    out
+}
+
+/// Deconvolve one `Bernoulli(q)` factor out of pmf `f` (in place result).
+/// Chooses the contractive recurrence direction by `q`.
+fn deconv_bernoulli(f: &[f64], q: f64, out: &mut [f64]) {
+    let n = f.len();
+    debug_assert_eq!(out.len(), n);
+    if q <= 0.0 {
+        out.copy_from_slice(f);
+        return;
+    }
+    if q >= 1.0 {
+        // f = g shifted by 1.
+        for j in 0..n - 1 {
+            out[j] = f[j + 1];
+        }
+        out[n - 1] = 0.0;
+        return;
+    }
+    if q <= 0.5 {
+        // f_j = (1−q) g_j + q g_{j−1}  =>  forward, divide by (1−q).
+        let inv = 1.0 / (1.0 - q);
+        let mut prev = 0.0;
+        for j in 0..n {
+            let g = (f[j] - q * prev) * inv;
+            let g = g.max(0.0); // clamp fp dust
+            out[j] = g;
+            prev = g;
+        }
+    } else {
+        // backward: g_{j-1} = (f_j − (1−q) g_j)/q.
+        let inv = 1.0 / q;
+        let mut next = 0.0;
+        for j in (0..n).rev() {
+            // g index j−1 written at position j−1; top coefficient g_{n−1}
+            // of the deconvolved (length n−1 support) pmf handled by the
+            // same recurrence with g_n = 0.
+            let g = (f[j] - (1.0 - q) * next) * inv;
+            let g = g.max(0.0);
+            if j > 0 {
+                out[j - 1] = g;
+            } else {
+                // Residual mass at g_{-1} is fp noise.
+            }
+            next = g;
+        }
+        out[n - 1] = 0.0;
+    }
+}
+
+/// Convolve pmf `g` with one `Bernoulli(p)` (in place result).
+fn conv_bernoulli(g: &[f64], p: f64, out: &mut [f64]) {
+    let n = g.len();
+    let mut prev = 0.0;
+    for j in 0..n {
+        out[j] = (1.0 - p) * g[j] + p * prev;
+        prev = g[j];
+    }
+}
+
+fn renormalize(row: &mut [f64]) {
+    let s: f64 = row.iter().sum();
+    if s > 0.0 {
+        for x in row.iter_mut() {
+            *x /= s;
+        }
+    }
+}
+
+/// Row `s1` of `expm(R·δ)` for the spare chain of size `s_max`.
+pub fn transition_row(s_max: usize, lambda: f64, theta: f64, delta: f64, s1: usize) -> Vec<f64> {
+    debug_assert!(s1 <= s_max);
+    let n = s_max + 1;
+    let (p_uu, p_du) = spare_probs(lambda, theta, delta);
+    // Direct convolution of the two binomials, O(n²) worst case but exact.
+    let a = binom_pmf(s1, p_uu, n);
+    let b = binom_pmf(s_max - s1, p_du, n);
+    let mut out = vec![0.0; n];
+    for (k, &av) in a.iter().enumerate().take(s1 + 1) {
+        if av == 0.0 {
+            continue;
+        }
+        for (m, &bv) in b.iter().enumerate().take(s_max - s1 + 1) {
+            out[k + m] += av * bv;
+        }
+    }
+    renormalize(&mut out);
+    out
+}
+
+/// Full `expm(R·δ)` for the spare chain, O(n²) via the Bernoulli-swap
+/// recurrence.
+pub fn transition_matrix(s_max: usize, lambda: f64, theta: f64, delta: f64) -> Matrix {
+    let n = s_max + 1;
+    let (p_uu, p_du) = spare_probs(lambda, theta, delta);
+    let mut e = Matrix::zeros(n, n);
+
+    // Row 0: all spares start down => Bin(S, p_du).
+    let row0 = binom_pmf(s_max, p_du, n);
+    e.row_mut(0).copy_from_slice(&row0);
+
+    let mut scratch = vec![0.0; n];
+    for i in 0..s_max {
+        // row_{i+1} = row_i with one Bern(p_du) swapped for Bern(p_uu).
+        let (head, tail) = e.split_rows(i + 1);
+        let prev = &head[i * n..(i + 1) * n];
+        let cur = &mut tail[..n];
+        deconv_bernoulli(prev, p_du, &mut scratch);
+        conv_bernoulli(&scratch, p_uu, cur);
+        renormalize(cur);
+    }
+    e
+}
+
+impl Matrix {
+    /// Split backing storage at a row boundary (for the swap recurrence).
+    fn split_rows(&mut self, at_row: usize) -> (&mut [f64], &mut [f64]) {
+        let cols = self.cols();
+        self.data_mut().split_at_mut(at_row * cols)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::expm;
+    use crate::markov::birth_death::{bd_generator, bd_stationary};
+
+    fn max_diff_vs_expm(s_max: usize, lambda: f64, theta: f64, delta: f64) -> f64 {
+        let generic = expm(&bd_generator(s_max, lambda, theta).scale(delta));
+        let fast = transition_matrix(s_max, lambda, theta, delta);
+        generic.max_abs_diff(&fast)
+    }
+
+    #[test]
+    fn matches_generic_expm_small() {
+        for &(s, lam, theta, delta) in &[
+            (1usize, 1e-5, 3e-4, 3_600.0),
+            (4, 2e-6, 4e-4, 10_000.0),
+            (9, 5e-6, 1e-3, 500.0),
+            (16, 1.8e-6, 3.5e-4, 68_000.0),
+            (33, 1e-6, 2e-4, 200_000.0),
+        ] {
+            let d = max_diff_vs_expm(s, lam, theta, delta);
+            assert!(d < 1e-11, "S={s} delta={delta}: diff {d}");
+        }
+    }
+
+    #[test]
+    fn matches_generic_expm_fast_repairs() {
+        // p_du > 0.5 exercises the backward deconvolution branch.
+        let d = max_diff_vs_expm(24, 1e-6, 1e-3, 20_000.0);
+        assert!(d < 1e-11, "diff {d}");
+    }
+
+    #[test]
+    fn rows_via_direct_convolution_match_matrix() {
+        let (s_max, lam, theta, delta) = (21usize, 3e-6, 4e-4, 30_000.0);
+        let full = transition_matrix(s_max, lam, theta, delta);
+        for s1 in [0usize, 1, 10, 21] {
+            let row = transition_row(s_max, lam, theta, delta, s1);
+            for j in 0..=s_max {
+                assert!(
+                    (row[j] - full[(s1, j)]).abs() < 1e-12,
+                    "s1={s1} j={j}: {} vs {}",
+                    row[j],
+                    full[(s1, j)]
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn delta_zero_is_identity() {
+        let e = transition_matrix(8, 2e-6, 4e-4, 0.0);
+        assert!(e.max_abs_diff(&Matrix::identity(9)) < 1e-14);
+    }
+
+    #[test]
+    fn long_horizon_rows_converge_to_stationary() {
+        let (s_max, lam, theta) = (40usize, 2e-6, 4e-4);
+        let e = transition_matrix(s_max, lam, theta, 1.0e9);
+        let pi = bd_stationary(s_max, lam, theta);
+        for i in [0usize, 20, 40] {
+            for j in 0..=s_max {
+                assert!((e[(i, j)] - pi[j]).abs() < 1e-10, "row {i} col {j}");
+            }
+        }
+    }
+
+    #[test]
+    fn large_chain_stochastic_and_stable() {
+        // The production scale: S = 511. Generic expm would take ~seconds;
+        // closed form must be instant and exactly stochastic.
+        let e = transition_matrix(511, 1.8e-6, 1.45e-4, 40_000.0);
+        for i in 0..512 {
+            let s: f64 = e.row(i).iter().sum();
+            assert!((s - 1.0).abs() < 1e-12, "row {i} sums {s}");
+            assert!(e.row(i).iter().all(|&x| x >= 0.0));
+        }
+        // Spot-check one row against the direct convolution.
+        let row = transition_row(511, 1.8e-6, 1.45e-4, 40_000.0, 300);
+        for j in 0..512 {
+            assert!((row[j] - e[(300, j)]).abs() < 5e-11);
+        }
+    }
+
+    #[test]
+    fn spare_probs_limits() {
+        let (p_uu, p_du) = spare_probs(1e-6, 1e-3, 0.0);
+        assert!((p_uu - 1.0).abs() < 1e-15);
+        assert!(p_du.abs() < 1e-15);
+        let rho_stat = 1e-3 / (1e-6 + 1e-3);
+        let (p_uu, p_du) = spare_probs(1e-6, 1e-3, 1e12);
+        assert!((p_uu - rho_stat).abs() < 1e-12);
+        assert!((p_du - rho_stat).abs() < 1e-12);
+    }
+}

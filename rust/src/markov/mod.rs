@@ -1,0 +1,34 @@
+//! The paper's core contribution: the Markov performance model `M^mall`
+//! for malleable parallel applications.
+//!
+//! Pipeline (one evaluation of `UWT_I` for a checkpointing interval `I`):
+//!
+//! 1. [`states`] enumerates up/recovery/down states from the rescheduling
+//!    policy vector `rp` (paper §III-A);
+//! 2. [`birth_death`] builds the spare-pool generator `R` per active
+//!    processor count (paper Eq. 1);
+//! 3. [`crate::runtime::ComputeEngine`] evaluates the transition-likelihood
+//!    matrices (AOT JAX/Pallas via PJRT, or native mirror);
+//! 4. [`transitions`] assembles the sparse transition matrix `P^mall`
+//!    with per-transition useful/down-time weights (paper §III-A/B);
+//! 5. [`reduction`] optionally eliminates low-probability up states
+//!    (paper §IV);
+//! 6. [`stationary`] solves `π = πP`;
+//! 7. [`uwt`] evaluates `UWT_I` (paper Eq. 7).
+//!
+//! [`model::MalleableModel`] ties the steps together; [`model::ModelInputs`]
+//! is the user-facing parameter bundle (paper §III-C).
+
+pub mod birth_death;
+pub mod ehrenfest;
+pub mod model;
+pub mod reduction;
+pub mod sparse;
+pub mod states;
+pub mod stationary;
+pub mod transitions;
+pub mod uwt;
+
+pub use model::{BuildOptions, MalleableModel, ModelInputs};
+pub use sparse::SparseMatrix;
+pub use states::{StateKind, StateSpace};

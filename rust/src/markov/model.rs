@@ -1,0 +1,371 @@
+//! The malleable-application performance model `M^mall` (paper §III) —
+//! the orchestrator tying state enumeration, chain evaluation, sparse
+//! assembly, reduction, the stationary solve and UWT together.
+
+use std::collections::HashMap;
+use std::time::Instant;
+
+use anyhow::{Context, Result};
+
+
+use super::states::StateSpace;
+use super::stationary::{stationary, StationaryOptions};
+use super::transitions::TransitionSystem;
+use super::uwt::{self, UwtBreakdown};
+use crate::apps::AppProfile;
+use crate::config::SystemParams;
+use crate::markov::birth_death::bd_generator;
+use crate::policies::ReschedulingPolicy;
+use crate::runtime::{native_chain_probs, ChainMatrices, ComputeEngine};
+use crate::util::pool;
+
+/// User-facing model parameters (paper §III-C): the system triple, the
+/// application's cost vectors and the rescheduling policy.
+#[derive(Debug, Clone)]
+pub struct ModelInputs {
+    pub system: SystemParams,
+    /// `C[a-1]`: checkpoint overhead on `a` processors (C = L assumed,
+    /// as in the paper).
+    ckpt: Vec<f64>,
+    /// `workinunittime[a-1]`.
+    work: Vec<f64>,
+    /// Mean recovery cost into `a` processors, `R̄[a-1]` (see below).
+    rec_into: Vec<f64>,
+    pub policy: ReschedulingPolicy,
+}
+
+impl ModelInputs {
+    /// Bundle system + application profile + policy.
+    ///
+    /// The paper's recovery cost `R_{k,l}` depends on the processor count
+    /// `k` before the failure, which a Markov state does not carry; the
+    /// model uses the predecessor-averaged `R̄_l = mean_k R_{k,l}`
+    /// (documented approximation; `benches/ablation.rs` quantifies the
+    /// alternatives min/max/pessimistic).
+    pub fn new(
+        system: SystemParams,
+        app: &AppProfile,
+        policy: &ReschedulingPolicy,
+    ) -> Result<ModelInputs> {
+        system.validate()?;
+        let n = system.n;
+        if app.n() < n {
+            anyhow::bail!("app profile covers {} processors, system has {n}", app.n());
+        }
+        if policy.len() != n {
+            anyhow::bail!("policy has {} entries, system has {n}", policy.len());
+        }
+        let rec_into = (1..=n)
+            .map(|l| (1..=n).map(|k| app.recovery_cost(k, l)).sum::<f64>() / n as f64)
+            .collect();
+        Ok(ModelInputs {
+            system,
+            ckpt: (1..=n).map(|a| app.checkpoint_cost(a)).collect(),
+            work: (1..=n).map(|a| app.work_per_sec(a)).collect(),
+            rec_into,
+            policy: policy.clone(),
+        })
+    }
+
+    /// Construct from raw vectors (tests, exotic applications).
+    pub fn from_raw(
+        system: SystemParams,
+        ckpt: Vec<f64>,
+        work: Vec<f64>,
+        rec_into: Vec<f64>,
+        policy: ReschedulingPolicy,
+    ) -> Result<ModelInputs> {
+        system.validate()?;
+        let n = system.n;
+        if ckpt.len() != n || work.len() != n || rec_into.len() != n || policy.len() != n {
+            anyhow::bail!("all vectors must have length N = {n}");
+        }
+        Ok(ModelInputs { system, ckpt, work, rec_into, policy })
+    }
+
+    pub fn checkpoint_cost(&self, a: usize) -> f64 {
+        self.ckpt[a - 1]
+    }
+
+    pub fn work_per_sec(&self, a: usize) -> f64 {
+        self.work[a - 1]
+    }
+
+    /// Mean recovery cost when recovering onto `a` processors.
+    pub fn mean_recovery_into(&self, a: usize) -> f64 {
+        self.rec_into[a - 1]
+    }
+
+    /// Recovery window `δ_a = R̄_a + I + C_a` for chain `a`.
+    pub fn delta(&self, a: usize, interval: f64) -> f64 {
+        self.mean_recovery_into(a) + interval + self.checkpoint_cost(a)
+    }
+}
+
+/// Model-construction options.
+#[derive(Debug, Clone, Copy)]
+pub struct BuildOptions {
+    /// Up-state elimination threshold (paper §IV; `None` disables).
+    pub thres: Option<f64>,
+    /// Worker threads for chain evaluation (native engine only).
+    pub workers: usize,
+    pub stationary: StationaryOptions,
+}
+
+impl Default for BuildOptions {
+    fn default() -> Self {
+        BuildOptions {
+            thres: Some(6e-4),
+            workers: pool::default_workers(),
+            stationary: StationaryOptions::default(),
+        }
+    }
+}
+
+/// A fully built and solved model for one checkpointing interval.
+#[derive(Debug, Clone)]
+pub struct MalleableModel {
+    interval: f64,
+    ts: TransitionSystem,
+    pi: Vec<f64>,
+    breakdown: UwtBreakdown,
+    /// Up states eliminated by the reduction pass.
+    pub eliminated: usize,
+    /// Stationary-solve iterations.
+    pub solve_iters: usize,
+    /// Wall-clock build time, seconds.
+    pub build_seconds: f64,
+    /// Up/recovery/down counts before reduction.
+    pub full_states: usize,
+}
+
+impl MalleableModel {
+    /// Build and solve `M^mall` for checkpointing interval `interval`.
+    pub fn build(
+        inputs: &ModelInputs,
+        engine: &ComputeEngine,
+        interval: f64,
+        opts: &BuildOptions,
+    ) -> Result<MalleableModel> {
+        anyhow::ensure!(interval > 0.0, "interval must be positive");
+        let start = Instant::now();
+        let n = inputs.system.n;
+        let space = StateSpace::build(n, &inputs.policy);
+
+        // One birth–death chain per distinct active count, streamed into
+        // the assembly so only one chain's matrices are resident at a time
+        // (the paper's §IV master–worker parallelization applies when the
+        // machine has spare cores: chains are precomputed in blocks).
+        let lam = inputs.system.lambda;
+        let theta = inputs.system.theta;
+        let workers = opts.workers.max(1);
+        let sizes = space.chain_sizes();
+        let mut pending = sizes.as_slice();
+        let mut cache: HashMap<usize, ChainMatrices> = HashMap::new();
+        let full_states = space.len();
+        let thres = opts.thres.unwrap_or(0.0).max(0.0);
+        let (ts, eliminated) = TransitionSystem::assemble(&space, inputs, interval, thres, |a| {
+            if let Some(cm) = cache.remove(&a) {
+                return Ok(cm);
+            }
+            if engine.is_native() && workers > 1 {
+                // Master–worker block (paper §IV): compute the next
+                // `workers` chains in parallel; memory stays bounded by
+                // the block size.
+                let take = pending.iter().position(|&x| x == a).map(|i| i + workers).unwrap_or(1);
+                let (block, rest) = pending.split_at(take.min(pending.len()));
+                pending = rest;
+                let generic = matches!(engine, ComputeEngine::NativeGeneric);
+                let deltas: Vec<f64> = block.iter().map(|&b| inputs.delta(b, interval)).collect();
+                let results = pool::run_indexed(block.len(), workers, |i| {
+                    let b = block[i];
+                    let cm = if generic {
+                        let gen = bd_generator(n - b, lam, theta);
+                        native_chain_probs(&gen, b as f64 * lam, deltas[i])
+                    } else {
+                        crate::runtime::native_chain_probs_fast(
+                            n - b,
+                            lam,
+                            theta,
+                            b as f64 * lam,
+                            deltas[i],
+                        )
+                    };
+                    (b, cm)
+                });
+                cache.extend(results);
+                if let Some(cm) = cache.remove(&a) {
+                    return Ok(cm);
+                }
+            }
+            engine
+                .chain_probs_spares(n - a, lam, theta, a as f64 * lam, inputs.delta(a, interval))
+                .with_context(|| format!("chain a={a}"))
+        })?;
+
+        let (pi, solve_iters) = stationary(&ts.p, &opts.stationary)?;
+        let breakdown = uwt::evaluate(&ts, &pi);
+
+        Ok(MalleableModel {
+            interval,
+            ts,
+            pi,
+            breakdown,
+            eliminated,
+            solve_iters,
+            build_seconds: start.elapsed().as_secs_f64(),
+            full_states,
+        })
+    }
+
+    pub fn interval(&self) -> f64 {
+        self.interval
+    }
+
+    /// `UWT_I` (paper Eq. 7) — the selection objective.
+    pub fn uwt(&self) -> f64 {
+        self.breakdown.uwt
+    }
+
+    pub fn uwt_breakdown(&self) -> UwtBreakdown {
+        self.breakdown
+    }
+
+    pub fn stationary_distribution(&self) -> &[f64] {
+        &self.pi
+    }
+
+    pub fn transitions(&self) -> &TransitionSystem {
+        &self.ts
+    }
+
+    pub fn n_states(&self) -> usize {
+        self.ts.n_states()
+    }
+
+    pub fn n_transitions(&self) -> usize {
+        self.ts.n_transitions()
+    }
+
+    /// Expected active processor count under the stationary distribution
+    /// (up states only, occupancy-weighted).
+    pub fn mean_active_procs(&self) -> f64 {
+        let mut num = 0.0;
+        let mut den = 0.0;
+        for (i, k) in self.ts.kinds.iter().enumerate() {
+            if k.is_up() {
+                num += self.pi[i] * k.active() as f64;
+                den += self.pi[i];
+            }
+        }
+        if den > 0.0 {
+            num / den
+        } else {
+            0.0
+        }
+    }
+}
+
+/// Shared fixtures for unit tests across the markov modules.
+#[cfg(test)]
+pub mod test_fixtures {
+    use super::*;
+
+    /// Small synthetic system: N processors, MTTF 2 days, MTTR 40 min,
+    /// mildly scalable app, greedy policy.
+    pub fn small_inputs(n: usize) -> ModelInputs {
+        let system = SystemParams::new(n, 1.0 / (2.0 * 86_400.0), 1.0 / 2_400.0);
+        let ckpt: Vec<f64> = (1..=n).map(|a| 30.0 + a as f64).collect();
+        let work: Vec<f64> = (1..=n).map(|a| (a as f64).powf(0.8)).collect();
+        let rec: Vec<f64> = (1..=n).map(|a| 20.0 + (a as f64).sqrt()).collect();
+        ModelInputs::from_raw(system, ckpt, work, rec, ReschedulingPolicy::greedy(n)).unwrap()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::test_fixtures::small_inputs;
+    use super::*;
+
+    #[test]
+    fn build_solves_and_reports() {
+        let inputs = small_inputs(8);
+        let engine = ComputeEngine::native();
+        let m = MalleableModel::build(&inputs, &engine, 3600.0, &BuildOptions::default()).unwrap();
+        assert!(m.uwt() > 0.0);
+        assert!(m.solve_iters > 0);
+        assert!(m.n_states() <= m.full_states);
+        let pi_sum: f64 = m.stationary_distribution().iter().sum();
+        assert!((pi_sum - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn elimination_reduces_states_and_preserves_uwt() {
+        let inputs = small_inputs(12);
+        let engine = ComputeEngine::native();
+        let full = MalleableModel::build(
+            &inputs,
+            &engine,
+            3600.0,
+            &BuildOptions { thres: None, ..Default::default() },
+        )
+        .unwrap();
+        let reduced =
+            MalleableModel::build(&inputs, &engine, 3600.0, &BuildOptions::default()).unwrap();
+        assert!(reduced.eliminated > 0, "expected eliminations at default thres");
+        let rel = ((full.uwt() - reduced.uwt()) / full.uwt()).abs();
+        assert!(rel < 0.02, "reduction changed UWT by {rel}");
+    }
+
+    #[test]
+    fn uwt_below_best_work_rate_and_above_worst() {
+        let inputs = small_inputs(6);
+        let engine = ComputeEngine::native();
+        let m = MalleableModel::build(&inputs, &engine, 7200.0, &BuildOptions::default()).unwrap();
+        // Mostly running on ~6 procs: UWT must be within the achievable band.
+        assert!(m.uwt() < inputs.work_per_sec(6));
+        assert!(m.uwt() > inputs.work_per_sec(1) * 0.5);
+    }
+
+    #[test]
+    fn mean_active_procs_near_n_for_reliable_system() {
+        let mut inputs = small_inputs(6);
+        // Make the system very reliable.
+        inputs.system.lambda = 1.0 / (500.0 * 86_400.0);
+        let engine = ComputeEngine::native();
+        let m = MalleableModel::build(&inputs, &engine, 36_000.0, &BuildOptions::default()).unwrap();
+        // Reconfiguration happens only at recovery points, so after the
+        // first failure the app settles around N-1 processors (repaired
+        // nodes rejoin as spares until the next recovery).
+        assert!(m.mean_active_procs() > 4.5, "mean active {}", m.mean_active_procs());
+    }
+
+    #[test]
+    fn rejects_bad_interval() {
+        let inputs = small_inputs(4);
+        let engine = ComputeEngine::native();
+        assert!(MalleableModel::build(&inputs, &engine, 0.0, &BuildOptions::default()).is_err());
+        assert!(MalleableModel::build(&inputs, &engine, -5.0, &BuildOptions::default()).is_err());
+    }
+
+    #[test]
+    fn inputs_validation() {
+        use crate::apps::AppProfile;
+        let sys = SystemParams::new(16, 1e-6, 1e-3);
+        let app = AppProfile::qr(8); // too small for the system
+        let pol = ReschedulingPolicy::greedy(16);
+        assert!(ModelInputs::new(sys, &app, &pol).is_err());
+        let app = AppProfile::qr(16);
+        assert!(ModelInputs::new(sys, &app, &pol).is_ok());
+        let pol_bad = ReschedulingPolicy::greedy(8);
+        assert!(ModelInputs::new(sys, &app, &pol_bad).is_err());
+    }
+
+    #[test]
+    fn delta_composition() {
+        let inputs = small_inputs(4);
+        let d = inputs.delta(3, 1800.0);
+        let want = inputs.mean_recovery_into(3) + 1800.0 + inputs.checkpoint_cost(3);
+        assert!((d - want).abs() < 1e-12);
+    }
+}

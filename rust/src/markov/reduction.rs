@@ -1,0 +1,125 @@
+//! State elimination (paper §IV).
+//!
+//! An up state is eliminated when every inbound transition probability into
+//! it is below `thres` (the paper's default 0.0006, tuned there by the
+//! Eq. 8 score over 750 experiments — reproduced in `benches/ablation.rs`).
+//! Eliminated states' inbound mass is renormalized away row by row.
+//! Recovery and down states are never eliminated: they anchor the chain's
+//! connectivity.
+
+use super::transitions::TransitionSystem;
+
+/// Result of a reduction pass.
+#[derive(Debug, Clone)]
+pub struct Reduction {
+    pub ts: TransitionSystem,
+    /// Number of eliminated up states.
+    pub eliminated: usize,
+    /// Old → new state id mapping (`None` = eliminated).
+    pub mapping: Vec<Option<usize>>,
+}
+
+/// Eliminate up states whose maximum inbound probability is `< thres`.
+pub fn eliminate_up_states(ts: &TransitionSystem, thres: f64) -> Reduction {
+    let n = ts.n_states();
+    let mut max_inbound = vec![0.0f64; n];
+    for i in 0..n {
+        let (cols, vals) = ts.p.row(i);
+        for (&c, &v) in cols.iter().zip(vals) {
+            let c = c as usize;
+            if v > max_inbound[c] {
+                max_inbound[c] = v;
+            }
+        }
+    }
+
+    let remove: Vec<bool> = (0..n)
+        .map(|i| ts.kinds[i].is_up() && max_inbound[i] < thres)
+        .collect();
+    let eliminated = remove.iter().filter(|&&r| r).count();
+
+    if eliminated == 0 {
+        return Reduction { ts: ts.clone(), eliminated: 0, mapping: (0..n).map(Some).collect() };
+    }
+
+    let (p, mapping) = ts.p.remove_states(&remove);
+    let mut kinds = Vec::with_capacity(p.n_rows());
+    let mut succ = Vec::with_capacity(p.n_rows());
+    let mut fail = Vec::with_capacity(p.n_rows());
+    for old in 0..n {
+        if mapping[old].is_some() {
+            kinds.push(ts.kinds[old]);
+            succ.push(ts.succ[old]);
+            fail.push(ts.fail[old]);
+        }
+    }
+    Reduction { ts: TransitionSystem { p, kinds, succ, fail }, eliminated, mapping }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::markov::model::test_fixtures::small_inputs;
+    use crate::markov::model::{BuildOptions, MalleableModel};
+    use crate::markov::stationary::{stationary, StationaryOptions};
+    use crate::markov::uwt;
+    use crate::runtime::ComputeEngine;
+
+    fn build_ts(n: usize, interval: f64) -> TransitionSystem {
+        let inputs = small_inputs(n);
+        let engine = ComputeEngine::native();
+        MalleableModel::build(&inputs, &engine, interval, &BuildOptions::default())
+            .unwrap()
+            .transitions()
+            .clone()
+    }
+
+    #[test]
+    fn zero_threshold_eliminates_nothing() {
+        let ts = build_ts(6, 3600.0);
+        let red = eliminate_up_states(&ts, 0.0);
+        assert_eq!(red.eliminated, 0);
+        assert_eq!(red.ts.n_states(), ts.n_states());
+    }
+
+    #[test]
+    fn large_threshold_eliminates_many_but_keeps_chain_valid() {
+        let ts = build_ts(8, 3600.0);
+        let red = eliminate_up_states(&ts, 0.05);
+        assert!(red.eliminated > 0, "expected eliminations at thres=0.05");
+        red.ts.check_stochastic(1e-9).unwrap();
+        // Non-up states survive.
+        let rec_down = ts.kinds.iter().filter(|k| !k.is_up()).count();
+        let rec_down2 = red.ts.kinds.iter().filter(|k| !k.is_up()).count();
+        assert_eq!(rec_down, rec_down2);
+    }
+
+    #[test]
+    fn paper_threshold_small_uwt_error() {
+        // thres = 0.0006 must keep UWT within a few percent (paper §IV
+        // reports small modeling errors at this threshold).
+        let ts = build_ts(10, 7200.0);
+        let (pi, _) = stationary(&ts.p, &StationaryOptions::default()).unwrap();
+        let full = uwt::evaluate(&ts, &pi).uwt;
+
+        let red = eliminate_up_states(&ts, 6e-4);
+        let (pi2, _) = stationary(&red.ts.p, &StationaryOptions::default()).unwrap();
+        let reduced = uwt::evaluate(&red.ts, &pi2).uwt;
+
+        let err = ((full - reduced) / full).abs();
+        assert!(err < 0.05, "UWT error {err} too large (full {full}, reduced {reduced})");
+    }
+
+    #[test]
+    fn mapping_consistent() {
+        let ts = build_ts(6, 3600.0);
+        let red = eliminate_up_states(&ts, 0.01);
+        let kept = red.mapping.iter().filter(|m| m.is_some()).count();
+        assert_eq!(kept, red.ts.n_states());
+        assert_eq!(red.mapping.len(), ts.n_states());
+        // New ids are dense 0..kept.
+        let mut ids: Vec<usize> = red.mapping.iter().filter_map(|&m| m).collect();
+        ids.sort_unstable();
+        assert_eq!(ids, (0..kept).collect::<Vec<_>>());
+    }
+}

@@ -1,0 +1,242 @@
+//! Compressed-sparse-row matrix used for `P^mall`.
+//!
+//! `M^mall` at N = 512 under Greedy has ~131k states and tens of millions
+//! of transitions; dense storage is infeasible and the stationary solve is
+//! the Layer-3 hot loop, so the representation is a flat CSR with `u32`
+//! column ids (4 B + 8 B per entry).
+
+/// Row-major CSR sparse matrix.
+#[derive(Debug, Clone)]
+pub struct SparseMatrix {
+    n_rows: usize,
+    n_cols: usize,
+    row_ptr: Vec<usize>,
+    col: Vec<u32>,
+    val: Vec<f64>,
+}
+
+/// Builder accumulating entries row by row.
+pub struct SparseBuilder {
+    n_cols: usize,
+    row_ptr: Vec<usize>,
+    col: Vec<u32>,
+    val: Vec<f64>,
+}
+
+impl SparseBuilder {
+    pub fn new(n_cols: usize) -> SparseBuilder {
+        SparseBuilder { n_cols, row_ptr: vec![0], col: Vec::new(), val: Vec::new() }
+    }
+
+    /// Append the next row from (col, val) pairs. Entries with value 0 are
+    /// dropped; duplicate columns within a row are summed by `push_entry`
+    /// order (callers do not produce duplicates in practice).
+    pub fn push_row(&mut self, entries: &[(usize, f64)]) {
+        for &(c, v) in entries {
+            debug_assert!(c < self.n_cols);
+            if v != 0.0 {
+                self.col.push(c as u32);
+                self.val.push(v);
+            }
+        }
+        self.row_ptr.push(self.col.len());
+    }
+
+    pub fn finish(self) -> SparseMatrix {
+        SparseMatrix {
+            n_rows: self.row_ptr.len() - 1,
+            n_cols: self.n_cols,
+            row_ptr: self.row_ptr,
+            col: self.col,
+            val: self.val,
+        }
+    }
+}
+
+impl SparseMatrix {
+    pub fn n_rows(&self) -> usize {
+        self.n_rows
+    }
+
+    pub fn n_cols(&self) -> usize {
+        self.n_cols
+    }
+
+    pub fn nnz(&self) -> usize {
+        self.val.len()
+    }
+
+    /// (columns, values) of row `i`.
+    pub fn row(&self, i: usize) -> (&[u32], &[f64]) {
+        let lo = self.row_ptr[i];
+        let hi = self.row_ptr[i + 1];
+        (&self.col[lo..hi], &self.val[lo..hi])
+    }
+
+    /// Sum of row `i`.
+    pub fn row_sum(&self, i: usize) -> f64 {
+        let (_, vals) = self.row(i);
+        vals.iter().sum()
+    }
+
+    /// Look up a single entry (linear scan of the row; test helper).
+    pub fn get(&self, i: usize, j: usize) -> f64 {
+        let (cols, vals) = self.row(i);
+        cols.iter()
+            .position(|&c| c as usize == j)
+            .map(|k| vals[k])
+            .unwrap_or(0.0)
+    }
+
+    /// `out = x · M` (row vector times matrix). The stationary-solve kernel.
+    pub fn vec_mul(&self, x: &[f64], out: &mut [f64]) {
+        debug_assert_eq!(x.len(), self.n_rows);
+        debug_assert_eq!(out.len(), self.n_cols);
+        out.fill(0.0);
+        for i in 0..self.n_rows {
+            let xi = x[i];
+            if xi == 0.0 {
+                continue;
+            }
+            let lo = self.row_ptr[i];
+            let hi = self.row_ptr[i + 1];
+            for k in lo..hi {
+                out[self.col[k] as usize] += xi * self.val[k];
+            }
+        }
+    }
+
+    /// Renormalize every row to sum 1 (rows with zero mass are left zero).
+    pub fn normalize_rows(&mut self) {
+        for i in 0..self.n_rows {
+            let lo = self.row_ptr[i];
+            let hi = self.row_ptr[i + 1];
+            let s: f64 = self.val[lo..hi].iter().sum();
+            if s > 0.0 {
+                for v in &mut self.val[lo..hi] {
+                    *v /= s;
+                }
+            }
+        }
+    }
+
+    /// Remove the given columns (and rows) from the matrix, compacting ids.
+    /// Returns the old→new id mapping (`None` for removed ids).
+    pub fn remove_states(&self, remove: &[bool]) -> (SparseMatrix, Vec<Option<usize>>) {
+        assert_eq!(remove.len(), self.n_rows);
+        assert_eq!(self.n_rows, self.n_cols, "state removal requires square");
+        let mut mapping = vec![None; self.n_rows];
+        let mut next = 0usize;
+        for (old, flag) in remove.iter().enumerate() {
+            if !flag {
+                mapping[old] = Some(next);
+                next += 1;
+            }
+        }
+        let mut b = SparseBuilder::new(next);
+        let mut scratch: Vec<(usize, f64)> = Vec::new();
+        for i in 0..self.n_rows {
+            if remove[i] {
+                continue;
+            }
+            scratch.clear();
+            let (cols, vals) = self.row(i);
+            for (&c, &v) in cols.iter().zip(vals) {
+                if let Some(nc) = mapping[c as usize] {
+                    scratch.push((nc, v));
+                }
+            }
+            b.push_row(&scratch);
+        }
+        let mut m = b.finish();
+        m.normalize_rows();
+        (m, mapping)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> SparseMatrix {
+        // [[0.5, 0.5, 0 ], [0, 0, 1], [0.25, 0.25, 0.5]]
+        let mut b = SparseBuilder::new(3);
+        b.push_row(&[(0, 0.5), (1, 0.5)]);
+        b.push_row(&[(2, 1.0)]);
+        b.push_row(&[(0, 0.25), (1, 0.25), (2, 0.5)]);
+        b.finish()
+    }
+
+    #[test]
+    fn construction_and_access() {
+        let m = sample();
+        assert_eq!(m.n_rows(), 3);
+        assert_eq!(m.nnz(), 6);
+        assert_eq!(m.get(0, 1), 0.5);
+        assert_eq!(m.get(1, 0), 0.0);
+        assert_eq!(m.row_sum(2), 1.0);
+    }
+
+    #[test]
+    fn zero_entries_dropped() {
+        let mut b = SparseBuilder::new(2);
+        b.push_row(&[(0, 0.0), (1, 1.0)]);
+        let m = b.finish();
+        assert_eq!(m.nnz(), 1);
+    }
+
+    #[test]
+    fn vec_mul_matches_dense() {
+        let m = sample();
+        let x = [0.2, 0.3, 0.5];
+        let mut out = [0.0; 3];
+        m.vec_mul(&x, &mut out);
+        // dense: x·M
+        let want = [
+            0.2 * 0.5 + 0.5 * 0.25,
+            0.2 * 0.5 + 0.5 * 0.25,
+            0.3 * 1.0 + 0.5 * 0.5,
+        ];
+        for (g, w) in out.iter().zip(&want) {
+            assert!((g - w).abs() < 1e-15);
+        }
+    }
+
+    #[test]
+    fn normalize_rows_makes_stochastic() {
+        let mut b = SparseBuilder::new(2);
+        b.push_row(&[(0, 2.0), (1, 6.0)]);
+        b.push_row(&[(1, 5.0)]);
+        let mut m = b.finish();
+        m.normalize_rows();
+        assert!((m.get(0, 0) - 0.25).abs() < 1e-15);
+        assert!((m.get(0, 1) - 0.75).abs() < 1e-15);
+        assert!((m.get(1, 1) - 1.0).abs() < 1e-15);
+    }
+
+    #[test]
+    fn remove_states_compacts_and_renormalizes() {
+        let m = sample();
+        let (m2, map) = m.remove_states(&[false, true, false]);
+        assert_eq!(m2.n_rows(), 2);
+        assert_eq!(map, vec![Some(0), None, Some(1)]);
+        // Row 0 kept both entries in cols 0,1 -> col 1 was removed? No:
+        // old col 1 survives? old id 1 removed, so entry (0,1)=0.5 dropped,
+        // row renormalized to [1.0].
+        assert!((m2.get(0, 0) - 1.0).abs() < 1e-15);
+        // old row 2: entries to 0 (0.25) and 2 (0.5) survive -> renorm to
+        // 1/3, 2/3 over new ids 0,1.
+        assert!((m2.get(1, 0) - 1.0 / 3.0).abs() < 1e-15);
+        assert!((m2.get(1, 1) - 2.0 / 3.0).abs() < 1e-15);
+    }
+
+    #[test]
+    fn empty_rows_allowed() {
+        let mut b = SparseBuilder::new(2);
+        b.push_row(&[]);
+        b.push_row(&[(0, 1.0)]);
+        let m = b.finish();
+        assert_eq!(m.row(0).0.len(), 0);
+        assert_eq!(m.row_sum(0), 0.0);
+    }
+}

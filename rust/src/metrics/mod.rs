@@ -1,0 +1,241 @@
+//! Model-efficiency evaluation (paper §VI-C).
+//!
+//! For an execution segment: run the model search to get `I_model`, run the
+//! simulator at `I_model` to get `UW_{I_model}`, sweep the simulator over an
+//! interval grid to find `UW_highest` (at `I_sim`), and report
+//! `pd = 100·(UW_highest − UW_{I_model})/UW_highest` (model inefficiency);
+//! `100 − pd` is the model efficiency the paper's tables quote.
+
+use anyhow::Result;
+
+use crate::apps::AppProfile;
+use crate::markov::ModelInputs;
+use crate::policies::ReschedulingPolicy;
+use crate::runtime::ComputeEngine;
+use crate::search::{select_interval, SearchConfig, SearchResult};
+use crate::simulator::{SimConfig, Simulator};
+use crate::traces::{stats::estimate_rates, FailureTrace};
+use crate::config::SystemParams;
+
+/// One segment evaluation.
+#[derive(Debug, Clone)]
+pub struct SegmentEvaluation {
+    pub start: f64,
+    pub duration: f64,
+    /// λ estimated from trace history before `start`.
+    pub lambda: f64,
+    pub theta: f64,
+    /// Interval chosen by the model.
+    pub i_model: f64,
+    /// Best interval found by the simulator sweep.
+    pub i_sim: f64,
+    /// Simulated useful work at `I_model`.
+    pub uw_model: f64,
+    /// Highest simulated useful work over the sweep.
+    pub uw_highest: f64,
+    /// Simulated UWT at I_model / at I_sim.
+    pub uwt_model: f64,
+    pub uwt_sim: f64,
+    /// Model inefficiency `pd`, percent.
+    pub pd: f64,
+    /// Model efficiency `100 − pd`, percent.
+    pub efficiency: f64,
+    pub search: SearchResult,
+}
+
+/// The sweep grid used to find `UW_highest`: log-spaced between
+/// `i_min` and `i_max` with `points` samples, plus `I_model` itself.
+pub fn sweep_grid(i_min: f64, i_max: f64, points: usize) -> Vec<f64> {
+    let mut v = Vec::with_capacity(points);
+    let l0 = i_min.ln();
+    let l1 = i_max.ln();
+    for k in 0..points {
+        let f = k as f64 / (points - 1) as f64;
+        v.push((l0 + f * (l1 - l0)).exp());
+    }
+    v
+}
+
+/// Evaluate model efficiency on one execution segment of a trace.
+///
+/// `(λ, θ)` are estimated from the failure history before `start` (the
+/// paper's protocol); if there is no usable history, falls back to
+/// `fallback` rates.
+#[allow(clippy::too_many_arguments)]
+pub fn evaluate_segment(
+    trace: &FailureTrace,
+    app: &AppProfile,
+    policy: &ReschedulingPolicy,
+    engine: &ComputeEngine,
+    start: f64,
+    duration: f64,
+    search_cfg: &SearchConfig,
+    fallback: Option<(f64, f64)>,
+) -> Result<SegmentEvaluation> {
+    let (lambda, theta) = match estimate_rates(trace, start) {
+        Ok(r) => r,
+        Err(e) => fallback.ok_or(e)?,
+    };
+
+    let system = SystemParams::new(trace.n_procs(), lambda, theta);
+    let inputs = ModelInputs::new(system, app, policy)?;
+    let search = select_interval(&inputs, engine, search_cfg)?;
+    let i_model = search.interval;
+
+    let sim = Simulator::new(trace, app, policy);
+    let base = SimConfig::new(start, duration, i_model);
+    let at_model = sim.run(&base)?;
+
+    // Simulator oracle sweep for UW_highest / I_sim.
+    let mut grid = sweep_grid(search_cfg.i_min, search_cfg.i_max.min(duration / 2.0), 24);
+    grid.push(i_model);
+    let mut uw_highest = f64::NEG_INFINITY;
+    let mut i_sim = i_model;
+    let mut uwt_sim = 0.0;
+    for (iv, res) in sim.sweep(&base, &grid)? {
+        if res.useful_work > uw_highest {
+            uw_highest = res.useful_work;
+            i_sim = iv;
+            uwt_sim = res.uwt;
+        }
+    }
+
+    let pd = if uw_highest > 0.0 {
+        (100.0 * (uw_highest - at_model.useful_work) / uw_highest).max(0.0)
+    } else {
+        0.0
+    };
+
+    Ok(SegmentEvaluation {
+        start,
+        duration,
+        lambda,
+        theta,
+        i_model,
+        i_sim,
+        uw_model: at_model.useful_work,
+        uw_highest,
+        uwt_model: at_model.uwt,
+        uwt_sim,
+        pd,
+        efficiency: 100.0 - pd,
+        search,
+    })
+}
+
+/// Aggregate over several random segments (the paper averages segments per
+/// table row).
+#[derive(Debug, Clone, Default)]
+pub struct AggregateEvaluation {
+    pub segments: Vec<SegmentEvaluation>,
+}
+
+impl AggregateEvaluation {
+    pub fn mean_efficiency(&self) -> f64 {
+        mean(self.segments.iter().map(|s| s.efficiency))
+    }
+
+    pub fn mean_i_model_hours(&self) -> f64 {
+        mean(self.segments.iter().map(|s| s.i_model / 3_600.0))
+    }
+
+    pub fn mean_uwt_model(&self) -> f64 {
+        mean(self.segments.iter().map(|s| s.uwt_model))
+    }
+
+    pub fn mean_uwt_sim(&self) -> f64 {
+        mean(self.segments.iter().map(|s| s.uwt_sim))
+    }
+
+    pub fn mean_lambda(&self) -> f64 {
+        mean(self.segments.iter().map(|s| s.lambda))
+    }
+
+    pub fn mean_theta(&self) -> f64 {
+        mean(self.segments.iter().map(|s| s.theta))
+    }
+
+    pub fn mean_uw_model(&self) -> f64 {
+        mean(self.segments.iter().map(|s| s.uw_model))
+    }
+}
+
+fn mean(it: impl Iterator<Item = f64>) -> f64 {
+    let v: Vec<f64> = it.collect();
+    if v.is_empty() {
+        0.0
+    } else {
+        v.iter().sum::<f64>() / v.len() as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::traces::synth::{generate, SynthSpec};
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn sweep_grid_log_spaced() {
+        let g = sweep_grid(100.0, 10_000.0, 5);
+        assert_eq!(g.len(), 5);
+        assert!((g[0] - 100.0).abs() < 1e-9);
+        assert!((g[4] - 10_000.0).abs() < 1e-6);
+        // Log spacing: constant ratio.
+        let r0 = g[1] / g[0];
+        let r1 = g[3] / g[2];
+        assert!((r0 - r1).abs() < 1e-9);
+    }
+
+    #[test]
+    fn segment_evaluation_end_to_end() {
+        let mut rng = Rng::new(50);
+        let (lam, theta) = (1.0 / (3.0 * 86_400.0), 1.0 / 3_600.0);
+        let trace = generate(&SynthSpec::exponential(8, lam, theta, 60.0 * 86_400.0), &mut rng);
+        let app = AppProfile::md(8);
+        let policy = ReschedulingPolicy::greedy(8);
+        let engine = ComputeEngine::native();
+        let cfg = SearchConfig { refine_steps: 2, ..Default::default() };
+        let eval = evaluate_segment(
+            &trace,
+            &app,
+            &policy,
+            &engine,
+            20.0 * 86_400.0,
+            20.0 * 86_400.0,
+            &cfg,
+            Some((lam, theta)),
+        )
+        .unwrap();
+        assert!(eval.efficiency > 50.0, "efficiency {}", eval.efficiency);
+        assert!(eval.efficiency <= 100.0);
+        assert!(eval.i_model > 0.0);
+        assert!(eval.uw_highest >= eval.uw_model);
+        // Estimated rates should be in the right ballpark.
+        assert!((eval.lambda - lam).abs() / lam < 0.6, "lambda {}", eval.lambda);
+    }
+
+    #[test]
+    fn fallback_rates_used_without_history() {
+        // Trace with no failures before start: estimation fails, fallback
+        // must kick in.
+        let trace = FailureTrace::new(vec![vec![], vec![]], 10.0 * 86_400.0).unwrap();
+        let app = AppProfile::cg(2);
+        let policy = ReschedulingPolicy::greedy(2);
+        let engine = ComputeEngine::native();
+        let cfg = SearchConfig { refine_steps: 1, ..Default::default() };
+        let eval = evaluate_segment(
+            &trace,
+            &app,
+            &policy,
+            &engine,
+            0.0,
+            5.0 * 86_400.0,
+            &cfg,
+            Some((1.0 / (5.0 * 86_400.0), 1.0 / 3_600.0)),
+        )
+        .unwrap();
+        // Failure-free segment: model interval achieves ~the best work.
+        assert!(eval.efficiency > 80.0, "efficiency {}", eval.efficiency);
+    }
+}

@@ -1,0 +1,218 @@
+//! Rescheduling policies (paper §V): given `t` functional processors at a
+//! recovery point, how many should the application execute on?
+//!
+//! The policy is the paper's `rp` vector: `rp[t]` (1-indexed) is the
+//! processor count chosen when `t` processors are functional, with
+//! `1 ≤ rp[t] ≤ t`.
+//!
+//! * **Greedy** — use everything: `rp[t] = t`.
+//! * **Performance-Based (PB)** — use the `n ≤ t` minimizing the
+//!   application's failure-free execution time (equivalently maximizing
+//!   `workinunittime_n`).
+//! * **Availability-Based (AB)** — use the `n ≤ t` minimizing the average
+//!   per-processor failure count `avgFailure_n`, estimated from a failure
+//!   trace by sampling 50 random n-subsets (paper §V.3).
+
+use anyhow::{bail, Result};
+
+use crate::traces::FailureTrace;
+use crate::util::rng::Rng;
+
+/// A rescheduling policy vector (paper's `rp`).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ReschedulingPolicy {
+    /// `rp[t-1]` = processors to use with `t` functional. len = N.
+    rp: Vec<usize>,
+    /// Human-readable policy name for reports.
+    pub name: String,
+}
+
+impl ReschedulingPolicy {
+    /// Greedy: always use every functional processor.
+    pub fn greedy(n: usize) -> ReschedulingPolicy {
+        ReschedulingPolicy { rp: (1..=n).collect(), name: "greedy".into() }
+    }
+
+    /// Build from an explicit vector (validates `1 ≤ rp[t] ≤ t`).
+    pub fn from_vector(rp: Vec<usize>) -> Result<ReschedulingPolicy> {
+        if rp.is_empty() {
+            bail!("policy vector must be non-empty");
+        }
+        for (idx, &v) in rp.iter().enumerate() {
+            let t = idx + 1;
+            if v < 1 || v > t {
+                bail!("rp[{t}] = {v} out of range 1..={t}");
+            }
+        }
+        Ok(ReschedulingPolicy { rp, name: "custom".into() })
+    }
+
+    /// Performance-Based: choose the count with the highest work rate
+    /// among `1..=t`. `work_per_sec[a-1]` = application work rate on `a`
+    /// processors (the `workinunittime` vector).
+    pub fn performance_based(work_per_sec: &[f64]) -> Result<ReschedulingPolicy> {
+        if work_per_sec.is_empty() {
+            bail!("work_per_sec must be non-empty");
+        }
+        let n = work_per_sec.len();
+        let mut rp = Vec::with_capacity(n);
+        let mut best_a = 1usize;
+        for t in 1..=n {
+            if work_per_sec[t - 1] > work_per_sec[best_a - 1] {
+                best_a = t;
+            }
+            rp.push(best_a);
+        }
+        Ok(ReschedulingPolicy { rp, name: "pb".into() })
+    }
+
+    /// Availability-Based: choose the count minimizing the expected
+    /// per-processor failure rate, estimated from `trace` by averaging
+    /// `samples` random subsets of each size (paper uses 50).
+    ///
+    /// `avgFailure_n` is monotone-ish but noisy; the paper's procedure is
+    /// replicated literally: count trace failure events hitting the subset,
+    /// divide by `n`, average over subsets, take the argmin over `n ≤ t`.
+    pub fn availability_based(
+        trace: &FailureTrace,
+        samples: usize,
+        rng: &mut Rng,
+    ) -> Result<ReschedulingPolicy> {
+        let n = trace.n_procs();
+        if n == 0 {
+            bail!("trace has no processors");
+        }
+        let avg = avg_failures(trace, samples, rng);
+        let mut rp = Vec::with_capacity(n);
+        let mut best_a = 1usize;
+        for t in 1..=n {
+            if avg[t - 1] < avg[best_a - 1] {
+                best_a = t;
+            }
+            rp.push(best_a);
+        }
+        Ok(ReschedulingPolicy { rp, name: "ab".into() })
+    }
+
+    pub fn len(&self) -> usize {
+        self.rp.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.rp.is_empty()
+    }
+
+    /// Processors to use when `total` are functional.
+    pub fn procs_for(&self, total: usize) -> usize {
+        assert!(total >= 1 && total <= self.rp.len(), "total {total} out of range");
+        self.rp[total - 1]
+    }
+
+    /// Distinct processor counts the policy can select.
+    pub fn image(&self) -> Vec<usize> {
+        let mut v = self.rp.clone();
+        v.sort_unstable();
+        v.dedup();
+        v
+    }
+
+    pub fn vector(&self) -> &[usize] {
+        &self.rp
+    }
+
+    pub fn named(mut self, name: &str) -> ReschedulingPolicy {
+        self.name = name.to_string();
+        self
+    }
+}
+
+/// `avgFailure_n` for every subset size `n` (paper §V.3): for `samples`
+/// random n-subsets, count failure events touching the subset, divide by
+/// `n`, and average across subsets.
+pub fn avg_failures(trace: &FailureTrace, samples: usize, rng: &mut Rng) -> Vec<f64> {
+    let n = trace.n_procs();
+    let per_proc_failures: Vec<usize> = (0..n).map(|p| trace.failure_count(p)).collect();
+    let mut avg = vec![0.0f64; n];
+    for size in 1..=n {
+        let mut total = 0.0f64;
+        for _ in 0..samples {
+            let subset = rng.sample_indices(n, size);
+            let fails: usize = subset.iter().map(|&p| per_proc_failures[p]).sum();
+            total += fails as f64 / size as f64;
+        }
+        avg[size - 1] = total / samples as f64;
+    }
+    avg
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::traces::synth::{generate, SynthSpec};
+
+    #[test]
+    fn greedy_uses_everything() {
+        let p = ReschedulingPolicy::greedy(8);
+        for t in 1..=8 {
+            assert_eq!(p.procs_for(t), t);
+        }
+        assert_eq!(p.image(), (1..=8).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn from_vector_validates() {
+        assert!(ReschedulingPolicy::from_vector(vec![]).is_err());
+        assert!(ReschedulingPolicy::from_vector(vec![1, 3]).is_err()); // rp[2]=3 > 2
+        assert!(ReschedulingPolicy::from_vector(vec![1, 0]).is_err());
+        let p = ReschedulingPolicy::from_vector(vec![1, 1, 2, 3]).unwrap();
+        assert_eq!(p.procs_for(4), 3);
+    }
+
+    #[test]
+    fn pb_peaks_at_scalability_limit() {
+        // Work rate peaks at 4 processors then decays.
+        let w = vec![1.0, 1.8, 2.4, 2.6, 2.5, 2.3];
+        let p = ReschedulingPolicy::performance_based(&w).unwrap();
+        assert_eq!(p.procs_for(3), 3);
+        assert_eq!(p.procs_for(4), 4);
+        assert_eq!(p.procs_for(6), 4); // never more than the peak
+        assert_eq!(p.image(), vec![1, 2, 3, 4]);
+    }
+
+    #[test]
+    fn pb_monotone_work_is_greedy() {
+        let w: Vec<f64> = (1..=6).map(|a| a as f64).collect();
+        let p = ReschedulingPolicy::performance_based(&w).unwrap();
+        assert_eq!(p.vector(), ReschedulingPolicy::greedy(6).vector());
+    }
+
+    #[test]
+    fn ab_prefers_fewer_processors() {
+        // Homogeneous failure rates: avgFailure_n is flat in expectation,
+        // so AB should pick small counts (ties broken toward the first
+        // minimum); with per-processor failures the argmin stays low.
+        let mut rng = Rng::new(33);
+        let trace = generate(
+            &SynthSpec::exponential(16, 1.0 / (2.0 * 86_400.0), 1.0 / 3_600.0, 30.0 * 86_400.0),
+            &mut rng,
+        );
+        let p = ReschedulingPolicy::availability_based(&trace, 20, &mut rng).unwrap();
+        // rp must be valid and generally much smaller than greedy.
+        for t in 1..=16 {
+            assert!(p.procs_for(t) >= 1 && p.procs_for(t) <= t);
+        }
+        assert!(p.procs_for(16) <= 8, "AB picked {} of 16", p.procs_for(16));
+    }
+
+    #[test]
+    fn avg_failures_shape() {
+        let mut rng = Rng::new(7);
+        let trace = generate(
+            &SynthSpec::exponential(8, 1.0 / 86_400.0, 1.0 / 1_800.0, 10.0 * 86_400.0),
+            &mut rng,
+        );
+        let avg = avg_failures(&trace, 10, &mut rng);
+        assert_eq!(avg.len(), 8);
+        assert!(avg.iter().all(|&x| x >= 0.0));
+    }
+}

@@ -1,0 +1,440 @@
+//! PJRT execution of the AOT-compiled JAX/Pallas artifacts, plus the
+//! native fallback — the only place where Layers 1/2 meet Layer 3.
+//!
+//! The AOT path: `python/compile/aot.py` lowers `chain_probs` (and a
+//! standalone `expm`) to HLO **text** once per size bucket; here we load
+//! the text with `HloModuleProto::from_text_file`, compile on the
+//! `PjRtClient::cpu()` client, and memoize the compiled executable per
+//! bucket. A birth–death chain of size `m = S+1` is zero-padded into the
+//! smallest bucket `n >= m`; padding is inert (identity blocks — see
+//! `python/compile/model.py` docstring) and is stripped before returning.
+//!
+//! The native path implements the identical algorithms in pure Rust
+//! ([`crate::linalg`]) and serves as the test oracle, the
+//! no-artifacts-present fallback, and the perf baseline.
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::linalg::{expm, tridiag_solve, Matrix, Tridiag};
+use crate::util::json::Json;
+
+/// The three transition-likelihood matrices of one birth–death chain
+/// (see `python/compile/model.py` for the math).
+#[derive(Debug, Clone)]
+pub struct ChainMatrices {
+    /// `expm(R δ)` — spare evolution over a successful recovery window.
+    pub q_delta: Matrix,
+    /// `aλ (aλI − R)^{-1}` — spare evolution at an up-state exit.
+    pub q_up: Matrix,
+    /// conditional spare evolution at a failure within the window.
+    pub q_rec: Matrix,
+}
+
+/// Compute backend for chain matrices: AOT artifacts through PJRT, or the
+/// native Rust mirrors.
+pub enum ComputeEngine {
+    /// Native fast path: closed-form Ehrenfest transition probabilities
+    /// (O(n²) per chain; see `markov::ehrenfest`).
+    Native,
+    /// Native paper-faithful path: scaling-and-squaring `expm` + tridiagonal
+    /// resolvents (O(n³·log‖Rδ‖) per chain). Oracle & perf baseline.
+    NativeGeneric,
+    Pjrt(PjrtEngine),
+}
+
+impl ComputeEngine {
+    /// Pure-Rust engine (no artifacts needed).
+    pub fn native() -> ComputeEngine {
+        ComputeEngine::Native
+    }
+
+    /// Paper-faithful generic-kernel engine (slow; oracle/baseline).
+    pub fn native_generic() -> ComputeEngine {
+        ComputeEngine::NativeGeneric
+    }
+
+    /// PJRT engine over an artifacts directory produced by `make artifacts`.
+    pub fn pjrt(dir: &Path) -> Result<ComputeEngine> {
+        Ok(ComputeEngine::Pjrt(PjrtEngine::new(dir)?))
+    }
+
+    /// PJRT if `artifacts/manifest.json` exists (walking up from the cwd),
+    /// native otherwise. Used by examples and the CLI default.
+    pub fn auto() -> ComputeEngine {
+        for base in ["artifacts", "../artifacts", "../../artifacts"] {
+            let dir = Path::new(base);
+            if dir.join("manifest.json").exists() {
+                match PjrtEngine::new(dir) {
+                    Ok(e) => return ComputeEngine::Pjrt(e),
+                    Err(err) => {
+                        eprintln!("warning: PJRT engine unavailable ({err}); using native");
+                        return ComputeEngine::Native;
+                    }
+                }
+            }
+        }
+        ComputeEngine::Native
+    }
+
+    pub fn is_native(&self) -> bool {
+        matches!(self, ComputeEngine::Native | ComputeEngine::NativeGeneric)
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            ComputeEngine::Native => "native",
+            ComputeEngine::NativeGeneric => "native-generic",
+            ComputeEngine::Pjrt(_) => "pjrt",
+        }
+    }
+
+    /// Transition-likelihood matrices for a chain with generator `r`
+    /// (size m×m, unpadded), active-failure rate `a_lambda` and recovery
+    /// window `delta`. Returns m×m matrices.
+    pub fn chain_probs(&self, r: &Matrix, a_lambda: f64, delta: f64) -> Result<ChainMatrices> {
+        match self {
+            ComputeEngine::Native | ComputeEngine::NativeGeneric => {
+                Ok(native_chain_probs(r, a_lambda, delta))
+            }
+            ComputeEngine::Pjrt(e) => e.chain_probs(r, a_lambda, delta),
+        }
+    }
+
+    /// Chain matrices from the spare-pool parameterization — the model
+    /// builder's entry point. The fast engines exploit the Ehrenfest
+    /// closed form; `NativeGeneric` goes through the dense generator and
+    /// generic `expm` (the paper's method); PJRT prefers the `chain_fast`
+    /// artifact and falls back to the generic `chain_probs` artifact.
+    pub fn chain_probs_spares(
+        &self,
+        s_max: usize,
+        lambda: f64,
+        theta: f64,
+        a_lambda: f64,
+        delta: f64,
+    ) -> Result<ChainMatrices> {
+        match self {
+            ComputeEngine::Native => {
+                Ok(native_chain_probs_fast(s_max, lambda, theta, a_lambda, delta))
+            }
+            ComputeEngine::NativeGeneric => {
+                let r = crate::markov::birth_death::bd_generator(s_max, lambda, theta);
+                Ok(native_chain_probs(&r, a_lambda, delta))
+            }
+            ComputeEngine::Pjrt(e) => e.chain_probs_spares(s_max, lambda, theta, a_lambda, delta),
+        }
+    }
+
+    /// `expm(r * delta)` (perf-bench / diagnostics entry point).
+    pub fn expm_scaled(&self, r: &Matrix, delta: f64) -> Result<Matrix> {
+        match self {
+            ComputeEngine::Native | ComputeEngine::NativeGeneric => Ok(expm(&r.scale(delta))),
+            ComputeEngine::Pjrt(e) => e.expm_scaled(r, delta),
+        }
+    }
+}
+
+/// Native fast path: Ehrenfest closed-form `expm` + tridiagonal resolvents,
+/// O(n²) per chain. Numerically cross-checked against
+/// [`native_chain_probs`] in tests.
+pub fn native_chain_probs_fast(
+    s_max: usize,
+    lambda: f64,
+    theta: f64,
+    a_lambda: f64,
+    delta: f64,
+) -> ChainMatrices {
+    let n = s_max + 1;
+    let q_delta = crate::markov::ehrenfest::transition_matrix(s_max, lambda, theta, delta);
+
+    // Bands of M = aλI − R built directly from the rates.
+    let mut dl = vec![0.0; n];
+    let mut dd = vec![0.0; n];
+    let mut du = vec![0.0; n];
+    for s in 0..n {
+        let fail = s as f64 * lambda;
+        let repair = (s_max - s) as f64 * theta;
+        if s > 0 {
+            dl[s] = -fail;
+        }
+        if s < n - 1 {
+            du[s] = -repair;
+        }
+        dd[s] = a_lambda + fail + repair;
+    }
+    let bands = Tridiag { dl, dd, du };
+
+    let eye = Matrix::identity(n);
+    let q_up = tridiag_solve(&bands, &eye).scale(a_lambda);
+
+    let decay = (-a_lambda * delta).exp();
+    let denom = -(-a_lambda * delta).exp_m1();
+    let rhs = eye.sub(&q_delta.scale(decay));
+    let q_rec = tridiag_solve(&bands, &rhs).scale(a_lambda / denom);
+
+    ChainMatrices { q_delta, q_up, q_rec }
+}
+
+/// Native mirror of `python/compile/model.py::chain_probs`.
+pub fn native_chain_probs(r: &Matrix, a_lambda: f64, delta: f64) -> ChainMatrices {
+    let n = r.rows();
+    let eye = Matrix::identity(n);
+    let q_delta = expm(&r.scale(delta));
+
+    // M = aλI − R, tridiagonal, strictly diagonally dominant.
+    let mut m = r.scale(-1.0);
+    for i in 0..n {
+        m[(i, i)] += a_lambda;
+    }
+    let bands = Tridiag::from_dense(&m);
+
+    let q_up = tridiag_solve(&bands, &eye).scale(a_lambda);
+
+    let decay = (-a_lambda * delta).exp();
+    let denom = -(-a_lambda * delta).exp_m1(); // 1 - e^{-aλδ}, stable for small δ
+    let rhs = eye.sub(&q_delta.scale(decay));
+    let q_rec = tridiag_solve(&bands, &rhs).scale(a_lambda / denom);
+
+    ChainMatrices { q_delta, q_up, q_rec }
+}
+
+#[derive(Clone, Copy, PartialEq, Eq, Hash, Debug)]
+enum Kind {
+    ChainProbs,
+    ChainFast,
+    Expm,
+}
+
+impl Kind {
+    fn key(self) -> &'static str {
+        match self {
+            Kind::ChainProbs => "chain_probs",
+            Kind::ChainFast => "chain_fast",
+            Kind::Expm => "expm",
+        }
+    }
+}
+
+/// PJRT CPU client + per-bucket compiled-executable cache.
+///
+/// Not `Sync`: PJRT handles are thread-affine in the `xla` crate, so the
+/// model builder serializes artifact executions (the Pallas/XLA runtime
+/// parallelizes internally; on this 1-core testbed that is moot anyway).
+pub struct PjrtEngine {
+    client: xla::PjRtClient,
+    dir: PathBuf,
+    buckets: Vec<usize>,
+    /// Whether the manifest provides the fast closed-form chain artifact
+    /// (`chain_fast_{n}.hlo.txt`); older artifact sets fall back to the
+    /// generic `chain_probs` program.
+    has_fast: bool,
+    cache: RefCell<HashMap<(Kind, usize), xla::PjRtLoadedExecutable>>,
+}
+
+impl PjrtEngine {
+    pub fn new(dir: &Path) -> Result<PjrtEngine> {
+        let manifest_path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&manifest_path)
+            .with_context(|| format!("reading {}", manifest_path.display()))?;
+        let manifest = Json::parse(&text).context("parsing artifact manifest")?;
+        if manifest.get("dtype").and_then(Json::as_str) != Some("f64") {
+            bail!("artifact manifest dtype must be f64");
+        }
+        let mut buckets: Vec<usize> = manifest
+            .get("chain_probs")
+            .and_then(Json::as_obj)
+            .context("manifest missing chain_probs table")?
+            .keys()
+            .map(|k| k.parse::<usize>().context("non-numeric bucket"))
+            .collect::<Result<_>>()?;
+        buckets.sort_unstable();
+        if buckets.is_empty() {
+            bail!("artifact manifest has no chain_probs buckets");
+        }
+        // Silence TF/XLA client lifecycle chatter on stderr.
+        if std::env::var_os("TF_CPP_MIN_LOG_LEVEL").is_none() {
+            std::env::set_var("TF_CPP_MIN_LOG_LEVEL", "1");
+        }
+        let has_fast = manifest.get("chain_fast").and_then(Json::as_obj).is_some();
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT CPU client: {e:?}"))?;
+        Ok(PjrtEngine {
+            client,
+            dir: dir.to_path_buf(),
+            buckets,
+            has_fast,
+            cache: RefCell::new(HashMap::new()),
+        })
+    }
+
+    /// Smallest bucket that fits a chain of size `m`.
+    pub fn bucket_for(&self, m: usize) -> Result<usize> {
+        self.buckets
+            .iter()
+            .copied()
+            .find(|&b| b >= m)
+            .ok_or_else(|| {
+                anyhow!(
+                    "chain size {m} exceeds largest artifact bucket {}; re-run `make artifacts` with larger --buckets",
+                    self.buckets.last().unwrap()
+                )
+            })
+    }
+
+    pub fn buckets(&self) -> &[usize] {
+        &self.buckets
+    }
+
+    fn executable(&self, kind: Kind, bucket: usize) -> Result<()> {
+        if self.cache.borrow().contains_key(&(kind, bucket)) {
+            return Ok(());
+        }
+        let path = self.dir.join(format!("{}_{bucket}.hlo.txt", kind.key()));
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("artifact path not utf-8")?,
+        )
+        .map_err(|e| anyhow!("loading {}: {e:?}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compiling {}: {e:?}", path.display()))?;
+        self.cache.borrow_mut().insert((kind, bucket), exe);
+        Ok(())
+    }
+
+    fn run(&self, kind: Kind, bucket: usize, inputs: &[xla::Literal]) -> Result<Vec<Matrix>> {
+        self.executable(kind, bucket)?;
+        let cache = self.cache.borrow();
+        let exe = cache.get(&(kind, bucket)).unwrap();
+        let result = exe
+            .execute::<xla::Literal>(inputs)
+            .map_err(|e| anyhow!("executing {} bucket {bucket}: {e:?}", kind.key()))?;
+        let literal = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetching result: {e:?}"))?;
+        let parts = literal.to_tuple().map_err(|e| anyhow!("untupling result: {e:?}"))?;
+        parts
+            .into_iter()
+            .map(|lit| {
+                let v = lit.to_vec::<f64>().map_err(|e| anyhow!("reading f64s: {e:?}"))?;
+                if v.len() != bucket * bucket {
+                    bail!("artifact output has {} elements, expected {}", v.len(), bucket * bucket);
+                }
+                Ok(Matrix::from_flat(bucket, bucket, v))
+            })
+            .collect()
+    }
+
+    fn matrix_literal(m: &Matrix) -> Result<xla::Literal> {
+        let n = m.rows() as i64;
+        xla::Literal::vec1(m.data())
+            .reshape(&[n, n])
+            .map_err(|e| anyhow!("building literal: {e:?}"))
+    }
+
+    pub fn chain_probs(&self, r: &Matrix, a_lambda: f64, delta: f64) -> Result<ChainMatrices> {
+        let m = r.rows();
+        let bucket = self.bucket_for(m)?;
+        let padded = r.pad_to(bucket);
+        let inputs = vec![
+            Self::matrix_literal(&padded)?,
+            xla::Literal::scalar(a_lambda),
+            xla::Literal::scalar(delta),
+        ];
+        let mut out = self.run(Kind::ChainProbs, bucket, &inputs)?;
+        if out.len() != 3 {
+            bail!("chain_probs artifact returned {} outputs, expected 3", out.len());
+        }
+        let q_rec = out.pop().unwrap().block(m, m);
+        let q_up = out.pop().unwrap().block(m, m);
+        let q_delta = out.pop().unwrap().block(m, m);
+        Ok(ChainMatrices { q_delta, q_up, q_rec })
+    }
+
+    pub fn expm_scaled(&self, r: &Matrix, delta: f64) -> Result<Matrix> {
+        let m = r.rows();
+        let bucket = self.bucket_for(m)?;
+        let padded = r.pad_to(bucket);
+        let inputs = vec![Self::matrix_literal(&padded)?, xla::Literal::scalar(delta)];
+        let mut out = self.run(Kind::Expm, bucket, &inputs)?;
+        if out.len() != 1 {
+            bail!("expm artifact returned {} outputs, expected 1", out.len());
+        }
+        Ok(out.pop().unwrap().block(m, m))
+    }
+
+    /// Spare-pool parameterized chain matrices. Uses the `chain_fast`
+    /// artifact (closed-form Ehrenfest algorithm lowered from JAX) when the
+    /// manifest provides it; otherwise builds the dense generator and runs
+    /// the generic `chain_probs` artifact.
+    pub fn chain_probs_spares(
+        &self,
+        s_max: usize,
+        lambda: f64,
+        theta: f64,
+        a_lambda: f64,
+        delta: f64,
+    ) -> Result<ChainMatrices> {
+        let m = s_max + 1;
+        if !self.has_fast {
+            let r = crate::markov::birth_death::bd_generator(s_max, lambda, theta);
+            return self.chain_probs(&r, a_lambda, delta);
+        }
+        let bucket = self.bucket_for(m)?;
+        let inputs = vec![
+            xla::Literal::scalar(s_max as f64),
+            xla::Literal::scalar(lambda),
+            xla::Literal::scalar(theta),
+            xla::Literal::scalar(a_lambda),
+            xla::Literal::scalar(delta),
+        ];
+        let mut out = self.run(Kind::ChainFast, bucket, &inputs)?;
+        if out.len() != 3 {
+            bail!("chain_fast artifact returned {} outputs, expected 3", out.len());
+        }
+        let q_rec = out.pop().unwrap().block(m, m);
+        let q_up = out.pop().unwrap().block(m, m);
+        let q_delta = out.pop().unwrap().block(m, m);
+        Ok(ChainMatrices { q_delta, q_up, q_rec })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::markov::birth_death::bd_generator;
+
+    #[test]
+    fn native_chain_probs_row_stochastic() {
+        let r = bd_generator(12, 3e-6, 4e-4);
+        let cm = native_chain_probs(&r, 64.0 * 3e-6, 40_000.0);
+        for (name, q) in [("q_delta", &cm.q_delta), ("q_up", &cm.q_up), ("q_rec", &cm.q_rec)] {
+            for i in 0..13 {
+                let s: f64 = q.row(i).iter().sum();
+                assert!((s - 1.0).abs() < 1e-9, "{name} row {i} sums to {s}");
+                assert!(q.row(i).iter().all(|&x| x > -1e-10), "{name} row {i} negative");
+            }
+        }
+    }
+
+    #[test]
+    fn native_qrec_limits() {
+        let r = bd_generator(8, 2e-6, 4e-4);
+        // δ→∞ : q_rec → q_up.
+        let cm = native_chain_probs(&r, 1e-4, 1e9);
+        assert!(cm.q_rec.max_abs_diff(&cm.q_up) < 1e-7);
+        // δ→0 : q_rec → I.
+        let cm = native_chain_probs(&r, 1e-5, 1e-3);
+        assert!(cm.q_rec.max_abs_diff(&Matrix::identity(9)) < 1e-5);
+    }
+
+    #[test]
+    fn auto_engine_constructs() {
+        // Must not panic whether or not artifacts exist.
+        let _ = ComputeEngine::auto();
+    }
+}

@@ -1,0 +1,221 @@
+//! Checkpointing-interval selection (paper §VI-C).
+//!
+//! Starting from `I_min` (5 minutes in the paper), intervals are doubled
+//! until `UWT_model` drops below the previous value; a binary search then
+//! refines inside the bracket spanned by the top-3 intervals. The reported
+//! `I_model` is the *average of all probed intervals whose UWT is within
+//! 8% of the maximum* — the paper's hedge against modeling error.
+
+use anyhow::Result;
+
+use crate::markov::{BuildOptions, MalleableModel, ModelInputs};
+use crate::runtime::ComputeEngine;
+
+/// Search configuration.
+#[derive(Debug, Clone, Copy)]
+pub struct SearchConfig {
+    /// Smallest interval considered (paper: 5 minutes).
+    pub i_min: f64,
+    /// Hard cap on the doubling phase (safety net).
+    pub i_max: f64,
+    /// Binary-search refinement steps inside the top bracket.
+    pub refine_steps: usize,
+    /// "Within x of the best" band for averaging (paper: 0.08).
+    pub band: f64,
+    pub build: BuildOptions,
+}
+
+impl Default for SearchConfig {
+    fn default() -> Self {
+        SearchConfig {
+            i_min: 300.0,
+            i_max: 64.0 * 86_400.0,
+            refine_steps: 6,
+            band: 0.08,
+            build: BuildOptions::default(),
+        }
+    }
+}
+
+/// Outcome of an interval search.
+#[derive(Debug, Clone)]
+pub struct SearchResult {
+    /// The selected interval `I_model` (band-averaged).
+    pub interval: f64,
+    /// Model UWT at the best probed interval.
+    pub uwt: f64,
+    /// The single best probed interval (argmax of UWT).
+    pub best_probed: f64,
+    /// All probed (interval, UWT) pairs, sorted by interval.
+    pub probes: Vec<(f64, f64)>,
+    /// Total model builds performed.
+    pub evaluations: usize,
+}
+
+/// Evaluate `UWT_I` through the full model stack.
+fn evaluate(
+    inputs: &ModelInputs,
+    engine: &ComputeEngine,
+    interval: f64,
+    cfg: &SearchConfig,
+) -> Result<f64> {
+    Ok(MalleableModel::build(inputs, engine, interval, &cfg.build)?.uwt())
+}
+
+/// Run the paper's doubling + binary-search interval selection.
+pub fn select_interval(
+    inputs: &ModelInputs,
+    engine: &ComputeEngine,
+    cfg: &SearchConfig,
+) -> Result<SearchResult> {
+    let mut probes: Vec<(f64, f64)> = Vec::new();
+
+    // Phase 1: doubling from I_min until UWT decreases.
+    let mut i = cfg.i_min;
+    let mut prev: Option<f64> = None;
+    loop {
+        let uwt = evaluate(inputs, engine, i, cfg)?;
+        probes.push((i, uwt));
+        if let Some(p) = prev {
+            if uwt < p {
+                break;
+            }
+        }
+        prev = Some(uwt);
+        i *= 2.0;
+        if i > cfg.i_max {
+            break;
+        }
+    }
+
+    // Phase 2: binary search within the bracket spanned by the top-3
+    // probed intervals.
+    for _ in 0..cfg.refine_steps {
+        let mut sorted = probes.clone();
+        sorted.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap());
+        let top: Vec<f64> = sorted.iter().take(3).map(|&(iv, _)| iv).collect();
+        let lo = top.iter().copied().fold(f64::INFINITY, f64::min);
+        let hi = top.iter().copied().fold(f64::NEG_INFINITY, f64::max);
+        if !(hi > lo) {
+            break;
+        }
+        // Probe the midpoints of the bracket halves (log-spaced).
+        let mids = [(lo.ln() + (hi / lo).ln() / 3.0).exp(), (lo.ln() + 2.0 * (hi / lo).ln() / 3.0).exp()];
+        let mut added = false;
+        for m in mids {
+            if probes.iter().all(|&(iv, _)| (iv / m - 1.0).abs() > 1e-3) {
+                let uwt = evaluate(inputs, engine, m, cfg)?;
+                probes.push((m, uwt));
+                added = true;
+            }
+        }
+        if !added {
+            break;
+        }
+    }
+
+    probes.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+    let (best_probed, best_uwt) = probes
+        .iter()
+        .copied()
+        .max_by(|a, b| a.1.partial_cmp(&b.1).unwrap())
+        .unwrap();
+
+    // Band-average: mean of intervals whose UWT is within `band` of best.
+    let in_band: Vec<f64> = probes
+        .iter()
+        .filter(|&&(_, u)| u >= best_uwt * (1.0 - cfg.band))
+        .map(|&(iv, _)| iv)
+        .collect();
+    let interval = in_band.iter().sum::<f64>() / in_band.len() as f64;
+
+    Ok(SearchResult { interval, uwt: best_uwt, best_probed, evaluations: probes.len(), probes })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::SystemParams;
+    use crate::markov::ModelInputs;
+    use crate::policies::ReschedulingPolicy;
+
+    fn inputs(n: usize, mttf_days: f64) -> ModelInputs {
+        let system = SystemParams::from_mttf_mttr(n, mttf_days, 45.0);
+        ModelInputs::from_raw(
+            system,
+            vec![60.0; n],
+            (1..=n).map(|a| (a as f64).powf(0.85)).collect(),
+            vec![15.0; n],
+            ReschedulingPolicy::greedy(n),
+        )
+        .unwrap()
+    }
+
+    fn quick_cfg() -> SearchConfig {
+        SearchConfig { refine_steps: 3, ..Default::default() }
+    }
+
+    #[test]
+    fn finds_interior_optimum() {
+        let engine = ComputeEngine::native();
+        let res = select_interval(&inputs(6, 2.0), &engine, &quick_cfg()).unwrap();
+        assert!(res.interval > quick_cfg().i_min, "interval at the floor");
+        assert!(res.interval < quick_cfg().i_max);
+        assert!(res.uwt > 0.0);
+        assert!(res.evaluations >= 4);
+        // UWT at the selected band-average should be near the best.
+        let engine2 = ComputeEngine::native();
+        let at_sel = MalleableModel::build(&inputs(6, 2.0), &engine2, res.interval, &quick_cfg().build)
+            .unwrap()
+            .uwt();
+        assert!(at_sel >= res.uwt * 0.9);
+    }
+
+    #[test]
+    fn reliable_system_gets_longer_interval() {
+        // Paper Table II trend: interval grows as failure rate falls.
+        let engine = ComputeEngine::native();
+        let volatile = select_interval(&inputs(6, 0.5), &engine, &quick_cfg()).unwrap();
+        let reliable = select_interval(&inputs(6, 30.0), &engine, &quick_cfg()).unwrap();
+        assert!(
+            reliable.interval > volatile.interval * 2.0,
+            "reliable {} !>> volatile {}",
+            reliable.interval,
+            volatile.interval
+        );
+    }
+
+    #[test]
+    fn higher_checkpoint_cost_longer_interval() {
+        // Paper Table III: QR's large C pushes I_model up.
+        let engine = ComputeEngine::native();
+        let mk = |c: f64| {
+            let system = SystemParams::from_mttf_mttr(6, 4.0, 45.0);
+            ModelInputs::from_raw(
+                system,
+                vec![c; 6],
+                (1..=6).map(|a| (a as f64).powf(0.85)).collect(),
+                vec![15.0; 6],
+                ReschedulingPolicy::greedy(6),
+            )
+            .unwrap()
+        };
+        let cheap = select_interval(&mk(5.0), &engine, &quick_cfg()).unwrap();
+        let dear = select_interval(&mk(200.0), &engine, &quick_cfg()).unwrap();
+        assert!(
+            dear.interval > cheap.interval,
+            "dear {} !> cheap {}",
+            dear.interval,
+            cheap.interval
+        );
+    }
+
+    #[test]
+    fn probes_sorted_and_unique_enough() {
+        let engine = ComputeEngine::native();
+        let res = select_interval(&inputs(5, 3.0), &engine, &quick_cfg()).unwrap();
+        for w in res.probes.windows(2) {
+            assert!(w[0].0 < w[1].0);
+        }
+    }
+}

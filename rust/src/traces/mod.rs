@@ -1,0 +1,210 @@
+//! Failure-trace substrate (paper §VI-A).
+//!
+//! The paper evaluates against 9 years of LANL production failure data and
+//! 18 months of Condor vacate traces; neither dataset ships with this
+//! repository, so [`synth`] generates statistically matched traces from the
+//! published `(λ, θ)` of each system (see DESIGN.md §6 "Substitutions"),
+//! with exponential inter-event times by default and Weibull / lognormal
+//! options probing the paper's §IX future-work question. [`parse`] still
+//! reads real LANL-style / Condor-style files for users who have them.
+//!
+//! A [`FailureTrace`] is, per processor, a sorted list of outage intervals
+//! `(fail_time, repair_time)`. Everything downstream — the AB policy, rate
+//! estimation, and the §VI-C simulator — consumes this one representation.
+
+pub mod distributions;
+pub mod parse;
+pub mod stats;
+pub mod synth;
+
+use anyhow::{bail, Result};
+
+/// Per-processor outage history over `[0, horizon]`.
+#[derive(Debug, Clone)]
+pub struct FailureTrace {
+    /// `outages[p]` = sorted, non-overlapping `(fail, repair)` intervals.
+    outages: Vec<Vec<(f64, f64)>>,
+    horizon: f64,
+}
+
+impl FailureTrace {
+    /// Build from per-processor outage lists; validates ordering.
+    pub fn new(outages: Vec<Vec<(f64, f64)>>, horizon: f64) -> Result<FailureTrace> {
+        if !(horizon > 0.0) {
+            bail!("horizon must be positive");
+        }
+        for (p, list) in outages.iter().enumerate() {
+            let mut prev_end = f64::NEG_INFINITY;
+            for &(f, r) in list {
+                if !(f >= 0.0) || !(r > f) {
+                    bail!("proc {p}: invalid outage ({f}, {r})");
+                }
+                if f < prev_end {
+                    bail!("proc {p}: overlapping outages at {f}");
+                }
+                prev_end = r;
+            }
+        }
+        Ok(FailureTrace { outages, horizon })
+    }
+
+    pub fn n_procs(&self) -> usize {
+        self.outages.len()
+    }
+
+    pub fn horizon(&self) -> f64 {
+        self.horizon
+    }
+
+    pub fn outages(&self, p: usize) -> &[(f64, f64)] {
+        &self.outages[p]
+    }
+
+    /// Number of failure events of processor `p` (optionally before `t`).
+    pub fn failure_count(&self, p: usize) -> usize {
+        self.outages[p].len()
+    }
+
+    pub fn failure_count_before(&self, p: usize, t: f64) -> usize {
+        self.outages[p].partition_point(|&(f, _)| f < t)
+    }
+
+    /// Is processor `p` functional at time `t`?
+    pub fn is_up(&self, p: usize, t: f64) -> bool {
+        let list = &self.outages[p];
+        // Last outage starting at or before t.
+        let i = list.partition_point(|&(f, _)| f <= t);
+        if i == 0 {
+            return true;
+        }
+        let (_, r) = list[i - 1];
+        t >= r
+    }
+
+    /// Next failure of `p` strictly after `t` (the start of the next
+    /// outage interval).
+    pub fn next_failure_after(&self, p: usize, t: f64) -> Option<f64> {
+        let list = &self.outages[p];
+        let i = list.partition_point(|&(f, _)| f <= t);
+        list.get(i).map(|&(f, _)| f)
+    }
+
+    /// If `p` is down at `t`, the time it comes back up.
+    pub fn repair_time_at(&self, p: usize, t: f64) -> Option<f64> {
+        let list = &self.outages[p];
+        let i = list.partition_point(|&(f, _)| f <= t);
+        if i == 0 {
+            return None;
+        }
+        let (_, r) = list[i - 1];
+        if t < r {
+            Some(r)
+        } else {
+            None
+        }
+    }
+
+    /// All processors functional at `t`.
+    pub fn available_at(&self, t: f64) -> Vec<usize> {
+        (0..self.n_procs()).filter(|&p| self.is_up(p, t)).collect()
+    }
+
+    /// Earliest repair completion strictly after `t` across all processors
+    /// that are down at `t`. `None` if none are down.
+    pub fn next_repair_after(&self, t: f64) -> Option<f64> {
+        let mut best: Option<f64> = None;
+        for p in 0..self.n_procs() {
+            if let Some(r) = self.repair_time_at(p, t) {
+                if r > t {
+                    best = Some(best.map_or(r, |b: f64| b.min(r)));
+                }
+            }
+        }
+        best
+    }
+
+    /// Earliest failure strictly after `t` among the given processors.
+    pub fn next_failure_among(&self, procs: &[usize], t: f64) -> Option<(f64, usize)> {
+        let mut best: Option<(f64, usize)> = None;
+        for &p in procs {
+            if let Some(f) = self.next_failure_after(p, t) {
+                if best.map_or(true, |(bf, _)| f < bf) {
+                    best = Some((f, p));
+                }
+            }
+        }
+        best
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn simple() -> FailureTrace {
+        // proc 0: outages [10, 20), [50, 55). proc 1: none.
+        FailureTrace::new(vec![vec![(10.0, 20.0), (50.0, 55.0)], vec![]], 100.0).unwrap()
+    }
+
+    #[test]
+    fn up_down_queries() {
+        let t = simple();
+        assert!(t.is_up(0, 5.0));
+        assert!(!t.is_up(0, 10.0)); // failure instant => down
+        assert!(!t.is_up(0, 15.0));
+        assert!(t.is_up(0, 20.0)); // repair instant => up
+        assert!(t.is_up(1, 15.0));
+    }
+
+    #[test]
+    fn next_failure() {
+        let t = simple();
+        assert_eq!(t.next_failure_after(0, 0.0), Some(10.0));
+        assert_eq!(t.next_failure_after(0, 10.0), Some(50.0));
+        assert_eq!(t.next_failure_after(0, 60.0), None);
+        assert_eq!(t.next_failure_after(1, 0.0), None);
+    }
+
+    #[test]
+    fn repair_queries() {
+        let t = simple();
+        assert_eq!(t.repair_time_at(0, 12.0), Some(20.0));
+        assert_eq!(t.repair_time_at(0, 25.0), None);
+        assert_eq!(t.next_repair_after(12.0), Some(20.0));
+        assert_eq!(t.next_repair_after(30.0), None);
+    }
+
+    #[test]
+    fn availability_set() {
+        let t = simple();
+        assert_eq!(t.available_at(15.0), vec![1]);
+        assert_eq!(t.available_at(5.0), vec![0, 1]);
+    }
+
+    #[test]
+    fn next_failure_among_picks_earliest() {
+        let t = FailureTrace::new(
+            vec![vec![(30.0, 31.0)], vec![(20.0, 21.0)], vec![(40.0, 41.0)]],
+            100.0,
+        )
+        .unwrap();
+        assert_eq!(t.next_failure_among(&[0, 1, 2], 0.0), Some((20.0, 1)));
+        assert_eq!(t.next_failure_among(&[0, 2], 0.0), Some((30.0, 0)));
+        assert_eq!(t.next_failure_among(&[], 0.0), None);
+    }
+
+    #[test]
+    fn validation_rejects_bad_intervals() {
+        assert!(FailureTrace::new(vec![vec![(5.0, 4.0)]], 10.0).is_err()); // repair < fail
+        assert!(FailureTrace::new(vec![vec![(5.0, 8.0), (7.0, 9.0)]], 10.0).is_err()); // overlap
+        assert!(FailureTrace::new(vec![vec![]], 0.0).is_err()); // horizon
+    }
+
+    #[test]
+    fn failure_count_before() {
+        let t = simple();
+        assert_eq!(t.failure_count_before(0, 9.0), 0);
+        assert_eq!(t.failure_count_before(0, 11.0), 1);
+        assert_eq!(t.failure_count_before(0, 60.0), 2);
+    }
+}

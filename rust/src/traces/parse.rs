@@ -1,0 +1,163 @@
+//! Parsers/writers for on-disk failure-trace formats.
+//!
+//! * **LANL-style CSV** (`node,fail_start,repair_end`, seconds, `#`
+//!   comments and a header allowed) — the shape of the public LANL
+//!   failure-data release the paper uses.
+//! * **Condor-style** whitespace rows (`host vacate_start vacate_end`) —
+//!   a vacate event is a "failure" of the guest job's processor, exactly
+//!   how the paper treats owner reclamation.
+//!
+//! Both map onto [`FailureTrace`]; hosts/nodes are densely re-indexed in
+//! first-appearance order so arbitrary identifiers work.
+
+use super::FailureTrace;
+use anyhow::{bail, Context, Result};
+use std::collections::HashMap;
+
+fn build_trace(rows: Vec<(String, f64, f64)>, horizon: Option<f64>) -> Result<FailureTrace> {
+    if rows.is_empty() {
+        bail!("trace file contains no events");
+    }
+    let mut ids: HashMap<String, usize> = HashMap::new();
+    let mut outages: Vec<Vec<(f64, f64)>> = Vec::new();
+    let mut max_t = 0.0f64;
+    for (host, f, r) in rows {
+        let next_id = ids.len();
+        let id = *ids.entry(host).or_insert(next_id);
+        if id == outages.len() {
+            outages.push(Vec::new());
+        }
+        outages[id].push((f, r));
+        max_t = max_t.max(r);
+    }
+    for list in outages.iter_mut() {
+        list.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        // Merge overlapping outages (real traces contain duplicates).
+        let mut merged: Vec<(f64, f64)> = Vec::with_capacity(list.len());
+        for &(f, r) in list.iter() {
+            match merged.last_mut() {
+                Some(last) if f <= last.1 => last.1 = last.1.max(r),
+                _ => merged.push((f, r)),
+            }
+        }
+        *list = merged;
+    }
+    FailureTrace::new(outages, horizon.unwrap_or(max_t * 1.001))
+}
+
+/// Parse LANL-style CSV text.
+pub fn parse_lanl_csv(text: &str, horizon: Option<f64>) -> Result<FailureTrace> {
+    let mut rows = Vec::new();
+    for (lineno, line) in text.lines().enumerate() {
+        let line = line.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        let fields: Vec<&str> = line.split(',').map(str::trim).collect();
+        if fields.len() < 3 {
+            bail!("line {}: expected node,fail_start,repair_end", lineno + 1);
+        }
+        // Skip a header row.
+        if lineno == 0 && fields[1].parse::<f64>().is_err() {
+            continue;
+        }
+        let f: f64 = fields[1]
+            .parse()
+            .with_context(|| format!("line {}: bad fail_start", lineno + 1))?;
+        let r: f64 = fields[2]
+            .parse()
+            .with_context(|| format!("line {}: bad repair_end", lineno + 1))?;
+        if r <= f {
+            bail!("line {}: repair_end <= fail_start", lineno + 1);
+        }
+        rows.push((fields[0].to_string(), f, r));
+    }
+    build_trace(rows, horizon)
+}
+
+/// Parse Condor-style whitespace rows.
+pub fn parse_condor(text: &str, horizon: Option<f64>) -> Result<FailureTrace> {
+    let mut rows = Vec::new();
+    for (lineno, line) in text.lines().enumerate() {
+        let line = line.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        let fields: Vec<&str> = line.split_whitespace().collect();
+        if fields.len() < 3 {
+            bail!("line {}: expected host vacate_start vacate_end", lineno + 1);
+        }
+        let f: f64 = fields[1]
+            .parse()
+            .with_context(|| format!("line {}: bad vacate_start", lineno + 1))?;
+        let r: f64 = fields[2]
+            .parse()
+            .with_context(|| format!("line {}: bad vacate_end", lineno + 1))?;
+        if r <= f {
+            bail!("line {}: vacate_end <= vacate_start", lineno + 1);
+        }
+        rows.push((fields[0].to_string(), f, r));
+    }
+    build_trace(rows, horizon)
+}
+
+/// Serialize a trace as LANL-style CSV (round-trip + dataset export).
+pub fn to_lanl_csv(trace: &FailureTrace) -> String {
+    let mut out = String::from("node,fail_start,repair_end\n");
+    for p in 0..trace.n_procs() {
+        for &(f, r) in trace.outages(p) {
+            out.push_str(&format!("proc{p},{f},{r}\n"));
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_lanl_basic() {
+        let text = "node,fail_start,repair_end\n# comment\nA,10,20\nB,5,8\nA,50,60\n";
+        let t = parse_lanl_csv(text, Some(100.0)).unwrap();
+        assert_eq!(t.n_procs(), 2);
+        assert_eq!(t.outages(0), &[(10.0, 20.0), (50.0, 60.0)]);
+        assert_eq!(t.outages(1), &[(5.0, 8.0)]);
+    }
+
+    #[test]
+    fn parse_condor_basic() {
+        let text = "host1 100 200\nhost2 50 75\nhost1 300 350\n";
+        let t = parse_condor(text, None).unwrap();
+        assert_eq!(t.n_procs(), 2);
+        assert_eq!(t.failure_count(0), 2);
+        assert!(t.horizon() >= 350.0);
+    }
+
+    #[test]
+    fn overlapping_events_merged() {
+        let text = "A,10,30\nA,20,40\nA,50,60\n";
+        let t = parse_lanl_csv(text, None).unwrap();
+        assert_eq!(t.outages(0), &[(10.0, 40.0), (50.0, 60.0)]);
+    }
+
+    #[test]
+    fn bad_rows_rejected() {
+        assert!(parse_lanl_csv("A,20,10\n", None).is_err()); // repair < fail
+        assert!(parse_lanl_csv("A,20\n", None).is_err()); // missing field
+        assert!(parse_lanl_csv("", None).is_err()); // empty
+        assert!(parse_condor("h only\n", None).is_err());
+    }
+
+    #[test]
+    fn csv_roundtrip() {
+        let text = "X,10,20\nY,5,8\nX,50,60\n";
+        let t = parse_lanl_csv(text, Some(100.0)).unwrap();
+        let csv = to_lanl_csv(&t);
+        let t2 = parse_lanl_csv(&csv, Some(100.0)).unwrap();
+        assert_eq!(t.n_procs(), t2.n_procs());
+        for p in 0..t.n_procs() {
+            assert_eq!(t.outages(p), t2.outages(p));
+        }
+    }
+}

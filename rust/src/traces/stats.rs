@@ -1,0 +1,215 @@
+//! Rate estimation from failure traces (paper §III-C: "we have developed
+//! programs that can be used with standard failure traces to automatically
+//! calculate λ and θ").
+//!
+//! Per the paper: a processor's MTTF is the average time between its
+//! failures, MTTR the average outage duration; the system λ (θ) is the
+//! reciprocal of the mean per-processor MTTF (MTTR). Only history strictly
+//! before the cutoff is used — the model must not peek at the future of the
+//! execution segment it is invoked for.
+
+use super::FailureTrace;
+use anyhow::{bail, Result};
+
+/// Estimate `(λ, θ)` from trace history before `cutoff` seconds.
+///
+/// Exposure-based maximum likelihood for the exponential model:
+/// `λ̂ = (# failures) / (total observed up-time)` and
+/// `θ̂ = (# repairs) / (total observed down-time)`. This is the censoring-
+/// robust version of the paper's "average of times between failures" —
+/// the naive per-gap average is badly biased low when the observation
+/// window is shorter than the MTTF (most LANL processors have 0–1
+/// failures in any given segment history).
+pub fn estimate_rates(trace: &FailureTrace, cutoff: f64) -> Result<(f64, f64)> {
+    let mut failures = 0usize;
+    let mut repairs = 0usize;
+    let mut up_time = 0.0f64;
+    let mut down_time = 0.0f64;
+
+    for p in 0..trace.n_procs() {
+        let mut prev_end = 0.0f64;
+        for &(f, r) in trace.outages(p) {
+            if f >= cutoff {
+                break;
+            }
+            failures += 1;
+            up_time += f - prev_end;
+            let r_obs = r.min(cutoff);
+            down_time += r_obs - f;
+            if r <= cutoff {
+                repairs += 1;
+            }
+            prev_end = r;
+        }
+        if prev_end < cutoff {
+            up_time += cutoff - prev_end;
+        }
+    }
+
+    if failures == 0 || up_time <= 0.0 {
+        bail!("no failures before cutoff; cannot estimate lambda");
+    }
+    if repairs == 0 || down_time <= 0.0 {
+        bail!("no completed repairs before cutoff; cannot estimate theta");
+    }
+    Ok((failures as f64 / up_time, repairs as f64 / down_time))
+}
+
+/// Weibull shape/scale fit of the observed time-to-failure samples by
+/// maximum likelihood (Newton on the shape profile equation). Real HPC
+/// failure data has shape < 1 (decreasing hazard — Schroeder & Gibson);
+/// this is the analysis tool behind the paper-§IX distribution question:
+/// run it on a trace to decide whether the exponential assumption (shape
+/// ≈ 1) is tenable.
+///
+/// Returns `(shape, scale)`. Requires ≥ 8 complete TTF samples.
+pub fn fit_weibull_ttf(trace: &FailureTrace, cutoff: f64) -> Result<(f64, f64)> {
+    // Complete (uncensored) up-periods: repair -> next failure.
+    let mut samples: Vec<f64> = Vec::new();
+    for p in 0..trace.n_procs() {
+        let outages: Vec<(f64, f64)> = trace
+            .outages(p)
+            .iter()
+            .copied()
+            .filter(|&(f, _)| f < cutoff)
+            .collect();
+        for w in outages.windows(2) {
+            let ttf = w[1].0 - w[0].1;
+            if ttf > 0.0 {
+                samples.push(ttf);
+            }
+        }
+        if let Some(&(first, _)) = outages.first() {
+            if first > 0.0 {
+                samples.push(first);
+            }
+        }
+    }
+    if samples.len() < 8 {
+        bail!("need at least 8 complete TTF samples, have {}", samples.len());
+    }
+
+    // Profile MLE: g(k) = sum(x^k ln x)/sum(x^k) − 1/k − mean(ln x) = 0.
+    let logs: Vec<f64> = samples.iter().map(|x| x.ln()).collect();
+    let mean_log = logs.iter().sum::<f64>() / logs.len() as f64;
+    // Work with scaled samples (divide by geometric mean) for stability.
+    let scaled: Vec<f64> = logs.iter().map(|l| (l - mean_log).exp()).collect();
+
+    let g = |k: f64| -> f64 {
+        let mut num = 0.0;
+        let mut den = 0.0;
+        for (&x, &l) in scaled.iter().zip(&logs) {
+            let xk = x.powf(k);
+            num += xk * (l - mean_log);
+            den += xk;
+        }
+        num / den - 1.0 / k
+    };
+
+    // Bisection: g is increasing in k; bracket [0.05, 20].
+    let (mut lo, mut hi) = (0.05f64, 20.0f64);
+    if g(lo) > 0.0 || g(hi) < 0.0 {
+        bail!("Weibull shape outside [0.05, 20]");
+    }
+    for _ in 0..200 {
+        let mid = 0.5 * (lo + hi);
+        if g(mid) < 0.0 {
+            lo = mid;
+        } else {
+            hi = mid;
+        }
+    }
+    let shape = 0.5 * (lo + hi);
+    let scale_scaled =
+        (scaled.iter().map(|x| x.powf(shape)).sum::<f64>() / scaled.len() as f64).powf(1.0 / shape);
+    let scale = scale_scaled * mean_log.exp();
+    Ok((shape, scale))
+}
+
+/// Fraction of processor-seconds the system is up over `[0, upto]` —
+/// a sanity metric for generated traces.
+pub fn machine_availability(trace: &FailureTrace, upto: f64) -> f64 {
+    let mut down = 0.0f64;
+    for p in 0..trace.n_procs() {
+        for &(f, r) in trace.outages(p) {
+            if f >= upto {
+                break;
+            }
+            down += (r.min(upto) - f).max(0.0);
+        }
+    }
+    1.0 - down / (upto * trace.n_procs() as f64)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::traces::synth::{generate, SynthSpec};
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn recovers_generator_rates() {
+        let mut rng = Rng::new(10);
+        let (lam, theta) = (1.0 / (4.0 * 86_400.0), 1.0 / 7_200.0);
+        let trace = generate(&SynthSpec::exponential(48, lam, theta, 600.0 * 86_400.0), &mut rng);
+        let (lh, th) = estimate_rates(&trace, trace.horizon()).unwrap();
+        assert!((lh - lam).abs() / lam < 0.1, "{lh} vs {lam}");
+        assert!((th - theta).abs() / theta < 0.1, "{th} vs {theta}");
+    }
+
+    #[test]
+    fn cutoff_excludes_future() {
+        let trace = FailureTrace::new(
+            vec![vec![(100.0, 200.0), (1_000.0, 1_100.0), (5_000.0, 5_050.0)]],
+            10_000.0,
+        )
+        .unwrap();
+        // Before t=2000 there are two failures: gap 900, repairs 100, 100.
+        let (lam, theta) = estimate_rates(&trace, 2_000.0).unwrap();
+        assert!((1.0 / lam - 900.0).abs() < 1e-9);
+        assert!((1.0 / theta - 100.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn errors_without_history() {
+        let trace = FailureTrace::new(vec![vec![(5_000.0, 5_100.0)]], 10_000.0).unwrap();
+        assert!(estimate_rates(&trace, 1_000.0).is_err());
+    }
+
+    #[test]
+    fn weibull_fit_recovers_shape() {
+        let mut rng = Rng::new(21);
+        for shape in [0.7f64, 1.0, 2.0] {
+            let spec = crate::traces::synth::SynthSpec::weibull(
+                48,
+                1.0 / 86_400.0,
+                1.0 / 1_800.0,
+                shape,
+                300.0 * 86_400.0,
+            );
+            let trace = generate(&spec, &mut rng);
+            let (k, scale) = fit_weibull_ttf(&trace, trace.horizon()).unwrap();
+            assert!((k - shape).abs() / shape < 0.15, "shape {k} vs {shape}");
+            // Mean = scale * Gamma(1 + 1/k) should be near one day.
+            let mean = scale * crate::traces::distributions::gamma(1.0 + 1.0 / k);
+            assert!((mean - 86_400.0).abs() / 86_400.0 < 0.2, "mean {mean}");
+        }
+    }
+
+    #[test]
+    fn weibull_fit_needs_samples() {
+        let trace = FailureTrace::new(vec![vec![(10.0, 20.0)]], 100.0).unwrap();
+        assert!(fit_weibull_ttf(&trace, 100.0).is_err());
+    }
+
+    #[test]
+    fn availability_bounds() {
+        let mut rng = Rng::new(11);
+        let trace =
+            generate(&SynthSpec::exponential(16, 1.0 / 86_400.0, 1.0 / 3_600.0, 40.0 * 86_400.0), &mut rng);
+        let a = machine_availability(&trace, trace.horizon());
+        assert!(a > 0.9 && a <= 1.0, "availability {a}");
+        // MTTR/(MTTF+MTTR) ≈ 3600/90000 ≈ 4% downtime.
+        assert!((a - 1.0f64 / (1.0 + 3_600.0 / 86_400.0)).abs() < 0.02);
+    }
+}

@@ -1,0 +1,218 @@
+//! Synthetic failure-trace generation (DESIGN.md §6 substitution for the
+//! LANL / Condor datasets).
+//!
+//! Each processor independently alternates up-period ~ TTF distribution,
+//! down-period ~ TTR distribution, from time 0 to the horizon — the same
+//! renewal structure the paper's Markov model assumes, with the published
+//! per-system `(λ, θ)` as the default moments.
+
+use super::distributions::Distribution;
+use super::FailureTrace;
+use crate::util::rng::Rng;
+
+/// Specification of a synthetic trace.
+#[derive(Debug, Clone)]
+pub struct SynthSpec {
+    pub n_procs: usize,
+    /// Time-to-failure distribution of one processor.
+    pub ttf: Distribution,
+    /// Time-to-repair distribution of one processor.
+    pub ttr: Distribution,
+    /// Trace length, seconds.
+    pub horizon: f64,
+    /// Desynchronize processors by sampling the first up-period from the
+    /// stationary age distribution (avoids the all-up artifact at t = 0
+    /// being followed by a synchronized failure wave).
+    pub stagger_start: bool,
+    /// Heterogeneity: per-processor MTTF multipliers drawn lognormal with
+    /// this sigma (mean 1; 0 = homogeneous). Models real clusters where
+    /// node reliability varies by orders of magnitude (paper §IX
+    /// "heterogeneous systems" future work).
+    pub hetero_sigma: f64,
+}
+
+impl SynthSpec {
+    /// Exponential TTF/TTR from rates (the paper's model assumptions).
+    pub fn exponential(n_procs: usize, lambda: f64, theta: f64, horizon: f64) -> SynthSpec {
+        SynthSpec {
+            n_procs,
+            ttf: Distribution::Exponential { rate: lambda },
+            ttr: Distribution::Exponential { rate: theta },
+            horizon,
+            stagger_start: true,
+            hetero_sigma: 0.0,
+        }
+    }
+
+    /// Weibull-failure variant (paper §IX extension): same mean TTF/TTR,
+    /// shape k (< 1 = decreasing hazard, as fitted on real LANL data).
+    pub fn weibull(n_procs: usize, lambda: f64, theta: f64, shape: f64, horizon: f64) -> SynthSpec {
+        SynthSpec {
+            n_procs,
+            ttf: Distribution::weibull_mean(1.0 / lambda, shape),
+            ttr: Distribution::Exponential { rate: theta },
+            horizon,
+            stagger_start: true,
+            hetero_sigma: 0.0,
+        }
+    }
+
+    /// Heterogeneous-reliability variant (paper §IX extension): mean rates
+    /// as given, per-processor MTTF multipliers lognormal(sigma).
+    pub fn heterogeneous(
+        n_procs: usize,
+        lambda: f64,
+        theta: f64,
+        sigma: f64,
+        horizon: f64,
+    ) -> SynthSpec {
+        SynthSpec { hetero_sigma: sigma, ..SynthSpec::exponential(n_procs, lambda, theta, horizon) }
+    }
+}
+
+/// Scale a distribution's mean by `m` (shape preserved).
+fn scale_mean(d: Distribution, m: f64) -> Distribution {
+    match d {
+        Distribution::Exponential { rate } => Distribution::Exponential { rate: rate / m },
+        Distribution::Weibull { shape, scale } => Distribution::Weibull { shape, scale: scale * m },
+        Distribution::LogNormal { mu, sigma } => Distribution::LogNormal { mu: mu + m.ln(), sigma },
+    }
+}
+
+/// Generate a trace from a spec.
+pub fn generate(spec: &SynthSpec, rng: &mut Rng) -> FailureTrace {
+    let mut outages = Vec::with_capacity(spec.n_procs);
+    for _ in 0..spec.n_procs {
+        // Per-processor reliability multiplier (mean 1).
+        let ttf_dist = if spec.hetero_sigma > 0.0 {
+            let s = spec.hetero_sigma;
+            let mult = rng.lognormal(-s * s / 2.0, s);
+            scale_mean(spec.ttf, mult)
+        } else {
+            spec.ttf
+        };
+        let mut list = Vec::new();
+        let mut t = 0.0f64;
+        let mut first = true;
+        loop {
+            // First up-period: for the exponential TTF the stationary
+            // residual life is the distribution itself (memorylessness);
+            // for others, scaling by U(0,1) approximates an in-progress
+            // up-period at t = 0 so processors start desynchronized.
+            let up = if first && spec.stagger_start {
+                first = false;
+                match ttf_dist {
+                    Distribution::Exponential { .. } => ttf_dist.sample(rng),
+                    _ => ttf_dist.sample(rng) * rng.f64(),
+                }
+            } else {
+                first = false;
+                ttf_dist.sample(rng)
+            };
+            let fail = t + up;
+            if fail >= spec.horizon {
+                break;
+            }
+            let down = spec.ttr.sample(rng);
+            let repair = fail + down;
+            list.push((fail, repair.min(spec.horizon)));
+            if repair >= spec.horizon {
+                break;
+            }
+            t = repair;
+        }
+        outages.push(list);
+    }
+    FailureTrace::new(outages, spec.horizon).expect("generator produced invalid trace")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::traces::stats::estimate_rates;
+
+    #[test]
+    fn respects_horizon_and_ordering() {
+        let mut rng = Rng::new(1);
+        let spec = SynthSpec::exponential(32, 1.0 / 86_400.0, 1.0 / 3_600.0, 30.0 * 86_400.0);
+        let trace = generate(&spec, &mut rng);
+        assert_eq!(trace.n_procs(), 32);
+        for p in 0..32 {
+            let mut prev = f64::NEG_INFINITY;
+            for &(f, r) in trace.outages(p) {
+                assert!(f > prev);
+                assert!(r > f);
+                assert!(r <= trace.horizon());
+                prev = r;
+            }
+        }
+    }
+
+    #[test]
+    fn empirical_rates_match_spec() {
+        let mut rng = Rng::new(2);
+        let (lambda, theta) = (1.0 / (2.0 * 86_400.0), 1.0 / 3_600.0);
+        // Long horizon, many procs => tight estimates.
+        let spec = SynthSpec::exponential(64, lambda, theta, 400.0 * 86_400.0);
+        let trace = generate(&spec, &mut rng);
+        let (lam_hat, theta_hat) = estimate_rates(&trace, trace.horizon()).unwrap();
+        assert!(
+            (lam_hat - lambda).abs() / lambda < 0.1,
+            "lambda {lam_hat} vs {lambda}"
+        );
+        assert!(
+            (theta_hat - theta).abs() / theta < 0.1,
+            "theta {theta_hat} vs {theta}"
+        );
+    }
+
+    #[test]
+    fn volatile_spec_has_many_failures() {
+        let mut rng = Rng::new(3);
+        // Condor-like: MTTF ~ 6 days over 80 days => ~13 failures/proc.
+        let spec = SynthSpec::exponential(16, 1.0 / (6.0 * 86_400.0), 1.0 / 3_300.0, 80.0 * 86_400.0);
+        let trace = generate(&spec, &mut rng);
+        let total: usize = (0..16).map(|p| trace.failure_count(p)).sum();
+        assert!(total > 100, "expected >100 failures, got {total}");
+    }
+
+    #[test]
+    fn weibull_spec_generates() {
+        let mut rng = Rng::new(4);
+        let spec = SynthSpec::weibull(8, 1.0 / 86_400.0, 1.0 / 3_600.0, 0.7, 20.0 * 86_400.0);
+        let trace = generate(&spec, &mut rng);
+        let total: usize = (0..8).map(|p| trace.failure_count(p)).sum();
+        assert!(total > 0);
+    }
+
+    #[test]
+    fn heterogeneous_spread_visible() {
+        let mut rng = Rng::new(12);
+        let spec = SynthSpec::heterogeneous(64, 1.0 / 86_400.0, 1.0 / 3_600.0, 1.2, 200.0 * 86_400.0);
+        let trace = generate(&spec, &mut rng);
+        let counts: Vec<usize> = (0..64).map(|p| trace.failure_count(p)).collect();
+        let max = *counts.iter().max().unwrap();
+        let min = *counts.iter().min().unwrap();
+        // Lognormal sigma=1.2 multipliers spread failure counts widely.
+        assert!(max >= min * 4 + 4, "spread too small: {min}..{max}");
+        // The multiplier mean is 1 in MTTF space, so event *counts* inflate
+        // by up to E[1/m] = e^{sigma^2} ≈ 4.2 (unreliable nodes dominate).
+        let total: usize = counts.iter().sum();
+        let expect = 64.0 * 200.0; // procs × days at MTTF = 1 day, m = 1
+        let inflation = (1.2f64 * 1.2).exp();
+        assert!(
+            (total as f64) > expect * 0.8 && (total as f64) < expect * inflation * 1.3,
+            "total {total} vs base {expect}"
+        );
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let spec = SynthSpec::exponential(4, 1.0 / 86_400.0, 1.0 / 3_600.0, 10.0 * 86_400.0);
+        let t1 = generate(&spec, &mut Rng::new(9));
+        let t2 = generate(&spec, &mut Rng::new(9));
+        for p in 0..4 {
+            assert_eq!(t1.outages(p), t2.outages(p));
+        }
+    }
+}

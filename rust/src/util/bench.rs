@@ -1,0 +1,116 @@
+//! Micro/macro benchmark harness (the vendor set has no criterion).
+//!
+//! [`Bench`] runs a closure with warmup, measures wall-clock per iteration,
+//! and prints mean / p50 / p95 plus optional throughput. Used by the
+//! `cargo bench` targets (`rust/benches/*.rs`, `harness = false`).
+
+use std::time::Instant;
+
+/// One benchmark's collected timings.
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub mean_s: f64,
+    pub p50_s: f64,
+    pub p95_s: f64,
+    pub min_s: f64,
+}
+
+impl BenchResult {
+    pub fn print(&self) {
+        println!(
+            "{:<44} {:>10} {:>12} {:>12} {:>12}",
+            self.name,
+            format!("x{}", self.iters),
+            fmt_time(self.mean_s),
+            fmt_time(self.p50_s),
+            fmt_time(self.p95_s),
+        );
+    }
+}
+
+fn fmt_time(s: f64) -> String {
+    if s >= 1.0 {
+        format!("{s:.3} s")
+    } else if s >= 1e-3 {
+        format!("{:.3} ms", s * 1e3)
+    } else {
+        format!("{:.1} µs", s * 1e6)
+    }
+}
+
+/// Print the standard header row.
+pub fn header(title: &str) {
+    println!("\n### {title}");
+    println!(
+        "{:<44} {:>10} {:>12} {:>12} {:>12}",
+        "benchmark", "iters", "mean", "p50", "p95"
+    );
+    println!("{}", "-".repeat(96));
+}
+
+/// Run `f` repeatedly: `warmup` unmeasured runs then up to `iters`
+/// measured runs (capped by `max_seconds` of measurement budget).
+pub fn bench<F: FnMut()>(name: &str, warmup: usize, iters: usize, max_seconds: f64, mut f: F) -> BenchResult {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut times = Vec::with_capacity(iters);
+    let budget = Instant::now();
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        f();
+        times.push(t0.elapsed().as_secs_f64());
+        if budget.elapsed().as_secs_f64() > max_seconds {
+            break;
+        }
+    }
+    times.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let n = times.len();
+    let result = BenchResult {
+        name: name.to_string(),
+        iters: n,
+        mean_s: times.iter().sum::<f64>() / n as f64,
+        p50_s: times[n / 2],
+        p95_s: times[(n as f64 * 0.95) as usize % n.max(1)],
+        min_s: times[0],
+    };
+    result.print();
+    result
+}
+
+/// Convenience for one-shot (expensive) benchmarks: single measured run.
+pub fn bench_once<F: FnMut()>(name: &str, f: F) -> BenchResult {
+    bench(name, 0, 1, f64::INFINITY, f)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn collects_timings() {
+        let r = bench("noop", 1, 16, 5.0, || {
+            std::hint::black_box(1 + 1);
+        });
+        assert_eq!(r.iters, 16);
+        assert!(r.mean_s >= 0.0);
+        assert!(r.p50_s <= r.p95_s || r.iters < 3);
+    }
+
+    #[test]
+    fn budget_caps_iterations() {
+        let r = bench("sleepy", 0, 1_000, 0.05, || {
+            std::thread::sleep(std::time::Duration::from_millis(10));
+        });
+        assert!(r.iters < 1_000);
+    }
+
+    #[test]
+    fn time_formatting() {
+        assert!(fmt_time(2.0).contains("s"));
+        assert!(fmt_time(2e-3).contains("ms"));
+        assert!(fmt_time(2e-6).contains("µs"));
+    }
+}

@@ -1,0 +1,312 @@
+//! Command-line parsing substrate (the vendor set has no clap).
+//!
+//! Supports subcommands, `--flag value`, `--flag=value`, boolean switches,
+//! positional arguments, typed accessors with defaults, and generated help
+//! text. Strict: unknown flags are errors, so typos surface immediately.
+
+use std::collections::BTreeMap;
+use std::fmt;
+
+/// Declarative specification of one flag.
+#[derive(Debug, Clone)]
+pub struct FlagSpec {
+    pub name: &'static str,
+    pub value_hint: Option<&'static str>, // None => boolean switch
+    pub help: &'static str,
+    pub default: Option<&'static str>,
+}
+
+/// Specification of a subcommand: its flags and positionals.
+#[derive(Debug, Clone, Default)]
+pub struct CommandSpec {
+    pub name: &'static str,
+    pub about: &'static str,
+    pub flags: Vec<FlagSpec>,
+    pub positionals: Vec<(&'static str, &'static str)>, // (name, help)
+}
+
+/// Parsed arguments for a matched subcommand.
+#[derive(Debug, Clone, Default)]
+pub struct Parsed {
+    pub command: String,
+    values: BTreeMap<String, String>,
+    switches: BTreeMap<String, bool>,
+    pub positionals: Vec<String>,
+}
+
+#[derive(Debug)]
+pub struct CliError(pub String);
+
+impl fmt::Display for CliError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+impl std::error::Error for CliError {}
+
+impl Parsed {
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.values.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get_or(&self, name: &str, default: &str) -> String {
+        self.get(name).unwrap_or(default).to_string()
+    }
+
+    pub fn get_f64(&self, name: &str) -> Result<Option<f64>, CliError> {
+        match self.get(name) {
+            None => Ok(None),
+            Some(s) => s
+                .parse::<f64>()
+                .map(Some)
+                .map_err(|_| CliError(format!("--{name}: expected a number, got '{s}'"))),
+        }
+    }
+
+    pub fn get_usize(&self, name: &str) -> Result<Option<usize>, CliError> {
+        match self.get(name) {
+            None => Ok(None),
+            Some(s) => s
+                .parse::<usize>()
+                .map(Some)
+                .map_err(|_| CliError(format!("--{name}: expected an integer, got '{s}'"))),
+        }
+    }
+
+    pub fn get_u64(&self, name: &str) -> Result<Option<u64>, CliError> {
+        match self.get(name) {
+            None => Ok(None),
+            Some(s) => s
+                .parse::<u64>()
+                .map(Some)
+                .map_err(|_| CliError(format!("--{name}: expected an integer, got '{s}'"))),
+        }
+    }
+
+    pub fn switch(&self, name: &str) -> bool {
+        self.switches.get(name).copied().unwrap_or(false)
+    }
+}
+
+/// A multi-command CLI application.
+#[derive(Debug, Default)]
+pub struct App {
+    pub name: &'static str,
+    pub about: &'static str,
+    pub commands: Vec<CommandSpec>,
+}
+
+impl App {
+    pub fn new(name: &'static str, about: &'static str) -> App {
+        App { name, about, commands: Vec::new() }
+    }
+
+    pub fn command(mut self, spec: CommandSpec) -> App {
+        self.commands.push(spec);
+        self
+    }
+
+    /// Render top-level or per-command help.
+    pub fn help(&self, command: Option<&str>) -> String {
+        match command.and_then(|c| self.commands.iter().find(|s| s.name == c)) {
+            Some(spec) => {
+                let mut s = format!("{} {} — {}\n\nUSAGE:\n  {} {}", self.name, spec.name, spec.about, self.name, spec.name);
+                for (p, _) in &spec.positionals {
+                    s.push_str(&format!(" <{p}>"));
+                }
+                s.push_str(" [flags]\n");
+                if !spec.positionals.is_empty() {
+                    s.push_str("\nARGS:\n");
+                    for (p, h) in &spec.positionals {
+                        s.push_str(&format!("  <{p}>  {h}\n"));
+                    }
+                }
+                if !spec.flags.is_empty() {
+                    s.push_str("\nFLAGS:\n");
+                    for f in &spec.flags {
+                        let head = match f.value_hint {
+                            Some(v) => format!("--{} <{}>", f.name, v),
+                            None => format!("--{}", f.name),
+                        };
+                        let dflt = f.default.map(|d| format!(" [default: {d}]")).unwrap_or_default();
+                        s.push_str(&format!("  {head:<28} {}{dflt}\n", f.help));
+                    }
+                }
+                s
+            }
+            None => {
+                let mut s = format!("{} — {}\n\nUSAGE:\n  {} <command> [flags]\n\nCOMMANDS:\n", self.name, self.about, self.name);
+                for c in &self.commands {
+                    s.push_str(&format!("  {:<18} {}\n", c.name, c.about));
+                }
+                s.push_str("\nRun with `<command> --help` for details.\n");
+                s
+            }
+        }
+    }
+
+    /// Parse argv (excluding the program name).
+    pub fn parse(&self, args: &[String]) -> Result<Parsed, CliError> {
+        let Some(cmd_name) = args.first() else {
+            return Err(CliError(self.help(None)));
+        };
+        if cmd_name == "--help" || cmd_name == "-h" || cmd_name == "help" {
+            return Err(CliError(self.help(args.get(1).map(|s| s.as_str()))));
+        }
+        let spec = self
+            .commands
+            .iter()
+            .find(|c| c.name == cmd_name.as_str())
+            .ok_or_else(|| CliError(format!("unknown command '{cmd_name}'\n\n{}", self.help(None))))?;
+
+        let mut parsed = Parsed { command: spec.name.to_string(), ..Default::default() };
+        for f in &spec.flags {
+            if let (Some(_), Some(d)) = (f.value_hint, f.default) {
+                parsed.values.insert(f.name.to_string(), d.to_string());
+            }
+        }
+
+        let mut i = 1;
+        while i < args.len() {
+            let a = &args[i];
+            if a == "--help" || a == "-h" {
+                return Err(CliError(self.help(Some(spec.name))));
+            }
+            if let Some(body) = a.strip_prefix("--") {
+                let (name, inline_val) = match body.split_once('=') {
+                    Some((n, v)) => (n, Some(v.to_string())),
+                    None => (body, None),
+                };
+                let fspec = spec
+                    .flags
+                    .iter()
+                    .find(|f| f.name == name)
+                    .ok_or_else(|| CliError(format!("unknown flag --{name} for '{}'", spec.name)))?;
+                match fspec.value_hint {
+                    None => {
+                        if inline_val.is_some() {
+                            return Err(CliError(format!("--{name} takes no value")));
+                        }
+                        parsed.switches.insert(name.to_string(), true);
+                    }
+                    Some(_) => {
+                        let v = match inline_val {
+                            Some(v) => v,
+                            None => {
+                                i += 1;
+                                args.get(i)
+                                    .cloned()
+                                    .ok_or_else(|| CliError(format!("--{name} requires a value")))?
+                            }
+                        };
+                        parsed.values.insert(name.to_string(), v);
+                    }
+                }
+            } else {
+                parsed.positionals.push(a.clone());
+            }
+            i += 1;
+        }
+
+        if parsed.positionals.len() > spec.positionals.len() {
+            return Err(CliError(format!(
+                "too many positional arguments for '{}' (expected {})",
+                spec.name,
+                spec.positionals.len()
+            )));
+        }
+        Ok(parsed)
+    }
+}
+
+/// Helper to build a flag taking a value.
+pub fn flag(name: &'static str, hint: &'static str, help: &'static str, default: Option<&'static str>) -> FlagSpec {
+    FlagSpec { name, value_hint: Some(hint), help, default }
+}
+
+/// Helper to build a boolean switch.
+pub fn switch(name: &'static str, help: &'static str) -> FlagSpec {
+    FlagSpec { name, value_hint: None, help, default: None }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn app() -> App {
+        App::new("tool", "test tool").command(CommandSpec {
+            name: "run",
+            about: "run a thing",
+            flags: vec![
+                flag("n", "INT", "count", Some("4")),
+                flag("rate", "F", "rate", None),
+                switch("fast", "go fast"),
+            ],
+            positionals: vec![("input", "input path")],
+        })
+    }
+
+    fn args(v: &[&str]) -> Vec<String> {
+        v.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_flags_and_positionals() {
+        let p = app().parse(&args(&["run", "file.txt", "--n", "8", "--fast"])).unwrap();
+        assert_eq!(p.command, "run");
+        assert_eq!(p.get_usize("n").unwrap(), Some(8));
+        assert!(p.switch("fast"));
+        assert_eq!(p.positionals, vec!["file.txt"]);
+    }
+
+    #[test]
+    fn equals_syntax() {
+        let p = app().parse(&args(&["run", "--rate=0.5"])).unwrap();
+        assert_eq!(p.get_f64("rate").unwrap(), Some(0.5));
+    }
+
+    #[test]
+    fn defaults_applied() {
+        let p = app().parse(&args(&["run"])).unwrap();
+        assert_eq!(p.get_usize("n").unwrap(), Some(4));
+        assert_eq!(p.get("rate"), None);
+        assert!(!p.switch("fast"));
+    }
+
+    #[test]
+    fn unknown_flag_rejected() {
+        assert!(app().parse(&args(&["run", "--bogus", "1"])).is_err());
+    }
+
+    #[test]
+    fn unknown_command_rejected() {
+        let err = app().parse(&args(&["zap"])).unwrap_err();
+        assert!(err.0.contains("unknown command"));
+    }
+
+    #[test]
+    fn missing_value_rejected() {
+        assert!(app().parse(&args(&["run", "--n"])).is_err());
+    }
+
+    #[test]
+    fn bad_number_reported() {
+        let p = app().parse(&args(&["run", "--n", "abc"])).unwrap();
+        assert!(p.get_usize("n").is_err());
+    }
+
+    #[test]
+    fn help_lists_commands_and_flags() {
+        let a = app();
+        let top = a.help(None);
+        assert!(top.contains("run a thing"));
+        let sub = a.help(Some("run"));
+        assert!(sub.contains("--n <INT>"));
+        assert!(sub.contains("[default: 4]"));
+    }
+
+    #[test]
+    fn too_many_positionals() {
+        assert!(app().parse(&args(&["run", "a", "b"])).is_err());
+    }
+}

@@ -1,0 +1,15 @@
+//! General-purpose substrates built in-repo because the offline vendor set
+//! contains only the `xla` closure: RNG + distributions, JSON, CLI parsing,
+//! a thread pool, statistics helpers and a property-testing harness.
+
+pub mod bench;
+pub mod cli;
+pub mod json;
+pub mod plot;
+pub mod pool;
+pub mod prop;
+pub mod rng;
+pub mod stats;
+
+pub use json::Json;
+pub use rng::Rng;

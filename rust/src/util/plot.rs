@@ -1,0 +1,280 @@
+//! Minimal SVG line/step-chart writer for the figure experiments.
+//!
+//! The paper's figures are line plots (Fig 4: work rate vs processors,
+//! Fig 5: processors-in-use step function, Fig 6: inefficiency curves);
+//! `experiment ... --plots-dir` renders them as standalone SVG files so a
+//! reproduction run leaves visual artifacts, not just tables. No external
+//! dependencies: the SVG is assembled textually.
+
+use std::fmt::Write as _;
+
+/// One named series of (x, y) points.
+#[derive(Debug, Clone)]
+pub struct Series {
+    pub name: String,
+    pub points: Vec<(f64, f64)>,
+    /// Draw as a step function (Fig 5) instead of straight segments.
+    pub step: bool,
+}
+
+impl Series {
+    pub fn line(name: &str, points: Vec<(f64, f64)>) -> Series {
+        Series { name: name.to_string(), points, step: false }
+    }
+
+    pub fn step(name: &str, points: Vec<(f64, f64)>) -> Series {
+        Series { name: name.to_string(), points, step: true }
+    }
+}
+
+/// Chart description.
+#[derive(Debug, Clone)]
+pub struct Chart {
+    pub title: String,
+    pub x_label: String,
+    pub y_label: String,
+    pub series: Vec<Series>,
+    pub width: u32,
+    pub height: u32,
+    /// Logarithmic x axis (interval sweeps).
+    pub log_x: bool,
+}
+
+impl Chart {
+    pub fn new(title: &str, x_label: &str, y_label: &str) -> Chart {
+        Chart {
+            title: title.to_string(),
+            x_label: x_label.to_string(),
+            y_label: y_label.to_string(),
+            series: Vec::new(),
+            width: 720,
+            height: 420,
+            log_x: false,
+        }
+    }
+
+    pub fn with_series(mut self, s: Series) -> Chart {
+        self.series.push(s);
+        self
+    }
+
+    fn x_of(&self, x: f64) -> f64 {
+        if self.log_x {
+            x.max(1e-300).log10()
+        } else {
+            x
+        }
+    }
+
+    /// Render to an SVG string.
+    pub fn to_svg(&self) -> String {
+        const PALETTE: [&str; 6] = ["#1f77b4", "#d62728", "#2ca02c", "#9467bd", "#ff7f0e", "#17becf"];
+        let (w, h) = (self.width as f64, self.height as f64);
+        let (ml, mr, mt, mb) = (64.0, 16.0, 40.0, 48.0);
+        let (pw, ph) = (w - ml - mr, h - mt - mb);
+
+        let mut xs: Vec<f64> = Vec::new();
+        let mut ys: Vec<f64> = Vec::new();
+        for s in &self.series {
+            for &(x, y) in &s.points {
+                xs.push(self.x_of(x));
+                ys.push(y);
+            }
+        }
+        if xs.is_empty() {
+            return String::from("<svg xmlns=\"http://www.w3.org/2000/svg\"/>");
+        }
+        let (x0, x1) = bounds(&xs);
+        let (mut y0, mut y1) = bounds(&ys);
+        if y0 > 0.0 && y0 / y1.max(1e-300) < 0.5 {
+            y0 = 0.0; // anchor at zero unless the data is far from it
+        }
+        if (y1 - y0).abs() < 1e-12 {
+            y1 = y0 + 1.0;
+        }
+        let sx = |x: f64| ml + (self.x_of(x) - x0) / (x1 - x0).max(1e-300) * pw;
+        let sy = |y: f64| mt + (1.0 - (y - y0) / (y1 - y0)) * ph;
+
+        let mut svg = String::new();
+        let _ = write!(
+            svg,
+            "<svg xmlns=\"http://www.w3.org/2000/svg\" width=\"{}\" height=\"{}\" font-family=\"sans-serif\" font-size=\"12\">\n",
+            self.width, self.height
+        );
+        let _ = write!(svg, "<rect width=\"100%\" height=\"100%\" fill=\"white\"/>\n");
+        let _ = write!(
+            svg,
+            "<text x=\"{}\" y=\"22\" text-anchor=\"middle\" font-size=\"15\" font-weight=\"bold\">{}</text>\n",
+            w / 2.0,
+            esc(&self.title)
+        );
+
+        // Axes + ticks.
+        let _ = write!(
+            svg,
+            "<line x1=\"{ml}\" y1=\"{}\" x2=\"{}\" y2=\"{}\" stroke=\"black\"/>\n",
+            mt + ph,
+            ml + pw,
+            mt + ph
+        );
+        let _ = write!(svg, "<line x1=\"{ml}\" y1=\"{mt}\" x2=\"{ml}\" y2=\"{}\" stroke=\"black\"/>\n", mt + ph);
+        for k in 0..=4 {
+            let f = k as f64 / 4.0;
+            let yv = y0 + f * (y1 - y0);
+            let yp = sy(yv);
+            let _ = write!(
+                svg,
+                "<line x1=\"{}\" y1=\"{yp}\" x2=\"{}\" y2=\"{yp}\" stroke=\"#ddd\"/>\n",
+                ml,
+                ml + pw
+            );
+            let _ = write!(
+                svg,
+                "<text x=\"{}\" y=\"{}\" text-anchor=\"end\">{}</text>\n",
+                ml - 6.0,
+                yp + 4.0,
+                fmt_tick(yv)
+            );
+            let xv_plot = x0 + f * (x1 - x0);
+            let xv = if self.log_x { 10f64.powf(xv_plot) } else { xv_plot };
+            let xp = ml + f * pw;
+            let _ = write!(
+                svg,
+                "<text x=\"{xp}\" y=\"{}\" text-anchor=\"middle\">{}</text>\n",
+                mt + ph + 16.0,
+                fmt_tick(xv)
+            );
+        }
+        let _ = write!(
+            svg,
+            "<text x=\"{}\" y=\"{}\" text-anchor=\"middle\">{}</text>\n",
+            ml + pw / 2.0,
+            h - 10.0,
+            esc(&self.x_label)
+        );
+        let _ = write!(
+            svg,
+            "<text x=\"16\" y=\"{}\" text-anchor=\"middle\" transform=\"rotate(-90 16 {})\">{}</text>\n",
+            mt + ph / 2.0,
+            mt + ph / 2.0,
+            esc(&self.y_label)
+        );
+
+        // Series.
+        for (si, s) in self.series.iter().enumerate() {
+            let color = PALETTE[si % PALETTE.len()];
+            let mut d = String::new();
+            let mut prev: Option<(f64, f64)> = None;
+            for &(x, y) in &s.points {
+                let (px, py) = (sx(x), sy(y));
+                match prev {
+                    None => {
+                        let _ = write!(d, "M{px:.1},{py:.1}");
+                    }
+                    Some((_, py_prev)) if s.step => {
+                        let _ = write!(d, " L{px:.1},{py_prev:.1} L{px:.1},{py:.1}");
+                    }
+                    Some(_) => {
+                        let _ = write!(d, " L{px:.1},{py:.1}");
+                    }
+                }
+                prev = Some((px, py));
+            }
+            let _ = write!(svg, "<path d=\"{d}\" fill=\"none\" stroke=\"{color}\" stroke-width=\"1.8\"/>\n");
+            // Legend.
+            let lx = ml + pw - 150.0;
+            let ly = mt + 14.0 + 18.0 * si as f64;
+            let _ = write!(svg, "<line x1=\"{lx}\" y1=\"{ly}\" x2=\"{}\" y2=\"{ly}\" stroke=\"{color}\" stroke-width=\"2.5\"/>\n", lx + 22.0);
+            let _ = write!(svg, "<text x=\"{}\" y=\"{}\">{}</text>\n", lx + 28.0, ly + 4.0, esc(&s.name));
+        }
+        svg.push_str("</svg>\n");
+        svg
+    }
+
+    /// Write the SVG to a file.
+    pub fn save(&self, path: &std::path::Path) -> std::io::Result<()> {
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        std::fs::write(path, self.to_svg())
+    }
+}
+
+fn bounds(v: &[f64]) -> (f64, f64) {
+    let lo = v.iter().copied().fold(f64::INFINITY, f64::min);
+    let hi = v.iter().copied().fold(f64::NEG_INFINITY, f64::max);
+    (lo, hi)
+}
+
+fn fmt_tick(v: f64) -> String {
+    if v == 0.0 {
+        "0".into()
+    } else if v.abs() >= 1000.0 || v.abs() < 0.01 {
+        format!("{v:.1e}")
+    } else if v.abs() >= 10.0 {
+        format!("{v:.0}")
+    } else {
+        format!("{v:.2}")
+    }
+}
+
+fn esc(s: &str) -> String {
+    s.replace('&', "&amp;").replace('<', "&lt;").replace('>', "&gt;")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_chart() -> Chart {
+        Chart::new("Work rate", "processors", "iterations/s")
+            .with_series(Series::line("QR", vec![(1.0, 1.0), (64.0, 9.3), (512.0, 10.4)]))
+            .with_series(Series::step("procs", vec![(0.0, 128.0), (10.0, 100.0), (20.0, 127.0)]))
+    }
+
+    #[test]
+    fn svg_well_formed_ish() {
+        let svg = sample_chart().to_svg();
+        assert!(svg.starts_with("<svg"));
+        assert!(svg.ends_with("</svg>\n"));
+        assert_eq!(svg.matches("<path").count(), 2);
+        assert!(svg.contains("QR"));
+        assert!(svg.contains("iterations/s"));
+    }
+
+    #[test]
+    fn empty_chart_is_valid() {
+        let svg = Chart::new("t", "x", "y").to_svg();
+        assert!(svg.contains("svg"));
+    }
+
+    #[test]
+    fn escaping() {
+        let svg = Chart::new("a < b & c", "x", "y")
+            .with_series(Series::line("s", vec![(0.0, 1.0), (1.0, 2.0)]))
+            .to_svg();
+        assert!(svg.contains("a &lt; b &amp; c"));
+        assert!(!svg.contains("a < b"));
+    }
+
+    #[test]
+    fn log_x_positions_monotone() {
+        let mut c = Chart::new("t", "x", "y").with_series(Series::line(
+            "s",
+            vec![(10.0, 1.0), (100.0, 2.0), (1000.0, 3.0)],
+        ));
+        c.log_x = true;
+        let svg = c.to_svg();
+        assert!(svg.contains("<path"));
+    }
+
+    #[test]
+    fn save_writes_file() {
+        let dir = std::env::temp_dir().join("malleable_ckpt_plot_test");
+        let path = dir.join("chart.svg");
+        sample_chart().save(&path).unwrap();
+        let content = std::fs::read_to_string(&path).unwrap();
+        assert!(content.contains("</svg>"));
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

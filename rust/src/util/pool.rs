@@ -1,0 +1,119 @@
+//! A small scoped thread pool with a master–worker work queue.
+//!
+//! The paper (§IV) parallelizes model construction with a master–worker
+//! scheme: the master hands the next active-processor count `a` to a free
+//! worker, which builds the corresponding birth–death chain matrices. This
+//! module provides exactly that shape: [`run_indexed`] evaluates a closure
+//! over `0..n` on `k` workers and collects results in order.
+//!
+//! Built on `std::thread::scope`, so the closure may borrow from the caller.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+/// Number of workers to use by default: the machine's parallelism.
+pub fn default_workers() -> usize {
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+}
+
+/// Evaluate `f(i)` for every `i in 0..n` using `workers` threads and return
+/// results ordered by index. Panics in `f` propagate to the caller.
+///
+/// The dispatch is dynamic (an atomic work counter), so uneven per-index
+/// costs — chain `a=1` has an (N)x(N) matrix, chain `a=N` a 1x1 — balance
+/// automatically, matching the paper's master–worker design.
+pub fn run_indexed<T, F>(n: usize, workers: usize, f: F) -> Vec<T>
+where
+    T: Send,
+    F: Fn(usize) -> T + Sync,
+{
+    let workers = workers.max(1).min(n.max(1));
+    let mut out: Vec<Option<T>> = (0..n).map(|_| None).collect();
+    if n == 0 {
+        return Vec::new();
+    }
+    if workers == 1 {
+        return (0..n).map(&f).collect();
+    }
+
+    let next = AtomicUsize::new(0);
+    let slots = Mutex::new(&mut out);
+
+    std::thread::scope(|scope| {
+        for _ in 0..workers {
+            scope.spawn(|| loop {
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= n {
+                    break;
+                }
+                let v = f(i);
+                let mut guard = slots.lock().unwrap();
+                guard[i] = Some(v);
+            });
+        }
+    });
+
+    out.into_iter().map(|v| v.expect("worker missed index")).collect()
+}
+
+/// Evaluate `f` over a slice of items in parallel, preserving order.
+pub fn map_slice<I, T, F>(items: &[I], workers: usize, f: F) -> Vec<T>
+where
+    I: Sync,
+    T: Send,
+    F: Fn(&I) -> T + Sync,
+{
+    run_indexed(items.len(), workers, |i| f(&items[i]))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn results_in_order() {
+        let got = run_indexed(100, 4, |i| i * i);
+        let want: Vec<usize> = (0..100).map(|i| i * i).collect();
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    fn single_worker_fallback() {
+        let got = run_indexed(10, 1, |i| i + 1);
+        assert_eq!(got, (1..=10).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn empty_input() {
+        let got: Vec<usize> = run_indexed(0, 8, |i| i);
+        assert!(got.is_empty());
+    }
+
+    #[test]
+    fn more_workers_than_items() {
+        let got = run_indexed(3, 64, |i| i);
+        assert_eq!(got, vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn map_slice_borrows() {
+        let items = vec!["a".to_string(), "bb".to_string(), "ccc".to_string()];
+        let lens = map_slice(&items, 2, |s| s.len());
+        assert_eq!(lens, vec![1, 2, 3]);
+    }
+
+    #[test]
+    fn uneven_work_balances() {
+        // Heavier work at low indices; just checks completion & order.
+        let got = run_indexed(32, 4, |i| {
+            let mut acc = 0u64;
+            for k in 0..(if i < 4 { 200_000 } else { 100 }) {
+                acc = acc.wrapping_add(k);
+            }
+            (i, acc)
+        });
+        for (i, item) in got.iter().enumerate() {
+            assert_eq!(item.0, i);
+        }
+    }
+}

@@ -1,0 +1,175 @@
+//! Property-testing harness (the vendor set has no proptest).
+//!
+//! [`check`] runs a property over `cases` seeded random inputs produced by a
+//! generator closure; on failure it retries the failing seed with a binary
+//! "shrink-by-regenerate" pass over a shrink parameter the generator may
+//! consult (smaller magnitude inputs), then panics with the reproducing
+//! seed. Deterministic: the base seed is fixed per call site, so CI failures
+//! reproduce locally.
+
+use crate::util::rng::Rng;
+
+/// Context handed to generators: RNG plus a size hint in (0, 1] that the
+/// shrinker lowers when hunting a minimal counterexample.
+pub struct Gen<'a> {
+    pub rng: &'a mut Rng,
+    pub size: f64,
+}
+
+impl<'a> Gen<'a> {
+    /// Integer in [lo, hi], scaled toward lo as `size` shrinks.
+    pub fn int_in(&mut self, lo: usize, hi: usize) -> usize {
+        debug_assert!(hi >= lo);
+        let span = ((hi - lo) as f64 * self.size).ceil() as usize;
+        lo + self.rng.below(span.max(1) as u64 + 1) as usize
+    }
+
+    /// Float in [lo, hi] scaled toward lo as `size` shrinks.
+    pub fn f64_in(&mut self, lo: f64, hi: f64) -> f64 {
+        lo + (hi - lo) * self.size * self.rng.f64()
+    }
+
+    /// Log-uniform float in [lo, hi] (both > 0) — natural for rates.
+    pub fn log_uniform(&mut self, lo: f64, hi: f64) -> f64 {
+        debug_assert!(lo > 0.0 && hi > lo);
+        (self.rng.range(lo.ln(), lo.ln() + (hi.ln() - lo.ln()) * self.size)).exp()
+    }
+
+    /// One element of a slice.
+    pub fn choose<'b, T>(&mut self, xs: &'b [T]) -> &'b T {
+        &xs[self.rng.usize_range(0, xs.len())]
+    }
+}
+
+/// Outcome classification for a single property evaluation.
+pub enum Outcome {
+    Pass,
+    /// Property does not apply to this input (counts separately; too many
+    /// discards fail the run so vacuous properties are caught).
+    Discard,
+    Fail(String),
+}
+
+/// Run `property(gen(ctx))` for `cases` random cases.
+///
+/// `seed` fixes the stream. On failure, retries the same case seed with
+/// progressively smaller `size` to report a (often) smaller counterexample.
+pub fn check<T, G, P>(name: &str, seed: u64, cases: usize, gen: G, property: P)
+where
+    T: std::fmt::Debug,
+    G: Fn(&mut Gen) -> T,
+    P: Fn(&T) -> Outcome,
+{
+    let mut discards = 0usize;
+    let mut passes = 0usize;
+    let mut case = 0usize;
+    while passes < cases {
+        if case >= cases.saturating_mul(5) {
+            panic!(
+                "property '{name}': too many discards ({discards} discards, only {passes}/{cases} passes)"
+            );
+        }
+        let case_seed = seed ^ (case as u64).wrapping_mul(0x9E3779B97F4A7C15);
+        case += 1;
+        let input = {
+            let mut rng = Rng::new(case_seed);
+            let mut ctx = Gen { rng: &mut rng, size: 1.0 };
+            gen(&mut ctx)
+        };
+        match property(&input) {
+            Outcome::Pass => {
+                passes += 1;
+            }
+            Outcome::Discard => {
+                discards += 1;
+            }
+            Outcome::Fail(msg) => {
+                // Shrink: re-generate from the same seed at smaller sizes and
+                // keep the smallest input that still fails.
+                let mut smallest: (f64, T, String) = (1.0, input, msg);
+                for step in 1..=6 {
+                    let size = 1.0 / (1 << step) as f64;
+                    let candidate = {
+                        let mut rng = Rng::new(case_seed);
+                        let mut ctx = Gen { rng: &mut rng, size };
+                        gen(&mut ctx)
+                    };
+                    if let Outcome::Fail(m) = property(&candidate) {
+                        smallest = (size, candidate, m);
+                    }
+                }
+                panic!(
+                    "property '{name}' failed (case {case}, seed {case_seed:#x}, size {}):\n  input: {:?}\n  {}",
+                    smallest.0, smallest.1, smallest.2
+                );
+            }
+        }
+    }
+}
+
+/// Convenience: boolean property.
+pub fn check_bool<T, G, P>(name: &str, seed: u64, cases: usize, gen: G, property: P)
+where
+    T: std::fmt::Debug,
+    G: Fn(&mut Gen) -> T,
+    P: Fn(&T) -> bool,
+{
+    check(name, seed, cases, gen, |t| {
+        if property(t) {
+            Outcome::Pass
+        } else {
+            Outcome::Fail("predicate returned false".into())
+        }
+    })
+}
+
+/// Assert two floats are close; returns an Outcome for use inside `check`.
+pub fn close(a: f64, b: f64, rtol: f64, atol: f64) -> Outcome {
+    let tol = atol + rtol * b.abs().max(a.abs());
+    if (a - b).abs() <= tol || (a.is_nan() && b.is_nan()) {
+        Outcome::Pass
+    } else {
+        Outcome::Fail(format!("{a} !~ {b} (diff {}, tol {tol})", (a - b).abs()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        check_bool("add-commutes", 1, 200, |g| (g.f64_in(-1e6, 1e6), g.f64_in(-1e6, 1e6)), |(a, b)| {
+            a + b == b + a
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always-false' failed")]
+    fn failing_property_panics_with_seed() {
+        check_bool("always-false", 2, 10, |g| g.int_in(0, 100), |_| false);
+    }
+
+    #[test]
+    #[should_panic(expected = "too many discards")]
+    fn all_discards_flagged() {
+        check("vacuous", 3, 50, |g| g.int_in(0, 10), |_| Outcome::Discard);
+    }
+
+    #[test]
+    fn generators_respect_bounds() {
+        check_bool(
+            "bounds",
+            4,
+            500,
+            |g| (g.int_in(3, 17), g.f64_in(0.5, 2.5), g.log_uniform(1e-7, 1e-2)),
+            |(i, f, l)| (3..=17).contains(i) && (0.5..=2.5).contains(f) && (1e-7..=1e-2).contains(l),
+        );
+    }
+
+    #[test]
+    fn close_tolerances() {
+        assert!(matches!(close(1.0, 1.0 + 1e-12, 1e-9, 0.0), Outcome::Pass));
+        assert!(matches!(close(1.0, 1.1, 1e-9, 0.0), Outcome::Fail(_)));
+    }
+}

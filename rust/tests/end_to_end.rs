@@ -1,0 +1,95 @@
+//! End-to-end integration: trace generation → rate estimation → model
+//! build (auto engine) → interval search → simulator validation, asserting
+//! the paper's headline property (model efficiency > 80%) on a small
+//! system, plus cross-cutting behaviors of the assembled stack.
+
+use malleable_ckpt::apps::AppProfile;
+use malleable_ckpt::config::SystemParams;
+use malleable_ckpt::metrics::evaluate_segment;
+use malleable_ckpt::policies::ReschedulingPolicy;
+use malleable_ckpt::runtime::ComputeEngine;
+use malleable_ckpt::search::SearchConfig;
+use malleable_ckpt::traces::synth::{generate, SynthSpec};
+use malleable_ckpt::util::rng::Rng;
+
+fn quick_search() -> SearchConfig {
+    SearchConfig { refine_steps: 2, ..Default::default() }
+}
+
+#[test]
+fn model_efficiency_above_80_percent() {
+    // Condor-ish volatility on a 16-proc pool, MD app, greedy policy:
+    // the paper's headline is >80% efficiency for the model's interval.
+    let mut rng = Rng::new(0xE2E);
+    let sys = SystemParams::new(16, 1.0 / (6.0 * 86_400.0), 1.0 / 3_300.0);
+    let trace = generate(&SynthSpec::exponential(sys.n, sys.lambda, sys.theta, 90.0 * 86_400.0), &mut rng);
+    let app = AppProfile::md(sys.n);
+    let policy = ReschedulingPolicy::greedy(sys.n);
+    let engine = ComputeEngine::auto();
+
+    let mut effs = Vec::new();
+    for seg in 0..3 {
+        let start = (10.0 + 20.0 * seg as f64) * 86_400.0;
+        let eval = evaluate_segment(
+            &trace, &app, &policy, &engine, start, 15.0 * 86_400.0,
+            &quick_search(), Some((sys.lambda, sys.theta)),
+        )
+        .unwrap();
+        effs.push(eval.efficiency);
+    }
+    let mean = effs.iter().sum::<f64>() / effs.len() as f64;
+    assert!(mean > 80.0, "mean model efficiency {mean:.1}% (paper: >80%), segments {effs:?}");
+}
+
+#[test]
+fn interval_scales_with_reliability() {
+    // Table II trend through the full pipeline: longer MTTF ⇒ longer I.
+    let engine = ComputeEngine::auto();
+    let app = AppProfile::qr(12);
+    let policy = ReschedulingPolicy::greedy(12);
+    let mut intervals = Vec::new();
+    for mttf_days in [1.0, 8.0, 64.0] {
+        let sys = SystemParams::from_mttf_mttr(12, mttf_days, 50.0);
+        let inputs = malleable_ckpt::markov::ModelInputs::new(sys, &app, &policy).unwrap();
+        let res = malleable_ckpt::search::select_interval(&inputs, &engine, &quick_search()).unwrap();
+        intervals.push(res.interval);
+    }
+    assert!(intervals[0] < intervals[1] && intervals[1] < intervals[2], "{intervals:?}");
+}
+
+#[test]
+fn ab_policy_runs_on_fewer_procs_than_greedy() {
+    // Table IV mechanism: AB selects fewer processors, hence longer
+    // intervals and lower aggregate failure rates.
+    let mut rng = Rng::new(0xAB);
+    let sys = SystemParams::new(16, 1.0 / (4.0 * 86_400.0), 1.0 / 3_600.0);
+    let trace = generate(&SynthSpec::exponential(sys.n, sys.lambda, sys.theta, 60.0 * 86_400.0), &mut rng);
+    let ab = ReschedulingPolicy::availability_based(&trace, 30, &mut rng).unwrap();
+    let greedy = ReschedulingPolicy::greedy(sys.n);
+    assert!(ab.procs_for(16) <= greedy.procs_for(16));
+    let max_ab = ab.image().into_iter().max().unwrap();
+    assert!(max_ab <= 16);
+}
+
+#[test]
+fn simulated_uwt_tracks_model_uwt() {
+    // The model's UWT estimate and the simulator's measured UWT should be
+    // in the same ballpark (the paper reports them side by side).
+    let mut rng = Rng::new(0x51);
+    let sys = SystemParams::new(12, 1.0 / (10.0 * 86_400.0), 1.0 / 3_000.0);
+    let trace = generate(&SynthSpec::exponential(sys.n, sys.lambda, sys.theta, 80.0 * 86_400.0), &mut rng);
+    let app = AppProfile::qr(sys.n);
+    let policy = ReschedulingPolicy::greedy(sys.n);
+    let engine = ComputeEngine::auto();
+    let eval = evaluate_segment(
+        &trace, &app, &policy, &engine, 20.0 * 86_400.0, 25.0 * 86_400.0,
+        &quick_search(), Some((sys.lambda, sys.theta)),
+    )
+    .unwrap();
+    let model_uwt = eval.search.uwt;
+    assert!(
+        (eval.uwt_model / model_uwt) > 0.5 && (eval.uwt_model / model_uwt) < 2.0,
+        "model UWT {model_uwt:.3} vs simulated {:.3}",
+        eval.uwt_model
+    );
+}

@@ -1,0 +1,158 @@
+//! Failure-injection integration tests: adversarial traces exercising the
+//! simulator's edge paths (failures during checkpoint writes, during
+//! recovery, flapping processors, total outages, segment boundaries).
+
+use malleable_ckpt::apps::AppProfile;
+use malleable_ckpt::policies::ReschedulingPolicy;
+use malleable_ckpt::simulator::{SimConfig, Simulator};
+use malleable_ckpt::traces::FailureTrace;
+
+fn flat_app(n: usize, ckpt: f64) -> AppProfile {
+    AppProfile::from_vectors(
+        "flat",
+        (1..=n).map(|a| a as f64).collect(),
+        vec![ckpt; n],
+        5.0,
+        0.0, // recovery cost independent of configs
+    )
+    .unwrap()
+}
+
+#[test]
+fn failure_exactly_at_checkpoint_completion() {
+    // Interval 100, C = 10: first checkpoint completes at t = 110. A
+    // failure at exactly 110 must not destroy the banked work.
+    let trace = FailureTrace::new(vec![vec![(110.0, 100_000.0)], vec![]], 1e6).unwrap();
+    let app = flat_app(2, 10.0);
+    let policy = ReschedulingPolicy::greedy(2);
+    let sim = Simulator::new(&trace, &app, &policy);
+    let r = sim.run(&SimConfig::new(0.0, 500.0, 100.0)).unwrap();
+    assert!(r.checkpoints >= 1);
+    assert!(r.useful_work >= 2.0 * 100.0 - 1e-9, "banked work lost: {}", r.useful_work);
+}
+
+#[test]
+fn failure_during_checkpoint_write_loses_interval() {
+    // Failure at t = 105, mid-checkpoint (work end 100, ckpt end 110):
+    // the interval being written must be lost.
+    let trace = FailureTrace::new(vec![vec![(105.0, 100_000.0)], vec![]], 1e6).unwrap();
+    let app = flat_app(2, 10.0);
+    let policy = ReschedulingPolicy::greedy(2);
+    let sim = Simulator::new(&trace, &app, &policy);
+    let r = sim.run(&SimConfig::new(0.0, 400.0, 100.0)).unwrap();
+    // First cycle not banked on 2 procs...
+    assert_eq!(r.failures, 1);
+    assert!(r.lost_seconds >= 100.0 - 1e-9, "lost {}", r.lost_seconds);
+}
+
+#[test]
+fn repeated_failures_during_recovery() {
+    // Recovery cost 5s; proc 0 fails every 2s for a while after t=50:
+    // recovery keeps restarting on the shrinking pool.
+    let mut outages0 = Vec::new();
+    let mut t = 50.0;
+    for _ in 0..10 {
+        outages0.push((t, t + 1.0));
+        t += 2.0;
+    }
+    let trace = FailureTrace::new(vec![outages0, vec![], vec![]], 1e6).unwrap();
+    let app = flat_app(3, 10.0);
+    let policy = ReschedulingPolicy::greedy(3);
+    let sim = Simulator::new(&trace, &app, &policy);
+    let r = sim.run(&SimConfig::new(0.0, 300.0, 20.0)).unwrap();
+    assert!(r.failures >= 2, "expected repeated failures, got {}", r.failures);
+    assert!(r.useful_work > 0.0);
+}
+
+#[test]
+fn flapping_processor_starves_nothing() {
+    // Proc 1 flaps (1s up / 1s down); proc 0 is solid. Greedy keeps
+    // getting interrupted when it grabs both; the run must still finish
+    // and account all time.
+    let mut flaps = Vec::new();
+    let mut t = 10.0;
+    while t < 5_000.0 {
+        flaps.push((t, t + 1.0));
+        t += 2.0;
+    }
+    let trace = FailureTrace::new(vec![vec![], flaps], 1e6).unwrap();
+    let app = flat_app(2, 2.0);
+    let policy = ReschedulingPolicy::greedy(2);
+    let sim = Simulator::new(&trace, &app, &policy);
+    let cfg = SimConfig::new(0.0, 5_000.0, 50.0);
+    let r = sim.run(&cfg).unwrap();
+    let total = r.useful_seconds + r.lost_seconds + r.ckpt_seconds + r.recovery_seconds + r.wait_seconds;
+    assert!(total <= cfg.duration * (1.0 + 1e-9));
+    assert!(r.failures > 100, "flapping should interrupt often: {}", r.failures);
+}
+
+#[test]
+fn total_outage_then_recovery() {
+    // Everything down over [100, 5000): long wait, then resume on repair.
+    let trace = FailureTrace::new(
+        vec![vec![(100.0, 5_000.0)], vec![(100.0, 6_000.0)]],
+        1e6,
+    )
+    .unwrap();
+    let app = flat_app(2, 5.0);
+    let policy = ReschedulingPolicy::greedy(2);
+    let sim = Simulator::new(&trace, &app, &policy);
+    let r = sim.run(&SimConfig::new(0.0, 10_000.0, 50.0)).unwrap();
+    assert!(r.wait_seconds >= 4_800.0, "wait {}", r.wait_seconds);
+    // After proc 0 repairs at 5000 the app continues on 1 proc.
+    assert!(r.useful_work > 0.0);
+}
+
+#[test]
+fn segment_ends_during_wait() {
+    let trace = FailureTrace::new(vec![vec![(10.0, 9_000.0)]], 1e6).unwrap();
+    let app = flat_app(1, 5.0);
+    let policy = ReschedulingPolicy::greedy(1);
+    let sim = Simulator::new(&trace, &app, &policy);
+    let r = sim.run(&SimConfig::new(0.0, 1_000.0, 50.0)).unwrap();
+    // Only the first 10 s were usable; no checkpoint completes (55 s cycle).
+    assert_eq!(r.checkpoints, 0);
+    assert!(r.wait_seconds >= 990.0 - 1e-9);
+}
+
+#[test]
+fn one_proc_system_stop_and_go() {
+    let trace = FailureTrace::new(
+        vec![vec![(200.0, 260.0), (500.0, 530.0), (900.0, 980.0)]],
+        1e6,
+    )
+    .unwrap();
+    let app = flat_app(1, 1.0);
+    let policy = ReschedulingPolicy::greedy(1);
+    let sim = Simulator::new(&trace, &app, &policy);
+    let r = sim.run(&SimConfig::new(0.0, 1_500.0, 30.0)).unwrap();
+    assert_eq!(r.failures, 3);
+    assert!(r.useful_work > 0.0);
+    let total = r.useful_seconds + r.lost_seconds + r.ckpt_seconds + r.recovery_seconds + r.wait_seconds;
+    assert!(total <= 1_500.0 * (1.0 + 1e-9));
+}
+
+#[test]
+fn capped_policy_survives_partial_outage() {
+    // Policy caps at 2 procs; 3 of 4 procs die; app continues on survivors.
+    let trace = FailureTrace::new(
+        vec![
+            vec![(100.0, 50_000.0)],
+            vec![(120.0, 50_000.0)],
+            vec![(140.0, 50_000.0)],
+            vec![],
+        ],
+        1e6,
+    )
+    .unwrap();
+    let rp = vec![1, 2, 2, 2];
+    let policy = ReschedulingPolicy::from_vector(rp).unwrap();
+    let app = flat_app(4, 2.0);
+    let sim = Simulator::new(&trace, &app, &policy);
+    let mut cfg = SimConfig::new(0.0, 2_000.0, 40.0);
+    cfg.record_timeline = true;
+    let r = sim.run(&cfg).unwrap();
+    // Eventually only proc 3 is alive: config drops to 1.
+    assert!(r.timeline.iter().any(|&(_, a)| a == 1));
+    assert!(r.useful_work > 0.0);
+}

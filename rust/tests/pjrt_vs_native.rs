@@ -1,0 +1,156 @@
+//! Integration: the AOT JAX/Pallas artifacts executed through PJRT must
+//! agree with the native Rust mirror to floating-point tolerance, across
+//! the parameter ranges the model uses.
+//!
+//! Skips (with a notice) when `artifacts/` has not been built — the native
+//! path is then the only engine and is already covered by unit tests.
+
+use malleable_ckpt::linalg::{expm, Matrix};
+use malleable_ckpt::markov::birth_death::bd_generator;
+use malleable_ckpt::markov::{BuildOptions, MalleableModel, ModelInputs};
+use malleable_ckpt::policies::ReschedulingPolicy;
+use malleable_ckpt::runtime::{native_chain_probs, ComputeEngine};
+use malleable_ckpt::config::SystemParams;
+use std::path::Path;
+
+fn pjrt() -> Option<ComputeEngine> {
+    let dir = Path::new("artifacts");
+    if dir.join("manifest.json").exists() {
+        Some(ComputeEngine::pjrt(dir).expect("artifacts present but engine failed"))
+    } else {
+        eprintln!("skipping: artifacts/ not built (run `make artifacts`)");
+        None
+    }
+}
+
+#[test]
+fn chain_probs_agree_across_parameter_grid() {
+    let Some(engine) = pjrt() else { return };
+    // Spans: spare-pool sizes across buckets, batch vs Condor rates,
+    // minute-to-day recovery windows.
+    let cases = [
+        (0usize, 64.0, 1e-6, 1e-3, 600.0),
+        (3, 4.0, 5e-6, 3e-4, 3_600.0),
+        (7, 1.0, 2e-6, 4e-4, 40_000.0),
+        (15, 16.0, 1.8e-6, 3.0e-4, 70_000.0),
+        (20, 108.0, 1.1e-7, 3.0e-4, 100_000.0),
+        (63, 65.0, 1.8e-6, 1.3e-4, 20_000.0),
+        (130, 120.0, 2.2e-6, 2.0e-4, 7_200.0),
+    ];
+    for (s_max, a, lam, theta, delta) in cases {
+        let r = bd_generator(s_max, lam, theta);
+        let a_lam = a * lam;
+        let native = native_chain_probs(&r, a_lam, delta);
+        let aot = engine.chain_probs(&r, a_lam, delta).unwrap();
+        for (name, n, p) in [
+            ("q_delta", &native.q_delta, &aot.q_delta),
+            ("q_up", &native.q_up, &aot.q_up),
+            ("q_rec", &native.q_rec, &aot.q_rec),
+        ] {
+            let diff = n.max_abs_diff(p);
+            assert!(
+                diff < 1e-9,
+                "{name} mismatch {diff} at s_max={s_max} a={a} delta={delta}"
+            );
+        }
+    }
+}
+
+#[test]
+fn chain_fast_artifact_agrees_with_native_fast_path() {
+    let Some(engine) = pjrt() else { return };
+    for (s_max, a, lam, theta, delta) in [
+        (0usize, 8.0, 1e-6, 1e-3, 600.0),
+        (9, 32.0, 2.5e-6, 3.5e-4, 12_345.0),
+        (63, 65.0, 1.8e-6, 1.3e-4, 20_000.0),
+        (200, 311.0, 1.7e-6, 1.45e-4, 40_000.0),
+    ] {
+        let native = malleable_ckpt::runtime::native_chain_probs_fast(
+            s_max,
+            lam,
+            theta,
+            a * lam,
+            delta,
+        );
+        let aot = engine
+            .chain_probs_spares(s_max, lam, theta, a * lam, delta)
+            .unwrap();
+        for (name, n, p) in [
+            ("q_delta", &native.q_delta, &aot.q_delta),
+            ("q_up", &native.q_up, &aot.q_up),
+            ("q_rec", &native.q_rec, &aot.q_rec),
+        ] {
+            let diff = n.max_abs_diff(p);
+            assert!(diff < 1e-9, "{name} mismatch {diff} at s_max={s_max}");
+        }
+    }
+}
+
+#[test]
+fn expm_agrees_across_buckets() {
+    let Some(engine) = pjrt() else { return };
+    for s_max in [0usize, 5, 12, 40, 100] {
+        let r = bd_generator(s_max, 3e-6, 4e-4);
+        let native = expm(&r.scale(50_000.0));
+        let aot = engine.expm_scaled(&r, 50_000.0).unwrap();
+        let diff = native.max_abs_diff(&aot);
+        assert!(diff < 1e-9, "expm mismatch {diff} at s_max={s_max}");
+    }
+}
+
+#[test]
+fn full_model_uwt_engine_invariant() {
+    let Some(engine) = pjrt() else { return };
+    let native = ComputeEngine::native();
+    let system = SystemParams::new(12, 1.0 / (3.0 * 86_400.0), 1.0 / 2_400.0);
+    let inputs = ModelInputs::from_raw(
+        system,
+        vec![45.0; 12],
+        (1..=12).map(|a| (a as f64).powf(0.8)).collect(),
+        vec![18.0; 12],
+        ReschedulingPolicy::greedy(12),
+    )
+    .unwrap();
+    for interval in [600.0, 3_600.0, 21_600.0] {
+        let opts = BuildOptions::default();
+        let m_native = MalleableModel::build(&inputs, &native, interval, &opts).unwrap();
+        let m_pjrt = MalleableModel::build(&inputs, &engine, interval, &opts).unwrap();
+        let rel = ((m_native.uwt() - m_pjrt.uwt()) / m_native.uwt()).abs();
+        assert!(
+            rel < 1e-9,
+            "UWT differs across engines at I={interval}: native {} pjrt {} (rel {rel})",
+            m_native.uwt(),
+            m_pjrt.uwt()
+        );
+        assert_eq!(m_native.n_states(), m_pjrt.n_states());
+    }
+}
+
+#[test]
+fn padding_inert_through_pjrt() {
+    let Some(engine) = pjrt() else { return };
+    // s_max = 9 pads into the 16-bucket; results must equal the unpadded
+    // native computation on the live block (padding inertness through the
+    // whole AOT path, not just the python unit test).
+    let r = bd_generator(9, 2.5e-6, 3.5e-4);
+    let native = native_chain_probs(&r, 32.0 * 2.5e-6, 12_345.0);
+    let aot = engine.chain_probs(&r, 32.0 * 2.5e-6, 12_345.0).unwrap();
+    assert_eq!(aot.q_delta.rows(), 10);
+    assert!(native.q_delta.max_abs_diff(&aot.q_delta) < 1e-10);
+    // Rows remain stochastic after the pad/unpad round trip.
+    for i in 0..10 {
+        let s: f64 = aot.q_rec.row(i).iter().sum();
+        assert!((s - 1.0).abs() < 1e-9);
+    }
+}
+
+#[test]
+fn identity_behaviour_zero_generator() {
+    let Some(engine) = pjrt() else { return };
+    // S = 0: the 1x1 zero generator must give exactly [[1.0]] matrices.
+    let r = Matrix::zeros(1, 1);
+    let cm = engine.chain_probs(&r, 1e-4, 3_600.0).unwrap();
+    for q in [&cm.q_delta, &cm.q_up, &cm.q_rec] {
+        assert!((q[(0, 0)] - 1.0).abs() < 1e-12);
+    }
+}

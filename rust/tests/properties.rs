@@ -1,0 +1,201 @@
+//! Property-based integration tests over coordinator invariants, using the
+//! in-repo property harness (`util::prop`): routing (policy/state space),
+//! model stochasticity, UWT bounds, simulator accounting, search sanity.
+
+use malleable_ckpt::apps::AppProfile;
+use malleable_ckpt::config::SystemParams;
+use malleable_ckpt::markov::{BuildOptions, MalleableModel, ModelInputs, StateSpace};
+use malleable_ckpt::policies::ReschedulingPolicy;
+use malleable_ckpt::runtime::ComputeEngine;
+use malleable_ckpt::simulator::{SimConfig, Simulator};
+use malleable_ckpt::traces::synth::{generate, SynthSpec};
+use malleable_ckpt::util::prop::{check, check_bool, Gen, Outcome};
+use malleable_ckpt::util::rng::Rng;
+
+/// Random valid rescheduling policy over N processors.
+fn random_policy(g: &mut Gen, n: usize) -> ReschedulingPolicy {
+    let style = g.int_in(0, 2);
+    let rp: Vec<usize> = (1..=n)
+        .map(|t| match style {
+            0 => t,                                  // greedy
+            1 => t.min(g.int_in(1, n).max(1)),       // capped
+            _ => (t / 2).max(1),                     // half
+        })
+        .collect();
+    ReschedulingPolicy::from_vector(rp).unwrap()
+}
+
+fn random_inputs(g: &mut Gen) -> (ModelInputs, f64) {
+    let n = g.int_in(2, 14);
+    let lam = g.log_uniform(1e-8, 1e-4);
+    let theta = g.log_uniform(1e-5, 1e-2);
+    let system = SystemParams::new(n, lam, theta);
+    let policy = random_policy(g, n);
+    let ckpt: Vec<f64> = (1..=n).map(|_| g.f64_in(1.0, 300.0)).collect();
+    let work: Vec<f64> = (1..=n).map(|a| (a as f64).powf(g.f64_in(0.3, 1.0))).collect();
+    let rec: Vec<f64> = (1..=n).map(|_| g.f64_in(5.0, 60.0)).collect();
+    let interval = g.log_uniform(60.0, 200_000.0);
+    (
+        ModelInputs::from_raw(system, ckpt, work, rec, policy).unwrap(),
+        interval,
+    )
+}
+
+#[test]
+fn prop_state_space_counts() {
+    // |states| = Σ_{a ∈ image} (N − a + 1) + N + 1 for any valid policy.
+    check_bool("state-space-counts", 0xA11CE, 60, |g| {
+        let n = g.int_in(1, 24);
+        (n, random_policy(g, n))
+    }, |(n, policy)| {
+        let ss = StateSpace::build(*n, policy);
+        let expect_up: usize = policy.image().iter().map(|&a| n - a + 1).sum();
+        ss.up_count() == expect_up && ss.recovery_count() == *n && ss.len() == expect_up + n + 1
+    });
+}
+
+#[test]
+fn prop_transition_matrix_stochastic() {
+    let engine = ComputeEngine::native();
+    check("stochastic-rows", 0xBEEF, 25, random_inputs, |(inputs, interval)| {
+        let m = match MalleableModel::build(inputs, &engine, *interval, &BuildOptions::default()) {
+            Ok(m) => m,
+            Err(e) => return Outcome::Fail(format!("build failed: {e}")),
+        };
+        match m.transitions().check_stochastic(1e-9) {
+            Ok(()) => Outcome::Pass,
+            Err(e) => Outcome::Fail(e),
+        }
+    });
+}
+
+#[test]
+fn prop_uwt_bounded_by_work_rates() {
+    let engine = ComputeEngine::native();
+    check("uwt-bounds", 0xCAFE, 25, random_inputs, |(inputs, interval)| {
+        let m = match MalleableModel::build(inputs, &engine, *interval, &BuildOptions::default()) {
+            Ok(m) => m,
+            Err(e) => return Outcome::Fail(format!("build failed: {e}")),
+        };
+        let n = inputs.system.n;
+        let max_rate = (1..=n).map(|a| inputs.work_per_sec(a)).fold(0.0, f64::max);
+        let u = m.uwt();
+        if u >= 0.0 && u <= max_rate + 1e-12 {
+            Outcome::Pass
+        } else {
+            Outcome::Fail(format!("UWT {u} outside [0, {max_rate}]"))
+        }
+    });
+}
+
+#[test]
+fn prop_stationary_sums_to_one() {
+    let engine = ComputeEngine::native();
+    check("pi-normalized", 0xD00D, 20, random_inputs, |(inputs, interval)| {
+        let m = match MalleableModel::build(inputs, &engine, *interval, &BuildOptions::default()) {
+            Ok(m) => m,
+            Err(e) => return Outcome::Fail(format!("build failed: {e}")),
+        };
+        let s: f64 = m.stationary_distribution().iter().sum();
+        if (s - 1.0).abs() < 1e-8 && m.stationary_distribution().iter().all(|&x| x >= -1e-15) {
+            Outcome::Pass
+        } else {
+            Outcome::Fail(format!("pi sums to {s}"))
+        }
+    });
+}
+
+#[test]
+fn prop_simulator_time_accounting() {
+    // useful + lost + ckpt + recovery + wait ≈ duration (within slack for
+    // the final partial cycle) and never exceeds it.
+    check("sim-accounting", 0x51AB, 30, |g| {
+        let n = g.int_in(2, 12);
+        let lam = g.log_uniform(1e-7, 1e-4);
+        let theta = g.log_uniform(1e-4, 1e-2);
+        let days = g.f64_in(2.0, 30.0);
+        let interval = g.log_uniform(120.0, 50_000.0);
+        let seed = g.rng.next_u64();
+        (n, lam, theta, days, interval, seed)
+    }, |&(n, lam, theta, days, interval, seed)| {
+        let mut rng = Rng::new(seed);
+        let horizon = (days + 10.0) * 86_400.0;
+        let trace = generate(&SynthSpec::exponential(n, lam, theta, horizon), &mut rng);
+        let app = AppProfile::md(n);
+        let policy = ReschedulingPolicy::greedy(n);
+        let sim = Simulator::new(&trace, &app, &policy);
+        let cfg = SimConfig::new(86_400.0, days * 86_400.0, interval);
+        let r = match sim.run(&cfg) {
+            Ok(r) => r,
+            Err(e) => return Outcome::Fail(format!("sim failed: {e}")),
+        };
+        let total =
+            r.useful_seconds + r.lost_seconds + r.ckpt_seconds + r.recovery_seconds + r.wait_seconds;
+        if total > cfg.duration * (1.0 + 1e-9) {
+            return Outcome::Fail(format!("accounted {total} > duration {}", cfg.duration));
+        }
+        if total < cfg.duration * 0.9 {
+            return Outcome::Fail(format!("unaccounted time: {total} vs {}", cfg.duration));
+        }
+        if r.useful_work < 0.0 {
+            return Outcome::Fail("negative useful work".into());
+        }
+        Outcome::Pass
+    });
+}
+
+#[test]
+fn prop_elimination_never_changes_uwt_much() {
+    let engine = ComputeEngine::native();
+    check("elimination-error", 0xE11E, 15, random_inputs, |(inputs, interval)| {
+        let full = BuildOptions { thres: None, ..Default::default() };
+        let red = BuildOptions::default();
+        let m_full = match MalleableModel::build(inputs, &engine, *interval, &full) {
+            Ok(m) => m,
+            Err(e) => return Outcome::Fail(format!("{e}")),
+        };
+        let m_red = match MalleableModel::build(inputs, &engine, *interval, &red) {
+            Ok(m) => m,
+            Err(e) => return Outcome::Fail(format!("{e}")),
+        };
+        let rel = ((m_full.uwt() - m_red.uwt()) / m_full.uwt().max(1e-300)).abs();
+        if rel < 0.05 {
+            Outcome::Pass
+        } else {
+            Outcome::Fail(format!("reduction error {rel} (thres 6e-4)"))
+        }
+    });
+}
+
+#[test]
+fn prop_policy_image_respected_by_simulator() {
+    // Every configuration the simulator runs on must be in the policy image.
+    check("sim-respects-policy", 0x90CC, 20, |g| {
+        let n = g.int_in(2, 10);
+        let seed = g.rng.next_u64();
+        (n, seed)
+    }, |&(n, seed)| {
+        let mut rng = Rng::new(seed);
+        let trace = generate(
+            &SynthSpec::exponential(n, 1.0 / 86_400.0, 1.0 / 1_800.0, 20.0 * 86_400.0),
+            &mut rng,
+        );
+        let rp: Vec<usize> = (1..=n).map(|t| (t / 2).max(1)).collect();
+        let policy = ReschedulingPolicy::from_vector(rp).unwrap();
+        let app = AppProfile::cg(n);
+        let sim = Simulator::new(&trace, &app, &policy);
+        let mut cfg = SimConfig::new(0.0, 10.0 * 86_400.0, 1_800.0);
+        cfg.record_timeline = true;
+        let r = match sim.run(&cfg) {
+            Ok(r) => r,
+            Err(e) => return Outcome::Fail(format!("{e}")),
+        };
+        let image = policy.image();
+        for &(_, a) in &r.timeline {
+            if a != 0 && !image.contains(&a) {
+                return Outcome::Fail(format!("ran on {a} procs, image {image:?}"));
+            }
+        }
+        Outcome::Pass
+    });
+}
