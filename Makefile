@@ -1,0 +1,24 @@
+# Tier-1 verification and perf tracking for the malleable-ckpt repo.
+
+.PHONY: verify build test bench-smoke bench clean
+
+# Tier-1: release build + full test suite (see ROADMAP.md).
+verify: build test
+
+build:
+	cargo build --release
+
+test:
+	cargo test -q
+
+# Short smoke bench: regenerates BENCH_perf.json at the repo root with the
+# reduced size grid, so perf regressions show up in every PR.
+bench-smoke:
+	cargo bench --bench perf -- --smoke
+
+# Full perf sweep, paper scale (N = 512 included). Slow.
+bench:
+	cargo bench --bench perf
+
+clean:
+	cargo clean

@@ -1,135 +1,268 @@
 //! `cargo bench --bench perf` — performance benchmarks for the three
-//! layers (EXPERIMENTS.md §Perf records the before/after iterations):
+//! layers, tracking the optimized engines against the preserved seed
+//! baselines (identical numerics, so every speedup is apples-to-apples):
 //!
 //! * L1/L2: chain-matrix evaluation (AOT artifacts via PJRT vs the native
 //!   mirror) across bucket sizes;
-//! * L3: sparse assembly, stationary solve, full model build at paper
-//!   scale (N = 128/256/512), simulator event throughput.
+//! * L3: full model build at paper scale, the incremental `ModelBuilder`
+//!   vs from-scratch probe builds, the indexed simulator vs the reference
+//!   simulator at N = 128/256/512, serial vs parallel sweeps, cached vs
+//!   uncached interval search, and an end-to-end experiment-suite slice
+//!   (`run_segments` vs `run_segments_reference`).
+//!
+//! Writes a machine-readable `BENCH_perf.json` at the repo root so the
+//! perf trajectory is tracked PR over PR (`make bench-smoke` regenerates
+//! it with `--smoke`, a reduced grid that skips the N = 512 rows).
 
 use malleable_ckpt::apps::AppProfile;
-use malleable_ckpt::config::SystemParams;
+use malleable_ckpt::config::{paper_system, SystemParams};
+use malleable_ckpt::experiments::common::{run_segments, run_segments_reference};
+use malleable_ckpt::experiments::ExperimentOptions;
 use malleable_ckpt::markov::birth_death::bd_generator;
-use malleable_ckpt::markov::{BuildOptions, MalleableModel, ModelInputs};
+use malleable_ckpt::markov::{BuildOptions, MalleableModel, ModelBuilder, ModelInputs};
 use malleable_ckpt::policies::ReschedulingPolicy;
 use malleable_ckpt::runtime::{native_chain_probs, native_chain_probs_fast, ComputeEngine};
+use malleable_ckpt::search::{select_interval, select_interval_uncached, SearchConfig};
 use malleable_ckpt::simulator::{SimConfig, Simulator};
 use malleable_ckpt::traces::synth::{generate, SynthSpec};
-use malleable_ckpt::util::bench::{bench, bench_once, header};
+use malleable_ckpt::util::bench::{bench, bench_once, header, BenchResult};
+use malleable_ckpt::util::json::Json;
+use malleable_ckpt::util::pool;
 use malleable_ckpt::util::rng::Rng;
 
+const DAY: f64 = 86_400.0;
+
+fn qr_inputs(n: usize, lam: f64, theta: f64) -> ModelInputs {
+    let sys = SystemParams::new(n, lam, theta);
+    let app = AppProfile::qr(n);
+    let policy = ReschedulingPolicy::greedy(n);
+    ModelInputs::new(sys, &app, &policy).unwrap()
+}
+
+/// (baseline, optimized) → report object, printed and returned.
+fn speedup_obj(label: &str, baseline: &BenchResult, optimized: &BenchResult) -> Json {
+    let speedup = baseline.min_s / optimized.min_s.max(1e-12);
+    println!("    => {label}: {speedup:.2}x");
+    let mut o = Json::obj();
+    o.set("baseline_s", Json::from(baseline.min_s))
+        .set("optimized_s", Json::from(optimized.min_s))
+        .set("speedup", Json::from(speedup));
+    o
+}
+
 fn main() {
-    let day = 86_400.0;
-    let (lam, theta) = (1.0 / (6.0 * day), 1.0 / 3_300.0);
+    let smoke = std::env::args().any(|a| a == "--smoke");
+    let (lam, theta) = (1.0 / (6.0 * DAY), 1.0 / 3_300.0);
+    let mut report = Json::obj();
+    report
+        .set("bench", Json::from("perf"))
+        .set("mode", Json::from(if smoke { "smoke" } else { "full" }))
+        .set("workers", Json::from(pool::default_workers()));
 
     // --- L1/L2: chain matrices — generic expm vs Ehrenfest closed form,
     // native vs AOT/PJRT ---------------------------------------------------
-    header("L1/L2: chain matrices (q_delta, q_up, q_rec) per chain");
-    let pjrt = match ComputeEngine::pjrt(std::path::Path::new("artifacts")) {
-        Ok(e) => Some(e),
-        Err(e) => {
-            println!("(pjrt unavailable: {e}; run `make artifacts`)");
-            None
-        }
-    };
-    for s_max in [15usize, 63, 127, 255, 511] {
-        let a_lam = 64.0 * lam;
-        if s_max <= 127 {
-            // Generic path is O(n^3 log ||R d||): skip the huge sizes.
-            let r = bd_generator(s_max, lam, theta);
-            bench(&format!("native generic expm S={s_max}"), 1, 8, 10.0, || {
-                std::hint::black_box(native_chain_probs(&r, a_lam, 40_000.0));
+    if !smoke {
+        header("L1/L2: chain matrices (q_delta, q_up, q_rec) per chain");
+        let pjrt = match ComputeEngine::pjrt(std::path::Path::new("artifacts")) {
+            Ok(e) => Some(e),
+            Err(e) => {
+                println!("(pjrt unavailable: {e}; run `make artifacts`)");
+                None
+            }
+        };
+        for s_max in [15usize, 63, 127, 255, 511] {
+            let a_lam = 64.0 * lam;
+            if s_max <= 127 {
+                // Generic path is O(n^3 log ||R d||): skip the huge sizes.
+                let r = bd_generator(s_max, lam, theta);
+                bench(&format!("native generic expm S={s_max}"), 1, 8, 10.0, || {
+                    std::hint::black_box(native_chain_probs(&r, a_lam, 40_000.0));
+                });
+            }
+            bench(&format!("native ehrenfest    S={s_max}"), 1, 16, 10.0, || {
+                std::hint::black_box(native_chain_probs_fast(s_max, lam, theta, a_lam, 40_000.0));
             });
-        }
-        bench(&format!("native ehrenfest    S={s_max}"), 1, 16, 10.0, || {
-            std::hint::black_box(native_chain_probs_fast(s_max, lam, theta, a_lam, 40_000.0));
-        });
-        if let Some(ComputeEngine::Pjrt(e)) = pjrt.as_ref().map(|e| e as &ComputeEngine) {
-            bench(&format!("pjrt   chain_fast   S={s_max}"), 1, 8, 10.0, || {
-                std::hint::black_box(
-                    e.chain_probs_spares(s_max, lam, theta, a_lam, 40_000.0).unwrap(),
-                );
-            });
+            if let Some(ComputeEngine::Pjrt(e)) = pjrt.as_ref().map(|e| e as &ComputeEngine) {
+                bench(&format!("pjrt   chain_fast   S={s_max}"), 1, 8, 10.0, || {
+                    std::hint::black_box(
+                        e.chain_probs_spares(s_max, lam, theta, a_lam, 40_000.0).unwrap(),
+                    );
+                });
+            }
         }
     }
 
     // --- L3: model build at paper scale --------------------------------
     header("L3: full model build (assemble + reduce + stationary + UWT)");
-    for n in [64usize, 128, 256] {
-        let sys = SystemParams::new(n, lam, theta);
-        let app = AppProfile::qr(n);
-        let policy = ReschedulingPolicy::greedy(n);
-        let inputs = ModelInputs::new(sys, &app, &policy).unwrap();
+    let build_sizes: &[usize] = if smoke { &[64, 128] } else { &[64, 128, 256, 512] };
+    let mut builds = Json::obj();
+    for &n in build_sizes {
+        let inputs = qr_inputs(n, lam, theta);
         let engine = ComputeEngine::native();
-        bench_once(&format!("model build N={n} (native)"), || {
+        let r = bench_once(&format!("model build N={n} (native)"), || {
             let m = MalleableModel::build(&inputs, &engine, 3_600.0, &BuildOptions::default())
                 .unwrap();
             std::hint::black_box(m.uwt());
         });
+        builds.set(&format!("n{n}_s"), Json::from(r.min_s));
     }
-    // Paper's headline cost: one model run at N=512 "2-10 minutes" in
-    // MATLAB; target here is far below.
-    {
-        let n = 512usize;
-        let sys = SystemParams::new(n, lam, theta);
-        let app = AppProfile::qr(n);
-        let policy = ReschedulingPolicy::greedy(n);
-        let inputs = ModelInputs::new(sys, &app, &policy).unwrap();
-        let engine = ComputeEngine::native();
-        bench_once("model build N=512 (native, paper: 2-10 min)", || {
+    if !smoke {
+        // Pre-optimization baseline for the record: the generic expm path
+        // the paper's MATLAB used (N=512: "2-10 minutes" there).
+        let inputs = qr_inputs(512, lam, theta);
+        let engine = ComputeEngine::native_generic();
+        let r = bench_once("model build N=512 (native generic expm baseline)", || {
             let m = MalleableModel::build(&inputs, &engine, 3_600.0, &BuildOptions::default())
                 .unwrap();
             std::hint::black_box(m.uwt());
         });
-        if let Ok(engine) = ComputeEngine::pjrt(std::path::Path::new("artifacts")) {
-            bench_once("model build N=512 (pjrt chain_fast)", || {
-                let m = MalleableModel::build(&inputs, &engine, 3_600.0, &BuildOptions::default())
+        builds.set("n512_generic_s", Json::from(r.min_s));
+    }
+    report.set("model_build", builds);
+
+    // --- L3: incremental ModelBuilder vs from-scratch probe builds ------
+    header("L3: ModelBuilder (cached) vs from-scratch, 4 probe intervals");
+    let probe_sizes: &[usize] = if smoke { &[64, 128] } else { &[128, 256, 512] };
+    let intervals = [900.0, 1_800.0, 3_600.0, 7_200.0];
+    let mut builder_cmp = Json::obj();
+    for &n in probe_sizes {
+        let inputs = qr_inputs(n, lam, theta);
+        let engine = ComputeEngine::native();
+        let scratch = bench_once(&format!("4 probes N={n} from-scratch"), || {
+            for &i in &intervals {
+                let m = MalleableModel::build(&inputs, &engine, i, &BuildOptions::default())
                     .unwrap();
                 std::hint::black_box(m.uwt());
-            });
-        }
-        // Pre-optimization baseline for EXPERIMENTS.md §Perf: the generic
-        // expm path the paper's MATLAB used.
-        let engine = ComputeEngine::native_generic();
-        bench_once("model build N=512 (native generic expm baseline)", || {
-            let m = MalleableModel::build(&inputs, &engine, 3_600.0, &BuildOptions::default())
-                .unwrap();
-            std::hint::black_box(m.uwt());
+            }
         });
+        let cached = bench_once(&format!("4 probes N={n} ModelBuilder"), || {
+            let b = ModelBuilder::new(&inputs, &engine, &BuildOptions::default()).unwrap();
+            for &i in &intervals {
+                std::hint::black_box(b.uwt(i).unwrap());
+            }
+        });
+        builder_cmp.set(&format!("n{n}"), speedup_obj(&format!("builder N={n}"), &scratch, &cached));
     }
+    report.set("model_builder", builder_cmp);
 
-    // --- L3: simulator throughput ---------------------------------------
-    header("L3: simulator");
-    let mut rng = Rng::new(99);
-    let trace = generate(&SynthSpec::exponential(128, lam, theta, 120.0 * day), &mut rng);
-    let app = AppProfile::qr(128);
-    let policy = ReschedulingPolicy::greedy(128);
-    let sim = Simulator::new(&trace, &app, &policy);
-    bench("simulate 80 days @128 procs (I=1.53h)", 1, 16, 15.0, || {
-        let cfg = SimConfig::new(5.0 * day, 80.0 * day, 1.53 * 3_600.0);
-        std::hint::black_box(sim.run(&cfg).unwrap());
-    });
-    bench("simulate sweep 16 intervals (20 days)", 1, 8, 15.0, || {
-        let cfg = SimConfig::new(5.0 * day, 20.0 * day, 3_600.0);
-        let grid: Vec<f64> = (0..16).map(|i| 300.0 * (1.5f64).powi(i)).collect();
-        std::hint::black_box(sim.sweep(&cfg, &grid).unwrap());
-    });
-
-    // --- L3: interval search end-to-end ---------------------------------
-    header("L3: interval search (doubling + refinement)");
-    for n in [32usize, 128] {
-        let sys = SystemParams::new(n, lam, theta);
+    // --- L3: simulator — indexed engine vs reference --------------------
+    header("L3: simulator (indexed vs reference)");
+    let sim_sizes: &[usize] = if smoke { &[128] } else { &[128, 256, 512] };
+    let sim_days = if smoke { 50.0 } else { 120.0 };
+    let run_days = if smoke { 40.0 } else { 80.0 };
+    let mut sim_cmp = Json::obj();
+    for &n in sim_sizes {
+        let mut rng = Rng::new(99);
+        let trace = generate(&SynthSpec::exponential(n, lam, theta, sim_days * DAY), &mut rng);
         let app = AppProfile::qr(n);
         let policy = ReschedulingPolicy::greedy(n);
-        let inputs = ModelInputs::new(sys, &app, &policy).unwrap();
+        let sim = Simulator::new(&trace, &app, &policy);
+        let cfg = SimConfig::new(5.0 * DAY, run_days * DAY, 1.53 * 3_600.0);
+        let reference = bench(&format!("simulate {run_days:.0} d @{n} (reference)"), 1, 8, 10.0, || {
+            std::hint::black_box(sim.run_reference(&cfg).unwrap());
+        });
+        let indexed = bench(&format!("simulate {run_days:.0} d @{n} (indexed)"), 1, 16, 10.0, || {
+            std::hint::black_box(sim.run(&cfg).unwrap());
+        });
+        sim_cmp.set(&format!("n{n}"), speedup_obj(&format!("simulator N={n}"), &reference, &indexed));
+    }
+    report.set("simulator", sim_cmp);
+
+    // --- L3: sweep — serial vs thread-pool parallel ---------------------
+    header("L3: interval sweep (serial vs sweep_par, 16 intervals)");
+    {
+        let n = 128usize;
+        let mut rng = Rng::new(99);
+        let trace = generate(&SynthSpec::exponential(n, lam, theta, sim_days * DAY), &mut rng);
+        let app = AppProfile::qr(n);
+        let policy = ReschedulingPolicy::greedy(n);
+        let sim = Simulator::new(&trace, &app, &policy);
+        let cfg = SimConfig::new(5.0 * DAY, 20.0 * DAY, 3_600.0);
+        let grid: Vec<f64> = (0..16).map(|i| 300.0 * (1.5f64).powi(i)).collect();
+        let serial = bench("sweep 16 intervals (serial)", 1, 8, 15.0, || {
+            std::hint::black_box(sim.sweep(&cfg, &grid).unwrap());
+        });
+        let par = bench("sweep 16 intervals (sweep_par)", 1, 8, 15.0, || {
+            std::hint::black_box(sim.sweep_par(&cfg, &grid).unwrap());
+        });
+        report.set("sweep", speedup_obj("sweep_par", &serial, &par));
+    }
+
+    // --- L3: interval search — cached vs uncached ------------------------
+    header("L3: interval search (doubling + refinement)");
+    let search_sizes: &[usize] = if smoke { &[32, 64] } else { &[32, 128, 256] };
+    let mut search_cmp = Json::obj();
+    for &n in search_sizes {
+        let inputs = qr_inputs(n, lam, theta);
         let engine = ComputeEngine::native();
-        bench_once(&format!("select_interval N={n} (native)"), || {
-            let cfg = malleable_ckpt::search::SearchConfig {
-                refine_steps: 2,
-                ..Default::default()
-            };
+        let cfg = SearchConfig { refine_steps: 2, ..Default::default() };
+        let uncached = bench_once(&format!("select_interval N={n} (uncached)"), || {
+            std::hint::black_box(select_interval_uncached(&inputs, &engine, &cfg).unwrap());
+        });
+        let cached = bench_once(&format!("select_interval N={n} (cached)"), || {
+            std::hint::black_box(select_interval(&inputs, &engine, &cfg).unwrap());
+        });
+        search_cmp.set(&format!("n{n}"), speedup_obj(&format!("search N={n}"), &uncached, &cached));
+    }
+    report.set("search", search_cmp);
+
+    // --- L3: end-to-end experiment-suite slice --------------------------
+    // The acceptance metric: run_segments (parallel segments + cached
+    // search + indexed simulator + parallel oracle sweeps) against the
+    // seed path on the same pre-drawn segments. Both consume identical
+    // RNG streams and produce identical aggregates.
+    header("L3: experiment-suite slice (run_segments vs seed path)");
+    let suite_opts = {
+        let mut o = ExperimentOptions::default();
+        o.segments = if smoke { 2 } else { 3 };
+        o.trace_days = if smoke { 60.0 } else { 120.0 };
+        o
+    };
+    let suite_systems: &[&str] = if smoke { &["condor/64"] } else { &["condor/64", "system-1/128", "condor/128"] };
+    let mut suite = Json::obj();
+    let mut total_base = 0.0f64;
+    let mut total_opt = 0.0f64;
+    for &name in suite_systems {
+        let sys = paper_system(name).unwrap();
+        let mut rng = Rng::new(2017);
+        let trace = generate(
+            &SynthSpec::exponential(sys.n, sys.lambda, sys.theta, suite_opts.trace_days * DAY),
+            &mut rng,
+        );
+        let app = AppProfile::qr(sys.n);
+        let policy = ReschedulingPolicy::greedy(sys.n);
+        let engine = ComputeEngine::native();
+        let mut rng_base = Rng::new(42);
+        let mut rng_opt = Rng::new(42);
+        let baseline = bench_once(&format!("suite {name} (seed path)"), || {
             std::hint::black_box(
-                malleable_ckpt::search::select_interval(&inputs, &engine, &cfg).unwrap(),
+                run_segments_reference(&trace, &app, &policy, &engine, &sys, &suite_opts, &mut rng_base)
+                    .unwrap()
+                    .mean_efficiency(),
             );
         });
+        let optimized = bench_once(&format!("suite {name} (optimized)"), || {
+            std::hint::black_box(
+                run_segments(&trace, &app, &policy, &engine, &sys, &suite_opts, &mut rng_opt)
+                    .unwrap()
+                    .mean_efficiency(),
+            );
+        });
+        total_base += baseline.min_s;
+        total_opt += optimized.min_s;
+        let key = name.replace('/', "_");
+        suite.set(&key, speedup_obj(&format!("suite {name}"), &baseline, &optimized));
+    }
+    let overall = total_base / total_opt.max(1e-12);
+    println!("\n  overall suite speedup: {overall:.2}x (baseline {total_base:.2} s -> {total_opt:.2} s)");
+    suite.set("overall_baseline_s", Json::from(total_base));
+    suite.set("overall_optimized_s", Json::from(total_opt));
+    suite.set("overall_speedup", Json::from(overall));
+    report.set("suite", suite);
+
+    let path = "BENCH_perf.json";
+    match std::fs::write(path, report.to_string_pretty(0)) {
+        Ok(()) => println!("\nwrote {path}"),
+        Err(e) => eprintln!("\nwarning: could not write {path}: {e}"),
     }
 }

@@ -3,12 +3,13 @@
 
 use crate::apps::AppProfile;
 use crate::config::SystemParams;
-use crate::metrics::{evaluate_segment, AggregateEvaluation};
+use crate::metrics::{evaluate_segment, evaluate_segment_reference, AggregateEvaluation, SegmentEvaluation};
 use crate::policies::ReschedulingPolicy;
 use crate::runtime::ComputeEngine;
 use crate::search::SearchConfig;
 use crate::traces::synth::{generate, SynthSpec};
 use crate::traces::FailureTrace;
+use crate::util::pool;
 use crate::util::rng::Rng;
 use anyhow::Result;
 
@@ -50,7 +51,32 @@ pub fn trace_for_system(sys: &SystemParams, days: f64, rng: &mut Rng) -> Failure
     )
 }
 
-/// Run `segments` random-segment evaluations of (trace, app, policy).
+/// Draw the `(start, duration)` of every random segment up front, in the
+/// exact order the seed's serial loop consumed the RNG — pre-drawing is
+/// what lets the evaluations run in parallel without changing any result.
+fn segment_params(trace: &FailureTrace, opts: &ExperimentOptions, rng: &mut Rng) -> Vec<(f64, f64)> {
+    (0..opts.segments)
+        .map(|_| {
+            let dur = rng.range(opts.dur_days.0, opts.dur_days.1) * 86_400.0;
+            let latest = (trace.horizon() - dur).max(0.0);
+            // Leave some history before the segment for rate estimation.
+            let start = rng.range(0.2 * latest, latest);
+            (start, dur)
+        })
+        .collect()
+}
+
+/// Run `segments` random-segment evaluations of (trace, app, policy),
+/// fanned out over the scoped thread pool (segments are independent; the
+/// RNG draws are made serially first, so results are identical to the
+/// seed's serial loop). PJRT engines are thread-affine and evaluate
+/// serially.
+///
+/// Memory note: each concurrent segment holds its own `ModelBuilder`
+/// caches for the duration of its interval search, so peak memory scales
+/// with `min(workers, segments)` — ~0.5 GB per concurrent segment at
+/// N = 512 (see `markov::builder`). Lower `opts.segments` or run the
+/// serial [`run_segments_reference`] on memory-constrained machines.
 pub fn run_segments(
     trace: &FailureTrace,
     app: &AppProfile,
@@ -60,13 +86,58 @@ pub fn run_segments(
     opts: &ExperimentOptions,
     rng: &mut Rng,
 ) -> Result<AggregateEvaluation> {
+    let params = segment_params(trace, opts, rng);
+    let workers = pool::default_workers().min(params.len().max(1));
+    let fallback = Some((sys.lambda, sys.theta));
+    let evals: Vec<Result<SegmentEvaluation>> = if engine.is_native() && workers > 1 {
+        // Hand each worker its own (zero-state) native engine handle: the
+        // engine value itself must not cross threads when it is PJRT.
+        let generic = matches!(*engine, ComputeEngine::NativeGeneric);
+        // Split the caller's worker budget between the segment fan-out and
+        // each segment's inner model-build pool instead of multiplying
+        // them (worker count affects scheduling only, never results).
+        let mut search_cfg = opts.search;
+        search_cfg.build.workers = (opts.search.build.workers / workers).max(1);
+        pool::map_slice(&params, workers, |&(start, dur)| {
+            let engine = if generic {
+                ComputeEngine::native_generic()
+            } else {
+                ComputeEngine::native()
+            };
+            evaluate_segment(trace, app, policy, &engine, start, dur, &search_cfg, fallback)
+        })
+    } else {
+        params
+            .iter()
+            .map(|&(start, dur)| {
+                evaluate_segment(trace, app, policy, engine, start, dur, &opts.search, fallback)
+            })
+            .collect()
+    };
     let mut agg = AggregateEvaluation::default();
-    for _ in 0..opts.segments {
-        let dur = rng.range(opts.dur_days.0, opts.dur_days.1) * 86_400.0;
-        let latest = (trace.horizon() - dur).max(0.0);
-        // Leave some history before the segment for rate estimation.
-        let start = rng.range(0.2 * latest, latest);
-        let eval = evaluate_segment(
+    for eval in evals {
+        agg.segments.push(eval?);
+    }
+    Ok(agg)
+}
+
+/// The seed's serial path over the same pre-drawn segments, evaluated
+/// through [`evaluate_segment_reference`] — the end-to-end baseline for
+/// `benches/perf.rs` and the equivalence suite. Consumes the RNG exactly
+/// like [`run_segments`].
+pub fn run_segments_reference(
+    trace: &FailureTrace,
+    app: &AppProfile,
+    policy: &ReschedulingPolicy,
+    engine: &ComputeEngine,
+    sys: &SystemParams,
+    opts: &ExperimentOptions,
+    rng: &mut Rng,
+) -> Result<AggregateEvaluation> {
+    let params = segment_params(trace, opts, rng);
+    let mut agg = AggregateEvaluation::default();
+    for &(start, dur) in &params {
+        let eval = evaluate_segment_reference(
             trace,
             app,
             policy,

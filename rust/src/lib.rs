@@ -21,7 +21,35 @@
 //!   sparse transition assembly, stationary analysis, interval search,
 //!   rescheduling policies, the simulator, baselines and the experiment
 //!   harness. The [`runtime`] module executes the AOT artifacts through the
-//!   PJRT CPU client; [`linalg`] provides a native oracle/fallback.
+//!   PJRT CPU client (behind the `pjrt` cargo feature); [`linalg`] provides
+//!   a native oracle/fallback.
+//!
+//! ## Evaluation engine
+//!
+//! The paper's results come from "a large number of simulations", so the
+//! evaluation path is engineered as a pipeline of compiled indices and
+//! incremental builders, each with its seed implementation preserved as an
+//! exactness oracle (`rust/tests/engine_equivalence.rs` pins optimized ==
+//! seed, float for float):
+//!
+//! * [`traces::TraceIndex`] compiles a failure trace once into a merged,
+//!   sorted global event timeline with an availability step function and
+//!   per-processor cursors; [`simulator::Simulator::run`] walks it with
+//!   amortized O(1), zero-allocation queries ([`simulator::Simulator::run_reference`]
+//!   is the seed path).
+//! * [`markov::ModelBuilder`] caches everything about `M^mall` that does
+//!   not depend on the checkpointing interval — state space, resolvent
+//!   bands, and every up-state row of `P^mall` — so each
+//!   [`search::select_interval`] probe only refreshes the `δ`-dependent
+//!   rates and re-solves ([`search::select_interval_uncached`] rebuilds per
+//!   probe).
+//! * Sweeps and experiment segments fan out over the [`util::pool`] scoped
+//!   thread pool ([`simulator::Simulator::sweep_par`],
+//!   [`experiments::common::run_segments`]); RNG draws are made serially
+//!   up front so parallel results are bit-identical to the serial ones.
+//! * `cargo bench --bench perf` tracks all of it and writes a
+//!   machine-readable `BENCH_perf.json` at the repo root (`make
+//!   bench-smoke` for the CI-sized grid).
 
 pub mod apps;
 pub mod baselines;

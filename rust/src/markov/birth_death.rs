@@ -10,7 +10,31 @@
 //! (0-indexed, unlike the paper's 1-indexed `[B:s]` numbering that counts
 //! from `S` down; the `S-i+1` index gymnastics of §II disappear).
 
-use crate::linalg::Matrix;
+use crate::linalg::{Matrix, Tridiag};
+
+/// Bands of the resolvent system `M = a_lambda·I − R` for a spare pool of
+/// size `s_max`, built directly from the rates (no dense generator).
+/// Strictly diagonally dominant, so the Thomas solve needs no pivoting.
+/// Shared by the native fast chain path and the incremental model builder
+/// — both must produce bitwise-identical solves.
+pub fn bd_resolvent_bands(s_max: usize, lambda: f64, theta: f64, a_lambda: f64) -> Tridiag {
+    let m = s_max + 1;
+    let mut dl = vec![0.0; m];
+    let mut dd = vec![0.0; m];
+    let mut du = vec![0.0; m];
+    for s in 0..m {
+        let fail = s as f64 * lambda;
+        let repair = (s_max - s) as f64 * theta;
+        if s > 0 {
+            dl[s] = -fail;
+        }
+        if s < m - 1 {
+            du[s] = -repair;
+        }
+        dd[s] = a_lambda + fail + repair;
+    }
+    Tridiag { dl, dd, du }
+}
 
 /// Dense (S+1)×(S+1) generator matrix `R` for a spare pool of size `s_max`.
 ///

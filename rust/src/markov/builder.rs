@@ -1,0 +1,577 @@
+//! Incremental model builder — amortizes everything about `M^mall` that
+//! does **not** depend on the checkpointing interval across repeated
+//! builds, so interval-search probes (a dozen per `select_interval`) stop
+//! paying the full from-scratch construction cost.
+//!
+//! What is interval-independent (cached once per [`ModelInputs`]):
+//!
+//! * the [`StateSpace`] and the chain grouping of state ids;
+//! * the tridiagonal bands of `M_a = aλI − R_a` per chain (the resolvent
+//!   system behind `Q^Up` and `Q^Rec`);
+//! * **every up-state row of `P^mall`**: an up state exits through
+//!   `Q^Up = aλ(aλI − R)^{-1}`, which does not contain `δ` — both the
+//!   sparsity pattern and the values of the bulk of the matrix (the
+//!   `N(N+1)/2` up states out of `N(N+1)/2 + N + 1`) are constant across
+//!   probes and are stored once in flat CSR-like form.
+//!
+//! What is refreshed per probe (`δ_a = R̄_a + I + C_a` changes with `I`):
+//! `Q^{S,δ} = expm(Rδ)` and `Q^Rec` per chain (computed in parallel over
+//! the scoped pool, one chain block resident at a time), the recovery-state
+//! rows, the §IV elimination mask (it thresholds `e^{−aλδ}·Q^{S,δ}`, so it
+//! is value-dependent — this is why the *compacted* pattern cannot be
+//! fully frozen), the per-state weight triples, and the stationary solve.
+//!
+//! The cached path reproduces [`MalleableModel::build`] **bit for bit**:
+//! identical operations in identical order (same Ehrenfest closed form,
+//! same Thomas solves, same pruning/elimination thresholds, same CSR entry
+//! order, same damped power iteration). `rust/tests/engine_equivalence.rs`
+//! asserts equality probe by probe.
+//!
+//! Memory: the cached up rows hold O(Σ_a (N−a+1)²) ≈ N³/3 entries — at
+//! N = 512 roughly 0.5 GB, comparable to the transient peak of a single
+//! from-scratch assembly. Above [`UP_ROW_CACHE_MAX`] entries the builder
+//! degrades gracefully: bands and state space stay cached, up rows are
+//! rebuilt per probe.
+
+use std::time::Instant;
+
+use anyhow::{ensure, Result};
+
+use super::ehrenfest;
+use super::model::{BuildOptions, MalleableModel, ModelInputs};
+use super::sparse::SparseBuilder;
+use super::states::{StateKind, StateSpace};
+use super::stationary::stationary;
+use super::transitions::{TransitionSystem, PRUNE_EPS, W3};
+use super::uwt;
+use crate::linalg::{tridiag_solve, Matrix, Tridiag};
+use crate::runtime::ComputeEngine;
+use crate::util::pool;
+
+/// Cached-up-row budget, in matrix entries. Σ_a (N−a+1)² stays below this
+/// for N ≤ ~570 under Greedy (~0.77 GB); larger systems rebuild up rows
+/// per probe instead of caching them.
+pub const UP_ROW_CACHE_MAX: usize = 64_000_000;
+
+/// Reusable builder for [`MalleableModel`]s over one [`ModelInputs`].
+///
+/// Construct once, then call [`ModelBuilder::build`] per interval. The
+/// fast cached path engages for [`ComputeEngine::Native`]; the generic
+/// and PJRT engines fall back to [`MalleableModel::build`] per probe
+/// (their chain matrices come fused from the artifact, so there is no
+/// interval-independent piece to reuse).
+pub struct ModelBuilder<'a> {
+    inputs: &'a ModelInputs,
+    engine: &'a ComputeEngine,
+    opts: BuildOptions,
+    cache: Option<NativeCache>,
+}
+
+/// Flat storage for the interval-independent up-state rows, indexed by
+/// state id (non-up ids have empty ranges). Columns are original state
+/// ids; the per-probe emit remaps them through the elimination mapping.
+struct UpRows {
+    offsets: Vec<usize>,
+    cols: Vec<u32>,
+    vals: Vec<f64>,
+}
+
+struct NativeCache {
+    space: StateSpace,
+    /// Distinct active counts, ascending.
+    chain_ids: Vec<usize>,
+    /// `chain_pos[a]` = index into `chain_ids` (usize::MAX when absent).
+    chain_pos: Vec<usize>,
+    /// State ids per chain, ascending (the seed assembly's visit order).
+    by_chain: Vec<Vec<usize>>,
+    /// δ-independent bands of `M_a = aλI − R_a` per chain.
+    bands: Vec<Tridiag>,
+    up_rows: Option<UpRows>,
+}
+
+/// Per-probe, per-chain output of the parallel chain pass.
+struct ChainOut {
+    /// Keep flag per spare count `s2` for this chain's up states
+    /// (empty when elimination is disabled).
+    keep_up: Vec<bool>,
+    eliminated: usize,
+    /// `(state id, row)` for this chain's recovery states.
+    rec_rows: Vec<(usize, Vec<(usize, f64)>)>,
+    /// Fresh `(state id, row)` for kept up states when the up-row cache
+    /// is disabled for size.
+    up_rows_fresh: Option<Vec<(usize, Vec<(usize, f64)>)>>,
+    /// Weight triples: up exit / recovery success / recovery failure.
+    up_w: W3,
+    rec_succ: W3,
+    rec_fail: W3,
+}
+
+/// Build the (pruned) row of one up state from its chain's `Q^Up`.
+fn up_row_entries(
+    space: &StateSpace,
+    q_up: &Matrix,
+    a: usize,
+    s1: usize,
+    m: usize,
+) -> Vec<(usize, f64)> {
+    let mut row = Vec::new();
+    for s2 in 0..m {
+        let p = q_up[(s1, s2)];
+        if p < PRUNE_EPS {
+            continue;
+        }
+        let tot = a - 1 + s2;
+        let target = if tot == 0 {
+            space.down_id()
+        } else {
+            space.recovery_id_for_total(tot).unwrap()
+        };
+        row.push((target, p));
+    }
+    row
+}
+
+impl NativeCache {
+    fn new(inputs: &ModelInputs, workers: usize) -> NativeCache {
+        let n = inputs.system.n;
+        let lam = inputs.system.lambda;
+        let theta = inputs.system.theta;
+        let space = StateSpace::build(n, &inputs.policy);
+        let n_states = space.len();
+
+        let chain_ids = space.chain_sizes();
+        let mut chain_pos = vec![usize::MAX; n + 1];
+        for (ci, &a) in chain_ids.iter().enumerate() {
+            chain_pos[a] = ci;
+        }
+        let mut by_chain: Vec<Vec<usize>> = vec![Vec::new(); chain_ids.len()];
+        for id in 0..n_states {
+            match space.kind(id) {
+                StateKind::Down => {}
+                k => by_chain[chain_pos[k.active()]].push(id),
+            }
+        }
+
+        let bands: Vec<Tridiag> = chain_ids
+            .iter()
+            .map(|&a| super::birth_death::bd_resolvent_bands(n - a, lam, theta, a as f64 * lam))
+            .collect();
+
+        // Worst-case cached-entry count: every up state of chain `a` has
+        // at most m = N - a + 1 targets.
+        let nnz_est: usize = chain_ids
+            .iter()
+            .enumerate()
+            .map(|(ci, &a)| {
+                let ups = by_chain[ci]
+                    .iter()
+                    .filter(|&&id| space.kind(id).is_up())
+                    .count();
+                ups * (n - a + 1)
+            })
+            .sum();
+
+        let up_rows = if nnz_est <= UP_ROW_CACHE_MAX {
+            // Q^Up per chain in parallel; rows flattened by state id.
+            let per_chain: Vec<Vec<(usize, Vec<(usize, f64)>)>> =
+                pool::run_indexed(chain_ids.len(), workers.max(1), |ci| {
+                    let a = chain_ids[ci];
+                    let s_max = n - a;
+                    let m = s_max + 1;
+                    let a_lam = a as f64 * lam;
+                    let q_up = tridiag_solve(&bands[ci], &Matrix::identity(m)).scale(a_lam);
+                    let mut rows = Vec::new();
+                    for &id in &by_chain[ci] {
+                        if let StateKind::Up { s: s1, .. } = space.kind(id) {
+                            rows.push((id, up_row_entries(&space, &q_up, a, s1, m)));
+                        }
+                    }
+                    rows
+                });
+            let mut by_id: Vec<Option<Vec<(usize, f64)>>> = vec![None; n_states];
+            for rows in per_chain {
+                for (id, row) in rows {
+                    by_id[id] = Some(row);
+                }
+            }
+            let mut offsets = Vec::with_capacity(n_states + 1);
+            let mut cols = Vec::new();
+            let mut vals = Vec::new();
+            offsets.push(0);
+            for row in &by_id {
+                if let Some(entries) = row {
+                    for &(c, v) in entries {
+                        cols.push(c as u32);
+                        vals.push(v);
+                    }
+                }
+                offsets.push(cols.len());
+            }
+            Some(UpRows { offsets, cols, vals })
+        } else {
+            None
+        };
+
+        NativeCache { space, chain_ids, chain_pos, by_chain, bands, up_rows }
+    }
+}
+
+/// δ-dependent work for one chain of one probe. Mirrors the per-chain
+/// computations of `native_chain_probs_fast` + `TransitionSystem::assemble`
+/// expression by expression.
+fn chain_pass(
+    c: &NativeCache,
+    inputs: &ModelInputs,
+    interval: f64,
+    thres: f64,
+    ci: usize,
+) -> ChainOut {
+    let a = c.chain_ids[ci];
+    let n = inputs.system.n;
+    let lam = inputs.system.lambda;
+    let theta = inputs.system.theta;
+    let s_max = n - a;
+    let m = s_max + 1;
+    let a_lam = a as f64 * lam;
+    let delta = inputs.delta(a, interval);
+    let p_succ = (-a_lam * delta).exp();
+
+    let q_delta = ehrenfest::transition_matrix(s_max, lam, theta, delta);
+    let decay = (-a_lam * delta).exp();
+    let denom = -(-a_lam * delta).exp_m1();
+    let rhs = Matrix::identity(m).sub(&q_delta.scale(decay));
+    let q_rec = tridiag_solve(&c.bands[ci], &rhs).scale(a_lam / denom);
+
+    let ids = &c.by_chain[ci];
+
+    // §IV elimination, chain-local: an up state [U:a,s2] is only entered
+    // from this chain's recovery states with p_succ · Q^{S,δ}[s1,s2].
+    let mut keep_up: Vec<bool> = Vec::new();
+    let mut eliminated = 0usize;
+    if thres > 0.0 {
+        let mut max_in = vec![0.0f64; m];
+        for &id in ids {
+            if let StateKind::Recovery { s: s1, .. } = c.space.kind(id) {
+                for s2 in 0..m {
+                    let p = p_succ * q_delta[(s1, s2)];
+                    if p > max_in[s2] {
+                        max_in[s2] = p;
+                    }
+                }
+            }
+        }
+        keep_up = vec![true; m];
+        for (s2, &mi) in max_in.iter().enumerate() {
+            if mi < thres && c.space.up_id(a, s2).is_some() {
+                keep_up[s2] = false;
+                eliminated += 1;
+            }
+        }
+    }
+
+    let mut rec_rows = Vec::new();
+    for &id in ids {
+        if let StateKind::Recovery { s: s1, .. } = c.space.kind(id) {
+            let mut row: Vec<(usize, f64)> = Vec::new();
+            // Success: land on [U:a,s2] (skipping eliminated).
+            for s2 in 0..m {
+                let p = p_succ * q_delta[(s1, s2)];
+                if p >= PRUNE_EPS {
+                    let target = c.space.up_id(a, s2).unwrap();
+                    if keep_up.is_empty() || keep_up[s2] {
+                        row.push((target, p));
+                    }
+                }
+            }
+            // Failure within δ: restart recovery (or go down).
+            for s2 in 0..m {
+                let p = (1.0 - p_succ) * q_rec[(s1, s2)];
+                if p < PRUNE_EPS {
+                    continue;
+                }
+                let tot = a - 1 + s2;
+                let target = if tot == 0 {
+                    c.space.down_id()
+                } else {
+                    c.space.recovery_id_for_total(tot).unwrap()
+                };
+                row.push((target, p));
+            }
+            rec_rows.push((id, row));
+        }
+    }
+
+    // Fresh up rows only when the cache was disabled for size.
+    let up_rows_fresh = if c.up_rows.is_none() {
+        let q_up = tridiag_solve(&c.bands[ci], &Matrix::identity(m)).scale(a_lam);
+        let mut rows = Vec::new();
+        for &id in ids {
+            if let StateKind::Up { s: s1, .. } = c.space.kind(id) {
+                if !keep_up.is_empty() && !keep_up[s1] {
+                    continue;
+                }
+                rows.push((id, up_row_entries(&c.space, &q_up, a, s1, m)));
+            }
+        }
+        Some(rows)
+    } else {
+        None
+    };
+
+    let t_cycle = interval + inputs.checkpoint_cost(a);
+    let u = interval / (a_lam * t_cycle).exp_m1();
+    let d = 1.0 / a_lam - u;
+    let w = inputs.work_per_sec(a) * u;
+    let w_s = inputs.work_per_sec(a) * interval;
+    let d_f = 1.0 / a_lam - delta / (a_lam * delta).exp_m1();
+
+    ChainOut {
+        keep_up,
+        eliminated,
+        rec_rows,
+        up_rows_fresh,
+        up_w: (u, d, w),
+        rec_succ: (interval, delta - interval, w_s),
+        rec_fail: (0.0, d_f, 0.0),
+    }
+}
+
+/// The per-probe cached build (free function so parallel callers can hold
+/// only `Sync` pieces — no engine handle involved).
+fn build_cached(
+    c: &NativeCache,
+    inputs: &ModelInputs,
+    opts: &BuildOptions,
+    interval: f64,
+) -> Result<MalleableModel> {
+    ensure!(interval > 0.0, "interval must be positive");
+    let start = Instant::now();
+    let n = inputs.system.n;
+    let theta = inputs.system.theta;
+    let thres = opts.thres.unwrap_or(0.0).max(0.0);
+    let n_states = c.space.len();
+    let workers = opts.workers.max(1);
+
+    let outs: Vec<ChainOut> = pool::run_indexed(c.chain_ids.len(), workers, |ci| {
+        chain_pass(c, inputs, interval, thres, ci)
+    });
+
+    // Fold chain-local elimination into the global keep mask.
+    let mut keep = vec![true; n_states];
+    let mut eliminated = 0usize;
+    for (ci, out) in outs.iter().enumerate() {
+        let a = c.chain_ids[ci];
+        for (s2, &k) in out.keep_up.iter().enumerate() {
+            if !k {
+                if let Some(id) = c.space.up_id(a, s2) {
+                    keep[id] = false;
+                }
+            }
+        }
+        eliminated += out.eliminated;
+    }
+
+    // Scatter per-id row pointers for recovery (and fresh up) rows.
+    let mut row_of: Vec<Option<&Vec<(usize, f64)>>> = vec![None; n_states];
+    for out in &outs {
+        for (id, row) in &out.rec_rows {
+            row_of[*id] = Some(row);
+        }
+        if let Some(fresh) = &out.up_rows_fresh {
+            for (id, row) in fresh {
+                row_of[*id] = Some(row);
+            }
+        }
+    }
+
+    // Emit the compacted CSR in state-id order, exactly like the seed
+    // assembly (same entry order, same remapping, same normalization).
+    let mut mapping = vec![usize::MAX; n_states];
+    let mut next = 0usize;
+    for (id, &k) in keep.iter().enumerate() {
+        if k {
+            mapping[id] = next;
+            next += 1;
+        }
+    }
+    let mut builder = SparseBuilder::new(next);
+    let mut kinds = Vec::with_capacity(next);
+    let mut succ_out: Vec<W3> = Vec::with_capacity(next);
+    let mut fail_out: Vec<W3> = Vec::with_capacity(next);
+    let mut scratch: Vec<(usize, f64)> = Vec::new();
+    for id in 0..n_states {
+        if !keep[id] {
+            continue;
+        }
+        scratch.clear();
+        let kind = c.space.kind(id);
+        match kind {
+            StateKind::Up { a, .. } => {
+                if let Some(up) = &c.up_rows {
+                    let (lo, hi) = (up.offsets[id], up.offsets[id + 1]);
+                    for k in lo..hi {
+                        scratch.push((mapping[up.cols[k] as usize], up.vals[k]));
+                    }
+                } else {
+                    let row = row_of[id].expect("missing fresh up row");
+                    for &(col, v) in row {
+                        scratch.push((mapping[col], v));
+                    }
+                }
+                let w = outs[c.chain_pos[a]].up_w;
+                succ_out.push(w);
+                fail_out.push(w);
+            }
+            StateKind::Recovery { a, .. } => {
+                let row = row_of[id].expect("missing recovery row");
+                for &(col, v) in row {
+                    scratch.push((mapping[col], v));
+                }
+                let out = &outs[c.chain_pos[a]];
+                succ_out.push(out.rec_succ);
+                fail_out.push(out.rec_fail);
+            }
+            StateKind::Down => {
+                // All N processors broken; first repair at rate Nθ, then
+                // the policy restarts on rp_1 of 1 functional processor.
+                scratch.push((mapping[c.space.recovery_id_for_total(1).unwrap()], 1.0));
+                succ_out.push((0.0, 0.0, 0.0));
+                fail_out.push((0.0, 1.0 / (n as f64 * theta), 0.0));
+            }
+        }
+        builder.push_row(&scratch);
+        kinds.push(kind);
+    }
+    let mut p = builder.finish();
+    p.normalize_rows();
+    let ts = TransitionSystem { p, kinds, succ: succ_out, fail: fail_out };
+
+    let (pi, solve_iters) = stationary(&ts.p, &opts.stationary)?;
+    let breakdown = uwt::evaluate(&ts, &pi);
+
+    Ok(MalleableModel::from_parts(
+        interval,
+        ts,
+        pi,
+        breakdown,
+        eliminated,
+        solve_iters,
+        start.elapsed().as_secs_f64(),
+        n_states,
+    ))
+}
+
+impl<'a> ModelBuilder<'a> {
+    /// Prepare the interval-independent caches. Cheap for the non-native
+    /// engines (no cache; builds delegate to [`MalleableModel::build`]).
+    pub fn new(
+        inputs: &'a ModelInputs,
+        engine: &'a ComputeEngine,
+        opts: &BuildOptions,
+    ) -> Result<ModelBuilder<'a>> {
+        let cache = if matches!(engine, ComputeEngine::Native) {
+            Some(NativeCache::new(inputs, opts.workers.max(1)))
+        } else {
+            None
+        };
+        Ok(ModelBuilder { inputs, engine, opts: *opts, cache })
+    }
+
+    /// Whether the incremental cached path is active.
+    pub fn is_cached(&self) -> bool {
+        self.cache.is_some()
+    }
+
+    /// Build and solve `M^mall` for one interval, reusing every cached
+    /// interval-independent piece.
+    pub fn build(&self, interval: f64) -> Result<MalleableModel> {
+        match &self.cache {
+            Some(c) => build_cached(c, self.inputs, &self.opts, interval),
+            None => MalleableModel::build(self.inputs, self.engine, interval, &self.opts),
+        }
+    }
+
+    /// `UWT_I` for one interval (the interval-search objective).
+    pub fn uwt(&self, interval: f64) -> Result<f64> {
+        Ok(self.build(interval)?.uwt())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::markov::model::test_fixtures::small_inputs;
+    use crate::policies::ReschedulingPolicy;
+
+    fn assert_models_identical(a: &MalleableModel, b: &MalleableModel) {
+        assert_eq!(a.n_states(), b.n_states());
+        assert_eq!(a.n_transitions(), b.n_transitions());
+        assert_eq!(a.eliminated, b.eliminated);
+        assert_eq!(a.solve_iters, b.solve_iters);
+        assert_eq!(a.uwt(), b.uwt(), "UWT differs: {} vs {}", a.uwt(), b.uwt());
+        assert_eq!(a.stationary_distribution(), b.stationary_distribution());
+    }
+
+    #[test]
+    fn cached_build_identical_to_from_scratch() {
+        let inputs = small_inputs(10);
+        let engine = ComputeEngine::native();
+        let builder = ModelBuilder::new(&inputs, &engine, &BuildOptions::default()).unwrap();
+        assert!(builder.is_cached());
+        for interval in [120.0, 1_800.0, 3_600.0, 40_000.0] {
+            let cached = builder.build(interval).unwrap();
+            let scratch =
+                MalleableModel::build(&inputs, &engine, interval, &BuildOptions::default())
+                    .unwrap();
+            assert_models_identical(&cached, &scratch);
+        }
+    }
+
+    #[test]
+    fn cached_build_identical_without_elimination() {
+        let inputs = small_inputs(8);
+        let engine = ComputeEngine::native();
+        let opts = BuildOptions { thres: None, ..Default::default() };
+        let builder = ModelBuilder::new(&inputs, &engine, &opts).unwrap();
+        let cached = builder.build(7_200.0).unwrap();
+        let scratch = MalleableModel::build(&inputs, &engine, 7_200.0, &opts).unwrap();
+        assert_eq!(cached.eliminated, 0);
+        assert_models_identical(&cached, &scratch);
+    }
+
+    #[test]
+    fn cached_build_identical_under_capped_policy() {
+        // Non-greedy policy: chains ≠ 1..=N, recovery states share chains.
+        let mut inputs = small_inputs(12);
+        let rp: Vec<usize> = (1..=12).map(|t| t.min(5)).collect();
+        inputs.policy = ReschedulingPolicy::from_vector(rp).unwrap();
+        let engine = ComputeEngine::native();
+        let builder = ModelBuilder::new(&inputs, &engine, &BuildOptions::default()).unwrap();
+        for interval in [600.0, 10_000.0] {
+            let cached = builder.build(interval).unwrap();
+            let scratch =
+                MalleableModel::build(&inputs, &engine, interval, &BuildOptions::default())
+                    .unwrap();
+            assert_models_identical(&cached, &scratch);
+        }
+    }
+
+    #[test]
+    fn generic_engine_falls_back() {
+        let inputs = small_inputs(6);
+        let engine = ComputeEngine::native_generic();
+        let builder = ModelBuilder::new(&inputs, &engine, &BuildOptions::default()).unwrap();
+        assert!(!builder.is_cached());
+        let m = builder.build(3_600.0).unwrap();
+        assert!(m.uwt() > 0.0);
+    }
+
+    #[test]
+    fn rejects_bad_interval() {
+        let inputs = small_inputs(4);
+        let engine = ComputeEngine::native();
+        let builder = ModelBuilder::new(&inputs, &engine, &BuildOptions::default()).unwrap();
+        assert!(builder.build(0.0).is_err());
+        assert!(builder.build(-1.0).is_err());
+    }
+}

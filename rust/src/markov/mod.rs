@@ -17,9 +17,13 @@
 //! 7. [`uwt`] evaluates `UWT_I` (paper Eq. 7).
 //!
 //! [`model::MalleableModel`] ties the steps together; [`model::ModelInputs`]
-//! is the user-facing parameter bundle (paper §III-C).
+//! is the user-facing parameter bundle (paper §III-C). [`builder::ModelBuilder`]
+//! amortizes steps 1–4 across repeated builds of the same inputs at
+//! different intervals (the interval-search hot path): only the
+//! `δ`-dependent rates are refreshed per probe, with bit-identical output.
 
 pub mod birth_death;
+pub mod builder;
 pub mod ehrenfest;
 pub mod model;
 pub mod reduction;
@@ -29,6 +33,7 @@ pub mod stationary;
 pub mod transitions;
 pub mod uwt;
 
+pub use builder::ModelBuilder;
 pub use model::{BuildOptions, MalleableModel, ModelInputs};
 pub use sparse::SparseMatrix;
 pub use states::{StateKind, StateSpace};

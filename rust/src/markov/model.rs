@@ -140,6 +140,31 @@ pub struct MalleableModel {
 }
 
 impl MalleableModel {
+    /// Assemble a model from already-built parts (the [`crate::markov::ModelBuilder`]
+    /// cached path constructs the transition system itself).
+    #[allow(clippy::too_many_arguments)]
+    pub(crate) fn from_parts(
+        interval: f64,
+        ts: TransitionSystem,
+        pi: Vec<f64>,
+        breakdown: UwtBreakdown,
+        eliminated: usize,
+        solve_iters: usize,
+        build_seconds: f64,
+        full_states: usize,
+    ) -> MalleableModel {
+        MalleableModel {
+            interval,
+            ts,
+            pi,
+            breakdown,
+            eliminated,
+            solve_iters,
+            build_seconds,
+            full_states,
+        }
+    }
+
     /// Build and solve `M^mall` for checkpointing interval `interval`.
     pub fn build(
         inputs: &ModelInputs,

@@ -12,7 +12,7 @@ use crate::apps::AppProfile;
 use crate::markov::ModelInputs;
 use crate::policies::ReschedulingPolicy;
 use crate::runtime::ComputeEngine;
-use crate::search::{select_interval, SearchConfig, SearchResult};
+use crate::search::{select_interval, select_interval_uncached, SearchConfig, SearchResult};
 use crate::simulator::{SimConfig, Simulator};
 use crate::traces::{stats::estimate_rates, FailureTrace};
 use crate::config::SystemParams;
@@ -61,6 +61,11 @@ pub fn sweep_grid(i_min: f64, i_max: f64, points: usize) -> Vec<f64> {
 /// `(λ, θ)` are estimated from the failure history before `start` (the
 /// paper's protocol); if there is no usable history, falls back to
 /// `fallback` rates.
+///
+/// Runs on the optimized engine: cached interval search
+/// ([`select_interval`]), indexed simulator, parallel oracle sweep.
+/// [`evaluate_segment_reference`] keeps the pre-optimization serial path
+/// for equivalence testing and perf tracking.
 #[allow(clippy::too_many_arguments)]
 pub fn evaluate_segment(
     trace: &FailureTrace,
@@ -72,6 +77,39 @@ pub fn evaluate_segment(
     search_cfg: &SearchConfig,
     fallback: Option<(f64, f64)>,
 ) -> Result<SegmentEvaluation> {
+    evaluate_segment_impl(trace, app, policy, engine, start, duration, search_cfg, fallback, false)
+}
+
+/// The seed evaluation path: from-scratch model builds per search probe,
+/// reference (unindexed) simulator, serial sweep. Numerically identical
+/// to [`evaluate_segment`]; kept as the baseline both for the equivalence
+/// suite and for `benches/perf.rs`'s end-to-end speedup measurement.
+#[allow(clippy::too_many_arguments)]
+pub fn evaluate_segment_reference(
+    trace: &FailureTrace,
+    app: &AppProfile,
+    policy: &ReschedulingPolicy,
+    engine: &ComputeEngine,
+    start: f64,
+    duration: f64,
+    search_cfg: &SearchConfig,
+    fallback: Option<(f64, f64)>,
+) -> Result<SegmentEvaluation> {
+    evaluate_segment_impl(trace, app, policy, engine, start, duration, search_cfg, fallback, true)
+}
+
+#[allow(clippy::too_many_arguments)]
+fn evaluate_segment_impl(
+    trace: &FailureTrace,
+    app: &AppProfile,
+    policy: &ReschedulingPolicy,
+    engine: &ComputeEngine,
+    start: f64,
+    duration: f64,
+    search_cfg: &SearchConfig,
+    fallback: Option<(f64, f64)>,
+    reference: bool,
+) -> Result<SegmentEvaluation> {
     let (lambda, theta) = match estimate_rates(trace, start) {
         Ok(r) => r,
         Err(e) => fallback.ok_or(e)?,
@@ -79,20 +117,35 @@ pub fn evaluate_segment(
 
     let system = SystemParams::new(trace.n_procs(), lambda, theta);
     let inputs = ModelInputs::new(system, app, policy)?;
-    let search = select_interval(&inputs, engine, search_cfg)?;
+    let search = if reference {
+        select_interval_uncached(&inputs, engine, search_cfg)?
+    } else {
+        select_interval(&inputs, engine, search_cfg)?
+    };
     let i_model = search.interval;
 
     let sim = Simulator::new(trace, app, policy);
     let base = SimConfig::new(start, duration, i_model);
-    let at_model = sim.run(&base)?;
+    let at_model = if reference { sim.run_reference(&base)? } else { sim.run(&base)? };
 
     // Simulator oracle sweep for UW_highest / I_sim.
     let mut grid = sweep_grid(search_cfg.i_min, search_cfg.i_max.min(duration / 2.0), 24);
     grid.push(i_model);
+    let sweep_results = if reference {
+        grid.iter()
+            .map(|&iv| {
+                let mut cfg = base.clone();
+                cfg.interval = iv;
+                Ok((iv, sim.run_reference(&cfg)?))
+            })
+            .collect::<Result<Vec<_>>>()?
+    } else {
+        sim.sweep_par(&base, &grid)?
+    };
     let mut uw_highest = f64::NEG_INFINITY;
     let mut i_sim = i_model;
     let mut uwt_sim = 0.0;
-    for (iv, res) in sim.sweep(&base, &grid)? {
+    for (iv, res) in sweep_results {
         if res.useful_work > uw_highest {
             uw_highest = res.useful_work;
             i_sim = iv;

@@ -13,13 +13,20 @@
 //! ([`crate::linalg`]) and serves as the test oracle, the
 //! no-artifacts-present fallback, and the perf baseline.
 
+#[cfg(feature = "pjrt")]
 use std::cell::RefCell;
+#[cfg(feature = "pjrt")]
 use std::collections::HashMap;
-use std::path::{Path, PathBuf};
+use std::path::Path;
+#[cfg(feature = "pjrt")]
+use std::path::PathBuf;
 
-use anyhow::{anyhow, bail, Context, Result};
+use anyhow::{bail, Result};
+#[cfg(feature = "pjrt")]
+use anyhow::{anyhow, Context};
 
 use crate::linalg::{expm, tridiag_solve, Matrix, Tridiag};
+#[cfg(feature = "pjrt")]
 use crate::util::json::Json;
 
 /// The three transition-likelihood matrices of one birth–death chain
@@ -151,22 +158,9 @@ pub fn native_chain_probs_fast(
     let n = s_max + 1;
     let q_delta = crate::markov::ehrenfest::transition_matrix(s_max, lambda, theta, delta);
 
-    // Bands of M = aλI − R built directly from the rates.
-    let mut dl = vec![0.0; n];
-    let mut dd = vec![0.0; n];
-    let mut du = vec![0.0; n];
-    for s in 0..n {
-        let fail = s as f64 * lambda;
-        let repair = (s_max - s) as f64 * theta;
-        if s > 0 {
-            dl[s] = -fail;
-        }
-        if s < n - 1 {
-            du[s] = -repair;
-        }
-        dd[s] = a_lambda + fail + repair;
-    }
-    let bands = Tridiag { dl, dd, du };
+    // Bands of M = aλI − R built directly from the rates (shared with the
+    // incremental model builder, which must solve identical systems).
+    let bands = crate::markov::birth_death::bd_resolvent_bands(s_max, lambda, theta, a_lambda);
 
     let eye = Matrix::identity(n);
     let q_up = tridiag_solve(&bands, &eye).scale(a_lambda);
@@ -202,6 +196,54 @@ pub fn native_chain_probs(r: &Matrix, a_lambda: f64, delta: f64) -> ChainMatrice
     ChainMatrices { q_delta, q_up, q_rec }
 }
 
+/// Stub standing in for the PJRT engine when the crate is built without
+/// the `pjrt` cargo feature (the default — the `xla` bindings crate is
+/// not on crates.io and must be vendored to enable it). The stub cannot
+/// be constructed, so every dispatch arm through it is statically dead;
+/// `ComputeEngine::auto()` degrades to the native engine with a warning.
+#[cfg(not(feature = "pjrt"))]
+pub struct PjrtEngine {
+    _unconstructable: std::convert::Infallible,
+}
+
+#[cfg(not(feature = "pjrt"))]
+impl PjrtEngine {
+    pub fn new(dir: &Path) -> Result<PjrtEngine> {
+        bail!(
+            "PJRT engine unavailable: this build has no `pjrt` feature (artifacts dir: {})",
+            dir.display()
+        )
+    }
+
+    pub fn bucket_for(&self, _m: usize) -> Result<usize> {
+        match self._unconstructable {}
+    }
+
+    pub fn buckets(&self) -> &[usize] {
+        match self._unconstructable {}
+    }
+
+    pub fn chain_probs(&self, _r: &Matrix, _a_lambda: f64, _delta: f64) -> Result<ChainMatrices> {
+        match self._unconstructable {}
+    }
+
+    pub fn expm_scaled(&self, _r: &Matrix, _delta: f64) -> Result<Matrix> {
+        match self._unconstructable {}
+    }
+
+    pub fn chain_probs_spares(
+        &self,
+        _s_max: usize,
+        _lambda: f64,
+        _theta: f64,
+        _a_lambda: f64,
+        _delta: f64,
+    ) -> Result<ChainMatrices> {
+        match self._unconstructable {}
+    }
+}
+
+#[cfg(feature = "pjrt")]
 #[derive(Clone, Copy, PartialEq, Eq, Hash, Debug)]
 enum Kind {
     ChainProbs,
@@ -209,6 +251,7 @@ enum Kind {
     Expm,
 }
 
+#[cfg(feature = "pjrt")]
 impl Kind {
     fn key(self) -> &'static str {
         match self {
@@ -224,6 +267,7 @@ impl Kind {
 /// Not `Sync`: PJRT handles are thread-affine in the `xla` crate, so the
 /// model builder serializes artifact executions (the Pallas/XLA runtime
 /// parallelizes internally; on this 1-core testbed that is moot anyway).
+#[cfg(feature = "pjrt")]
 pub struct PjrtEngine {
     client: xla::PjRtClient,
     dir: PathBuf,
@@ -235,6 +279,7 @@ pub struct PjrtEngine {
     cache: RefCell<HashMap<(Kind, usize), xla::PjRtLoadedExecutable>>,
 }
 
+#[cfg(feature = "pjrt")]
 impl PjrtEngine {
     pub fn new(dir: &Path) -> Result<PjrtEngine> {
         let manifest_path = dir.join("manifest.json");

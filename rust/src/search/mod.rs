@@ -5,10 +5,22 @@
 //! refines inside the bracket spanned by the top-3 intervals. The reported
 //! `I_model` is the *average of all probed intervals whose UWT is within
 //! 8% of the maximum* — the paper's hedge against modeling error.
+//!
+//! Probes are evaluated through a [`ModelBuilder`] constructed once per
+//! search, so the state space, resolvent bands and all up-state rows of
+//! `P^mall` are built a single time and only the interval-dependent rates
+//! are refreshed per probe (numerically identical to building each model
+//! from scratch; [`select_interval_uncached`] keeps the from-scratch path
+//! as the equivalence oracle and perf baseline).
+//!
+//! If the doubling phase runs into the `i_max` cap while UWT is still
+//! rising, the cap itself is probed before refinement so the top-3
+//! bracket is always closed (previously the bracket stayed open and the
+//! refinement degenerated to re-probing the doubling points).
 
 use anyhow::Result;
 
-use crate::markov::{BuildOptions, MalleableModel, ModelInputs};
+use crate::markov::{BuildOptions, MalleableModel, ModelBuilder, ModelInputs};
 use crate::runtime::ComputeEngine;
 
 /// Search configuration.
@@ -52,32 +64,24 @@ pub struct SearchResult {
     pub evaluations: usize,
 }
 
-/// Evaluate `UWT_I` through the full model stack.
-fn evaluate(
-    inputs: &ModelInputs,
-    engine: &ComputeEngine,
-    interval: f64,
+/// The doubling + refinement + band-average loop over an arbitrary
+/// `UWT_I` evaluator.
+fn run_search(
     cfg: &SearchConfig,
-) -> Result<f64> {
-    Ok(MalleableModel::build(inputs, engine, interval, &cfg.build)?.uwt())
-}
-
-/// Run the paper's doubling + binary-search interval selection.
-pub fn select_interval(
-    inputs: &ModelInputs,
-    engine: &ComputeEngine,
-    cfg: &SearchConfig,
+    eval: &mut dyn FnMut(f64) -> Result<f64>,
 ) -> Result<SearchResult> {
     let mut probes: Vec<(f64, f64)> = Vec::new();
 
     // Phase 1: doubling from I_min until UWT decreases.
     let mut i = cfg.i_min;
     let mut prev: Option<f64> = None;
+    let mut peaked = false;
     loop {
-        let uwt = evaluate(inputs, engine, i, cfg)?;
+        let uwt = eval(i)?;
         probes.push((i, uwt));
         if let Some(p) = prev {
             if uwt < p {
+                peaked = true;
                 break;
             }
         }
@@ -86,6 +90,13 @@ pub fn select_interval(
         if i > cfg.i_max {
             break;
         }
+    }
+    if !peaked && probes.iter().all(|&(iv, _)| (iv / cfg.i_max - 1.0).abs() > 1e-3) {
+        // Bugfix: the doubling exited at the cap with UWT still rising, so
+        // no probe bounds the optimum from above — probe `i_max` itself to
+        // close the bracket for phase 2.
+        let uwt = eval(cfg.i_max)?;
+        probes.push((cfg.i_max, uwt));
     }
 
     // Phase 2: binary search within the bracket spanned by the top-3
@@ -104,7 +115,7 @@ pub fn select_interval(
         let mut added = false;
         for m in mids {
             if probes.iter().all(|&(iv, _)| (iv / m - 1.0).abs() > 1e-3) {
-                let uwt = evaluate(inputs, engine, m, cfg)?;
+                let uwt = eval(m)?;
                 probes.push((m, uwt));
                 added = true;
             }
@@ -130,6 +141,32 @@ pub fn select_interval(
     let interval = in_band.iter().sum::<f64>() / in_band.len() as f64;
 
     Ok(SearchResult { interval, uwt: best_uwt, best_probed, evaluations: probes.len(), probes })
+}
+
+/// Run the paper's doubling + binary-search interval selection, with the
+/// incremental [`ModelBuilder`] amortizing model construction across the
+/// probes.
+pub fn select_interval(
+    inputs: &ModelInputs,
+    engine: &ComputeEngine,
+    cfg: &SearchConfig,
+) -> Result<SearchResult> {
+    let builder = ModelBuilder::new(inputs, engine, &cfg.build)?;
+    run_search(cfg, &mut |i| builder.uwt(i))
+}
+
+/// The pre-cache path: every probe builds `M^mall` from scratch. Kept as
+/// the equivalence oracle (`rust/tests/engine_equivalence.rs` asserts
+/// probe-for-probe identity with [`select_interval`]) and as the perf
+/// baseline `benches/perf.rs` tracks.
+pub fn select_interval_uncached(
+    inputs: &ModelInputs,
+    engine: &ComputeEngine,
+    cfg: &SearchConfig,
+) -> Result<SearchResult> {
+    run_search(cfg, &mut |i| {
+        Ok(MalleableModel::build(inputs, engine, i, &cfg.build)?.uwt())
+    })
 }
 
 #[cfg(test)]
@@ -217,5 +254,47 @@ mod tests {
         for w in res.probes.windows(2) {
             assert!(w[0].0 < w[1].0);
         }
+    }
+
+    #[test]
+    fn doubling_cap_closes_bracket() {
+        // Very reliable system with a small cap: UWT is still rising when
+        // the doubling exits, so the cap itself must be probed (previously
+        // the bracket stayed open above the largest doubled interval).
+        let engine = ComputeEngine::native();
+        let cfg = SearchConfig { i_max: 5_000.0, refine_steps: 2, ..Default::default() };
+        let res = select_interval(&inputs(4, 500.0), &engine, &cfg).unwrap();
+        assert!(
+            res.probes.iter().any(|&(iv, _)| (iv - cfg.i_max).abs() < 1e-6),
+            "i_max not probed: {:?}",
+            res.probes
+        );
+        assert!(res.interval <= cfg.i_max * (1.0 + 1e-9));
+        assert!(res.best_probed <= cfg.i_max * (1.0 + 1e-9));
+    }
+
+    #[test]
+    fn cap_probe_not_duplicated_when_doubling_lands_on_it() {
+        // i_max = i_min · 2^4: the doubling's last probe IS the cap; the
+        // bugfix must not add a duplicate.
+        let engine = ComputeEngine::native();
+        let cfg = SearchConfig { i_max: 4_800.0, refine_steps: 0, ..Default::default() };
+        let res = select_interval(&inputs(4, 500.0), &engine, &cfg).unwrap();
+        let at_cap = res
+            .probes
+            .iter()
+            .filter(|&&(iv, _)| (iv / cfg.i_max - 1.0).abs() <= 1e-3)
+            .count();
+        assert_eq!(at_cap, 1, "cap probed {at_cap} times: {:?}", res.probes);
+    }
+
+    #[test]
+    fn uncached_path_agrees() {
+        let engine = ComputeEngine::native();
+        let a = select_interval(&inputs(6, 3.0), &engine, &quick_cfg()).unwrap();
+        let b = select_interval_uncached(&inputs(6, 3.0), &engine, &quick_cfg()).unwrap();
+        assert_eq!(a.probes, b.probes, "cached and uncached searches diverged");
+        assert_eq!(a.interval, b.interval);
+        assert_eq!(a.uwt, b.uwt);
     }
 }

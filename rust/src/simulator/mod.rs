@@ -9,10 +9,27 @@
 //! the last completed checkpoint is lost; recovery costs `R_{a1,a2}`; if
 //! no processor is available the app waits for the first repair. Output is
 //! the total useful work `UW` (and a timeline for Fig 5-style plots).
+//!
+//! ## Engine
+//!
+//! [`Simulator::new`] compiles the trace into a [`TraceIndex`] once;
+//! [`Simulator::run`] then walks the merged event timeline with a
+//! forward-only [`crate::traces::TraceCursor`], so every availability /
+//! next-failure / next-repair query is an amortized O(1) cursor advance
+//! with zero per-call allocation (the seed implementation re-ran
+//! per-processor binary searches and allocated a fresh `Vec` at every
+//! reconfiguration). [`Simulator::run_reference`] preserves the original
+//! straight-from-trace implementation as the equivalence oracle — the
+//! property suite asserts both produce identical [`SimResult`]s field for
+//! field. [`Simulator::sweep_par`] fans a sweep out over the scoped thread
+//! pool; the index is immutable and shared across workers.
+
+use std::sync::OnceLock;
 
 use crate::apps::AppProfile;
 use crate::policies::ReschedulingPolicy;
-use crate::traces::FailureTrace;
+use crate::traces::{FailureTrace, TraceIndex};
+use crate::util::pool;
 use anyhow::{bail, Result};
 
 /// Simulation parameters.
@@ -29,7 +46,10 @@ pub struct SimConfig {
     pub ckpt_override: Option<f64>,
     /// Override recovery cost similarly.
     pub rec_override: Option<f64>,
-    /// Record a (time, active processors) timeline (Fig 5).
+    /// Record a (time, active processors) timeline (Fig 5). Note that
+    /// [`Simulator::sweep`] and [`Simulator::sweep_par`] force this off on
+    /// their cloned configs — per-interval timelines are dead weight in
+    /// large sweeps; use [`Simulator::sweep_with_timelines`] to keep them.
     pub record_timeline: bool,
     /// Pick the `a` processors with the fewest historical failures instead
     /// of the first available ones — the selection an availability-aware
@@ -53,7 +73,7 @@ impl SimConfig {
 }
 
 /// Simulation outcome.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, Default, PartialEq)]
 pub struct SimResult {
     /// Total useful work (the paper's `UW`).
     pub useful_work: f64,
@@ -74,7 +94,16 @@ pub struct SimResult {
     /// Number of completed checkpoints.
     pub checkpoints: usize,
     /// (time, active processor count) step function, if requested.
+    /// Consecutive identical entries are deduplicated.
     pub timeline: Vec<(f64, usize)>,
+}
+
+/// Append a timeline step, dropping consecutive identical `(t, a)` entries.
+#[inline]
+fn push_timeline(timeline: &mut Vec<(f64, usize)>, t: f64, a: usize) {
+    if timeline.last() != Some(&(t, a)) {
+        timeline.push((t, a));
+    }
 }
 
 /// The trace-driven simulator.
@@ -82,6 +111,10 @@ pub struct Simulator<'a> {
     trace: &'a FailureTrace,
     app: &'a AppProfile,
     policy: &'a ReschedulingPolicy,
+    /// Compiled lazily on the first indexed run, so reference-path users
+    /// (and perf baselines) never pay for it; `OnceLock` keeps the
+    /// simulator `Sync` for `sweep_par`.
+    index: OnceLock<TraceIndex>,
 }
 
 impl<'a> Simulator<'a> {
@@ -90,7 +123,13 @@ impl<'a> Simulator<'a> {
         app: &'a AppProfile,
         policy: &'a ReschedulingPolicy,
     ) -> Simulator<'a> {
-        Simulator { trace, app, policy }
+        Simulator { trace, app, policy, index: OnceLock::new() }
+    }
+
+    /// The compiled event index (built on first use; shared by all runs
+    /// and sweeps over this simulator).
+    pub fn index(&self) -> &TraceIndex {
+        self.index.get_or_init(|| TraceIndex::new(self.trace))
     }
 
     fn ckpt_cost(&self, cfg: &SimConfig, a: usize) -> f64 {
@@ -101,8 +140,7 @@ impl<'a> Simulator<'a> {
         cfg.rec_override.unwrap_or_else(|| self.app.recovery_cost(from, to))
     }
 
-    /// Run one simulation.
-    pub fn run(&self, cfg: &SimConfig) -> Result<SimResult> {
+    fn validate(&self, cfg: &SimConfig) -> Result<f64> {
         if cfg.interval <= 0.0 || cfg.duration <= 0.0 || cfg.start < 0.0 {
             bail!("invalid simulation config: {cfg:?}");
         }
@@ -114,19 +152,140 @@ impl<'a> Simulator<'a> {
                 self.trace.horizon()
             );
         }
+        Ok(end)
+    }
 
-        let mut r = SimResult {
-            useful_work: 0.0,
-            uwt: 0.0,
-            useful_seconds: 0.0,
-            ckpt_seconds: 0.0,
-            recovery_seconds: 0.0,
-            lost_seconds: 0.0,
-            wait_seconds: 0.0,
-            failures: 0,
-            checkpoints: 0,
-            timeline: Vec::new(),
-        };
+    /// Run one simulation on the compiled index.
+    pub fn run(&self, cfg: &SimConfig) -> Result<SimResult> {
+        let end = self.validate(cfg)?;
+        let mut r = SimResult::default();
+        let mut cur = self.index().cursor(self.trace);
+        let mut active: Vec<usize> = Vec::with_capacity(self.trace.n_procs());
+
+        let mut t = cfg.start;
+        let mut prev_procs: Option<usize> = None;
+
+        'outer: while t < end {
+            // Pick a configuration from what is functional right now.
+            let n_avail = cur.up_count(t);
+            if n_avail == 0 {
+                // Wait for the first repair.
+                let wake = match cur.next_repair_total_outage(t) {
+                    Some(w) => w.min(end),
+                    None => end,
+                };
+                r.wait_seconds += wake - t;
+                if cfg.record_timeline {
+                    push_timeline(&mut r.timeline, t, 0);
+                }
+                t = wake;
+                continue;
+            }
+
+            let a = self.policy.procs_for(n_avail);
+            if cfg.prefer_reliable {
+                // Rank by the failure-count prefix table (stable, so ties
+                // keep processor-id order like the reference sort).
+                cur.all_up(t, &mut active);
+                let counts = cur.fail_counts(t);
+                active.sort_by_key(|&p| counts[p]);
+                active.truncate(a);
+            } else {
+                cur.first_up(t, a, &mut active);
+            }
+            if cfg.record_timeline {
+                push_timeline(&mut r.timeline, t, a);
+            }
+
+            // Pay the redistribution/recovery cost (skipped at the very
+            // first start, matching the paper's simulator which only
+            // charges R on reconfiguration).
+            if let Some(prev) = prev_procs {
+                let rc = self.rec_cost(cfg, prev, a);
+                let rec_end = (t + rc).min(end);
+                // A failure of an active proc during recovery restarts the
+                // reconfiguration decision.
+                if let Some((ft, _)) = cur.next_failure_among(&active, t) {
+                    if ft < rec_end {
+                        r.recovery_seconds += ft - t;
+                        r.failures += 1;
+                        prev_procs = Some(a);
+                        t = ft;
+                        continue 'outer;
+                    }
+                }
+                r.recovery_seconds += rec_end - t;
+                t = rec_end;
+                if t >= end {
+                    break;
+                }
+            }
+            prev_procs = Some(a);
+
+            let rate = self.app.work_per_sec(a);
+            let c = self.ckpt_cost(cfg, a);
+
+            // Interval/checkpoint cycles until a failure or segment end.
+            let next_fail = cur.next_failure_among(&active, t).map(|(ft, _)| ft);
+            loop {
+                let cycle_work_end = t + cfg.interval;
+                let cycle_ckpt_end = cycle_work_end + c;
+
+                let fail_now = match next_fail {
+                    Some(ft) if ft < cycle_ckpt_end.min(end) => Some(ft),
+                    _ => None,
+                };
+
+                if let Some(ft) = fail_now {
+                    // Work since the last checkpoint is lost; time spent
+                    // computing (or checkpointing) until ft is overhead.
+                    let computed = (ft - t).min(cfg.interval).max(0.0);
+                    r.lost_seconds += computed;
+                    if ft > cycle_work_end {
+                        // Failure hit during the checkpoint write.
+                        r.ckpt_seconds += ft - cycle_work_end;
+                    }
+                    r.failures += 1;
+                    t = ft;
+                    continue 'outer;
+                }
+
+                if cycle_ckpt_end <= end {
+                    // Completed interval + checkpoint: work is banked.
+                    r.useful_seconds += cfg.interval;
+                    r.useful_work += rate * cfg.interval;
+                    r.ckpt_seconds += c;
+                    r.checkpoints += 1;
+                    t = cycle_ckpt_end;
+                    if t >= end {
+                        break 'outer;
+                    }
+                } else {
+                    // Segment ends mid-cycle: uncheckpointed tail is lost
+                    // (conservative, matches the paper's UW accounting of
+                    // only checkpointed work... the tail has not been saved).
+                    let computed = (end - t).min(cfg.interval).max(0.0);
+                    r.lost_seconds += computed;
+                    let into_ckpt = (end - t - cfg.interval).max(0.0);
+                    r.ckpt_seconds += into_ckpt;
+                    break 'outer;
+                }
+            }
+        }
+
+        r.uwt = r.useful_work / cfg.duration;
+        Ok(r)
+    }
+
+    /// The seed implementation, querying the trace directly (per-processor
+    /// binary searches, allocation per reconfiguration). Kept as the
+    /// equivalence oracle for the indexed engine and as the perf-tracking
+    /// baseline; numerically it performs the identical accounting in the
+    /// identical order, so [`Simulator::run`] must reproduce its
+    /// [`SimResult`] exactly.
+    pub fn run_reference(&self, cfg: &SimConfig) -> Result<SimResult> {
+        let end = self.validate(cfg)?;
+        let mut r = SimResult::default();
 
         let mut t = cfg.start;
         let mut prev_procs: Option<usize> = None;
@@ -142,7 +301,7 @@ impl<'a> Simulator<'a> {
                 };
                 r.wait_seconds += wake - t;
                 if cfg.record_timeline {
-                    r.timeline.push((t, 0));
+                    push_timeline(&mut r.timeline, t, 0);
                 }
                 t = wake;
                 continue;
@@ -157,7 +316,7 @@ impl<'a> Simulator<'a> {
                 avail[..a].to_vec()
             };
             if cfg.record_timeline {
-                r.timeline.push((t, a));
+                push_timeline(&mut r.timeline, t, a);
             }
 
             // Pay the redistribution/recovery cost (skipped at the very
@@ -241,8 +400,22 @@ impl<'a> Simulator<'a> {
     }
 
     /// Sweep intervals and return `(interval, SimResult)` pairs — the
-    /// paper's `UW_highest`/`I_sim` oracle sweep.
+    /// paper's `UW_highest`/`I_sim` oracle sweep. Forces
+    /// `record_timeline = false` on the per-interval configs; use
+    /// [`Simulator::sweep_with_timelines`] if the timelines are wanted.
     pub fn sweep(&self, cfg_base: &SimConfig, intervals: &[f64]) -> Result<Vec<(f64, SimResult)>> {
+        let mut base = cfg_base.clone();
+        base.record_timeline = false;
+        self.sweep_with_timelines(&base, intervals)
+    }
+
+    /// Sweep honoring `cfg_base.record_timeline` (opt-in; timelines are
+    /// dead weight in large sweeps).
+    pub fn sweep_with_timelines(
+        &self,
+        cfg_base: &SimConfig,
+        intervals: &[f64],
+    ) -> Result<Vec<(f64, SimResult)>> {
         intervals
             .iter()
             .map(|&i| {
@@ -251,6 +424,27 @@ impl<'a> Simulator<'a> {
                 Ok((i, self.run(&cfg)?))
             })
             .collect()
+    }
+
+    /// Parallel sweep over the scoped thread pool. Results are ordered by
+    /// interval position and numerically identical to [`Simulator::sweep`]
+    /// (each run is an independent deterministic walk of the shared
+    /// index). Timelines are forced off, as in `sweep`.
+    pub fn sweep_par(
+        &self,
+        cfg_base: &SimConfig,
+        intervals: &[f64],
+    ) -> Result<Vec<(f64, SimResult)>> {
+        let mut base = cfg_base.clone();
+        base.record_timeline = false;
+        let workers = pool::default_workers().min(intervals.len().max(1));
+        pool::run_indexed(intervals.len(), workers, |i| {
+            let mut cfg = base.clone();
+            cfg.interval = intervals[i];
+            self.run(&cfg).map(|r| (intervals[i], r))
+        })
+        .into_iter()
+        .collect()
     }
 }
 
@@ -370,6 +564,88 @@ mod tests {
         assert!(res.timeline.len() >= 2);
         assert_eq!(res.timeline[0].1, 2);
         assert!(res.timeline.iter().any(|&(_, a)| a == 1));
+    }
+
+    #[test]
+    fn timeline_has_no_consecutive_duplicates() {
+        // A flapping processor produces many reconfigurations; the dedup
+        // guarantees no two consecutive identical (t, a) entries survive.
+        let mut flaps = Vec::new();
+        let mut t = 10.0;
+        while t < 4_000.0 {
+            flaps.push((t, t + 1.0));
+            t += 2.0;
+        }
+        let trace = FailureTrace::new(vec![vec![], flaps], 1.0e6).unwrap();
+        let app = flat_app(2);
+        let policy = ReschedulingPolicy::greedy(2);
+        let sim = Simulator::new(&trace, &app, &policy);
+        let mut cfg = SimConfig::new(0.0, 5_000.0, 50.0);
+        cfg.record_timeline = true;
+        let res = sim.run(&cfg).unwrap();
+        for w in res.timeline.windows(2) {
+            assert_ne!(w[0], w[1], "duplicate timeline entry {:?}", w[0]);
+        }
+    }
+
+    #[test]
+    fn sweep_drops_timelines_unless_opted_in() {
+        let trace = FailureTrace::new(vec![vec![(500.0, 2_000.0)], vec![]], 1.0e4).unwrap();
+        let app = flat_app(2);
+        let policy = ReschedulingPolicy::greedy(2);
+        let sim = Simulator::new(&trace, &app, &policy);
+        let mut base = SimConfig::new(0.0, 3_000.0, 100.0);
+        base.record_timeline = true; // sweeps must override this
+        for (_, r) in sim.sweep(&base, &[50.0, 100.0]).unwrap() {
+            assert!(r.timeline.is_empty(), "sweep kept a timeline");
+        }
+        for (_, r) in sim.sweep_par(&base, &[50.0, 100.0]).unwrap() {
+            assert!(r.timeline.is_empty(), "sweep_par kept a timeline");
+        }
+        for (_, r) in sim.sweep_with_timelines(&base, &[50.0, 100.0]).unwrap() {
+            assert!(!r.timeline.is_empty(), "opt-in sweep lost the timeline");
+        }
+    }
+
+    #[test]
+    fn sweep_par_matches_serial_sweep() {
+        let mut rng = Rng::new(17);
+        let trace = generate(
+            &SynthSpec::exponential(12, 1.0 / 86_400.0, 1.0 / 1_800.0, 30.0 * 86_400.0),
+            &mut rng,
+        );
+        let app = flat_app(12);
+        let policy = ReschedulingPolicy::greedy(12);
+        let sim = Simulator::new(&trace, &app, &policy);
+        let cfg = SimConfig::new(86_400.0, 20.0 * 86_400.0, 1.0);
+        let grid: Vec<f64> = (0..10).map(|i| 200.0 * (1.7f64).powi(i)).collect();
+        let serial = sim.sweep(&cfg, &grid).unwrap();
+        let par = sim.sweep_par(&cfg, &grid).unwrap();
+        assert_eq!(serial.len(), par.len());
+        for ((i1, r1), (i2, r2)) in serial.iter().zip(&par) {
+            assert_eq!(i1, i2);
+            assert_eq!(r1, r2, "sweep_par diverged at interval {i1}");
+        }
+    }
+
+    #[test]
+    fn indexed_run_matches_reference_smoke() {
+        let mut rng = Rng::new(21);
+        let trace = generate(
+            &SynthSpec::exponential(10, 1.0 / (12.0 * 3_600.0), 1.0 / 900.0, 20.0 * 86_400.0),
+            &mut rng,
+        );
+        let app = flat_app(10);
+        let policy = ReschedulingPolicy::greedy(10);
+        let sim = Simulator::new(&trace, &app, &policy);
+        for prefer in [false, true] {
+            let mut cfg = SimConfig::new(3_600.0, 10.0 * 86_400.0, 1_800.0);
+            cfg.prefer_reliable = prefer;
+            cfg.record_timeline = true;
+            let fast = sim.run(&cfg).unwrap();
+            let oracle = sim.run_reference(&cfg).unwrap();
+            assert_eq!(fast, oracle, "indexed run diverged (prefer_reliable={prefer})");
+        }
     }
 
     #[test]

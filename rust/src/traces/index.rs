@@ -1,0 +1,372 @@
+//! Compiled failure-trace index — the simulator's hot-path substrate.
+//!
+//! [`FailureTrace`]'s point queries (`available_at`, `next_repair_after`,
+//! `next_failure_among`) re-run per-processor binary searches and allocate
+//! a fresh `Vec` on every call; the §VI-C simulator issues one batch of
+//! them per reconfiguration, so an 80-day sweep at N = 128 re-pays that
+//! cost thousands of times. [`TraceIndex`] compiles the trace once into
+//!
+//! * a **merged global event timeline** (every failure and repair, sorted
+//!   by time, repairs ordered before failures at equal instants so that a
+//!   back-to-back outage pair leaves the processor down), with the
+//!   functional-processor count after each event — an availability step
+//!   function answering "how many are up at `t`" in O(log E);
+//! * a sorted list of **all repair completions** for the "everything is
+//!   down, when does the first machine come back" query;
+//! * per-processor **failure-count prefix tables** (the sorted outage
+//!   lists themselves, walked by monotone cursors).
+//!
+//! [`TraceCursor`] is the per-run view: since simulated time only moves
+//! forward, every query is a cursor advance — amortized O(1) per trace
+//! event over a whole run, with zero allocation per call. Queries at
+//! non-monotone times (a fresh run over the same trace) take a fresh
+//! cursor; the index itself is immutable and shared (`Sync`), which is
+//! what makes [`crate::simulator::Simulator::sweep_par`] possible.
+
+use super::FailureTrace;
+
+/// Precomputed, immutable index over a [`FailureTrace`].
+#[derive(Debug, Clone)]
+pub struct TraceIndex {
+    n_procs: usize,
+    /// Event times, ascending (repairs before failures at equal times).
+    times: Vec<f64>,
+    /// Processor owning each event.
+    procs: Vec<u32>,
+    /// `true` = repair completion, `false` = failure.
+    repair: Vec<bool>,
+    /// Functional-processor count after applying events `0..=i`.
+    count_after: Vec<u32>,
+    /// All repair completion times, ascending.
+    repairs: Vec<f64>,
+}
+
+impl TraceIndex {
+    /// Compile the index: O(E log E) once, where `E` = total events.
+    pub fn new(trace: &FailureTrace) -> TraceIndex {
+        let n = trace.n_procs();
+        let mut events: Vec<(f64, u32, bool)> = Vec::new();
+        for p in 0..n {
+            for &(f, r) in trace.outages(p) {
+                events.push((f, p as u32, false));
+                events.push((r, p as u32, true));
+            }
+        }
+        // Repairs sort before failures at equal times: when one outage
+        // ends exactly where the next begins, applying repair-then-fail
+        // leaves the processor down at that instant, matching
+        // `FailureTrace::is_up` (down at the failure instant).
+        events.sort_unstable_by(|a, b| {
+            a.0.partial_cmp(&b.0).unwrap().then(b.2.cmp(&a.2))
+        });
+
+        let mut times = Vec::with_capacity(events.len());
+        let mut procs = Vec::with_capacity(events.len());
+        let mut repair = Vec::with_capacity(events.len());
+        let mut count_after = Vec::with_capacity(events.len());
+        let mut repairs = Vec::new();
+        let mut count = n as i64;
+        for &(t, p, rep) in &events {
+            count += if rep { 1 } else { -1 };
+            debug_assert!(count >= 0 && count <= n as i64);
+            times.push(t);
+            procs.push(p);
+            repair.push(rep);
+            count_after.push(count as u32);
+            if rep {
+                repairs.push(t);
+            }
+        }
+        TraceIndex { n_procs: n, times, procs, repair, count_after, repairs }
+    }
+
+    pub fn n_procs(&self) -> usize {
+        self.n_procs
+    }
+
+    /// Total failure + repair events.
+    pub fn n_events(&self) -> usize {
+        self.times.len()
+    }
+
+    /// Functional-processor count at `t` — the availability step function,
+    /// O(log E) for a random `t` (cursors answer the monotone case in
+    /// amortized O(1)).
+    pub fn count_at(&self, t: f64) -> usize {
+        let i = self.times.partition_point(|&x| x <= t);
+        if i == 0 {
+            self.n_procs
+        } else {
+            self.count_after[i - 1] as usize
+        }
+    }
+
+    /// Earliest repair completion strictly after `t`, regardless of which
+    /// processor it belongs to. Equals `FailureTrace::next_repair_after`
+    /// exactly when *no* processor is functional at `t` (any future outage
+    /// of a currently-down processor repairs later than its current one),
+    /// which is the only situation the simulator asks in.
+    pub fn next_repair_after_total_outage(&self, t: f64) -> Option<f64> {
+        let i = self.repairs.partition_point(|&r| r <= t);
+        self.repairs.get(i).copied()
+    }
+
+    /// Start a forward-only view for one simulated run. `trace` must be
+    /// the trace this index was compiled from (the index keeps no back
+    /// reference so it can live in lifetime-free containers); pairing it
+    /// with a different trace would answer availability from one trace
+    /// and failure queries from another, so the cheap invariants are
+    /// debug-asserted here.
+    pub fn cursor<'a>(&'a self, trace: &'a FailureTrace) -> TraceCursor<'a> {
+        debug_assert_eq!(trace.n_procs(), self.n_procs, "cursor trace/index mismatch");
+        debug_assert_eq!(
+            2 * (0..trace.n_procs()).map(|p| trace.failure_count(p)).sum::<usize>(),
+            self.n_events(),
+            "cursor trace/index mismatch (event count)"
+        );
+        let n = self.n_procs;
+        TraceCursor {
+            index: self,
+            trace,
+            t: f64::NEG_INFINITY,
+            ev: 0,
+            up: vec![true; n],
+            n_up: n,
+            next_fail: vec![0; n],
+            fail_before: vec![0; n],
+        }
+    }
+}
+
+/// Forward-only cursor over a [`TraceIndex`]: all queries take a time `t`
+/// that must be non-decreasing across calls, and advance internal cursors
+/// instead of binary-searching from scratch. No query allocates.
+pub struct TraceCursor<'a> {
+    index: &'a TraceIndex,
+    trace: &'a FailureTrace,
+    t: f64,
+    /// Events `0..ev` (times <= `t`) have been applied to `up`.
+    ev: usize,
+    up: Vec<bool>,
+    n_up: usize,
+    /// Per processor: index of the first outage with `fail > t` (lazy).
+    next_fail: Vec<usize>,
+    /// Per processor: number of outages with `fail < t` (lazy) — the
+    /// failure-count prefix table behind `prefer_reliable` ranking.
+    fail_before: Vec<usize>,
+}
+
+impl<'a> TraceCursor<'a> {
+    fn advance(&mut self, t: f64) {
+        debug_assert!(t >= self.t, "cursor moved backwards: {} -> {t}", self.t);
+        while self.ev < self.index.times.len() && self.index.times[self.ev] <= t {
+            let p = self.index.procs[self.ev] as usize;
+            if self.index.repair[self.ev] {
+                if !self.up[p] {
+                    self.up[p] = true;
+                    self.n_up += 1;
+                }
+            } else if self.up[p] {
+                self.up[p] = false;
+                self.n_up -= 1;
+            }
+            self.ev += 1;
+        }
+        self.t = t;
+    }
+
+    /// Number of functional processors at `t`.
+    pub fn up_count(&mut self, t: f64) -> usize {
+        self.advance(t);
+        self.n_up
+    }
+
+    /// The first `a` functional processors in id order (the greedy
+    /// first-fit selection), written into `out` (cleared first).
+    pub fn first_up(&mut self, t: f64, a: usize, out: &mut Vec<usize>) {
+        self.advance(t);
+        out.clear();
+        for (p, &is_up) in self.up.iter().enumerate() {
+            if is_up {
+                out.push(p);
+                if out.len() == a {
+                    break;
+                }
+            }
+        }
+    }
+
+    /// All functional processors in id order, written into `out`.
+    pub fn all_up(&mut self, t: f64, out: &mut Vec<usize>) {
+        self.advance(t);
+        out.clear();
+        for (p, &is_up) in self.up.iter().enumerate() {
+            if is_up {
+                out.push(p);
+            }
+        }
+    }
+
+    /// Per-processor failure counts before `t` (strict), advanced for all
+    /// processors. Returned slice is indexed by processor id.
+    pub fn fail_counts(&mut self, t: f64) -> &[usize] {
+        self.advance(t);
+        for p in 0..self.index.n_procs {
+            let list = self.trace.outages(p);
+            let c = &mut self.fail_before[p];
+            while *c < list.len() && list[*c].0 < t {
+                *c += 1;
+            }
+        }
+        &self.fail_before
+    }
+
+    /// Next failure of processor `p` strictly after `t`.
+    pub fn next_fail_after(&mut self, p: usize, t: f64) -> Option<f64> {
+        let list = self.trace.outages(p);
+        let c = &mut self.next_fail[p];
+        while *c < list.len() && list[*c].0 <= t {
+            *c += 1;
+        }
+        list.get(*c).map(|&(f, _)| f)
+    }
+
+    /// Earliest failure strictly after `t` among `procs`, ties resolved to
+    /// the earliest-listed processor (mirrors
+    /// [`FailureTrace::next_failure_among`]).
+    pub fn next_failure_among(&mut self, procs: &[usize], t: f64) -> Option<(f64, usize)> {
+        let mut best: Option<(f64, usize)> = None;
+        for &p in procs {
+            if let Some(f) = self.next_fail_after(p, t) {
+                if best.map_or(true, |(bf, _)| f < bf) {
+                    best = Some((f, p));
+                }
+            }
+        }
+        best
+    }
+
+    /// Earliest repair completion strictly after `t`. Only valid when no
+    /// processor is functional at `t` (debug-asserted); see
+    /// [`TraceIndex::next_repair_after_total_outage`].
+    pub fn next_repair_total_outage(&mut self, t: f64) -> Option<f64> {
+        self.advance(t);
+        debug_assert_eq!(self.n_up, 0, "total-outage repair query while processors are up");
+        self.index.next_repair_after_total_outage(t)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::traces::synth::{generate, SynthSpec};
+    use crate::util::rng::Rng;
+
+    fn random_trace(seed: u64, n: usize) -> FailureTrace {
+        let mut rng = Rng::new(seed);
+        generate(
+            &SynthSpec::exponential(n, 1.0 / (2.0 * 86_400.0), 1.0 / 1_800.0, 30.0 * 86_400.0),
+            &mut rng,
+        )
+    }
+
+    #[test]
+    fn count_matches_available_at() {
+        let trace = random_trace(1, 12);
+        let index = TraceIndex::new(&trace);
+        let mut rng = Rng::new(2);
+        for _ in 0..500 {
+            let t = rng.range(0.0, trace.horizon());
+            assert_eq!(index.count_at(t), trace.available_at(t).len(), "t = {t}");
+        }
+    }
+
+    #[test]
+    fn cursor_matches_trace_queries_monotone() {
+        let trace = random_trace(3, 8);
+        let index = TraceIndex::new(&trace);
+        let mut cur = index.cursor(&trace);
+        let mut rng = Rng::new(4);
+        let mut ts: Vec<f64> = (0..300).map(|_| rng.range(0.0, trace.horizon())).collect();
+        ts.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let mut buf = Vec::new();
+        for &t in &ts {
+            let avail = trace.available_at(t);
+            assert_eq!(cur.up_count(t), avail.len(), "count at {t}");
+            cur.all_up(t, &mut buf);
+            assert_eq!(buf, avail, "avail set at {t}");
+            cur.first_up(t, 3.min(avail.len()), &mut buf);
+            assert_eq!(buf, avail[..3.min(avail.len())].to_vec(), "first-3 at {t}");
+            for p in 0..trace.n_procs() {
+                assert_eq!(
+                    cur.next_fail_after(p, t),
+                    trace.next_failure_after(p, t),
+                    "next fail of {p} at {t}"
+                );
+            }
+            let counts = cur.fail_counts(t).to_vec();
+            for (p, &c) in counts.iter().enumerate() {
+                assert_eq!(c, trace.failure_count_before(p, t), "count of {p} at {t}");
+            }
+        }
+    }
+
+    #[test]
+    fn next_failure_among_matches() {
+        let trace = random_trace(5, 6);
+        let index = TraceIndex::new(&trace);
+        let mut cur = index.cursor(&trace);
+        let procs = [0usize, 2, 4];
+        let mut rng = Rng::new(6);
+        let mut ts: Vec<f64> = (0..200).map(|_| rng.range(0.0, trace.horizon())).collect();
+        ts.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        for &t in &ts {
+            assert_eq!(
+                cur.next_failure_among(&procs, t),
+                trace.next_failure_among(&procs, t),
+                "at {t}"
+            );
+        }
+    }
+
+    #[test]
+    fn total_outage_repair_matches() {
+        // Both procs down over [100, 300) / [100, 500).
+        let trace = FailureTrace::new(
+            vec![vec![(100.0, 300.0)], vec![(100.0, 500.0)]],
+            1_000.0,
+        )
+        .unwrap();
+        let index = TraceIndex::new(&trace);
+        assert_eq!(index.next_repair_after_total_outage(150.0), Some(300.0));
+        assert_eq!(index.count_at(150.0), 0);
+        assert_eq!(index.count_at(300.0), 1);
+        assert_eq!(index.count_at(500.0), 2);
+        let mut cur = index.cursor(&trace);
+        assert_eq!(cur.up_count(150.0), 0);
+        assert_eq!(cur.next_repair_total_outage(150.0), Some(300.0));
+    }
+
+    #[test]
+    fn touching_outages_stay_down_at_boundary() {
+        // Outage [10, 20) immediately followed by [20, 30): at t = 20 the
+        // processor is down (failure instant of the second outage).
+        let trace = FailureTrace::new(vec![vec![(10.0, 20.0), (20.0, 30.0)]], 100.0).unwrap();
+        let index = TraceIndex::new(&trace);
+        assert_eq!(index.count_at(20.0), 0);
+        assert!(!trace.is_up(0, 20.0));
+        assert_eq!(index.count_at(30.0), 1);
+        assert_eq!(index.count_at(9.0), 1);
+    }
+
+    #[test]
+    fn empty_trace_all_up() {
+        let trace = FailureTrace::new(vec![vec![], vec![]], 100.0).unwrap();
+        let index = TraceIndex::new(&trace);
+        assert_eq!(index.n_events(), 0);
+        assert_eq!(index.count_at(50.0), 2);
+        let mut cur = index.cursor(&trace);
+        assert_eq!(cur.up_count(50.0), 2);
+        assert_eq!(cur.next_failure_among(&[0, 1], 0.0), None);
+    }
+}

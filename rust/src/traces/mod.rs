@@ -13,9 +13,12 @@
 //! estimation, and the §VI-C simulator — consumes this one representation.
 
 pub mod distributions;
+pub mod index;
 pub mod parse;
 pub mod stats;
 pub mod synth;
+
+pub use index::{TraceCursor, TraceIndex};
 
 use anyhow::{bail, Result};
 

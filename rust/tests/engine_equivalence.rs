@@ -1,0 +1,224 @@
+//! Equivalence suite for the indexed/cached/parallel engines introduced by
+//! the perf work: every optimized path must reproduce its preserved seed
+//! baseline **exactly** (same floats, same counts), because the speedups
+//! reorganize computation without changing a single arithmetic expression.
+//!
+//! * indexed `Simulator::run` vs `Simulator::run_reference`, field for
+//!   field on randomized synthetic traces (exponential and Weibull, random
+//!   policies, both processor-selection modes);
+//! * `sweep_par` vs serial `sweep`;
+//! * cached `select_interval` (ModelBuilder) vs `select_interval_uncached`
+//!   probe for probe;
+//! * parallel `run_segments` vs the seed's serial loop, segment for
+//!   segment.
+
+use malleable_ckpt::apps::AppProfile;
+use malleable_ckpt::config::SystemParams;
+use malleable_ckpt::experiments::common::{run_segments, run_segments_reference};
+use malleable_ckpt::experiments::ExperimentOptions;
+use malleable_ckpt::markov::ModelInputs;
+use malleable_ckpt::policies::ReschedulingPolicy;
+use malleable_ckpt::runtime::ComputeEngine;
+use malleable_ckpt::search::{select_interval, select_interval_uncached, SearchConfig};
+use malleable_ckpt::simulator::{SimConfig, Simulator};
+use malleable_ckpt::traces::synth::{generate, SynthSpec};
+use malleable_ckpt::util::prop::{check, Gen, Outcome};
+use malleable_ckpt::util::rng::Rng;
+
+fn random_policy(g: &mut Gen, n: usize) -> ReschedulingPolicy {
+    let style = g.int_in(0, 2);
+    let rp: Vec<usize> = (1..=n)
+        .map(|t| match style {
+            0 => t,                            // greedy
+            1 => t.min(g.int_in(1, n).max(1)), // capped
+            _ => (t / 2).max(1),               // half
+        })
+        .collect();
+    ReschedulingPolicy::from_vector(rp).unwrap()
+}
+
+#[test]
+fn prop_indexed_simulator_matches_reference() {
+    check(
+        "indexed-sim-equivalence",
+        0x1D3,
+        40,
+        |g| {
+            let n = g.int_in(2, 14);
+            let lam = g.log_uniform(1e-7, 1e-4);
+            let theta = g.log_uniform(1e-4, 1e-2);
+            let weibull = g.rng.chance(0.5);
+            let shape = g.f64_in(0.5, 1.6);
+            let days = g.f64_in(2.0, 25.0);
+            let interval = g.log_uniform(120.0, 50_000.0);
+            let prefer = g.rng.chance(0.5);
+            let style_seed = g.rng.next_u64();
+            let rp = random_policy(g, n);
+            (n, lam, theta, weibull, shape, days, interval, prefer, style_seed, rp)
+        },
+        |(n, lam, theta, weibull, shape, days, interval, prefer, style_seed, rp)| {
+            let mut rng = Rng::new(*style_seed);
+            let horizon = (days + 10.0) * 86_400.0;
+            let spec = if *weibull {
+                SynthSpec::weibull(*n, *lam, *theta, *shape, horizon)
+            } else {
+                SynthSpec::exponential(*n, *lam, *theta, horizon)
+            };
+            let trace = generate(&spec, &mut rng);
+            let app = AppProfile::md(*n);
+            let sim = Simulator::new(&trace, &app, rp);
+            let mut cfg = SimConfig::new(86_400.0, days * 86_400.0, *interval);
+            cfg.prefer_reliable = *prefer;
+            cfg.record_timeline = true;
+            let fast = match sim.run(&cfg) {
+                Ok(r) => r,
+                Err(e) => return Outcome::Fail(format!("indexed run failed: {e}")),
+            };
+            let oracle = match sim.run_reference(&cfg) {
+                Ok(r) => r,
+                Err(e) => return Outcome::Fail(format!("reference run failed: {e}")),
+            };
+            if fast == oracle {
+                Outcome::Pass
+            } else {
+                Outcome::Fail(format!(
+                    "SimResult diverged:\n  indexed:   {fast:?}\n  reference: {oracle:?}"
+                ))
+            }
+        },
+    );
+}
+
+#[test]
+fn prop_sweep_par_matches_serial() {
+    check(
+        "sweep-par-equivalence",
+        0x5EEB,
+        12,
+        |g| {
+            let n = g.int_in(2, 12);
+            let seed = g.rng.next_u64();
+            let points = g.int_in(3, 12);
+            (n, seed, points)
+        },
+        |&(n, seed, points)| {
+            let mut rng = Rng::new(seed);
+            let trace = generate(
+                &SynthSpec::exponential(n, 1.0 / (3.0 * 86_400.0), 1.0 / 1_800.0, 30.0 * 86_400.0),
+                &mut rng,
+            );
+            let app = AppProfile::cg(n);
+            let policy = ReschedulingPolicy::greedy(n);
+            let sim = Simulator::new(&trace, &app, &policy);
+            let cfg = SimConfig::new(86_400.0, 20.0 * 86_400.0, 1.0);
+            let grid: Vec<f64> = (0..points).map(|i| 240.0 * (1.9f64).powi(i as i32)).collect();
+            let serial = match sim.sweep(&cfg, &grid) {
+                Ok(r) => r,
+                Err(e) => return Outcome::Fail(format!("sweep failed: {e}")),
+            };
+            let par = match sim.sweep_par(&cfg, &grid) {
+                Ok(r) => r,
+                Err(e) => return Outcome::Fail(format!("sweep_par failed: {e}")),
+            };
+            if serial.len() != par.len() {
+                return Outcome::Fail("length mismatch".into());
+            }
+            for ((i1, r1), (i2, r2)) in serial.iter().zip(&par) {
+                if i1 != i2 || r1 != r2 {
+                    return Outcome::Fail(format!("diverged at interval {i1}"));
+                }
+            }
+            Outcome::Pass
+        },
+    );
+}
+
+#[test]
+fn prop_cached_search_matches_uncached() {
+    let engine = ComputeEngine::native();
+    check(
+        "cached-search-equivalence",
+        0xCA5E,
+        8,
+        |g| {
+            let n = g.int_in(2, 8);
+            let lam = g.log_uniform(1e-7, 1e-5);
+            let theta = g.log_uniform(1e-4, 1e-2);
+            let system = SystemParams::new(n, lam, theta);
+            let ckpt: Vec<f64> = (1..=n).map(|_| g.f64_in(5.0, 200.0)).collect();
+            let work: Vec<f64> = (1..=n).map(|a| (a as f64).powf(g.f64_in(0.4, 1.0))).collect();
+            let rec: Vec<f64> = (1..=n).map(|_| g.f64_in(5.0, 60.0)).collect();
+            let policy = random_policy(g, n);
+            ModelInputs::from_raw(system, ckpt, work, rec, policy).unwrap()
+        },
+        |inputs| {
+            let cfg = SearchConfig { refine_steps: 2, ..Default::default() };
+            let cached = match select_interval(inputs, &engine, &cfg) {
+                Ok(r) => r,
+                Err(e) => return Outcome::Fail(format!("cached search failed: {e}")),
+            };
+            let uncached = match select_interval_uncached(inputs, &engine, &cfg) {
+                Ok(r) => r,
+                Err(e) => return Outcome::Fail(format!("uncached search failed: {e}")),
+            };
+            if cached.probes != uncached.probes {
+                return Outcome::Fail(format!(
+                    "probes diverged:\n  cached:   {:?}\n  uncached: {:?}",
+                    cached.probes, uncached.probes
+                ));
+            }
+            if cached.interval != uncached.interval || cached.uwt != uncached.uwt {
+                return Outcome::Fail(format!(
+                    "selection diverged: {} vs {} (uwt {} vs {})",
+                    cached.interval, uncached.interval, cached.uwt, uncached.uwt
+                ));
+            }
+            Outcome::Pass
+        },
+    );
+}
+
+#[test]
+fn parallel_run_segments_matches_serial_reference() {
+    let sys = SystemParams::new(12, 1.0 / (5.0 * 86_400.0), 1.0 / 2_700.0);
+    let opts = {
+        let mut o = ExperimentOptions::default();
+        o.segments = 3;
+        o.trace_days = 70.0;
+        o.dur_days = (6.0, 12.0);
+        o
+    };
+    let mut rng = Rng::new(7);
+    let trace = generate(
+        &SynthSpec::exponential(sys.n, sys.lambda, sys.theta, opts.trace_days * 86_400.0),
+        &mut rng,
+    );
+    let app = AppProfile::qr(sys.n);
+    let policy = ReschedulingPolicy::greedy(sys.n);
+    let engine = ComputeEngine::native();
+
+    // Identical RNG streams => identical pre-drawn segments.
+    let mut rng_par = Rng::new(99);
+    let mut rng_ser = Rng::new(99);
+    let par = run_segments(&trace, &app, &policy, &engine, &sys, &opts, &mut rng_par).unwrap();
+    let ser =
+        run_segments_reference(&trace, &app, &policy, &engine, &sys, &opts, &mut rng_ser).unwrap();
+
+    // Both paths must have consumed the RNG identically.
+    assert_eq!(rng_par.next_u64(), rng_ser.next_u64(), "RNG streams diverged");
+
+    assert_eq!(par.segments.len(), ser.segments.len());
+    for (p, s) in par.segments.iter().zip(&ser.segments) {
+        assert_eq!(p.start, s.start);
+        assert_eq!(p.duration, s.duration);
+        assert_eq!(p.lambda, s.lambda);
+        assert_eq!(p.theta, s.theta);
+        assert_eq!(p.i_model, s.i_model, "I_model diverged");
+        assert_eq!(p.i_sim, s.i_sim, "I_sim diverged");
+        assert_eq!(p.uw_model, s.uw_model, "UW(I_model) diverged");
+        assert_eq!(p.uw_highest, s.uw_highest, "UW_highest diverged");
+        assert_eq!(p.pd, s.pd);
+        assert_eq!(p.efficiency, s.efficiency);
+        assert_eq!(p.search.probes, s.search.probes, "search probes diverged");
+    }
+}
