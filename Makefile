@@ -1,6 +1,6 @@
 # Tier-1 verification and perf tracking for the malleable-ckpt repo.
 
-.PHONY: verify build test bench-smoke bench clean
+.PHONY: verify build test lint bench-smoke bench clean
 
 # Tier-1: release build + full test suite (see ROADMAP.md).
 verify: build test
@@ -10,6 +10,12 @@ build:
 
 test:
 	cargo test -q
+
+# Style gate, mirrored by the CI `lint` job (advisory there until the
+# pre-existing formatting backlog is cleaned up).
+lint:
+	cargo fmt --all -- --check
+	cargo clippy --all-targets -- -D warnings
 
 # Short smoke bench: regenerates BENCH_perf.json at the repo root with the
 # reduced size grid, so perf regressions show up in every PR.

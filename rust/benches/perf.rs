@@ -12,7 +12,13 @@
 //!
 //! Writes a machine-readable `BENCH_perf.json` at the repo root so the
 //! perf trajectory is tracked PR over PR (`make bench-smoke` regenerates
-//! it with `--smoke`, a reduced grid that skips the N = 512 rows).
+//! it with `--smoke`, a reduced grid that skips the N = 512 rows). A
+//! committed copy of that file doubles as the perf baseline: after
+//! writing the new report the run compares every `suite.*.speedup` (and
+//! `suite.overall_speedup`) against it and exits non-zero on a >20%
+//! regression. The `probe_cost` section tracks the spectral probe
+//! engine's acceptance metric — steady-state seconds per
+//! `select_interval` probe, cold vs cached-exact vs probe engine.
 
 use malleable_ckpt::apps::AppProfile;
 use malleable_ckpt::config::{paper_system, SystemParams};
@@ -145,6 +151,65 @@ fn main() {
     }
     report.set("model_builder", builder_cmp);
 
+    // --- L3: per-probe cost — the spectral probe engine's acceptance
+    // metric: time per `select_interval` probe, cold (from-scratch build)
+    // vs the exact cached build (PR 1 path, `exact_probes`) vs the probe
+    // engine (spectral rec rows + implicit up block + warm-started π).
+    // Builder setup and the first (cold-start) probe are untimed: the
+    // metric is the steady-state marginal probe, which is what a search
+    // pays a dozen times over.
+    header("L3: per-probe cost (cold vs cached-exact vs probe engine)");
+    let probe_cost_sizes: &[usize] = if smoke { &[128] } else { &[128, 256, 512] };
+    let probe_seq = [900.0, 1_800.0, 2_700.0, 3_600.0, 5_400.0, 7_200.0];
+    let mut probe_cost = Json::obj();
+    for &n in probe_cost_sizes {
+        let inputs = qr_inputs(n, lam, theta);
+        let engine = ComputeEngine::native();
+        let k = probe_seq.len() as f64;
+        let cold = bench_once(&format!("{} probes N={n} cold (from scratch)", probe_seq.len()), || {
+            for &i in &probe_seq {
+                let m = MalleableModel::build(&inputs, &engine, i, &BuildOptions::default())
+                    .unwrap();
+                std::hint::black_box(m.uwt());
+            }
+        });
+        let exact_b = ModelBuilder::new(
+            &inputs,
+            &engine,
+            &BuildOptions { exact_probes: true, ..Default::default() },
+        )
+        .unwrap();
+        exact_b.uwt(probe_seq[0]).unwrap(); // prime the lazy up-row cache
+        let cached = bench_once(&format!("{} probes N={n} cached-exact", probe_seq.len()), || {
+            for &i in &probe_seq {
+                std::hint::black_box(exact_b.uwt(i).unwrap());
+            }
+        });
+        let engine_b = ModelBuilder::new(&inputs, &engine, &BuildOptions::default()).unwrap();
+        engine_b.uwt(probe_seq[0]).unwrap(); // warm the π cache
+        let spectral = bench_once(&format!("{} probes N={n} probe engine", probe_seq.len()), || {
+            for &i in &probe_seq {
+                std::hint::black_box(engine_b.uwt(i).unwrap());
+            }
+        });
+        let vs_cached = cached.min_s / spectral.min_s.max(1e-12);
+        let vs_cold = cold.min_s / spectral.min_s.max(1e-12);
+        println!(
+            "    => probe N={n}: {:.2} ms/probe (cold {:.2}, cached {:.2}) — {vs_cached:.2}x vs cached, {vs_cold:.2}x vs cold",
+            spectral.min_s / k * 1e3,
+            cold.min_s / k * 1e3,
+            cached.min_s / k * 1e3,
+        );
+        let mut o = Json::obj();
+        o.set("cold_probe_s", Json::from(cold.min_s / k))
+            .set("cached_probe_s", Json::from(cached.min_s / k))
+            .set("engine_probe_s", Json::from(spectral.min_s / k))
+            .set("engine_vs_cached", Json::from(vs_cached))
+            .set("engine_vs_cold", Json::from(vs_cold));
+        probe_cost.set(&format!("n{n}"), o);
+    }
+    report.set("probe_cost", probe_cost);
+
     // --- L3: simulator — indexed engine vs reference --------------------
     header("L3: simulator (indexed vs reference)");
     let sim_sizes: &[usize] = if smoke { &[128] } else { &[128, 256, 512] };
@@ -261,8 +326,105 @@ fn main() {
     report.set("suite", suite);
 
     let path = "BENCH_perf.json";
+    // The checked-in copy (when present) is the perf baseline; read it
+    // (text and parsed) before overwriting so the regression gate below
+    // can compare — and restore it if the gate trips.
+    let baseline_text = std::fs::read_to_string(path).ok();
+    let baseline = baseline_text.as_deref().and_then(|t| Json::parse(t).ok());
     match std::fs::write(path, report.to_string_pretty(0)) {
         Ok(()) => println!("\nwrote {path}"),
         Err(e) => eprintln!("\nwarning: could not write {path}: {e}"),
+    }
+
+    // Perf regression gate (ROADMAP "Perf baseline" item): any
+    // `suite.*.speedup` more than 20% below the checked-in baseline fails
+    // the run (exit non-zero), so CI's `--smoke` pass blocks perf
+    // regressions once a baseline is committed. Compare only like modes —
+    // smoke and full runs measure different grids.
+    if let Some(base) = baseline {
+        let mode = if smoke { "smoke" } else { "full" };
+        if base.get("mode").and_then(Json::as_str) != Some(mode) {
+            // Unlike-mode runs can't be compared — and must not clobber
+            // the checked-in baseline either (a full run over a committed
+            // smoke baseline would otherwise silently disarm CI's gate).
+            // Park this run's report under a mode-suffixed name and put
+            // the baseline back.
+            let parked = format!("BENCH_perf.{mode}.json");
+            if std::fs::write(&parked, report.to_string_pretty(0)).is_ok() {
+                println!(
+                    "perf gate: baseline mode differs from '{mode}'; report moved to {parked}, {path} restored"
+                );
+            }
+            if let Some(text) = baseline_text {
+                let _ = std::fs::write(path, text);
+            }
+            return;
+        }
+        let base_suite = match base.get("suite").and_then(Json::as_obj) {
+            Some(s) => s,
+            None => {
+                println!("perf gate: baseline has no suite section; skipping comparison");
+                return;
+            }
+        };
+        // Print every delta (not just failures): the baseline only rotates
+        // when a human commits a regenerated file, and sub-threshold drift
+        // compounds across such rotations unless it is visible here.
+        let mut regressions: Vec<String> = Vec::new();
+        for (key, bval) in base_suite {
+            let bspeed = match bval.get("speedup").and_then(Json::as_f64) {
+                Some(v) => v,
+                None => continue, // overall_* scalars and non-speedup keys
+            };
+            match report.path(&format!("suite.{key}.speedup")).and_then(Json::as_f64) {
+                Some(ns) => {
+                    println!(
+                        "perf gate: suite.{key}.speedup {bspeed:.2}x -> {ns:.2}x ({:+.1}%)",
+                        (ns / bspeed - 1.0) * 100.0
+                    );
+                    if ns < bspeed * 0.8 {
+                        regressions.push(format!("suite.{key}.speedup: {bspeed:.2}x -> {ns:.2}x"));
+                    }
+                }
+                None => regressions.push(format!(
+                    "suite.{key}.speedup missing from this run (baseline {bspeed:.2}x)"
+                )),
+            }
+        }
+        if let (Some(b), Some(ns)) = (
+            base.path("suite.overall_speedup").and_then(Json::as_f64),
+            report.path("suite.overall_speedup").and_then(Json::as_f64),
+        ) {
+            if ns < b * 0.8 {
+                regressions.push(format!("suite.overall_speedup: {b:.2}x -> {ns:.2}x"));
+            }
+        }
+        if regressions.is_empty() {
+            println!("perf gate: no suite speedup regressed >20% vs the checked-in baseline");
+        } else {
+            eprintln!("\nPERF REGRESSION vs checked-in {path}:");
+            for r in &regressions {
+                eprintln!("  {r}");
+            }
+            // Keep the gate armed: put the baseline back so a rerun does
+            // not silently compare against the regressed numbers, and
+            // park the failing report next to it for inspection.
+            let rejected = "BENCH_perf.rejected.json";
+            if let Err(e) = std::fs::write(rejected, report.to_string_pretty(0)) {
+                eprintln!("warning: could not write {rejected}: {e}");
+            } else {
+                eprintln!("regressed report saved to {rejected}; {path} restored to baseline");
+            }
+            if let Some(text) = baseline_text {
+                if let Err(e) = std::fs::write(path, text) {
+                    eprintln!("warning: could not restore baseline {path}: {e}");
+                }
+            }
+            std::process::exit(1);
+        }
+    } else {
+        println!(
+            "perf gate: no checked-in {path} baseline (commit one from a CI run to arm the gate)"
+        );
     }
 }

@@ -1,0 +1,243 @@
+//! Symmetric-tridiagonal eigendecomposition (implicit-shift QL).
+//!
+//! The spectral probe engine diagonalizes every birth–death chain generator
+//! once per [`crate::markov::ModelBuilder`]: a birth–death generator is
+//! diagonally symmetrizable, so its eigenproblem reduces to a symmetric
+//! tridiagonal one, solved here with the classic implicit-shift QL
+//! iteration (EISPACK `tql2` / Numerical Recipes `tqli` lineage) with
+//! eigenvector accumulation. Cost is O(n²) per eigenvalue — O(n³) total
+//! with the vector accumulation — paid once per chain so that every probe's
+//! `expm(R·δ)` becomes a diagonal scaling between two small matrix
+//! products (see [`crate::markov::spectral`]).
+//!
+//! Accuracy: eigenvalues and the reconstruction `V Λ Vᵀ` are good to a few
+//! ulps of `‖T‖` (the QL rotations are orthogonal), which the tests pin
+//! against closed-form spectra and random reconstructions.
+
+use anyhow::{bail, Result};
+
+use super::Matrix;
+
+/// Eigendecomposition `T = V · diag(values) · Vᵀ` of a symmetric
+/// tridiagonal matrix. `values` are ascending; column `k` of `vectors` is
+/// the (unit, mutually orthogonal) eigenvector for `values[k]`.
+#[derive(Debug, Clone)]
+pub struct SymTridEigen {
+    pub values: Vec<f64>,
+    pub vectors: Matrix,
+}
+
+/// Maximum implicit-QL sweeps per eigenvalue before giving up. The
+/// textbook bound is ~30; symmetrized birth–death chains converge in 2–3.
+const MAX_SWEEPS: usize = 64;
+
+/// Decompose the symmetric tridiagonal matrix with main diagonal `diag`
+/// (length n) and off-diagonal `off` (length n−1, `off[i]` couples rows
+/// `i` and `i+1`).
+pub fn sym_tridiag_eigen(diag: &[f64], off: &[f64]) -> Result<SymTridEigen> {
+    let n = diag.len();
+    if n == 0 {
+        return Ok(SymTridEigen { values: Vec::new(), vectors: Matrix::zeros(0, 0) });
+    }
+    if off.len() + 1 != n {
+        bail!("off-diagonal has {} entries, expected {}", off.len(), n - 1);
+    }
+    let mut d = diag.to_vec();
+    // Working off-diagonal, padded so e[m] with m = n-1 is a valid (zero)
+    // sentinel in the split search.
+    let mut e = vec![0.0f64; n];
+    e[..n - 1].copy_from_slice(off);
+    let mut z = Matrix::identity(n);
+
+    for l in 0..n {
+        let mut sweeps = 0usize;
+        loop {
+            // Find the first negligible off-diagonal element at or after l.
+            let mut m = l;
+            while m < n - 1 {
+                let dd = d[m].abs() + d[m + 1].abs();
+                if e[m].abs() <= f64::EPSILON * dd {
+                    break;
+                }
+                m += 1;
+            }
+            if m == l {
+                break; // d[l] has converged
+            }
+            sweeps += 1;
+            if sweeps > MAX_SWEEPS {
+                bail!("QL iteration failed to converge at index {l}");
+            }
+
+            // Wilkinson-style shift from the leading 2x2.
+            let mut g = (d[l + 1] - d[l]) / (2.0 * e[l]);
+            let mut r = g.hypot(1.0);
+            let sign_r = if g >= 0.0 { r } else { -r };
+            g = d[m] - d[l] + e[l] / (g + sign_r);
+
+            let mut s = 1.0f64;
+            let mut c = 1.0f64;
+            let mut p = 0.0f64;
+            let mut underflow = false;
+            for i in (l..m).rev() {
+                let mut f = s * e[i];
+                let b = c * e[i];
+                r = f.hypot(g);
+                e[i + 1] = r;
+                if r == 0.0 {
+                    // Recover from underflow: skip this transformation.
+                    d[i + 1] -= p;
+                    e[m] = 0.0;
+                    underflow = true;
+                    break;
+                }
+                s = f / r;
+                c = g / r;
+                g = d[i + 1] - p;
+                r = (d[i] - g) * s + 2.0 * c * b;
+                p = s * r;
+                d[i + 1] = g + p;
+                g = c * r - b;
+                // Accumulate the rotation into the eigenvector matrix.
+                for k in 0..n {
+                    f = z[(k, i + 1)];
+                    z[(k, i + 1)] = s * z[(k, i)] + c * f;
+                    z[(k, i)] = c * z[(k, i)] - s * f;
+                }
+            }
+            if underflow {
+                continue;
+            }
+            d[l] -= p;
+            e[l] = g;
+            e[m] = 0.0;
+        }
+    }
+
+    // Sort eigenvalues ascending, permuting eigenvector columns to match.
+    let mut order: Vec<usize> = (0..n).collect();
+    order.sort_by(|&a, &b| d[a].partial_cmp(&d[b]).expect("non-finite eigenvalue"));
+    let values: Vec<f64> = order.iter().map(|&k| d[k]).collect();
+    let mut vectors = Matrix::zeros(n, n);
+    for (new_k, &old_k) in order.iter().enumerate() {
+        for i in 0..n {
+            vectors[(i, new_k)] = z[(i, old_k)];
+        }
+    }
+    Ok(SymTridEigen { values, vectors })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn dense_sym_tridiag(d: &[f64], e: &[f64]) -> Matrix {
+        let n = d.len();
+        let mut m = Matrix::zeros(n, n);
+        for i in 0..n {
+            m[(i, i)] = d[i];
+            if i + 1 < n {
+                m[(i, i + 1)] = e[i];
+                m[(i + 1, i)] = e[i];
+            }
+        }
+        m
+    }
+
+    fn reconstruct(eig: &SymTridEigen) -> Matrix {
+        let n = eig.values.len();
+        let v = &eig.vectors;
+        let mut out = Matrix::zeros(n, n);
+        for i in 0..n {
+            for j in 0..n {
+                let mut acc = 0.0;
+                for k in 0..n {
+                    acc += v[(i, k)] * eig.values[k] * v[(j, k)];
+                }
+                out[(i, j)] = acc;
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn two_by_two_closed_form() {
+        // [[a, b], [b, c]]: eigenvalues (a+c)/2 ± sqrt(((a-c)/2)² + b²).
+        let (a, b, c) = (3.0, 2.0, -1.0);
+        let eig = sym_tridiag_eigen(&[a, c], &[b]).unwrap();
+        let mid = (a + c) / 2.0;
+        let rad = (((a - c) / 2.0).powi(2) + b * b).sqrt();
+        assert!((eig.values[0] - (mid - rad)).abs() < 1e-14);
+        assert!((eig.values[1] - (mid + rad)).abs() < 1e-14);
+    }
+
+    #[test]
+    fn diagonal_matrix_passthrough() {
+        let eig = sym_tridiag_eigen(&[5.0, -2.0, 7.0, 0.5], &[0.0, 0.0, 0.0]).unwrap();
+        assert_eq!(eig.values, vec![-2.0, 0.5, 5.0, 7.0]);
+        // Each column is a signed unit basis vector.
+        for k in 0..4 {
+            let col: Vec<f64> = (0..4).map(|i| eig.vectors[(i, k)]).collect();
+            let nrm: f64 = col.iter().map(|x| x * x).sum();
+            assert!((nrm - 1.0).abs() < 1e-14);
+            assert_eq!(col.iter().filter(|x| x.abs() > 0.5).count(), 1);
+        }
+    }
+
+    #[test]
+    fn toeplitz_chain_known_spectrum() {
+        // d = -2, e = 1: eigenvalues -2 + 2cos(kπ/(n+1)), k = 1..=n.
+        let n = 24;
+        let eig = sym_tridiag_eigen(&vec![-2.0; n], &vec![1.0; n - 1]).unwrap();
+        let mut want: Vec<f64> = (1..=n)
+            .map(|k| -2.0 + 2.0 * (k as f64 * std::f64::consts::PI / (n as f64 + 1.0)).cos())
+            .collect();
+        want.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        for (got, want) in eig.values.iter().zip(&want) {
+            assert!((got - want).abs() < 1e-12, "{got} vs {want}");
+        }
+    }
+
+    #[test]
+    fn random_reconstruction_and_orthogonality() {
+        let mut rng = Rng::new(11);
+        for &n in &[1usize, 2, 3, 5, 17, 64, 128] {
+            let d: Vec<f64> = (0..n).map(|_| rng.normal(0.0, 2.0)).collect();
+            let e: Vec<f64> = (0..n.saturating_sub(1)).map(|_| rng.normal(0.0, 2.0)).collect();
+            let eig = sym_tridiag_eigen(&d, &e).unwrap();
+            let dense = dense_sym_tridiag(&d, &e);
+            let scale = dense.norm_inf().max(1.0);
+            let recon_err = reconstruct(&eig).max_abs_diff(&dense);
+            assert!(recon_err < 1e-12 * scale, "n={n}: recon err {recon_err}");
+            // Vᵀ V = I.
+            let v = &eig.vectors;
+            for a in 0..n {
+                for b in 0..n {
+                    let dot: f64 = (0..n).map(|i| v[(i, a)] * v[(i, b)]).sum();
+                    let want = if a == b { 1.0 } else { 0.0 };
+                    assert!((dot - want).abs() < 1e-12, "n={n} ({a},{b}): {dot}");
+                }
+            }
+            // Ascending order.
+            for w in eig.values.windows(2) {
+                assert!(w[0] <= w[1]);
+            }
+        }
+    }
+
+    #[test]
+    fn empty_and_singleton() {
+        let eig = sym_tridiag_eigen(&[], &[]).unwrap();
+        assert!(eig.values.is_empty());
+        let eig = sym_tridiag_eigen(&[4.5], &[]).unwrap();
+        assert_eq!(eig.values, vec![4.5]);
+        assert_eq!(eig.vectors[(0, 0)], 1.0);
+    }
+
+    #[test]
+    fn rejects_mismatched_bands() {
+        assert!(sym_tridiag_eigen(&[1.0, 2.0], &[]).is_err());
+        assert!(sym_tridiag_eigen(&[1.0, 2.0], &[0.5, 0.5]).is_err());
+    }
+}

@@ -85,6 +85,33 @@ impl Matrix {
         out
     }
 
+    /// Matrix–vector product `self · x` (dense rows dotted with `x`).
+    /// The spectral probe engine's row-contraction kernel.
+    pub fn matvec(&self, x: &[f64]) -> Vec<f64> {
+        assert_eq!(self.cols, x.len(), "matvec dims {}x{} @ {}", self.rows, self.cols, x.len());
+        let mut out = vec![0.0; self.rows];
+        for (i, o) in out.iter_mut().enumerate() {
+            let row = self.row(i);
+            let mut acc = 0.0;
+            for (a, b) in row.iter().zip(x) {
+                acc += a * b;
+            }
+            *o = acc;
+        }
+        out
+    }
+
+    /// Transposed copy.
+    pub fn transpose(&self) -> Matrix {
+        let mut out = Matrix::zeros(self.cols, self.rows);
+        for i in 0..self.rows {
+            for (j, &v) in self.row(i).iter().enumerate() {
+                out[(j, i)] = v;
+            }
+        }
+        out
+    }
+
     pub fn scale(&self, s: f64) -> Matrix {
         Matrix {
             rows: self.rows,
@@ -240,6 +267,22 @@ mod tests {
         assert_eq!(a.add(&b).data(), &[4.0, 7.0]);
         assert_eq!(b.sub(&a).data(), &[2.0, 3.0]);
         assert_eq!(a.scale(2.0).data(), &[2.0, 4.0]);
+    }
+
+    #[test]
+    fn matvec_matches_matmul() {
+        let a = Matrix::from_rows(&[vec![1.0, 0.0, 2.0], vec![0.0, 3.0, -1.0]]);
+        let got = a.matvec(&[2.0, 1.0, 0.5]);
+        assert_eq!(got, vec![3.0, 2.5]);
+    }
+
+    #[test]
+    fn transpose_roundtrip() {
+        let a = Matrix::from_rows(&[vec![1.0, 2.0, 3.0], vec![4.0, 5.0, 6.0]]);
+        let t = a.transpose();
+        assert_eq!((t.rows(), t.cols()), (3, 2));
+        assert_eq!(t[(2, 1)], 6.0);
+        assert_eq!(t.transpose(), a);
     }
 
     #[test]

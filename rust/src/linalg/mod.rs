@@ -6,11 +6,17 @@
 //! PJRT path can be cross-checked bit-for-bit-ish (same operation order up
 //! to matmul tiling) in integration tests, and so everything still runs
 //! when `artifacts/` has not been built.
+//!
+//! [`eigen`] (implicit-shift QL for symmetric tridiagonal matrices) is
+//! native-only: it backs the spectral probe engine's once-per-builder
+//! chain diagonalization (`markov::spectral`) and has no AOT twin.
 
 mod expm;
+pub mod eigen;
 mod matrix;
 mod tridiag;
 
+pub use eigen::{sym_tridiag_eigen, SymTridEigen};
 pub use expm::expm;
 pub use matrix::Matrix;
-pub use tridiag::{tridiag_solve, Tridiag};
+pub use tridiag::{tridiag_solve, tridiag_solve_vec, tridiag_solve_vec_into, Tridiag};

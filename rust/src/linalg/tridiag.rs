@@ -42,6 +42,24 @@ impl Tridiag {
         self.dd.len()
     }
 
+    /// Bands of the transposed matrix (`Tᵀ`): the sub/super diagonals swap
+    /// with a one-slot shift. Used by the probe engine's row solves
+    /// (`e_iᵀ M⁻¹ = (M⁻ᵀ e_i)ᵀ`).
+    pub fn transposed(&self) -> Tridiag {
+        let n = self.n();
+        let mut dl = vec![0.0; n];
+        let mut du = vec![0.0; n];
+        for i in 0..n {
+            if i > 0 {
+                dl[i] = self.du[i - 1];
+            }
+            if i + 1 < n {
+                du[i] = self.dl[i + 1];
+            }
+        }
+        Tridiag { dl, dd: self.dd.clone(), du }
+    }
+
     /// Reconstruct a dense matrix (tests / diagnostics).
     pub fn to_dense(&self) -> Matrix {
         let n = self.n();
@@ -106,6 +124,42 @@ pub fn tridiag_solve(t: &Tridiag, b: &Matrix) -> Matrix {
     x
 }
 
+/// Solve `T x = b` for a single right-hand side vector. Same Thomas
+/// elimination as [`tridiag_solve`] without the Matrix wrapper.
+pub fn tridiag_solve_vec(t: &Tridiag, b: &[f64]) -> Vec<f64> {
+    let mut cp = Vec::new();
+    let mut x = Vec::new();
+    tridiag_solve_vec_into(t, b, &mut cp, &mut x);
+    x
+}
+
+/// Allocation-free variant of [`tridiag_solve_vec`]: solves into `x`,
+/// using `cp` as scratch (both are resized to fit and their previous
+/// contents ignored). The probe engine's stationary iteration calls this
+/// once per chain per power step — its hottest loop — so repeated calls
+/// with the same buffers never touch the allocator.
+pub fn tridiag_solve_vec_into(t: &Tridiag, b: &[f64], cp: &mut Vec<f64>, x: &mut Vec<f64>) {
+    let n = t.n();
+    assert_eq!(b.len(), n, "rhs length");
+    cp.clear();
+    cp.resize(n, 0.0);
+    x.clear();
+    x.resize(n, 0.0);
+    if n == 0 {
+        return;
+    }
+    cp[0] = t.du[0] / t.dd[0];
+    x[0] = b[0] / t.dd[0];
+    for i in 1..n {
+        let denom = t.dd[i] - t.dl[i] * cp[i - 1];
+        cp[i] = t.du[i] / denom;
+        x[i] = (b[i] - t.dl[i] * x[i - 1]) / denom;
+    }
+    for i in (0..n - 1).rev() {
+        x[i] -= cp[i] * x[i + 1];
+    }
+}
+
 impl Matrix {
     /// Split the backing storage at a flat offset (row boundary) for
     /// simultaneous mutable access to distinct row ranges.
@@ -162,6 +216,44 @@ mod tests {
         assert!((x[(0, 0)] - 1.0).abs() < 1e-14);
         assert!((x[(1, 0)] + 2.0).abs() < 1e-14);
         assert!((x[(2, 0)] - 0.5).abs() < 1e-14);
+    }
+
+    #[test]
+    fn solve_vec_matches_matrix_solve() {
+        let mut rng = Rng::new(9);
+        let mut cp = Vec::new();
+        let mut xi = Vec::new();
+        for &n in &[1usize, 2, 7, 40] {
+            let (t, b) = random_dd_system(&mut rng, n, 1);
+            let xm = tridiag_solve(&t, &b);
+            let rhs: Vec<f64> = (0..n).map(|i| b[(i, 0)]).collect();
+            let xv = tridiag_solve_vec(&t, &rhs);
+            // The in-place variant must agree exactly (same arithmetic),
+            // including when the buffers are reused across sizes.
+            tridiag_solve_vec_into(&t, &rhs, &mut cp, &mut xi);
+            assert_eq!(xv, xi, "n={n}: into-variant diverged");
+            for i in 0..n {
+                assert!((xv[i] - xm[(i, 0)]).abs() < 1e-12, "n={n} i={i}");
+            }
+        }
+    }
+
+    #[test]
+    fn transposed_bands_solve_transposed_system() {
+        let mut rng = Rng::new(10);
+        let (t, _) = random_dd_system(&mut rng, 12, 1);
+        let tt = t.transposed();
+        assert_eq!(tt.to_dense(), t.to_dense().transpose());
+        // Tᵀ x = e_i gives row i of T⁻¹.
+        let inv = tridiag_solve(&t, &Matrix::identity(12));
+        for i in [0usize, 5, 11] {
+            let mut e = vec![0.0; 12];
+            e[i] = 1.0;
+            let row = tridiag_solve_vec(&tt, &e);
+            for j in 0..12 {
+                assert!((row[j] - inv[(i, j)]).abs() < 1e-11, "i={i} j={j}");
+            }
+        }
     }
 
     #[test]

@@ -1,70 +1,109 @@
-//! Incremental model builder — amortizes everything about `M^mall` that
-//! does **not** depend on the checkpointing interval across repeated
-//! builds, so interval-search probes (a dozen per `select_interval`) stop
-//! paying the full from-scratch construction cost.
+//! Incremental model builder + the **spectral probe engine** — amortizes
+//! everything reusable about `M^mall` across the interval-search probes.
 //!
-//! What is interval-independent (cached once per [`ModelInputs`]):
+//! ## Two probe paths
 //!
-//! * the [`StateSpace`] and the chain grouping of state ids;
-//! * the tridiagonal bands of `M_a = aλI − R_a` per chain (the resolvent
-//!   system behind `Q^Up` and `Q^Rec`);
-//! * **every up-state row of `P^mall`**: an up state exits through
-//!   `Q^Up = aλ(aλI − R)^{-1}`, which does not contain `δ` — both the
-//!   sparsity pattern and the values of the bulk of the matrix (the
-//!   `N(N+1)/2` up states out of `N(N+1)/2 + N + 1`) are constant across
-//!   probes and are stored once in flat CSR-like form.
+//! **Exact cached path** ([`ModelBuilder::build`], and [`ModelBuilder::uwt`]
+//! under [`BuildOptions::exact_probes`]): reproduces
+//! [`MalleableModel::build`] **bit for bit** — identical operations in
+//! identical order (same Ehrenfest closed form, same Thomas solves, same
+//! pruning/elimination thresholds, same CSR entry order, same cold-started
+//! damped power iteration). `rust/tests/engine_equivalence.rs` asserts
+//! equality probe by probe. Interval-independent pieces cached once per
+//! [`ModelInputs`]: the [`StateSpace`], the chain grouping, the tridiagonal
+//! bands of `M_a = aλI − R_a`, and (lazily, on the first `build`) every
+//! up-state row of `P^mall`.
 //!
-//! What is refreshed per probe (`δ_a = R̄_a + I + C_a` changes with `I`):
-//! `Q^{S,δ} = expm(Rδ)` and `Q^Rec` per chain (computed in parallel over
-//! the scoped pool, one chain block resident at a time), the recovery-state
-//! rows, the §IV elimination mask (it thresholds `e^{−aλδ}·Q^{S,δ}`, so it
-//! is value-dependent — this is why the *compacted* pattern cannot be
-//! fully frozen), the per-state weight triples, and the stationary solve.
+//! **Probe engine** ([`ModelBuilder::probe`], the default behind
+//! [`ModelBuilder::uwt`]): evaluates `UWT_I` without materializing the
+//! model at all, using three structural facts:
 //!
-//! The cached path reproduces [`MalleableModel::build`] **bit for bit**:
-//! identical operations in identical order (same Ehrenfest closed form,
-//! same Thomas solves, same pruning/elimination thresholds, same CSR entry
-//! order, same damped power iteration). `rust/tests/engine_equivalence.rs`
-//! asserts equality probe by probe.
+//! 1. only the *recovery-state rows* of `P^mall` depend on `δ` in a way
+//!    that needs recomputation per probe — and there are only O(N) of
+//!    them. Their `Q^{S,δ}` row comes from the per-chain **spectral cache**
+//!    (`expm(R_a δ) = D⁻¹Ṽ e^{Λδ} Ṽᵀ D`, diagonalized once per builder by
+//!    [`crate::linalg::sym_tridiag_eigen`]; see [`super::spectral`] for the
+//!    f64 envelope and the Ehrenfest fallback), and their `Q^Rec` row from
+//!    the commutation identity `M⁻¹Q = QM⁻¹` — two O(m) transposed Thomas
+//!    solves against the cached bands and the cached `y = M⁻ᵀe_{s1}`
+//!    ([`crate::runtime::native_chain_rec_row`]);
+//! 2. the up-state block of `P^mall` (the `N(N+1)/2` rows holding ~all of
+//!    the nnz) is `Q^Up = aλ(aλI − R)⁻¹` per chain, so `π ↦ πP` applies it
+//!    **implicitly**: gather the chain's π, one O(m) transposed Thomas
+//!    solve, scatter to the (cached) per-`s2` targets — the stationary
+//!    iteration never touches an up-row CSR
+//!    ([`crate::markov::stationary::stationary_apply`]);
+//! 3. π varies smoothly in `δ`, so each probe **warm-starts** the damped
+//!    power iteration from the previous probe's π (kept in full state-id
+//!    space, so the §IV elimination mask may differ between probes).
 //!
-//! Memory: the cached up rows hold O(Σ_a (N−a+1)²) ≈ N³/3 entries — at
-//! N = 512 roughly 0.5 GB, comparable to the transient peak of a single
-//! from-scratch assembly. Above [`UP_ROW_CACHE_MAX`] entries the builder
-//! degrades gracefully: bands and state space stay cached, up rows are
-//! rebuilt per probe.
+//! UWT needs no assembled matrix either: up rows always exit to
+//! recovery/down (their weight triple applies to their whole mass), so
+//! only the O(N) recovery rows need a mass split.
+//!
+//! ## Equivalence policy
+//!
+//! The probe engine is *tolerance-equivalent*, not bit-identical, to the
+//! seed oracle: the spectral/closed-form rows differ from the assembled
+//! matrix rows in float association, the implicit up-block skips the
+//! assembly's `PRUNE_EPS` pruning + renormalization (relative ~1e-13), and
+//! warm starts change iteration counts. The `engine_equivalence` tier pins:
+//! selected intervals **exactly**, UWT within **1e-9 relative**, π within
+//! 1e-8 absolute. Anything needing the seed floats (bisection, the oracle
+//! tests) sets [`BuildOptions::exact_probes`].
+//!
+//! Memory: the exact path's cached up rows hold O(Σ_a (N−a+1)²) ≈ N³/3
+//! entries — at N = 512 roughly 0.5 GB; above [`UP_ROW_CACHE_MAX`] entries
+//! they are rebuilt per probe instead. The probe engine needs none of
+//! that: its caches are O(N²) (bands, `y` vectors, scatter maps) plus the
+//! spectral bases of the small chains.
 
+use std::sync::{Mutex, OnceLock};
 use std::time::Instant;
 
-use anyhow::{ensure, Result};
+use anyhow::{bail, ensure, Result};
 
 use super::ehrenfest;
 use super::model::{BuildOptions, MalleableModel, ModelInputs};
 use super::sparse::SparseBuilder;
+use super::spectral::{bd_log_symmetrizer, ChainSpectral, SPECTRAL_LOG_RANGE_MAX};
 use super::states::{StateKind, StateSpace};
-use super::stationary::stationary;
+use super::stationary::{stationary, stationary_apply};
 use super::transitions::{TransitionSystem, PRUNE_EPS, W3};
-use super::uwt;
-use crate::linalg::{tridiag_solve, Matrix, Tridiag};
-use crate::runtime::ComputeEngine;
+use super::uwt::{self, UwtBreakdown};
+use crate::linalg::{tridiag_solve, tridiag_solve_vec, tridiag_solve_vec_into, Matrix, Tridiag};
+use crate::runtime::{native_chain_delta_row, native_chain_rec_row, ComputeEngine};
 use crate::util::pool;
 
 /// Cached-up-row budget, in matrix entries. Σ_a (N−a+1)² stays below this
 /// for N ≤ ~570 under Greedy (~0.77 GB); larger systems rebuild up rows
-/// per probe instead of caching them.
+/// per probe instead of caching them. (Exact path only — the probe engine
+/// applies the up block implicitly and never materializes these rows.)
 pub const UP_ROW_CACHE_MAX: usize = 64_000_000;
+
+/// Largest chain dimension `m = N−a+1` for which the builder pays the
+/// O(m³) eigendecomposition. Eligibility additionally requires every
+/// recovery row of the chain to sit inside the spectral f64 envelope
+/// ([`SPECTRAL_LOG_RANGE_MAX`]), which in practice is the binding
+/// constraint; chains outside either bound use the exact Ehrenfest row.
+pub const SPECTRAL_MAX_DIM: usize = 257;
 
 /// Reusable builder for [`MalleableModel`]s over one [`ModelInputs`].
 ///
-/// Construct once, then call [`ModelBuilder::build`] per interval. The
-/// fast cached path engages for [`ComputeEngine::Native`]; the generic
-/// and PJRT engines fall back to [`MalleableModel::build`] per probe
-/// (their chain matrices come fused from the artifact, so there is no
-/// interval-independent piece to reuse).
+/// Construct once, then call [`ModelBuilder::uwt`] (or
+/// [`ModelBuilder::probe`]) per interval-search probe and
+/// [`ModelBuilder::build`] when a full model is needed. The fast paths
+/// engage for [`ComputeEngine::Native`]; the generic and PJRT engines fall
+/// back to [`MalleableModel::build`] per probe (their chain matrices come
+/// fused from the artifact, so there is no interval-independent piece to
+/// reuse).
 pub struct ModelBuilder<'a> {
     inputs: &'a ModelInputs,
     engine: &'a ComputeEngine,
     opts: BuildOptions,
     cache: Option<NativeCache>,
+    /// Previous probe's π (full state-id space) for warm starts.
+    warm: Mutex<Option<Vec<f64>>>,
 }
 
 /// Flat storage for the interval-independent up-state rows, indexed by
@@ -74,6 +113,16 @@ struct UpRows {
     offsets: Vec<usize>,
     cols: Vec<u32>,
     vals: Vec<f64>,
+}
+
+/// One recovery state of a chain, with its cached δ-independent solve.
+struct RecState {
+    /// State id.
+    id: usize,
+    /// Spare count (row index into the chain's matrices).
+    s1: usize,
+    /// `y = M⁻ᵀ e_{s1}` — the δ-independent half of the `Q^Rec` row.
+    y: Vec<f64>,
 }
 
 struct NativeCache {
@@ -86,10 +135,23 @@ struct NativeCache {
     by_chain: Vec<Vec<usize>>,
     /// δ-independent bands of `M_a = aλI − R_a` per chain.
     bands: Vec<Tridiag>,
-    up_rows: Option<UpRows>,
+    /// Transposed bands (for the probe engine's row/vector solves).
+    bands_t: Vec<Tridiag>,
+    /// `(state id, s1)` of the up states per chain.
+    ups: Vec<Vec<(usize, usize)>>,
+    /// Recovery states per chain with cached `y` vectors.
+    recs: Vec<Vec<RecState>>,
+    /// Per chain: target state id for an exit at spare count `s2`
+    /// (recovery state for `a−1+s2` total, or the down state).
+    scatter: Vec<Vec<usize>>,
+    /// Spectral cache for eligible chains (see [`SPECTRAL_MAX_DIM`]).
+    spectral: Vec<Option<ChainSpectral>>,
+    /// Exact-path up rows, built lazily on the first `build` call.
+    up_rows: OnceLock<Option<UpRows>>,
+    workers: usize,
 }
 
-/// Per-probe, per-chain output of the parallel chain pass.
+/// Per-probe, per-chain output of the exact parallel chain pass.
 struct ChainOut {
     /// Keep flag per spare count `s2` for this chain's up states
     /// (empty when elimination is disabled).
@@ -104,6 +166,57 @@ struct ChainOut {
     up_w: W3,
     rec_succ: W3,
     rec_fail: W3,
+}
+
+/// Per-probe, per-chain output of the probe-engine chain pass: only the
+/// recovery rows (already pruned + renormalized) and the weight triples.
+struct ProbeChainOut {
+    keep_up: Vec<bool>,
+    eliminated: usize,
+    rec_rows: Vec<ProbeRecRow>,
+    up_w: W3,
+    rec_succ: W3,
+    rec_fail: W3,
+}
+
+struct ProbeRecRow {
+    id: usize,
+    /// Normalized `(target id, probability)` entries, success first.
+    entries: Vec<(usize, f64)>,
+    /// Total mass landing on up states (the UWT success split).
+    mass_up: f64,
+}
+
+/// One probe-engine evaluation of `UWT_I` (no assembled model).
+#[derive(Debug, Clone)]
+pub struct ProbeResult {
+    pub interval: f64,
+    pub uwt: f64,
+    pub breakdown: UwtBreakdown,
+    /// Stationary distribution over the **full** state-id space (zeros at
+    /// eliminated states).
+    pub pi: Vec<f64>,
+    /// Per state id: survived the §IV elimination.
+    pub keep: Vec<bool>,
+    pub eliminated: usize,
+    pub solve_iters: usize,
+}
+
+/// Weight triples (up exit, recovery success, recovery failure) for one
+/// chain at one interval — the single copy of the §III-B formulas shared
+/// by the exact pass and the probe pass. (The seed assembly in
+/// `transitions.rs` keeps its own copy; the equivalence tier pins the
+/// exact pass bit-identical to it, so this helper must compute the same
+/// expressions in the same order.)
+fn chain_weights(inputs: &ModelInputs, a: usize, interval: f64, delta: f64) -> (W3, W3, W3) {
+    let a_lam = a as f64 * inputs.system.lambda;
+    let t_cycle = interval + inputs.checkpoint_cost(a);
+    let u = interval / (a_lam * t_cycle).exp_m1();
+    let d = 1.0 / a_lam - u;
+    let w = inputs.work_per_sec(a) * u;
+    let w_s = inputs.work_per_sec(a) * interval;
+    let d_f = 1.0 / a_lam - delta / (a_lam * delta).exp_m1();
+    ((u, d, w), (interval, delta - interval, w_s), (0.0, d_f, 0.0))
 }
 
 /// Build the (pruned) row of one up state from its chain's `Q^Up`.
@@ -156,74 +269,150 @@ impl NativeCache {
             .iter()
             .map(|&a| super::birth_death::bd_resolvent_bands(n - a, lam, theta, a as f64 * lam))
             .collect();
+        let bands_t: Vec<Tridiag> = bands.iter().map(Tridiag::transposed).collect();
+
+        // Probe-engine caches: up/recovery id lists, y vectors, scatter
+        // targets, spectral bases. All O(N²) total except the spectral
+        // bases, which are bounded by the eligibility guards.
+        let mut ups: Vec<Vec<(usize, usize)>> = Vec::with_capacity(chain_ids.len());
+        let mut recs: Vec<Vec<RecState>> = Vec::with_capacity(chain_ids.len());
+        let mut scatter: Vec<Vec<usize>> = Vec::with_capacity(chain_ids.len());
+        for (ci, &a) in chain_ids.iter().enumerate() {
+            let m = n - a + 1;
+            let mut u = Vec::new();
+            let mut r = Vec::new();
+            for &id in &by_chain[ci] {
+                match space.kind(id) {
+                    StateKind::Up { s, .. } => u.push((id, s)),
+                    StateKind::Recovery { s, .. } => {
+                        let mut e = vec![0.0; m];
+                        e[s] = 1.0;
+                        let y = tridiag_solve_vec(&bands_t[ci], &e);
+                        r.push(RecState { id, s1: s, y });
+                    }
+                    StateKind::Down => unreachable!(),
+                }
+            }
+            let mut sc = Vec::with_capacity(m);
+            for s2 in 0..m {
+                let tot = a - 1 + s2;
+                sc.push(if tot == 0 {
+                    space.down_id()
+                } else {
+                    space.recovery_id_for_total(tot).unwrap()
+                });
+            }
+            ups.push(u);
+            recs.push(r);
+            scatter.push(sc);
+        }
+
+        let spectral: Vec<Option<ChainSpectral>> =
+            pool::run_indexed(chain_ids.len(), workers.max(1), |ci| {
+                let a = chain_ids[ci];
+                let s_max = n - a;
+                if s_max + 1 > SPECTRAL_MAX_DIM || recs[ci].is_empty() {
+                    return None;
+                }
+                let ld = bd_log_symmetrizer(s_max, lam, theta);
+                let ld_max = ld.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+                let in_range = recs[ci]
+                    .iter()
+                    .all(|r| ld_max - ld[r.s1] <= SPECTRAL_LOG_RANGE_MAX);
+                if !in_range {
+                    return None;
+                }
+                ChainSpectral::new(s_max, lam, theta).ok()
+            });
+
+        NativeCache {
+            space,
+            chain_ids,
+            chain_pos,
+            by_chain,
+            bands,
+            bands_t,
+            ups,
+            recs,
+            scatter,
+            spectral,
+            up_rows: OnceLock::new(),
+            workers: workers.max(1),
+        }
+    }
+
+    /// The exact path's cached up rows, built on first use (`None` when
+    /// the system exceeds [`UP_ROW_CACHE_MAX`]). The probe engine never
+    /// triggers this.
+    fn up_rows(&self, inputs: &ModelInputs) -> Option<&UpRows> {
+        self.up_rows.get_or_init(|| self.build_up_rows(inputs)).as_ref()
+    }
+
+    fn build_up_rows(&self, inputs: &ModelInputs) -> Option<UpRows> {
+        let n = inputs.system.n;
+        let lam = inputs.system.lambda;
+        let n_states = self.space.len();
 
         // Worst-case cached-entry count: every up state of chain `a` has
         // at most m = N - a + 1 targets.
-        let nnz_est: usize = chain_ids
+        let nnz_est: usize = self
+            .chain_ids
             .iter()
             .enumerate()
-            .map(|(ci, &a)| {
-                let ups = by_chain[ci]
-                    .iter()
-                    .filter(|&&id| space.kind(id).is_up())
-                    .count();
-                ups * (n - a + 1)
-            })
+            .map(|(ci, &a)| self.ups[ci].len() * (n - a + 1))
             .sum();
+        if nnz_est > UP_ROW_CACHE_MAX {
+            return None;
+        }
 
-        let up_rows = if nnz_est <= UP_ROW_CACHE_MAX {
-            // Q^Up per chain in parallel; rows flattened by state id.
-            let per_chain: Vec<Vec<(usize, Vec<(usize, f64)>)>> =
-                pool::run_indexed(chain_ids.len(), workers.max(1), |ci| {
-                    let a = chain_ids[ci];
-                    let s_max = n - a;
-                    let m = s_max + 1;
-                    let a_lam = a as f64 * lam;
-                    let q_up = tridiag_solve(&bands[ci], &Matrix::identity(m)).scale(a_lam);
-                    let mut rows = Vec::new();
-                    for &id in &by_chain[ci] {
-                        if let StateKind::Up { s: s1, .. } = space.kind(id) {
-                            rows.push((id, up_row_entries(&space, &q_up, a, s1, m)));
-                        }
-                    }
-                    rows
-                });
-            let mut by_id: Vec<Option<Vec<(usize, f64)>>> = vec![None; n_states];
-            for rows in per_chain {
-                for (id, row) in rows {
-                    by_id[id] = Some(row);
-                }
-            }
-            let mut offsets = Vec::with_capacity(n_states + 1);
-            let mut cols = Vec::new();
-            let mut vals = Vec::new();
-            offsets.push(0);
-            for row in &by_id {
-                if let Some(entries) = row {
-                    for &(c, v) in entries {
-                        cols.push(c as u32);
-                        vals.push(v);
+        // Q^Up per chain in parallel; rows flattened by state id.
+        let per_chain: Vec<Vec<(usize, Vec<(usize, f64)>)>> =
+            pool::run_indexed(self.chain_ids.len(), self.workers, |ci| {
+                let a = self.chain_ids[ci];
+                let s_max = n - a;
+                let m = s_max + 1;
+                let a_lam = a as f64 * lam;
+                let q_up = tridiag_solve(&self.bands[ci], &Matrix::identity(m)).scale(a_lam);
+                let mut rows = Vec::new();
+                for &id in &self.by_chain[ci] {
+                    if let StateKind::Up { s: s1, .. } = self.space.kind(id) {
+                        rows.push((id, up_row_entries(&self.space, &q_up, a, s1, m)));
                     }
                 }
-                offsets.push(cols.len());
+                rows
+            });
+        let mut by_id: Vec<Option<Vec<(usize, f64)>>> = vec![None; n_states];
+        for rows in per_chain {
+            for (id, row) in rows {
+                by_id[id] = Some(row);
             }
-            Some(UpRows { offsets, cols, vals })
-        } else {
-            None
-        };
-
-        NativeCache { space, chain_ids, chain_pos, by_chain, bands, up_rows }
+        }
+        let mut offsets = Vec::with_capacity(n_states + 1);
+        let mut cols = Vec::new();
+        let mut vals = Vec::new();
+        offsets.push(0);
+        for row in &by_id {
+            if let Some(entries) = row {
+                for &(c, v) in entries {
+                    cols.push(c as u32);
+                    vals.push(v);
+                }
+            }
+            offsets.push(cols.len());
+        }
+        Some(UpRows { offsets, cols, vals })
     }
 }
 
-/// δ-dependent work for one chain of one probe. Mirrors the per-chain
-/// computations of `native_chain_probs_fast` + `TransitionSystem::assemble`
-/// expression by expression.
+/// δ-dependent work for one chain of one probe (exact path). Mirrors the
+/// per-chain computations of `native_chain_probs_fast` +
+/// `TransitionSystem::assemble` expression by expression.
 fn chain_pass(
     c: &NativeCache,
     inputs: &ModelInputs,
     interval: f64,
     thres: f64,
+    up_rows_cached: bool,
     ci: usize,
 ) -> ChainOut {
     let a = c.chain_ids[ci];
@@ -302,7 +491,7 @@ fn chain_pass(
     }
 
     // Fresh up rows only when the cache was disabled for size.
-    let up_rows_fresh = if c.up_rows.is_none() {
+    let up_rows_fresh = if !up_rows_cached {
         let q_up = tridiag_solve(&c.bands[ci], &Matrix::identity(m)).scale(a_lam);
         let mut rows = Vec::new();
         for &id in ids {
@@ -318,26 +507,13 @@ fn chain_pass(
         None
     };
 
-    let t_cycle = interval + inputs.checkpoint_cost(a);
-    let u = interval / (a_lam * t_cycle).exp_m1();
-    let d = 1.0 / a_lam - u;
-    let w = inputs.work_per_sec(a) * u;
-    let w_s = inputs.work_per_sec(a) * interval;
-    let d_f = 1.0 / a_lam - delta / (a_lam * delta).exp_m1();
-
-    ChainOut {
-        keep_up,
-        eliminated,
-        rec_rows,
-        up_rows_fresh,
-        up_w: (u, d, w),
-        rec_succ: (interval, delta - interval, w_s),
-        rec_fail: (0.0, d_f, 0.0),
-    }
+    let (up_w, rec_succ, rec_fail) = chain_weights(inputs, a, interval, delta);
+    ChainOut { keep_up, eliminated, rec_rows, up_rows_fresh, up_w, rec_succ, rec_fail }
 }
 
 /// The per-probe cached build (free function so parallel callers can hold
-/// only `Sync` pieces — no engine handle involved).
+/// only `Sync` pieces — no engine handle involved). Exact path: bit
+/// identical to [`MalleableModel::build`].
 fn build_cached(
     c: &NativeCache,
     inputs: &ModelInputs,
@@ -352,8 +528,11 @@ fn build_cached(
     let n_states = c.space.len();
     let workers = opts.workers.max(1);
 
+    // Force the lazy up-row cache once, outside the parallel pass.
+    let up_rows_cached = c.up_rows(inputs).is_some();
+
     let outs: Vec<ChainOut> = pool::run_indexed(c.chain_ids.len(), workers, |ci| {
-        chain_pass(c, inputs, interval, thres, ci)
+        chain_pass(c, inputs, interval, thres, up_rows_cached, ci)
     });
 
     // Fold chain-local elimination into the global keep mask.
@@ -407,7 +586,7 @@ fn build_cached(
         let kind = c.space.kind(id);
         match kind {
             StateKind::Up { a, .. } => {
-                if let Some(up) = &c.up_rows {
+                if let Some(up) = c.up_rows(inputs) {
                     let (lo, hi) = (up.offsets[id], up.offsets[id + 1]);
                     for k in lo..hi {
                         scratch.push((mapping[up.cols[k] as usize], up.vals[k]));
@@ -461,6 +640,262 @@ fn build_cached(
     ))
 }
 
+/// δ-dependent work for one chain of one probe-engine evaluation: the
+/// recovery rows (spectral or closed-form `Q^{S,δ}` row + solve-identity
+/// `Q^Rec` row), the §IV elimination mask and the weight triples. Same
+/// thresholds, prune epsilon and entry order as [`chain_pass`].
+fn probe_chain_pass(
+    c: &NativeCache,
+    inputs: &ModelInputs,
+    interval: f64,
+    thres: f64,
+    ci: usize,
+) -> ProbeChainOut {
+    let a = c.chain_ids[ci];
+    let n = inputs.system.n;
+    let lam = inputs.system.lambda;
+    let theta = inputs.system.theta;
+    let s_max = n - a;
+    let m = s_max + 1;
+    let a_lam = a as f64 * lam;
+    let delta = inputs.delta(a, interval);
+    let p_succ = (-a_lam * delta).exp();
+
+    let recs = &c.recs[ci];
+    let q_rows: Vec<Vec<f64>> = recs
+        .iter()
+        .map(|r| {
+            c.spectral[ci]
+                .as_ref()
+                .and_then(|sp| sp.expm_row_checked(delta, r.s1))
+                .unwrap_or_else(|| native_chain_delta_row(s_max, lam, theta, delta, r.s1))
+        })
+        .collect();
+
+    let mut keep_up: Vec<bool> = Vec::new();
+    let mut eliminated = 0usize;
+    if thres > 0.0 {
+        let mut max_in = vec![0.0f64; m];
+        for q in &q_rows {
+            for (s2, &qv) in q.iter().enumerate() {
+                let p = p_succ * qv;
+                if p > max_in[s2] {
+                    max_in[s2] = p;
+                }
+            }
+        }
+        keep_up = vec![true; m];
+        for (s2, &mi) in max_in.iter().enumerate() {
+            if mi < thres && c.space.up_id(a, s2).is_some() {
+                keep_up[s2] = false;
+                eliminated += 1;
+            }
+        }
+    }
+
+    let mut rec_rows = Vec::with_capacity(recs.len());
+    for (r, q_row) in recs.iter().zip(&q_rows) {
+        let rec_q = native_chain_rec_row(&c.bands_t[ci], &r.y, q_row, a_lam, delta);
+        let mut entries: Vec<(usize, f64)> = Vec::new();
+        for (s2, &qv) in q_row.iter().enumerate() {
+            let p = p_succ * qv;
+            if p >= PRUNE_EPS {
+                let target = c.space.up_id(a, s2).unwrap();
+                if keep_up.is_empty() || keep_up[s2] {
+                    entries.push((target, p));
+                }
+            }
+        }
+        let n_succ = entries.len();
+        for (s2, &rv) in rec_q.iter().enumerate() {
+            let p = (1.0 - p_succ) * rv;
+            if p < PRUNE_EPS {
+                continue;
+            }
+            let target = c.scatter[ci][s2];
+            entries.push((target, p));
+        }
+        let total: f64 = entries.iter().map(|&(_, p)| p).sum();
+        if total > 0.0 {
+            for e in entries.iter_mut() {
+                e.1 /= total;
+            }
+        }
+        let mass_up: f64 = entries[..n_succ].iter().map(|&(_, p)| p).sum();
+        rec_rows.push(ProbeRecRow { id: r.id, entries, mass_up });
+    }
+
+    let (up_w, rec_succ, rec_fail) = chain_weights(inputs, a, interval, delta);
+    ProbeChainOut { keep_up, eliminated, rec_rows, up_w, rec_succ, rec_fail }
+}
+
+/// One probe-engine evaluation: rec rows + implicit stationary solve +
+/// weight contraction. No CSR, no up rows, warm-started π.
+fn probe_cached(
+    c: &NativeCache,
+    inputs: &ModelInputs,
+    opts: &BuildOptions,
+    interval: f64,
+    warm: &Mutex<Option<Vec<f64>>>,
+) -> Result<ProbeResult> {
+    ensure!(interval > 0.0, "interval must be positive");
+    let n = inputs.system.n;
+    let lam = inputs.system.lambda;
+    let theta = inputs.system.theta;
+    let thres = opts.thres.unwrap_or(0.0).max(0.0);
+    let workers = opts.workers.max(1);
+    let n_states = c.space.len();
+    let down_id = c.space.down_id();
+    let rec1 = c.space.recovery_id_for_total(1).unwrap();
+
+    let outs: Vec<ProbeChainOut> = pool::run_indexed(c.chain_ids.len(), workers, |ci| {
+        probe_chain_pass(c, inputs, interval, thres, ci)
+    });
+
+    // Fold chain-local elimination into the global keep mask.
+    let mut keep = vec![true; n_states];
+    let mut eliminated = 0usize;
+    for (ci, out) in outs.iter().enumerate() {
+        let a = c.chain_ids[ci];
+        for (s2, &k) in out.keep_up.iter().enumerate() {
+            if !k {
+                if let Some(id) = c.space.up_id(a, s2) {
+                    keep[id] = false;
+                }
+            }
+        }
+        eliminated += out.eliminated;
+    }
+
+    // Warm start from the previous probe's π (masked to this probe's
+    // surviving states); fall back to uniform-over-kept.
+    let prior = warm.lock().unwrap().clone();
+    let pi0: Vec<f64> = match prior {
+        Some(mut v) if v.len() == n_states => {
+            for (id, &k) in keep.iter().enumerate() {
+                if !k {
+                    v[id] = 0.0;
+                }
+            }
+            let s: f64 = v.iter().sum();
+            if s > 0.0 && s.is_finite() {
+                v
+            } else {
+                uniform_over(&keep)
+            }
+        }
+        _ => uniform_over(&keep),
+    };
+
+    // π ↦ πP with the up block applied through the cached resolvent
+    // bands. The three buffers live across iterations: the hot loop
+    // (chains × power steps) never allocates.
+    let mut xa: Vec<f64> = Vec::new();
+    let mut cp_buf: Vec<f64> = Vec::new();
+    let mut z_buf: Vec<f64> = Vec::new();
+    let (pi, solve_iters) = stationary_apply(
+        n_states,
+        |x: &[f64], out: &mut [f64]| {
+            out.fill(0.0);
+            for ci in 0..c.chain_ids.len() {
+                let a = c.chain_ids[ci];
+                let a_lam = a as f64 * lam;
+                let m = n - a + 1;
+                xa.clear();
+                xa.resize(m, 0.0);
+                let mut any = false;
+                for &(id, s1) in &c.ups[ci] {
+                    let v = x[id];
+                    if v != 0.0 {
+                        xa[s1] = v;
+                        any = true;
+                    }
+                }
+                if any {
+                    tridiag_solve_vec_into(&c.bands_t[ci], &xa, &mut cp_buf, &mut z_buf);
+                    let sc = &c.scatter[ci];
+                    for (s2, &zv) in z_buf.iter().enumerate() {
+                        if zv != 0.0 {
+                            out[sc[s2]] += a_lam * zv;
+                        }
+                    }
+                }
+                for rr in &outs[ci].rec_rows {
+                    let v = x[rr.id];
+                    if v != 0.0 {
+                        for &(t, p) in &rr.entries {
+                            out[t] += v * p;
+                        }
+                    }
+                }
+            }
+            out[rec1] += x[down_id];
+        },
+        Some(&pi0),
+        &opts.stationary,
+    )?;
+
+    // UWT (Eq. 7) without the assembled matrix: up rows always exit to
+    // recovery/down, so their whole mass carries the up triple; only the
+    // O(N) recovery rows need the success/failure split.
+    let mut num_u = 0.0f64;
+    let mut num_d = 0.0f64;
+    let mut num_w = 0.0f64;
+    for (ci, out) in outs.iter().enumerate() {
+        let (us, ds, ws) = out.up_w;
+        for &(id, _) in &c.ups[ci] {
+            let p = pi[id];
+            if p != 0.0 {
+                num_u += p * us;
+                num_d += p * ds;
+                num_w += p * ws;
+            }
+        }
+        let (su, sd, sw) = out.rec_succ;
+        let (fu, fd, fw) = out.rec_fail;
+        for rr in &out.rec_rows {
+            let p = pi[rr.id];
+            if p == 0.0 {
+                continue;
+            }
+            let mu = rr.mass_up;
+            let mo = 1.0 - mu;
+            num_u += p * (mu * su + mo * fu);
+            num_d += p * (mu * sd + mo * fd);
+            num_w += p * (mu * sw + mo * fw);
+        }
+    }
+    num_d += pi[down_id] * (1.0 / (n as f64 * theta));
+
+    let total = num_u + num_d;
+    let breakdown = UwtBreakdown {
+        uwt: if total > 0.0 { num_w / total } else { 0.0 },
+        availability: if total > 0.0 { num_u / total } else { 0.0 },
+        mean_useful: num_u,
+        mean_down: num_d,
+        mean_work: num_w,
+    };
+
+    *warm.lock().unwrap() = Some(pi.clone());
+
+    Ok(ProbeResult {
+        interval,
+        uwt: breakdown.uwt,
+        breakdown,
+        pi,
+        keep,
+        eliminated,
+        solve_iters,
+    })
+}
+
+/// Uniform distribution over the kept states (zeros elsewhere).
+fn uniform_over(keep: &[bool]) -> Vec<f64> {
+    let kept = keep.iter().filter(|&&k| k).count().max(1);
+    let w = 1.0 / kept as f64;
+    keep.iter().map(|&k| if k { w } else { 0.0 }).collect()
+}
+
 impl<'a> ModelBuilder<'a> {
     /// Prepare the interval-independent caches. Cheap for the non-native
     /// engines (no cache; builds delegate to [`MalleableModel::build`]).
@@ -474,7 +909,7 @@ impl<'a> ModelBuilder<'a> {
         } else {
             None
         };
-        Ok(ModelBuilder { inputs, engine, opts: *opts, cache })
+        Ok(ModelBuilder { inputs, engine, opts: *opts, cache, warm: Mutex::new(None) })
     }
 
     /// Whether the incremental cached path is active.
@@ -482,8 +917,17 @@ impl<'a> ModelBuilder<'a> {
         self.cache.is_some()
     }
 
+    /// Number of chains with an active spectral cache (diagnostics).
+    pub fn spectral_chains(&self) -> usize {
+        self.cache
+            .as_ref()
+            .map(|c| c.spectral.iter().filter(|s| s.is_some()).count())
+            .unwrap_or(0)
+    }
+
     /// Build and solve `M^mall` for one interval, reusing every cached
-    /// interval-independent piece.
+    /// interval-independent piece. Bit-identical to
+    /// [`MalleableModel::build`] on the native engine.
     pub fn build(&self, interval: f64) -> Result<MalleableModel> {
         match &self.cache {
             Some(c) => build_cached(c, self.inputs, &self.opts, interval),
@@ -491,9 +935,28 @@ impl<'a> ModelBuilder<'a> {
         }
     }
 
-    /// `UWT_I` for one interval (the interval-search objective).
+    /// One probe-engine evaluation of `UWT_I` (spectral rec rows, implicit
+    /// up block, warm-started π). Tolerance-equivalent to
+    /// [`ModelBuilder::build`] — see the module docs for the pinned
+    /// bounds. Requires the native cached engine.
+    pub fn probe(&self, interval: f64) -> Result<ProbeResult> {
+        match &self.cache {
+            Some(c) => probe_cached(c, self.inputs, &self.opts, interval, &self.warm),
+            None => bail!("the probe engine requires the native cached engine"),
+        }
+    }
+
+    /// `UWT_I` for one interval (the interval-search objective). Routes
+    /// through the probe engine unless [`BuildOptions::exact_probes`] is
+    /// set (or the engine has no native cache), in which case the exact
+    /// cached build answers.
     pub fn uwt(&self, interval: f64) -> Result<f64> {
-        Ok(self.build(interval)?.uwt())
+        match &self.cache {
+            Some(c) if !self.opts.exact_probes => {
+                Ok(probe_cached(c, self.inputs, &self.opts, interval, &self.warm)?.uwt)
+            }
+            _ => Ok(self.build(interval)?.uwt()),
+        }
     }
 }
 
@@ -564,6 +1027,10 @@ mod tests {
         assert!(!builder.is_cached());
         let m = builder.build(3_600.0).unwrap();
         assert!(m.uwt() > 0.0);
+        // The probe engine needs the native cache.
+        assert!(builder.probe(3_600.0).is_err());
+        // uwt() still answers through the fallback build.
+        assert!(builder.uwt(3_600.0).unwrap() > 0.0);
     }
 
     #[test]
@@ -573,5 +1040,98 @@ mod tests {
         let builder = ModelBuilder::new(&inputs, &engine, &BuildOptions::default()).unwrap();
         assert!(builder.build(0.0).is_err());
         assert!(builder.build(-1.0).is_err());
+        assert!(builder.probe(0.0).is_err());
+        assert!(builder.probe(-1.0).is_err());
+    }
+
+    // ---- probe engine (tolerance tier; the full grid lives in
+    // rust/tests/engine_equivalence.rs) ----
+
+    fn assert_probe_matches_model(probe: &ProbeResult, model: &MalleableModel) {
+        let rel = (probe.uwt - model.uwt()).abs() / model.uwt().abs().max(1e-300);
+        assert!(rel < 1e-9, "UWT rel diff {rel}: {} vs {}", probe.uwt, model.uwt());
+        assert_eq!(
+            probe.keep.iter().filter(|&&k| k).count(),
+            model.n_states(),
+            "kept-state count diverged"
+        );
+        // π agrees entry-wise after compaction (probe π is full-id).
+        let compact: Vec<f64> = probe
+            .keep
+            .iter()
+            .zip(&probe.pi)
+            .filter(|(&k, _)| k)
+            .map(|(_, &p)| p)
+            .collect();
+        for (i, (a, b)) in compact.iter().zip(model.stationary_distribution()).enumerate() {
+            assert!((a - b).abs() < 1e-8, "π[{i}]: {a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn probe_matches_build_small_greedy() {
+        let inputs = small_inputs(9);
+        let engine = ComputeEngine::native();
+        let builder = ModelBuilder::new(&inputs, &engine, &BuildOptions::default()).unwrap();
+        for interval in [300.0, 1_800.0, 7_200.0, 40_000.0] {
+            let probe = builder.probe(interval).unwrap();
+            let model = builder.build(interval).unwrap();
+            assert_eq!(probe.eliminated, model.eliminated);
+            assert_probe_matches_model(&probe, &model);
+        }
+    }
+
+    #[test]
+    fn probe_matches_build_capped_policy_no_elim() {
+        let mut inputs = small_inputs(11);
+        let rp: Vec<usize> = (1..=11).map(|t| t.min(4)).collect();
+        inputs.policy = ReschedulingPolicy::from_vector(rp).unwrap();
+        let engine = ComputeEngine::native();
+        let opts = BuildOptions { thres: None, ..Default::default() };
+        let builder = ModelBuilder::new(&inputs, &engine, &opts).unwrap();
+        for interval in [900.0, 10_000.0] {
+            let probe = builder.probe(interval).unwrap();
+            let model = builder.build(interval).unwrap();
+            assert_eq!(probe.eliminated, 0);
+            assert_probe_matches_model(&probe, &model);
+        }
+    }
+
+    #[test]
+    fn warm_start_shortens_repeat_probe() {
+        let inputs = small_inputs(8);
+        let engine = ComputeEngine::native();
+        let builder = ModelBuilder::new(&inputs, &engine, &BuildOptions::default()).unwrap();
+        let first = builder.probe(3_600.0).unwrap();
+        let again = builder.probe(3_600.0).unwrap();
+        assert!(
+            again.solve_iters <= first.solve_iters,
+            "warm {} !<= cold {}",
+            again.solve_iters,
+            first.solve_iters
+        );
+        let rel = (first.uwt - again.uwt).abs() / first.uwt;
+        assert!(rel < 1e-9, "repeat probe moved UWT by {rel}");
+    }
+
+    #[test]
+    fn exact_probes_pins_uwt_to_build() {
+        let inputs = small_inputs(7);
+        let engine = ComputeEngine::native();
+        let opts = BuildOptions { exact_probes: true, ..Default::default() };
+        let builder = ModelBuilder::new(&inputs, &engine, &opts).unwrap();
+        for interval in [600.0, 3_600.0] {
+            let via_uwt = builder.uwt(interval).unwrap();
+            let via_build = builder.build(interval).unwrap().uwt();
+            assert_eq!(via_uwt, via_build, "exact_probes must reuse the exact build");
+        }
+    }
+
+    #[test]
+    fn spectral_cache_engages_on_small_chains() {
+        let inputs = small_inputs(4);
+        let engine = ComputeEngine::native();
+        let builder = ModelBuilder::new(&inputs, &engine, &BuildOptions::default()).unwrap();
+        assert!(builder.spectral_chains() > 0, "no chain qualified for the spectral cache");
     }
 }

@@ -19,8 +19,13 @@
 //! [`model::MalleableModel`] ties the steps together; [`model::ModelInputs`]
 //! is the user-facing parameter bundle (paper §III-C). [`builder::ModelBuilder`]
 //! amortizes steps 1–4 across repeated builds of the same inputs at
-//! different intervals (the interval-search hot path): only the
-//! `δ`-dependent rates are refreshed per probe, with bit-identical output.
+//! different intervals (the interval-search hot path): its exact path
+//! refreshes only the `δ`-dependent rates per probe with bit-identical
+//! output, while its default **probe engine** ([`builder::ModelBuilder::probe`])
+//! evaluates `UWT_I` without assembling the model at all — spectral
+//! recovery rows ([`spectral`]), an implicit up-state block inside the
+//! stationary iteration, warm-started π — tolerance-pinned to the exact
+//! path by `rust/tests/engine_equivalence.rs`.
 
 pub mod birth_death;
 pub mod builder;
@@ -28,12 +33,13 @@ pub mod ehrenfest;
 pub mod model;
 pub mod reduction;
 pub mod sparse;
+pub mod spectral;
 pub mod states;
 pub mod stationary;
 pub mod transitions;
 pub mod uwt;
 
-pub use builder::ModelBuilder;
+pub use builder::{ModelBuilder, ProbeResult};
 pub use model::{BuildOptions, MalleableModel, ModelInputs};
 pub use sparse::SparseMatrix;
 pub use states::{StateKind, StateSpace};

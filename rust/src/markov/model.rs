@@ -110,6 +110,14 @@ pub struct BuildOptions {
     /// Worker threads for chain evaluation (native engine only).
     pub workers: usize,
     pub stationary: StationaryOptions,
+    /// Force interval-search probes through the exact (bit-identical to
+    /// seed) cached build instead of the spectral/warm-started probe
+    /// engine. The exact path reproduces `MalleableModel::build` float for
+    /// float; the default probe engine is pinned to it by the tolerance
+    /// tier in `rust/tests/engine_equivalence.rs` (UWT within 1e-9
+    /// relative, identical selected intervals). Oracle tests and bisection
+    /// set this to `true`.
+    pub exact_probes: bool,
 }
 
 impl Default for BuildOptions {
@@ -118,6 +126,7 @@ impl Default for BuildOptions {
             thres: Some(6e-4),
             workers: pool::default_workers(),
             stationary: StationaryOptions::default(),
+            exact_probes: false,
         }
     }
 }

@@ -1,0 +1,297 @@
+//! Spectral cache for birth–death chain generators — the δ-dependent half
+//! of the probe engine.
+//!
+//! A birth–death generator `R` (rates `s → s−1` at `sλ`, `s → s+1` at
+//! `(S−s)θ`) is diagonally symmetrizable: with `D = diag(d)` where
+//! `d_{s+1}/d_s = sqrt((S−s)θ / ((s+1)λ))` (detailed balance: `d_s²∝π_s`),
+//! `S̃ = D R D⁻¹` is symmetric tridiagonal with off-diagonal
+//! `sqrt((S−s)θ·(s+1)λ)`. Diagonalizing `S̃ = Ṽ Λ Ṽᵀ` **once** per chain
+//! ([`crate::linalg::sym_tridiag_eigen`]) turns every probe's matrix
+//! exponential into a diagonal scaling:
+//!
+//! ```text
+//!   expm(R·δ) = D⁻¹ · Ṽ · exp(Λδ) · Ṽᵀ · D
+//! ```
+//!
+//! i.e. two small matrix products ([`ChainSpectral::expm`]), or — since the
+//! model builder only needs the *recovery-state rows* per probe — one
+//! matrix–vector contraction per row ([`ChainSpectral::expm_row`]).
+//!
+//! ## f64 envelope (why there is a guard)
+//!
+//! `log d` grows like `0.5·s·ln(θ/λ)`, so the scaling `e^{ld_{s2}−ld_{s1}}`
+//! spans hundreds of orders of magnitude on production-scale chains. The
+//! spectral contraction then amplifies rounding in the eigenbasis by up to
+//! `e^{range}` in *absolute* row terms (observed empirically: fine at range
+//! ≈ 20, garbage at range ≈ 30 for small `δ` where `exp(Λδ)` provides no
+//! mode decay). [`ChainSpectral::expm_row_checked`] therefore only answers
+//! when the row's log range is within [`SPECTRAL_LOG_RANGE_MAX`] *and* the
+//! computed row passes a stochasticity check; callers fall back to the
+//! exact Ehrenfest closed form ([`super::ehrenfest::transition_row`])
+//! otherwise. `Q^Rec` rows are never computed spectrally: their transfer
+//! function decays only polynomially in the mode index, which loses
+//! another `e^{range}` — the builder uses the commutation identity
+//! `M⁻¹Q = QM⁻¹` and an O(n) transposed Thomas solve instead (see
+//! `markov::builder`).
+
+use anyhow::{ensure, Result};
+
+use crate::linalg::{sym_tridiag_eigen, Matrix};
+
+/// Maximum `max_s ld_s − ld_{s1}` for which the spectral row contraction
+/// stays within ~1e-11 absolute error (error model: ε·e^{range}; see the
+/// module docs). Beyond this the caller must use the closed-form row.
+pub const SPECTRAL_LOG_RANGE_MAX: f64 = 12.0;
+
+/// Tolerances for the post-hoc row check: a spectral row must be finite,
+/// at worst this negative, and sum to 1 within this slack.
+const ROW_NEG_TOL: f64 = 1e-11;
+const ROW_SUM_TOL: f64 = 1e-9;
+
+/// Log of the symmetrizing diagonal `d` (`d_0 = 1`) for the birth–death
+/// chain of `s_max` spares. Cheap (O(n)): the builder uses it to decide
+/// spectral eligibility *before* paying for the eigendecomposition.
+pub fn bd_log_symmetrizer(s_max: usize, lambda: f64, theta: f64) -> Vec<f64> {
+    let mut ld = vec![0.0f64; s_max + 1];
+    for s in 0..s_max {
+        let up = (s_max - s) as f64 * theta;
+        let down = (s + 1) as f64 * lambda;
+        ld[s + 1] = ld[s] + 0.5 * (up.ln() - down.ln());
+    }
+    ld
+}
+
+/// One chain's cached spectral decomposition `R = D⁻¹ Ṽ Λ Ṽᵀ D`.
+#[derive(Debug, Clone)]
+pub struct ChainSpectral {
+    s_max: usize,
+    /// Eigenvalues of `R` (equivalently of `S̃`), ascending; the top one
+    /// is the generator's zero mode.
+    values: Vec<f64>,
+    /// Orthonormal eigenvectors of the symmetrized generator; `(s, k)` is
+    /// component `s` of eigenvector `k`.
+    vectors: Matrix,
+    /// Log symmetrizer `ld_s = ln d_s`.
+    log_d: Vec<f64>,
+    /// `max_s ld_s`, for the per-row range guard.
+    log_d_max: f64,
+}
+
+impl ChainSpectral {
+    /// Diagonalize the chain generator. O(n³) once per chain per
+    /// [`crate::markov::ModelBuilder`].
+    pub fn new(s_max: usize, lambda: f64, theta: f64) -> Result<ChainSpectral> {
+        ensure!(lambda > 0.0 && theta > 0.0, "rates must be positive");
+        let n = s_max + 1;
+        let mut diag = vec![0.0f64; n];
+        let mut off = vec![0.0f64; n.saturating_sub(1)];
+        for s in 0..n {
+            let down = s as f64 * lambda;
+            let up = (s_max - s) as f64 * theta;
+            diag[s] = -(down + up);
+            if s < s_max {
+                off[s] = (up * ((s + 1) as f64 * lambda)).sqrt();
+            }
+        }
+        let eig = sym_tridiag_eigen(&diag, &off)?;
+        let log_d = bd_log_symmetrizer(s_max, lambda, theta);
+        let log_d_max = log_d.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+        Ok(ChainSpectral { s_max, values: eig.values, vectors: eig.vectors, log_d, log_d_max })
+    }
+
+    pub fn len(&self) -> usize {
+        self.s_max + 1
+    }
+
+    pub fn is_empty(&self) -> bool {
+        false // a chain always has at least the zero-spare state
+    }
+
+    /// Eigenvalues of the generator (ascending; last ≈ 0).
+    pub fn eigenvalues(&self) -> &[f64] {
+        &self.values
+    }
+
+    /// `max_s ld_s − ld_{s1}`: how many e-folds the scaling spans when
+    /// reconstructing row `s1`.
+    pub fn log_range_from(&self, s1: usize) -> f64 {
+        self.log_d_max - self.log_d[s1]
+    }
+
+    /// Row `s1` of `f(R)` for `phi[k] = f(λ_k)`: the generic spectral
+    /// row contraction `e^{ld−ld_{s1}} ⊙ (Ṽ · (Ṽ[s1,·] ⊙ phi))`.
+    pub fn func_row(&self, s1: usize, phi: &[f64]) -> Vec<f64> {
+        let n = self.len();
+        debug_assert!(s1 < n);
+        debug_assert_eq!(phi.len(), n);
+        let mut coef = vec![0.0; n];
+        for (k, c) in coef.iter_mut().enumerate() {
+            *c = self.vectors[(s1, k)] * phi[k];
+        }
+        let mut out = self.vectors.matvec(&coef);
+        let ld1 = self.log_d[s1];
+        for (s2, v) in out.iter_mut().enumerate() {
+            *v *= (self.log_d[s2] - ld1).exp();
+        }
+        out
+    }
+
+    /// Row `s1` of `expm(R·δ)` (unchecked — tests and diagnostics).
+    pub fn expm_row(&self, delta: f64, s1: usize) -> Vec<f64> {
+        let phi: Vec<f64> = self.values.iter().map(|&w| (w * delta).exp()).collect();
+        self.func_row(s1, &phi)
+    }
+
+    /// Row `s1` of `expm(R·δ)`, guarded: `None` when the row's log range
+    /// exceeds [`SPECTRAL_LOG_RANGE_MAX`] or the result fails the
+    /// stochasticity check — the caller then falls back to the exact
+    /// closed form. A returned row is clamped non-negative and
+    /// renormalized (mirroring `ehrenfest::transition_row`).
+    pub fn expm_row_checked(&self, delta: f64, s1: usize) -> Option<Vec<f64>> {
+        if self.log_range_from(s1) > SPECTRAL_LOG_RANGE_MAX {
+            return None;
+        }
+        let mut row = self.expm_row(delta, s1);
+        let mut sum = 0.0f64;
+        for &v in &row {
+            if !v.is_finite() || v < -ROW_NEG_TOL {
+                return None;
+            }
+            sum += v;
+        }
+        if (sum - 1.0).abs() > ROW_SUM_TOL {
+            return None;
+        }
+        for v in row.iter_mut() {
+            *v = v.max(0.0) / sum;
+        }
+        Some(row)
+    }
+
+    /// Full `expm(R·δ) = D⁻¹·Ṽ·exp(Λδ)·Ṽᵀ·D` via two dense products.
+    /// Subject to the same f64 envelope as the rows; intended for small
+    /// chains, cross-checks and diagnostics.
+    pub fn expm(&self, delta: f64) -> Matrix {
+        let n = self.len();
+        let mut scaled = Matrix::zeros(n, n);
+        for i in 0..n {
+            for k in 0..n {
+                scaled[(i, k)] = self.vectors[(i, k)] * (self.values[k] * delta).exp();
+            }
+        }
+        let mut out = scaled.matmul(&self.vectors.transpose());
+        for i in 0..n {
+            let ldi = self.log_d[i];
+            for j in 0..n {
+                out[(i, j)] *= (self.log_d[j] - ldi).exp();
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::expm;
+    use crate::markov::birth_death::{bd_generator, bd_stationary};
+    use crate::markov::ehrenfest;
+
+    const LAM: f64 = 1.0 / (2.0 * 86_400.0);
+    const THETA: f64 = 1.0 / 2_400.0;
+
+    #[test]
+    fn eigenvalues_nonpositive_with_zero_mode() {
+        for &s in &[0usize, 1, 4, 12] {
+            let sp = ChainSpectral::new(s, LAM, THETA).unwrap();
+            let vals = sp.eigenvalues();
+            assert_eq!(vals.len(), s + 1);
+            assert!(vals.iter().all(|&w| w < 1e-12), "positive eigenvalue: {vals:?}");
+            // Generator zero mode.
+            assert!(vals[s].abs() < 1e-9 * (1.0 + vals[0].abs()), "top {}", vals[s]);
+        }
+    }
+
+    #[test]
+    fn expm_matches_generic_small() {
+        for &(s, delta) in &[(1usize, 3_600.0), (4, 500.0), (6, 40_000.0)] {
+            let sp = ChainSpectral::new(s, LAM, THETA).unwrap();
+            let oracle = expm(&bd_generator(s, LAM, THETA).scale(delta));
+            let diff = sp.expm(delta).max_abs_diff(&oracle);
+            assert!(diff < 1e-11, "S={s} delta={delta}: diff {diff}");
+        }
+    }
+
+    #[test]
+    fn expm_delta_zero_is_identity() {
+        let sp = ChainSpectral::new(6, LAM, THETA).unwrap();
+        assert!(sp.expm(0.0).max_abs_diff(&Matrix::identity(7)) < 1e-12);
+    }
+
+    #[test]
+    fn rows_match_ehrenfest_closed_form() {
+        // θ/λ = 72 here, so the symmetrizer spans 0.5·S·ln 72 ≈ 2.14·S
+        // e-folds from s1 = 0: all rows of chains up to S = 5 sit inside
+        // the SPECTRAL_LOG_RANGE_MAX = 12 envelope.
+        for &s_max in &[1usize, 3, 5] {
+            let sp = ChainSpectral::new(s_max, LAM, THETA).unwrap();
+            for &delta in &[10.0, 300.0, 3_600.0, 68_000.0] {
+                for s1 in 0..=s_max {
+                    let spec = sp.expm_row_checked(delta, s1).expect("small chain in range");
+                    let exact = ehrenfest::transition_row(s_max, LAM, THETA, delta, s1);
+                    for (a, b) in spec.iter().zip(&exact) {
+                        assert!(
+                            (a - b).abs() < 1e-11,
+                            "S={s_max} delta={delta} s1={s1}: {a} vs {b}"
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn long_horizon_row_converges_to_stationary() {
+        let s_max = 8;
+        let sp = ChainSpectral::new(s_max, LAM, THETA).unwrap();
+        let pi = bd_stationary(s_max, LAM, THETA);
+        let row = sp.expm_row(1.0e9, 3);
+        for (a, b) in row.iter().zip(&pi) {
+            assert!((a - b).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn range_guard_refuses_wide_chains() {
+        // θ/λ = 36: ln ratio ≈ 3.58 per spare — a 32-spare chain spans far
+        // beyond the safe envelope from s1 = 0.
+        let sp = ChainSpectral::new(32, 1e-5, 3.6e-4).unwrap();
+        assert!(sp.log_range_from(0) > SPECTRAL_LOG_RANGE_MAX);
+        assert!(sp.expm_row_checked(100.0, 0).is_none());
+        // From the top of the chain the range is ~0: usable.
+        assert!(sp.log_range_from(32) < 1.0);
+        let row = sp.expm_row_checked(3_600.0, 32).expect("top row in range");
+        let exact = ehrenfest::transition_row(32, 1e-5, 3.6e-4, 3_600.0, 32);
+        for (a, b) in row.iter().zip(&exact) {
+            assert!((a - b).abs() < 1e-10);
+        }
+    }
+
+    #[test]
+    fn log_symmetrizer_matches_detailed_balance() {
+        // d_s² ∝ π_s (binomial): ld_s − ld_0 = 0.5·ln(π_s/π_0).
+        let (s_max, lam, theta) = (10usize, 3e-6, 4e-4);
+        let ld = bd_log_symmetrizer(s_max, lam, theta);
+        let pi = bd_stationary(s_max, lam, theta);
+        for s in 0..=s_max {
+            let want = 0.5 * (pi[s] / pi[0]).ln();
+            assert!((ld[s] - want).abs() < 1e-9, "s={s}: {} vs {want}", ld[s]);
+        }
+    }
+
+    #[test]
+    fn rejects_degenerate_rates() {
+        assert!(ChainSpectral::new(4, 0.0, 1e-3).is_err());
+        assert!(ChainSpectral::new(4, 1e-6, 0.0).is_err());
+    }
+}

@@ -5,6 +5,12 @@
 //! reliable systems without changing the fixed point. Convergence is judged
 //! on the residual `‖πP − π‖₁`, not on successive iterates, so a slowly
 //! creeping iteration cannot fake convergence.
+//!
+//! Three entry points share one loop body: [`stationary`] (cold uniform
+//! start over a CSR matrix — the seed path, bit-identical),
+//! [`stationary_from`] (warm start from a previous probe's π) and
+//! [`stationary_apply`] (matrix-free operator, used by the probe engine to
+//! apply `P^mall`'s up-state block through per-chain resolvent solves).
 
 use super::sparse::SparseMatrix;
 use anyhow::{bail, Result};
@@ -26,8 +32,24 @@ impl Default for StationaryOptions {
     }
 }
 
-/// Solve `π = πP` for a row-stochastic CSR matrix. Returns (π, iterations).
+/// Solve `π = πP` for a row-stochastic CSR matrix from the uniform cold
+/// start. Returns (π, iterations). Bit-identical to the seed solver (the
+/// warm-start entry points below share the same loop body).
 pub fn stationary(p: &SparseMatrix, opts: &StationaryOptions) -> Result<(Vec<f64>, usize)> {
+    stationary_from(p, None, opts)
+}
+
+/// Solve `π = πP`, optionally warm-starting from `pi0` (any non-negative
+/// vector with positive finite mass; it is renormalized, and a degenerate
+/// `pi0` falls back to the uniform start). The fixed point is independent
+/// of the start — warm starts only shorten the iteration (the convergence
+/// criterion is the residual `‖πP − π‖₁`, not iterate movement) — which is
+/// what lets the interval search reuse the previous probe's π.
+pub fn stationary_from(
+    p: &SparseMatrix,
+    pi0: Option<&[f64]>,
+    opts: &StationaryOptions,
+) -> Result<(Vec<f64>, usize)> {
     let n = p.n_rows();
     if n == 0 {
         bail!("empty transition matrix");
@@ -35,11 +57,52 @@ pub fn stationary(p: &SparseMatrix, opts: &StationaryOptions) -> Result<(Vec<f64
     if p.n_cols() != n {
         bail!("transition matrix must be square");
     }
-    let mut pi = vec![1.0 / n as f64; n];
+    // Wrong-length warm starts are rejected by `stationary_apply`.
+    stationary_apply(n, |x, out| p.vec_mul(x, out), pi0, opts)
+}
+
+/// The damped power iteration over an arbitrary application of `x ↦ xP`
+/// (`apply` must write the full product into its second argument). This is
+/// the probe engine's entry point: `P^mall`'s up-state block is applied
+/// implicitly through per-chain resolvent solves instead of a materialized
+/// CSR, and the iteration itself is unchanged — same damping, residual
+/// criterion and renormalization as the seed solver.
+pub fn stationary_apply<F>(
+    n: usize,
+    mut apply: F,
+    pi0: Option<&[f64]>,
+    opts: &StationaryOptions,
+) -> Result<(Vec<f64>, usize)>
+where
+    F: FnMut(&[f64], &mut [f64]),
+{
+    if n == 0 {
+        bail!("empty transition operator");
+    }
+    let mut pi = match pi0 {
+        Some(v) => {
+            // A wrong-length warm start is a caller bug (an operator over a
+            // different state space), never a fallback case.
+            if v.len() != n {
+                bail!("warm start has {} entries, operator has {n}", v.len());
+            }
+            let s: f64 = v.iter().sum();
+            if s > 0.0 && s.is_finite() && v.iter().all(|x| x.is_finite() && *x >= 0.0) {
+                v.iter().map(|x| x / s).collect()
+            } else {
+                // Degenerate *values* (no mass, NaN, negative entries) do
+                // fall back: the fixed point is start-independent and the
+                // caller's π may legitimately have been zeroed out by the
+                // elimination mask.
+                vec![1.0 / n as f64; n]
+            }
+        }
+        None => vec![1.0 / n as f64; n],
+    };
     let mut next = vec![0.0f64; n];
 
     for iter in 1..=opts.max_iters {
-        p.vec_mul(&pi, &mut next);
+        apply(&pi, &mut next);
 
         // Residual before damping: ‖πP − π‖₁.
         let resid: f64 = pi.iter().zip(&next).map(|(a, b)| (a - b).abs()).sum();
@@ -134,6 +197,42 @@ mod tests {
         for (a, b) in pi.iter().zip(&out) {
             assert!((a - b).abs() < 1e-10);
         }
+    }
+
+    #[test]
+    fn warm_start_reaches_same_fixed_point_faster() {
+        let p = from_dense(&[&[0.9, 0.1, 0.0], &[0.05, 0.9, 0.05], &[0.0, 0.2, 0.8]]);
+        let opts = StationaryOptions::default();
+        let (cold, cold_iters) = stationary(&p, &opts).unwrap();
+        // Slightly perturbed cold solution as the warm start.
+        let warm0: Vec<f64> = cold.iter().map(|x| x * 1.001 + 1e-6).collect();
+        let (warm, warm_iters) = stationary_from(&p, Some(&warm0), &opts).unwrap();
+        for (a, b) in cold.iter().zip(&warm) {
+            assert!((a - b).abs() < 1e-9, "{a} vs {b}");
+        }
+        assert!(warm_iters <= cold_iters, "warm {warm_iters} !<= cold {cold_iters}");
+    }
+
+    #[test]
+    fn degenerate_warm_start_falls_back_to_uniform() {
+        let p = from_dense(&[&[0.5, 0.5], &[0.5, 0.5]]);
+        let opts = StationaryOptions::default();
+        for bad in [vec![0.0, 0.0], vec![f64::NAN, 1.0], vec![-1.0, 2.0]] {
+            let (pi, _) = stationary_from(&p, Some(&bad), &opts).unwrap();
+            assert!((pi[0] - 0.5).abs() < 1e-10, "bad start {bad:?} gave {pi:?}");
+        }
+        // A wrong-length warm start is a caller bug, not a fallback case.
+        assert!(stationary_from(&p, Some(&[1.0]), &opts).is_err());
+    }
+
+    #[test]
+    fn apply_matches_csr_solver() {
+        let p = from_dense(&[&[0.7, 0.3, 0.0], &[0.1, 0.8, 0.1], &[0.3, 0.0, 0.7]]);
+        let opts = StationaryOptions::default();
+        let (a, ia) = stationary(&p, &opts).unwrap();
+        let (b, ib) = stationary_apply(3, |x, out| p.vec_mul(x, out), None, &opts).unwrap();
+        assert_eq!(a, b, "closure-driven iteration diverged from CSR path");
+        assert_eq!(ia, ib);
     }
 
     #[test]

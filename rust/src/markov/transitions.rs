@@ -28,6 +28,12 @@
 //! * recovery failure: `U = 0`, `D = 1/(aλ) − δ/(e^{aλδ} − 1)` — the
 //!   paper's MTTF conditioned on failing within `δ`.
 //! * down exit: `U = 0`, `D = 1/(Nθ)` (first repair among N broken).
+//!
+//! The assembly here (and its `PRUNE_EPS`/renormalization semantics) is
+//! the reference the probe engine in `markov::builder` mirrors row-wise:
+//! the probe path rebuilds only the recovery rows per interval and applies
+//! the up-state block implicitly, reproducing these rows within the
+//! tolerance bounds pinned in `rust/tests/engine_equivalence.rs`.
 
 use anyhow::Result;
 

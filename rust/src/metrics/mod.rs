@@ -5,6 +5,14 @@
 //! interval grid to find `UW_highest` (at `I_sim`), and report
 //! `pd = 100·(UW_highest − UW_{I_model})/UW_highest` (model inefficiency);
 //! `100 − pd` is the model efficiency the paper's tables quote.
+//!
+//! Equivalence note: the optimized path's search probes run on the
+//! spectral/warm-started probe engine (see `markov::builder`), so its
+//! probe *UWT values* agree with [`evaluate_segment_reference`] only to
+//! the pinned 1e-9 relative tolerance — but the probed intervals, the
+//! selected `I_model`, and therefore every simulator-derived field
+//! (`uw_model`, `i_sim`, `pd`, `efficiency`) still match the reference
+//! exactly (`rust/tests/engine_equivalence.rs`).
 
 use anyhow::Result;
 

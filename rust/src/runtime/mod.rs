@@ -173,6 +173,49 @@ pub fn native_chain_probs_fast(
     ChainMatrices { q_delta, q_up, q_rec }
 }
 
+/// Row `s1` of `Q^{S,δ} = expm(R·δ)` via the stable Ehrenfest closed form
+/// — the probe engine's fallback when a chain's spectral cache is absent
+/// or out of its f64 envelope (see `markov::spectral`). O(s1·(S−s1)).
+pub fn native_chain_delta_row(
+    s_max: usize,
+    lambda: f64,
+    theta: f64,
+    delta: f64,
+    s1: usize,
+) -> Vec<f64> {
+    crate::markov::ehrenfest::transition_row(s_max, lambda, theta, delta, s1)
+}
+
+/// Row `s1` of `Q^Rec = aλ/(1−e^{−aλδ}) · M⁻¹(I − e^{−aλδ}·Q^{S,δ})` from
+/// that row of `Q^{S,δ}`, without materializing either matrix.
+///
+/// `M = aλI − R` and `Q^{S,δ} = e^{Rδ}` are both functions of `R`, so they
+/// commute: `e_{s1}ᵀ M⁻¹ Q = e_{s1}ᵀ Q M⁻¹ = (M⁻ᵀ q_row)ᵀ`. Hence the
+/// whole row reduces to two O(S) transposed Thomas solves:
+///
+/// ```text
+///   rowₛ₁(Q^Rec) = aλ/(1−e^{−aλδ}) · ( y − e^{−aλδ} · M⁻ᵀ q_row )ᵀ,
+///   y = M⁻ᵀ e_{s1}  (δ-independent, cached by the model builder).
+/// ```
+///
+/// Numerically this is exact-path quality at every chain size (`M` is
+/// strictly diagonally dominant), unlike the spectral reconstruction of
+/// `Q^Rec`, whose transfer function decays only polynomially in the mode
+/// index — see the `markov::spectral` module docs.
+pub fn native_chain_rec_row(
+    bands_t: &Tridiag,
+    y: &[f64],
+    q_row: &[f64],
+    a_lambda: f64,
+    delta: f64,
+) -> Vec<f64> {
+    let decay = (-a_lambda * delta).exp();
+    let denom = -(-a_lambda * delta).exp_m1();
+    let scale = a_lambda / denom;
+    let w = crate::linalg::tridiag_solve_vec(bands_t, q_row);
+    y.iter().zip(&w).map(|(yi, wi)| scale * (yi - decay * wi)).collect()
+}
+
 /// Native mirror of `python/compile/model.py::chain_probs`.
 pub fn native_chain_probs(r: &Matrix, a_lambda: f64, delta: f64) -> ChainMatrices {
     let n = r.rows();
@@ -462,6 +505,35 @@ mod tests {
                 let s: f64 = q.row(i).iter().sum();
                 assert!((s - 1.0).abs() < 1e-9, "{name} row {i} sums to {s}");
                 assert!(q.row(i).iter().all(|&x| x > -1e-10), "{name} row {i} negative");
+            }
+        }
+    }
+
+    #[test]
+    fn row_kernels_match_full_matrices() {
+        let (s_max, lam, theta) = (14usize, 3e-6, 4e-4);
+        let (a_lam, delta) = (50.0 * 3e-6, 40_000.0);
+        let cm = native_chain_probs_fast(s_max, lam, theta, a_lam, delta);
+        let bands =
+            crate::markov::birth_death::bd_resolvent_bands(s_max, lam, theta, a_lam);
+        let bands_t = bands.transposed();
+        for s1 in [0usize, 7, 14] {
+            let q_row = native_chain_delta_row(s_max, lam, theta, delta, s1);
+            let mut e = vec![0.0; s_max + 1];
+            e[s1] = 1.0;
+            let y = crate::linalg::tridiag_solve_vec(&bands_t, &e);
+            let rec_row = native_chain_rec_row(&bands_t, &y, &q_row, a_lam, delta);
+            for s2 in 0..=s_max {
+                assert!(
+                    (q_row[s2] - cm.q_delta[(s1, s2)]).abs() < 1e-12,
+                    "q_delta s1={s1} s2={s2}"
+                );
+                assert!(
+                    (rec_row[s2] - cm.q_rec[(s1, s2)]).abs() < 1e-11,
+                    "q_rec s1={s1} s2={s2}: {} vs {}",
+                    rec_row[s2],
+                    cm.q_rec[(s1, s2)]
+                );
             }
         }
     }

@@ -7,11 +7,17 @@
 //! 8% of the maximum* — the paper's hedge against modeling error.
 //!
 //! Probes are evaluated through a [`ModelBuilder`] constructed once per
-//! search, so the state space, resolvent bands and all up-state rows of
-//! `P^mall` are built a single time and only the interval-dependent rates
-//! are refreshed per probe (numerically identical to building each model
-//! from scratch; [`select_interval_uncached`] keeps the from-scratch path
-//! as the equivalence oracle and perf baseline).
+//! search. By default they run on the builder's **spectral probe engine**
+//! (see `markov::builder`): per-chain spectral/closed-form recovery rows,
+//! an implicit up-state block in the stationary solve, and π warm-started
+//! from the previous probe — which is why the refinement phase orders its
+//! midpoint probes nearest-to-last-probe first, maximizing warm-start
+//! reuse without changing the probed set. The engine is tolerance-pinned
+//! to the seed floats (`rust/tests/engine_equivalence.rs`: identical
+//! selected intervals, UWT within 1e-9 relative);
+//! `BuildOptions::exact_probes` forces the bit-identical cached build,
+//! and [`select_interval_uncached`] keeps the from-scratch path as the
+//! equivalence oracle and perf baseline.
 //!
 //! If the doubling phase runs into the `i_max` cap while UWT is still
 //! rising, the cap itself is probed before refinement so the top-3
@@ -110,8 +116,19 @@ fn run_search(
         if !(hi > lo) {
             break;
         }
-        // Probe the midpoints of the bracket halves (log-spaced).
-        let mids = [(lo.ln() + (hi / lo).ln() / 3.0).exp(), (lo.ln() + 2.0 * (hi / lo).ln() / 3.0).exp()];
+        // Probe the midpoints of the bracket halves (log-spaced), nearest
+        // to the previous probe first: the probe engine warm-starts π from
+        // the last solve, and the stationary distribution varies smoothly
+        // in the interval, so probe locality directly cuts iterations.
+        // Both midpoints are still probed — the probed *set* (and hence
+        // the search result) is unchanged.
+        let mut mids =
+            [(lo.ln() + (hi / lo).ln() / 3.0).exp(), (lo.ln() + 2.0 * (hi / lo).ln() / 3.0).exp()];
+        if let Some(&(last, _)) = probes.last() {
+            if (mids[1] / last).ln().abs() < (mids[0] / last).ln().abs() {
+                mids.swap(0, 1);
+            }
+        }
         let mut added = false;
         for m in mids {
             if probes.iter().all(|&(iv, _)| (iv / m - 1.0).abs() > 1e-3) {

@@ -39,7 +39,11 @@ impl FailureTrace {
         for (p, list) in outages.iter().enumerate() {
             let mut prev_end = f64::NEG_INFINITY;
             for &(f, r) in list {
-                if !(f >= 0.0) || !(r > f) {
+                // Finiteness matters downstream: TraceIndex::new sorts the
+                // merged event timeline with `partial_cmp(..).unwrap()`.
+                // (`!(f >= 0.0)` already rejects NaN; `is_finite` also
+                // rejects the infinities `f64::parse` happily produces.)
+                if !(f >= 0.0) || !(r > f) || !f.is_finite() || !r.is_finite() {
                     bail!("proc {p}: invalid outage ({f}, {r})");
                 }
                 if f < prev_end {
@@ -201,6 +205,14 @@ mod tests {
         assert!(FailureTrace::new(vec![vec![(5.0, 4.0)]], 10.0).is_err()); // repair < fail
         assert!(FailureTrace::new(vec![vec![(5.0, 8.0), (7.0, 9.0)]], 10.0).is_err()); // overlap
         assert!(FailureTrace::new(vec![vec![]], 0.0).is_err()); // horizon
+    }
+
+    #[test]
+    fn validation_rejects_non_finite_times() {
+        assert!(FailureTrace::new(vec![vec![(f64::NAN, 4.0)]], 10.0).is_err());
+        assert!(FailureTrace::new(vec![vec![(5.0, f64::NAN)]], 10.0).is_err());
+        assert!(FailureTrace::new(vec![vec![(5.0, f64::INFINITY)]], 10.0).is_err());
+        assert!(FailureTrace::new(vec![vec![(f64::NEG_INFINITY, 4.0)]], 10.0).is_err());
     }
 
     #[test]

@@ -67,6 +67,11 @@ pub fn parse_lanl_csv(text: &str, horizon: Option<f64>) -> Result<FailureTrace> 
         let r: f64 = fields[2]
             .parse()
             .with_context(|| format!("line {}: bad repair_end", lineno + 1))?;
+        // f64::parse accepts "NaN"/"inf"; a NaN would panic only later,
+        // deep inside the trace-index sort — reject it at ingestion.
+        if !f.is_finite() || !r.is_finite() {
+            bail!("line {}: non-finite event time ({f}, {r})", lineno + 1);
+        }
         if r <= f {
             bail!("line {}: repair_end <= fail_start", lineno + 1);
         }
@@ -93,6 +98,9 @@ pub fn parse_condor(text: &str, horizon: Option<f64>) -> Result<FailureTrace> {
         let r: f64 = fields[2]
             .parse()
             .with_context(|| format!("line {}: bad vacate_end", lineno + 1))?;
+        if !f.is_finite() || !r.is_finite() {
+            bail!("line {}: non-finite event time ({f}, {r})", lineno + 1);
+        }
         if r <= f {
             bail!("line {}: vacate_end <= vacate_start", lineno + 1);
         }
@@ -147,6 +155,19 @@ mod tests {
         assert!(parse_lanl_csv("A,20\n", None).is_err()); // missing field
         assert!(parse_lanl_csv("", None).is_err()); // empty
         assert!(parse_condor("h only\n", None).is_err());
+    }
+
+    #[test]
+    fn non_finite_times_rejected_not_panicking() {
+        // f64::parse happily accepts these spellings; before the ingestion
+        // check a NaN survived into TraceIndex::new's partial_cmp sort.
+        for text in ["A,NaN,20\n", "A,10,NaN\n", "A,inf,20\n", "A,10,inf\n", "A,-inf,20\n"] {
+            assert!(parse_lanl_csv(text, None).is_err(), "accepted {text:?}");
+        }
+        assert!(parse_condor("h NaN 20\n", None).is_err());
+        assert!(parse_condor("h 10 inf\n", None).is_err());
+        // A valid trailing row must not mask the bad one.
+        assert!(parse_lanl_csv("A,10,20\nB,NaN,30\n", None).is_err());
     }
 
     #[test]

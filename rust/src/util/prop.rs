@@ -123,14 +123,86 @@ where
     })
 }
 
-/// Assert two floats are close; returns an Outcome for use inside `check`.
-pub fn close(a: f64, b: f64, rtol: f64, atol: f64) -> Outcome {
-    let tol = atol + rtol * b.abs().max(a.abs());
-    if (a - b).abs() <= tol || (a.is_nan() && b.is_nan()) {
-        Outcome::Pass
-    } else {
-        Outcome::Fail(format!("{a} !~ {b} (diff {}, tol {tol})", (a - b).abs()))
+/// Tolerance bundle for the engine-equivalence tiers: a comparison passes
+/// when `|a − b| ≤ atol + rtol·max(|a|, |b|)`. Engine docs state what is
+/// pinned exactly vs. within which `Tol` (see `markov::builder` and
+/// `ROADMAP.md` for the policy).
+#[derive(Debug, Clone, Copy)]
+pub struct Tol {
+    pub rtol: f64,
+    pub atol: f64,
+}
+
+impl Tol {
+    /// Purely relative tolerance.
+    pub fn rel(rtol: f64) -> Tol {
+        Tol { rtol, atol: 0.0 }
     }
+
+    /// Purely absolute tolerance.
+    pub fn abs(atol: f64) -> Tol {
+        Tol { rtol: 0.0, atol }
+    }
+
+    /// Check two scalars; `Err` carries a human-readable diff report.
+    pub fn check(&self, a: f64, b: f64) -> Result<(), String> {
+        let tol = self.atol + self.rtol * a.abs().max(b.abs());
+        if (a - b).abs() <= tol || (a.is_nan() && b.is_nan()) {
+            Ok(())
+        } else {
+            Err(format!("{a} !~ {b} (diff {:e}, tol {tol:e})", (a - b).abs()))
+        }
+    }
+
+    /// Check two slices element-wise (lengths must match); reports the
+    /// worst offending index.
+    pub fn check_slice(&self, a: &[f64], b: &[f64]) -> Result<(), String> {
+        if a.len() != b.len() {
+            return Err(format!("length mismatch: {} vs {}", a.len(), b.len()));
+        }
+        let mut worst: Option<(usize, String)> = None;
+        let mut worst_diff = 0.0f64;
+        for (i, (x, y)) in a.iter().zip(b).enumerate() {
+            if let Err(msg) = self.check(*x, *y) {
+                let d = (x - y).abs();
+                if worst.is_none() || d > worst_diff {
+                    worst_diff = d;
+                    worst = Some((i, msg));
+                }
+            }
+        }
+        match worst {
+            None => Ok(()),
+            Some((i, msg)) => Err(format!("index {i}: {msg}")),
+        }
+    }
+
+    /// Panic-style assertion for use outside the `check` harness.
+    pub fn assert_close(&self, what: &str, a: f64, b: f64) {
+        if let Err(msg) = self.check(a, b) {
+            panic!("{what}: {msg}");
+        }
+    }
+
+    pub fn assert_slices_close(&self, what: &str, a: &[f64], b: &[f64]) {
+        if let Err(msg) = self.check_slice(a, b) {
+            panic!("{what}: {msg}");
+        }
+    }
+
+    /// Outcome adapter for use inside `check` properties.
+    pub fn outcome(&self, a: f64, b: f64) -> Outcome {
+        match self.check(a, b) {
+            Ok(()) => Outcome::Pass,
+            Err(msg) => Outcome::Fail(msg),
+        }
+    }
+}
+
+/// Assert two floats are close; returns an Outcome for use inside `check`.
+/// (Thin wrapper over [`Tol`] so there is exactly one tolerance formula.)
+pub fn close(a: f64, b: f64, rtol: f64, atol: f64) -> Outcome {
+    Tol { rtol, atol }.outcome(a, b)
 }
 
 #[cfg(test)]
@@ -171,5 +243,24 @@ mod tests {
     fn close_tolerances() {
         assert!(matches!(close(1.0, 1.0 + 1e-12, 1e-9, 0.0), Outcome::Pass));
         assert!(matches!(close(1.0, 1.1, 1e-9, 0.0), Outcome::Fail(_)));
+    }
+
+    #[test]
+    fn tol_scalar_and_slice() {
+        let t = Tol::rel(1e-9);
+        assert!(t.check(1.0, 1.0 + 1e-12).is_ok());
+        assert!(t.check(1.0, 1.0 + 1e-6).is_err());
+        assert!(Tol::abs(1e-8).check(0.0, 5e-9).is_ok());
+        let a = [1.0, 2.0, 3.0];
+        assert!(t.check_slice(&a, &[1.0, 2.0, 3.0]).is_ok());
+        let err = t.check_slice(&a, &[1.0, 2.5, 3.0]).unwrap_err();
+        assert!(err.starts_with("index 1"), "{err}");
+        assert!(t.check_slice(&a, &[1.0]).is_err());
+    }
+
+    #[test]
+    #[should_panic(expected = "uwt:")]
+    fn tol_assert_panics_with_context() {
+        Tol::rel(1e-12).assert_close("uwt", 1.0, 2.0);
     }
 }

@@ -1,29 +1,55 @@
-//! Equivalence suite for the indexed/cached/parallel engines introduced by
-//! the perf work: every optimized path must reproduce its preserved seed
-//! baseline **exactly** (same floats, same counts), because the speedups
-//! reorganize computation without changing a single arithmetic expression.
+//! Equivalence suite for the optimized engines, in two tiers:
+//!
+//! **Bit-exact tier** — paths that reorganize computation without changing
+//! a single arithmetic expression must reproduce their preserved seed
+//! baseline exactly (same floats, same counts):
 //!
 //! * indexed `Simulator::run` vs `Simulator::run_reference`, field for
 //!   field on randomized synthetic traces (exponential and Weibull, random
 //!   policies, both processor-selection modes);
 //! * `sweep_par` vs serial `sweep`;
-//! * cached `select_interval` (ModelBuilder) vs `select_interval_uncached`
-//!   probe for probe;
-//! * parallel `run_segments` vs the seed's serial loop, segment for
-//!   segment.
+//! * the exact cached `select_interval` (ModelBuilder under
+//!   `BuildOptions::exact_probes`) vs `select_interval_uncached`, probe
+//!   for probe.
+//!
+//! **Tolerance tier** — the spectral/warm-started probe engine
+//! (`markov::builder::ModelBuilder::probe`, the default behind
+//! `select_interval`) changes float association and iteration counts by
+//! design. Pinned policy (also documented in ROADMAP.md):
+//!
+//! * probed intervals, probe count, and the **selected interval: exact**
+//!   (the search's control flow must not drift);
+//! * probe **UWT values: within 1e-9 relative** of the from-scratch
+//!   oracle;
+//! * stationary **π: within 1e-8 absolute** per entry;
+//! * simulator-derived segment fields (they only consume the selected
+//!   interval): exact.
+//!
+//! Knife-edge caveat: "exact" pins rest on the two engines making the same
+//! *comparisons* (doubling stop, top-3 argmax, the 8% band edge, the §IV
+//! elimination threshold) despite UWT values that differ by ≤ 1e-9
+//! relative. A flip needs a quantity within that noise of a decision
+//! boundary — measure-zero for the fixed seeds/grids used here, and
+//! deterministic per platform, but a new test input that fails this tier
+//! with a hair's-width diff should be read as a knife-edge draw, not an
+//! engine bug.
 
 use malleable_ckpt::apps::AppProfile;
 use malleable_ckpt::config::SystemParams;
 use malleable_ckpt::experiments::common::{run_segments, run_segments_reference};
 use malleable_ckpt::experiments::ExperimentOptions;
-use malleable_ckpt::markov::ModelInputs;
+use malleable_ckpt::markov::{BuildOptions, MalleableModel, ModelBuilder, ModelInputs};
 use malleable_ckpt::policies::ReschedulingPolicy;
 use malleable_ckpt::runtime::ComputeEngine;
 use malleable_ckpt::search::{select_interval, select_interval_uncached, SearchConfig};
 use malleable_ckpt::simulator::{SimConfig, Simulator};
 use malleable_ckpt::traces::synth::{generate, SynthSpec};
-use malleable_ckpt::util::prop::{check, Gen, Outcome};
+use malleable_ckpt::util::prop::{check, Gen, Outcome, Tol};
 use malleable_ckpt::util::rng::Rng;
+
+/// The pinned probe-engine tolerances (see module docs / ROADMAP.md).
+const UWT_TOL: f64 = 1e-9; // relative
+const PI_TOL: f64 = 1e-8; // absolute
 
 fn random_policy(g: &mut Gen, n: usize) -> ReschedulingPolicy {
     let style = g.int_in(0, 2);
@@ -35,6 +61,18 @@ fn random_policy(g: &mut Gen, n: usize) -> ReschedulingPolicy {
         })
         .collect();
     ReschedulingPolicy::from_vector(rp).unwrap()
+}
+
+fn random_model_inputs(g: &mut Gen) -> ModelInputs {
+    let n = g.int_in(2, 8);
+    let lam = g.log_uniform(1e-7, 1e-5);
+    let theta = g.log_uniform(1e-4, 1e-2);
+    let system = SystemParams::new(n, lam, theta);
+    let ckpt: Vec<f64> = (1..=n).map(|_| g.f64_in(5.0, 200.0)).collect();
+    let work: Vec<f64> = (1..=n).map(|a| (a as f64).powf(g.f64_in(0.4, 1.0))).collect();
+    let rec: Vec<f64> = (1..=n).map(|_| g.f64_in(5.0, 60.0)).collect();
+    let policy = random_policy(g, n);
+    ModelInputs::from_raw(system, ckpt, work, rec, policy).unwrap()
 }
 
 #[test]
@@ -134,25 +172,21 @@ fn prop_sweep_par_matches_serial() {
 }
 
 #[test]
-fn prop_cached_search_matches_uncached() {
+fn prop_exact_cached_search_matches_uncached() {
+    // The bit-exact oracle tier: under `exact_probes` the ModelBuilder
+    // must reproduce the from-scratch search float for float.
     let engine = ComputeEngine::native();
     check(
         "cached-search-equivalence",
         0xCA5E,
         8,
-        |g| {
-            let n = g.int_in(2, 8);
-            let lam = g.log_uniform(1e-7, 1e-5);
-            let theta = g.log_uniform(1e-4, 1e-2);
-            let system = SystemParams::new(n, lam, theta);
-            let ckpt: Vec<f64> = (1..=n).map(|_| g.f64_in(5.0, 200.0)).collect();
-            let work: Vec<f64> = (1..=n).map(|a| (a as f64).powf(g.f64_in(0.4, 1.0))).collect();
-            let rec: Vec<f64> = (1..=n).map(|_| g.f64_in(5.0, 60.0)).collect();
-            let policy = random_policy(g, n);
-            ModelInputs::from_raw(system, ckpt, work, rec, policy).unwrap()
-        },
+        random_model_inputs,
         |inputs| {
-            let cfg = SearchConfig { refine_steps: 2, ..Default::default() };
+            let cfg = SearchConfig {
+                refine_steps: 2,
+                build: BuildOptions { exact_probes: true, ..Default::default() },
+                ..Default::default()
+            };
             let cached = match select_interval(inputs, &engine, &cfg) {
                 Ok(r) => r,
                 Err(e) => return Outcome::Fail(format!("cached search failed: {e}")),
@@ -176,6 +210,150 @@ fn prop_cached_search_matches_uncached() {
             Outcome::Pass
         },
     );
+}
+
+#[test]
+fn prop_probe_engine_search_matches_oracle_within_tolerance() {
+    // The tentpole's acceptance property: the spectral + warm-started
+    // default search must probe the same intervals and select the same
+    // interval as the from-scratch oracle, with UWT within 1e-9 relative.
+    let engine = ComputeEngine::native();
+    let tol = Tol::rel(UWT_TOL);
+    check(
+        "probe-engine-search-equivalence",
+        0x5BEC,
+        8,
+        random_model_inputs,
+        |inputs| {
+            let cfg = SearchConfig { refine_steps: 2, ..Default::default() };
+            let fast = match select_interval(inputs, &engine, &cfg) {
+                Ok(r) => r,
+                Err(e) => return Outcome::Fail(format!("probe-engine search failed: {e}")),
+            };
+            let oracle = match select_interval_uncached(inputs, &engine, &cfg) {
+                Ok(r) => r,
+                Err(e) => return Outcome::Fail(format!("oracle search failed: {e}")),
+            };
+            if fast.probes.len() != oracle.probes.len() {
+                return Outcome::Fail(format!(
+                    "probe count diverged: {} vs {}",
+                    fast.probes.len(),
+                    oracle.probes.len()
+                ));
+            }
+            for ((ia, ua), (ib, ub)) in fast.probes.iter().zip(&oracle.probes) {
+                if ia != ib {
+                    return Outcome::Fail(format!("probed intervals diverged: {ia} vs {ib}"));
+                }
+                if let Err(msg) = tol.check(*ua, *ub) {
+                    return Outcome::Fail(format!("probe UWT at {ia}: {msg}"));
+                }
+            }
+            if fast.interval != oracle.interval || fast.best_probed != oracle.best_probed {
+                return Outcome::Fail(format!(
+                    "selected interval diverged: {} vs {} (best {} vs {})",
+                    fast.interval, oracle.interval, fast.best_probed, oracle.best_probed
+                ));
+            }
+            tol.outcome(fast.uwt, oracle.uwt)
+        },
+    );
+}
+
+#[test]
+fn prop_probe_matches_from_scratch_build() {
+    // Probe engine vs MalleableModel::build on random systems. Elimination
+    // is disabled here: the §IV mask thresholds values the two paths
+    // compute with different rounding, and a borderline flip would change
+    // the state space (the fixed-grid test below covers elimination on).
+    let engine = ComputeEngine::native();
+    let uwt_tol = Tol::rel(UWT_TOL);
+    let pi_tol = Tol::abs(PI_TOL);
+    check(
+        "probe-vs-build-equivalence",
+        0xB0B5,
+        10,
+        |g| {
+            let inputs = random_model_inputs(g);
+            let interval = g.log_uniform(120.0, 100_000.0);
+            (inputs, interval)
+        },
+        |(inputs, interval)| {
+            let opts = BuildOptions { thres: None, ..Default::default() };
+            let builder = match ModelBuilder::new(inputs, &engine, &opts) {
+                Ok(b) => b,
+                Err(e) => return Outcome::Fail(format!("builder: {e}")),
+            };
+            let probe = match builder.probe(*interval) {
+                Ok(p) => p,
+                Err(e) => return Outcome::Fail(format!("probe: {e}")),
+            };
+            let model = match MalleableModel::build(inputs, &engine, *interval, &opts) {
+                Ok(m) => m,
+                Err(e) => return Outcome::Fail(format!("build: {e}")),
+            };
+            if probe.eliminated != model.eliminated {
+                return Outcome::Fail(format!(
+                    "eliminated diverged: {} vs {}",
+                    probe.eliminated, model.eliminated
+                ));
+            }
+            let compact: Vec<f64> = probe
+                .keep
+                .iter()
+                .zip(&probe.pi)
+                .filter(|(&k, _)| k)
+                .map(|(_, &p)| p)
+                .collect();
+            if let Err(msg) = pi_tol.check_slice(&compact, model.stationary_distribution()) {
+                return Outcome::Fail(format!("π diverged: {msg}"));
+            }
+            uwt_tol.outcome(probe.uwt, model.uwt())
+        },
+    );
+}
+
+#[test]
+fn probe_matches_build_on_fixed_grid_with_elimination() {
+    // Deterministic grid with the default §IV threshold: paper-scale-ish
+    // systems across the interval range the search actually visits.
+    let engine = ComputeEngine::native();
+    let uwt_tol = Tol::rel(UWT_TOL);
+    let pi_tol = Tol::abs(PI_TOL);
+    for &(n, mttf_days) in &[(16usize, 2.0), (24, 6.0), (32, 12.0)] {
+        let system = SystemParams::from_mttf_mttr(n, mttf_days, 45.0);
+        let inputs = ModelInputs::from_raw(
+            system,
+            vec![60.0; n],
+            (1..=n).map(|a| (a as f64).powf(0.85)).collect(),
+            vec![15.0; n],
+            ReschedulingPolicy::greedy(n),
+        )
+        .unwrap();
+        let opts = BuildOptions::default();
+        let builder = ModelBuilder::new(&inputs, &engine, &opts).unwrap();
+        for &interval in &[300.0, 1_200.0, 4_800.0, 19_200.0, 76_800.0] {
+            let probe = builder.probe(interval).unwrap();
+            let model = builder.build(interval).unwrap();
+            assert_eq!(
+                probe.eliminated, model.eliminated,
+                "N={n} I={interval}: eliminated diverged"
+            );
+            let compact: Vec<f64> = probe
+                .keep
+                .iter()
+                .zip(&probe.pi)
+                .filter(|(&k, _)| k)
+                .map(|(_, &p)| p)
+                .collect();
+            pi_tol.assert_slices_close(
+                &format!("π (N={n}, I={interval})"),
+                &compact,
+                model.stationary_distribution(),
+            );
+            uwt_tol.assert_close(&format!("UWT (N={n}, I={interval})"), probe.uwt, model.uwt());
+        }
+    }
 }
 
 #[test]
@@ -207,18 +385,27 @@ fn parallel_run_segments_matches_serial_reference() {
     // Both paths must have consumed the RNG identically.
     assert_eq!(rng_par.next_u64(), rng_ser.next_u64(), "RNG streams diverged");
 
+    let uwt_tol = Tol::rel(UWT_TOL);
     assert_eq!(par.segments.len(), ser.segments.len());
     for (p, s) in par.segments.iter().zip(&ser.segments) {
         assert_eq!(p.start, s.start);
         assert_eq!(p.duration, s.duration);
         assert_eq!(p.lambda, s.lambda);
         assert_eq!(p.theta, s.theta);
+        // The optimized path probes through the spectral engine: probed
+        // intervals and the selected I_model are exact; probe UWT values
+        // agree within the pinned tolerance.
         assert_eq!(p.i_model, s.i_model, "I_model diverged");
+        assert_eq!(p.search.probes.len(), s.search.probes.len(), "probe count diverged");
+        for ((ia, ua), (ib, ub)) in p.search.probes.iter().zip(&s.search.probes) {
+            assert_eq!(ia, ib, "probed interval diverged");
+            uwt_tol.assert_close(&format!("probe UWT at {ia}"), *ua, *ub);
+        }
+        // Everything downstream consumes only I_model => exact.
         assert_eq!(p.i_sim, s.i_sim, "I_sim diverged");
         assert_eq!(p.uw_model, s.uw_model, "UW(I_model) diverged");
         assert_eq!(p.uw_highest, s.uw_highest, "UW_highest diverged");
         assert_eq!(p.pd, s.pd);
         assert_eq!(p.efficiency, s.efficiency);
-        assert_eq!(p.search.probes, s.search.probes, "search probes diverged");
     }
 }

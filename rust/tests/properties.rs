@@ -199,3 +199,84 @@ fn prop_policy_image_respected_by_simulator() {
         Outcome::Pass
     });
 }
+
+#[test]
+fn prop_stationary_invariant_across_damping_and_starts() {
+    // π is the fixed point of π = πP; neither the damping factor nor the
+    // starting vector may move it (only the iteration count). Randomized
+    // birth–death chains via the Ehrenfest closed form: P = expm(R·δ) is
+    // row-stochastic and its stationary distribution is the closed-form
+    // binomial `bd_stationary`, giving an independent oracle.
+    use malleable_ckpt::markov::birth_death::bd_stationary;
+    use malleable_ckpt::markov::ehrenfest::transition_matrix;
+    use malleable_ckpt::markov::sparse::SparseBuilder;
+    use malleable_ckpt::markov::stationary::{stationary, stationary_from, StationaryOptions};
+    use malleable_ckpt::util::prop::Tol;
+
+    check(
+        "stationary-invariance",
+        0x57A7,
+        15,
+        |g| {
+            let s_max = g.int_in(1, 24);
+            let lam = g.log_uniform(1e-7, 1e-4);
+            let theta = g.log_uniform(1e-5, 1e-2);
+            let delta = g.log_uniform(100.0, 500_000.0);
+            let warm_seed = g.rng.next_u64();
+            (s_max, lam, theta, delta, warm_seed)
+        },
+        |&(s_max, lam, theta, delta, warm_seed)| {
+            let n = s_max + 1;
+            let p_dense = transition_matrix(s_max, lam, theta, delta);
+            let mut b = SparseBuilder::new(n);
+            for i in 0..n {
+                let entries: Vec<(usize, f64)> = p_dense
+                    .row(i)
+                    .iter()
+                    .enumerate()
+                    .filter(|(_, &v)| v != 0.0)
+                    .map(|(j, &v)| (j, v))
+                    .collect();
+                b.push_row(&entries);
+            }
+            let p = b.finish();
+
+            let mut solutions: Vec<Vec<f64>> = Vec::new();
+            for damping in [0.5, 0.9] {
+                let opts = StationaryOptions { damping, ..Default::default() };
+                // Cold start.
+                match stationary(&p, &opts) {
+                    Ok((pi, _)) => solutions.push(pi),
+                    Err(e) => return Outcome::Fail(format!("cold ω={damping}: {e}")),
+                }
+                // Warm start from a random positive vector.
+                let mut rng = Rng::new(warm_seed);
+                let warm0: Vec<f64> = (0..n).map(|_| rng.f64() + 1e-3).collect();
+                match stationary_from(&p, Some(&warm0), &opts) {
+                    Ok((pi, _)) => solutions.push(pi),
+                    Err(e) => return Outcome::Fail(format!("warm ω={damping}: {e}")),
+                }
+            }
+            // Warm start from another run's solution (the probe-engine
+            // pattern) must also land on the same point.
+            let opts = StationaryOptions::default();
+            match stationary_from(&p, Some(&solutions[0].clone()), &opts) {
+                Ok((pi, _)) => solutions.push(pi),
+                Err(e) => return Outcome::Fail(format!("warm-from-solution: {e}")),
+            }
+
+            let tol = Tol::abs(1e-8);
+            for (k, pi) in solutions.iter().enumerate().skip(1) {
+                if let Err(msg) = tol.check_slice(&solutions[0], pi) {
+                    return Outcome::Fail(format!("solution {k} diverged: {msg}"));
+                }
+            }
+            // Independent closed-form oracle.
+            let oracle = bd_stationary(s_max, lam, theta);
+            if let Err(msg) = Tol::abs(1e-7).check_slice(&solutions[0], &oracle) {
+                return Outcome::Fail(format!("vs bd_stationary: {msg}"));
+            }
+            Outcome::Pass
+        },
+    );
+}
