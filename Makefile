@@ -1,6 +1,6 @@
 # Tier-1 verification and perf tracking for the malleable-ckpt repo.
 
-.PHONY: verify build test lint bench-smoke bench clean
+.PHONY: verify build test lint fmt serve-smoke bench-smoke bench clean
 
 # Tier-1: release build + full test suite (see ROADMAP.md).
 verify: build test
@@ -11,11 +11,19 @@ build:
 test:
 	cargo test -q
 
-# Style gate, mirrored by the CI `lint` job (advisory there until the
-# pre-existing formatting backlog is cleaned up).
+# Style gate, mirrored by the CI `lint` job (blocking since PR 3).
 lint:
 	cargo fmt --all -- --check
 	cargo clippy --all-targets -- -D warnings
+
+# Apply rustfmt in place (the fix-up for a failing `make lint`).
+fmt:
+	cargo fmt --all
+
+# Boot the advisor daemon from the release binary and exercise it over
+# HTTP against the offline oracle (mirrors the CI `serve-smoke` job).
+serve-smoke: build
+	bash scripts/serve_smoke.sh
 
 # Short smoke bench: regenerates BENCH_perf.json at the repo root with the
 # reduced size grid, so perf regressions show up in every PR.

@@ -1,0 +1,420 @@
+//! Sharded concurrent recommendation cache — the advisor's hot path.
+//!
+//! Builders and their selection results are keyed by a **canonical hash**
+//! of everything that determines the recommendation:
+//! `(SystemParams, application cost vectors, rescheduling policy vector,
+//! search shape, build options)`. Canonical means semantic: two requests
+//! that describe the same model — e.g. a `greedy` policy by name and the
+//! identical `rp` vector spelled out — collapse to the same key, while
+//! anything that changes the floats (worker count aside — results are
+//! pinned worker-invariant by the PR 1 equivalence tier) changes it.
+//!
+//! Keys are distributed over independently locked **shards**, so
+//! concurrent requests for different systems never contend on a lock;
+//! repeat hits are an O(1) probe of one shard. Each shard evicts in LRU
+//! order (a global atomic clock stamps every touch) once its slice of the
+//! configurable memory budget is exceeded — an entry's cost is dominated
+//! by its [`SharedBuilder`]'s interval-independent caches
+//! ([`SharedBuilder::cache_bytes`]). One over-budget entry is allowed to
+//! remain per shard: a single giant system must still cache, or every
+//! request would rebuild it.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+use crate::markov::{ModelInputs, SharedBuilder};
+use crate::search::{SearchConfig, SearchResult};
+
+/// 64-bit FNV-1a over the canonical byte stream of a request spec.
+struct Fnv(u64);
+
+impl Fnv {
+    fn new() -> Fnv {
+        Fnv(0xcbf2_9ce4_8422_2325)
+    }
+
+    fn byte(&mut self, b: u8) {
+        self.0 = (self.0 ^ b as u64).wrapping_mul(0x0000_0100_0000_01b3);
+    }
+
+    fn u64(&mut self, x: u64) {
+        for b in x.to_le_bytes() {
+            self.byte(b);
+        }
+    }
+
+    /// Canonical float: `-0.0` folds onto `0.0`; NaN never reaches here
+    /// (every field is validated upstream).
+    fn f64(&mut self, x: f64) {
+        self.u64(if x == 0.0 { 0 } else { x.to_bits() });
+    }
+}
+
+/// Canonical cache key of one recommendation request. Hashes the semantic
+/// content — system triple, the three per-processor-count cost vectors,
+/// the policy `rp` vector (not its display name), the search shape and the
+/// result-affecting build options. `BuildOptions::workers` is deliberately
+/// excluded: results are pinned worker-invariant.
+pub fn canonical_key(inputs: &ModelInputs, cfg: &SearchConfig) -> u64 {
+    let mut h = Fnv::new();
+    h.u64(0x4144_5631); // layout version tag ("ADV1")
+    let n = inputs.system.n;
+    h.u64(n as u64);
+    h.f64(inputs.system.lambda);
+    h.f64(inputs.system.theta);
+    for a in 1..=n {
+        h.f64(inputs.checkpoint_cost(a));
+        h.f64(inputs.work_per_sec(a));
+        h.f64(inputs.mean_recovery_into(a));
+    }
+    for &rp in inputs.policy.vector() {
+        h.u64(rp as u64);
+    }
+    h.f64(cfg.i_min);
+    h.f64(cfg.i_max);
+    h.u64(cfg.refine_steps as u64);
+    h.f64(cfg.band);
+    match cfg.build.thres {
+        Some(t) => {
+            h.byte(1);
+            h.f64(t);
+        }
+        None => h.byte(0),
+    }
+    h.byte(cfg.build.exact_probes as u8);
+    h.f64(cfg.build.stationary.tol);
+    h.u64(cfg.build.stationary.max_iters as u64);
+    h.f64(cfg.build.stationary.damping);
+    h.0
+}
+
+/// One cached recommendation: the shared builder (kept alive for warm
+/// starts), the selection result, and the rates it was computed with.
+#[derive(Clone)]
+pub struct CacheEntry {
+    pub key: u64,
+    pub builder: Arc<SharedBuilder>,
+    pub result: SearchResult,
+    /// Failure/repair rates the result was computed with (the drift
+    /// reference for ingest-tracked systems).
+    pub lambda: f64,
+    pub theta: f64,
+    /// Bytes charged against the memory budget.
+    pub bytes: usize,
+    /// Drift detected; a background re-selection is pending.
+    pub stale: bool,
+}
+
+struct Shard {
+    /// key -> (LRU stamp, entry).
+    map: HashMap<u64, (u64, CacheEntry)>,
+    bytes: usize,
+}
+
+/// Aggregate counters (monotone; read by `status`).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct CacheStats {
+    pub entries: usize,
+    pub bytes: usize,
+    pub budget_bytes: usize,
+    pub hits: u64,
+    pub misses: u64,
+    pub insertions: u64,
+    pub evictions: u64,
+}
+
+pub struct ShardedCache {
+    shards: Vec<Mutex<Shard>>,
+    /// Global LRU clock; every get/insert stamps with a fresh tick.
+    clock: AtomicU64,
+    shard_budget: usize,
+    budget: usize,
+    hits: AtomicU64,
+    misses: AtomicU64,
+    insertions: AtomicU64,
+    evictions: AtomicU64,
+}
+
+impl ShardedCache {
+    pub fn new(n_shards: usize, budget_bytes: usize) -> ShardedCache {
+        let n = n_shards.max(1);
+        ShardedCache {
+            shards: (0..n)
+                .map(|_| Mutex::new(Shard { map: HashMap::new(), bytes: 0 }))
+                .collect(),
+            clock: AtomicU64::new(0),
+            shard_budget: budget_bytes / n,
+            budget: budget_bytes,
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+            insertions: AtomicU64::new(0),
+            evictions: AtomicU64::new(0),
+        }
+    }
+
+    fn shard(&self, key: u64) -> &Mutex<Shard> {
+        // Fibonacci remix of the FNV key so shard choice is independent of
+        // the low bits a power-of-two map bucket would also use.
+        let i = (key.wrapping_mul(0x9e37_79b9_7f4a_7c15) >> 32) as usize % self.shards.len();
+        &self.shards[i]
+    }
+
+    fn tick(&self) -> u64 {
+        self.clock.fetch_add(1, Ordering::Relaxed)
+    }
+
+    /// O(1) lookup; a hit refreshes the entry's LRU stamp.
+    pub fn get(&self, key: u64) -> Option<CacheEntry> {
+        let mut shard = self.shard(key).lock().unwrap();
+        match shard.map.get_mut(&key) {
+            Some(slot) => {
+                slot.0 = self.clock.fetch_add(1, Ordering::Relaxed);
+                self.hits.fetch_add(1, Ordering::Relaxed);
+                Some(slot.1.clone())
+            }
+            None => {
+                self.misses.fetch_add(1, Ordering::Relaxed);
+                None
+            }
+        }
+    }
+
+    /// Insert (or replace) an entry, then evict least-recently-used
+    /// entries while the shard exceeds its budget slice — always keeping
+    /// at least one entry.
+    pub fn insert(&self, entry: CacheEntry) {
+        let stamp = self.tick();
+        let key = entry.key;
+        let added = entry.bytes;
+        let mut shard = self.shard(key).lock().unwrap();
+        if let Some((_, old)) = shard.map.insert(key, (stamp, entry)) {
+            shard.bytes -= old.bytes;
+        }
+        shard.bytes += added;
+        self.insertions.fetch_add(1, Ordering::Relaxed);
+        while shard.bytes > self.shard_budget && shard.map.len() > 1 {
+            let victim = shard.map.iter().min_by_key(|(_, v)| v.0).map(|(&k, _)| k).unwrap();
+            let (_, gone) = shard.map.remove(&victim).unwrap();
+            shard.bytes -= gone.bytes;
+            self.evictions.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    /// Lookup without touching the hit/miss counters or the LRU stamp —
+    /// `status` reporting must not perturb eviction order.
+    pub fn peek(&self, key: u64) -> Option<CacheEntry> {
+        let shard = self.shard(key).lock().unwrap();
+        shard.map.get(&key).map(|(_, e)| e.clone())
+    }
+
+    /// Flag an entry as drift-stale (a background re-selection is on its
+    /// way); returns a snapshot for seeding the re-selection.
+    pub fn mark_stale(&self, key: u64) -> Option<CacheEntry> {
+        let mut shard = self.shard(key).lock().unwrap();
+        shard.map.get_mut(&key).map(|slot| {
+            slot.1.stale = true;
+            slot.1.clone()
+        })
+    }
+
+    /// Drop an entry (the post-re-selection cleanup of the stale key).
+    pub fn remove(&self, key: u64) -> bool {
+        let mut shard = self.shard(key).lock().unwrap();
+        match shard.map.remove(&key) {
+            Some((_, gone)) => {
+                shard.bytes -= gone.bytes;
+                true
+            }
+            None => false,
+        }
+    }
+
+    pub fn stats(&self) -> CacheStats {
+        let mut entries = 0usize;
+        let mut bytes = 0usize;
+        for s in &self.shards {
+            let s = s.lock().unwrap();
+            entries += s.map.len();
+            bytes += s.bytes;
+        }
+        CacheStats {
+            entries,
+            bytes,
+            budget_bytes: self.budget,
+            hits: self.hits.load(Ordering::Relaxed),
+            misses: self.misses.load(Ordering::Relaxed),
+            insertions: self.insertions.load(Ordering::Relaxed),
+            evictions: self.evictions.load(Ordering::Relaxed),
+        }
+    }
+
+    /// All entries, ordered by key (deterministic `status` listings).
+    pub fn snapshot(&self) -> Vec<CacheEntry> {
+        let mut out: Vec<CacheEntry> = Vec::new();
+        for s in &self.shards {
+            let s = s.lock().unwrap();
+            out.extend(s.map.values().map(|(_, e)| e.clone()));
+        }
+        out.sort_by_key(|e| e.key);
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::SystemParams;
+    use crate::markov::BuildOptions;
+    use crate::policies::ReschedulingPolicy;
+
+    fn inputs(n: usize, mttf_days: f64) -> ModelInputs {
+        let system = SystemParams::from_mttf_mttr(n, mttf_days, 45.0);
+        ModelInputs::from_raw(
+            system,
+            vec![60.0; n],
+            (1..=n).map(|a| (a as f64).powf(0.85)).collect(),
+            vec![15.0; n],
+            ReschedulingPolicy::greedy(n),
+        )
+        .unwrap()
+    }
+
+    fn entry(key: u64, bytes: usize) -> CacheEntry {
+        let inp = inputs(4, 2.0);
+        CacheEntry {
+            key,
+            builder: Arc::new(SharedBuilder::native(inp.clone(), &BuildOptions::default())),
+            result: SearchResult {
+                interval: 3_600.0,
+                uwt: 1.0,
+                best_probed: 3_600.0,
+                probes: vec![(3_600.0, 1.0)],
+                evaluations: 1,
+            },
+            lambda: inp.system.lambda,
+            theta: inp.system.theta,
+            bytes,
+            stale: false,
+        }
+    }
+
+    #[test]
+    fn canonical_key_is_semantic() {
+        let cfg = SearchConfig::default();
+        let a = canonical_key(&inputs(6, 2.0), &cfg);
+        let b = canonical_key(&inputs(6, 2.0), &cfg);
+        assert_eq!(a, b, "identical specs must collide");
+        // Rates, sizes, costs, policy and search shape all re-key.
+        assert_ne!(a, canonical_key(&inputs(6, 3.0), &cfg));
+        assert_ne!(a, canonical_key(&inputs(7, 2.0), &cfg));
+        let base = inputs(6, 2.0);
+        let dear = ModelInputs::from_raw(
+            base.system,
+            vec![90.0; 6],
+            (1..=6).map(|x| (x as f64).powf(0.85)).collect(),
+            vec![15.0; 6],
+            ReschedulingPolicy::greedy(6),
+        )
+        .unwrap();
+        assert_ne!(a, canonical_key(&dear, &cfg));
+        let wider = SearchConfig { band: 0.2, ..cfg };
+        assert_ne!(a, canonical_key(&inputs(6, 2.0), &wider));
+        let exact = SearchConfig {
+            build: BuildOptions { exact_probes: true, ..Default::default() },
+            ..cfg
+        };
+        assert_ne!(a, canonical_key(&inputs(6, 2.0), &exact));
+        // Worker count is *not* semantic (results are worker-invariant).
+        let threads = SearchConfig {
+            build: BuildOptions { workers: 31, ..Default::default() },
+            ..cfg
+        };
+        assert_eq!(a, canonical_key(&inputs(6, 2.0), &threads));
+    }
+
+    #[test]
+    fn canonical_key_policy_by_vector_not_name() {
+        let cfg = SearchConfig::default();
+        let named = inputs(5, 2.0); // greedy by constructor
+        let spelled = ModelInputs::from_raw(
+            named.system,
+            vec![60.0; 5],
+            (1..=5).map(|a| (a as f64).powf(0.85)).collect(),
+            vec![15.0; 5],
+            ReschedulingPolicy::from_vector((1..=5).collect()).unwrap(),
+        )
+        .unwrap();
+        assert_eq!(canonical_key(&named, &cfg), canonical_key(&spelled, &cfg));
+        let capped = ModelInputs::from_raw(
+            named.system,
+            vec![60.0; 5],
+            (1..=5).map(|a| (a as f64).powf(0.85)).collect(),
+            vec![15.0; 5],
+            ReschedulingPolicy::from_vector((1..=5).map(|t| t.min(3)).collect()).unwrap(),
+        )
+        .unwrap();
+        assert_ne!(canonical_key(&named, &cfg), canonical_key(&capped, &cfg));
+    }
+
+    #[test]
+    fn hit_refreshes_and_miss_counts() {
+        let cache = ShardedCache::new(4, 1 << 20);
+        assert!(cache.get(42).is_none());
+        cache.insert(entry(42, 100));
+        let got = cache.get(42).expect("inserted entry must hit");
+        assert_eq!(got.key, 42);
+        let s = cache.stats();
+        assert_eq!((s.hits, s.misses, s.entries), (1, 1, 1));
+    }
+
+    #[test]
+    fn lru_evicts_oldest_under_budget() {
+        // Single shard, budget fits two 100-byte entries.
+        let cache = ShardedCache::new(1, 250);
+        cache.insert(entry(1, 100));
+        cache.insert(entry(2, 100));
+        assert_eq!(cache.stats().entries, 2);
+        // Touch 1 so 2 becomes the LRU victim.
+        assert!(cache.get(1).is_some());
+        cache.insert(entry(3, 100));
+        assert!(cache.get(1).is_some(), "recently used entry evicted");
+        assert!(cache.get(3).is_some(), "fresh entry evicted");
+        assert!(cache.get(2).is_none(), "LRU entry survived over budget");
+        let s = cache.stats();
+        assert_eq!(s.evictions, 1);
+        assert!(s.bytes <= 250);
+    }
+
+    #[test]
+    fn oversized_entry_still_cached() {
+        let cache = ShardedCache::new(1, 50);
+        cache.insert(entry(7, 500));
+        assert!(cache.get(7).is_some(), "a lone over-budget entry must remain");
+        cache.insert(entry(8, 500));
+        assert_eq!(cache.stats().entries, 1, "second over-budget entry must evict down to one");
+    }
+
+    #[test]
+    fn mark_stale_and_remove() {
+        let cache = ShardedCache::new(2, 1 << 20);
+        cache.insert(entry(5, 10));
+        let snap = cache.mark_stale(5).expect("entry exists");
+        assert!(snap.stale);
+        assert!(cache.get(5).unwrap().stale);
+        assert!(cache.remove(5));
+        assert!(!cache.remove(5));
+        assert!(cache.get(5).is_none());
+        assert!(cache.mark_stale(99).is_none());
+    }
+
+    #[test]
+    fn replacing_entry_updates_bytes() {
+        let cache = ShardedCache::new(1, 1 << 20);
+        cache.insert(entry(9, 100));
+        cache.insert(entry(9, 40));
+        let s = cache.stats();
+        assert_eq!(s.entries, 1);
+        assert_eq!(s.bytes, 40);
+    }
+}

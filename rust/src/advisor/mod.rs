@@ -1,0 +1,804 @@
+//! The **advisor service** — a long-running interval-recommendation
+//! daemon: the paper's offline "which checkpointing interval maximizes
+//! UWT" question (§VI) answered continuously, for many systems, under
+//! drifting failure rates. This is the first Layer-4 subsystem of the
+//! ROADMAP: everything below it (the spectral probe engine, the
+//! warm-startable builders, the trace index, the rate fitting) already
+//! existed as one-shot machinery; this module keeps it alive.
+//!
+//! * [`protocol`] — hand-rolled JSON wire schema (`select`, `model`,
+//!   `ingest`, `status`), idiom-matching `util::json`/`util::cli`;
+//! * [`cache`] — the sharded concurrent recommendation cache: builders
+//!   keyed by a canonical spec hash, LRU-evicted under a memory budget,
+//!   repeat hits answered in O(1) without touching the model layer;
+//! * [`ingest`] — streaming failure ingestion per tracked system into an
+//!   appendable [`crate::traces::index::TraceTail`], with windowed
+//!   least-squares MTTF/MTTR re-fits;
+//! * [`server`] — the `std::net::TcpListener` HTTP/1.1 front end and the
+//!   `malleable-ckpt serve` subcommand.
+//!
+//! ## Drift semantics
+//!
+//! A `select` request carrying a `track` id registers its spec under that
+//! track and is answered with the track's **current** re-fitted rates
+//! substituted for the request's. Every accepted `ingest` batch re-fits
+//! the window; when the re-fit moves beyond the configured relative
+//! threshold against the rates a registered recommendation was computed
+//! with (`max(|λ̂/λ−1|, |θ̂/θ−1|) > drift_threshold`), the advisor marks
+//! the cache entry stale and **re-selects in the background**, seeding
+//! the new builder's stationary solve with the previous recommendation's
+//! last probe π ([`crate::markov::SharedBuilder::seed_pi`]) — the
+//! spectral probe engine's warm starts amortize across the daemon's
+//! lifetime, not just one search. Until the re-selection lands, `select`
+//! keeps serving the stale entry (flagged `"stale": true`); afterwards
+//! the track's registration points at the new key and the stale entry is
+//! dropped.
+//!
+//! The threshold cuts both ways: **sub-threshold** rate jitter from
+//! routine ingest batches does *not* re-key a tracked request either — a
+//! registered recommendation keeps serving from its existing cache entry
+//! until the drift is large enough to refresh it, so actively-ingesting
+//! tracks still get O(1) repeat hits, and the drift reference always
+//! describes the rates the served recommendation was *built* with (a
+//! crept baseline can never silently absorb slow drift).
+//!
+//! Concurrency: the track map itself is locked only long enough to clone
+//! a per-track `Arc<Mutex<Track>>` handle — ingest splices and re-fits
+//! run under the individual track's lock, so a heavy batch for one
+//! system never stalls requests for another (the cache is sharded for
+//! the same reason).
+
+pub mod cache;
+pub mod ingest;
+pub mod protocol;
+pub mod server;
+
+use std::collections::hash_map::Entry;
+use std::collections::{HashMap, VecDeque};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+use anyhow::{Context, Result};
+
+use crate::markov::{BuildOptions, ModelInputs, SharedBuilder};
+use crate::search::{select_interval_shared, SearchConfig};
+use crate::util::json::Json;
+
+use self::cache::{canonical_key, CacheEntry, ShardedCache};
+use self::ingest::{relative_drift, Track, TrackedSpec};
+use self::protocol::{key_hex, select_response, IngestRequest, ModelRequest, SelectRequest};
+
+/// Daemon tuning knobs (all exposed as `serve` flags).
+#[derive(Debug, Clone, Copy)]
+pub struct AdvisorConfig {
+    /// Independently locked cache shards.
+    pub shards: usize,
+    /// Memory budget for the recommendation cache, bytes.
+    pub cache_bytes: usize,
+    /// Relative rate drift that invalidates a recommendation.
+    pub drift_threshold: f64,
+    /// Re-fit window over the ingested tail, seconds.
+    pub refit_window: f64,
+    /// Minimum failures inside the window before a re-fit is trusted.
+    pub min_refit_failures: usize,
+}
+
+impl Default for AdvisorConfig {
+    fn default() -> Self {
+        AdvisorConfig {
+            shards: 8,
+            cache_bytes: 256 << 20,
+            drift_threshold: 0.10,
+            refit_window: 30.0 * 86_400.0,
+            min_refit_failures: 8,
+        }
+    }
+}
+
+/// One queued background re-selection.
+struct BgJob {
+    track: String,
+    old_key: u64,
+    /// Inputs with the re-fitted rates already substituted.
+    inputs: ModelInputs,
+    cfg: SearchConfig,
+    /// The pre-drift builder's last probe π.
+    seed: Option<Vec<f64>>,
+    /// The spec's drift reference before this job was cut — restored on
+    /// failure so the next ingest re-detects the drift and retries.
+    prev_rates: (f64, f64),
+}
+
+type TrackHandle = Arc<Mutex<Track>>;
+
+/// The daemon's shared state: every HTTP worker holds an `Arc<Advisor>`.
+pub struct Advisor {
+    cfg: AdvisorConfig,
+    cache: ShardedCache,
+    /// Track registry. The map lock is held only to clone a handle;
+    /// per-track work runs under the track's own lock.
+    tracks: Mutex<HashMap<String, TrackHandle>>,
+    bg: Mutex<VecDeque<BgJob>>,
+    bg_cv: Condvar,
+    started: Instant,
+    selects: AtomicU64,
+    ingests: AtomicU64,
+    models: AtomicU64,
+    bg_completed: AtomicU64,
+    bg_errors: AtomicU64,
+}
+
+impl Advisor {
+    pub fn new(cfg: AdvisorConfig) -> Advisor {
+        Advisor {
+            cache: ShardedCache::new(cfg.shards.max(1), cfg.cache_bytes),
+            cfg,
+            tracks: Mutex::new(HashMap::new()),
+            bg: Mutex::new(VecDeque::new()),
+            bg_cv: Condvar::new(),
+            started: Instant::now(),
+            selects: AtomicU64::new(0),
+            ingests: AtomicU64::new(0),
+            models: AtomicU64::new(0),
+            bg_completed: AtomicU64::new(0),
+            bg_errors: AtomicU64::new(0),
+        }
+    }
+
+    pub fn config(&self) -> &AdvisorConfig {
+        &self.cfg
+    }
+
+    /// Rate-independent identity of a request spec — what ties a track's
+    /// registration to "the same request" across drift-driven re-keys.
+    fn spec_identity(inputs: &ModelInputs, cfg: &SearchConfig) -> u64 {
+        let mut neutral = inputs.clone();
+        neutral.system.lambda = 1.0;
+        neutral.system.theta = 1.0;
+        canonical_key(&neutral, cfg)
+    }
+
+    /// Clone the handle of an existing track (brief map lock only).
+    fn track_handle(&self, track_id: &str) -> Option<TrackHandle> {
+        self.tracks.lock().unwrap().get(track_id).cloned()
+    }
+
+    /// Answer one `select`: cache hit in O(1), miss builds a
+    /// [`SharedBuilder`], runs the search and caches both.
+    pub fn select(&self, req: &SelectRequest) -> Result<Json> {
+        self.selects.fetch_add(1, Ordering::Relaxed);
+        let mut system = req.system;
+        let handle = req.track.as_deref().and_then(|tid| self.track_handle(tid));
+        if let Some(h) = &handle {
+            let track = h.lock().unwrap();
+            if let Some((l, t)) = track.rates {
+                system.lambda = l;
+                system.theta = t;
+            }
+        }
+        let inputs = ModelInputs::new(system, &req.app, &req.policy)?;
+        let fresh_key = canonical_key(&inputs, &req.cfg);
+        // A registered request keeps resolving to its current entry while
+        // a drift re-selection is in flight (the background job owns the
+        // refresh) AND under sub-threshold rate jitter: the threshold
+        // that decides when to refresh also decides when to re-key —
+        // otherwise every routine ingest batch would turn the next
+        // select into a foreground rebuild and a fresh cache entry.
+        let mut key = fresh_key;
+        if let Some(h) = &handle {
+            let identity = Self::spec_identity(&inputs, &req.cfg);
+            let track = h.lock().unwrap();
+            if let Some(spec) = track
+                .specs
+                .iter()
+                .find(|s| Self::spec_identity(&s.inputs, &s.cfg) == identity)
+            {
+                let jitter = relative_drift(spec.rates_used, (system.lambda, system.theta));
+                if spec.pending || jitter <= self.cfg.drift_threshold {
+                    key = spec.key;
+                }
+            }
+        }
+        if let Some(entry) = self.cache.get(key) {
+            // Register with the rates the served entry was computed with:
+            // the drift reference must describe the recommendation, not
+            // the request.
+            self.register(
+                req.track.as_deref(),
+                key,
+                &inputs,
+                &req.cfg,
+                (entry.lambda, entry.theta),
+            );
+            return Ok(select_response(
+                &entry.result,
+                key,
+                true,
+                entry.lambda,
+                entry.theta,
+                req.track.as_deref(),
+                entry.stale,
+            ));
+        }
+        // Miss: build at the current (possibly re-fitted) rates under the
+        // fresh key, whatever registration said.
+        let builder = Arc::new(SharedBuilder::native(inputs.clone(), &req.cfg.build));
+        let result = select_interval_shared(&builder, &req.cfg)?;
+        let bytes = entry_bytes(&builder, result.probes.len());
+        self.cache.insert(CacheEntry {
+            key: fresh_key,
+            builder,
+            result: result.clone(),
+            lambda: system.lambda,
+            theta: system.theta,
+            bytes,
+            stale: false,
+        });
+        self.register(
+            req.track.as_deref(),
+            fresh_key,
+            &inputs,
+            &req.cfg,
+            (system.lambda, system.theta),
+        );
+        Ok(select_response(
+            &result,
+            fresh_key,
+            false,
+            system.lambda,
+            system.theta,
+            req.track.as_deref(),
+            false,
+        ))
+    }
+
+    /// Register (or refresh) a spec under a track, creating the track on
+    /// first sight with the system's processor count. `rates` is the
+    /// drift reference — the rates the recommendation at `key` was
+    /// actually computed with.
+    fn register(
+        &self,
+        track_id: Option<&str>,
+        key: u64,
+        inputs: &ModelInputs,
+        cfg: &SearchConfig,
+        rates: (f64, f64),
+    ) {
+        let Some(tid) = track_id else {
+            return;
+        };
+        let handle = {
+            let mut map = self.tracks.lock().unwrap();
+            match map.entry(tid.to_string()) {
+                Entry::Occupied(e) => Arc::clone(e.get()),
+                Entry::Vacant(v) => Arc::clone(v.insert(Arc::new(Mutex::new(
+                    Track::new(inputs.system.n).expect("n >= 1 by construction"),
+                )))),
+            }
+        };
+        let identity = Self::spec_identity(inputs, cfg);
+        let mut track = handle.lock().unwrap();
+        match track
+            .specs
+            .iter_mut()
+            .find(|s| Self::spec_identity(&s.inputs, &s.cfg) == identity)
+        {
+            Some(spec) => {
+                if !spec.pending {
+                    spec.key = key;
+                    spec.inputs = inputs.clone();
+                    spec.rates_used = rates;
+                }
+            }
+            None => track.specs.push(TrackedSpec {
+                key,
+                inputs: inputs.clone(),
+                cfg: *cfg,
+                rates_used: rates,
+                pending: false,
+            }),
+        }
+    }
+
+    /// Fold an `ingest` batch into its track, re-fit the window, and
+    /// enqueue background re-selections for every registered spec whose
+    /// rates drifted beyond the threshold. Only this track's lock is
+    /// held across the splice — other tracks stay fully concurrent.
+    pub fn ingest(&self, req: &IngestRequest) -> Result<Json> {
+        self.ingests.fetch_add(1, Ordering::Relaxed);
+        let handle = {
+            let mut map = self.tracks.lock().unwrap();
+            match map.entry(req.track.clone()) {
+                Entry::Occupied(e) => Arc::clone(e.get()),
+                Entry::Vacant(v) => {
+                    let n = req
+                        .n_procs
+                        .context("first ingest for a track must carry 'n_procs'")?;
+                    Arc::clone(v.insert(Arc::new(Mutex::new(Track::new(n)?))))
+                }
+            }
+        };
+        let mut track = handle.lock().unwrap();
+        if let Some(n) = req.n_procs {
+            anyhow::ensure!(
+                n == track.n_procs,
+                "track '{}' has {} processors, request says {n}",
+                req.track,
+                track.n_procs
+            );
+        }
+        let (accepted, merged) = track.ingest(&req.events)?;
+        let refit = track.refit(self.cfg.refit_window, self.cfg.min_refit_failures);
+        let mut enqueued = 0usize;
+        if let Some(fresh) = track.rates {
+            for spec in &mut track.specs {
+                if spec.pending {
+                    continue;
+                }
+                let drift = relative_drift(spec.rates_used, fresh);
+                if drift > self.cfg.drift_threshold {
+                    let seed = self.cache.mark_stale(spec.key).and_then(|e| e.builder.warm_pi());
+                    let mut inputs = spec.inputs.clone();
+                    inputs.system.lambda = fresh.0;
+                    inputs.system.theta = fresh.1;
+                    let job = BgJob {
+                        track: req.track.clone(),
+                        old_key: spec.key,
+                        inputs,
+                        cfg: spec.cfg,
+                        seed,
+                        prev_rates: spec.rates_used,
+                    };
+                    spec.pending = true;
+                    spec.rates_used = fresh;
+                    self.bg.lock().unwrap().push_back(job);
+                    self.bg_cv.notify_one();
+                    enqueued += 1;
+                }
+            }
+        }
+        let mut o = Json::obj();
+        o.set("ok", Json::from(true))
+            .set("track", Json::from(req.track.as_str()))
+            .set("accepted", Json::from(accepted))
+            .set("merged", Json::from(merged))
+            .set("events_total", Json::from(track.tail.n_events()));
+        if let Some((l, t)) = track.rates {
+            o.set("lambda", Json::from(l)).set("theta", Json::from(t));
+        }
+        o.set("refit", Json::from(refit.is_some()))
+            .set("reselects_enqueued", Json::from(enqueued));
+        Ok(o)
+    }
+
+    /// One `model` probe (diagnostics; not cached).
+    pub fn model(&self, req: &ModelRequest) -> Result<Json> {
+        self.models.fetch_add(1, Ordering::Relaxed);
+        let inputs = ModelInputs::new(req.system, &req.app, &req.policy)?;
+        let builder = SharedBuilder::native(inputs, &BuildOptions::default());
+        let probe = builder.probe(req.interval)?;
+        let kept = probe.keep.iter().filter(|&&k| k).count();
+        let mut o = Json::obj();
+        o.set("ok", Json::from(true))
+            .set("interval", Json::from(probe.interval))
+            .set("uwt", Json::from(probe.uwt))
+            .set("availability", Json::from(probe.breakdown.availability))
+            .set("states", Json::from(kept))
+            .set("full_states", Json::from(builder.n_states()))
+            .set("eliminated", Json::from(probe.eliminated))
+            .set("solve_iters", Json::from(probe.solve_iters));
+        Ok(o)
+    }
+
+    /// Pop and execute one background re-selection; `false` when the
+    /// queue is empty. The server's background thread loops on this;
+    /// tests drive it directly.
+    pub fn run_bg_once(&self) -> bool {
+        let job = self.bg.lock().unwrap().pop_front();
+        let Some(job) = job else {
+            return false;
+        };
+        match self.reselect(&job) {
+            Ok(()) => {
+                self.bg_completed.fetch_add(1, Ordering::Relaxed);
+            }
+            Err(_) => {
+                self.bg_errors.fetch_add(1, Ordering::Relaxed);
+                // Unblock the spec AND restore its drift reference: the
+                // enqueue advanced rates_used to the re-fitted rates, so
+                // without the rollback the next ingest would measure
+                // ~zero drift and never retry, leaving the entry stale
+                // forever.
+                if let Some(handle) = self.track_handle(&job.track) {
+                    let mut track = handle.lock().unwrap();
+                    for spec in &mut track.specs {
+                        if spec.key == job.old_key {
+                            spec.pending = false;
+                            spec.rates_used = job.prev_rates;
+                        }
+                    }
+                }
+            }
+        }
+        true
+    }
+
+    fn reselect(&self, job: &BgJob) -> Result<()> {
+        let builder = Arc::new(SharedBuilder::native(job.inputs.clone(), &job.cfg.build));
+        if let Some(pi) = &job.seed {
+            builder.seed_pi(pi.clone());
+        }
+        let result = select_interval_shared(&builder, &job.cfg)?;
+        let new_key = canonical_key(&job.inputs, &job.cfg);
+        let bytes = entry_bytes(&builder, result.probes.len());
+        self.cache.insert(CacheEntry {
+            key: new_key,
+            builder,
+            result,
+            lambda: job.inputs.system.lambda,
+            theta: job.inputs.system.theta,
+            bytes,
+            stale: false,
+        });
+        if new_key != job.old_key {
+            self.cache.remove(job.old_key);
+        }
+        if let Some(handle) = self.track_handle(&job.track) {
+            let mut track = handle.lock().unwrap();
+            track.reselects += 1;
+            for spec in &mut track.specs {
+                if spec.key == job.old_key {
+                    spec.key = new_key;
+                    spec.inputs = job.inputs.clone();
+                    spec.pending = false;
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Queued (not yet executed) background jobs.
+    pub fn bg_pending(&self) -> usize {
+        self.bg.lock().unwrap().len()
+    }
+
+    /// Block until a background job is queued or `timeout` elapses.
+    pub fn bg_wait(&self, timeout: Duration) {
+        let guard = self.bg.lock().unwrap();
+        if guard.is_empty() {
+            let _unused = self.bg_cv.wait_timeout(guard, timeout).unwrap();
+        }
+    }
+
+    /// The `status` report.
+    pub fn status(&self) -> Json {
+        let cs = self.cache.stats();
+        let mut cache = Json::obj();
+        cache
+            .set("entries", Json::from(cs.entries))
+            .set("bytes", Json::from(cs.bytes))
+            .set("budget_bytes", Json::from(cs.budget_bytes))
+            .set("hits", Json::from(cs.hits))
+            .set("misses", Json::from(cs.misses))
+            .set("insertions", Json::from(cs.insertions))
+            .set("evictions", Json::from(cs.evictions));
+
+        let mut requests = Json::obj();
+        requests
+            .set("select", Json::from(self.selects.load(Ordering::Relaxed)))
+            .set("ingest", Json::from(self.ingests.load(Ordering::Relaxed)))
+            .set("model", Json::from(self.models.load(Ordering::Relaxed)));
+
+        let mut background = Json::obj();
+        background
+            .set("pending", Json::from(self.bg_pending()))
+            .set("completed", Json::from(self.bg_completed.load(Ordering::Relaxed)))
+            .set("errors", Json::from(self.bg_errors.load(Ordering::Relaxed)));
+
+        // Snapshot the handles under the map lock, then visit each track
+        // under its own lock.
+        let handles: Vec<(String, TrackHandle)> = {
+            let map = self.tracks.lock().unwrap();
+            let mut v: Vec<(String, TrackHandle)> =
+                map.iter().map(|(k, h)| (k.clone(), Arc::clone(h))).collect();
+            v.sort_by(|a, b| a.0.cmp(&b.0));
+            v
+        };
+        let mut tracks_json = Json::obj();
+        for (id, handle) in handles {
+            let track = handle.lock().unwrap();
+            let mut tj = Json::obj();
+            tj.set("n_procs", Json::from(track.n_procs))
+                .set("events", Json::from(track.tail.n_events()))
+                .set("accepted", Json::from(track.accepted))
+                .set("merged", Json::from(track.merged))
+                .set("reselects", Json::from(track.reselects));
+            if let Some((l, t)) = track.rates {
+                tj.set("lambda", Json::from(l)).set("theta", Json::from(t));
+            }
+            let mut recs = Vec::new();
+            for spec in &track.specs {
+                let mut rj = Json::obj();
+                rj.set("key", Json::from(key_hex(spec.key)))
+                    .set("pending", Json::from(spec.pending))
+                    .set("lambda", Json::from(spec.rates_used.0))
+                    .set("theta", Json::from(spec.rates_used.1));
+                if let Some(entry) = self.cache.peek(spec.key) {
+                    rj.set("interval", Json::from(entry.result.interval))
+                        .set("uwt", Json::from(entry.result.uwt))
+                        .set("stale", Json::from(entry.stale));
+                }
+                recs.push(rj);
+            }
+            tj.set("recommendations", Json::Arr(recs));
+            tracks_json.set(&id, tj);
+        }
+
+        let mut o = Json::obj();
+        o.set("ok", Json::from(true))
+            .set("uptime_s", Json::from(self.started.elapsed().as_secs_f64()))
+            .set("drift_threshold", Json::from(self.cfg.drift_threshold))
+            .set("refit_window_s", Json::from(self.cfg.refit_window))
+            .set("requests", requests)
+            .set("cache", cache)
+            .set("background", background)
+            .set("tracks", tracks_json);
+        o
+    }
+}
+
+/// Bytes a cache entry charges against the budget: the builder's
+/// interval-independent caches plus the stored probes and bookkeeping.
+fn entry_bytes(builder: &SharedBuilder, probes: usize) -> usize {
+    builder.cache_bytes() + probes * std::mem::size_of::<(f64, f64)>() + 256
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::ComputeEngine;
+    use crate::search::select_interval;
+    use crate::util::rng::Rng;
+
+    fn select_req(mttf_days: f64, track: Option<&str>) -> SelectRequest {
+        let mut body = format!(
+            r#"{{"system": {{"n": 6, "mttf_days": {mttf_days}, "mttr_min": 40}},
+                 "search": {{"refine_steps": 3}}"#
+        );
+        if let Some(t) = track {
+            body.push_str(&format!(r#", "track": "{t}""#));
+        }
+        body.push('}');
+        protocol::parse_select(&Json::parse(&body).unwrap()).unwrap()
+    }
+
+    fn oracle(req: &SelectRequest) -> crate::search::SearchResult {
+        let inputs = ModelInputs::new(req.system, &req.app, &req.policy).unwrap();
+        select_interval(&inputs, &ComputeEngine::native(), &req.cfg).unwrap()
+    }
+
+    fn volatile_ingest(track: &str, seed: u64) -> IngestRequest {
+        // A 200-day MTTF-1-day trace on 6 processors: ~8x the failure
+        // rate of the select_req(8.0, ..) requests.
+        let mut rng = Rng::new(seed);
+        let trace = crate::traces::synth::generate(
+            &crate::traces::synth::SynthSpec::exponential(
+                6,
+                1.0 / 86_400.0,
+                1.0 / 2_400.0,
+                200.0 * 86_400.0,
+            ),
+            &mut rng,
+        );
+        let mut events = Vec::new();
+        for p in 0..6 {
+            for &(f, r) in trace.outages(p) {
+                events.push(format!(r#"{{"proc": {p}, "fail": {f}, "repair": {r}}}"#));
+            }
+        }
+        let body = format!(
+            r#"{{"track": "{track}", "n_procs": 6, "events": [{}]}}"#,
+            events.join(",")
+        );
+        protocol::parse_ingest(&Json::parse(&body).unwrap()).unwrap()
+    }
+
+    #[test]
+    fn select_matches_offline_oracle_and_caches() {
+        let advisor = Advisor::new(AdvisorConfig::default());
+        let req = select_req(2.0, None);
+        let want = oracle(&req);
+        let first = advisor.select(&req).unwrap();
+        assert_eq!(first.get("cached").unwrap().as_bool(), Some(false));
+        assert_eq!(first.get("interval").unwrap().as_f64(), Some(want.interval));
+        assert_eq!(first.get("uwt").unwrap().as_f64(), Some(want.uwt));
+        let again = advisor.select(&req).unwrap();
+        assert_eq!(again.get("cached").unwrap().as_bool(), Some(true));
+        assert_eq!(again.get("interval").unwrap().as_f64(), Some(want.interval));
+        let stats = advisor.cache.stats();
+        assert_eq!((stats.hits, stats.misses, stats.entries), (1, 1, 1));
+        // A different system is a different key.
+        let other = advisor.select(&select_req(8.0, None)).unwrap();
+        assert_eq!(other.get("cached").unwrap().as_bool(), Some(false));
+        assert_ne!(
+            other.get("key").unwrap().as_str(),
+            first.get("key").unwrap().as_str()
+        );
+    }
+
+    #[test]
+    fn drift_triggers_background_reselect_with_updated_rates() {
+        let advisor = Advisor::new(AdvisorConfig {
+            drift_threshold: 0.5,
+            refit_window: 400.0 * 86_400.0,
+            min_refit_failures: 8,
+            ..Default::default()
+        });
+        let req = select_req(8.0, Some("c1"));
+        let first = advisor.select(&req).unwrap();
+        let old_interval = first.get("interval").unwrap().as_f64().unwrap();
+
+        let resp = advisor.ingest(&volatile_ingest("c1", 11)).unwrap();
+        assert_eq!(resp.get("ok").unwrap().as_bool(), Some(true));
+        assert_eq!(resp.get("reselects_enqueued").unwrap().as_f64(), Some(1.0));
+        let lam_hat = resp.get("lambda").unwrap().as_f64().unwrap();
+        let theta_hat = resp.get("theta").unwrap().as_f64().unwrap();
+        assert!(
+            (lam_hat * 86_400.0 - 1.0).abs() < 0.3,
+            "re-fit λ̂ should be near 1/day, got 1/{:.2}d",
+            1.0 / (lam_hat * 86_400.0)
+        );
+
+        // While pending, the stale entry still serves (flagged, cached).
+        assert_eq!(advisor.bg_pending(), 1);
+        let stale = advisor.select(&req).unwrap();
+        assert_eq!(stale.get("cached").unwrap().as_bool(), Some(true));
+        assert_eq!(stale.get("stale").unwrap().as_bool(), Some(true));
+
+        // Drain the background queue and check the refreshed entry
+        // against the offline oracle at the re-fitted rates.
+        assert!(advisor.run_bg_once());
+        assert!(!advisor.run_bg_once());
+        let status = advisor.status();
+        let track = status.path("tracks.c1").unwrap();
+        assert_eq!(track.path("reselects").unwrap().as_f64(), Some(1.0));
+        let rec = &track.path("recommendations").unwrap().as_arr().unwrap()[0];
+        assert_eq!(rec.get("pending").unwrap().as_bool(), Some(false));
+        assert_eq!(rec.get("stale").unwrap().as_bool(), Some(false));
+        let new_interval = rec.get("interval").unwrap().as_f64().unwrap();
+        assert!(
+            new_interval < old_interval,
+            "8x more failures must shorten the interval: {new_interval} !< {old_interval}"
+        );
+        let mut want_req = select_req(8.0, None);
+        want_req.system.lambda = lam_hat;
+        want_req.system.theta = theta_hat;
+        let want = oracle(&want_req);
+        let rel = (new_interval - want.interval).abs() / want.interval;
+        assert!(rel < 1e-9, "reselect diverged from oracle: {new_interval} vs {}", want.interval);
+        let got_uwt = rec.get("uwt").unwrap().as_f64().unwrap();
+        let rel_u = (got_uwt - want.uwt).abs() / want.uwt;
+        assert!(rel_u < 1e-9, "UWT diverged: {got_uwt} vs {}", want.uwt);
+
+        // A fresh tracked select now uses the re-fitted rates: cache hit
+        // on the new key.
+        let after = advisor.select(&req).unwrap();
+        assert_eq!(after.get("cached").unwrap().as_bool(), Some(true));
+        assert_eq!(after.get("interval").unwrap().as_f64(), Some(new_interval));
+    }
+
+    #[test]
+    fn small_drift_keeps_serving_the_cached_entry() {
+        let advisor = Advisor::new(AdvisorConfig {
+            drift_threshold: 1e9, // nothing drifts past this
+            refit_window: 400.0 * 86_400.0,
+            min_refit_failures: 2,
+            ..Default::default()
+        });
+        let req = select_req(2.0, Some("c1"));
+        let first = advisor.select(&req).unwrap();
+        let body = r#"{"track": "c1", "n_procs": 6, "events": [
+            {"proc": 0, "fail": 1000, "repair": 3000},
+            {"proc": 1, "fail": 90000, "repair": 91000},
+            {"proc": 2, "fail": 200000, "repair": 201000}]}"#;
+        let ing = protocol::parse_ingest(&Json::parse(body).unwrap()).unwrap();
+        let resp = advisor.ingest(&ing).unwrap();
+        assert_eq!(resp.get("reselects_enqueued").unwrap().as_f64(), Some(0.0));
+        assert_eq!(advisor.bg_pending(), 0);
+        // Sub-threshold jitter must NOT re-key the request: the select
+        // after the re-fit is still an O(1) hit on the original entry.
+        let after = advisor.select(&req).unwrap();
+        assert_eq!(after.get("cached").unwrap().as_bool(), Some(true));
+        assert_eq!(after.get("stale").unwrap().as_bool(), Some(false));
+        assert_eq!(after.get("key").unwrap().as_str(), first.get("key").unwrap().as_str());
+        assert_eq!(
+            after.get("interval").unwrap().as_f64(),
+            first.get("interval").unwrap().as_f64()
+        );
+        // And the drift reference still describes the served entry (the
+        // rates it was built with), so slow creep cannot be absorbed by
+        // a silently advancing baseline.
+        let status = advisor.status();
+        let rec = &status.path("tracks.c1.recommendations").unwrap().as_arr().unwrap()[0];
+        assert_eq!(
+            rec.get("lambda").unwrap().as_f64(),
+            first.get("lambda").unwrap().as_f64()
+        );
+    }
+
+    #[test]
+    fn failed_reselect_restores_drift_reference() {
+        // A background job that fails must roll rates_used back so the
+        // next ingest re-detects the drift and retries (otherwise the
+        // entry stays stale forever).
+        let advisor = Advisor::new(AdvisorConfig {
+            drift_threshold: 0.5,
+            refit_window: 400.0 * 86_400.0,
+            min_refit_failures: 8,
+            ..Default::default()
+        });
+        let req = select_req(8.0, Some("c1"));
+        advisor.select(&req).unwrap();
+        advisor.ingest(&volatile_ingest("c1", 31)).unwrap();
+        assert_eq!(advisor.bg_pending(), 1);
+        // Sabotage the queued job so reselect() errors.
+        {
+            let mut bg = advisor.bg.lock().unwrap();
+            bg.front_mut().unwrap().cfg.i_min = -1.0; // fails validation
+        }
+        assert!(advisor.run_bg_once());
+        assert_eq!(advisor.bg_errors.load(Ordering::Relaxed), 1);
+        // The spec is unblocked and its drift reference restored...
+        {
+            let handle = advisor.track_handle("c1").unwrap();
+            let track = handle.lock().unwrap();
+            let spec = &track.specs[0];
+            assert!(!spec.pending);
+            let fresh = track.rates.unwrap();
+            assert!(
+                relative_drift(spec.rates_used, fresh) > 0.5,
+                "rollback lost: drift reference equals the re-fit"
+            );
+        }
+        // ...so the next ingest re-detects the drift and re-enqueues a
+        // (healthy) job, which completes.
+        let more = protocol::parse_ingest(
+            &Json::parse(
+                r#"{"track": "c1", "events": [
+                    {"proc": 0, "fail": 17280500, "repair": 17282900},
+                    {"proc": 1, "fail": 17290000, "repair": 17292400}]}"#,
+            )
+            .unwrap(),
+        )
+        .unwrap();
+        let resp = advisor.ingest(&more).unwrap();
+        assert_eq!(resp.get("reselects_enqueued").unwrap().as_f64(), Some(1.0));
+        assert!(advisor.run_bg_once());
+        assert_eq!(advisor.bg_completed.load(Ordering::Relaxed), 1);
+    }
+
+    #[test]
+    fn ingest_track_bookkeeping() {
+        let advisor = Advisor::new(AdvisorConfig::default());
+        // First ingest without n_procs fails; with it, creates the track.
+        let no_n = protocol::parse_ingest(
+            &Json::parse(r#"{"track": "t", "events": []}"#).unwrap(),
+        )
+        .unwrap();
+        assert!(advisor.ingest(&no_n).is_err());
+        let mk = protocol::parse_ingest(
+            &Json::parse(r#"{"track": "t", "n_procs": 4, "events": []}"#).unwrap(),
+        )
+        .unwrap();
+        advisor.ingest(&mk).unwrap();
+        // Mismatched n_procs on an existing track is rejected.
+        let bad = protocol::parse_ingest(
+            &Json::parse(r#"{"track": "t", "n_procs": 5, "events": []}"#).unwrap(),
+        )
+        .unwrap();
+        assert!(advisor.ingest(&bad).is_err());
+        let status = advisor.status();
+        assert_eq!(status.path("tracks.t.n_procs").unwrap().as_f64(), Some(4.0));
+    }
+}

@@ -1,0 +1,447 @@
+//! The advisor's wire schema: strict JSON request parsing and response
+//! building over [`crate::util::json::Json`] (the repo's hand-rolled JSON
+//! — no serde in the vendor set, matching `util::cli`'s approach to
+//! argument parsing).
+//!
+//! Every request field is validated here with a clear error — the daemon
+//! receives these values from untrusted clients, so nothing reaches the
+//! model layer unchecked. Floats round-trip exactly: the serializer emits
+//! shortest-roundtrip decimals, which is what lets the end-to-end tests
+//! (and the CI smoke job) compare daemon recommendations against the
+//! offline oracle bit for bit.
+//!
+//! ## `POST /v1/select`
+//!
+//! ```json
+//! {
+//!   "system": "system-1/128",
+//!   "app": "qr",
+//!   "policy": "greedy",
+//!   "search": {"i_min": 300, "refine_steps": 6},
+//!   "track": "cluster-a"
+//! }
+//! ```
+//!
+//! `system` is a paper Table II name or `{"n": 128, "lambda": ...,
+//! "theta": ...}` (or `mttf_days`/`mttr_min` in place of the rates);
+//! `app` is `qr`/`cg`/`md` or explicit cost vectors `{"name", "work",
+//! "ckpt", "rec_same", "rec_span"}`; `policy` is `greedy`, `pb` or
+//! `{"rp": [...]}`. All except `system` are optional. `track` opts the
+//! request into ingest-driven refresh (see [`crate::advisor::ingest`]).
+//!
+//! ## `POST /v1/ingest`
+//!
+//! ```json
+//! {"track": "cluster-a", "n_procs": 128,
+//!  "events": [{"proc": 3, "fail": 120.5, "repair": 2520.0}]}
+//! ```
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use super::ingest::IngestEvent;
+use crate::apps::AppProfile;
+use crate::config::{paper_system, SystemParams};
+use crate::policies::ReschedulingPolicy;
+use crate::search::{SearchConfig, SearchResult};
+use crate::util::json::Json;
+
+/// A parsed, validated `select` request (rates not yet track-adjusted —
+/// the advisor substitutes a track's re-fitted rates before keying).
+pub struct SelectRequest {
+    pub system: SystemParams,
+    pub app: AppProfile,
+    pub policy: ReschedulingPolicy,
+    pub cfg: SearchConfig,
+    pub track: Option<String>,
+}
+
+/// A parsed `model` request (one interval probe, diagnostics endpoint).
+pub struct ModelRequest {
+    pub system: SystemParams,
+    pub app: AppProfile,
+    pub policy: ReschedulingPolicy,
+    pub interval: f64,
+}
+
+/// A parsed `ingest` batch.
+pub struct IngestRequest {
+    pub track: String,
+    /// Required the first time a track is seen; checked against the
+    /// existing track afterwards (when present).
+    pub n_procs: Option<usize>,
+    pub events: Vec<IngestEvent>,
+}
+
+fn get_f64(j: &Json, key: &str) -> Result<Option<f64>> {
+    match j.get(key) {
+        None | Some(Json::Null) => Ok(None),
+        Some(v) => v
+            .as_f64()
+            .map(Some)
+            .ok_or_else(|| anyhow!("'{key}' must be a number")),
+    }
+}
+
+fn get_usize(j: &Json, key: &str) -> Result<Option<usize>> {
+    match get_f64(j, key)? {
+        None => Ok(None),
+        Some(x) => {
+            if x < 0.0 || x.fract() != 0.0 || x > u32::MAX as f64 {
+                bail!("'{key}' must be a non-negative integer, got {x}");
+            }
+            Ok(Some(x as usize))
+        }
+    }
+}
+
+fn parse_system(j: &Json) -> Result<SystemParams> {
+    let sys = match j {
+        Json::Str(name) => paper_system(name)
+            .ok_or_else(|| anyhow!("unknown system '{name}'; see config::TABLE2_SYSTEMS"))?,
+        Json::Obj(_) => {
+            let n = get_usize(j, "n")?.context("system.n missing")?;
+            match (get_f64(j, "lambda")?, get_f64(j, "theta")?) {
+                (Some(lambda), Some(theta)) => SystemParams::new(n, lambda, theta),
+                (None, None) => {
+                    let mttf = get_f64(j, "mttf_days")?
+                        .context("system needs lambda/theta or mttf_days/mttr_min")?;
+                    let mttr = get_f64(j, "mttr_min")?.context("system.mttr_min missing")?;
+                    SystemParams::from_mttf_mttr(n, mttf, mttr)
+                }
+                _ => bail!("system needs both lambda and theta (or mttf_days/mttr_min)"),
+            }
+        }
+        _ => bail!("'system' must be a paper system name or an object"),
+    };
+    sys.validate()?;
+    Ok(sys)
+}
+
+fn f64_vec(j: &Json, key: &str) -> Result<Vec<f64>> {
+    let arr = j
+        .get(key)
+        .and_then(Json::as_arr)
+        .ok_or_else(|| anyhow!("'{key}' must be an array of numbers"))?;
+    arr.iter()
+        .map(|v| v.as_f64().ok_or_else(|| anyhow!("'{key}' must hold only numbers")))
+        .collect()
+}
+
+fn parse_app(j: Option<&Json>, n: usize) -> Result<AppProfile> {
+    match j {
+        None => Ok(AppProfile::qr(n)),
+        Some(Json::Str(name)) => match name.as_str() {
+            "qr" => Ok(AppProfile::qr(n)),
+            "cg" => Ok(AppProfile::cg(n)),
+            "md" => Ok(AppProfile::md(n)),
+            other => bail!("unknown app '{other}' (qr|cg|md or explicit vectors)"),
+        },
+        Some(obj @ Json::Obj(_)) => {
+            let name = obj.get("name").and_then(Json::as_str).unwrap_or("custom");
+            let work = f64_vec(obj, "work")?;
+            let ckpt = f64_vec(obj, "ckpt")?;
+            let rec_same = get_f64(obj, "rec_same")?.context("app.rec_same missing")?;
+            let rec_span = get_f64(obj, "rec_span")?.unwrap_or(0.0);
+            let app = AppProfile::from_vectors(name, work, ckpt, rec_same, rec_span)?;
+            if app.n() < n {
+                bail!("app vectors cover {} processors, system has {n}", app.n());
+            }
+            Ok(app)
+        }
+        Some(_) => bail!("'app' must be a name or an object with cost vectors"),
+    }
+}
+
+fn parse_policy(j: Option<&Json>, app: &AppProfile, n: usize) -> Result<ReschedulingPolicy> {
+    match j {
+        None => Ok(ReschedulingPolicy::greedy(n)),
+        Some(Json::Str(name)) => match name.as_str() {
+            "greedy" => Ok(ReschedulingPolicy::greedy(n)),
+            "pb" => ReschedulingPolicy::performance_based(&app.work_vector()[..n]),
+            other => bail!("unknown policy '{other}' (greedy|pb or {{\"rp\": [...]}})"),
+        },
+        Some(obj @ Json::Obj(_)) => {
+            let rp = f64_vec(obj, "rp")?;
+            let rp: Vec<usize> = rp
+                .into_iter()
+                .map(|x| {
+                    if x >= 1.0 && x.fract() == 0.0 {
+                        Ok(x as usize)
+                    } else {
+                        Err(anyhow!("rp entries must be positive integers, got {x}"))
+                    }
+                })
+                .collect::<Result<_>>()?;
+            if rp.len() != n {
+                bail!("rp has {} entries, system has {n}", rp.len());
+            }
+            ReschedulingPolicy::from_vector(rp)
+        }
+        Some(_) => bail!("'policy' must be a name or {{\"rp\": [...]}}"),
+    }
+}
+
+fn parse_search(j: Option<&Json>) -> Result<SearchConfig> {
+    let mut cfg = SearchConfig::default();
+    if let Some(s) = j {
+        if !matches!(s, Json::Obj(_)) {
+            bail!("'search' must be an object");
+        }
+        if let Some(x) = get_f64(s, "i_min")? {
+            cfg.i_min = x;
+        }
+        if let Some(x) = get_f64(s, "i_max")? {
+            cfg.i_max = x;
+        }
+        if let Some(x) = get_usize(s, "refine_steps")? {
+            cfg.refine_steps = x;
+        }
+        if let Some(x) = get_f64(s, "band")? {
+            cfg.band = x;
+        }
+        if let Some(x) = get_f64(s, "thres")? {
+            cfg.build.thres = if x > 0.0 { Some(x) } else { None };
+        }
+        if let Some(x) = s.get("exact_probes").and_then(Json::as_bool) {
+            cfg.build.exact_probes = x;
+        }
+    }
+    cfg.validate()?;
+    Ok(cfg)
+}
+
+pub fn parse_select(j: &Json) -> Result<SelectRequest> {
+    let system = parse_system(j.get("system").context("'system' is required")?)?;
+    let app = parse_app(j.get("app"), system.n)?;
+    let policy = parse_policy(j.get("policy"), &app, system.n)?;
+    let cfg = parse_search(j.get("search"))?;
+    let track = match j.get("track") {
+        None | Some(Json::Null) => None,
+        Some(Json::Str(s)) if !s.is_empty() => Some(s.clone()),
+        Some(_) => bail!("'track' must be a non-empty string"),
+    };
+    Ok(SelectRequest { system, app, policy, cfg, track })
+}
+
+pub fn parse_model(j: &Json) -> Result<ModelRequest> {
+    let system = parse_system(j.get("system").context("'system' is required")?)?;
+    let app = parse_app(j.get("app"), system.n)?;
+    let policy = parse_policy(j.get("policy"), &app, system.n)?;
+    let interval = get_f64(j, "interval")?.unwrap_or(3_600.0);
+    if !(interval > 0.0) || !interval.is_finite() {
+        bail!("'interval' must be positive and finite, got {interval}");
+    }
+    Ok(ModelRequest { system, app, policy, interval })
+}
+
+pub fn parse_ingest(j: &Json) -> Result<IngestRequest> {
+    let track = j
+        .get("track")
+        .and_then(Json::as_str)
+        .filter(|s| !s.is_empty())
+        .context("'track' (non-empty string) is required")?
+        .to_string();
+    let n_procs = get_usize(j, "n_procs")?;
+    if n_procs == Some(0) {
+        bail!("'n_procs' must be positive");
+    }
+    let arr = j
+        .get("events")
+        .and_then(Json::as_arr)
+        .context("'events' (array) is required")?;
+    let mut events = Vec::with_capacity(arr.len());
+    for (i, e) in arr.iter().enumerate() {
+        let ctx = || format!("events[{i}]");
+        let proc = get_usize(e, "proc").with_context(ctx)?.with_context(ctx)?;
+        let fail = get_f64(e, "fail").with_context(ctx)?.with_context(ctx)?;
+        let repair = get_f64(e, "repair").with_context(ctx)?.with_context(ctx)?;
+        events.push(IngestEvent { proc, fail, repair });
+    }
+    Ok(IngestRequest { track, n_procs, events })
+}
+
+/// `{key}` as the 16-hex-digit wire form.
+pub fn key_hex(key: u64) -> String {
+    format!("{key:016x}")
+}
+
+/// The `select` response body.
+pub fn select_response(
+    result: &SearchResult,
+    key: u64,
+    cached: bool,
+    lambda: f64,
+    theta: f64,
+    track: Option<&str>,
+    stale: bool,
+) -> Json {
+    let mut o = Json::obj();
+    o.set("ok", Json::from(true))
+        .set("interval", Json::from(result.interval))
+        .set("uwt", Json::from(result.uwt))
+        .set("best_probed", Json::from(result.best_probed))
+        .set("evaluations", Json::from(result.evaluations))
+        .set(
+            "probes",
+            Json::Arr(
+                result
+                    .probes
+                    .iter()
+                    .map(|&(i, u)| Json::Arr(vec![Json::from(i), Json::from(u)]))
+                    .collect(),
+            ),
+        )
+        .set("key", Json::from(key_hex(key)))
+        .set("cached", Json::from(cached))
+        .set("stale", Json::from(stale))
+        .set("lambda", Json::from(lambda))
+        .set("theta", Json::from(theta));
+    if let Some(t) = track {
+        o.set("track", Json::from(t));
+    }
+    o
+}
+
+pub fn error_response(message: &str) -> Json {
+    let mut o = Json::obj();
+    o.set("ok", Json::from(false)).set("error", Json::from(message));
+    o
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Json {
+        Json::parse(s).unwrap()
+    }
+
+    #[test]
+    fn select_minimal_named_system() {
+        let r = parse_select(&parse(r#"{"system": "system-1/128"}"#)).unwrap();
+        assert_eq!(r.system.n, 128);
+        assert_eq!(r.app.name, "QR");
+        assert_eq!(r.policy.name, "greedy");
+        assert!(r.track.is_none());
+        assert_eq!(r.cfg.i_min, SearchConfig::default().i_min);
+    }
+
+    #[test]
+    fn select_full_object_system() {
+        let r = parse_select(&parse(
+            r#"{"system": {"n": 6, "lambda": 5.787e-6, "theta": 4.1e-4},
+                "app": "md", "policy": "pb",
+                "search": {"i_min": 120, "i_max": 90000, "refine_steps": 3, "band": 0.1},
+                "track": "c1"}"#,
+        ))
+        .unwrap();
+        assert_eq!(r.system.n, 6);
+        assert_eq!(r.app.name, "MD");
+        assert_eq!(r.policy.name, "pb");
+        assert_eq!(r.cfg.refine_steps, 3);
+        assert_eq!(r.cfg.i_min, 120.0);
+        assert_eq!(r.track.as_deref(), Some("c1"));
+    }
+
+    #[test]
+    fn select_mttf_units_and_custom_policy() {
+        let r = parse_select(&parse(
+            r#"{"system": {"n": 4, "mttf_days": 2, "mttr_min": 45},
+                "policy": {"rp": [1, 2, 2, 3]}}"#,
+        ))
+        .unwrap();
+        assert!((r.system.mttf() - 2.0 * 86_400.0).abs() < 1e-9);
+        assert_eq!(r.policy.vector(), &[1, 2, 2, 3]);
+    }
+
+    #[test]
+    fn select_custom_app_vectors() {
+        let r = parse_select(&parse(
+            r#"{"system": {"n": 3, "lambda": 1e-6, "theta": 1e-3},
+                "app": {"name": "x", "work": [1, 1.8, 2.4], "ckpt": [30, 31, 32],
+                        "rec_same": 9, "rec_span": 4}}"#,
+        ))
+        .unwrap();
+        assert_eq!(r.app.name, "x");
+        assert_eq!(r.app.work_per_sec(2), 1.8);
+    }
+
+    #[test]
+    fn select_rejections() {
+        assert!(parse_select(&parse(r#"{}"#)).is_err());
+        assert!(parse_select(&parse(r#"{"system": "nope/999"}"#)).is_err());
+        assert!(parse_select(&parse(r#"{"system": {"n": 0, "lambda": 1, "theta": 1}}"#)).is_err());
+        assert!(parse_select(&parse(r#"{"system": {"n": 4, "lambda": -1, "theta": 1}}"#)).is_err());
+        assert!(parse_select(&parse(r#"{"system": {"n": 4, "lambda": 1e-6}}"#)).is_err());
+        assert!(
+            parse_select(&parse(r#"{"system": "condor/64", "app": "nope"}"#)).is_err()
+        );
+        assert!(parse_select(&parse(
+            r#"{"system": "condor/64", "search": {"i_min": 0}}"#
+        ))
+        .is_err());
+        assert!(parse_select(&parse(
+            r#"{"system": "condor/64", "search": {"band": 1.5}}"#
+        ))
+        .is_err());
+        assert!(parse_select(&parse(
+            r#"{"system": {"n": 4, "lambda": 1e-6, "theta": 1e-3}, "policy": {"rp": [1, 2]}}"#
+        ))
+        .is_err());
+        assert!(parse_select(&parse(r#"{"system": "condor/64", "track": ""}"#)).is_err());
+    }
+
+    #[test]
+    fn ingest_roundtrip_and_rejections() {
+        let r = parse_ingest(&parse(
+            r#"{"track": "c1", "n_procs": 8,
+                "events": [{"proc": 0, "fail": 10.5, "repair": 20}]}"#,
+        ))
+        .unwrap();
+        assert_eq!(r.track, "c1");
+        assert_eq!(r.n_procs, Some(8));
+        assert_eq!(r.events, vec![IngestEvent { proc: 0, fail: 10.5, repair: 20.0 }]);
+        let r = parse_ingest(&parse(r#"{"track": "c1", "events": []}"#)).unwrap();
+        assert!(r.n_procs.is_none());
+        assert!(r.events.is_empty());
+        assert!(parse_ingest(&parse(r#"{"events": []}"#)).is_err());
+        assert!(parse_ingest(&parse(r#"{"track": "c1"}"#)).is_err());
+        assert!(parse_ingest(&parse(r#"{"track": "c1", "n_procs": 0, "events": []}"#)).is_err());
+        assert!(parse_ingest(&parse(
+            r#"{"track": "c1", "events": [{"proc": 0, "fail": 1}]}"#
+        ))
+        .is_err());
+        assert!(parse_ingest(&parse(
+            r#"{"track": "c1", "events": [{"proc": -1, "fail": 1, "repair": 2}]}"#
+        ))
+        .is_err());
+    }
+
+    #[test]
+    fn model_request_defaults() {
+        let r = parse_model(&parse(r#"{"system": "condor/64"}"#)).unwrap();
+        assert_eq!(r.interval, 3_600.0);
+        assert!(parse_model(&parse(r#"{"system": "condor/64", "interval": -5}"#)).is_err());
+    }
+
+    #[test]
+    fn responses_roundtrip_floats_exactly() {
+        let res = SearchResult {
+            interval: 6_517.333333333333,
+            uwt: 9.123456789012345,
+            best_probed: 4_800.0,
+            probes: vec![(300.0, 1.5), (600.0, 2.5)],
+            evaluations: 2,
+        };
+        let j = select_response(&res, 0xabcd, true, 1.1e-7, 3.7e-4, Some("c1"), false);
+        let re = Json::parse(&j.to_compact()).unwrap();
+        assert_eq!(re.get("interval").unwrap().as_f64(), Some(res.interval));
+        assert_eq!(re.get("uwt").unwrap().as_f64(), Some(res.uwt));
+        assert_eq!(re.get("cached").unwrap().as_bool(), Some(true));
+        assert_eq!(re.get("key").unwrap().as_str(), Some("000000000000abcd"));
+        assert_eq!(re.get("track").unwrap().as_str(), Some("c1"));
+        assert_eq!(re.get("probes").unwrap().as_arr().unwrap().len(), 2);
+        let err = error_response("bad");
+        assert_eq!(err.get("ok").unwrap().as_bool(), Some(false));
+    }
+}

@@ -1,0 +1,344 @@
+//! The advisor's HTTP/1.1 front end: a `std::net::TcpListener` accept
+//! loop feeding a fixed pool of handler threads through a condvar'd
+//! queue, plus one background thread draining the re-selection queue.
+//! Hand-rolled like the rest of the substrate (`util::cli`, `util::json`)
+//! — the vendor set has no hyper/tokio, and the protocol surface is four
+//! endpoints of `Content-Length`-framed JSON over `Connection: close`.
+//!
+//! | endpoint           | method | body                                  |
+//! |--------------------|--------|---------------------------------------|
+//! | `/healthz`         | GET    | —                                     |
+//! | `/v1/select`       | POST   | [`protocol::parse_select`]            |
+//! | `/v1/model`        | POST   | [`protocol::parse_model`]             |
+//! | `/v1/ingest`       | POST   | [`protocol::parse_ingest`]            |
+//! | `/v1/status`       | GET    | —                                     |
+//! | `/v1/shutdown`     | POST   | — (stops the daemon; used by tests    |
+//! |                    |        | and the CI smoke job)                 |
+//!
+//! Malformed requests get `400` with `{"ok": false, "error": ...}`;
+//! unknown paths `404`; wrong methods `405`; oversized frames `413`.
+//! Model-layer failures surface as `500` — by the time a request reaches
+//! the model layer its fields are validated, so a 500 is a bug, not bad
+//! input.
+
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::Duration;
+
+use anyhow::{bail, Context, Result};
+
+use super::{protocol, Advisor, AdvisorConfig};
+use crate::util::json::Json;
+
+/// Cap on header block and body sizes — the daemon fails fast on garbage
+/// rather than buffering it.
+const MAX_HEAD_BYTES: usize = 64 * 1024;
+const MAX_BODY_BYTES: usize = 8 * 1024 * 1024;
+
+/// Per-connection socket timeout: a stalled client must not pin a worker.
+const IO_TIMEOUT: Duration = Duration::from_secs(10);
+
+/// `serve` front-end options.
+#[derive(Debug, Clone)]
+pub struct ServeOptions {
+    /// Bind address, e.g. `127.0.0.1:7743` (port 0 = ephemeral).
+    pub addr: String,
+    /// Handler threads.
+    pub workers: usize,
+    pub advisor: AdvisorConfig,
+}
+
+impl Default for ServeOptions {
+    fn default() -> Self {
+        ServeOptions {
+            addr: "127.0.0.1:7743".to_string(),
+            workers: crate::util::pool::default_workers().clamp(2, 8),
+            advisor: AdvisorConfig::default(),
+        }
+    }
+}
+
+/// A parsed request frame.
+struct HttpRequest {
+    method: String,
+    path: String,
+    body: String,
+}
+
+fn read_request(stream: &mut TcpStream) -> Result<HttpRequest> {
+    let mut buf: Vec<u8> = Vec::with_capacity(1024);
+    let mut chunk = [0u8; 4096];
+    let head_end = loop {
+        if let Some(pos) = find_head_end(&buf) {
+            break pos;
+        }
+        if buf.len() > MAX_HEAD_BYTES {
+            bail!("header block exceeds {MAX_HEAD_BYTES} bytes");
+        }
+        let n = stream.read(&mut chunk).context("reading request head")?;
+        if n == 0 {
+            bail!("connection closed mid-request");
+        }
+        buf.extend_from_slice(&chunk[..n]);
+    };
+    let head = std::str::from_utf8(&buf[..head_end]).context("non-UTF-8 request head")?;
+    let mut lines = head.split("\r\n");
+    let request_line = lines.next().unwrap_or("");
+    let mut parts = request_line.split_whitespace();
+    let method = parts.next().unwrap_or("").to_string();
+    let path = parts.next().unwrap_or("").to_string();
+    if method.is_empty() || path.is_empty() {
+        bail!("malformed request line '{request_line}'");
+    }
+    let mut content_length = 0usize;
+    for line in lines {
+        if let Some((name, value)) = line.split_once(':') {
+            if name.eq_ignore_ascii_case("content-length") {
+                content_length = value
+                    .trim()
+                    .parse::<usize>()
+                    .with_context(|| format!("bad Content-Length '{}'", value.trim()))?;
+            }
+        }
+    }
+    if content_length > MAX_BODY_BYTES {
+        bail!("body of {content_length} bytes exceeds {MAX_BODY_BYTES}");
+    }
+    let mut body = buf[head_end + 4..].to_vec();
+    while body.len() < content_length {
+        let n = stream.read(&mut chunk).context("reading request body")?;
+        if n == 0 {
+            bail!("connection closed mid-body");
+        }
+        body.extend_from_slice(&chunk[..n]);
+    }
+    body.truncate(content_length);
+    let body = String::from_utf8(body).context("non-UTF-8 request body")?;
+    Ok(HttpRequest { method, path, body })
+}
+
+fn find_head_end(buf: &[u8]) -> Option<usize> {
+    buf.windows(4).position(|w| w == b"\r\n\r\n")
+}
+
+fn status_text(code: u16) -> &'static str {
+    match code {
+        200 => "OK",
+        400 => "Bad Request",
+        404 => "Not Found",
+        405 => "Method Not Allowed",
+        413 => "Payload Too Large",
+        _ => "Internal Server Error",
+    }
+}
+
+fn write_response(stream: &mut TcpStream, code: u16, body: &Json) {
+    let payload = body.to_compact();
+    let head = format!(
+        "HTTP/1.1 {code} {}\r\nContent-Type: application/json\r\nContent-Length: {}\r\nConnection: close\r\n\r\n",
+        status_text(code),
+        payload.len()
+    );
+    // Best effort: the client may already be gone.
+    let _ = stream.write_all(head.as_bytes());
+    let _ = stream.write_all(payload.as_bytes());
+    let _ = stream.flush();
+}
+
+/// Route one request. Parse errors are 400s; model-layer errors 500s.
+fn route(advisor: &Advisor, req: &HttpRequest, stop: &AtomicBool) -> (u16, Json) {
+    let parse_body = || -> Result<Json> { Ok(Json::parse(&req.body)?) };
+    match (req.method.as_str(), req.path.as_str()) {
+        ("GET", "/healthz") => {
+            let mut o = Json::obj();
+            o.set("ok", Json::from(true));
+            (200, o)
+        }
+        ("GET", "/v1/status") => (200, advisor.status()),
+        ("POST", "/v1/select") => match parse_body().and_then(|j| protocol::parse_select(&j)) {
+            Ok(r) => match advisor.select(&r) {
+                Ok(j) => (200, j),
+                Err(e) => (500, protocol::error_response(&format!("{e:#}"))),
+            },
+            Err(e) => (400, protocol::error_response(&format!("{e:#}"))),
+        },
+        ("POST", "/v1/model") => match parse_body().and_then(|j| protocol::parse_model(&j)) {
+            Ok(r) => match advisor.model(&r) {
+                Ok(j) => (200, j),
+                Err(e) => (500, protocol::error_response(&format!("{e:#}"))),
+            },
+            Err(e) => (400, protocol::error_response(&format!("{e:#}"))),
+        },
+        ("POST", "/v1/ingest") => match parse_body().and_then(|j| protocol::parse_ingest(&j)) {
+            Ok(r) => match advisor.ingest(&r) {
+                // Ingest validation happens against track state, so its
+                // failures are client errors, not daemon bugs.
+                Ok(j) => (200, j),
+                Err(e) => (400, protocol::error_response(&format!("{e:#}"))),
+            },
+            Err(e) => (400, protocol::error_response(&format!("{e:#}"))),
+        },
+        ("POST", "/v1/shutdown") => {
+            stop.store(true, Ordering::SeqCst);
+            let mut o = Json::obj();
+            o.set("ok", Json::from(true)).set("stopping", Json::from(true));
+            (200, o)
+        }
+        (_, "/healthz" | "/v1/status" | "/v1/select" | "/v1/model" | "/v1/ingest"
+        | "/v1/shutdown") => (405, protocol::error_response("method not allowed")),
+        _ => (404, protocol::error_response("no such endpoint")),
+    }
+}
+
+fn handle_connection(advisor: &Advisor, mut stream: TcpStream, stop: &AtomicBool) {
+    // Accepted sockets may inherit the listener's nonblocking mode on
+    // some platforms; the handler wants plain blocking reads + timeouts.
+    let _ = stream.set_nonblocking(false);
+    let _ = stream.set_read_timeout(Some(IO_TIMEOUT));
+    let _ = stream.set_write_timeout(Some(IO_TIMEOUT));
+    let _ = stream.set_nodelay(true);
+    match read_request(&mut stream) {
+        Ok(req) => {
+            let (code, body) = route(advisor, &req, stop);
+            if code != 200 {
+                eprintln!("[advisor] {} {} -> {code}", req.method, req.path);
+            }
+            write_response(&mut stream, code, &body);
+        }
+        Err(e) => {
+            write_response(&mut stream, 400, &protocol::error_response(&format!("{e:#}")));
+        }
+    }
+}
+
+/// The bound daemon. `bind` then `run`; `run` blocks until a
+/// `POST /v1/shutdown` lands.
+pub struct AdvisorServer {
+    listener: TcpListener,
+    advisor: Arc<Advisor>,
+    workers: usize,
+}
+
+impl AdvisorServer {
+    pub fn bind(opts: &ServeOptions) -> Result<AdvisorServer> {
+        let listener = TcpListener::bind(&opts.addr)
+            .with_context(|| format!("binding {}", opts.addr))?;
+        Ok(AdvisorServer {
+            listener,
+            advisor: Arc::new(Advisor::new(opts.advisor)),
+            workers: opts.workers.max(1),
+        })
+    }
+
+    /// The actual bound address (resolves the ephemeral port 0).
+    pub fn local_addr(&self) -> Result<SocketAddr> {
+        Ok(self.listener.local_addr()?)
+    }
+
+    pub fn advisor(&self) -> Arc<Advisor> {
+        Arc::clone(&self.advisor)
+    }
+
+    /// Serve until shutdown: `workers` handler threads plus one
+    /// background re-selection thread, fed by this accept loop.
+    pub fn run(self) -> Result<()> {
+        self.listener.set_nonblocking(true).context("nonblocking listener")?;
+        let stop = AtomicBool::new(false);
+        // FIFO: a burst larger than the worker pool must drain in arrival
+        // order, not starve the oldest connection.
+        let queue: Mutex<std::collections::VecDeque<TcpStream>> =
+            Mutex::new(std::collections::VecDeque::new());
+        let ready = Condvar::new();
+        let advisor = &self.advisor;
+
+        std::thread::scope(|scope| {
+            for _ in 0..self.workers {
+                scope.spawn(|| loop {
+                    let conn = {
+                        let mut q = queue.lock().unwrap();
+                        loop {
+                            if let Some(c) = q.pop_front() {
+                                break Some(c);
+                            }
+                            if stop.load(Ordering::SeqCst) {
+                                break None;
+                            }
+                            let (guard, _) =
+                                ready.wait_timeout(q, Duration::from_millis(100)).unwrap();
+                            q = guard;
+                        }
+                    };
+                    match conn {
+                        Some(c) => handle_connection(advisor, c, &stop),
+                        None => break,
+                    }
+                });
+            }
+            scope.spawn(|| {
+                while !stop.load(Ordering::SeqCst) {
+                    if !advisor.run_bg_once() {
+                        advisor.bg_wait(Duration::from_millis(100));
+                    }
+                }
+            });
+            while !stop.load(Ordering::SeqCst) {
+                match self.listener.accept() {
+                    Ok((stream, _)) => {
+                        queue.lock().unwrap().push_back(stream);
+                        ready.notify_one();
+                    }
+                    Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                        std::thread::sleep(Duration::from_millis(2));
+                    }
+                    Err(e) => {
+                        eprintln!("[advisor] accept error: {e}");
+                        std::thread::sleep(Duration::from_millis(20));
+                    }
+                }
+            }
+            ready.notify_all();
+        });
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn head_end_detection() {
+        assert_eq!(find_head_end(b"GET / HTTP/1.1\r\n\r\nrest"), Some(16));
+        assert_eq!(find_head_end(b"partial\r\n"), None);
+    }
+
+    #[test]
+    fn status_lines() {
+        assert_eq!(status_text(200), "OK");
+        assert_eq!(status_text(404), "Not Found");
+        assert_eq!(status_text(500), "Internal Server Error");
+        assert_eq!(status_text(418), "Internal Server Error");
+    }
+
+    #[test]
+    fn route_rejects_unknown_and_wrong_method() {
+        let advisor = Advisor::new(AdvisorConfig::default());
+        let stop = AtomicBool::new(false);
+        let req = |method: &str, path: &str, body: &str| HttpRequest {
+            method: method.to_string(),
+            path: path.to_string(),
+            body: body.to_string(),
+        };
+        assert_eq!(route(&advisor, &req("GET", "/nope", ""), &stop).0, 404);
+        assert_eq!(route(&advisor, &req("POST", "/healthz", ""), &stop).0, 405);
+        assert_eq!(route(&advisor, &req("GET", "/v1/select", ""), &stop).0, 405);
+        assert_eq!(route(&advisor, &req("POST", "/v1/select", "{"), &stop).0, 400);
+        assert_eq!(route(&advisor, &req("POST", "/v1/select", "{}"), &stop).0, 400);
+        assert_eq!(route(&advisor, &req("GET", "/healthz", ""), &stop).0, 200);
+        assert!(!stop.load(Ordering::SeqCst));
+        assert_eq!(route(&advisor, &req("POST", "/v1/shutdown", ""), &stop).0, 200);
+        assert!(stop.load(Ordering::SeqCst));
+    }
+}

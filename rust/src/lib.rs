@@ -50,7 +50,19 @@
 //! * `cargo bench --bench perf` tracks all of it and writes a
 //!   machine-readable `BENCH_perf.json` at the repo root (`make
 //!   bench-smoke` for the CI-sized grid).
+//!
+//! ## Advisor service (Layer 4)
+//!
+//! [`advisor`] keeps the machinery above alive as a long-running
+//! recommendation daemon (`malleable-ckpt serve`): a sharded,
+//! LRU-budgeted cache of [`markov::SharedBuilder`]s keyed by a canonical
+//! spec hash answers repeat `select`s in O(1); streaming failure
+//! ingestion re-fits per-system rates over an appendable
+//! [`traces::index::TraceTail`] and re-selects in the background — with
+//! the stationary solve warm-started from the previous recommendation —
+//! when the rates drift beyond a configurable threshold.
 
+pub mod advisor;
 pub mod apps;
 pub mod baselines;
 pub mod config;

@@ -7,6 +7,8 @@
 use anyhow::{anyhow, Result};
 use std::path::Path;
 
+use malleable_ckpt::advisor::server::{AdvisorServer, ServeOptions};
+use malleable_ckpt::advisor::AdvisorConfig;
 use malleable_ckpt::apps::{AppKind, AppProfile};
 use malleable_ckpt::config::{paper_system, SystemParams};
 use malleable_ckpt::experiments::{common::trace_for_system, extensions, figures, tables, ExperimentOptions};
@@ -35,6 +37,21 @@ fn app_spec() -> App {
                 flag("mttr-min", "F", "override per-processor MTTR (minutes)", None),
                 flag("procs", "N", "override processor count", None),
                 switch("probes", "print all probed (interval, UWT) pairs"),
+                switch("json", "emit the result as one compact JSON line (oracle for the serve smoke test)"),
+            ],
+            positionals: vec![],
+        })
+        .command(CommandSpec {
+            name: "serve",
+            about: "run the advisor daemon: HTTP/1.1 + JSON endpoints /v1/select, /v1/model, /v1/ingest, /v1/status (see DESIGN.md §7)",
+            flags: vec![
+                flag("addr", "HOST:PORT", "bind address (port 0 = ephemeral)", Some("127.0.0.1:7743")),
+                flag("workers", "N", "HTTP handler threads (0 = auto)", Some("0")),
+                flag("shards", "N", "recommendation-cache shards", Some("8")),
+                flag("cache-mb", "F", "recommendation-cache memory budget (MB)", Some("256")),
+                flag("drift", "F", "relative rate drift that re-selects a cached recommendation", Some("0.10")),
+                flag("window-days", "F", "failure-rate re-fit window over the ingested tail (days)", Some("30")),
+                flag("min-refit-failures", "N", "failures required in the window before a re-fit is trusted", Some("8")),
             ],
             positionals: vec![],
         })
@@ -146,6 +163,7 @@ fn main() {
 fn run(p: &malleable_ckpt::util::cli::Parsed) -> Result<()> {
     match p.command.as_str() {
         "select" => cmd_select(p),
+        "serve" => cmd_serve(p),
         "model" => cmd_model(p),
         "simulate" => cmd_simulate(p),
         "gen-trace" => cmd_gen_trace(p),
@@ -192,6 +210,15 @@ fn cmd_select(p: &malleable_ckpt::util::cli::Parsed) -> Result<()> {
         engine.name()
     );
     let res = select_interval(&inputs, &engine, &SearchConfig::default())?;
+    if p.switch("json") {
+        let mut o = Json::obj();
+        o.set("interval", Json::from(res.interval))
+            .set("uwt", Json::from(res.uwt))
+            .set("best_probed", Json::from(res.best_probed))
+            .set("evaluations", Json::from(res.evaluations));
+        println!("{}", o.to_compact());
+        return Ok(());
+    }
     if p.switch("probes") {
         for (i, u) in &res.probes {
             println!("  I = {:>10}  UWT = {u:.4}", fmt_duration(*i));
@@ -205,6 +232,51 @@ fn cmd_select(p: &malleable_ckpt::util::cli::Parsed) -> Result<()> {
         res.evaluations
     );
     Ok(())
+}
+
+fn cmd_serve(p: &malleable_ckpt::util::cli::Parsed) -> Result<()> {
+    let mut advisor = AdvisorConfig::default();
+    if let Some(s) = p.get_usize("shards")? {
+        advisor.shards = s.max(1);
+    }
+    if let Some(mb) = p.get_f64("cache-mb")? {
+        anyhow::ensure!(mb > 0.0 && mb.is_finite(), "--cache-mb must be positive");
+        advisor.cache_bytes = (mb * 1024.0 * 1024.0) as usize;
+    }
+    if let Some(d) = p.get_f64("drift")? {
+        anyhow::ensure!(d > 0.0 && d.is_finite(), "--drift must be positive");
+        advisor.drift_threshold = d;
+    }
+    if let Some(w) = p.get_f64("window-days")? {
+        anyhow::ensure!(w > 0.0 && w.is_finite(), "--window-days must be positive");
+        advisor.refit_window = w * 86_400.0;
+    }
+    if let Some(m) = p.get_usize("min-refit-failures")? {
+        advisor.min_refit_failures = m;
+    }
+    let mut opts = ServeOptions { addr: p.get_or("addr", "127.0.0.1:7743"), advisor, ..Default::default() };
+    if let Some(w) = p.get_usize("workers")? {
+        if w > 0 {
+            opts.workers = w;
+        }
+    }
+    let server = AdvisorServer::bind(&opts)?;
+    let addr = server.local_addr()?;
+    println!("advisor listening on http://{addr}");
+    println!(
+        "  drift threshold {:.3}, re-fit window {:.1} d, cache {} MB / {} shards, {} workers",
+        opts.advisor.drift_threshold,
+        opts.advisor.refit_window / 86_400.0,
+        opts.advisor.cache_bytes >> 20,
+        opts.advisor.shards,
+        opts.workers
+    );
+    println!("try:");
+    println!(
+        "  curl -s http://{addr}/v1/select -d '{{\"system\": \"system-1/128\", \"app\": \"qr\"}}'"
+    );
+    println!("  curl -s http://{addr}/v1/status");
+    server.run()
 }
 
 fn cmd_model(p: &malleable_ckpt::util::cli::Parsed) -> Result<()> {

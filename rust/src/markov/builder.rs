@@ -348,6 +348,33 @@ impl NativeCache {
         self.up_rows.get_or_init(|| self.build_up_rows(inputs)).as_ref()
     }
 
+    /// Approximate resident bytes of the interval-independent caches —
+    /// the advisor's LRU memory accounting. Dominated by the per-chain
+    /// spectral eigenbases and (exact path only, if it was ever forced)
+    /// the up-row cache; the O(N²) band/`y`/scatter vectors are counted
+    /// too since at small N they are all there is.
+    fn approx_bytes(&self) -> usize {
+        let f = std::mem::size_of::<f64>();
+        let mut b = self.space.len() * 4 * std::mem::size_of::<usize>();
+        for t in &self.bands {
+            b += 2 * 3 * t.dd.len() * f; // bands + bands_t
+        }
+        for (ci, recs) in self.recs.iter().enumerate() {
+            b += recs.iter().map(|r| r.y.len()).sum::<usize>() * f;
+            b += (self.ups[ci].len() * 2 + self.scatter[ci].len()) * std::mem::size_of::<usize>();
+        }
+        b += self
+            .spectral
+            .iter()
+            .filter_map(|s| s.as_ref().map(ChainSpectral::approx_bytes))
+            .sum::<usize>();
+        if let Some(Some(up)) = self.up_rows.get() {
+            b += up.vals.len() * (f + std::mem::size_of::<u32>())
+                + up.offsets.len() * std::mem::size_of::<usize>();
+        }
+        b
+    }
+
     fn build_up_rows(&self, inputs: &ModelInputs) -> Option<UpRows> {
         let n = inputs.system.n;
         let lam = inputs.system.lambda;
@@ -960,6 +987,87 @@ impl<'a> ModelBuilder<'a> {
     }
 }
 
+/// Owning, `Send + Sync` sibling of [`ModelBuilder`] for long-lived
+/// services: where `ModelBuilder` borrows its inputs for the duration of
+/// one search, `SharedBuilder` owns them, so the advisor daemon can park
+/// one per recommendation-cache entry behind an `Arc` and share it across
+/// request threads. Native engine only (the probe engine's home — the
+/// other engines have no interval-independent piece to keep alive).
+///
+/// The warm-start π persists across *searches*, not just probes: a repeat
+/// `select` warm-starts from the previous one, and
+/// [`SharedBuilder::seed_pi`] lets a drift-triggered re-selection start
+/// from the pre-drift builder's last probe — the spectral probe engine
+/// amortizing across the lifetime of the daemon instead of one search.
+pub struct SharedBuilder {
+    inputs: ModelInputs,
+    opts: BuildOptions,
+    cache: NativeCache,
+    /// Previous probe's π (full state-id space) for warm starts.
+    warm: Mutex<Option<Vec<f64>>>,
+}
+
+impl SharedBuilder {
+    /// Build the interval-independent caches once and take ownership of
+    /// the inputs.
+    pub fn native(inputs: ModelInputs, opts: &BuildOptions) -> SharedBuilder {
+        let cache = NativeCache::new(&inputs, opts.workers.max(1));
+        SharedBuilder { inputs, opts: *opts, cache, warm: Mutex::new(None) }
+    }
+
+    pub fn inputs(&self) -> &ModelInputs {
+        &self.inputs
+    }
+
+    pub fn options(&self) -> &BuildOptions {
+        &self.opts
+    }
+
+    /// States in the (unreduced) state space.
+    pub fn n_states(&self) -> usize {
+        self.cache.space.len()
+    }
+
+    /// Approximate resident bytes of the interval-independent caches —
+    /// what a cache entry charges against the advisor's memory budget.
+    pub fn cache_bytes(&self) -> usize {
+        self.cache.approx_bytes()
+    }
+
+    /// Exact cached build (bit-identical to [`MalleableModel::build`]).
+    pub fn build(&self, interval: f64) -> Result<MalleableModel> {
+        build_cached(&self.cache, &self.inputs, &self.opts, interval)
+    }
+
+    /// One probe-engine evaluation (see [`ModelBuilder::probe`]).
+    pub fn probe(&self, interval: f64) -> Result<ProbeResult> {
+        probe_cached(&self.cache, &self.inputs, &self.opts, interval, &self.warm)
+    }
+
+    /// `UWT_I` with the same routing as [`ModelBuilder::uwt`]: the probe
+    /// engine unless [`BuildOptions::exact_probes`] is set.
+    pub fn uwt(&self, interval: f64) -> Result<f64> {
+        if self.opts.exact_probes {
+            Ok(self.build(interval)?.uwt())
+        } else {
+            Ok(self.probe(interval)?.uwt)
+        }
+    }
+
+    /// Seed the warm-start π (full state-id space) — e.g. from the
+    /// pre-drift builder's [`SharedBuilder::warm_pi`] when the advisor
+    /// re-selects after a rate re-fit. A wrong-length seed is harmless:
+    /// the probe falls back to the uniform start.
+    pub fn seed_pi(&self, pi: Vec<f64>) {
+        *self.warm.lock().unwrap() = Some(pi);
+    }
+
+    /// Snapshot of the last probe's π, if any probe has run.
+    pub fn warm_pi(&self) -> Option<Vec<f64>> {
+        self.warm.lock().unwrap().clone()
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -1133,5 +1241,52 @@ mod tests {
         let engine = ComputeEngine::native();
         let builder = ModelBuilder::new(&inputs, &engine, &BuildOptions::default()).unwrap();
         assert!(builder.spectral_chains() > 0, "no chain qualified for the spectral cache");
+    }
+
+    // ---- SharedBuilder (the advisor's owning, shareable variant) ----
+
+    #[test]
+    fn shared_builder_is_send_sync() {
+        fn assert_send_sync<T: Send + Sync>() {}
+        assert_send_sync::<SharedBuilder>();
+    }
+
+    #[test]
+    fn shared_builder_matches_borrowing_builder() {
+        let inputs = small_inputs(8);
+        let engine = ComputeEngine::native();
+        let borrowed = ModelBuilder::new(&inputs, &engine, &BuildOptions::default()).unwrap();
+        let shared = SharedBuilder::native(small_inputs(8), &BuildOptions::default());
+        assert!(shared.n_states() > 0);
+        assert!(shared.cache_bytes() > 0);
+        for interval in [600.0, 3_600.0, 20_000.0] {
+            // Both sides cold-to-warm in lockstep: identical probe floats.
+            assert_eq!(shared.uwt(interval).unwrap(), borrowed.uwt(interval).unwrap());
+        }
+        let exact = shared.build(7_200.0).unwrap();
+        let oracle = borrowed.build(7_200.0).unwrap();
+        assert_eq!(exact.uwt(), oracle.uwt());
+        assert_eq!(exact.stationary_distribution(), oracle.stationary_distribution());
+    }
+
+    #[test]
+    fn shared_builder_seed_and_snapshot() {
+        let shared = SharedBuilder::native(small_inputs(6), &BuildOptions::default());
+        assert!(shared.warm_pi().is_none());
+        let cold = shared.probe(3_600.0).unwrap();
+        let snap = shared.warm_pi().expect("probe should leave a warm π");
+        assert_eq!(snap.len(), shared.n_states());
+        // Seeding another builder with that π reproduces the probe within
+        // the engine tolerance and can only shorten the solve.
+        let seeded = SharedBuilder::native(small_inputs(6), &BuildOptions::default());
+        seeded.seed_pi(snap);
+        let warm = seeded.probe(3_600.0).unwrap();
+        let rel = (warm.uwt - cold.uwt).abs() / cold.uwt.abs().max(1e-300);
+        assert!(rel < 1e-9, "seeded probe moved UWT by {rel}");
+        assert!(warm.solve_iters <= cold.solve_iters);
+        // A wrong-length seed is ignored (uniform fallback), not an error.
+        let odd = SharedBuilder::native(small_inputs(6), &BuildOptions::default());
+        odd.seed_pi(vec![1.0; 3]);
+        assert!(odd.probe(3_600.0).is_ok());
     }
 }

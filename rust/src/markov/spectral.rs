@@ -107,6 +107,13 @@ impl ChainSpectral {
         false // a chain always has at least the zero-spare state
     }
 
+    /// Approximate resident size in bytes (the dense eigenbasis dominates)
+    /// — feeds the advisor cache's memory accounting.
+    pub fn approx_bytes(&self) -> usize {
+        let n = self.len();
+        (n * n + 2 * n) * std::mem::size_of::<f64>()
+    }
+
     /// Eigenvalues of the generator (ascending; last ≈ 0).
     pub fn eigenvalues(&self) -> &[f64] {
         &self.values

@@ -24,9 +24,9 @@
 //! bracket is always closed (previously the bracket stayed open and the
 //! refinement degenerated to re-probing the doubling points).
 
-use anyhow::Result;
+use anyhow::{ensure, Result};
 
-use crate::markov::{BuildOptions, MalleableModel, ModelBuilder, ModelInputs};
+use crate::markov::{BuildOptions, MalleableModel, ModelBuilder, ModelInputs, SharedBuilder};
 use crate::runtime::ComputeEngine;
 
 /// Search configuration.
@@ -41,6 +41,43 @@ pub struct SearchConfig {
     /// "Within x of the best" band for averaging (paper: 0.08).
     pub band: f64,
     pub build: BuildOptions,
+}
+
+impl SearchConfig {
+    /// Upper bound on refinement steps (each adds at most two probes;
+    /// beyond this the bracket midpoints collide with existing probes
+    /// anyway, so larger values only signal a garbage request).
+    pub const MAX_REFINE_STEPS: usize = 64;
+
+    /// Reject configurations that would silently degenerate the search
+    /// (empty doubling range, unbounded refinement, no or everything in
+    /// the averaging band). The advisor daemon receives these fields from
+    /// untrusted requests, so every search entry point validates first.
+    pub fn validate(&self) -> Result<()> {
+        ensure!(
+            self.i_min > 0.0 && self.i_min.is_finite(),
+            "i_min must be positive and finite, got {}",
+            self.i_min
+        );
+        ensure!(
+            self.i_max.is_finite() && self.i_max > self.i_min,
+            "i_max ({}) must be finite and exceed i_min ({})",
+            self.i_max,
+            self.i_min
+        );
+        ensure!(
+            self.refine_steps <= Self::MAX_REFINE_STEPS,
+            "refine_steps ({}) exceeds the bound {}",
+            self.refine_steps,
+            Self::MAX_REFINE_STEPS
+        );
+        ensure!(
+            self.band > 0.0 && self.band < 1.0,
+            "band must lie in (0, 1), got {}",
+            self.band
+        );
+        Ok(())
+    }
 }
 
 impl Default for SearchConfig {
@@ -76,6 +113,7 @@ fn run_search(
     cfg: &SearchConfig,
     eval: &mut dyn FnMut(f64) -> Result<f64>,
 ) -> Result<SearchResult> {
+    cfg.validate()?;
     let mut probes: Vec<(f64, f64)> = Vec::new();
 
     // Phase 1: doubling from I_min until UWT decreases.
@@ -169,6 +207,19 @@ pub fn select_interval(
     cfg: &SearchConfig,
 ) -> Result<SearchResult> {
     let builder = ModelBuilder::new(inputs, engine, &cfg.build)?;
+    run_search(cfg, &mut |i| builder.uwt(i))
+}
+
+/// Run the search over a long-lived [`SharedBuilder`] (the advisor's
+/// per-cache-entry builder), preserving its warm-start state across
+/// calls: the probes of one selection warm-start the next, so repeat and
+/// drift-refreshed selections on the same builder amortize like one long
+/// search. The probes are governed by the *builder's* build options (the
+/// advisor constructs the builder from `cfg.build`, keeping the two in
+/// agreement); the search-shape fields of `cfg` are validated and used
+/// as in [`select_interval`]. A cold builder reproduces
+/// [`select_interval`] bit for bit.
+pub fn select_interval_shared(builder: &SharedBuilder, cfg: &SearchConfig) -> Result<SearchResult> {
     run_search(cfg, &mut |i| builder.uwt(i))
 }
 
@@ -303,6 +354,53 @@ mod tests {
             .filter(|&&(iv, _)| (iv / cfg.i_max - 1.0).abs() <= 1e-3)
             .count();
         assert_eq!(at_cap, 1, "cap probed {at_cap} times: {:?}", res.probes);
+    }
+
+    #[test]
+    fn validate_rejects_degenerate_configs() {
+        let ok = SearchConfig::default();
+        assert!(ok.validate().is_ok());
+        assert!(SearchConfig { i_min: 0.0, ..ok }.validate().is_err());
+        assert!(SearchConfig { i_min: -5.0, ..ok }.validate().is_err());
+        assert!(SearchConfig { i_min: f64::NAN, ..ok }.validate().is_err());
+        assert!(SearchConfig { i_max: 200.0, ..ok }.validate().is_err()); // < i_min
+        assert!(SearchConfig { i_max: ok.i_min, ..ok }.validate().is_err());
+        assert!(SearchConfig { i_max: f64::INFINITY, ..ok }.validate().is_err());
+        assert!(SearchConfig { refine_steps: SearchConfig::MAX_REFINE_STEPS + 1, ..ok }
+            .validate()
+            .is_err());
+        assert!(SearchConfig { band: 0.0, ..ok }.validate().is_err());
+        assert!(SearchConfig { band: 1.0, ..ok }.validate().is_err());
+        assert!(SearchConfig { band: f64::NAN, ..ok }.validate().is_err());
+        // Every search entry point rejects, not just the daemon.
+        let engine = ComputeEngine::native();
+        let bad = SearchConfig { i_min: 0.0, ..ok };
+        assert!(select_interval(&inputs(4, 2.0), &engine, &bad).is_err());
+        assert!(select_interval_uncached(&inputs(4, 2.0), &engine, &bad).is_err());
+    }
+
+    #[test]
+    fn shared_builder_search_matches_select_interval() {
+        let cfg = quick_cfg();
+        let engine = ComputeEngine::native();
+        let oracle = select_interval(&inputs(6, 3.0), &engine, &cfg).unwrap();
+        let shared = SharedBuilder::native(inputs(6, 3.0), &cfg.build);
+        let first = select_interval_shared(&shared, &cfg).unwrap();
+        assert_eq!(first.probes, oracle.probes, "cold shared builder diverged from oracle");
+        assert_eq!(first.interval, oracle.interval);
+        assert_eq!(first.uwt, oracle.uwt);
+        // A repeat selection on the same builder warm-starts from the
+        // previous probes; the tolerance policy pins the probed set and
+        // the selected interval exactly.
+        let again = select_interval_shared(&shared, &cfg).unwrap();
+        assert_eq!(again.interval, oracle.interval);
+        let i1: Vec<f64> = first.probes.iter().map(|&(i, _)| i).collect();
+        let i2: Vec<f64> = again.probes.iter().map(|&(i, _)| i).collect();
+        assert_eq!(i1, i2);
+        for (a, b) in first.probes.iter().zip(&again.probes) {
+            let rel = (a.1 - b.1).abs() / a.1.abs().max(1e-300);
+            assert!(rel < 1e-9, "warm repeat moved UWT by {rel}");
+        }
     }
 
     #[test]

@@ -22,6 +22,22 @@
 //! non-monotone times (a fresh run over the same trace) take a fresh
 //! cursor; the index itself is immutable and shared (`Sync`), which is
 //! what makes [`crate::simulator::Simulator::sweep_par`] possible.
+//!
+//! ## Ordering contract
+//!
+//! The merged timeline is sorted by the **total** key
+//! `(time, repair-before-failure, processor id)`. Repairs sort before
+//! failures at equal instants so a back-to-back outage pair leaves the
+//! processor down (matching [`FailureTrace::is_up`]); the processor-id
+//! tiebreak makes the representation fully deterministic — two traces with
+//! the same event multiset compile to byte-identical indices regardless of
+//! the order the events were discovered in. [`TraceTail`] (the advisor's
+//! streaming ingest substrate) relies on this: events arriving out of
+//! order or retransmitted land in the same place, exact duplicates are
+//! merged idempotently, and conflicting duplicates (same processor and
+//! failure instant, different repair) are rejected rather than guessed at.
+
+use anyhow::{bail, Result};
 
 use super::FailureTrace;
 
@@ -52,13 +68,20 @@ impl TraceIndex {
                 events.push((r, p as u32, true));
             }
         }
-        // Repairs sort before failures at equal times: when one outage
-        // ends exactly where the next begins, applying repair-then-fail
-        // leaves the processor down at that instant, matching
-        // `FailureTrace::is_up` (down at the failure instant).
+        // Total order (see the module-level ordering contract): repairs
+        // sort before failures at equal times — when one outage ends
+        // exactly where the next begins, applying repair-then-fail leaves
+        // the processor down at that instant, matching
+        // `FailureTrace::is_up` (down at the failure instant) — and the
+        // processor id breaks the remaining ties so the index is a pure
+        // function of the event *multiset*, not of discovery order.
         events.sort_unstable_by(|a, b| {
-            a.0.partial_cmp(&b.0).unwrap().then(b.2.cmp(&a.2))
+            a.0.partial_cmp(&b.0).unwrap().then(b.2.cmp(&a.2)).then(a.1.cmp(&b.1))
         });
+        debug_assert!(
+            events.windows(2).all(|w| w[0] != w[1]),
+            "duplicate events in a validated FailureTrace"
+        );
 
         let mut times = Vec::with_capacity(events.len());
         let mut procs = Vec::with_capacity(events.len());
@@ -135,6 +158,202 @@ impl TraceIndex {
             next_fail: vec![0; n],
             fail_before: vec![0; n],
         }
+    }
+
+    /// An index with no events yet — the starting point of the advisor's
+    /// streaming ingest ([`TraceTail`] keeps one in sync as outages land).
+    pub fn empty(n_procs: usize) -> TraceIndex {
+        TraceIndex {
+            n_procs,
+            times: Vec::new(),
+            procs: Vec::new(),
+            repair: Vec::new(),
+            count_after: Vec::new(),
+            repairs: Vec::new(),
+        }
+    }
+
+    /// Time of the last (latest) event, if any.
+    pub fn last_event_time(&self) -> Option<f64> {
+        self.times.last().copied()
+    }
+
+    /// Events with time `>= t0` in timeline order, as
+    /// `(time, processor, is_repair)` — the windowed re-fit's input.
+    pub fn events_since(&self, t0: f64) -> impl Iterator<Item = (f64, usize, bool)> + '_ {
+        let start = self.times.partition_point(|&t| t < t0);
+        (start..self.times.len())
+            .map(move |i| (self.times[i], self.procs[i] as usize, self.repair[i]))
+    }
+
+    /// Insertion position of a new event under the total order
+    /// `(time, repair-before-failure, processor)`.
+    fn event_pos(&self, t: f64, proc: u32, rep: bool) -> usize {
+        // Failure ranks after repair at equal times.
+        let rank = |r: bool| u8::from(!r);
+        let (mut lo, mut hi) = (0usize, self.times.len());
+        while lo < hi {
+            let mid = (lo + hi) / 2;
+            let less = match self.times[mid].partial_cmp(&t).unwrap() {
+                std::cmp::Ordering::Less => true,
+                std::cmp::Ordering::Greater => false,
+                std::cmp::Ordering::Equal => match rank(self.repair[mid]).cmp(&rank(rep)) {
+                    std::cmp::Ordering::Less => true,
+                    std::cmp::Ordering::Greater => false,
+                    std::cmp::Ordering::Equal => self.procs[mid] < proc,
+                },
+            };
+            if less {
+                lo = mid + 1;
+            } else {
+                hi = mid;
+            }
+        }
+        lo
+    }
+
+    /// Splice one completed outage `(fail, repair)` of `proc` into the
+    /// timeline, maintaining the sorted order and the availability step
+    /// function. Cost is O(tail) — the distance from the insertion point
+    /// to the end — so near-ordered streaming arrival is amortized O(1)
+    /// per event. The caller ([`TraceTail::push`]) has already validated
+    /// the per-processor invariants (finite, `repair > fail`, no overlap
+    /// with existing outages of `proc`), which is what guarantees every
+    /// prefix count stays within `[0, n_procs]`.
+    fn insert_outage(&mut self, proc: usize, fail: f64, repair_t: f64) {
+        let p = proc as u32;
+        let pf = self.event_pos(fail, p, false);
+        self.times.insert(pf, fail);
+        self.procs.insert(pf, p);
+        self.repair.insert(pf, false);
+        self.count_after.insert(pf, 0);
+        let pr = self.event_pos(repair_t, p, true);
+        debug_assert!(pr > pf);
+        self.times.insert(pr, repair_t);
+        self.procs.insert(pr, p);
+        self.repair.insert(pr, true);
+        self.count_after.insert(pr, 0);
+        // Recompute the step function over [pf, pr]; beyond the repair the
+        // net delta of the pair is zero, so later counts are unchanged.
+        let mut count =
+            if pf == 0 { self.n_procs as i64 } else { self.count_after[pf - 1] as i64 };
+        for i in pf..=pr {
+            count += if self.repair[i] { 1 } else { -1 };
+            debug_assert!(count >= 0 && count <= self.n_procs as i64);
+            self.count_after[i] = count as u32;
+        }
+        let rp = self.repairs.partition_point(|&r| r <= repair_t);
+        self.repairs.insert(rp, repair_t);
+    }
+}
+
+/// Appendable failure-history tail — the advisor's streaming-ingest
+/// substrate. Holds per-processor outage lists (the [`FailureTrace`]
+/// invariants, enforced on every push) and keeps a [`TraceIndex`] over
+/// them incrementally up to date, so windowed re-fits read the merged
+/// timeline without recompiling it per batch.
+///
+/// ## Ingest contract
+///
+/// * Events are **completed outages** `(fail, repair)` and may arrive in
+///   any order, including interleaved across processors and out of time
+///   order — the index splice is O(distance from the tail), so
+///   near-ordered arrival (the common case) is amortized O(1).
+/// * An **exact duplicate** (same processor, same `(fail, repair)`) is
+///   merged idempotently and reported as such — retransmission-safe.
+/// * A **conflicting duplicate** (overlapping an existing outage of the
+///   same processor without matching it exactly) is rejected with an
+///   error; the tail never guesses which report to believe.
+#[derive(Debug, Clone)]
+pub struct TraceTail {
+    n_procs: usize,
+    /// Per-processor sorted, non-overlapping `(fail, repair)` intervals.
+    outages: Vec<Vec<(f64, f64)>>,
+    index: TraceIndex,
+}
+
+impl TraceTail {
+    pub fn new(n_procs: usize) -> Result<TraceTail> {
+        if n_procs == 0 {
+            bail!("trace tail needs at least one processor");
+        }
+        Ok(TraceTail {
+            n_procs,
+            outages: vec![Vec::new(); n_procs],
+            index: TraceIndex::empty(n_procs),
+        })
+    }
+
+    pub fn n_procs(&self) -> usize {
+        self.n_procs
+    }
+
+    /// Total events (2 per outage) in the merged timeline.
+    pub fn n_events(&self) -> usize {
+        self.index.n_events()
+    }
+
+    pub fn last_event_time(&self) -> Option<f64> {
+        self.index.last_event_time()
+    }
+
+    /// The incrementally maintained merged timeline.
+    pub fn index(&self) -> &TraceIndex {
+        &self.index
+    }
+
+    /// Ingest one completed outage. Returns `Ok(true)` when the outage was
+    /// new, `Ok(false)` when it exactly duplicated an existing one (merged,
+    /// no state change); see the ingest contract above.
+    pub fn push(&mut self, proc: usize, fail: f64, repair: f64) -> Result<bool> {
+        if proc >= self.n_procs {
+            bail!("processor {proc} out of range (tail has {})", self.n_procs);
+        }
+        if !(fail >= 0.0) || !(repair > fail) || !fail.is_finite() || !repair.is_finite() {
+            bail!("proc {proc}: invalid outage ({fail}, {repair})");
+        }
+        let list = &mut self.outages[proc];
+        let i = list.partition_point(|&(f, _)| f < fail);
+        if i < list.len() && list[i] == (fail, repair) {
+            return Ok(false); // exact duplicate: merge idempotently
+        }
+        if i < list.len() && repair > list[i].0 {
+            bail!(
+                "proc {proc}: outage ({fail}, {repair}) overlaps existing ({}, {})",
+                list[i].0,
+                list[i].1
+            );
+        }
+        if i > 0 && fail < list[i - 1].1 {
+            bail!(
+                "proc {proc}: outage ({fail}, {repair}) overlaps existing ({}, {})",
+                list[i - 1].0,
+                list[i - 1].1
+            );
+        }
+        list.insert(i, (fail, repair));
+        self.index.insert_outage(proc, fail, repair);
+        Ok(true)
+    }
+
+    /// Completed outages with `repair >= t0` as `(repair, duration)`,
+    /// sorted by `(repair, processor)` — deterministic input for the
+    /// windowed MTTR re-fit.
+    pub fn completed_since(&self, t0: f64) -> Vec<(f64, f64)> {
+        let mut out: Vec<(f64, f64, usize)> = Vec::new();
+        for (p, list) in self.outages.iter().enumerate() {
+            // Repairs are sorted per processor (outages never overlap).
+            let start = list.partition_point(|&(_, r)| r < t0);
+            out.extend(list[start..].iter().map(|&(f, r)| (r, r - f, p)));
+        }
+        out.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap().then(a.2.cmp(&b.2)));
+        out.into_iter().map(|(r, d, _)| (r, d)).collect()
+    }
+
+    /// Snapshot the tail as a validated [`FailureTrace`] over
+    /// `[0, horizon]` (horizon must cover the last event).
+    pub fn to_trace(&self, horizon: f64) -> Result<FailureTrace> {
+        FailureTrace::new(self.outages.clone(), horizon)
     }
 }
 
@@ -368,5 +587,105 @@ mod tests {
         let mut cur = index.cursor(&trace);
         assert_eq!(cur.up_count(50.0), 2);
         assert_eq!(cur.next_failure_among(&[0, 1], 0.0), None);
+    }
+
+    #[test]
+    fn equal_time_events_order_deterministically() {
+        // Three procs failing at the same instant: the (time, kind, proc)
+        // total order pins the representation regardless of input order.
+        let a = FailureTrace::new(
+            vec![vec![(10.0, 20.0)], vec![(10.0, 20.0)], vec![(10.0, 20.0)]],
+            50.0,
+        )
+        .unwrap();
+        let index = TraceIndex::new(&a);
+        let events: Vec<(f64, usize, bool)> = index.events_since(0.0).collect();
+        assert_eq!(
+            events,
+            vec![
+                (10.0, 0, false),
+                (10.0, 1, false),
+                (10.0, 2, false),
+                (20.0, 0, true),
+                (20.0, 1, true),
+                (20.0, 2, true),
+            ]
+        );
+        assert_eq!(index.count_at(10.0), 0);
+        assert_eq!(index.count_at(20.0), 3);
+    }
+
+    #[test]
+    fn tail_matches_batch_index_any_arrival_order() {
+        // Pushing a random trace's outages in three different arrival
+        // orders must compile to the same merged timeline as the batch
+        // TraceIndex::new over the equivalent FailureTrace.
+        let trace = random_trace(7, 5);
+        let batch = TraceIndex::new(&trace);
+        let mut all: Vec<(usize, f64, f64)> = Vec::new();
+        for p in 0..trace.n_procs() {
+            all.extend(trace.outages(p).iter().map(|&(f, r)| (p, f, r)));
+        }
+        let mut by_time = all.clone();
+        by_time.sort_by(|a, b| a.1.partial_cmp(&b.1).unwrap());
+        let mut reversed = by_time.clone();
+        reversed.reverse();
+        // by_time, reversed, and the per-processor grouped order.
+        for events in [by_time, reversed, all.clone()] {
+            let mut tail = TraceTail::new(trace.n_procs()).unwrap();
+            for &(p, f, r) in &events {
+                assert!(tail.push(p, f, r).unwrap());
+            }
+            assert_eq!(tail.n_events(), batch.n_events());
+            let got: Vec<(f64, usize, bool)> = tail.index().events_since(0.0).collect();
+            let want: Vec<(f64, usize, bool)> = batch.events_since(0.0).collect();
+            assert_eq!(got, want);
+            let mut rng = Rng::new(17);
+            for _ in 0..200 {
+                let t = rng.range(0.0, trace.horizon());
+                assert_eq!(tail.index().count_at(t), batch.count_at(t), "count at {t}");
+            }
+            assert_eq!(
+                tail.index().next_repair_after_total_outage(0.0),
+                batch.next_repair_after_total_outage(0.0)
+            );
+        }
+    }
+
+    #[test]
+    fn tail_merges_exact_duplicates_rejects_conflicts() {
+        let mut tail = TraceTail::new(2).unwrap();
+        assert!(tail.push(0, 10.0, 20.0).unwrap());
+        // Exact retransmission: merged, no state change.
+        assert!(!tail.push(0, 10.0, 20.0).unwrap());
+        assert_eq!(tail.n_events(), 2);
+        // Conflicting duplicates and overlaps: rejected.
+        assert!(tail.push(0, 10.0, 25.0).is_err());
+        assert!(tail.push(0, 15.0, 30.0).is_err());
+        assert!(tail.push(0, 5.0, 12.0).is_err());
+        // Same instants on the *other* processor are fine.
+        assert!(tail.push(1, 10.0, 20.0).unwrap());
+        // Touching outages are fine (FailureTrace semantics).
+        assert!(tail.push(0, 20.0, 30.0).unwrap());
+        assert_eq!(tail.n_events(), 6);
+        // Invalid events rejected.
+        assert!(tail.push(0, -1.0, 5.0).is_err());
+        assert!(tail.push(0, 50.0, 50.0).is_err());
+        assert!(tail.push(0, f64::NAN, 60.0).is_err());
+        assert!(tail.push(2, 1.0, 2.0).is_err());
+        // Snapshot round-trips through the validated FailureTrace.
+        let trace = tail.to_trace(100.0).unwrap();
+        assert_eq!(trace.outages(0), &[(10.0, 20.0), (20.0, 30.0)]);
+    }
+
+    #[test]
+    fn tail_completed_since_window() {
+        let mut tail = TraceTail::new(2).unwrap();
+        tail.push(0, 10.0, 30.0).unwrap();
+        tail.push(1, 40.0, 45.0).unwrap();
+        tail.push(0, 50.0, 70.0).unwrap();
+        assert_eq!(tail.completed_since(0.0), vec![(30.0, 20.0), (45.0, 5.0), (70.0, 20.0)]);
+        assert_eq!(tail.completed_since(40.0), vec![(45.0, 5.0), (70.0, 20.0)]);
+        assert_eq!(tail.last_event_time(), Some(70.0));
     }
 }

@@ -18,7 +18,7 @@ pub mod parse;
 pub mod stats;
 pub mod synth;
 
-pub use index::{TraceCursor, TraceIndex};
+pub use index::{TraceCursor, TraceIndex, TraceTail};
 
 use anyhow::{bail, Result};
 

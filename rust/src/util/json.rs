@@ -110,6 +110,13 @@ impl From<usize> for Json {
         Json::Num(x as f64)
     }
 }
+impl From<u64> for Json {
+    // Counters (the advisor's status report). Exact below 2^53 — far
+    // beyond any counter a daemon accumulates.
+    fn from(x: u64) -> Json {
+        Json::Num(x as f64)
+    }
+}
 impl From<&str> for Json {
     fn from(s: &str) -> Json {
         Json::Str(s.to_string())
@@ -507,6 +514,13 @@ mod tests {
         .unwrap();
         assert_eq!(m.path("chain_probs.8").unwrap().as_str(), Some("chain_probs_8.hlo.txt"));
         assert_eq!(m.get("dtype").unwrap().as_str(), Some("f64"));
+    }
+
+    #[test]
+    fn counter_conversions() {
+        assert_eq!(Json::from(7u64), Json::Num(7.0));
+        assert_eq!(Json::from(7usize), Json::Num(7.0));
+        assert_eq!(Json::from(0u64).to_compact(), "0");
     }
 
     #[test]

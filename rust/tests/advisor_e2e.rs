@@ -1,0 +1,236 @@
+//! End-to-end advisor-daemon test: boots `serve` on an ephemeral port,
+//! fires concurrent `select`/`ingest` requests from real sockets, and
+//! pins the daemon's recommendations to the offline
+//! [`search::select_interval`] oracle — the selected interval exactly,
+//! UWT within the pinned 1e-9 relative tolerance (floats cross the wire
+//! via shortest-roundtrip decimals, so JSON adds no error).
+
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpStream};
+use std::time::Duration;
+
+use malleable_ckpt::advisor::server::{AdvisorServer, ServeOptions};
+use malleable_ckpt::advisor::AdvisorConfig;
+use malleable_ckpt::apps::AppProfile;
+use malleable_ckpt::config::SystemParams;
+use malleable_ckpt::markov::ModelInputs;
+use malleable_ckpt::policies::ReschedulingPolicy;
+use malleable_ckpt::runtime::ComputeEngine;
+use malleable_ckpt::search::{select_interval, SearchConfig, SearchResult};
+use malleable_ckpt::traces::synth::{generate, SynthSpec};
+use malleable_ckpt::util::json::Json;
+use malleable_ckpt::util::rng::Rng;
+
+const DAY: f64 = 86_400.0;
+
+/// Boot a daemon on an ephemeral port; returns the address and the join
+/// handle (joined after `/v1/shutdown`).
+fn boot(cfg: AdvisorConfig) -> (SocketAddr, std::thread::JoinHandle<()>) {
+    let opts = ServeOptions { addr: "127.0.0.1:0".to_string(), workers: 4, advisor: cfg };
+    let server = AdvisorServer::bind(&opts).expect("bind ephemeral port");
+    let addr = server.local_addr().unwrap();
+    let handle = std::thread::spawn(move || server.run().expect("serve loop"));
+    (addr, handle)
+}
+
+/// Minimal HTTP/1.1 client: one request, `Connection: close` framing.
+fn http(addr: SocketAddr, method: &str, path: &str, body: &str) -> (u16, Json) {
+    let mut stream = TcpStream::connect(addr).expect("connect");
+    stream.set_read_timeout(Some(Duration::from_secs(30))).unwrap();
+    let req = format!(
+        "{method} {path} HTTP/1.1\r\nHost: {addr}\r\nContent-Type: application/json\r\n\
+         Content-Length: {}\r\nConnection: close\r\n\r\n{body}",
+        body.len()
+    );
+    stream.write_all(req.as_bytes()).expect("send request");
+    let mut text = String::new();
+    stream.read_to_string(&mut text).expect("read response");
+    let code: u16 = text
+        .split_whitespace()
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .unwrap_or_else(|| panic!("malformed status line in {text:?}"));
+    let at = text.find("\r\n\r\n").expect("header/body separator") + 4;
+    let json = Json::parse(&text[at..]).unwrap_or_else(|e| panic!("bad body: {e}\n{text}"));
+    (code, json)
+}
+
+fn select_body(n: usize, mttf_days: f64, app: &str, track: Option<&str>) -> String {
+    let mut s = format!(
+        r#"{{"system": {{"n": {n}, "mttf_days": {mttf_days}, "mttr_min": 40}}, "app": "{app}", "search": {{"refine_steps": 3}}"#
+    );
+    if let Some(t) = track {
+        s.push_str(&format!(r#", "track": "{t}""#));
+    }
+    s.push('}');
+    s
+}
+
+/// The offline oracle for the same spec `select_body` describes.
+fn oracle(n: usize, mttf_days: f64, app: &str, rates: Option<(f64, f64)>) -> SearchResult {
+    let mut system = SystemParams::from_mttf_mttr(n, mttf_days, 40.0);
+    if let Some((l, t)) = rates {
+        system.lambda = l;
+        system.theta = t;
+    }
+    let app = match app {
+        "cg" => AppProfile::cg(n),
+        "md" => AppProfile::md(n),
+        _ => AppProfile::qr(n),
+    };
+    let policy = ReschedulingPolicy::greedy(n);
+    let inputs = ModelInputs::new(system, &app, &policy).unwrap();
+    let cfg = SearchConfig { refine_steps: 3, ..Default::default() };
+    select_interval(&inputs, &ComputeEngine::native(), &cfg).unwrap()
+}
+
+fn f(j: &Json, key: &str) -> f64 {
+    j.get(key)
+        .and_then(Json::as_f64)
+        .unwrap_or_else(|| panic!("missing number '{key}' in {j}"))
+}
+
+#[test]
+fn daemon_serves_concurrent_selects_ingest_and_drift() {
+    let (addr, handle) = boot(AdvisorConfig {
+        drift_threshold: 0.5,
+        refit_window: 400.0 * DAY,
+        min_refit_failures: 8,
+        ..Default::default()
+    });
+
+    let (code, health) = http(addr, "GET", "/healthz", "");
+    assert_eq!(code, 200);
+    assert_eq!(health.get("ok").unwrap().as_bool(), Some(true));
+
+    // --- Phase A: two distinct specs, offline oracles pinned exactly ---
+    let want_a = oracle(6, 2.0, "qr", None);
+    let want_b = oracle(8, 4.0, "cg", None);
+    let (code, first_a) = http(addr, "POST", "/v1/select", &select_body(6, 2.0, "qr", None));
+    assert_eq!(code, 200, "select failed: {first_a}");
+    assert_eq!(first_a.get("cached").unwrap().as_bool(), Some(false));
+    assert_eq!(f(&first_a, "interval"), want_a.interval, "daemon != oracle interval");
+    let rel = (f(&first_a, "uwt") - want_a.uwt).abs() / want_a.uwt;
+    assert!(rel < 1e-9, "UWT off by {rel}");
+    let (code, first_b) = http(addr, "POST", "/v1/select", &select_body(8, 4.0, "cg", None));
+    assert_eq!(code, 200);
+    assert_eq!(f(&first_b, "interval"), want_b.interval);
+
+    // --- Phase B: concurrent repeats from real threads; every answer a
+    // cache hit identical to the oracle, no model rebuilt ---
+    let mut threads = Vec::new();
+    for k in 0..6 {
+        threads.push(std::thread::spawn(move || {
+            let (n, mttf, app, want) =
+                if k % 2 == 0 { (6, 2.0, "qr", want_a_interval()) } else { (8, 4.0, "cg", want_b_interval()) };
+            let (code, resp) = http(addr, "POST", "/v1/select", &select_body(n, mttf, app, None));
+            assert_eq!(code, 200);
+            assert_eq!(resp.get("cached").unwrap().as_bool(), Some(true), "expected a hit");
+            assert_eq!(f(&resp, "interval"), want);
+        }));
+    }
+    for t in threads {
+        t.join().expect("select thread");
+    }
+    let (code, status) = http(addr, "GET", "/v1/status", "");
+    assert_eq!(code, 200);
+    assert_eq!(status.path("cache.entries").unwrap().as_f64(), Some(2.0));
+    assert!(status.path("cache.hits").unwrap().as_f64().unwrap() >= 6.0);
+    assert_eq!(status.path("cache.misses").unwrap().as_f64(), Some(2.0));
+
+    // --- Phase C: tracked select + ingest-driven drift ---
+    let (code, tracked) =
+        http(addr, "POST", "/v1/select", &select_body(6, 8.0, "qr", Some("c1")));
+    assert_eq!(code, 200);
+    let old_interval = f(&tracked, "interval");
+
+    // Stream a 200-day volatile trace (MTTF 1 d vs the requested 8 d):
+    // the windowed re-fit must drift past the 0.5 threshold.
+    let mut rng = Rng::new(23);
+    let trace =
+        generate(&SynthSpec::exponential(6, 1.0 / DAY, 1.0 / 2_400.0, 200.0 * DAY), &mut rng);
+    let mut events = Vec::new();
+    for p in 0..6 {
+        for &(fail, repair) in trace.outages(p) {
+            events.push(format!(r#"{{"proc": {p}, "fail": {fail}, "repair": {repair}}}"#));
+        }
+    }
+    let ingest_body =
+        format!(r#"{{"track": "c1", "n_procs": 6, "events": [{}]}}"#, events.join(","));
+    let (code, ing) = http(addr, "POST", "/v1/ingest", &ingest_body);
+    assert_eq!(code, 200, "ingest failed: {ing}");
+    assert_eq!(f(&ing, "reselects_enqueued"), 1.0, "drift should enqueue one re-selection");
+    let lam_hat = f(&ing, "lambda");
+    let theta_hat = f(&ing, "theta");
+    assert!((lam_hat * DAY - 1.0).abs() < 0.3, "λ̂ should track the volatile rate");
+
+    // The background re-selection lands asynchronously; poll status.
+    let deadline = std::time::Instant::now() + Duration::from_secs(30);
+    let rec = loop {
+        let (code, status) = http(addr, "GET", "/v1/status", "");
+        assert_eq!(code, 200);
+        let track = status.path("tracks.c1").expect("track in status").clone();
+        let done = track.path("reselects").and_then(Json::as_f64) == Some(1.0);
+        if done {
+            break track.path("recommendations").unwrap().as_arr().unwrap()[0].clone();
+        }
+        assert!(std::time::Instant::now() < deadline, "re-selection never landed: {status}");
+        std::thread::sleep(Duration::from_millis(50));
+    };
+    assert_eq!(rec.get("pending").unwrap().as_bool(), Some(false));
+    assert_eq!(rec.get("stale").unwrap().as_bool(), Some(false));
+    let new_interval = f(&rec, "interval");
+    assert!(
+        new_interval < old_interval,
+        "8x the failure rate must shorten the interval: {new_interval} !< {old_interval}"
+    );
+    // Pin the refreshed recommendation to the offline oracle at the
+    // re-fitted rates (parsed losslessly off the wire).
+    let want = oracle(6, 8.0, "qr", Some((lam_hat, theta_hat)));
+    let rel = (new_interval - want.interval).abs() / want.interval;
+    assert!(rel < 1e-9, "re-selection diverged: {new_interval} vs {}", want.interval);
+    let rel_u = (f(&rec, "uwt") - want.uwt).abs() / want.uwt;
+    assert!(rel_u < 1e-9, "re-selection UWT diverged by {rel_u}");
+
+    // A repeat tracked select now resolves through the re-fitted rates
+    // and hits the refreshed entry.
+    let (code, after) = http(addr, "POST", "/v1/select", &select_body(6, 8.0, "qr", Some("c1")));
+    assert_eq!(code, 200);
+    assert_eq!(after.get("cached").unwrap().as_bool(), Some(true));
+    assert_eq!(f(&after, "interval"), new_interval);
+
+    // --- Phase D: protocol errors surface as clean HTTP codes ---
+    let (code, err) = http(addr, "POST", "/v1/select", r#"{"system": "bogus/1"}"#);
+    assert_eq!(code, 400);
+    assert_eq!(err.get("ok").unwrap().as_bool(), Some(false));
+    let (code, _) = http(addr, "POST", "/v1/select", "not json");
+    assert_eq!(code, 400);
+    let (code, _) = http(addr, "GET", "/v1/nope", "");
+    assert_eq!(code, 404);
+    let (code, _) = http(addr, "GET", "/v1/select", "");
+    assert_eq!(code, 405);
+    let (code, model) =
+        http(addr, "POST", "/v1/model", r#"{"system": {"n": 6, "mttf_days": 2, "mttr_min": 40}}"#);
+    assert_eq!(code, 200);
+    assert!(f(&model, "uwt") > 0.0);
+    assert!(f(&model, "states") >= 1.0);
+
+    let (code, bye) = http(addr, "POST", "/v1/shutdown", "");
+    assert_eq!(code, 200);
+    assert_eq!(bye.get("stopping").unwrap().as_bool(), Some(true));
+    handle.join().expect("server thread");
+}
+
+// The concurrent phase needs `Copy` values inside `move` closures; the
+// oracle intervals are deterministic, so compute them once per call.
+fn want_a_interval() -> f64 {
+    use std::sync::OnceLock;
+    static V: OnceLock<f64> = OnceLock::new();
+    *V.get_or_init(|| oracle(6, 2.0, "qr", None).interval)
+}
+
+fn want_b_interval() -> f64 {
+    use std::sync::OnceLock;
+    static V: OnceLock<f64> = OnceLock::new();
+    *V.get_or_init(|| oracle(8, 4.0, "cg", None).interval)
+}

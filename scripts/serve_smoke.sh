@@ -1,0 +1,75 @@
+#!/usr/bin/env bash
+# Smoke-test the advisor daemon against the release binary:
+#
+#   1. boot `malleable-ckpt serve` on a fixed local port,
+#   2. exercise /healthz, /v1/select (twice — the repeat must be a cache
+#      hit), /v1/status and /v1/shutdown over plain HTTP,
+#   3. fail on any non-200, and on any mismatch between the daemon's
+#      recommendation and the offline `select --json` oracle (bit-exact:
+#      both sides print shortest-roundtrip f64 decimals from the same
+#      machine and engine).
+#
+# Used by the `serve-smoke` CI job; runnable locally after
+# `cargo build --release`.
+set -euo pipefail
+
+BIN=${BIN:-target/release/malleable-ckpt}
+PORT=${PORT:-7791}
+ADDR="127.0.0.1:${PORT}"
+
+if [ ! -x "$BIN" ]; then
+    echo "error: $BIN not built (run 'cargo build --release' first)" >&2
+    exit 1
+fi
+
+"$BIN" serve --addr "$ADDR" &
+SERVE_PID=$!
+trap 'kill "$SERVE_PID" 2>/dev/null || true' EXIT
+
+# Wait for the daemon to come up.
+for _ in $(seq 1 100); do
+    if curl -sf "http://${ADDR}/healthz" >/dev/null 2>&1; then
+        break
+    fi
+    sleep 0.1
+done
+curl -sf "http://${ADDR}/healthz" >/dev/null || {
+    echo "error: daemon never became healthy on ${ADDR}" >&2
+    exit 1
+}
+
+req='{"system": "system-1/128", "app": "qr"}'
+
+# -f: any non-200 fails the script.
+first=$(curl -sf "http://${ADDR}/v1/select" -d "$req")
+second=$(curl -sf "http://${ADDR}/v1/select" -d "$req")
+status=$(curl -sf "http://${ADDR}/v1/status")
+oracle=$("$BIN" select --system system-1/128 --app qr --json)
+
+echo "daemon : $first"
+echo "oracle : $oracle"
+
+python3 - "$first" "$second" "$status" "$oracle" <<'EOF'
+import json
+import sys
+
+first, second, status, oracle = (json.loads(a) for a in sys.argv[1:5])
+
+assert first["ok"] and second["ok"] and status["ok"], "a response reported ok=false"
+assert first["cached"] is False, "first select must be a miss"
+assert second["cached"] is True, "repeat select must be served from the cache"
+
+for field in ("interval", "uwt", "best_probed", "evaluations"):
+    d, o = first[field], oracle[field]
+    assert d == o, f"daemon {field}={d!r} != offline oracle {field}={o!r}"
+    assert second[field] == o, f"cached {field} diverged from oracle"
+
+cache = status["cache"]
+assert cache["entries"] >= 1 and cache["hits"] >= 1, f"cache never engaged: {cache}"
+print("serve smoke: daemon == offline oracle, repeat served from cache")
+EOF
+
+curl -sf -X POST "http://${ADDR}/v1/shutdown" >/dev/null
+wait "$SERVE_PID"
+trap - EXIT
+echo "serve smoke: OK"
