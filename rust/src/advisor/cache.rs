@@ -25,31 +25,7 @@ use std::sync::{Arc, Mutex};
 
 use crate::markov::{ModelInputs, SharedBuilder};
 use crate::search::{SearchConfig, SearchResult};
-
-/// 64-bit FNV-1a over the canonical byte stream of a request spec.
-struct Fnv(u64);
-
-impl Fnv {
-    fn new() -> Fnv {
-        Fnv(0xcbf2_9ce4_8422_2325)
-    }
-
-    fn byte(&mut self, b: u8) {
-        self.0 = (self.0 ^ b as u64).wrapping_mul(0x0000_0100_0000_01b3);
-    }
-
-    fn u64(&mut self, x: u64) {
-        for b in x.to_le_bytes() {
-            self.byte(b);
-        }
-    }
-
-    /// Canonical float: `-0.0` folds onto `0.0`; NaN never reaches here
-    /// (every field is validated upstream).
-    fn f64(&mut self, x: f64) {
-        self.u64(if x == 0.0 { 0 } else { x.to_bits() });
-    }
-}
+use crate::util::fnv::Fnv64;
 
 /// Canonical cache key of one recommendation request. Hashes the semantic
 /// content — system triple, the three per-processor-count cost vectors,
@@ -57,7 +33,7 @@ impl Fnv {
 /// result-affecting build options. `BuildOptions::workers` is deliberately
 /// excluded: results are pinned worker-invariant.
 pub fn canonical_key(inputs: &ModelInputs, cfg: &SearchConfig) -> u64 {
-    let mut h = Fnv::new();
+    let mut h = Fnv64::new();
     h.u64(0x4144_5631); // layout version tag ("ADV1")
     let n = inputs.system.n;
     h.u64(n as u64);
@@ -86,7 +62,7 @@ pub fn canonical_key(inputs: &ModelInputs, cfg: &SearchConfig) -> u64 {
     h.f64(cfg.build.stationary.tol);
     h.u64(cfg.build.stationary.max_iters as u64);
     h.f64(cfg.build.stationary.damping);
-    h.0
+    h.finish()
 }
 
 /// One cached recommendation: the shared builder (kept alive for warm

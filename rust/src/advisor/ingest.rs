@@ -30,6 +30,7 @@ use anyhow::{bail, ensure, Context, Result};
 use crate::fitting::least_squares;
 use crate::markov::ModelInputs;
 use crate::search::SearchConfig;
+use crate::store::{SpecRecord, TrackStore, WalRecord};
 use crate::traces::index::TraceTail;
 
 /// One completed outage reported to `ingest`.
@@ -65,11 +66,18 @@ pub struct Track {
     /// Latest windowed re-fit, if the window has enough data.
     pub rates: Option<(f64, f64)>,
     pub specs: Vec<TrackedSpec>,
-    /// Outages accepted / merged-as-duplicate since boot.
+    /// Outages accepted / merged-as-duplicate (survives restarts when the
+    /// track is persisted).
     pub accepted: u64,
     pub merged: u64,
     /// Completed background re-selections.
     pub reselects: u64,
+    /// Events dropped by the retention cap (2 per evicted outage).
+    pub evicted: u64,
+    /// Durable backing, when the daemon runs with `--data-dir`. All
+    /// mutations under the track lock also append here, so the WAL order
+    /// equals the apply order and replay reproduces this struct exactly.
+    pub store: Option<TrackStore>,
 }
 
 impl Track {
@@ -82,6 +90,8 @@ impl Track {
             accepted: 0,
             merged: 0,
             reselects: 0,
+            evicted: 0,
+            store: None,
         })
     }
 
@@ -89,39 +99,123 @@ impl Track {
     /// event fails the call naming its index, but the valid events before
     /// it stay applied and **are counted** (the error message carries the
     /// partial counts; `status` stays consistent with the tail). Exact
-    /// duplicates merge silently. Returns `(accepted, merged)` on a fully
-    /// clean batch.
+    /// duplicates merge silently (and are still logged — replay needs them
+    /// to reproduce the merged counter). Returns `(accepted, merged)` on a
+    /// fully clean batch.
     pub fn ingest(&mut self, events: &[IngestEvent]) -> Result<(usize, usize)> {
         let mut accepted = 0usize;
         let mut merged = 0usize;
+        let mut result = Ok(());
         for (i, e) in events.iter().enumerate() {
             match self.tail.push(e.proc, e.fail, e.repair) {
-                Ok(true) => accepted += 1,
-                Ok(false) => merged += 1,
+                Ok(was_new) => {
+                    if was_new {
+                        accepted += 1;
+                    } else {
+                        merged += 1;
+                    }
+                    if let Some(store) = &mut self.store {
+                        if let Err(err) = store
+                            .append(&WalRecord::Outage { proc: e.proc, fail: e.fail, repair: e.repair })
+                        {
+                            // The event is applied in memory but not
+                            // durable: fail the batch loudly so the client
+                            // retries (a retry merges idempotently).
+                            result = Err(err.context(format!(
+                                "event {i} applied but not persisted ({accepted} accepted, {merged} merged)"
+                            )));
+                            break;
+                        }
+                    }
+                }
                 Err(err) => {
-                    self.accepted += accepted as u64;
-                    self.merged += merged as u64;
-                    return Err(err.context(format!(
+                    result = Err(err.context(format!(
                         "event {i} (prior events stay applied: {accepted} accepted, {merged} merged)"
                     )));
+                    break;
                 }
             }
         }
         self.accepted += accepted as u64;
         self.merged += merged as u64;
-        Ok((accepted, merged))
+        self.flush_store()?;
+        result.map(|()| (accepted, merged))
     }
 
-    /// Windowed re-fit over the tail (see the module docs); updates and
-    /// returns `self.rates` when the window holds at least
-    /// `min_failures` failures, leaves them untouched otherwise.
-    pub fn refit(&mut self, window: f64, min_failures: usize) -> Option<(f64, f64)> {
+    /// Windowed re-fit over the tail (see the module docs); updates,
+    /// persists and returns `self.rates` when the window holds at least
+    /// `min_failures` failures, leaves them untouched otherwise. The only
+    /// error is a persistence failure.
+    pub fn refit(&mut self, window: f64, min_failures: usize) -> Result<Option<(f64, f64)>> {
         match refit_rates(&self.tail, window, min_failures) {
             Ok(r) => {
                 self.rates = Some(r);
-                Some(r)
+                if let Some(store) = &mut self.store {
+                    store.append(&WalRecord::Refit { lambda: r.0, theta: r.1 })?;
+                    store.flush()?;
+                }
+                Ok(Some(r))
             }
-            Err(_) => None,
+            Err(_) => Ok(None),
+        }
+    }
+
+    /// Enforce the per-track event-retention cap: while the tail holds
+    /// more than `max_events` events, evict whole time windows (width
+    /// `window` seconds, the shard boundary) from the oldest end — never
+    /// touching the window holding the newest event. Each eviction is
+    /// logged, so replay reproduces the surviving tail exactly. Returns
+    /// the events evicted by this call. `max_events == 0` disables the cap.
+    pub fn enforce_retention(&mut self, max_events: usize, window: f64) -> Result<usize> {
+        if max_events == 0 || !window.is_finite() || window <= 0.0 {
+            return Ok(0);
+        }
+        let mut removed_total = 0usize;
+        'evict: while self.tail.n_events() > max_events {
+            let (Some(first), Some(last)) = (self.tail.first_event_time(), self.tail.last_event_time())
+            else {
+                break;
+            };
+            let newest_boundary = (last / window).floor() * window;
+            let mut cutoff = ((first / window).floor() + 1.0) * window;
+            loop {
+                if cutoff > newest_boundary {
+                    // Only the newest window is left; the cap yields to it
+                    // rather than evicting live history.
+                    break 'evict;
+                }
+                let removed = self.tail.evict_before(cutoff);
+                if removed > 0 {
+                    removed_total += removed;
+                    self.evicted += removed as u64;
+                    if let Some(store) = &mut self.store {
+                        store.append(&WalRecord::Evict { cutoff })?;
+                    }
+                    break;
+                }
+                // The oldest outage spans past this boundary; widen.
+                cutoff += window;
+            }
+        }
+        if removed_total > 0 {
+            self.flush_store()?;
+        }
+        Ok(removed_total)
+    }
+
+    /// Persist a registered (or refreshed) recommendation.
+    pub fn record_spec(&mut self, spec: SpecRecord) -> Result<()> {
+        if let Some(store) = &mut self.store {
+            store.append(&WalRecord::Recommendation(Box::new(spec)))?;
+            store.flush()?;
+        }
+        Ok(())
+    }
+
+    fn flush_store(&mut self) -> Result<()> {
+        match &mut self.store {
+            Some(store) => store.flush(),
+            None => Ok(()),
         }
     }
 }
@@ -254,11 +348,11 @@ mod tests {
         let (accepted, merged) = track.ingest(&batch).unwrap();
         assert_eq!((accepted, merged), (3, 1));
         assert_eq!((track.accepted, track.merged), (3, 1));
-        assert!(track.refit(10_000.0, 2).is_some());
+        assert!(track.refit(10_000.0, 2).unwrap().is_some());
         let (lh, th) = track.rates.unwrap();
         assert!(lh > 0.0 && th > 0.0);
         // Below min_failures the previous rates stay.
-        assert!(track.refit(10_000.0, 50).is_none());
+        assert!(track.refit(10_000.0, 50).unwrap().is_none());
         assert_eq!(track.rates, Some((lh, th)));
         // A conflicting event fails the batch; valid events before it
         // stay applied and counted.
@@ -269,6 +363,48 @@ mod tests {
         let err = track.ingest(&bad).unwrap_err();
         assert!(format!("{err:#}").contains("event 1"), "error should name the event: {err:#}");
         assert_eq!((track.accepted, track.merged), (4, 1), "prior valid event not counted");
+    }
+
+    #[test]
+    fn retention_cap_evicts_oldest_windows_only() {
+        let mut track = Track::new(2).unwrap();
+        // Three 1000-second windows: [0,1000), [1000,2000), [5000,6000).
+        let batch = [
+            IngestEvent { proc: 0, fail: 100.0, repair: 200.0 },
+            IngestEvent { proc: 1, fail: 300.0, repair: 400.0 },
+            IngestEvent { proc: 0, fail: 1_100.0, repair: 1_200.0 },
+            IngestEvent { proc: 1, fail: 5_100.0, repair: 5_200.0 },
+            IngestEvent { proc: 0, fail: 5_300.0, repair: 5_400.0 },
+        ];
+        track.ingest(&batch).unwrap();
+        assert_eq!(track.tail.n_events(), 10);
+        // Cap disabled: nothing happens.
+        assert_eq!(track.enforce_retention(0, 1_000.0).unwrap(), 0);
+        // Cap 6: evict the oldest window (4 events), which suffices.
+        assert_eq!(track.enforce_retention(6, 1_000.0).unwrap(), 4);
+        assert_eq!(track.tail.n_events(), 6);
+        assert_eq!(track.evicted, 4);
+        assert_eq!(track.tail.first_event_time(), Some(1_100.0));
+        // Cap 2: the middle window goes too, but the newest window stays
+        // even though it still exceeds the cap.
+        assert_eq!(track.enforce_retention(2, 1_000.0).unwrap(), 2);
+        assert_eq!(track.tail.n_events(), 4);
+        assert_eq!(track.enforce_retention(2, 1_000.0).unwrap(), 0, "newest window is immune");
+        assert_eq!(track.evicted, 6);
+    }
+
+    #[test]
+    fn retention_skips_windows_spanned_by_open_outages() {
+        let mut track = Track::new(2).unwrap();
+        // The oldest outage spans from window 0 deep into window 4.
+        track.tail.push(0, 100.0, 4_500.0).unwrap();
+        track.tail.push(1, 4_600.0, 4_700.0).unwrap();
+        track.tail.push(0, 9_100.0, 9_200.0).unwrap();
+        // Cutoffs at 1000/2000/... remove nothing until 5000, which drops
+        // both outages repaired before it.
+        assert_eq!(track.enforce_retention(2, 1_000.0).unwrap(), 4);
+        assert_eq!(track.tail.n_events(), 2);
+        assert_eq!(track.tail.first_event_time(), Some(9_100.0));
     }
 
     #[test]

@@ -14,8 +14,20 @@
 //! * [`ingest`] — streaming failure ingestion per tracked system into an
 //!   appendable [`crate::traces::index::TraceTail`], with windowed
 //!   least-squares MTTF/MTTR re-fits;
-//! * [`server`] — the `std::net::TcpListener` HTTP/1.1 front end and the
-//!   `malleable-ckpt serve` subcommand.
+//! * [`server`] — the `std::net::TcpListener` HTTP/1.1 front end (with
+//!   keep-alive connections) and the `malleable-ckpt serve` subcommand.
+//!
+//! With `serve --data-dir`, every track is durably backed by
+//! [`crate::store`]: each accepted outage, rate re-fit, registered
+//! recommendation and retention eviction appends to the track's WAL
+//! under the track's own lock (so the log order equals the apply order),
+//! the background thread compacts oversized WALs into snapshots, a clean
+//! shutdown snapshots everything, and boot replays whatever the last
+//! process left behind — including a torn tail from `kill -9`. The
+//! optional `--max-events` retention cap evicts whole
+//! `--retention-days`-wide windows from the oldest end of a tail (never
+//! the newest window), logged so replay reproduces the surviving state
+//! exactly.
 //!
 //! ## Drift semantics
 //!
@@ -63,6 +75,7 @@ use anyhow::{Context, Result};
 
 use crate::markov::{BuildOptions, ModelInputs, SharedBuilder};
 use crate::search::{select_interval_shared, SearchConfig};
+use crate::store::{SpecRecord, TraceStore, TrackState};
 use crate::util::json::Json;
 
 use self::cache::{canonical_key, CacheEntry, ShardedCache};
@@ -82,6 +95,11 @@ pub struct AdvisorConfig {
     pub refit_window: f64,
     /// Minimum failures inside the window before a re-fit is trusted.
     pub min_refit_failures: usize,
+    /// Per-track event-retention cap (0 = unlimited): past it, whole
+    /// retention windows are evicted from the oldest end of the tail.
+    pub max_events: usize,
+    /// Width of the retention/shard windows eviction rides on, seconds.
+    pub retention_window: f64,
 }
 
 impl Default for AdvisorConfig {
@@ -92,6 +110,8 @@ impl Default for AdvisorConfig {
             drift_threshold: 0.10,
             refit_window: 30.0 * 86_400.0,
             min_refit_failures: 8,
+            max_events: 0,
+            retention_window: 7.0 * 86_400.0,
         }
     }
 }
@@ -119,6 +139,9 @@ pub struct Advisor {
     /// Track registry. The map lock is held only to clone a handle;
     /// per-track work runs under the track's own lock.
     tracks: Mutex<HashMap<String, TrackHandle>>,
+    /// Durable backing (`serve --data-dir`): new tracks open their
+    /// per-track WAL here; `None` keeps the PR 3 in-memory behavior.
+    store: Option<TraceStore>,
     bg: Mutex<VecDeque<BgJob>>,
     bg_cv: Condvar,
     started: Instant,
@@ -127,14 +150,25 @@ pub struct Advisor {
     models: AtomicU64,
     bg_completed: AtomicU64,
     bg_errors: AtomicU64,
+    compactions: AtomicU64,
+    /// Rate limiter for the background compaction sweep.
+    last_compact_check: Mutex<Instant>,
 }
 
 impl Advisor {
     pub fn new(cfg: AdvisorConfig) -> Advisor {
-        Advisor {
+        Self::with_store(cfg, None).expect("in-memory advisor construction cannot fail")
+    }
+
+    /// Build an advisor over an optional durable store, recovering every
+    /// persisted track (snapshot + WAL replay, torn tails truncated)
+    /// before serving.
+    pub fn with_store(cfg: AdvisorConfig, store: Option<TraceStore>) -> Result<Advisor> {
+        let advisor = Advisor {
             cache: ShardedCache::new(cfg.shards.max(1), cfg.cache_bytes),
             cfg,
             tracks: Mutex::new(HashMap::new()),
+            store,
             bg: Mutex::new(VecDeque::new()),
             bg_cv: Condvar::new(),
             started: Instant::now(),
@@ -143,11 +177,28 @@ impl Advisor {
             models: AtomicU64::new(0),
             bg_completed: AtomicU64::new(0),
             bg_errors: AtomicU64::new(0),
+            compactions: AtomicU64::new(0),
+            last_compact_check: Mutex::new(Instant::now()),
+        };
+        if let Some(st) = &advisor.store {
+            let mut map = advisor.tracks.lock().unwrap();
+            for id in st.track_ids()? {
+                let (ts, state) = st.open_track(&id, None)?;
+                let mut track = track_from_state(state)?;
+                track.store = Some(ts);
+                map.insert(id, Arc::new(Mutex::new(track)));
+            }
         }
+        Ok(advisor)
     }
 
     pub fn config(&self) -> &AdvisorConfig {
         &self.cfg
+    }
+
+    /// `true` when tracks persist across restarts.
+    pub fn persistent(&self) -> bool {
+        self.store.is_some()
     }
 
     /// Rate-independent identity of a request spec — what ties a track's
@@ -253,6 +304,41 @@ impl Advisor {
         ))
     }
 
+    /// Fetch a track handle, creating the track on first sight. The
+    /// creation path (directory setup, WAL creation + fsync when a store
+    /// is configured) runs **outside** the map lock — the map lock is
+    /// only ever held to look up or insert a handle, so slow disk I/O
+    /// for one new track never stalls requests for others. A store
+    /// failure degrades to an in-memory track with a visible complaint
+    /// rather than failing the request.
+    fn track_handle_or_create(&self, tid: &str, n_procs: usize) -> TrackHandle {
+        if let Some(h) = self.track_handle(tid) {
+            return h;
+        }
+        let mut track = Track::new(n_procs).expect("n >= 1 by construction");
+        if let Some(st) = &self.store {
+            match st.open_track(tid, Some(n_procs)) {
+                Ok((ts, state)) => match track_from_state(state) {
+                    Ok(mut restored) => {
+                        restored.store = Some(ts);
+                        track = restored;
+                    }
+                    Err(e) => eprintln!("[advisor] track '{tid}' not restorable: {e:#}"),
+                },
+                Err(e) => eprintln!("[advisor] track '{tid}' not persisted: {e:#}"),
+            }
+        }
+        let fresh = Arc::new(Mutex::new(track));
+        let mut map = self.tracks.lock().unwrap();
+        match map.entry(tid.to_string()) {
+            // Lost a creation race: adopt the winner (both opened the
+            // same empty WAL with identical Create records, so dropping
+            // the duplicate handle is harmless).
+            Entry::Occupied(e) => Arc::clone(e.get()),
+            Entry::Vacant(v) => Arc::clone(v.insert(fresh)),
+        }
+    }
+
     /// Register (or refresh) a spec under a track, creating the track on
     /// first sight with the system's processor count. `rates` is the
     /// drift reference — the rates the recommendation at `key` was
@@ -268,36 +354,47 @@ impl Advisor {
         let Some(tid) = track_id else {
             return;
         };
-        let handle = {
-            let mut map = self.tracks.lock().unwrap();
-            match map.entry(tid.to_string()) {
-                Entry::Occupied(e) => Arc::clone(e.get()),
-                Entry::Vacant(v) => Arc::clone(v.insert(Arc::new(Mutex::new(
-                    Track::new(inputs.system.n).expect("n >= 1 by construction"),
-                )))),
-            }
-        };
+        let handle = self.track_handle_or_create(tid, inputs.system.n);
         let identity = Self::spec_identity(inputs, cfg);
         let mut track = handle.lock().unwrap();
-        match track
+        let changed = match track
             .specs
             .iter_mut()
             .find(|s| Self::spec_identity(&s.inputs, &s.cfg) == identity)
         {
             Some(spec) => {
-                if !spec.pending {
+                if !spec.pending && (spec.key != key || spec.rates_used != rates) {
                     spec.key = key;
                     spec.inputs = inputs.clone();
                     spec.rates_used = rates;
+                    true
+                } else {
+                    false
                 }
             }
-            None => track.specs.push(TrackedSpec {
+            None => {
+                track.specs.push(TrackedSpec {
+                    key,
+                    inputs: inputs.clone(),
+                    cfg: *cfg,
+                    rates_used: rates,
+                    pending: false,
+                });
+                true
+            }
+        };
+        if changed {
+            let rec = SpecRecord {
+                identity,
                 key,
+                rates_used: rates,
+                refresh: false,
                 inputs: inputs.clone(),
                 cfg: *cfg,
-                rates_used: rates,
-                pending: false,
-            }),
+            };
+            if let Err(e) = track.record_spec(rec) {
+                eprintln!("[advisor] recommendation for '{tid}' not persisted: {e:#}");
+            }
         }
     }
 
@@ -307,16 +404,14 @@ impl Advisor {
     /// held across the splice — other tracks stay fully concurrent.
     pub fn ingest(&self, req: &IngestRequest) -> Result<Json> {
         self.ingests.fetch_add(1, Ordering::Relaxed);
-        let handle = {
-            let mut map = self.tracks.lock().unwrap();
-            match map.entry(req.track.clone()) {
-                Entry::Occupied(e) => Arc::clone(e.get()),
-                Entry::Vacant(v) => {
-                    let n = req
-                        .n_procs
-                        .context("first ingest for a track must carry 'n_procs'")?;
-                    Arc::clone(v.insert(Arc::new(Mutex::new(Track::new(n)?))))
-                }
+        let handle = match self.track_handle(&req.track) {
+            Some(h) => h,
+            None => {
+                let n = req
+                    .n_procs
+                    .context("first ingest for a track must carry 'n_procs'")?;
+                anyhow::ensure!(n >= 1, "'n_procs' must be positive");
+                self.track_handle_or_create(&req.track, n)
             }
         };
         let mut track = handle.lock().unwrap();
@@ -329,7 +424,8 @@ impl Advisor {
             );
         }
         let (accepted, merged) = track.ingest(&req.events)?;
-        let refit = track.refit(self.cfg.refit_window, self.cfg.min_refit_failures);
+        let refit = track.refit(self.cfg.refit_window, self.cfg.min_refit_failures)?;
+        let evicted = track.enforce_retention(self.cfg.max_events, self.cfg.retention_window)?;
         let mut enqueued = 0usize;
         if let Some(fresh) = track.rates {
             for spec in &mut track.specs {
@@ -363,6 +459,7 @@ impl Advisor {
             .set("track", Json::from(req.track.as_str()))
             .set("accepted", Json::from(accepted))
             .set("merged", Json::from(merged))
+            .set("evicted", Json::from(evicted))
             .set("events_total", Json::from(track.tail.n_events()));
         if let Some((l, t)) = track.rates {
             o.set("lambda", Json::from(l)).set("theta", Json::from(t));
@@ -447,15 +544,90 @@ impl Advisor {
         if let Some(handle) = self.track_handle(&job.track) {
             let mut track = handle.lock().unwrap();
             track.reselects += 1;
+            let mut refreshed: Vec<SpecRecord> = Vec::new();
             for spec in &mut track.specs {
                 if spec.key == job.old_key {
                     spec.key = new_key;
                     spec.inputs = job.inputs.clone();
                     spec.pending = false;
+                    refreshed.push(SpecRecord {
+                        identity: Self::spec_identity(&spec.inputs, &spec.cfg),
+                        key: spec.key,
+                        rates_used: spec.rates_used,
+                        refresh: true,
+                        inputs: spec.inputs.clone(),
+                        cfg: spec.cfg,
+                    });
+                }
+            }
+            for rec in refreshed {
+                if let Err(e) = track.record_spec(rec) {
+                    eprintln!(
+                        "[advisor] refreshed recommendation for '{}' not persisted: {e:#}",
+                        job.track
+                    );
                 }
             }
         }
         Ok(())
+    }
+
+    /// Snapshot and compact every persisted track — the shutdown path
+    /// (and callable any time; compaction is crash-safe). Returns the
+    /// number of tracks compacted.
+    pub fn persist_all(&self) -> Result<usize> {
+        if self.store.is_none() {
+            return Ok(0);
+        }
+        let handles: Vec<TrackHandle> = {
+            let map = self.tracks.lock().unwrap();
+            map.values().map(Arc::clone).collect()
+        };
+        let mut compacted = 0usize;
+        for handle in handles {
+            let mut track = handle.lock().unwrap();
+            if track.store.is_some() {
+                let state = state_of_track(&track);
+                track.store.as_mut().unwrap().compact(&state)?;
+                compacted += 1;
+                self.compactions.fetch_add(1, Ordering::Relaxed);
+            }
+        }
+        Ok(compacted)
+    }
+
+    /// Background-compaction sweep: every few seconds, roll any track
+    /// whose WAL outgrew the store's threshold. Cheap when nothing needs
+    /// doing; called from the server's background thread between jobs.
+    pub fn maybe_compact(&self) {
+        let Some(st) = &self.store else {
+            return;
+        };
+        {
+            let mut last = self.last_compact_check.lock().unwrap();
+            if last.elapsed() < Duration::from_secs(5) {
+                return;
+            }
+            *last = Instant::now();
+        }
+        let threshold = st.compact_wal_bytes();
+        let handles: Vec<(String, TrackHandle)> = {
+            let map = self.tracks.lock().unwrap();
+            map.iter().map(|(k, h)| (k.clone(), Arc::clone(h))).collect()
+        };
+        for (id, handle) in handles {
+            let mut track = handle.lock().unwrap();
+            let needs = track.store.as_ref().is_some_and(|s| s.wal_bytes() > threshold);
+            if needs {
+                let state = state_of_track(&track);
+                match track.store.as_mut().unwrap().compact(&state) {
+                    Ok(()) => {
+                        self.compactions.fetch_add(1, Ordering::Relaxed);
+                    }
+                    Err(e) => eprintln!("[advisor] compacting '{id}' failed: {e:#}"),
+                }
+            }
+        }
     }
 
     /// Queued (not yet executed) background jobs.
@@ -513,7 +685,12 @@ impl Advisor {
                 .set("events", Json::from(track.tail.n_events()))
                 .set("accepted", Json::from(track.accepted))
                 .set("merged", Json::from(track.merged))
-                .set("reselects", Json::from(track.reselects));
+                .set("evicted", Json::from(track.evicted))
+                .set("reselects", Json::from(track.reselects))
+                .set("persisted", Json::from(track.store.is_some()));
+            if let Some(store) = &track.store {
+                tj.set("wal_bytes", Json::from(store.wal_bytes()));
+            }
             if let Some((l, t)) = track.rates {
                 tj.set("lambda", Json::from(l)).set("theta", Json::from(t));
             }
@@ -535,14 +712,25 @@ impl Advisor {
             tracks_json.set(&id, tj);
         }
 
+        let mut store_json = Json::obj();
+        store_json.set("enabled", Json::from(self.store.is_some()));
+        if let Some(st) = &self.store {
+            store_json
+                .set("dir", Json::from(st.root().display().to_string().as_str()))
+                .set("compact_wal_bytes", Json::from(st.compact_wal_bytes()))
+                .set("compactions", Json::from(self.compactions.load(Ordering::Relaxed)));
+        }
+
         let mut o = Json::obj();
         o.set("ok", Json::from(true))
             .set("uptime_s", Json::from(self.started.elapsed().as_secs_f64()))
             .set("drift_threshold", Json::from(self.cfg.drift_threshold))
             .set("refit_window_s", Json::from(self.cfg.refit_window))
+            .set("max_events", Json::from(self.cfg.max_events))
             .set("requests", requests)
             .set("cache", cache)
             .set("background", background)
+            .set("store", store_json)
             .set("tracks", tracks_json);
         o
     }
@@ -552,6 +740,59 @@ impl Advisor {
 /// interval-independent caches plus the stored probes and bookkeeping.
 fn entry_bytes(builder: &SharedBuilder, probes: usize) -> usize {
     builder.cache_bytes() + probes * std::mem::size_of::<(f64, f64)>() + 256
+}
+
+/// Rebuild a live [`Track`] from recovered durable state. Pending flags
+/// are not persisted: an in-flight background re-selection died with the
+/// old process, and leaving the spec non-pending lets the next ingest
+/// re-detect any drift and retry.
+fn track_from_state(state: TrackState) -> Result<Track> {
+    let specs = state
+        .specs
+        .into_iter()
+        .map(|r| TrackedSpec {
+            key: r.key,
+            inputs: r.inputs,
+            cfg: r.cfg,
+            rates_used: r.rates_used,
+            pending: false,
+        })
+        .collect();
+    Ok(Track {
+        n_procs: state.tail.n_procs(),
+        tail: state.tail,
+        rates: state.rates,
+        specs,
+        accepted: state.accepted,
+        merged: state.merged,
+        reselects: state.reselects,
+        evicted: state.evicted,
+        store: None,
+    })
+}
+
+/// Snapshot a live track as the durable state a compaction writes.
+fn state_of_track(track: &Track) -> TrackState {
+    TrackState {
+        tail: track.tail.clone(),
+        rates: track.rates,
+        specs: track
+            .specs
+            .iter()
+            .map(|s| SpecRecord {
+                identity: Advisor::spec_identity(&s.inputs, &s.cfg),
+                key: s.key,
+                rates_used: s.rates_used,
+                refresh: false,
+                inputs: s.inputs.clone(),
+                cfg: s.cfg,
+            })
+            .collect(),
+        accepted: track.accepted,
+        merged: track.merged,
+        reselects: track.reselects,
+        evicted: track.evicted,
+    }
 }
 
 #[cfg(test)]
@@ -776,6 +1017,32 @@ mod tests {
         assert_eq!(resp.get("reselects_enqueued").unwrap().as_f64(), Some(1.0));
         assert!(advisor.run_bg_once());
         assert_eq!(advisor.bg_completed.load(Ordering::Relaxed), 1);
+    }
+
+    #[test]
+    fn retention_cap_applies_on_ingest() {
+        let advisor = Advisor::new(AdvisorConfig {
+            max_events: 6,
+            retention_window: 86_400.0,
+            ..Default::default()
+        });
+        // 5 outages = 10 events across days 0..5: the cap must trim the
+        // oldest days down to <= 6 events (3 outages).
+        let body = r#"{"track": "t", "n_procs": 4, "events": [
+            {"proc": 0, "fail": 1000, "repair": 2000},
+            {"proc": 1, "fail": 90000, "repair": 91000},
+            {"proc": 2, "fail": 180000, "repair": 181000},
+            {"proc": 3, "fail": 270000, "repair": 271000},
+            {"proc": 0, "fail": 360000, "repair": 361000}]}"#;
+        let ing = protocol::parse_ingest(&Json::parse(body).unwrap()).unwrap();
+        let resp = advisor.ingest(&ing).unwrap();
+        assert_eq!(resp.get("accepted").unwrap().as_f64(), Some(5.0));
+        assert_eq!(resp.get("evicted").unwrap().as_f64(), Some(4.0));
+        assert_eq!(resp.get("events_total").unwrap().as_f64(), Some(6.0));
+        let status = advisor.status();
+        assert_eq!(status.path("tracks.t.evicted").unwrap().as_f64(), Some(4.0));
+        assert_eq!(status.path("tracks.t.persisted").unwrap().as_bool(), Some(false));
+        assert_eq!(status.path("store.enabled").unwrap().as_bool(), Some(false));
     }
 
     #[test]

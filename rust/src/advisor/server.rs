@@ -1,9 +1,10 @@
 //! The advisor's HTTP/1.1 front end: a `std::net::TcpListener` accept
 //! loop feeding a fixed pool of handler threads through a condvar'd
-//! queue, plus one background thread draining the re-selection queue.
-//! Hand-rolled like the rest of the substrate (`util::cli`, `util::json`)
-//! — the vendor set has no hyper/tokio, and the protocol surface is four
-//! endpoints of `Content-Length`-framed JSON over `Connection: close`.
+//! queue, plus one background thread draining the re-selection queue and
+//! compacting oversized track WALs. Hand-rolled like the rest of the
+//! substrate (`util::cli`, `util::json`) — the vendor set has no
+//! hyper/tokio, and the protocol surface is a handful of endpoints of
+//! `Content-Length`-framed JSON.
 //!
 //! | endpoint           | method | body                                  |
 //! |--------------------|--------|---------------------------------------|
@@ -20,6 +21,18 @@
 //! Model-layer failures surface as `500` — by the time a request reaches
 //! the model layer its fields are validated, so a 500 is a bug, not bad
 //! input.
+//!
+//! ## Keep-alive
+//!
+//! Connections are persistent per HTTP/1.1 defaults: a worker keeps
+//! serving requests on one socket until the client sends
+//! `Connection: close` (or speaks HTTP/1.0 without `keep-alive`), the
+//! idle timeout lapses, the daemon begins shutting down, or
+//! `MAX_REQUESTS_PER_CONN` requests have been answered — the bound
+//! stops one chatty client from pinning a worker forever. Pipelined
+//! bytes beyond one request stay buffered for the next read, so an
+//! ingest stream pays one TCP handshake for a whole session instead of
+//! one per event batch.
 
 use std::io::{Read, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream};
@@ -27,9 +40,10 @@ use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 use std::time::Duration;
 
-use anyhow::{bail, Context, Result};
+use anyhow::{Context, Result};
 
 use super::{protocol, Advisor, AdvisorConfig};
+use crate::store::TraceStore;
 use crate::util::json::Json;
 
 /// Cap on header block and body sizes — the daemon fails fast on garbage
@@ -37,7 +51,12 @@ use crate::util::json::Json;
 const MAX_HEAD_BYTES: usize = 64 * 1024;
 const MAX_BODY_BYTES: usize = 8 * 1024 * 1024;
 
+/// Requests served on one connection before it is closed regardless of
+/// keep-alive (fairness bound; clients reconnect transparently).
+const MAX_REQUESTS_PER_CONN: usize = 256;
+
 /// Per-connection socket timeout: a stalled client must not pin a worker.
+/// Doubles as the keep-alive idle timeout between requests.
 const IO_TIMEOUT: Duration = Duration::from_secs(10);
 
 /// `serve` front-end options.
@@ -65,58 +84,96 @@ struct HttpRequest {
     method: String,
     path: String,
     body: String,
+    /// Client wants the connection kept open after the response
+    /// (HTTP/1.1 default; overridden by a `Connection` header).
+    keep_alive: bool,
 }
 
-fn read_request(stream: &mut TcpStream) -> Result<HttpRequest> {
-    let mut buf: Vec<u8> = Vec::with_capacity(1024);
+/// What one read attempt on a (possibly reused) connection produced.
+enum ReadOutcome {
+    Request(HttpRequest),
+    /// The client hung up (or idled past the timeout) between requests —
+    /// a normal keep-alive end, nothing to answer.
+    Closed,
+    /// Bytes arrived but do not form a valid request — answer 400.
+    Malformed(String),
+}
+
+/// Read one request from `stream`, carrying leftover bytes across calls
+/// in `buf` (pipelined requests on a keep-alive connection must not be
+/// dropped with the frame that preceded them).
+fn read_request(stream: &mut TcpStream, buf: &mut Vec<u8>) -> ReadOutcome {
     let mut chunk = [0u8; 4096];
     let head_end = loop {
-        if let Some(pos) = find_head_end(&buf) {
+        if let Some(pos) = find_head_end(buf) {
             break pos;
         }
         if buf.len() > MAX_HEAD_BYTES {
-            bail!("header block exceeds {MAX_HEAD_BYTES} bytes");
+            return ReadOutcome::Malformed(format!("header block exceeds {MAX_HEAD_BYTES} bytes"));
         }
-        let n = stream.read(&mut chunk).context("reading request head")?;
-        if n == 0 {
-            bail!("connection closed mid-request");
+        match stream.read(&mut chunk) {
+            Ok(0) if buf.is_empty() => return ReadOutcome::Closed,
+            Ok(0) => return ReadOutcome::Malformed("connection closed mid-request".to_string()),
+            Ok(n) => buf.extend_from_slice(&chunk[..n]),
+            Err(_) if buf.is_empty() => return ReadOutcome::Closed, // idle timeout
+            Err(e) => return ReadOutcome::Malformed(format!("reading request head: {e}")),
         }
-        buf.extend_from_slice(&chunk[..n]);
     };
-    let head = std::str::from_utf8(&buf[..head_end]).context("non-UTF-8 request head")?;
+    let head = match std::str::from_utf8(&buf[..head_end]) {
+        Ok(h) => h,
+        Err(_) => return ReadOutcome::Malformed("non-UTF-8 request head".to_string()),
+    };
     let mut lines = head.split("\r\n");
     let request_line = lines.next().unwrap_or("");
     let mut parts = request_line.split_whitespace();
     let method = parts.next().unwrap_or("").to_string();
     let path = parts.next().unwrap_or("").to_string();
+    let version = parts.next().unwrap_or("HTTP/1.1");
     if method.is_empty() || path.is_empty() {
-        bail!("malformed request line '{request_line}'");
+        return ReadOutcome::Malformed(format!("malformed request line '{request_line}'"));
     }
+    // HTTP/1.1 defaults to persistent connections; 1.0 to closing.
+    let mut keep_alive = version != "HTTP/1.0";
     let mut content_length = 0usize;
     for line in lines {
         if let Some((name, value)) = line.split_once(':') {
+            let value = value.trim();
             if name.eq_ignore_ascii_case("content-length") {
-                content_length = value
-                    .trim()
-                    .parse::<usize>()
-                    .with_context(|| format!("bad Content-Length '{}'", value.trim()))?;
+                content_length = match value.parse::<usize>() {
+                    Ok(n) => n,
+                    Err(_) => {
+                        return ReadOutcome::Malformed(format!("bad Content-Length '{value}'"))
+                    }
+                };
+            } else if name.eq_ignore_ascii_case("connection") {
+                if value.eq_ignore_ascii_case("close") {
+                    keep_alive = false;
+                } else if value.eq_ignore_ascii_case("keep-alive") {
+                    keep_alive = true;
+                }
             }
         }
     }
     if content_length > MAX_BODY_BYTES {
-        bail!("body of {content_length} bytes exceeds {MAX_BODY_BYTES}");
+        return ReadOutcome::Malformed(format!(
+            "body of {content_length} bytes exceeds {MAX_BODY_BYTES}"
+        ));
     }
-    let mut body = buf[head_end + 4..].to_vec();
-    while body.len() < content_length {
-        let n = stream.read(&mut chunk).context("reading request body")?;
-        if n == 0 {
-            bail!("connection closed mid-body");
+    let frame_end = head_end + 4 + content_length;
+    while buf.len() < frame_end {
+        match stream.read(&mut chunk) {
+            Ok(0) => return ReadOutcome::Malformed("connection closed mid-body".to_string()),
+            Ok(n) => buf.extend_from_slice(&chunk[..n]),
+            Err(e) => return ReadOutcome::Malformed(format!("reading request body: {e}")),
         }
-        body.extend_from_slice(&chunk[..n]);
     }
-    body.truncate(content_length);
-    let body = String::from_utf8(body).context("non-UTF-8 request body")?;
-    Ok(HttpRequest { method, path, body })
+    let body = match std::str::from_utf8(&buf[head_end + 4..frame_end]) {
+        Ok(b) => b.to_string(),
+        Err(_) => return ReadOutcome::Malformed("non-UTF-8 request body".to_string()),
+    };
+    // Keep pipelined bytes beyond this frame for the next read.
+    buf.drain(..frame_end);
+    ReadOutcome::Request(HttpRequest { method, path, body, keep_alive })
 }
 
 fn find_head_end(buf: &[u8]) -> Option<usize> {
@@ -134,12 +191,13 @@ fn status_text(code: u16) -> &'static str {
     }
 }
 
-fn write_response(stream: &mut TcpStream, code: u16, body: &Json) {
+fn write_response(stream: &mut TcpStream, code: u16, body: &Json, keep_alive: bool) {
     let payload = body.to_compact();
     let head = format!(
-        "HTTP/1.1 {code} {}\r\nContent-Type: application/json\r\nContent-Length: {}\r\nConnection: close\r\n\r\n",
+        "HTTP/1.1 {code} {}\r\nContent-Type: application/json\r\nContent-Length: {}\r\nConnection: {}\r\n\r\n",
         status_text(code),
-        payload.len()
+        payload.len(),
+        if keep_alive { "keep-alive" } else { "close" }
     );
     // Best effort: the client may already be gone.
     let _ = stream.write_all(head.as_bytes());
@@ -199,16 +257,27 @@ fn handle_connection(advisor: &Advisor, mut stream: TcpStream, stop: &AtomicBool
     let _ = stream.set_read_timeout(Some(IO_TIMEOUT));
     let _ = stream.set_write_timeout(Some(IO_TIMEOUT));
     let _ = stream.set_nodelay(true);
-    match read_request(&mut stream) {
-        Ok(req) => {
-            let (code, body) = route(advisor, &req, stop);
-            if code != 200 {
-                eprintln!("[advisor] {} {} -> {code}", req.method, req.path);
+    let mut buf: Vec<u8> = Vec::with_capacity(1024);
+    for served in 1..=MAX_REQUESTS_PER_CONN {
+        match read_request(&mut stream, &mut buf) {
+            ReadOutcome::Request(req) => {
+                let (code, body) = route(advisor, &req, stop);
+                if code != 200 {
+                    eprintln!("[advisor] {} {} -> {code}", req.method, req.path);
+                }
+                let keep = req.keep_alive
+                    && served < MAX_REQUESTS_PER_CONN
+                    && !stop.load(Ordering::SeqCst);
+                write_response(&mut stream, code, &body, keep);
+                if !keep {
+                    return;
+                }
             }
-            write_response(&mut stream, code, &body);
-        }
-        Err(e) => {
-            write_response(&mut stream, 400, &protocol::error_response(&format!("{e:#}")));
+            ReadOutcome::Closed => return,
+            ReadOutcome::Malformed(msg) => {
+                write_response(&mut stream, 400, &protocol::error_response(&msg), false);
+                return;
+            }
         }
     }
 }
@@ -223,11 +292,19 @@ pub struct AdvisorServer {
 
 impl AdvisorServer {
     pub fn bind(opts: &ServeOptions) -> Result<AdvisorServer> {
+        Self::bind_with_store(opts, None)
+    }
+
+    /// Bind with an optional durable store: persisted tracks are
+    /// recovered before the listener accepts its first connection, and a
+    /// clean shutdown snapshots everything back.
+    pub fn bind_with_store(opts: &ServeOptions, store: Option<TraceStore>) -> Result<AdvisorServer> {
+        let advisor = Advisor::with_store(opts.advisor, store)?;
         let listener = TcpListener::bind(&opts.addr)
             .with_context(|| format!("binding {}", opts.addr))?;
         Ok(AdvisorServer {
             listener,
-            advisor: Arc::new(Advisor::new(opts.advisor)),
+            advisor: Arc::new(advisor),
             workers: opts.workers.max(1),
         })
     }
@@ -279,6 +356,7 @@ impl AdvisorServer {
             scope.spawn(|| {
                 while !stop.load(Ordering::SeqCst) {
                     if !advisor.run_bg_once() {
+                        advisor.maybe_compact();
                         advisor.bg_wait(Duration::from_millis(100));
                     }
                 }
@@ -300,6 +378,13 @@ impl AdvisorServer {
             }
             ready.notify_all();
         });
+        // All workers have drained: snapshot every persisted track so the
+        // next boot replays a compact image instead of a long WAL.
+        match self.advisor.persist_all() {
+            Ok(0) => {}
+            Ok(n) => eprintln!("[advisor] snapshotted {n} track(s) on shutdown"),
+            Err(e) => eprintln!("[advisor] shutdown snapshot failed: {e:#}"),
+        }
         Ok(())
     }
 }
@@ -323,6 +408,77 @@ mod tests {
     }
 
     #[test]
+    fn read_request_parses_connection_semantics_and_pipelining() {
+        // Loopback socket pair: the writer side plays the client.
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let client = std::thread::spawn(move || {
+            let mut c = TcpStream::connect(addr).unwrap();
+            // Two pipelined requests in one write, then a close request.
+            let batch = "POST /a HTTP/1.1\r\nContent-Length: 2\r\n\r\nhi\
+                         GET /b HTTP/1.1\r\n\r\n\
+                         GET /c HTTP/1.0\r\n\r\n";
+            c.write_all(batch.as_bytes()).unwrap();
+            // Hold the socket open until the server has read everything.
+            let mut sink = [0u8; 16];
+            let _ = c.read(&mut sink);
+        });
+        let (mut stream, _) = listener.accept().unwrap();
+        stream.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+        let mut buf = Vec::new();
+
+        let ReadOutcome::Request(a) = read_request(&mut stream, &mut buf) else {
+            panic!("first request lost")
+        };
+        assert_eq!((a.method.as_str(), a.path.as_str(), a.body.as_str()), ("POST", "/a", "hi"));
+        assert!(a.keep_alive, "HTTP/1.1 defaults to keep-alive");
+
+        let ReadOutcome::Request(b) = read_request(&mut stream, &mut buf) else {
+            panic!("pipelined request lost")
+        };
+        assert_eq!(b.path, "/b");
+        assert!(b.keep_alive);
+
+        let ReadOutcome::Request(c) = read_request(&mut stream, &mut buf) else {
+            panic!("third request lost")
+        };
+        assert_eq!(c.path, "/c");
+        assert!(!c.keep_alive, "HTTP/1.0 defaults to close");
+
+        drop(stream);
+        client.join().unwrap();
+    }
+
+    #[test]
+    fn read_request_explicit_connection_headers() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let client = std::thread::spawn(move || {
+            let mut c = TcpStream::connect(addr).unwrap();
+            let batch = "GET /x HTTP/1.1\r\nConnection: close\r\n\r\n\
+                         GET /y HTTP/1.0\r\nConnection: keep-alive\r\n\r\n";
+            c.write_all(batch.as_bytes()).unwrap();
+            // Close immediately: the server must still read both buffered
+            // requests, then see a clean EOF.
+        });
+        let (mut stream, _) = listener.accept().unwrap();
+        stream.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+        let mut buf = Vec::new();
+        let ReadOutcome::Request(x) = read_request(&mut stream, &mut buf) else {
+            panic!("request lost")
+        };
+        assert!(!x.keep_alive, "Connection: close must win over the 1.1 default");
+        let ReadOutcome::Request(y) = read_request(&mut stream, &mut buf) else {
+            panic!("request lost")
+        };
+        assert!(y.keep_alive, "Connection: keep-alive must win over the 1.0 default");
+        // Clean EOF between requests reads as Closed, not Malformed.
+        let outcome = read_request(&mut stream, &mut buf);
+        assert!(matches!(outcome, ReadOutcome::Closed), "clean EOF must close quietly");
+        client.join().unwrap();
+    }
+
+    #[test]
     fn route_rejects_unknown_and_wrong_method() {
         let advisor = Advisor::new(AdvisorConfig::default());
         let stop = AtomicBool::new(false);
@@ -330,6 +486,7 @@ mod tests {
             method: method.to_string(),
             path: path.to_string(),
             body: body.to_string(),
+            keep_alive: true,
         };
         assert_eq!(route(&advisor, &req("GET", "/nope", ""), &stop).0, 404);
         assert_eq!(route(&advisor, &req("POST", "/healthz", ""), &stop).0, 405);

@@ -60,7 +60,13 @@
 //! ingestion re-fits per-system rates over an appendable
 //! [`traces::index::TraceTail`] and re-selects in the background — with
 //! the stationary solve warm-started from the previous recommendation —
-//! when the rates drift beyond a configurable threshold.
+//! when the rates drift beyond a configurable threshold. With
+//! `--data-dir`, [`store`] makes every track durable: an append-only
+//! checksummed WAL plus atomically-replaced snapshots replay the exact
+//! pre-crash state on boot (torn tails truncated), and
+//! [`traces::ShardedIndex`] partitions the merged event timeline by time
+//! window so segment evaluations touch only their shard and index builds
+//! parallelize over [`util::pool`].
 
 pub mod advisor;
 pub mod apps;
@@ -75,6 +81,7 @@ pub mod policies;
 pub mod runtime;
 pub mod search;
 pub mod simulator;
+pub mod store;
 pub mod traces;
 pub mod util;
 

@@ -17,6 +17,7 @@ use malleable_ckpt::metrics::evaluate_segment;
 use malleable_ckpt::policies::ReschedulingPolicy;
 use malleable_ckpt::runtime::ComputeEngine;
 use malleable_ckpt::search::{select_interval, SearchConfig};
+use malleable_ckpt::store::TraceStore;
 use malleable_ckpt::traces::parse::to_lanl_csv;
 use malleable_ckpt::util::cli::{flag, switch, App, CommandSpec};
 use malleable_ckpt::util::json::Json;
@@ -52,8 +53,21 @@ fn app_spec() -> App {
                 flag("drift", "F", "relative rate drift that re-selects a cached recommendation", Some("0.10")),
                 flag("window-days", "F", "failure-rate re-fit window over the ingested tail (days)", Some("30")),
                 flag("min-refit-failures", "N", "failures required in the window before a re-fit is trusted", Some("8")),
+                flag("data-dir", "PATH", "persist tracks here (WAL + snapshots; restarts recover them — see DESIGN.md §10)", None),
+                flag("max-events", "N", "per-track event-retention cap, oldest windows evicted past it (0 = unlimited)", Some("0")),
+                flag("retention-days", "F", "width of the retention/shard windows eviction rides on (days)", Some("7")),
+                flag("compact-mb", "F", "WAL size that triggers background compaction (MB)", Some("4")),
             ],
             positionals: vec![],
+        })
+        .command(CommandSpec {
+            name: "store",
+            about: "inspect, verify or compact a serve --data-dir offline (see DESIGN.md §10)",
+            flags: vec![
+                flag("data-dir", "PATH", "the data dir to operate on", None),
+                switch("json", "emit the full machine-readable report"),
+            ],
+            positionals: vec![("action", "inspect | verify | compact")],
         })
         .command(CommandSpec {
             name: "model",
@@ -164,6 +178,7 @@ fn run(p: &malleable_ckpt::util::cli::Parsed) -> Result<()> {
     match p.command.as_str() {
         "select" => cmd_select(p),
         "serve" => cmd_serve(p),
+        "store" => cmd_store(p),
         "model" => cmd_model(p),
         "simulate" => cmd_simulate(p),
         "gen-trace" => cmd_gen_trace(p),
@@ -254,13 +269,31 @@ fn cmd_serve(p: &malleable_ckpt::util::cli::Parsed) -> Result<()> {
     if let Some(m) = p.get_usize("min-refit-failures")? {
         advisor.min_refit_failures = m;
     }
+    if let Some(m) = p.get_usize("max-events")? {
+        advisor.max_events = m;
+    }
+    if let Some(d) = p.get_f64("retention-days")? {
+        anyhow::ensure!(d > 0.0 && d.is_finite(), "--retention-days must be positive");
+        advisor.retention_window = d * 86_400.0;
+    }
+    let store = match p.get("data-dir") {
+        Some(dir) => {
+            let compact_mb = p.get_f64("compact-mb")?.unwrap_or(4.0);
+            anyhow::ensure!(
+                compact_mb > 0.0 && compact_mb.is_finite(),
+                "--compact-mb must be positive"
+            );
+            Some(TraceStore::with_compaction(dir, (compact_mb * 1024.0 * 1024.0) as u64)?)
+        }
+        None => None,
+    };
     let mut opts = ServeOptions { addr: p.get_or("addr", "127.0.0.1:7743"), advisor, ..Default::default() };
     if let Some(w) = p.get_usize("workers")? {
         if w > 0 {
             opts.workers = w;
         }
     }
-    let server = AdvisorServer::bind(&opts)?;
+    let server = AdvisorServer::bind_with_store(&opts, store)?;
     let addr = server.local_addr()?;
     println!("advisor listening on http://{addr}");
     println!(
@@ -271,12 +304,95 @@ fn cmd_serve(p: &malleable_ckpt::util::cli::Parsed) -> Result<()> {
         opts.advisor.shards,
         opts.workers
     );
+    match p.get("data-dir") {
+        Some(dir) => println!(
+            "  durable tracks in {dir} (max events/track: {})",
+            if opts.advisor.max_events == 0 {
+                "unlimited".to_string()
+            } else {
+                opts.advisor.max_events.to_string()
+            }
+        ),
+        None => println!("  in-memory only (pass --data-dir to persist tracks across restarts)"),
+    }
     println!("try:");
     println!(
         "  curl -s http://{addr}/v1/select -d '{{\"system\": \"system-1/128\", \"app\": \"qr\"}}'"
     );
     println!("  curl -s http://{addr}/v1/status");
     server.run()
+}
+
+fn cmd_store(p: &malleable_ckpt::util::cli::Parsed) -> Result<()> {
+    use malleable_ckpt::store;
+
+    let action = p
+        .positionals
+        .first()
+        .ok_or_else(|| anyhow!("missing action (inspect | verify | compact)"))?
+        .clone();
+    let dir = p
+        .get("data-dir")
+        .ok_or_else(|| anyhow!("--data-dir is required"))?
+        .to_string();
+    let root = Path::new(&dir);
+    match action.as_str() {
+        "inspect" => {
+            let report = store::inspect(root)?;
+            if p.switch("json") {
+                println!("{}", report.to_compact());
+            } else {
+                print_track_summary(&report, &["events", "accepted", "merged", "evicted", "wal_bytes"]);
+            }
+        }
+        "verify" => {
+            let (report, ok) = store::verify(root)?;
+            if p.switch("json") {
+                println!("{}", report.to_compact());
+            } else {
+                print_track_summary(&report, &["events", "ok", "torn_tail"]);
+            }
+            if !ok {
+                return Err(anyhow!("store verification failed for {dir}"));
+            }
+            println!("store verify: OK");
+        }
+        "compact" => {
+            let report = store::compact_all(root)?;
+            if p.switch("json") {
+                println!("{}", report.to_compact());
+            } else {
+                print_track_summary(&report, &["events", "wal_bytes_before", "wal_bytes_after", "gen"]);
+            }
+        }
+        other => return Err(anyhow!("unknown action '{other}' (inspect | verify | compact)")),
+    }
+    Ok(())
+}
+
+/// Render per-track fields of a store report as an aligned listing.
+fn print_track_summary(report: &Json, fields: &[&str]) {
+    let Some(tracks) = report.get("tracks").and_then(Json::as_obj) else {
+        return;
+    };
+    if tracks.is_empty() {
+        println!("no tracks");
+        return;
+    }
+    for (id, tj) in tracks {
+        let mut parts = Vec::new();
+        for &f in fields {
+            if let Some(v) = tj.get(f) {
+                parts.push(format!("{f}={v}"));
+            }
+        }
+        println!("{id:<24} {}", parts.join("  "));
+        if let Some(problems) = tj.get("problems").and_then(Json::as_arr) {
+            for prob in problems {
+                println!("{:<24}   problem: {prob}", "");
+            }
+        }
+    }
 }
 
 fn cmd_model(p: &malleable_ckpt::util::cli::Parsed) -> Result<()> {

@@ -28,9 +28,9 @@ use std::sync::OnceLock;
 
 use crate::apps::AppProfile;
 use crate::policies::ReschedulingPolicy;
-use crate::traces::{FailureTrace, TraceIndex};
+use crate::traces::{EventCursor, FailureTrace, ShardedIndex, TraceIndex};
 use crate::util::pool;
-use anyhow::{bail, Result};
+use anyhow::{bail, ensure, Result};
 
 /// Simulation parameters.
 #[derive(Debug, Clone)]
@@ -158,8 +158,43 @@ impl<'a> Simulator<'a> {
     /// Run one simulation on the compiled index.
     pub fn run(&self, cfg: &SimConfig) -> Result<SimResult> {
         let end = self.validate(cfg)?;
+        self.run_with(self.index().cursor(self.trace), cfg, end)
+    }
+
+    /// Run one simulation on a time-window-sharded index
+    /// ([`crate::traces::ShardedIndex`]) compiled from this simulator's
+    /// trace: the identical walk as [`Simulator::run`] (same queries, same
+    /// accounting, `SimResult` equal field for field — pinned by the
+    /// equivalence suite), but only the shards the segment overlaps are
+    /// ever decoded, which is what makes short segments over multi-year
+    /// traces cheap.
+    pub fn run_sharded(&self, index: &ShardedIndex, cfg: &SimConfig) -> Result<SimResult> {
+        let end = self.validate(cfg)?;
+        // Cheap identity guard (O(n), not O(E)): processor count, total
+        // event count, and the exact bits of the last event time. The
+        // cursor reads availability from the index but per-processor
+        // failure queries from the trace, so a foreign index would give
+        // silently wrong results rather than a crash.
+        let trace_last = (0..self.trace.n_procs())
+            .filter_map(|p| self.trace.outages(p).last().map(|&(_, r)| r))
+            .fold(None::<f64>, |acc, r| Some(acc.map_or(r, |a| a.max(r))));
+        ensure!(
+            index.n_procs() == self.trace.n_procs()
+                && index.n_events()
+                    == 2 * (0..self.trace.n_procs())
+                        .map(|p| self.trace.failure_count(p))
+                        .sum::<usize>()
+                && index.last_event_time().map(f64::to_bits) == trace_last.map(f64::to_bits),
+            "sharded index was not compiled from this simulator's trace"
+        );
+        self.run_with(index.cursor(self.trace), cfg, end)
+    }
+
+    /// The indexed walk, generic over the cursor substrate (monolithic
+    /// [`crate::traces::TraceCursor`] or sharded
+    /// [`crate::traces::ShardedCursor`]).
+    fn run_with<C: EventCursor>(&self, mut cur: C, cfg: &SimConfig, end: f64) -> Result<SimResult> {
         let mut r = SimResult::default();
-        let mut cur = self.index().cursor(self.trace);
         let mut active: Vec<usize> = Vec::with_capacity(self.trace.n_procs());
 
         let mut t = cfg.start;
@@ -646,6 +681,36 @@ mod tests {
             let oracle = sim.run_reference(&cfg).unwrap();
             assert_eq!(fast, oracle, "indexed run diverged (prefer_reliable={prefer})");
         }
+    }
+
+    #[test]
+    fn sharded_run_matches_indexed_run() {
+        let mut rng = Rng::new(33);
+        let trace = generate(
+            &SynthSpec::exponential(10, 1.0 / (12.0 * 3_600.0), 1.0 / 900.0, 20.0 * 86_400.0),
+            &mut rng,
+        );
+        let app = flat_app(10);
+        let policy = ReschedulingPolicy::greedy(10);
+        let sim = Simulator::new(&trace, &app, &policy);
+        for window in [3_600.0, 86_400.0, 7.0 * 86_400.0, 1.0e9] {
+            let sharded = ShardedIndex::new(&trace, window, 4).unwrap();
+            for prefer in [false, true] {
+                let mut cfg = SimConfig::new(3_600.0, 10.0 * 86_400.0, 1_800.0);
+                cfg.prefer_reliable = prefer;
+                cfg.record_timeline = true;
+                let mono = sim.run(&cfg).unwrap();
+                let shrd = sim.run_sharded(&sharded, &cfg).unwrap();
+                assert_eq!(shrd, mono, "sharded run diverged (window {window}, prefer {prefer})");
+            }
+        }
+        // An index from a different trace is rejected.
+        let other = generate(
+            &SynthSpec::exponential(10, 1.0 / 86_400.0, 1.0 / 900.0, 20.0 * 86_400.0),
+            &mut Rng::new(34),
+        );
+        let foreign = ShardedIndex::new(&other, 86_400.0, 2).unwrap();
+        assert!(sim.run_sharded(&foreign, &SimConfig::new(0.0, 86_400.0, 600.0)).is_err());
     }
 
     #[test]

@@ -1,0 +1,728 @@
+//! Durable, time-sharded trace and recommendation store — the advisor's
+//! persistence layer (`malleable-ckpt serve --data-dir`).
+//!
+//! The PR 3 daemon kept every ingested outage, every re-fitted rate and
+//! every tracked recommendation in memory only: a restart lost the whole
+//! failure history the paper's UWT model feeds on. This module makes a
+//! track durable with the classic WAL + snapshot pair:
+//!
+//! * [`wal`] — an append-only log of checksummed, length-prefixed records
+//!   (outages, re-fits, recommendations, retention evictions), replayed on
+//!   boot with torn-tail truncation;
+//! * [`snapshot`] — an atomically-replaced compaction of the full track
+//!   state, so replay only walks the WAL suffix written since;
+//! * [`TrackStore`] — the per-track handle tying both together with
+//!   **generation numbers**: snapshot `(gen G, covered K)` + `wal-G.log`
+//!   (skip the first `K` records) + `wal-(G+1).log` (apply all) recovers
+//!   the exact pre-crash state no matter where in the
+//!   snapshot → new-WAL → delete-old-WAL sequence the crash landed — and
+//!   every record also replays idempotently, so even an overlap is safe.
+//!
+//! ## Layout
+//!
+//! ```text
+//! <data-dir>/tracks/<encoded-track-id>/
+//!     snapshot.bin    # atomic, checksummed (absent until first compaction)
+//!     wal-<gen>.log   # active generation (plus at most one predecessor)
+//! ```
+//!
+//! Track ids are client-chosen strings; [`encode_track_id`] maps them onto
+//! filesystem-safe directory names (alphanumerics, `-`, `_` pass through,
+//! everything else becomes `%XX` per UTF-8 byte).
+//!
+//! The `malleable-ckpt store` subcommand fronts [`inspect`], [`verify`]
+//! and [`compact_all`] for operating on a data dir offline.
+
+pub mod snapshot;
+pub mod wal;
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, ensure, Context, Result};
+
+pub use wal::{SpecRecord, Wal, WalRecord};
+
+use crate::traces::TraceTail;
+use crate::util::json::Json;
+
+/// Default WAL size that triggers a background compaction.
+pub const DEFAULT_COMPACT_WAL_BYTES: u64 = 4 << 20;
+
+/// The complete durable state of one track: what a snapshot stores and
+/// what WAL replay rebuilds. The recovery tests pin the replayed `tail`
+/// bit-for-bit against the pre-crash in-memory tail.
+pub struct TrackState {
+    pub tail: TraceTail,
+    /// Latest windowed re-fit, if any.
+    pub rates: Option<(f64, f64)>,
+    /// Registered recommendations (drift references included).
+    pub specs: Vec<SpecRecord>,
+    pub accepted: u64,
+    pub merged: u64,
+    pub reselects: u64,
+    pub evicted: u64,
+}
+
+impl TrackState {
+    pub fn new(n_procs: usize) -> Result<TrackState> {
+        Ok(TrackState {
+            tail: TraceTail::new(n_procs)?,
+            rates: None,
+            specs: Vec::new(),
+            accepted: 0,
+            merged: 0,
+            reselects: 0,
+            evicted: 0,
+        })
+    }
+
+    pub fn n_procs(&self) -> usize {
+        self.tail.n_procs()
+    }
+
+    /// Fold one WAL record in — the single replay path, exercised by the
+    /// crash-recovery fuzz tests. Every branch is idempotent under
+    /// re-application (see the module docs).
+    pub fn apply(&mut self, rec: &WalRecord) -> Result<()> {
+        match rec {
+            WalRecord::Create { n_procs } => {
+                ensure!(
+                    *n_procs == self.n_procs(),
+                    "track has {} processors, WAL generation says {n_procs}",
+                    self.n_procs()
+                );
+            }
+            WalRecord::Outage { proc, fail, repair } => {
+                if self.tail.push(*proc, *fail, *repair).context("replaying outage")? {
+                    self.accepted += 1;
+                } else {
+                    self.merged += 1;
+                }
+            }
+            WalRecord::Refit { lambda, theta } => {
+                self.rates = Some((*lambda, *theta));
+            }
+            WalRecord::Recommendation(spec) => {
+                if spec.refresh {
+                    self.reselects += 1;
+                }
+                match self.specs.iter_mut().find(|s| s.identity == spec.identity) {
+                    Some(slot) => *slot = (**spec).clone(),
+                    None => self.specs.push((**spec).clone()),
+                }
+            }
+            WalRecord::Evict { cutoff } => {
+                self.evicted += self.tail.evict_before(*cutoff) as u64;
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Filesystem-safe encoding of a client-chosen track id.
+pub fn encode_track_id(id: &str) -> String {
+    let mut out = String::with_capacity(id.len());
+    for b in id.bytes() {
+        match b {
+            b'a'..=b'z' | b'A'..=b'Z' | b'0'..=b'9' | b'-' | b'_' => out.push(b as char),
+            other => out.push_str(&format!("%{other:02X}")),
+        }
+    }
+    out
+}
+
+/// Inverse of [`encode_track_id`]; errors on names this store never wrote.
+pub fn decode_track_id(name: &str) -> Result<String> {
+    let bytes = name.as_bytes();
+    let mut out = Vec::with_capacity(bytes.len());
+    let mut i = 0;
+    while i < bytes.len() {
+        match bytes[i] {
+            b'%' => {
+                ensure!(i + 2 < bytes.len(), "truncated escape in '{name}'");
+                let hex = std::str::from_utf8(&bytes[i + 1..i + 3])?;
+                out.push(u8::from_str_radix(hex, 16).context("bad escape")?);
+                i += 3;
+            }
+            b => {
+                out.push(b);
+                i += 1;
+            }
+        }
+    }
+    String::from_utf8(out).context("track id is not UTF-8")
+}
+
+fn wal_path(dir: &Path, gen: u64) -> PathBuf {
+    dir.join(format!("wal-{gen}.log"))
+}
+
+/// WAL generations present in a track dir, ascending.
+fn wal_gens(dir: &Path) -> Result<Vec<u64>> {
+    let mut gens = Vec::new();
+    for entry in std::fs::read_dir(dir).with_context(|| format!("listing {}", dir.display()))? {
+        let name = entry?.file_name();
+        let Some(name) = name.to_str() else { continue };
+        if let Some(num) = name.strip_prefix("wal-").and_then(|s| s.strip_suffix(".log")) {
+            if let Ok(g) = num.parse::<u64>() {
+                gens.push(g);
+            }
+        }
+    }
+    gens.sort_unstable();
+    Ok(gens)
+}
+
+/// The data-dir handle: creates the layout, enumerates tracks, opens
+/// per-track stores.
+pub struct TraceStore {
+    root: PathBuf,
+    compact_wal_bytes: u64,
+}
+
+impl TraceStore {
+    pub fn open(root: impl Into<PathBuf>) -> Result<TraceStore> {
+        Self::with_compaction(root, DEFAULT_COMPACT_WAL_BYTES)
+    }
+
+    pub fn with_compaction(root: impl Into<PathBuf>, compact_wal_bytes: u64) -> Result<TraceStore> {
+        let root = root.into();
+        std::fs::create_dir_all(root.join("tracks"))
+            .with_context(|| format!("creating data dir {}", root.display()))?;
+        Ok(TraceStore { root, compact_wal_bytes: compact_wal_bytes.max(1) })
+    }
+
+    pub fn root(&self) -> &Path {
+        &self.root
+    }
+
+    /// WAL size past which the advisor's background compaction kicks in.
+    pub fn compact_wal_bytes(&self) -> u64 {
+        self.compact_wal_bytes
+    }
+
+    /// All persisted track ids, sorted (decoded from directory names).
+    pub fn track_ids(&self) -> Result<Vec<String>> {
+        let mut ids = Vec::new();
+        for entry in std::fs::read_dir(self.root.join("tracks"))? {
+            let entry = entry?;
+            if entry.file_type()?.is_dir() {
+                let name = entry.file_name();
+                let name = name.to_str().context("non-UTF-8 track directory")?.to_string();
+                ids.push(decode_track_id(&name)?);
+            }
+        }
+        ids.sort();
+        Ok(ids)
+    }
+
+    pub fn track_dir(&self, id: &str) -> PathBuf {
+        self.root.join("tracks").join(encode_track_id(id))
+    }
+
+    /// Open (recovering) or create a track. `n_if_new` supplies the
+    /// processor count when nothing durable exists yet; opening an
+    /// existing track ignores it.
+    pub fn open_track(&self, id: &str, n_if_new: Option<usize>) -> Result<(TrackStore, TrackState)> {
+        TrackStore::open(&self.track_dir(id), n_if_new)
+            .with_context(|| format!("opening track '{id}'"))
+    }
+}
+
+/// Per-track durable handle: the active WAL generation plus the snapshot
+/// machinery. All appends go through this; compaction snapshots the
+/// caller-provided state and rolls the generation.
+pub struct TrackStore {
+    dir: PathBuf,
+    wal: Wal,
+    gen: u64,
+}
+
+impl TrackStore {
+    /// Recover a track from its directory (see the module docs for the
+    /// generation protocol), creating it if nothing exists yet.
+    pub fn open(dir: &Path, n_if_new: Option<usize>) -> Result<(TrackStore, TrackState)> {
+        std::fs::create_dir_all(dir)?;
+        let snap = snapshot::load(dir)?;
+        let (mut state, start_gen, covered) = match snap {
+            Some(s) => (Some(s.state), s.gen, s.covered),
+            None => (None, 0, 0),
+        };
+
+        let mut active: Option<(u64, Wal)> = None;
+        for gen in wal_gens(dir)? {
+            let path = wal_path(dir, gen);
+            if gen < start_gen {
+                // Fully covered by the snapshot; a leftover from a crash
+                // mid-compaction.
+                let _ = std::fs::remove_file(&path);
+                continue;
+            }
+            let (wal, records) = Wal::open(&path)?;
+            let skip = if gen == start_gen { (covered as usize).min(records.len()) } else { 0 };
+            for rec in &records[skip..] {
+                match &mut state {
+                    Some(st) => st.apply(rec)?,
+                    None => match rec {
+                        WalRecord::Create { n_procs } => {
+                            state = Some(TrackState::new(*n_procs)?);
+                        }
+                        other => bail!("record {other:?} precedes track creation"),
+                    },
+                }
+            }
+            active = Some((gen, wal));
+        }
+
+        let (gen, wal, state) = match (active, state) {
+            (Some((gen, wal)), Some(state)) => (gen, wal, state),
+            (Some(_), None) => bail!("WAL holds no Create record and no snapshot exists"),
+            (None, prior) => {
+                // Fresh track (or snapshot-only after an interrupted
+                // compaction): start a new generation.
+                let n = match &prior {
+                    Some(s) => s.n_procs(),
+                    None => n_if_new.context("new track needs a processor count")?,
+                };
+                let gen = start_gen + 1;
+                let mut wal = Wal::create(&wal_path(dir, gen))?;
+                wal.append(&WalRecord::Create { n_procs: n })?;
+                wal.sync()?;
+                let state = match prior {
+                    Some(s) => s,
+                    None => TrackState::new(n)?,
+                };
+                (gen, wal, state)
+            }
+        };
+        Ok((TrackStore { dir: dir.to_path_buf(), wal, gen }, state))
+    }
+
+    pub fn append(&mut self, rec: &WalRecord) -> Result<()> {
+        self.wal.append(rec)
+    }
+
+    /// Force everything appended so far to stable storage — called once
+    /// per mutation batch by the advisor, so an acknowledged ingest
+    /// survives not just a process kill but a machine crash.
+    pub fn flush(&mut self) -> Result<()> {
+        self.wal.sync()
+    }
+
+    pub fn wal_bytes(&self) -> u64 {
+        self.wal.bytes()
+    }
+
+    pub fn gen(&self) -> u64 {
+        self.gen
+    }
+
+    /// Snapshot `state` and roll the WAL generation: write the snapshot
+    /// covering everything appended so far, start `wal-(gen+1)`, drop the
+    /// old log. Crash-safe at every step (module docs).
+    pub fn compact(&mut self, state: &TrackState) -> Result<()> {
+        self.wal.sync()?;
+        snapshot::write(&self.dir, self.gen, self.wal.records(), state)?;
+        let next = self.gen + 1;
+        let mut wal = Wal::create(&wal_path(&self.dir, next))?;
+        wal.append(&WalRecord::Create { n_procs: state.n_procs() })?;
+        wal.sync()?;
+        let old = wal_path(&self.dir, self.gen);
+        self.wal = wal;
+        self.gen = next;
+        let _ = std::fs::remove_file(old);
+        // Make the rename + new file + unlink durable as a set. Best
+        // effort: a lost dir entry only re-runs an idempotent replay.
+        if let Ok(d) = std::fs::File::open(&self.dir) {
+            let _ = d.sync_all();
+        }
+        Ok(())
+    }
+}
+
+/// Read-only replay of a track dir (no torn-tail truncation, no new WAL
+/// generation) — the substrate `inspect` and `verify` share.
+fn replay_readonly(dir: &Path) -> Result<(Option<TrackState>, bool, Vec<String>)> {
+    let mut problems: Vec<String> = Vec::new();
+    let mut torn = false;
+    let snap = match snapshot::load(dir) {
+        Ok(s) => s,
+        Err(e) => {
+            problems.push(format!("snapshot: {e:#}"));
+            None
+        }
+    };
+    let (mut state, start_gen, covered) = match snap {
+        Some(s) => (Some(s.state), s.gen, s.covered),
+        None => (None, 0, 0),
+    };
+    for gen in wal_gens(dir)? {
+        if gen < start_gen {
+            continue;
+        }
+        let path = wal_path(dir, gen);
+        match wal::scan(&path) {
+            Ok(scan) => {
+                if scan.torn() {
+                    torn = true;
+                    if let Some(e) = &scan.error {
+                        problems.push(format!("wal-{gen}: stopped early: {e}"));
+                    }
+                }
+                let skip =
+                    if gen == start_gen { (covered as usize).min(scan.records.len()) } else { 0 };
+                for (i, rec) in scan.records[skip..].iter().enumerate() {
+                    let step = match &mut state {
+                        Some(st) => st.apply(rec),
+                        None => match rec {
+                            WalRecord::Create { n_procs } => match TrackState::new(*n_procs) {
+                                Ok(s) => {
+                                    state = Some(s);
+                                    Ok(())
+                                }
+                                Err(e) => Err(e),
+                            },
+                            _ => Err(anyhow::anyhow!("record precedes track creation")),
+                        },
+                    };
+                    if let Err(e) = step {
+                        problems.push(format!("wal-{gen} record {i}: {e:#}"));
+                        break;
+                    }
+                }
+            }
+            Err(e) => problems.push(format!("wal-{gen}: {e:#}")),
+        }
+    }
+    Ok((state, torn, problems))
+}
+
+/// Machine-readable summary of a data dir (the `store inspect` command).
+/// Read-only: torn tails are reported, not repaired.
+pub fn inspect(root: &Path) -> Result<Json> {
+    let store = TraceStore::open(root)?;
+    let mut tracks = Json::obj();
+    for id in store.track_ids()? {
+        let dir = store.track_dir(&id);
+        let mut tj = Json::obj();
+        match snapshot::load(&dir) {
+            Ok(Some(s)) => {
+                tj.set("snapshot_gen", Json::from(s.gen))
+                    .set("snapshot_events", Json::from(s.state.tail.n_events()));
+            }
+            Ok(None) => {
+                tj.set("snapshot_gen", Json::Null);
+            }
+            Err(e) => {
+                tj.set("snapshot_error", Json::from(format!("{e:#}").as_str()));
+            }
+        }
+        let (state, torn, problems) = replay_readonly(&dir)?;
+        tj.set("torn_tail", Json::from(torn)).set(
+            "problems",
+            Json::Arr(problems.iter().map(|p| Json::from(p.as_str())).collect()),
+        );
+        if let Some(state) = state {
+            tj.set("n_procs", Json::from(state.n_procs()))
+                .set("events", Json::from(state.tail.n_events()))
+                .set("accepted", Json::from(state.accepted))
+                .set("merged", Json::from(state.merged))
+                .set("evicted", Json::from(state.evicted))
+                .set("reselects", Json::from(state.reselects))
+                .set("recommendations", Json::from(state.specs.len()));
+            if let Some((l, t)) = state.rates {
+                tj.set("lambda", Json::from(l)).set("theta", Json::from(t));
+            }
+        }
+        let mut wal_bytes = 0u64;
+        let mut wal_files = Vec::new();
+        for gen in wal_gens(&dir)? {
+            let path = wal_path(&dir, gen);
+            let len = std::fs::metadata(&path)?.len();
+            wal_bytes += len;
+            wal_files.push(Json::from(format!("wal-{gen}.log ({len} B)").as_str()));
+        }
+        tj.set("wal_bytes", Json::from(wal_bytes)).set("wal_files", Json::Arr(wal_files));
+        tracks.set(&id, tj);
+    }
+    let mut o = Json::obj();
+    o.set("ok", Json::from(true))
+        .set("dir", Json::from(root.display().to_string().as_str()))
+        .set("tracks", tracks);
+    Ok(o)
+}
+
+/// Strict integrity check of a data dir (the `store verify` command):
+/// every snapshot must pass its checksum, every WAL must scan cleanly
+/// (a torn tail is reported but tolerated — it is what crash recovery
+/// truncates), every record must replay, and the spliced tail must equal
+/// a from-scratch batch rebuild of the same outages. Returns the report
+/// and whether the dir is healthy.
+pub fn verify(root: &Path) -> Result<(Json, bool)> {
+    let store = TraceStore::open(root)?;
+    let mut ok = true;
+    let mut tracks = Json::obj();
+    for id in store.track_ids()? {
+        let dir = store.track_dir(&id);
+        let (state, torn, mut problems) = replay_readonly(&dir)?;
+
+        let mut tj = Json::obj();
+        if let Some(state) = &state {
+            tj.set("events", Json::from(state.tail.n_events()));
+            // The spliced tail must equal a from-scratch compile of its
+            // own outage lists (validates the incremental index).
+            let horizon = state.tail.last_event_time().unwrap_or(0.0) + 1.0;
+            let lists: Vec<Vec<(f64, f64)>> =
+                (0..state.n_procs()).map(|p| state.tail.outages(p).to_vec()).collect();
+            match crate::traces::FailureTrace::new(lists, horizon.max(1.0)) {
+                Ok(trace) => {
+                    let batch = crate::traces::TraceIndex::new(&trace);
+                    let a: Vec<(f64, usize, bool)> =
+                        state.tail.index().events_since(0.0).collect();
+                    let b: Vec<(f64, usize, bool)> = batch.events_since(0.0).collect();
+                    if a != b {
+                        problems.push("spliced index != batch rebuild".to_string());
+                    }
+                }
+                Err(e) => problems.push(format!("tail invariants: {e:#}")),
+            }
+        } else {
+            problems.push("no recoverable state".to_string());
+        }
+        if !problems.is_empty() {
+            ok = false;
+        }
+        tj.set("torn_tail", Json::from(torn))
+            .set("ok", Json::from(problems.is_empty()))
+            .set(
+                "problems",
+                Json::Arr(problems.iter().map(|p| Json::from(p.as_str())).collect()),
+            );
+        tracks.set(&id, tj);
+    }
+    let mut o = Json::obj();
+    o.set("ok", Json::from(ok))
+        .set("dir", Json::from(root.display().to_string().as_str()))
+        .set("tracks", tracks);
+    Ok((o, ok))
+}
+
+/// Recover and compact every track in a data dir (the `store compact`
+/// command): replay, snapshot, roll the WAL generation.
+pub fn compact_all(root: &Path) -> Result<Json> {
+    let store = TraceStore::open(root)?;
+    let mut tracks = Json::obj();
+    for id in store.track_ids()? {
+        let (mut ts, state) = store.open_track(&id, None)?;
+        let before = ts.wal_bytes();
+        ts.compact(&state)?;
+        let mut tj = Json::obj();
+        tj.set("events", Json::from(state.tail.n_events()))
+            .set("wal_bytes_before", Json::from(before))
+            .set("wal_bytes_after", Json::from(ts.wal_bytes()))
+            .set("gen", Json::from(ts.gen()));
+        tracks.set(&id, tj);
+    }
+    let mut o = Json::obj();
+    o.set("ok", Json::from(true))
+        .set("dir", Json::from(root.display().to_string().as_str()))
+        .set("tracks", tracks);
+    Ok(o)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp_root(tag: &str) -> PathBuf {
+        static SEQ: std::sync::atomic::AtomicU64 = std::sync::atomic::AtomicU64::new(0);
+        let n = SEQ.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+        std::env::temp_dir().join(format!("mckpt-store-{tag}-{}-{n}", std::process::id()))
+    }
+
+    fn assert_tails_equal(a: &TraceTail, b: &TraceTail) {
+        assert_eq!(a.n_procs(), b.n_procs());
+        for p in 0..a.n_procs() {
+            let (x, y) = (a.outages(p), b.outages(p));
+            assert_eq!(x.len(), y.len(), "proc {p} outage count");
+            for (u, v) in x.iter().zip(y) {
+                assert_eq!(u.0.to_bits(), v.0.to_bits(), "proc {p} fail bits");
+                assert_eq!(u.1.to_bits(), v.1.to_bits(), "proc {p} repair bits");
+            }
+        }
+        let ea: Vec<(f64, usize, bool)> = a.index().events_since(0.0).collect();
+        let eb: Vec<(f64, usize, bool)> = b.index().events_since(0.0).collect();
+        assert_eq!(ea, eb, "merged timelines diverge");
+    }
+
+    #[test]
+    fn track_id_encoding_roundtrip() {
+        for id in ["cluster-a", "a/b c.d", "λ-system", "..", "%41", "x%y"] {
+            let enc = encode_track_id(id);
+            assert!(
+                enc.bytes().all(|b| b.is_ascii_alphanumeric() || b == b'-' || b == b'_' || b == b'%'),
+                "unsafe byte in {enc}"
+            );
+            assert_eq!(decode_track_id(&enc).unwrap(), id);
+        }
+        assert!(decode_track_id("bad%2").is_err());
+        assert!(decode_track_id("bad%zz").is_err());
+    }
+
+    #[test]
+    fn wal_only_recovery_is_bit_exact() {
+        let root = tmp_root("walonly");
+        let store = TraceStore::open(&root).unwrap();
+        let mut live = TrackState::new(4).unwrap();
+        {
+            let (mut ts, state) = store.open_track("c1", Some(4)).unwrap();
+            assert_eq!(state.n_procs(), 4);
+            for rec in [
+                WalRecord::Outage { proc: 0, fail: 100.125, repair: 200.5 },
+                WalRecord::Outage { proc: 3, fail: 50.0, repair: 75.0 },
+                WalRecord::Outage { proc: 0, fail: 100.125, repair: 200.5 }, // duplicate
+                WalRecord::Refit { lambda: 1.1e-6, theta: 3.3e-4 },
+                WalRecord::Outage { proc: 1, fail: 1_000.0, repair: 1_060.0 },
+            ] {
+                ts.append(&rec).unwrap();
+                live.apply(&rec).unwrap();
+            }
+            ts.flush().unwrap();
+        } // handle dropped: simulated crash (nothing snapshotted)
+
+        let (_, replayed) = store.open_track("c1", None).unwrap();
+        assert_tails_equal(&replayed.tail, &live.tail);
+        assert_eq!((replayed.accepted, replayed.merged), (3, 1));
+        let (l, t) = replayed.rates.unwrap();
+        assert_eq!((l.to_bits(), t.to_bits()), (1.1e-6f64.to_bits(), 3.3e-4f64.to_bits()));
+        assert_eq!(store.track_ids().unwrap(), vec!["c1".to_string()]);
+        let _ = std::fs::remove_dir_all(&root);
+    }
+
+    #[test]
+    fn compaction_rolls_generation_and_preserves_state() {
+        let root = tmp_root("compact");
+        let store = TraceStore::open(&root).unwrap();
+        let (mut ts, mut state) = store.open_track("t", Some(2)).unwrap();
+        for i in 0..20 {
+            let rec = WalRecord::Outage {
+                proc: (i % 2) as usize,
+                fail: 1_000.0 * i as f64,
+                repair: 1_000.0 * i as f64 + 60.0,
+            };
+            ts.append(&rec).unwrap();
+            state.apply(&rec).unwrap();
+        }
+        ts.flush().unwrap();
+        let gen_before = ts.gen();
+        let bytes_before = ts.wal_bytes();
+        ts.compact(&state).unwrap();
+        assert_eq!(ts.gen(), gen_before + 1);
+        assert!(ts.wal_bytes() < bytes_before, "compaction must shrink the WAL");
+        // Post-compaction appends land in the new generation and replay.
+        let rec = WalRecord::Outage { proc: 0, fail: 99_000.0, repair: 99_100.0 };
+        ts.append(&rec).unwrap();
+        state.apply(&rec).unwrap();
+        ts.flush().unwrap();
+        drop(ts);
+        let (ts2, replayed) = store.open_track("t", None).unwrap();
+        assert_eq!(ts2.gen(), gen_before + 1);
+        assert_tails_equal(&replayed.tail, &state.tail);
+        assert_eq!(replayed.accepted, 21);
+        let _ = std::fs::remove_dir_all(&root);
+    }
+
+    #[test]
+    fn crash_between_snapshot_and_wal_reset_replays_nothing_twice() {
+        let root = tmp_root("crashmid");
+        let store = TraceStore::open(&root).unwrap();
+        let (mut ts, mut state) = store.open_track("t", Some(2)).unwrap();
+        let recs = [
+            WalRecord::Outage { proc: 0, fail: 10.0, repair: 20.0 },
+            WalRecord::Outage { proc: 1, fail: 30.0, repair: 45.0 },
+        ];
+        for rec in &recs {
+            ts.append(rec).unwrap();
+            state.apply(rec).unwrap();
+        }
+        ts.flush().unwrap();
+        // Simulate the crash window: snapshot written, WAL NOT reset.
+        ts.wal.sync().unwrap();
+        snapshot::write(&ts.dir, ts.gen(), ts.wal.records(), &state).unwrap();
+        drop(ts);
+        let (_, replayed) = store.open_track("t", None).unwrap();
+        assert_tails_equal(&replayed.tail, &state.tail);
+        // Counters must not double: the snapshot covers the whole WAL.
+        assert_eq!((replayed.accepted, replayed.merged), (2, 0));
+        let _ = std::fs::remove_dir_all(&root);
+    }
+
+    #[test]
+    fn eviction_replays_deterministically() {
+        let root = tmp_root("evict");
+        let store = TraceStore::open(&root).unwrap();
+        let (mut ts, mut state) = store.open_track("t", Some(2)).unwrap();
+        for rec in [
+            WalRecord::Outage { proc: 0, fail: 10.0, repair: 20.0 },
+            WalRecord::Outage { proc: 1, fail: 15.0, repair: 500.0 },
+            WalRecord::Outage { proc: 0, fail: 900.0, repair: 950.0 },
+            WalRecord::Evict { cutoff: 100.0 },
+            WalRecord::Outage { proc: 1, fail: 2_000.0, repair: 2_100.0 },
+        ] {
+            ts.append(&rec).unwrap();
+            state.apply(&rec).unwrap();
+        }
+        ts.flush().unwrap();
+        assert_eq!(state.evicted, 2);
+        drop(ts);
+        let (_, replayed) = store.open_track("t", None).unwrap();
+        assert_tails_equal(&replayed.tail, &state.tail);
+        assert_eq!(replayed.evicted, 2);
+        let _ = std::fs::remove_dir_all(&root);
+    }
+
+    #[test]
+    fn verify_flags_corruption_and_passes_clean_dirs() {
+        let root = tmp_root("verify");
+        let store = TraceStore::open(&root).unwrap();
+        let (mut ts, _) = store.open_track("good", Some(2)).unwrap();
+        ts.append(&WalRecord::Outage { proc: 0, fail: 1.0, repair: 2.0 }).unwrap();
+        ts.flush().unwrap();
+        drop(ts);
+        let (_, ok) = verify(&root).unwrap();
+        assert!(ok, "clean dir must verify");
+
+        // Corrupt the WAL body: verify must fail the dir.
+        let dir = store.track_dir("good");
+        let gens = wal_gens(&dir).unwrap();
+        let path = wal_path(&dir, gens[0]);
+        let mut bytes = std::fs::read(&path).unwrap();
+        let mid = wal::WAL_MAGIC.len() + 6;
+        bytes[mid] ^= 0x80;
+        std::fs::write(&path, &bytes).unwrap();
+        let (report, ok) = verify(&root).unwrap();
+        assert!(!ok, "corrupted dir must fail verify: {report}");
+        let _ = std::fs::remove_dir_all(&root);
+    }
+
+    #[test]
+    fn inspect_and_compact_all_cover_every_track() {
+        let root = tmp_root("inspect");
+        let store = TraceStore::open(&root).unwrap();
+        for (id, n) in [("a", 2usize), ("b/c", 3)] {
+            let (mut ts, _) = store.open_track(id, Some(n)).unwrap();
+            ts.append(&WalRecord::Outage { proc: 0, fail: 5.0, repair: 6.0 }).unwrap();
+            ts.flush().unwrap();
+        }
+        let report = inspect(&root).unwrap();
+        assert_eq!(report.path("tracks.a.n_procs").unwrap().as_f64(), Some(2.0));
+        assert_eq!(report.path("tracks.a.events").unwrap().as_f64(), Some(2.0));
+        let tracks = report.get("tracks").unwrap().as_obj().unwrap();
+        assert!(tracks.contains_key("b/c"), "slash track id survives the roundtrip");
+        let compacted = compact_all(&root).unwrap();
+        assert_eq!(compacted.get("ok").unwrap().as_bool(), Some(true));
+        let (_, ok) = verify(&root).unwrap();
+        assert!(ok, "dir must verify after compaction");
+        let _ = std::fs::remove_dir_all(&root);
+    }
+}

@@ -1,0 +1,274 @@
+//! Compacted track snapshots: one atomic file holding a track's complete
+//! state, so recovery replays only the WAL suffix written since.
+//!
+//! ## Format
+//!
+//! ```text
+//! file := magic = b"MCKSNAP1" , body , fnv1a_64(body):u64le
+//! body := version:u64=1 , gen:u64 , covered:u64 , state
+//! ```
+//!
+//! `gen` names the WAL generation that was active when the snapshot was
+//! cut and `covered` how many of its records the snapshot already folds
+//! in; recovery skips exactly that prefix, so a crash **between** writing
+//! the snapshot and resetting the WAL replays nothing twice (and even a
+//! re-applied suffix would be harmless — every record replays
+//! idempotently, see [`super::wal::WalRecord`]).
+//!
+//! ## Atomicity
+//!
+//! The snapshot is written to `snapshot.tmp`, fsynced, then renamed over
+//! `snapshot.bin` — a crash mid-write leaves the previous snapshot (or
+//! none) plus a stale `.tmp` that recovery deletes. Floats travel as
+//! `to_bits`, so a loaded tail is bit-identical to the snapshotted one.
+
+use std::path::Path;
+
+use anyhow::{ensure, Context, Result};
+
+use super::wal::{ByteReader, ByteWriter, SpecRecord};
+use super::TrackState;
+use crate::traces::TraceTail;
+use crate::util::fnv::fnv1a_64;
+
+pub const SNAP_MAGIC: [u8; 8] = *b"MCKSNAP1";
+const SNAP_VERSION: u32 = 1;
+
+pub const SNAPSHOT_FILE: &str = "snapshot.bin";
+const SNAPSHOT_TMP: &str = "snapshot.tmp";
+
+/// A loaded snapshot: the state plus the WAL position it covers.
+pub struct Snapshot {
+    pub gen: u64,
+    pub covered: u64,
+    pub state: TrackState,
+}
+
+fn encode_state(w: &mut ByteWriter, state: &TrackState) {
+    let n = state.tail.n_procs();
+    w.u64(n as u64);
+    match state.rates {
+        Some((l, t)) => {
+            w.u8(1);
+            w.f64(l);
+            w.f64(t);
+        }
+        None => w.u8(0),
+    }
+    w.u64(state.accepted);
+    w.u64(state.merged);
+    w.u64(state.reselects);
+    w.u64(state.evicted);
+    for p in 0..n {
+        let list = state.tail.outages(p);
+        w.u64(list.len() as u64);
+        for &(f, r) in list {
+            w.f64(f);
+            w.f64(r);
+        }
+    }
+    w.u64(state.specs.len() as u64);
+    for spec in &state.specs {
+        spec.encode_into(w);
+    }
+}
+
+fn decode_state(r: &mut ByteReader) -> Result<TrackState> {
+    let n = r.u64()? as usize;
+    ensure!(n >= 1 && n <= 1 << 20, "implausible processor count {n}");
+    let rates = match r.u8()? {
+        0 => None,
+        _ => Some((r.f64()?, r.f64()?)),
+    };
+    let accepted = r.u64()?;
+    let merged = r.u64()?;
+    let reselects = r.u64()?;
+    let evicted = r.u64()?;
+    let mut tail = TraceTail::new(n)?;
+    for p in 0..n {
+        let count = r.u64()? as usize;
+        for _ in 0..count {
+            let (f, rep) = (r.f64()?, r.f64()?);
+            // Outages were serialized sorted and validated; push re-checks
+            // the invariants, so a corrupted-but-checksummed snapshot
+            // still cannot materialize an inconsistent tail.
+            ensure!(
+                tail.push(p, f, rep).context("snapshot outage")?,
+                "duplicate outage in snapshot"
+            );
+        }
+    }
+    let n_specs = r.u64()? as usize;
+    ensure!(n_specs <= 4096, "implausible spec count {n_specs}");
+    let mut specs = Vec::with_capacity(n_specs);
+    for _ in 0..n_specs {
+        specs.push(SpecRecord::decode_from(r)?);
+    }
+    Ok(TrackState { tail, rates, specs, accepted, merged, reselects, evicted })
+}
+
+/// Atomically write `state` as the track's snapshot.
+pub fn write(dir: &Path, gen: u64, covered: u64, state: &TrackState) -> Result<()> {
+    let mut w = ByteWriter::new();
+    w.u64(u64::from(SNAP_VERSION));
+    w.u64(gen);
+    w.u64(covered);
+    encode_state(&mut w, state);
+    let body = w.into_bytes();
+
+    let mut bytes = Vec::with_capacity(SNAP_MAGIC.len() + body.len() + 8);
+    bytes.extend_from_slice(&SNAP_MAGIC);
+    bytes.extend_from_slice(&body);
+    bytes.extend_from_slice(&fnv1a_64(&body).to_le_bytes());
+
+    let tmp = dir.join(SNAPSHOT_TMP);
+    {
+        let mut f = std::fs::File::create(&tmp)
+            .with_context(|| format!("creating {}", tmp.display()))?;
+        use std::io::Write as _;
+        f.write_all(&bytes)?;
+        f.sync_all()?;
+    }
+    let dst = dir.join(SNAPSHOT_FILE);
+    std::fs::rename(&tmp, &dst)
+        .with_context(|| format!("renaming snapshot into {}", dst.display()))?;
+    // Best-effort directory fsync so the rename itself survives a power
+    // loss (losing it merely replays the covered WAL records, which are
+    // idempotent).
+    if let Ok(d) = std::fs::File::open(dir) {
+        let _ = d.sync_all();
+    }
+    Ok(())
+}
+
+/// Load the track's snapshot if one exists. A stale `snapshot.tmp` from a
+/// crashed write is deleted; a corrupt `snapshot.bin` is an error (the
+/// data it covered is unrecoverable — surface it, don't guess).
+pub fn load(dir: &Path) -> Result<Option<Snapshot>> {
+    let _ = std::fs::remove_file(dir.join(SNAPSHOT_TMP));
+    let path = dir.join(SNAPSHOT_FILE);
+    let bytes = match std::fs::read(&path) {
+        Ok(b) => b,
+        Err(e) if e.kind() == std::io::ErrorKind::NotFound => return Ok(None),
+        Err(e) => return Err(e).with_context(|| format!("reading {}", path.display())),
+    };
+    ensure!(
+        bytes.len() >= SNAP_MAGIC.len() + 8 && bytes[..SNAP_MAGIC.len()] == SNAP_MAGIC,
+        "{} is not a snapshot (bad magic)",
+        path.display()
+    );
+    let body = &bytes[SNAP_MAGIC.len()..bytes.len() - 8];
+    let stored = u64::from_le_bytes(bytes[bytes.len() - 8..].try_into().unwrap());
+    ensure!(fnv1a_64(body) == stored, "{} failed its checksum", path.display());
+    let mut r = ByteReader::new(body);
+    let version = r.u64()?;
+    ensure!(version == u64::from(SNAP_VERSION), "unsupported snapshot version {version}");
+    let gen = r.u64()?;
+    let covered = r.u64()?;
+    let state = decode_state(&mut r).with_context(|| format!("decoding {}", path.display()))?;
+    r.done()?;
+    Ok(Some(Snapshot { gen, covered, state }))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::path::PathBuf;
+
+    fn tmp_dir(tag: &str) -> PathBuf {
+        static SEQ: std::sync::atomic::AtomicU64 = std::sync::atomic::AtomicU64::new(0);
+        let n = SEQ.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+        let dir = std::env::temp_dir().join(format!(
+            "mckpt-snap-{tag}-{}-{n}",
+            std::process::id()
+        ));
+        std::fs::create_dir_all(&dir).unwrap();
+        dir
+    }
+
+    fn sample_state() -> TrackState {
+        let mut state = TrackState::new(3).unwrap();
+        state.tail.push(0, 10.25, 20.5).unwrap();
+        state.tail.push(2, 100.0, 2_500.0).unwrap();
+        state.tail.push(0, 50.0, 60.0).unwrap();
+        state.rates = Some((5.787e-6, 4.1e-4));
+        state.accepted = 3;
+        state.merged = 1;
+        state.reselects = 2;
+        state.evicted = 4;
+        state
+    }
+
+    #[test]
+    fn roundtrip_bit_for_bit() {
+        let dir = tmp_dir("roundtrip");
+        let state = sample_state();
+        write(&dir, 7, 42, &state).unwrap();
+        let snap = load(&dir).unwrap().expect("snapshot written");
+        assert_eq!((snap.gen, snap.covered), (7, 42));
+        let got = &snap.state;
+        assert_eq!(got.tail.n_procs(), 3);
+        for p in 0..3 {
+            let (a, b) = (got.tail.outages(p), state.tail.outages(p));
+            assert_eq!(a.len(), b.len());
+            for (x, y) in a.iter().zip(b) {
+                assert_eq!(x.0.to_bits(), y.0.to_bits());
+                assert_eq!(x.1.to_bits(), y.1.to_bits());
+            }
+        }
+        let (gl, gt) = got.rates.unwrap();
+        let (wl, wt) = state.rates.unwrap();
+        assert_eq!((gl.to_bits(), gt.to_bits()), (wl.to_bits(), wt.to_bits()));
+        assert_eq!(
+            (got.accepted, got.merged, got.reselects, got.evicted),
+            (3, 1, 2, 4)
+        );
+        // The rebuilt merged timeline equals the snapshotted one.
+        let a: Vec<(f64, usize, bool)> = got.tail.index().events_since(0.0).collect();
+        let b: Vec<(f64, usize, bool)> = state.tail.index().events_since(0.0).collect();
+        assert_eq!(a, b);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn missing_and_stale_tmp() {
+        let dir = tmp_dir("missing");
+        assert!(load(&dir).unwrap().is_none());
+        // A stale tmp from a crashed write is cleaned up and ignored.
+        std::fs::write(dir.join(SNAPSHOT_TMP), b"half-written garbage").unwrap();
+        assert!(load(&dir).unwrap().is_none());
+        assert!(!dir.join(SNAPSHOT_TMP).exists());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn corruption_is_an_error_not_a_guess() {
+        let dir = tmp_dir("corrupt");
+        write(&dir, 1, 0, &sample_state()).unwrap();
+        let path = dir.join(SNAPSHOT_FILE);
+        let mut bytes = std::fs::read(&path).unwrap();
+        let mid = bytes.len() / 2;
+        bytes[mid] ^= 0x40;
+        std::fs::write(&path, &bytes).unwrap();
+        assert!(load(&dir).is_err());
+        // Not-a-snapshot files error too.
+        std::fs::write(&path, b"nope").unwrap();
+        assert!(load(&dir).is_err());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn overwrite_replaces_atomically() {
+        let dir = tmp_dir("replace");
+        let mut state = sample_state();
+        write(&dir, 1, 5, &state).unwrap();
+        state.accepted = 99;
+        state.tail.push(1, 5_000.0, 5_100.0).unwrap();
+        write(&dir, 2, 0, &state).unwrap();
+        let snap = load(&dir).unwrap().unwrap();
+        assert_eq!((snap.gen, snap.covered), (2, 0));
+        assert_eq!(snap.state.accepted, 99);
+        assert_eq!(snap.state.tail.n_events(), 8);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

@@ -1,0 +1,658 @@
+//! Append-only per-track write-ahead log: length-prefixed, checksummed
+//! binary records for everything the advisor must not lose on a crash —
+//! ingested outages, windowed rate re-fits, served recommendations, and
+//! retention evictions.
+//!
+//! ## Frame format
+//!
+//! ```text
+//! file   := magic = b"MCKWAL1\n" , frame*
+//! frame  := len:u32le , body , fnv1a_64(body):u64le
+//! body   := kind:u8 , payload            (len = |body|)
+//! ```
+//!
+//! All integers are little-endian; floats travel as `f64::to_bits`, so a
+//! replayed value is **bit-identical** to the one written — which is what
+//! lets the recovery tests pin replayed `TraceTail` state to the pre-crash
+//! in-memory state exactly, and lets the restarted daemon re-serve
+//! recommendations pinned to the offline oracle.
+//!
+//! ## Torn tails
+//!
+//! A crash mid-append leaves a torn final frame. [`scan`] walks frames
+//! until the first one that is incomplete, fails its checksum, or fails to
+//! decode, and reports the byte offset of the last valid frame boundary;
+//! [`Wal::open`] truncates the file there and resumes appending. A torn
+//! tail therefore costs at most the record being written — never a panic,
+//! never earlier records (fuzzed at every byte offset in the tests below
+//! and in `rust/tests/store_recovery.rs`).
+
+use std::fs::{File, OpenOptions};
+use std::io::Write as _;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, ensure, Context, Result};
+
+use crate::config::SystemParams;
+use crate::markov::{BuildOptions, ModelInputs};
+use crate::policies::ReschedulingPolicy;
+use crate::search::SearchConfig;
+use crate::util::fnv::fnv1a_64;
+
+/// WAL file magic (8 bytes).
+pub const WAL_MAGIC: [u8; 8] = *b"MCKWAL1\n";
+
+/// Upper bound on one frame body — far above any real record (a
+/// recommendation for N = 4096 is ~100 KiB); a length beyond this is
+/// treated as a torn/corrupt tail, not an allocation request.
+const MAX_BODY_BYTES: usize = 4 << 20;
+
+const KIND_CREATE: u8 = 1;
+const KIND_OUTAGE: u8 = 2;
+const KIND_REFIT: u8 = 3;
+const KIND_RECOMMENDATION: u8 = 4;
+const KIND_EVICT: u8 = 5;
+
+/// Little-endian byte-stream writer for record payloads.
+#[derive(Default)]
+pub(crate) struct ByteWriter {
+    buf: Vec<u8>,
+}
+
+impl ByteWriter {
+    pub(crate) fn new() -> ByteWriter {
+        ByteWriter { buf: Vec::new() }
+    }
+
+    pub(crate) fn u8(&mut self, x: u8) {
+        self.buf.push(x);
+    }
+
+    pub(crate) fn u64(&mut self, x: u64) {
+        self.buf.extend_from_slice(&x.to_le_bytes());
+    }
+
+    pub(crate) fn f64(&mut self, x: f64) {
+        self.u64(x.to_bits());
+    }
+
+    pub(crate) fn into_bytes(self) -> Vec<u8> {
+        self.buf
+    }
+}
+
+/// Bounds-checked reader over a payload slice.
+pub(crate) struct ByteReader<'a> {
+    b: &'a [u8],
+    i: usize,
+}
+
+impl<'a> ByteReader<'a> {
+    pub(crate) fn new(b: &'a [u8]) -> ByteReader<'a> {
+        ByteReader { b, i: 0 }
+    }
+
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        ensure!(self.i + n <= self.b.len(), "record payload truncated");
+        let s = &self.b[self.i..self.i + n];
+        self.i += n;
+        Ok(s)
+    }
+
+    pub(crate) fn u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+
+    pub(crate) fn u64(&mut self) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    pub(crate) fn f64(&mut self) -> Result<f64> {
+        Ok(f64::from_bits(self.u64()?))
+    }
+
+    pub(crate) fn done(&self) -> Result<()> {
+        ensure!(self.i == self.b.len(), "{} trailing payload bytes", self.b.len() - self.i);
+        Ok(())
+    }
+}
+
+/// A tracked recommendation, serialized completely enough to re-register
+/// it after a restart: the rate-neutral identity and cache key, the rates
+/// it was computed with (the drift reference), and the full model inputs +
+/// search shape needed to re-run the selection when drift resumes.
+#[derive(Debug, Clone)]
+pub struct SpecRecord {
+    /// Rate-independent spec identity (`Advisor::spec_identity`); replay
+    /// upserts by this, so re-registrations update in place.
+    pub identity: u64,
+    /// Cache key the recommendation was served under.
+    pub key: u64,
+    /// `(λ, θ)` the recommendation was computed with.
+    pub rates_used: (f64, f64),
+    /// `true` when this record is a completed background re-selection
+    /// (replay bumps the track's `reselects` counter).
+    pub refresh: bool,
+    pub inputs: ModelInputs,
+    pub cfg: SearchConfig,
+}
+
+impl SpecRecord {
+    pub(crate) fn encode_into(&self, w: &mut ByteWriter) {
+        w.u64(self.identity);
+        w.u64(self.key);
+        w.f64(self.rates_used.0);
+        w.f64(self.rates_used.1);
+        w.u8(self.refresh as u8);
+        let n = self.inputs.system.n;
+        w.u64(n as u64);
+        w.f64(self.inputs.system.lambda);
+        w.f64(self.inputs.system.theta);
+        for a in 1..=n {
+            w.f64(self.inputs.checkpoint_cost(a));
+            w.f64(self.inputs.work_per_sec(a));
+            w.f64(self.inputs.mean_recovery_into(a));
+        }
+        for &rp in self.inputs.policy.vector() {
+            w.u64(rp as u64);
+        }
+        w.f64(self.cfg.i_min);
+        w.f64(self.cfg.i_max);
+        w.u64(self.cfg.refine_steps as u64);
+        w.f64(self.cfg.band);
+        match self.cfg.build.thres {
+            Some(t) => {
+                w.u8(1);
+                w.f64(t);
+            }
+            None => w.u8(0),
+        }
+        w.u8(self.cfg.build.exact_probes as u8);
+        w.f64(self.cfg.build.stationary.tol);
+        w.u64(self.cfg.build.stationary.max_iters as u64);
+        w.f64(self.cfg.build.stationary.damping);
+    }
+
+    pub(crate) fn decode_from(r: &mut ByteReader) -> Result<SpecRecord> {
+        let identity = r.u64()?;
+        let key = r.u64()?;
+        let rates_used = (r.f64()?, r.f64()?);
+        let refresh = r.u8()? != 0;
+        let n = r.u64()? as usize;
+        ensure!(n >= 1 && n <= 1 << 20, "implausible processor count {n}");
+        let system = SystemParams::new(n, r.f64()?, r.f64()?);
+        let mut ckpt = Vec::with_capacity(n);
+        let mut work = Vec::with_capacity(n);
+        let mut rec = Vec::with_capacity(n);
+        for _ in 0..n {
+            ckpt.push(r.f64()?);
+            work.push(r.f64()?);
+            rec.push(r.f64()?);
+        }
+        let mut rp = Vec::with_capacity(n);
+        for _ in 0..n {
+            rp.push(r.u64()? as usize);
+        }
+        let policy = ReschedulingPolicy::from_vector(rp).context("recommendation policy")?;
+        let inputs = ModelInputs::from_raw(system, ckpt, work, rec, policy)
+            .context("recommendation inputs")?;
+        let mut cfg = SearchConfig {
+            i_min: r.f64()?,
+            i_max: r.f64()?,
+            refine_steps: r.u64()? as usize,
+            band: r.f64()?,
+            build: BuildOptions::default(),
+        };
+        cfg.build.thres = match r.u8()? {
+            0 => None,
+            _ => Some(r.f64()?),
+        };
+        cfg.build.exact_probes = r.u8()? != 0;
+        cfg.build.stationary.tol = r.f64()?;
+        cfg.build.stationary.max_iters = r.u64()? as usize;
+        cfg.build.stationary.damping = r.f64()?;
+        cfg.validate().context("recommendation search config")?;
+        Ok(SpecRecord { identity, key, rates_used, refresh, inputs, cfg })
+    }
+}
+
+/// One durable record. Everything the track's in-memory state is built
+/// from; all variants replay idempotently (an exact-duplicate outage
+/// merges, a re-fit overwrites, a recommendation upserts, an eviction of
+/// an already-evicted window removes nothing), so a snapshot/WAL overlap
+/// after a crash mid-compaction cannot corrupt state.
+#[derive(Debug, Clone)]
+pub enum WalRecord {
+    /// First record of every WAL generation: the track's processor count.
+    Create { n_procs: usize },
+    /// One validated completed outage, exactly as accepted by ingest.
+    Outage { proc: usize, fail: f64, repair: f64 },
+    /// A windowed MTTF/MTTR re-fit that updated the track's rates.
+    Refit { lambda: f64, theta: f64 },
+    /// A recommendation registered or refreshed under the track.
+    Recommendation(Box<SpecRecord>),
+    /// A retention eviction: every outage with `repair <= cutoff` left
+    /// the tail (replay re-applies the same deterministic eviction).
+    Evict { cutoff: f64 },
+}
+
+/// Encode one record as a complete frame (length prefix + checksum).
+pub fn encode_frame(rec: &WalRecord) -> Vec<u8> {
+    let mut w = ByteWriter::new();
+    match rec {
+        WalRecord::Create { n_procs } => {
+            w.u8(KIND_CREATE);
+            w.u64(*n_procs as u64);
+        }
+        WalRecord::Outage { proc, fail, repair } => {
+            w.u8(KIND_OUTAGE);
+            w.u64(*proc as u64);
+            w.f64(*fail);
+            w.f64(*repair);
+        }
+        WalRecord::Refit { lambda, theta } => {
+            w.u8(KIND_REFIT);
+            w.f64(*lambda);
+            w.f64(*theta);
+        }
+        WalRecord::Recommendation(spec) => {
+            w.u8(KIND_RECOMMENDATION);
+            spec.encode_into(&mut w);
+        }
+        WalRecord::Evict { cutoff } => {
+            w.u8(KIND_EVICT);
+            w.f64(*cutoff);
+        }
+    }
+    let body = w.into_bytes();
+    let mut frame = Vec::with_capacity(4 + body.len() + 8);
+    frame.extend_from_slice(&(body.len() as u32).to_le_bytes());
+    frame.extend_from_slice(&body);
+    frame.extend_from_slice(&fnv1a_64(&body).to_le_bytes());
+    frame
+}
+
+/// Decode a frame body (after the checksum already verified).
+fn decode_body(body: &[u8]) -> Result<WalRecord> {
+    let mut r = ByteReader::new(body);
+    let kind = r.u8()?;
+    let rec = match kind {
+        KIND_CREATE => {
+            let n = r.u64()? as usize;
+            ensure!(n >= 1 && n <= 1 << 20, "implausible processor count {n}");
+            WalRecord::Create { n_procs: n }
+        }
+        KIND_OUTAGE => WalRecord::Outage { proc: r.u64()? as usize, fail: r.f64()?, repair: r.f64()? },
+        KIND_REFIT => WalRecord::Refit { lambda: r.f64()?, theta: r.f64()? },
+        KIND_RECOMMENDATION => WalRecord::Recommendation(Box::new(SpecRecord::decode_from(&mut r)?)),
+        KIND_EVICT => WalRecord::Evict { cutoff: r.f64()? },
+        other => bail!("unknown record kind {other}"),
+    };
+    r.done()?;
+    Ok(rec)
+}
+
+/// Result of a read-only WAL scan.
+pub struct WalScan {
+    pub records: Vec<WalRecord>,
+    /// Byte offset of the last valid frame boundary (>= magic length).
+    pub valid_len: u64,
+    pub file_len: u64,
+    /// Why the scan stopped early, if it did.
+    pub error: Option<String>,
+}
+
+impl WalScan {
+    /// `true` when bytes beyond the last valid frame exist (torn tail or
+    /// mid-file corruption — the scan cannot tell them apart and treats
+    /// both as "everything from here on is lost").
+    pub fn torn(&self) -> bool {
+        self.valid_len < self.file_len
+    }
+}
+
+/// Read-only scan of a WAL file: walk frames until the first invalid one,
+/// never panicking on truncated or corrupt input. Errors only on I/O
+/// failure or a missing/forged magic header (not a WAL file at all).
+pub fn scan(path: &Path) -> Result<WalScan> {
+    let bytes = std::fs::read(path).with_context(|| format!("reading {}", path.display()))?;
+    if bytes.len() < WAL_MAGIC.len() {
+        // A crash between File::create and the magic write (track
+        // creation or a compaction generation roll) leaves a sub-magic
+        // file: a torn header, not a foreign file — recovery recreates
+        // it. Anything that is not a magic prefix IS foreign.
+        ensure!(
+            WAL_MAGIC.starts_with(&bytes),
+            "{} is not a WAL file (bad magic)",
+            path.display()
+        );
+        return Ok(WalScan {
+            records: Vec::new(),
+            valid_len: 0,
+            file_len: bytes.len() as u64,
+            error: Some("torn magic header".to_string()),
+        });
+    }
+    ensure!(
+        bytes[..WAL_MAGIC.len()] == WAL_MAGIC,
+        "{} is not a WAL file (bad magic)",
+        path.display()
+    );
+    let mut records = Vec::new();
+    let mut i = WAL_MAGIC.len();
+    let mut error = None;
+    while i < bytes.len() {
+        let Some(len_bytes) = bytes.get(i..i + 4) else { break };
+        let len = u32::from_le_bytes(len_bytes.try_into().unwrap()) as usize;
+        if len == 0 || len > MAX_BODY_BYTES {
+            error = Some(format!("frame at {i} declares {len} bytes"));
+            break;
+        }
+        let Some(body) = bytes.get(i + 4..i + 4 + len) else { break };
+        let Some(sum_bytes) = bytes.get(i + 4 + len..i + 12 + len) else { break };
+        let stored = u64::from_le_bytes(sum_bytes.try_into().unwrap());
+        if fnv1a_64(body) != stored {
+            error = Some(format!("checksum mismatch at {i}"));
+            break;
+        }
+        match decode_body(body) {
+            Ok(rec) => records.push(rec),
+            Err(e) => {
+                error = Some(format!("undecodable record at {i}: {e:#}"));
+                break;
+            }
+        }
+        i += 12 + len;
+    }
+    Ok(WalScan { records, valid_len: i as u64, file_len: bytes.len() as u64, error })
+}
+
+/// An open, appendable WAL.
+pub struct Wal {
+    file: File,
+    path: PathBuf,
+    bytes: u64,
+    records: u64,
+}
+
+impl Wal {
+    /// Create a fresh WAL (truncating any existing file) with just the
+    /// magic header.
+    pub fn create(path: &Path) -> Result<Wal> {
+        let mut file = File::create(path).with_context(|| format!("creating {}", path.display()))?;
+        file.write_all(&WAL_MAGIC)?;
+        file.flush()?;
+        Ok(Wal { file, path: path.to_path_buf(), bytes: WAL_MAGIC.len() as u64, records: 0 })
+    }
+
+    /// Open an existing WAL for append, replaying it first: returns the
+    /// valid records and truncates a torn tail in place (crash recovery).
+    /// A file torn inside the magic header (crash during creation) is
+    /// recreated empty rather than refused.
+    pub fn open(path: &Path) -> Result<(Wal, Vec<WalRecord>)> {
+        let s = scan(path)?;
+        if s.valid_len < WAL_MAGIC.len() as u64 {
+            let wal = Self::create(path)?;
+            return Ok((wal, Vec::new()));
+        }
+        if s.torn() {
+            let f = OpenOptions::new()
+                .write(true)
+                .open(path)
+                .with_context(|| format!("truncating torn tail of {}", path.display()))?;
+            f.set_len(s.valid_len)?;
+            f.sync_all()?;
+        }
+        let file = OpenOptions::new()
+            .append(true)
+            .open(path)
+            .with_context(|| format!("opening {} for append", path.display()))?;
+        let wal = Wal {
+            file,
+            path: path.to_path_buf(),
+            bytes: s.valid_len,
+            records: s.records.len() as u64,
+        };
+        Ok((wal, s.records))
+    }
+
+    pub fn append(&mut self, rec: &WalRecord) -> Result<()> {
+        let frame = encode_frame(rec);
+        self.file
+            .write_all(&frame)
+            .with_context(|| format!("appending to {}", self.path.display()))?;
+        self.bytes += frame.len() as u64;
+        self.records += 1;
+        Ok(())
+    }
+
+    /// Push buffered bytes to the OS (called once per mutation batch).
+    pub fn flush(&mut self) -> Result<()> {
+        Ok(self.file.flush()?)
+    }
+
+    /// Force bytes to stable storage (compaction boundaries).
+    pub fn sync(&mut self) -> Result<()> {
+        self.file.flush()?;
+        Ok(self.file.sync_data()?)
+    }
+
+    pub fn bytes(&self) -> u64 {
+        self.bytes
+    }
+
+    /// Records in this generation (including its `Create` header record).
+    pub fn records(&self) -> u64 {
+        self.records
+    }
+
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp_path(tag: &str) -> PathBuf {
+        static SEQ: std::sync::atomic::AtomicU64 = std::sync::atomic::AtomicU64::new(0);
+        let n = SEQ.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+        std::env::temp_dir().join(format!(
+            "mckpt-wal-{tag}-{}-{n}.log",
+            std::process::id()
+        ))
+    }
+
+    fn sample_spec(refresh: bool) -> SpecRecord {
+        let system = SystemParams::from_mttf_mttr(5, 2.0, 45.0);
+        let inputs = ModelInputs::from_raw(
+            system,
+            vec![60.0, 61.0, 62.0, 63.0, 64.0],
+            (1..=5).map(|a| (a as f64).powf(0.85)).collect(),
+            vec![15.0; 5],
+            ReschedulingPolicy::greedy(5),
+        )
+        .unwrap();
+        SpecRecord {
+            identity: 0xfeed_beef,
+            key: 0x1234_5678_9abc_def0,
+            rates_used: (system.lambda, system.theta),
+            refresh,
+            inputs,
+            cfg: SearchConfig { refine_steps: 3, ..Default::default() },
+        }
+    }
+
+    fn sample_records() -> Vec<WalRecord> {
+        vec![
+            WalRecord::Create { n_procs: 5 },
+            WalRecord::Outage { proc: 2, fail: 100.5, repair: 2_520.25 },
+            WalRecord::Refit { lambda: 5.787e-6, theta: 4.1e-4 },
+            WalRecord::Recommendation(Box::new(sample_spec(false))),
+            WalRecord::Evict { cutoff: 86_400.0 },
+            WalRecord::Outage { proc: 0, fail: 90_000.125, repair: 91_000.0 },
+        ]
+    }
+
+    fn assert_records_eq(got: &[WalRecord], want: &[WalRecord]) {
+        assert_eq!(got.len(), want.len(), "record count");
+        for (i, (g, w)) in got.iter().zip(want).enumerate() {
+            match (g, w) {
+                (WalRecord::Create { n_procs: a }, WalRecord::Create { n_procs: b }) => {
+                    assert_eq!(a, b, "record {i}")
+                }
+                (
+                    WalRecord::Outage { proc: p1, fail: f1, repair: r1 },
+                    WalRecord::Outage { proc: p2, fail: f2, repair: r2 },
+                ) => {
+                    assert_eq!(p1, p2, "record {i}");
+                    assert_eq!(f1.to_bits(), f2.to_bits(), "record {i} fail bits");
+                    assert_eq!(r1.to_bits(), r2.to_bits(), "record {i} repair bits");
+                }
+                (
+                    WalRecord::Refit { lambda: l1, theta: t1 },
+                    WalRecord::Refit { lambda: l2, theta: t2 },
+                ) => {
+                    assert_eq!(l1.to_bits(), l2.to_bits(), "record {i}");
+                    assert_eq!(t1.to_bits(), t2.to_bits(), "record {i}");
+                }
+                (WalRecord::Recommendation(a), WalRecord::Recommendation(b)) => {
+                    assert_eq!(a.identity, b.identity, "record {i}");
+                    assert_eq!(a.key, b.key, "record {i}");
+                    assert_eq!(a.refresh, b.refresh, "record {i}");
+                    assert_eq!(a.rates_used.0.to_bits(), b.rates_used.0.to_bits());
+                    assert_eq!(a.inputs.system.n, b.inputs.system.n);
+                    assert_eq!(a.inputs.system.lambda.to_bits(), b.inputs.system.lambda.to_bits());
+                    for x in 1..=a.inputs.system.n {
+                        assert_eq!(
+                            a.inputs.checkpoint_cost(x).to_bits(),
+                            b.inputs.checkpoint_cost(x).to_bits()
+                        );
+                        assert_eq!(
+                            a.inputs.work_per_sec(x).to_bits(),
+                            b.inputs.work_per_sec(x).to_bits()
+                        );
+                        assert_eq!(
+                            a.inputs.mean_recovery_into(x).to_bits(),
+                            b.inputs.mean_recovery_into(x).to_bits()
+                        );
+                    }
+                    assert_eq!(a.inputs.policy.vector(), b.inputs.policy.vector());
+                    assert_eq!(a.cfg.refine_steps, b.cfg.refine_steps);
+                    assert_eq!(a.cfg.i_min.to_bits(), b.cfg.i_min.to_bits());
+                    assert_eq!(a.cfg.build.exact_probes, b.cfg.build.exact_probes);
+                }
+                (WalRecord::Evict { cutoff: a }, WalRecord::Evict { cutoff: b }) => {
+                    assert_eq!(a.to_bits(), b.to_bits(), "record {i}")
+                }
+                _ => panic!("record {i}: kind mismatch {g:?} vs {w:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn roundtrip_all_record_kinds() {
+        let path = tmp_path("roundtrip");
+        let want = sample_records();
+        {
+            let mut wal = Wal::create(&path).unwrap();
+            for rec in &want {
+                wal.append(rec).unwrap();
+            }
+            wal.flush().unwrap();
+            assert_eq!(wal.records(), want.len() as u64);
+        }
+        let (wal, got) = Wal::open(&path).unwrap();
+        assert_eq!(wal.records(), want.len() as u64);
+        assert_records_eq(&got, &want);
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn fuzz_truncation_at_every_byte_offset() {
+        // Recovery must never panic, always yield a prefix of the written
+        // records, and leave the file appendable — at EVERY truncation
+        // point, not just frame boundaries.
+        let path = tmp_path("fuzz-src");
+        let want = sample_records();
+        {
+            let mut wal = Wal::create(&path).unwrap();
+            for rec in &want {
+                wal.append(rec).unwrap();
+            }
+            wal.flush().unwrap();
+        }
+        let bytes = std::fs::read(&path).unwrap();
+        let cut_path = tmp_path("fuzz-cut");
+        // Frame boundaries, to map "cut offset -> surviving record count".
+        let mut boundaries = vec![WAL_MAGIC.len()];
+        for rec in &want {
+            boundaries.push(boundaries.last().unwrap() + encode_frame(rec).len());
+        }
+        assert_eq!(*boundaries.last().unwrap(), bytes.len());
+
+        // From 0: cuts inside the magic header (crash during creation)
+        // must recover to an empty WAL, not refuse to boot.
+        for cut in 0..=bytes.len() {
+            std::fs::write(&cut_path, &bytes[..cut]).unwrap();
+            let (mut wal, got) = Wal::open(&cut_path).unwrap();
+            let survivors = boundaries.iter().filter(|&&b| b <= cut).count().saturating_sub(1);
+            assert_eq!(got.len(), survivors, "cut at {cut}");
+            assert_records_eq(&got, &want[..survivors]);
+            // The torn tail is gone: the file ends at a frame boundary and
+            // stays appendable.
+            assert_eq!(wal.bytes(), boundaries[survivors] as u64, "cut at {cut}");
+            wal.append(&WalRecord::Refit { lambda: 1e-6, theta: 1e-3 }).unwrap();
+            wal.flush().unwrap();
+            let (_, after) = Wal::open(&cut_path).unwrap();
+            assert_eq!(after.len(), survivors + 1, "appended record lost at cut {cut}");
+        }
+        let _ = std::fs::remove_file(&path);
+        let _ = std::fs::remove_file(&cut_path);
+    }
+
+    #[test]
+    fn corrupt_byte_stops_scan_at_damaged_frame() {
+        let path = tmp_path("corrupt");
+        let want = sample_records();
+        {
+            let mut wal = Wal::create(&path).unwrap();
+            for rec in &want {
+                wal.append(rec).unwrap();
+            }
+            wal.flush().unwrap();
+        }
+        let mut bytes = std::fs::read(&path).unwrap();
+        // Flip a byte inside the second frame's body.
+        let first_len = encode_frame(&want[0]).len();
+        let idx = WAL_MAGIC.len() + first_len + 6;
+        bytes[idx] ^= 0xff;
+        std::fs::write(&path, &bytes).unwrap();
+        let s = scan(&path).unwrap();
+        assert_eq!(s.records.len(), 1, "scan must stop at the damaged frame");
+        assert!(s.torn());
+        assert!(s.error.as_deref().unwrap_or("").contains("checksum"), "{:?}", s.error);
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn rejects_non_wal_files() {
+        let path = tmp_path("notwal");
+        std::fs::write(&path, b"hello world, definitely not a WAL").unwrap();
+        assert!(scan(&path).is_err());
+        assert!(Wal::open(&path).is_err());
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn spec_record_validation_rejects_garbage() {
+        // A record that checksums fine but decodes to an invalid search
+        // config must be rejected (scan stops there).
+        let mut spec = sample_spec(true);
+        spec.cfg.i_min = -5.0;
+        let frame = encode_frame(&WalRecord::Recommendation(Box::new(spec)));
+        let body = &frame[4..frame.len() - 8];
+        assert!(decode_body(body).is_err());
+    }
+}

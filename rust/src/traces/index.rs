@@ -68,6 +68,24 @@ impl TraceIndex {
                 events.push((r, p as u32, true));
             }
         }
+        Self::from_events(n, events)
+    }
+
+    /// Compile from per-processor outage lists directly (the
+    /// [`TraceTail`] rebuild path after a retention eviction — same
+    /// result as `new` over the equivalent validated [`FailureTrace`]).
+    fn from_outage_lists(n: usize, outages: &[Vec<(f64, f64)>]) -> TraceIndex {
+        let mut events: Vec<(f64, u32, bool)> = Vec::new();
+        for (p, list) in outages.iter().enumerate() {
+            for &(f, r) in list {
+                events.push((f, p as u32, false));
+                events.push((r, p as u32, true));
+            }
+        }
+        Self::from_events(n, events)
+    }
+
+    fn from_events(n: usize, mut events: Vec<(f64, u32, bool)>) -> TraceIndex {
         // Total order (see the module-level ordering contract): repairs
         // sort before failures at equal times — when one outage ends
         // exactly where the next begins, applying repair-then-fail leaves
@@ -176,6 +194,11 @@ impl TraceIndex {
     /// Time of the last (latest) event, if any.
     pub fn last_event_time(&self) -> Option<f64> {
         self.times.last().copied()
+    }
+
+    /// Time of the first (earliest) event, if any.
+    pub fn first_event_time(&self) -> Option<f64> {
+        self.times.first().copied()
     }
 
     /// Events with time `>= t0` in timeline order, as
@@ -297,9 +320,45 @@ impl TraceTail {
         self.index.last_event_time()
     }
 
+    pub fn first_event_time(&self) -> Option<f64> {
+        self.index.first_event_time()
+    }
+
     /// The incrementally maintained merged timeline.
     pub fn index(&self) -> &TraceIndex {
         &self.index
+    }
+
+    /// Sorted, non-overlapping outage intervals of processor `p` — the
+    /// durable store serializes these (and the snapshot format round-trips
+    /// them bit for bit through `to_bits`).
+    pub fn outages(&self, p: usize) -> &[(f64, f64)] {
+        &self.outages[p]
+    }
+
+    /// Drop every outage whose repair completed at or before `cutoff` and
+    /// rebuild the merged timeline from the survivors. Returns the number
+    /// of **events** removed (two per outage). The advisor's retention cap
+    /// calls this with window-aligned cutoffs so eviction rides the
+    /// [`super::ShardedIndex`] shard boundaries; an outage spanning the
+    /// cutoff (failed before, repaired after) survives until a later
+    /// cutoff passes its repair.
+    pub fn evict_before(&mut self, cutoff: f64) -> usize {
+        let before = self.index.n_events();
+        let mut changed = false;
+        for list in &mut self.outages {
+            // Outages are sorted by failure time and never overlap, so
+            // repair times are ascending too: the evictees are a prefix.
+            let evict = list.partition_point(|&(_, r)| r <= cutoff);
+            if evict > 0 {
+                list.drain(..evict);
+                changed = true;
+            }
+        }
+        if changed {
+            self.index = TraceIndex::from_outage_lists(self.n_procs, &self.outages);
+        }
+        before - self.index.n_events()
     }
 
     /// Ingest one completed outage. Returns `Ok(true)` when the outage was
@@ -472,6 +531,51 @@ impl<'a> TraceCursor<'a> {
         self.advance(t);
         debug_assert_eq!(self.n_up, 0, "total-outage repair query while processors are up");
         self.index.next_repair_after_total_outage(t)
+    }
+}
+
+/// The forward-only query surface [`crate::simulator::Simulator::run`]
+/// consumes — implemented by [`TraceCursor`] (monolithic index) and
+/// [`super::shard::ShardedCursor`] (time-window-sharded index), so a
+/// segment evaluation runs unchanged on either substrate. Same contract
+/// as [`TraceCursor`]: query times must be non-decreasing per cursor.
+pub trait EventCursor {
+    fn up_count(&mut self, t: f64) -> usize;
+    fn first_up(&mut self, t: f64, a: usize, out: &mut Vec<usize>);
+    fn all_up(&mut self, t: f64, out: &mut Vec<usize>);
+    fn fail_counts(&mut self, t: f64) -> &[usize];
+    fn next_fail_after(&mut self, p: usize, t: f64) -> Option<f64>;
+    fn next_failure_among(&mut self, procs: &[usize], t: f64) -> Option<(f64, usize)>;
+    fn next_repair_total_outage(&mut self, t: f64) -> Option<f64>;
+}
+
+impl EventCursor for TraceCursor<'_> {
+    fn up_count(&mut self, t: f64) -> usize {
+        TraceCursor::up_count(self, t)
+    }
+
+    fn first_up(&mut self, t: f64, a: usize, out: &mut Vec<usize>) {
+        TraceCursor::first_up(self, t, a, out);
+    }
+
+    fn all_up(&mut self, t: f64, out: &mut Vec<usize>) {
+        TraceCursor::all_up(self, t, out);
+    }
+
+    fn fail_counts(&mut self, t: f64) -> &[usize] {
+        TraceCursor::fail_counts(self, t)
+    }
+
+    fn next_fail_after(&mut self, p: usize, t: f64) -> Option<f64> {
+        TraceCursor::next_fail_after(self, p, t)
+    }
+
+    fn next_failure_among(&mut self, procs: &[usize], t: f64) -> Option<(f64, usize)> {
+        TraceCursor::next_failure_among(self, procs, t)
+    }
+
+    fn next_repair_total_outage(&mut self, t: f64) -> Option<f64> {
+        TraceCursor::next_repair_total_outage(self, t)
     }
 }
 
@@ -676,6 +780,37 @@ mod tests {
         // Snapshot round-trips through the validated FailureTrace.
         let trace = tail.to_trace(100.0).unwrap();
         assert_eq!(trace.outages(0), &[(10.0, 20.0), (20.0, 30.0)]);
+    }
+
+    #[test]
+    fn tail_evict_before_drops_whole_outages_and_rebuilds() {
+        let mut tail = TraceTail::new(3).unwrap();
+        tail.push(0, 10.0, 20.0).unwrap();
+        tail.push(1, 15.0, 120.0).unwrap(); // spans the cutoff: survives
+        tail.push(0, 40.0, 60.0).unwrap();
+        tail.push(2, 200.0, 210.0).unwrap();
+        assert_eq!(tail.first_event_time(), Some(10.0));
+
+        let removed = tail.evict_before(100.0);
+        assert_eq!(removed, 4, "two whole outages = four events");
+        assert_eq!(tail.n_events(), 4);
+        assert_eq!(tail.outages(0), &[] as &[(f64, f64)]);
+        assert_eq!(tail.outages(1), &[(15.0, 120.0)]);
+        assert_eq!(tail.outages(2), &[(200.0, 210.0)]);
+        // The rebuilt index equals a batch compile of the survivors.
+        let trace =
+            FailureTrace::new(vec![vec![], vec![(15.0, 120.0)], vec![(200.0, 210.0)]], 300.0)
+                .unwrap();
+        let batch = TraceIndex::new(&trace);
+        let got: Vec<(f64, usize, bool)> = tail.index().events_since(0.0).collect();
+        let want: Vec<(f64, usize, bool)> = batch.events_since(0.0).collect();
+        assert_eq!(got, want);
+        assert_eq!(tail.first_event_time(), Some(15.0));
+        // Nothing below the cutoff: a repeat is a no-op.
+        assert_eq!(tail.evict_before(100.0), 0);
+        // New pushes keep working against the rebuilt index.
+        tail.push(0, 300.0, 310.0).unwrap();
+        assert_eq!(tail.n_events(), 6);
     }
 
     #[test]

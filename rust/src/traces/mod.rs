@@ -15,10 +15,12 @@
 pub mod distributions;
 pub mod index;
 pub mod parse;
+pub mod shard;
 pub mod stats;
 pub mod synth;
 
-pub use index::{TraceCursor, TraceIndex, TraceTail};
+pub use index::{EventCursor, TraceCursor, TraceIndex, TraceTail};
+pub use shard::{ShardedCursor, ShardedIndex};
 
 use anyhow::{bail, Result};
 

@@ -1,0 +1,655 @@
+//! Time-window-sharded failure-trace index (ROADMAP "Trace sharding").
+//!
+//! [`super::TraceIndex`] compiles the whole merged event timeline into one
+//! contiguous sorted array — fine for 90-day synthetic traces, but a
+//! multi-year LANL-scale trace holds millions of events, every segment
+//! evaluation binary-searches the full span, and the O(E log E) compile is
+//! serial. [`ShardedIndex`] partitions the timeline by a configurable
+//! **time window**: event `e` lands in shard `⌊t_e / window⌋`, empty
+//! windows are skipped, and each shard is sorted and laid out
+//! independently — in parallel on [`crate::util::pool`], which is where
+//! the compile-time win comes from (the per-shard sorts dominate; only a
+//! cheap O(E) stitch pass that records each shard's entry state runs
+//! serially).
+//!
+//! ## Equivalence contract
+//!
+//! The shard comparator is the monolithic index's total order
+//! `(time, repair-before-failure, processor)`, and equal times always land
+//! in the same window (same floor quotient), so concatenating the shards
+//! reproduces the monolithic timeline **element for element** — pinned by
+//! the property tests below and the `engine_equivalence` suite: the
+//! availability step function, cursor queries and whole simulator segment
+//! evaluations ([`crate::simulator::Simulator::run_sharded`]) are equal
+//! field-for-field to the monolithic path across random window widths,
+//! including degenerate one-event shards.
+//!
+//! ## Locality
+//!
+//! Each shard snapshots its **entry state** (functional count and the set
+//! of processors down as the window opens). [`ShardedCursor`] jumps to the
+//! shard containing a query time by restoring that snapshot instead of
+//! replaying every earlier event, so a segment evaluation touches only the
+//! shards its `[start, start+dur]` span overlaps — see
+//! [`ShardedCursor::shards_entered`].
+
+use anyhow::{ensure, Result};
+
+use super::index::EventCursor;
+use super::FailureTrace;
+use crate::util::pool;
+
+/// Window id of an event or query time (times are validated non-negative).
+fn wid(t: f64, window: f64) -> u64 {
+    let w = (t / window).floor();
+    if w <= 0.0 {
+        0
+    } else if w >= u64::MAX as f64 {
+        u64::MAX
+    } else {
+        w as u64
+    }
+}
+
+/// One non-empty time window of the partitioned timeline.
+#[derive(Debug, Clone)]
+struct Shard {
+    /// Window index: events `e` with `⌊t_e / window⌋ == wid`.
+    wid: u64,
+    /// Event arrays, sorted by the monolithic total order.
+    times: Vec<f64>,
+    procs: Vec<u32>,
+    repair: Vec<bool>,
+    /// Within-shard running net delta (+1 repair, −1 failure) after each
+    /// event; absolute counts are `entry_count + delta_after[i]`.
+    delta_after: Vec<i32>,
+    /// Repair completion times in this shard, ascending.
+    repairs: Vec<f64>,
+    /// Functional-processor count entering the window.
+    entry_count: u32,
+    /// Processors down entering the window, ascending.
+    down_at_entry: Vec<u32>,
+}
+
+impl Shard {
+    fn count_after(&self, i: usize) -> usize {
+        (self.entry_count as i64 + self.delta_after[i] as i64) as usize
+    }
+
+    fn exit_count(&self) -> usize {
+        match self.delta_after.last() {
+            Some(&d) => (self.entry_count as i64 + d as i64) as usize,
+            None => self.entry_count as usize,
+        }
+    }
+}
+
+/// Time-window-partitioned equivalent of [`super::TraceIndex`].
+#[derive(Debug, Clone)]
+pub struct ShardedIndex {
+    n_procs: usize,
+    window: f64,
+    n_events: usize,
+    shards: Vec<Shard>,
+}
+
+impl ShardedIndex {
+    /// Partition and compile `trace` with `window`-second shards, sorting
+    /// the shards in parallel on `workers` threads (1 = serial).
+    pub fn new(trace: &FailureTrace, window: f64, workers: usize) -> Result<ShardedIndex> {
+        ensure!(
+            window > 0.0 && window.is_finite(),
+            "shard window must be positive and finite, got {window}"
+        );
+        let n = trace.n_procs();
+
+        // Bucket events by window id; BTreeMap yields shards in order.
+        let mut buckets: std::collections::BTreeMap<u64, Vec<(f64, u32, bool)>> =
+            std::collections::BTreeMap::new();
+        let mut n_events = 0usize;
+        for p in 0..n {
+            for &(f, r) in trace.outages(p) {
+                buckets.entry(wid(f, window)).or_default().push((f, p as u32, false));
+                buckets.entry(wid(r, window)).or_default().push((r, p as u32, true));
+                n_events += 2;
+            }
+        }
+        let buckets: Vec<(u64, std::sync::Mutex<Vec<(f64, u32, bool)>>)> = buckets
+            .into_iter()
+            .map(|(w, events)| (w, std::sync::Mutex::new(events)))
+            .collect();
+
+        // Parallel phase: per-shard sort + array layout (the O(E log E)
+        // part). Entry snapshots need global order, so they wait for the
+        // serial stitch below.
+        let mut shards = pool::run_indexed(buckets.len(), workers.max(1), |i| {
+            let (w, cell) = &buckets[i];
+            let mut events = std::mem::take(&mut *cell.lock().unwrap());
+            // The monolithic comparator (see `TraceIndex::from_events`).
+            events.sort_unstable_by(|a, b| {
+                a.0.partial_cmp(&b.0).unwrap().then(b.2.cmp(&a.2)).then(a.1.cmp(&b.1))
+            });
+            let mut shard = Shard {
+                wid: *w,
+                times: Vec::with_capacity(events.len()),
+                procs: Vec::with_capacity(events.len()),
+                repair: Vec::with_capacity(events.len()),
+                delta_after: Vec::with_capacity(events.len()),
+                repairs: Vec::new(),
+                entry_count: 0,
+                down_at_entry: Vec::new(),
+            };
+            let mut delta = 0i32;
+            for &(t, p, rep) in &events {
+                delta += if rep { 1 } else { -1 };
+                shard.times.push(t);
+                shard.procs.push(p);
+                shard.repair.push(rep);
+                shard.delta_after.push(delta);
+                if rep {
+                    shard.repairs.push(t);
+                }
+            }
+            shard
+        });
+
+        // Serial stitch: walk shards in window order, recording each one's
+        // entry state before applying its events — O(E) bit flips.
+        let mut up = vec![true; n];
+        let mut count = n as u32;
+        for shard in &mut shards {
+            shard.entry_count = count;
+            shard.down_at_entry = up
+                .iter()
+                .enumerate()
+                .filter(|&(_, &is_up)| !is_up)
+                .map(|(p, _)| p as u32)
+                .collect();
+            for i in 0..shard.times.len() {
+                let p = shard.procs[i] as usize;
+                if shard.repair[i] {
+                    debug_assert!(!up[p], "repair of an up processor in a validated trace");
+                    up[p] = true;
+                    count += 1;
+                } else {
+                    debug_assert!(up[p], "failure of a down processor in a validated trace");
+                    up[p] = false;
+                    count -= 1;
+                }
+            }
+            debug_assert_eq!(shard.exit_count(), count as usize);
+        }
+
+        Ok(ShardedIndex { n_procs: n, window, n_events, shards })
+    }
+
+    pub fn n_procs(&self) -> usize {
+        self.n_procs
+    }
+
+    pub fn n_events(&self) -> usize {
+        self.n_events
+    }
+
+    pub fn window(&self) -> f64 {
+        self.window
+    }
+
+    /// Non-empty shards (empty windows are skipped entirely).
+    pub fn n_shards(&self) -> usize {
+        self.shards.len()
+    }
+
+    /// Functional-processor count at `t` — equals
+    /// [`super::TraceIndex::count_at`]; touches one shard.
+    pub fn count_at(&self, t: f64) -> usize {
+        let w = wid(t, self.window);
+        let i = self.shards.partition_point(|s| s.wid <= w);
+        if i == 0 {
+            return self.n_procs;
+        }
+        let s = &self.shards[i - 1];
+        if s.wid < w {
+            // Every event of this (and all earlier) shards precedes `t`.
+            return s.exit_count();
+        }
+        let j = s.times.partition_point(|&x| x <= t);
+        if j == 0 {
+            s.entry_count as usize
+        } else {
+            s.count_after(j - 1)
+        }
+    }
+
+    /// Earliest repair completion strictly after `t` — equals
+    /// [`super::TraceIndex::next_repair_after_total_outage`]; scans
+    /// forward from the shard containing `t`.
+    pub fn next_repair_after_total_outage(&self, t: f64) -> Option<f64> {
+        let w = wid(t, self.window);
+        let start = self.shards.partition_point(|s| s.wid < w);
+        for s in &self.shards[start..] {
+            if s.wid == w {
+                let j = s.repairs.partition_point(|&r| r <= t);
+                if let Some(&r) = s.repairs.get(j) {
+                    return Some(r);
+                }
+            } else if let Some(&r) = s.repairs.first() {
+                // A later window: every event there is strictly after `t`.
+                return Some(r);
+            }
+        }
+        None
+    }
+
+    pub fn last_event_time(&self) -> Option<f64> {
+        self.shards.last().and_then(|s| s.times.last().copied())
+    }
+
+    /// The merged timeline in monolithic order, as
+    /// `(time, processor, is_repair)` — the equivalence tests compare this
+    /// element-for-element against [`super::TraceIndex::events_since`].
+    pub fn events(&self) -> impl Iterator<Item = (f64, usize, bool)> + '_ {
+        self.shards.iter().flat_map(|s| {
+            (0..s.times.len()).map(move |i| (s.times[i], s.procs[i] as usize, s.repair[i]))
+        })
+    }
+
+    /// Start a forward-only cursor (same contract as
+    /// [`super::TraceIndex::cursor`]): `trace` must be the trace this
+    /// index was compiled from.
+    pub fn cursor<'a>(&'a self, trace: &'a FailureTrace) -> ShardedCursor<'a> {
+        debug_assert_eq!(trace.n_procs(), self.n_procs, "cursor trace/index mismatch");
+        let n = self.n_procs;
+        ShardedCursor {
+            index: self,
+            trace,
+            t: f64::NEG_INFINITY,
+            shard: 0,
+            ev: 0,
+            up: vec![true; n],
+            n_up: n,
+            next_fail: vec![0; n],
+            fail_before: vec![0; n],
+            shards_entered: 0,
+        }
+    }
+}
+
+/// Forward-only cursor over a [`ShardedIndex`] — the sharded counterpart
+/// of [`super::TraceCursor`], answering the identical queries with the
+/// identical values (pinned by the property tests). Instead of replaying
+/// every event from the trace start, a query that lands in a later window
+/// **jumps**: the target shard's entry snapshot restores the up/down set,
+/// and the per-processor cursors re-seed with one binary search each, so
+/// only shards overlapping the queried span are ever decoded.
+pub struct ShardedCursor<'a> {
+    index: &'a ShardedIndex,
+    trace: &'a FailureTrace,
+    t: f64,
+    /// Current shard position; events `0..ev` of it have been applied.
+    shard: usize,
+    ev: usize,
+    up: Vec<bool>,
+    n_up: usize,
+    /// Per processor: lower bound on the index of the first outage with
+    /// `fail > t` (advanced lazily, re-seeded on shard jumps).
+    next_fail: Vec<usize>,
+    /// Per processor: lower bound on the number of outages with
+    /// `fail < t` (idem).
+    fail_before: Vec<usize>,
+    /// Shards entered via jump or fall-through — the locality metric the
+    /// "segment evaluations touch only their shard" tests assert on.
+    shards_entered: usize,
+}
+
+impl<'a> ShardedCursor<'a> {
+    /// Shards this cursor has entered so far (jumped to or walked into).
+    pub fn shards_entered(&self) -> usize {
+        self.shards_entered
+    }
+
+    /// Restore shard `ti`'s entry snapshot and re-seed the per-processor
+    /// cursors at the query time `t` (exact by construction: the seeds are
+    /// `partition_point` lower bounds the lazy loops tighten).
+    fn enter_shard(&mut self, ti: usize, t: f64) {
+        let s = &self.index.shards[ti];
+        self.up.fill(true);
+        for &p in &s.down_at_entry {
+            self.up[p as usize] = false;
+        }
+        self.n_up = s.entry_count as usize;
+        for p in 0..self.index.n_procs {
+            let list = self.trace.outages(p);
+            let pos = list.partition_point(|&(f, _)| f < t);
+            self.next_fail[p] = pos;
+            self.fail_before[p] = pos;
+        }
+        self.shard = ti;
+        self.ev = 0;
+        self.shards_entered += 1;
+    }
+
+    fn advance(&mut self, t: f64) {
+        debug_assert!(t >= self.t, "cursor moved backwards: {} -> {t}", self.t);
+        let shards = &self.index.shards;
+        if !shards.is_empty() {
+            let w = wid(t, self.index.window);
+            // First shard the query must NOT touch.
+            let stop = shards.partition_point(|s| s.wid <= w);
+            // Jump over skipped shards straight to the one holding `t`
+            // (adjacent moves fall through below without a re-seed).
+            if stop > 0 && stop - 1 > self.shard {
+                self.enter_shard(stop - 1, t);
+            }
+            loop {
+                let Some(s) = shards.get(self.shard) else { break };
+                while self.ev < s.times.len() && s.times[self.ev] <= t {
+                    let p = s.procs[self.ev] as usize;
+                    if s.repair[self.ev] {
+                        if !self.up[p] {
+                            self.up[p] = true;
+                            self.n_up += 1;
+                        }
+                    } else if self.up[p] {
+                        self.up[p] = false;
+                        self.n_up -= 1;
+                    }
+                    self.ev += 1;
+                }
+                // Fall through to the next shard only once this one is
+                // exhausted and the next is still within the query window.
+                if self.ev < s.times.len() || self.shard + 1 >= stop {
+                    break;
+                }
+                self.shard += 1;
+                self.ev = 0;
+                self.shards_entered += 1;
+            }
+        }
+        self.t = t;
+    }
+
+    /// Number of functional processors at `t`.
+    pub fn up_count(&mut self, t: f64) -> usize {
+        self.advance(t);
+        self.n_up
+    }
+
+    /// The first `a` functional processors in id order, written into `out`.
+    pub fn first_up(&mut self, t: f64, a: usize, out: &mut Vec<usize>) {
+        self.advance(t);
+        out.clear();
+        for (p, &is_up) in self.up.iter().enumerate() {
+            if is_up {
+                out.push(p);
+                if out.len() == a {
+                    break;
+                }
+            }
+        }
+    }
+
+    /// All functional processors in id order, written into `out`.
+    pub fn all_up(&mut self, t: f64, out: &mut Vec<usize>) {
+        self.advance(t);
+        out.clear();
+        for (p, &is_up) in self.up.iter().enumerate() {
+            if is_up {
+                out.push(p);
+            }
+        }
+    }
+
+    /// Per-processor failure counts before `t` (strict).
+    pub fn fail_counts(&mut self, t: f64) -> &[usize] {
+        self.advance(t);
+        for p in 0..self.index.n_procs {
+            let list = self.trace.outages(p);
+            let c = &mut self.fail_before[p];
+            while *c < list.len() && list[*c].0 < t {
+                *c += 1;
+            }
+        }
+        &self.fail_before
+    }
+
+    /// Next failure of processor `p` strictly after `t`.
+    pub fn next_fail_after(&mut self, p: usize, t: f64) -> Option<f64> {
+        let list = self.trace.outages(p);
+        let c = &mut self.next_fail[p];
+        while *c < list.len() && list[*c].0 <= t {
+            *c += 1;
+        }
+        list.get(*c).map(|&(f, _)| f)
+    }
+
+    /// Earliest failure strictly after `t` among `procs`.
+    pub fn next_failure_among(&mut self, procs: &[usize], t: f64) -> Option<(f64, usize)> {
+        let mut best: Option<(f64, usize)> = None;
+        for &p in procs {
+            if let Some(f) = self.next_fail_after(p, t) {
+                if best.map_or(true, |(bf, _)| f < bf) {
+                    best = Some((f, p));
+                }
+            }
+        }
+        best
+    }
+
+    /// Earliest repair completion strictly after `t`; only valid during a
+    /// total outage (debug-asserted, as on [`super::TraceCursor`]).
+    pub fn next_repair_total_outage(&mut self, t: f64) -> Option<f64> {
+        self.advance(t);
+        debug_assert_eq!(self.n_up, 0, "total-outage repair query while processors are up");
+        self.index.next_repair_after_total_outage(t)
+    }
+}
+
+impl EventCursor for ShardedCursor<'_> {
+    fn up_count(&mut self, t: f64) -> usize {
+        ShardedCursor::up_count(self, t)
+    }
+
+    fn first_up(&mut self, t: f64, a: usize, out: &mut Vec<usize>) {
+        ShardedCursor::first_up(self, t, a, out);
+    }
+
+    fn all_up(&mut self, t: f64, out: &mut Vec<usize>) {
+        ShardedCursor::all_up(self, t, out);
+    }
+
+    fn fail_counts(&mut self, t: f64) -> &[usize] {
+        ShardedCursor::fail_counts(self, t)
+    }
+
+    fn next_fail_after(&mut self, p: usize, t: f64) -> Option<f64> {
+        ShardedCursor::next_fail_after(self, p, t)
+    }
+
+    fn next_failure_among(&mut self, procs: &[usize], t: f64) -> Option<(f64, usize)> {
+        ShardedCursor::next_failure_among(self, procs, t)
+    }
+
+    fn next_repair_total_outage(&mut self, t: f64) -> Option<f64> {
+        ShardedCursor::next_repair_total_outage(self, t)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::traces::synth::{generate, SynthSpec};
+    use crate::traces::TraceIndex;
+    use crate::util::prop::{check_bool, Gen};
+    use crate::util::rng::Rng;
+
+    const DAY: f64 = 86_400.0;
+
+    fn random_trace(seed: u64, n: usize, days: f64) -> FailureTrace {
+        let mut rng = Rng::new(seed);
+        generate(
+            &SynthSpec::exponential(n, 1.0 / (2.0 * DAY), 1.0 / 1_800.0, days * DAY),
+            &mut rng,
+        )
+    }
+
+    /// Core pin: shard concatenation reproduces the monolithic timeline
+    /// element for element, and both availability functions agree.
+    fn assert_matches_monolithic(trace: &FailureTrace, window: f64, workers: usize, seed: u64) {
+        let mono = TraceIndex::new(trace);
+        let sharded = ShardedIndex::new(trace, window, workers).unwrap();
+        assert_eq!(sharded.n_events(), mono.n_events());
+        assert_eq!(sharded.last_event_time(), mono.last_event_time());
+        let got: Vec<(f64, usize, bool)> = sharded.events().collect();
+        let want: Vec<(f64, usize, bool)> = mono.events_since(0.0).collect();
+        assert_eq!(got, want, "timeline diverged at window {window}");
+
+        let mut rng = Rng::new(seed);
+        for _ in 0..400 {
+            let t = rng.range(0.0, trace.horizon());
+            assert_eq!(sharded.count_at(t), mono.count_at(t), "count at {t}");
+            assert_eq!(
+                sharded.next_repair_after_total_outage(t),
+                mono.next_repair_after_total_outage(t),
+                "next repair after {t}"
+            );
+        }
+
+        // Cursor equality over a monotone query stream.
+        let mut ts: Vec<f64> = (0..300).map(|_| rng.range(0.0, trace.horizon())).collect();
+        ts.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let mut mc = mono.cursor(trace);
+        let mut sc = sharded.cursor(trace);
+        let (mut mb, mut sb) = (Vec::new(), Vec::new());
+        for &t in &ts {
+            assert_eq!(sc.up_count(t), mc.up_count(t), "up_count at {t}");
+            mc.all_up(t, &mut mb);
+            sc.all_up(t, &mut sb);
+            assert_eq!(sb, mb, "all_up at {t}");
+            mc.first_up(t, 3, &mut mb);
+            sc.first_up(t, 3, &mut sb);
+            assert_eq!(sb, mb, "first_up at {t}");
+            for p in 0..trace.n_procs() {
+                assert_eq!(
+                    sc.next_fail_after(p, t),
+                    mc.next_fail_after(p, t),
+                    "next_fail_after({p}) at {t}"
+                );
+            }
+            assert_eq!(sc.fail_counts(t), mc.fail_counts(t), "fail_counts at {t}");
+        }
+    }
+
+    #[test]
+    fn matches_monolithic_on_fixed_windows() {
+        let trace = random_trace(11, 10, 60.0);
+        for window in [0.5 * DAY, DAY, 7.0 * DAY, 365.0 * DAY] {
+            assert_matches_monolithic(&trace, window, 4, 101);
+        }
+    }
+
+    #[test]
+    fn degenerate_one_event_shards_match() {
+        // A window narrower than any inter-event gap: every shard holds a
+        // single event (the worst-case shard count).
+        let trace =
+            FailureTrace::new(vec![vec![(10.0, 20.0), (40.0, 55.0)], vec![(13.0, 47.0)]], 100.0)
+                .unwrap();
+        let sharded = ShardedIndex::new(&trace, 1.0, 2).unwrap();
+        assert_eq!(sharded.n_shards(), 6);
+        assert_matches_monolithic(&trace, 1.0, 2, 7);
+    }
+
+    #[test]
+    fn single_shard_and_empty_trace() {
+        let trace = random_trace(5, 6, 20.0);
+        let sharded = ShardedIndex::new(&trace, 1e9 * DAY, 3).unwrap();
+        assert_eq!(sharded.n_shards(), 1);
+        assert_matches_monolithic(&trace, 1e9 * DAY, 3, 13);
+
+        let empty = FailureTrace::new(vec![vec![], vec![]], 100.0).unwrap();
+        let sharded = ShardedIndex::new(&empty, 10.0, 2).unwrap();
+        assert_eq!(sharded.n_shards(), 0);
+        assert_eq!(sharded.count_at(50.0), 2);
+        assert_eq!(sharded.next_repair_after_total_outage(0.0), None);
+        let mut cur = sharded.cursor(&empty);
+        assert_eq!(cur.up_count(50.0), 2);
+        assert_eq!(cur.next_failure_among(&[0, 1], 0.0), None);
+    }
+
+    #[test]
+    fn equal_time_events_stay_in_one_shard_in_order() {
+        // Simultaneous events across processors must not straddle shards
+        // and must keep the (time, kind, proc) order within theirs.
+        let trace = FailureTrace::new(
+            vec![vec![(10.0, 20.0)], vec![(10.0, 20.0)], vec![(10.0, 20.0)]],
+            50.0,
+        )
+        .unwrap();
+        let sharded = ShardedIndex::new(&trace, 10.0, 2).unwrap();
+        assert_eq!(sharded.n_shards(), 2);
+        assert_matches_monolithic(&trace, 10.0, 2, 3);
+    }
+
+    #[test]
+    fn prop_sharded_equals_monolithic_random_windows() {
+        check_bool(
+            "sharded == monolithic across random window widths",
+            0x5aa_ed01,
+            12,
+            |g: &mut Gen| {
+                let n = g.int_in(2, 12).max(2);
+                let days = g.f64_in(5.0, 40.0).max(2.0);
+                let window = g.log_uniform(60.0, 400.0 * DAY);
+                let workers = g.int_in(1, 8).max(1);
+                let seed = g.rng.below(1 << 20);
+                (n, days, window, workers, seed)
+            },
+            |&(n, days, window, workers, seed)| {
+                let trace = random_trace(seed ^ 0xABCD, n, days);
+                assert_matches_monolithic(&trace, window, workers, seed);
+                true
+            },
+        );
+    }
+
+    #[test]
+    fn parallel_build_equals_serial_build() {
+        let trace = random_trace(29, 12, 45.0);
+        let serial = ShardedIndex::new(&trace, 2.0 * DAY, 1).unwrap();
+        let par = ShardedIndex::new(&trace, 2.0 * DAY, 8).unwrap();
+        let a: Vec<(f64, usize, bool)> = serial.events().collect();
+        let b: Vec<(f64, usize, bool)> = par.events().collect();
+        assert_eq!(a, b, "worker count changed the compiled timeline");
+        assert_eq!(serial.n_shards(), par.n_shards());
+    }
+
+    #[test]
+    fn cursor_touches_only_queried_shards() {
+        // 60 days of events, 1-day windows; a cursor whose queries span
+        // two windows near the end must not enter the ~58 earlier shards.
+        let trace = random_trace(31, 8, 60.0);
+        let sharded = ShardedIndex::new(&trace, DAY, 4).unwrap();
+        assert!(sharded.n_shards() > 20, "trace too sparse for the locality test");
+        let mono = TraceIndex::new(&trace);
+        let mut cur = sharded.cursor(&trace);
+        let mut t = 55.0 * DAY;
+        while t < 57.0 * DAY {
+            assert_eq!(cur.up_count(t), mono.count_at(t), "count at {t}");
+            t += 600.0;
+        }
+        assert!(
+            cur.shards_entered() <= 4,
+            "queries spanning 2 windows entered {} shards",
+            cur.shards_entered()
+        );
+    }
+
+    #[test]
+    fn rejects_bad_windows() {
+        let trace = random_trace(1, 2, 5.0);
+        assert!(ShardedIndex::new(&trace, 0.0, 1).is_err());
+        assert!(ShardedIndex::new(&trace, -5.0, 1).is_err());
+        assert!(ShardedIndex::new(&trace, f64::INFINITY, 1).is_err());
+    }
+}

@@ -1,0 +1,86 @@
+//! FNV-1a 64-bit hashing — the repo's one non-cryptographic hash,
+//! shared by the advisor's canonical cache keys
+//! ([`crate::advisor::cache::canonical_key`]) and the durable store's
+//! record checksums ([`crate::store::wal`]). One implementation so the
+//! two can never drift apart.
+
+/// Streaming FNV-1a hasher over a canonical byte/word/float stream.
+pub struct Fnv64(u64);
+
+impl Fnv64 {
+    const OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+    const PRIME: u64 = 0x0000_0100_0000_01b3;
+
+    #[allow(clippy::new_without_default)]
+    pub fn new() -> Fnv64 {
+        Fnv64(Self::OFFSET)
+    }
+
+    pub fn byte(&mut self, b: u8) {
+        self.0 = (self.0 ^ b as u64).wrapping_mul(Self::PRIME);
+    }
+
+    pub fn bytes(&mut self, bs: &[u8]) {
+        for &b in bs {
+            self.byte(b);
+        }
+    }
+
+    /// Little-endian word.
+    pub fn u64(&mut self, x: u64) {
+        self.bytes(&x.to_le_bytes());
+    }
+
+    /// Canonical float: `-0.0` folds onto `0.0`; the caller guarantees
+    /// NaN never reaches here (all hashed fields are validated upstream).
+    pub fn f64(&mut self, x: f64) {
+        self.u64(if x == 0.0 { 0 } else { x.to_bits() });
+    }
+
+    pub fn finish(&self) -> u64 {
+        self.0
+    }
+}
+
+/// One-shot FNV-1a over a byte slice.
+pub fn fnv1a_64(bytes: &[u8]) -> u64 {
+    let mut h = Fnv64::new();
+    h.bytes(bytes);
+    h.finish()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn known_vectors() {
+        // Standard FNV-1a test vectors.
+        assert_eq!(fnv1a_64(b""), 0xcbf2_9ce4_8422_2325);
+        assert_eq!(fnv1a_64(b"a"), 0xaf63_dc4c_8601_ec8c);
+        assert_eq!(fnv1a_64(b"foobar"), 0x85944171f73967e8);
+    }
+
+    #[test]
+    fn streaming_equals_one_shot() {
+        let mut h = Fnv64::new();
+        h.bytes(b"foo");
+        h.bytes(b"bar");
+        assert_eq!(h.finish(), fnv1a_64(b"foobar"));
+        let mut w = Fnv64::new();
+        w.u64(0x0102_0304_0506_0708);
+        assert_eq!(w.finish(), fnv1a_64(&[8, 7, 6, 5, 4, 3, 2, 1]));
+    }
+
+    #[test]
+    fn f64_canonicalizes_signed_zero() {
+        let (mut a, mut b) = (Fnv64::new(), Fnv64::new());
+        a.f64(0.0);
+        b.f64(-0.0);
+        assert_eq!(a.finish(), b.finish());
+        let (mut c, mut d) = (Fnv64::new(), Fnv64::new());
+        c.f64(1.5);
+        d.f64(-1.5);
+        assert_ne!(c.finish(), d.finish());
+    }
+}

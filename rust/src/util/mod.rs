@@ -4,6 +4,7 @@
 
 pub mod bench;
 pub mod cli;
+pub mod fnv;
 pub mod json;
 pub mod plot;
 pub mod pool;

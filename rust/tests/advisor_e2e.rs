@@ -221,6 +221,202 @@ fn daemon_serves_concurrent_selects_ingest_and_drift() {
     handle.join().expect("server thread");
 }
 
+/// Keep-alive client: issue every request over ONE socket, framing the
+/// responses by `Content-Length` (a premature server close fails the
+/// test). Returns `(code, body, server_advertised_keep_alive)` per
+/// request.
+fn http_keepalive(
+    addr: SocketAddr,
+    requests: &[(&str, &str, String)],
+) -> Vec<(u16, Json, bool)> {
+    let mut stream = TcpStream::connect(addr).expect("connect");
+    stream.set_read_timeout(Some(Duration::from_secs(30))).unwrap();
+    let mut out = Vec::new();
+    let mut buf: Vec<u8> = Vec::new();
+    for (method, path, body) in requests {
+        let req = format!(
+            "{method} {path} HTTP/1.1\r\nHost: {addr}\r\nContent-Type: application/json\r\n\
+             Content-Length: {}\r\nConnection: keep-alive\r\n\r\n{body}",
+            body.len()
+        );
+        stream.write_all(req.as_bytes()).expect("send on kept-alive socket");
+        // Read until the full head + Content-Length body is buffered.
+        let (head_end, content_length) = loop {
+            if let Some(pos) = buf.windows(4).position(|w| w == b"\r\n\r\n") {
+                let head = std::str::from_utf8(&buf[..pos]).expect("UTF-8 head");
+                let len = head
+                    .lines()
+                    .find_map(|l| {
+                        let (name, value) = l.split_once(':')?;
+                        if name.eq_ignore_ascii_case("content-length") {
+                            value.trim().parse::<usize>().ok()
+                        } else {
+                            None
+                        }
+                    })
+                    .expect("Content-Length header");
+                break (pos, len);
+            }
+            let mut chunk = [0u8; 4096];
+            let n = stream.read(&mut chunk).expect("read response");
+            assert!(n > 0, "server closed a kept-alive connection mid-response");
+            buf.extend_from_slice(&chunk[..n]);
+        };
+        while buf.len() < head_end + 4 + content_length {
+            let mut chunk = [0u8; 4096];
+            let n = stream.read(&mut chunk).expect("read response body");
+            assert!(n > 0, "server closed mid-body");
+            buf.extend_from_slice(&chunk[..n]);
+        }
+        let head = std::str::from_utf8(&buf[..head_end]).unwrap().to_string();
+        let code: u16 = head
+            .split_whitespace()
+            .nth(1)
+            .and_then(|s| s.parse().ok())
+            .expect("status code");
+        let keep = head
+            .lines()
+            .any(|l| l.to_ascii_lowercase().starts_with("connection:") && l.contains("keep-alive"));
+        let body_text =
+            std::str::from_utf8(&buf[head_end + 4..head_end + 4 + content_length]).unwrap();
+        let json = Json::parse(body_text).expect("response body JSON");
+        buf.drain(..head_end + 4 + content_length);
+        out.push((code, json, keep));
+    }
+    out
+}
+
+#[test]
+fn keep_alive_serves_many_requests_on_one_connection() {
+    let (addr, handle) = boot(AdvisorConfig::default());
+    let select = select_body(6, 2.0, "qr", None);
+    let responses = http_keepalive(
+        addr,
+        &[
+            ("GET", "/healthz", String::new()),
+            ("POST", "/v1/select", select.clone()),
+            ("POST", "/v1/select", select.clone()),
+            ("GET", "/v1/status", String::new()),
+        ],
+    );
+    assert_eq!(responses.len(), 4);
+    for (code, body, keep) in &responses {
+        assert_eq!(*code, 200, "keep-alive request failed: {body}");
+        assert!(*keep, "server must advertise keep-alive on a 1.1 connection");
+    }
+    assert_eq!(responses[1].1.get("cached").unwrap().as_bool(), Some(false));
+    assert_eq!(
+        responses[2].1.get("cached").unwrap().as_bool(),
+        Some(true),
+        "repeat select on the same connection must hit the cache"
+    );
+    // Errors keep the connection alive too (the request was well-framed).
+    let more = http_keepalive(
+        addr,
+        &[
+            ("GET", "/v1/nope", String::new()),
+            ("GET", "/healthz", String::new()),
+        ],
+    );
+    assert_eq!(more[0].0, 404);
+    assert_eq!(more[1].0, 200, "a 404 must not kill the connection");
+
+    let (code, _) = http(addr, "POST", "/v1/shutdown", "");
+    assert_eq!(code, 200);
+    handle.join().expect("server thread");
+}
+
+#[test]
+fn daemon_restart_on_data_dir_restores_tracks_and_recommendations() {
+    use malleable_ckpt::store::TraceStore;
+
+    let data_dir = std::env::temp_dir().join(format!(
+        "mckpt-e2e-store-{}-{}",
+        std::process::id(),
+        line!()
+    ));
+    let _ = std::fs::remove_dir_all(&data_dir);
+    let cfg = AdvisorConfig {
+        drift_threshold: 0.5,
+        refit_window: 400.0 * DAY,
+        min_refit_failures: 8,
+        ..Default::default()
+    };
+    let boot_with_store = |cfg: AdvisorConfig| {
+        let opts =
+            ServeOptions { addr: "127.0.0.1:0".to_string(), workers: 4, advisor: cfg };
+        let store = TraceStore::open(&data_dir).expect("open data dir");
+        let server =
+            AdvisorServer::bind_with_store(&opts, Some(store)).expect("bind with store");
+        let addr = server.local_addr().unwrap();
+        let handle = std::thread::spawn(move || server.run().expect("serve loop"));
+        (addr, handle)
+    };
+
+    // --- Session 1: tracked select, volatile ingest, drift re-selection.
+    let (addr, handle) = boot_with_store(cfg);
+    let (code, _) = http(addr, "POST", "/v1/select", &select_body(6, 8.0, "qr", Some("c1")));
+    assert_eq!(code, 200);
+    let mut rng = Rng::new(77);
+    let trace =
+        generate(&SynthSpec::exponential(6, 1.0 / DAY, 1.0 / 2_400.0, 200.0 * DAY), &mut rng);
+    let mut events = Vec::new();
+    for p in 0..6 {
+        for &(fail, repair) in trace.outages(p) {
+            events.push(format!(r#"{{"proc": {p}, "fail": {fail}, "repair": {repair}}}"#));
+        }
+    }
+    let ingest_body =
+        format!(r#"{{"track": "c1", "n_procs": 6, "events": [{}]}}"#, events.join(","));
+    let (code, ing) = http(addr, "POST", "/v1/ingest", &ingest_body);
+    assert_eq!(code, 200, "ingest failed: {ing}");
+    let lam_hat = f(&ing, "lambda");
+    let theta_hat = f(&ing, "theta");
+    // Wait for the background re-selection so the refreshed key persists.
+    let deadline = std::time::Instant::now() + Duration::from_secs(30);
+    let pre_events = loop {
+        let (_, status) = http(addr, "GET", "/v1/status", "");
+        let track = status.path("tracks.c1").expect("track in status");
+        if track.path("reselects").and_then(Json::as_f64) == Some(1.0) {
+            assert_eq!(track.get("persisted").unwrap().as_bool(), Some(true));
+            break f(track, "events");
+        }
+        assert!(std::time::Instant::now() < deadline, "re-selection never landed");
+        std::thread::sleep(Duration::from_millis(50));
+    };
+    let (code, _) = http(addr, "POST", "/v1/shutdown", "");
+    assert_eq!(code, 200);
+    handle.join().expect("server thread");
+
+    // --- Session 2: same data dir; everything must be back.
+    let (addr, handle) = boot_with_store(cfg);
+    let (code, status) = http(addr, "GET", "/v1/status", "");
+    assert_eq!(code, 200);
+    let track = status.path("tracks.c1").expect("track restored after restart");
+    assert_eq!(f(track, "events"), pre_events, "event history lost across restart");
+    assert_eq!(f(track, "reselects"), 1.0, "reselect counter lost across restart");
+    assert_eq!(
+        f(track, "lambda"),
+        lam_hat,
+        "re-fitted λ̂ must survive the restart exactly (same machine, lossless wire)"
+    );
+    // A repeat tracked select resolves through the restored rates and
+    // pins to the offline oracle at those rates.
+    let (code, resp) =
+        http(addr, "POST", "/v1/select", &select_body(6, 8.0, "qr", Some("c1")));
+    assert_eq!(code, 200);
+    assert_eq!(f(&resp, "lambda"), lam_hat, "select must use the restored rates");
+    let want = oracle(6, 8.0, "qr", Some((lam_hat, theta_hat)));
+    assert_eq!(f(&resp, "interval"), want.interval, "restored daemon != offline oracle");
+    let rel = (f(&resp, "uwt") - want.uwt).abs() / want.uwt;
+    assert!(rel < 1e-9, "restored UWT off by {rel}");
+
+    let (code, _) = http(addr, "POST", "/v1/shutdown", "");
+    assert_eq!(code, 200);
+    handle.join().expect("server thread");
+    let _ = std::fs::remove_dir_all(&data_dir);
+}
+
 // The concurrent phase needs `Copy` values inside `move` closures; the
 // oracle intervals are deterministic, so compute them once per call.
 fn want_a_interval() -> f64 {

@@ -7,6 +7,9 @@
 //! * indexed `Simulator::run` vs `Simulator::run_reference`, field for
 //!   field on randomized synthetic traces (exponential and Weibull, random
 //!   policies, both processor-selection modes);
+//! * sharded `Simulator::run_sharded` (over `traces::ShardedIndex`,
+//!   parallel shard builds) vs monolithic `Simulator::run`, field for
+//!   field across random time-window widths;
 //! * `sweep_par` vs serial `sweep`;
 //! * the exact cached `select_interval` (ModelBuilder under
 //!   `BuildOptions::exact_probes`) vs `select_interval_uncached`, probe
@@ -44,6 +47,7 @@ use malleable_ckpt::runtime::ComputeEngine;
 use malleable_ckpt::search::{select_interval, select_interval_uncached, SearchConfig};
 use malleable_ckpt::simulator::{SimConfig, Simulator};
 use malleable_ckpt::traces::synth::{generate, SynthSpec};
+use malleable_ckpt::traces::ShardedIndex;
 use malleable_ckpt::util::prop::{check, Gen, Outcome, Tol};
 use malleable_ckpt::util::rng::Rng;
 
@@ -121,6 +125,62 @@ fn prop_indexed_simulator_matches_reference() {
             } else {
                 Outcome::Fail(format!(
                     "SimResult diverged:\n  indexed:   {fast:?}\n  reference: {oracle:?}"
+                ))
+            }
+        },
+    );
+}
+
+#[test]
+fn prop_sharded_segment_evaluations_match_monolithic() {
+    // The time-window-sharded index (`traces::ShardedIndex`, built in
+    // parallel on the pool) sits in the bit-exact tier: whole segment
+    // evaluations over it must reproduce the monolithic `Simulator::run`
+    // SimResult field for field — across random window widths from
+    // seconds (degenerate one-event shards) to wider than the trace.
+    check(
+        "sharded-segment-equivalence",
+        0x5A4D,
+        25,
+        |g| {
+            let n = g.int_in(2, 12);
+            let lam = g.log_uniform(1e-7, 1e-4);
+            let theta = g.log_uniform(1e-4, 1e-2);
+            let days = g.f64_in(2.0, 25.0);
+            let interval = g.log_uniform(120.0, 50_000.0);
+            let window = g.log_uniform(30.0, 400.0 * 86_400.0);
+            let workers = g.int_in(1, 8).max(1);
+            let prefer = g.rng.chance(0.5);
+            let seed = g.rng.next_u64();
+            let rp = random_policy(g, n);
+            (n, lam, theta, days, interval, window, workers, prefer, seed, rp)
+        },
+        |(n, lam, theta, days, interval, window, workers, prefer, seed, rp)| {
+            let mut rng = Rng::new(*seed);
+            let horizon = (days + 10.0) * 86_400.0;
+            let trace = generate(&SynthSpec::exponential(*n, *lam, *theta, horizon), &mut rng);
+            let app = AppProfile::md(*n);
+            let sim = Simulator::new(&trace, &app, rp);
+            let sharded = match ShardedIndex::new(&trace, *window, *workers) {
+                Ok(s) => s,
+                Err(e) => return Outcome::Fail(format!("sharded build failed: {e}")),
+            };
+            let mut cfg = SimConfig::new(86_400.0, days * 86_400.0, *interval);
+            cfg.prefer_reliable = *prefer;
+            cfg.record_timeline = true;
+            let mono = match sim.run(&cfg) {
+                Ok(r) => r,
+                Err(e) => return Outcome::Fail(format!("monolithic run failed: {e}")),
+            };
+            let shrd = match sim.run_sharded(&sharded, &cfg) {
+                Ok(r) => r,
+                Err(e) => return Outcome::Fail(format!("sharded run failed: {e}")),
+            };
+            if mono == shrd {
+                Outcome::Pass
+            } else {
+                Outcome::Fail(format!(
+                    "SimResult diverged at window {window}:\n  sharded:    {shrd:?}\n  monolithic: {mono:?}"
                 ))
             }
         },

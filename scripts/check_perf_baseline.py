@@ -1,0 +1,83 @@
+#!/usr/bin/env python3
+"""Sanity-check a BENCH_perf.json before it is committed as the perf-gate
+baseline (ROADMAP "perf baseline": the gate compares every suite.*.speedup
+against the checked-in file, so an insane baseline would arm the gate with
+garbage).
+
+A baseline is sane when:
+  * it parses as JSON and carries the sections the gate reads
+    (`suite` with per-system entries and `overall_speedup`);
+  * every `*.speedup` is a finite, positive number;
+  * every timed section carries positive baseline/optimized seconds;
+  * the optimized paths did not regress below 0.2x of their seed baseline
+    (smoke-mode CI runners are noisy, but a 5x slowdown in the very file
+    that defines "no regression" means the measurement itself is broken).
+
+Usage: check_perf_baseline.py [BENCH_perf.json]
+Exits non-zero (with a reason) on an insane file.
+"""
+
+import json
+import math
+import sys
+
+
+def fail(msg: str) -> None:
+    print(f"perf baseline INSANE: {msg}", file=sys.stderr)
+    sys.exit(1)
+
+
+def walk_speedups(node, path="") -> list[tuple[str, dict]]:
+    """Collect every object that carries a 'speedup' field."""
+    found = []
+    if isinstance(node, dict):
+        if "speedup" in node:
+            found.append((path or "<root>", node))
+        for key, value in node.items():
+            found.extend(walk_speedups(value, f"{path}.{key}" if path else key))
+    return found
+
+
+def main() -> None:
+    path = sys.argv[1] if len(sys.argv) > 1 else "BENCH_perf.json"
+    try:
+        with open(path, encoding="utf-8") as fh:
+            report = json.load(fh)
+    except FileNotFoundError:
+        fail(f"{path} does not exist")
+    except json.JSONDecodeError as exc:
+        fail(f"{path} is not valid JSON: {exc}")
+
+    suite = report.get("suite")
+    if not isinstance(suite, dict):
+        fail("missing 'suite' section (the gate reads suite.*.speedup)")
+    if not isinstance(suite.get("overall_speedup"), (int, float)):
+        fail("missing numeric suite.overall_speedup")
+
+    entries = walk_speedups(report)
+    if not entries:
+        fail("no speedup entries at all")
+
+    for where, entry in entries:
+        s = entry.get("speedup")
+        if not isinstance(s, (int, float)) or not math.isfinite(s) or s <= 0:
+            fail(f"{where}.speedup = {s!r} (want a finite positive number)")
+        if s < 0.2:
+            fail(f"{where}.speedup = {s:.3f} < 0.2x — measurement looks broken")
+        for side in ("baseline_s", "optimized_s"):
+            v = entry.get(side)
+            if v is not None and (
+                not isinstance(v, (int, float)) or not math.isfinite(v) or v <= 0
+            ):
+                fail(f"{where}.{side} = {v!r} (want a finite positive number)")
+
+    names = [w for w, _ in entries]
+    print(
+        f"perf baseline sane: {len(entries)} speedup entries "
+        f"(overall {suite['overall_speedup']:.2f}x); sections: "
+        + ", ".join(sorted({n.split('.')[0] for n in names}))
+    )
+
+
+if __name__ == "__main__":
+    main()

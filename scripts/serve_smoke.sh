@@ -7,7 +7,13 @@
 #   3. fail on any non-200, and on any mismatch between the daemon's
 #      recommendation and the offline `select --json` oracle (bit-exact:
 #      both sides print shortest-roundtrip f64 decimals from the same
-#      machine and engine).
+#      machine and engine),
+#   4. restart roundtrip: boot on a --data-dir, register a tracked select,
+#      stream an ingest batch, `kill -9` the daemon (crash, not clean
+#      shutdown — WAL replay with no snapshot), reboot on the same dir,
+#      and assert /v1/status still shows the track (events + re-fitted
+#      rates identical) and a repeat tracked select matches the offline
+#      oracle at the re-fitted rates; `store verify` must pass throughout.
 #
 # Used by the `serve-smoke` CI job; runnable locally after
 # `cargo build --release`.
@@ -73,3 +79,137 @@ curl -sf -X POST "http://${ADDR}/v1/shutdown" >/dev/null
 wait "$SERVE_PID"
 trap - EXIT
 echo "serve smoke: OK"
+
+# ---------------------------------------------------------------------------
+# Phase 2: kill-and-restart roundtrip on a durable --data-dir.
+# ---------------------------------------------------------------------------
+DATA_DIR=$(mktemp -d)
+PORT2=$((PORT + 1))
+ADDR2="127.0.0.1:${PORT2}"
+
+wait_healthy() {
+    for _ in $(seq 1 100); do
+        if curl -sf "http://$1/healthz" >/dev/null 2>&1; then
+            return 0
+        fi
+        sleep 0.1
+    done
+    echo "error: daemon never became healthy on $1" >&2
+    return 1
+}
+
+"$BIN" serve --addr "$ADDR2" --data-dir "$DATA_DIR" --drift 0.5 --window-days 400 &
+SERVE_PID=$!
+trap 'kill -9 "$SERVE_PID" 2>/dev/null || true; rm -rf "$DATA_DIR"' EXIT
+wait_healthy "$ADDR2"
+
+# Default search config on purpose: the offline `select --json` oracle
+# below runs the default config too, so the two must match exactly.
+tracked_req='{"system": {"n": 6, "mttf_days": 8, "mttr_min": 40}, "track": "c1"}'
+curl -sf "http://${ADDR2}/v1/select" -d "$tracked_req" >/dev/null
+
+# A volatile ingest batch (MTTF ~1 day vs the requested 8 days): enough
+# failures for the windowed re-fit, far past the 0.5 drift threshold.
+ingest_body=$(python3 - <<'EOF'
+import json
+import random
+
+random.seed(41)
+events = []
+for proc in range(6):
+    t = 0.0
+    while True:
+        t += random.expovariate(1.0 / 86_400.0)  # MTTF 1 day
+        repair = t + random.expovariate(1.0 / 2_400.0)
+        if repair >= 200 * 86_400.0:
+            break
+        events.append({"proc": proc, "fail": t, "repair": repair})
+        t = repair
+print(json.dumps({"track": "c1", "n_procs": 6, "events": events}))
+EOF
+)
+curl -sf "http://${ADDR2}/v1/ingest" -d "$ingest_body" >/dev/null
+
+# Give the ingest-triggered background re-selection a moment to land,
+# then CRASH the daemon: no clean shutdown, no snapshot — recovery must
+# come from the WAL alone (torn tail included, if the kill races a write).
+for _ in $(seq 1 100); do
+    if curl -sf "http://${ADDR2}/v1/status" | python3 -c '
+import json, sys
+s = json.load(sys.stdin)
+raise SystemExit(0 if s["tracks"]["c1"]["reselects"] >= 1 else 1)
+' 2>/dev/null; then
+        break
+    fi
+    sleep 0.2
+done
+pre_status=$(curl -sf "http://${ADDR2}/v1/status")
+kill -9 "$SERVE_PID"
+wait "$SERVE_PID" 2>/dev/null || true
+
+"$BIN" store verify --data-dir "$DATA_DIR"
+
+"$BIN" serve --addr "$ADDR2" --data-dir "$DATA_DIR" --drift 0.5 --window-days 400 &
+SERVE_PID=$!
+trap 'kill "$SERVE_PID" 2>/dev/null || true; rm -rf "$DATA_DIR"' EXIT
+wait_healthy "$ADDR2"
+
+post_status=$(curl -sf "http://${ADDR2}/v1/status")
+post_select=$(curl -sf "http://${ADDR2}/v1/select" -d "$tracked_req")
+
+# Offline oracle at the re-fitted rates the restarted daemon reports.
+# The CLI takes MTTF in days / MTTR in minutes and computes
+# λ = 1/(d·86400) back; pick the d (within 1 ulp) whose round trip
+# reproduces λ̂ bit-for-bit so the oracle runs on the identical floats.
+lam=$(python3 -c "import json,sys; print(repr(json.loads(sys.argv[1])['tracks']['c1']['lambda']))" "$post_status")
+theta=$(python3 -c "import json,sys; print(repr(json.loads(sys.argv[1])['tracks']['c1']['theta']))" "$post_status")
+roundtrip_inverse() {
+    python3 - "$1" "$2" <<'EOF'
+import math
+import sys
+
+rate, unit = float(sys.argv[1]), float(sys.argv[2])
+guess = 1.0 / (rate * unit)
+for cand in (guess, math.nextafter(guess, math.inf), math.nextafter(guess, -math.inf)):
+    if 1.0 / (cand * unit) == rate:
+        print(repr(cand))
+        raise SystemExit(0)
+print(repr(guess))
+EOF
+}
+mttf_days=$(roundtrip_inverse "$lam" 86400.0)
+mttr_min=$(roundtrip_inverse "$theta" 60.0)
+oracle2=$("$BIN" select --system system-1/128 --procs 6 --mttf-days "$mttf_days" --mttr-min "$mttr_min" --json)
+
+python3 - "$pre_status" "$post_status" "$post_select" "$oracle2" <<'EOF'
+import json
+import sys
+
+pre, post, select, oracle = (json.loads(a) for a in sys.argv[1:5])
+a, b = pre["tracks"]["c1"], post["tracks"]["c1"]
+
+for field in ("n_procs", "events", "accepted", "merged", "reselects"):
+    assert a[field] == b[field], f"{field}: {a[field]!r} != {b[field]!r} across kill -9"
+assert a["lambda"] == b["lambda"], f"re-fitted lambda drifted: {a['lambda']!r} != {b['lambda']!r}"
+assert a["theta"] == b["theta"], f"re-fitted theta drifted: {a['theta']!r} != {b['theta']!r}"
+assert b["persisted"] is True, "track must be store-backed"
+ra, rb = a["recommendations"], b["recommendations"]
+assert len(ra) == len(rb) == 1, f"recommendation registry lost: {len(ra)} vs {len(rb)}"
+assert ra[0]["key"] == rb[0]["key"], "recommendation key lost across restart"
+
+assert select["ok"] and select["lambda"] == b["lambda"], "select must use restored rates"
+assert select["interval"] == oracle["interval"], (
+    f"restored daemon interval {select['interval']!r} != oracle {oracle['interval']!r}"
+)
+rel = abs(select["uwt"] - oracle["uwt"]) / oracle["uwt"]
+assert rel < 1e-9, f"restored UWT off by {rel}"
+print("restart roundtrip: WAL replay restored the track; select == offline oracle")
+EOF
+
+curl -sf -X POST "http://${ADDR2}/v1/shutdown" >/dev/null
+wait "$SERVE_PID" 2>/dev/null || true
+"$BIN" store verify --data-dir "$DATA_DIR"
+"$BIN" store inspect --data-dir "$DATA_DIR"
+rm -rf "$DATA_DIR"
+trap - EXIT
+echo "serve smoke (durable restart): OK"
