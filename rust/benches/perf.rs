@@ -7,8 +7,11 @@
 //! * L3: full model build at paper scale, the incremental `ModelBuilder`
 //!   vs from-scratch probe builds, the indexed simulator vs the reference
 //!   simulator at N = 128/256/512, serial vs parallel sweeps, cached vs
-//!   uncached interval search, and an end-to-end experiment-suite slice
-//!   (`run_segments` vs `run_segments_reference`).
+//!   uncached interval search, the batch-first selection facade
+//!   (`api::SelectBatch`, dedup + fan-out) vs a singleton loop,
+//!   multi-year segment sweeps over one shared `ShardedIndex` vs
+//!   per-segment monolithic index compiles, and an end-to-end
+//!   experiment-suite slice (`run_segments` vs `run_segments_reference`).
 //!
 //! Writes a machine-readable `BENCH_perf.json` at the repo root so the
 //! perf trajectory is tracked PR over PR (`make bench-smoke` regenerates
@@ -20,6 +23,7 @@
 //! engine's acceptance metric — steady-state seconds per
 //! `select_interval` probe, cold vs cached-exact vs probe engine.
 
+use malleable_ckpt::api::{SelectBatch, SelectSpec};
 use malleable_ckpt::apps::AppProfile;
 use malleable_ckpt::config::{paper_system, SystemParams};
 use malleable_ckpt::experiments::common::{run_segments, run_segments_reference};
@@ -31,6 +35,7 @@ use malleable_ckpt::runtime::{native_chain_probs, native_chain_probs_fast, Compu
 use malleable_ckpt::search::{select_interval, select_interval_uncached, SearchConfig};
 use malleable_ckpt::simulator::{SimConfig, Simulator};
 use malleable_ckpt::traces::synth::{generate, SynthSpec};
+use malleable_ckpt::traces::ShardedIndex;
 use malleable_ckpt::util::bench::{bench, bench_once, header, BenchResult};
 use malleable_ckpt::util::json::Json;
 use malleable_ckpt::util::pool;
@@ -270,6 +275,77 @@ fn main() {
         search_cmp.set(&format!("n{n}"), speedup_obj(&format!("search N={n}"), &uncached, &cached));
     }
     report.set("search", search_cmp);
+
+    // --- L3: the batch-first facade — deduped parallel fan-out vs a
+    // singleton select_interval loop over the same (duplicate-heavy)
+    // request stream. The shape the advisor's /v1/select_batch and the
+    // experiment sweeps actually see: a few unique systems asked about
+    // many times.
+    header("L3: api::SelectBatch (dedup + fan-out) vs singleton loop");
+    {
+        let n = if smoke { 48 } else { 96 };
+        let cfg = SearchConfig { refine_steps: 2, ..Default::default() };
+        let mttf_days = [2.0, 4.0, 8.0, 16.0];
+        let stream: Vec<ModelInputs> = (0..12)
+            .map(|i| qr_inputs(n, 1.0 / (mttf_days[i % mttf_days.len()] * DAY), theta))
+            .collect();
+        let engine = ComputeEngine::native();
+        let singleton = bench_once(&format!("{} selects N={n} (singleton loop)", stream.len()), || {
+            for inputs in &stream {
+                std::hint::black_box(select_interval(inputs, &engine, &cfg).unwrap());
+            }
+        });
+        let batched = bench_once(&format!("{} selects N={n} (SelectBatch)", stream.len()), || {
+            let batch = SelectBatch::from_specs(
+                stream.iter().map(|i| SelectSpec::new(i.clone(), cfg)).collect(),
+            );
+            for outcome in batch.run(&engine) {
+                std::hint::black_box(outcome.search().unwrap().uwt);
+            }
+        });
+        report.set("select_batch", speedup_obj("select_batch", &singleton, &batched));
+    }
+
+    // --- L3: multi-year trace segments — per-segment monolithic index
+    // compiles vs one shared ShardedIndex (ROADMAP sharded-adoption
+    // item): the win is compiling the merged timeline once, in parallel,
+    // and each walk touching only the shards its span overlaps.
+    header("L3: multi-year segments (monolithic per segment vs shared ShardedIndex)");
+    {
+        let years = if smoke { 1.0 } else { 3.0 };
+        let n = 64usize;
+        let mut rng = Rng::new(7);
+        let trace =
+            generate(&SynthSpec::exponential(n, lam, theta, years * 365.0 * DAY), &mut rng);
+        let app = AppProfile::qr(n);
+        let policy = ReschedulingPolicy::greedy(n);
+        let n_segs = if smoke { 4 } else { 8 };
+        let segs: Vec<(f64, f64)> =
+            (0..n_segs).map(|i| (5.0 * DAY + i as f64 * 30.0 * DAY, 15.0 * DAY)).collect();
+        let grid: Vec<f64> = (0..12).map(|i| 600.0 * (1.7f64).powi(i)).collect();
+        let label = format!("{n_segs} segments over {years:.0}y @{n}");
+        let mono = bench_once(&format!("{label} (monolithic per segment)"), || {
+            for &(start, dur) in &segs {
+                // Fresh simulator per segment: the timeline recompiles
+                // every time, as the pre-facade run_segments did.
+                let sim = Simulator::new(&trace, &app, &policy);
+                let cfg = SimConfig::new(start, dur, 3_600.0);
+                std::hint::black_box(sim.run(&cfg).unwrap());
+                std::hint::black_box(sim.sweep_par(&cfg, &grid).unwrap());
+            }
+        });
+        let sharded = bench_once(&format!("{label} (shared ShardedIndex)"), || {
+            // One parallel compile, amortized across every segment.
+            let shared = ShardedIndex::new(&trace, 10.0 * DAY, pool::default_workers()).unwrap();
+            for &(start, dur) in &segs {
+                let sim = Simulator::new(&trace, &app, &policy);
+                let cfg = SimConfig::new(start, dur, 3_600.0);
+                std::hint::black_box(sim.run_sharded(&shared, &cfg).unwrap());
+                std::hint::black_box(sim.sweep_par_sharded(&shared, &cfg, &grid).unwrap());
+            }
+        });
+        report.set("sharded_segments", speedup_obj("sharded segments", &mono, &sharded));
+    }
 
     // --- L3: end-to-end experiment-suite slice --------------------------
     // The acceptance metric: run_segments (parallel segments + cached

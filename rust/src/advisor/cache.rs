@@ -25,44 +25,16 @@ use std::sync::{Arc, Mutex};
 
 use crate::markov::{ModelInputs, SharedBuilder};
 use crate::search::{SearchConfig, SearchResult};
-use crate::util::fnv::Fnv64;
 
-/// Canonical cache key of one recommendation request. Hashes the semantic
-/// content — system triple, the three per-processor-count cost vectors,
-/// the policy `rp` vector (not its display name), the search shape and the
-/// result-affecting build options. `BuildOptions::workers` is deliberately
-/// excluded: results are pinned worker-invariant.
+/// Canonical cache key of one recommendation request — the same
+/// definition [`crate::api::SelectBatch`] dedupes batches by
+/// ([`crate::api::canonical_hash`], hoisted out of this module so the
+/// cache keys and batch dedup can never drift apart; persisted
+/// `SpecRecord`s carry these hashes, so the definition is
+/// format-stable). `BuildOptions::workers` is deliberately excluded:
+/// results are pinned worker-invariant.
 pub fn canonical_key(inputs: &ModelInputs, cfg: &SearchConfig) -> u64 {
-    let mut h = Fnv64::new();
-    h.u64(0x4144_5631); // layout version tag ("ADV1")
-    let n = inputs.system.n;
-    h.u64(n as u64);
-    h.f64(inputs.system.lambda);
-    h.f64(inputs.system.theta);
-    for a in 1..=n {
-        h.f64(inputs.checkpoint_cost(a));
-        h.f64(inputs.work_per_sec(a));
-        h.f64(inputs.mean_recovery_into(a));
-    }
-    for &rp in inputs.policy.vector() {
-        h.u64(rp as u64);
-    }
-    h.f64(cfg.i_min);
-    h.f64(cfg.i_max);
-    h.u64(cfg.refine_steps as u64);
-    h.f64(cfg.band);
-    match cfg.build.thres {
-        Some(t) => {
-            h.byte(1);
-            h.f64(t);
-        }
-        None => h.byte(0),
-    }
-    h.byte(cfg.build.exact_probes as u8);
-    h.f64(cfg.build.stationary.tol);
-    h.u64(cfg.build.stationary.max_iters as u64);
-    h.f64(cfg.build.stationary.damping);
-    h.finish()
+    crate::api::canonical_hash(inputs, cfg)
 }
 
 /// One cached recommendation: the shared builder (kept alive for warm

@@ -32,6 +32,8 @@ use crate::markov::ModelInputs;
 use crate::search::SearchConfig;
 use crate::store::{SpecRecord, TrackStore, WalRecord};
 use crate::traces::index::TraceTail;
+use crate::traces::ShardedIndex;
+use crate::util::pool;
 
 /// One completed outage reported to `ingest`.
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -78,6 +80,28 @@ pub struct Track {
     /// mutations under the track lock also append here, so the WAL order
     /// equals the apply order and replay reproduces this struct exactly.
     pub store: Option<TrackStore>,
+    /// Shared sharded view of the tail, rebuilt by [`Track::refit`] on
+    /// an amortized schedule (see [`Track::refresh_sharded`] — never a
+    /// full rebuild per ingest batch, and a stale index is freed
+    /// immediately rather than sitting on ~2x-tail memory). A re-fit
+    /// scans it whenever it is current and falls back to the monolithic
+    /// index otherwise; the two scans are pinned float-identical, so the
+    /// route never changes the fitted rates (ROADMAP "sharded simulator
+    /// adoption"). In-memory only; recovery leaves it `None`.
+    pub sharded: Option<ShardedView>,
+}
+
+/// The cached sharded view of a track's tail and its build point.
+pub struct ShardedView {
+    /// [`TraceTail::generation`] when the view was built.
+    pub generation: u64,
+    /// Shard window the view was built with, seconds.
+    pub window: f64,
+    /// Tail events at build time — the rebuild-schedule reference.
+    pub built_events: usize,
+    /// The compiled view while current; freed the moment the tail
+    /// mutates past it (the schedule metadata above survives).
+    pub index: Option<ShardedIndex>,
 }
 
 impl Track {
@@ -92,7 +116,55 @@ impl Track {
             reselects: 0,
             evicted: 0,
             store: None,
+            sharded: None,
         })
+    }
+
+    /// Maintain the shared sharded view on an **amortized schedule**:
+    /// rebuild (parallel shard sorts on the pool) only on the first
+    /// build, a window change, a tail that doubled or halved since the
+    /// last build, or after ~a quarter of the tail's events worth of
+    /// mutations — each rebuild costs O(E log E/S) and happens at most
+    /// once per Ω(E) mutations, so the amortized rebuild work is
+    /// O(log E) per ingested event and a `/v1/ingest` batch never pays a
+    /// full rebuild just to re-fit. The refit right after a rebuild
+    /// scans the fresh view; between rebuilds a mutated tail leaves the
+    /// view stale — its index is **freed immediately** (never a resident
+    /// 2x-tail copy) and [`Track::refit`] scans the monolithic index
+    /// instead (pinned float-identical). A non-positive window drops the
+    /// view entirely.
+    fn refresh_sharded(&mut self, shard_window: f64) {
+        let n = self.tail.n_events();
+        if !(shard_window.is_finite() && shard_window > 0.0) || n == 0 {
+            self.sharded = None;
+            return;
+        }
+        let generation = self.tail.generation();
+        let rebuild = match &self.sharded {
+            Some(v) if v.window != shard_window => true,
+            Some(v) if v.generation == generation => false, // current
+            Some(v) => {
+                let mutations = generation - v.generation;
+                n >= v.built_events.saturating_mul(2)
+                    || n * 2 <= v.built_events
+                    || mutations.saturating_mul(4) >= v.built_events.max(64) as u64
+            }
+            None => true,
+        };
+        if rebuild {
+            let index = ShardedIndex::from_tail(&self.tail, shard_window, pool::default_workers())
+                .expect("window validated positive and finite");
+            self.sharded = Some(ShardedView {
+                generation,
+                window: shard_window,
+                built_events: n,
+                index: Some(index),
+            });
+        } else if let Some(v) = &mut self.sharded {
+            if v.generation != generation {
+                v.index = None; // stale: free it now, keep the schedule
+            }
+        }
     }
 
     /// Fold a batch into the tail. Validation is per event: an invalid
@@ -145,9 +217,29 @@ impl Track {
     /// Windowed re-fit over the tail (see the module docs); updates,
     /// persists and returns `self.rates` when the window holds at least
     /// `min_failures` failures, leaves them untouched otherwise. The only
-    /// error is a persistence failure.
-    pub fn refit(&mut self, window: f64, min_failures: usize) -> Result<Option<(f64, f64)>> {
-        match refit_rates(&self.tail, window, min_failures) {
+    /// error is a persistence failure. The failure-time scan goes through
+    /// the track's shared [`ShardedIndex`] view (shard width
+    /// `shard_window`, the advisor's retention window) whenever the view
+    /// is current — rebuilt on the geometric schedule of
+    /// [`Track::refresh_sharded`] — and through the monolithic index
+    /// otherwise; the two are pinned equal float for float, so the route
+    /// never changes the fitted rates.
+    pub fn refit(
+        &mut self,
+        window: f64,
+        min_failures: usize,
+        shard_window: f64,
+    ) -> Result<Option<(f64, f64)>> {
+        self.refresh_sharded(shard_window);
+        let fitted = match &self.sharded {
+            Some(ShardedView { generation, index: Some(ix), .. })
+                if *generation == self.tail.generation() =>
+            {
+                refit_rates_sharded(&self.tail, ix, window, min_failures)
+            }
+            _ => refit_rates(&self.tail, window, min_failures),
+        };
+        match fitted {
             Ok(r) => {
                 self.rates = Some(r);
                 if let Some(store) = &mut self.store {
@@ -220,19 +312,55 @@ impl Track {
     }
 }
 
-/// Windowed `(λ̂, θ̂)` re-fit over the last `window` seconds of the tail.
+/// Windowed `(λ̂, θ̂)` re-fit over the last `window` seconds of the tail,
+/// scanning the monolithic index — the oracle
+/// [`refit_rates_sharded`] is pinned against.
 pub fn refit_rates(tail: &TraceTail, window: f64, min_failures: usize) -> Result<(f64, f64)> {
-    ensure!(window > 0.0 && window.is_finite(), "window must be positive and finite");
-    let end = tail.last_event_time().context("no events ingested yet")?;
-    let t0 = (end - window).max(0.0);
-
-    // λ̂: slope of cumulative failure count over failure time.
+    let t0 = window_start(tail, window)?;
     let fails: Vec<f64> = tail
         .index()
         .events_since(t0)
         .filter(|&(_, _, repair)| !repair)
         .map(|(t, _, _)| t)
         .collect();
+    refit_from_window(tail, fails, t0, min_failures)
+}
+
+/// [`refit_rates`] over a shared sharded view of the same tail
+/// ([`ShardedIndex::from_tail`]): the failure-time scan touches only the
+/// shards overlapping the window. Identical floats by construction
+/// (`events_since` is pinned element-equal), asserted by the unit test
+/// below.
+pub fn refit_rates_sharded(
+    tail: &TraceTail,
+    index: &ShardedIndex,
+    window: f64,
+    min_failures: usize,
+) -> Result<(f64, f64)> {
+    let t0 = window_start(tail, window)?;
+    let fails: Vec<f64> = index
+        .events_since(t0)
+        .filter(|&(_, _, repair)| !repair)
+        .map(|(t, _, _)| t)
+        .collect();
+    refit_from_window(tail, fails, t0, min_failures)
+}
+
+fn window_start(tail: &TraceTail, window: f64) -> Result<f64> {
+    ensure!(window > 0.0 && window.is_finite(), "window must be positive and finite");
+    let end = tail.last_event_time().context("no events ingested yet")?;
+    Ok((end - window).max(0.0))
+}
+
+/// The shared fit core: λ̂ from the window's failure times, θ̂ from its
+/// completed outages.
+fn refit_from_window(
+    tail: &TraceTail,
+    fails: Vec<f64>,
+    t0: f64,
+    min_failures: usize,
+) -> Result<(f64, f64)> {
+    // λ̂: slope of cumulative failure count over failure time.
     let need = min_failures.max(2);
     if fails.len() < need {
         bail!("window holds {} failures, need {need}", fails.len());
@@ -348,11 +476,11 @@ mod tests {
         let (accepted, merged) = track.ingest(&batch).unwrap();
         assert_eq!((accepted, merged), (3, 1));
         assert_eq!((track.accepted, track.merged), (3, 1));
-        assert!(track.refit(10_000.0, 2).unwrap().is_some());
+        assert!(track.refit(10_000.0, 2, 1_000.0).unwrap().is_some());
         let (lh, th) = track.rates.unwrap();
         assert!(lh > 0.0 && th > 0.0);
         // Below min_failures the previous rates stay.
-        assert!(track.refit(10_000.0, 50).unwrap().is_none());
+        assert!(track.refit(10_000.0, 50, 1_000.0).unwrap().is_none());
         assert_eq!(track.rates, Some((lh, th)));
         // A conflicting event fails the batch; valid events before it
         // stay applied and counted.
@@ -405,6 +533,53 @@ mod tests {
         assert_eq!(track.enforce_retention(2, 1_000.0).unwrap(), 4);
         assert_eq!(track.tail.n_events(), 2);
         assert_eq!(track.tail.first_event_time(), Some(9_100.0));
+    }
+
+    #[test]
+    fn sharded_refit_matches_monolithic_exactly() {
+        let (lam, theta) = (1.0 / (2.0 * DAY), 1.0 / 2_400.0);
+        let mut track = tracked_tail(8, lam, theta, 90.0, 9);
+        let window = 40.0 * DAY;
+        let mono = refit_rates(&track.tail, window, 8).unwrap();
+        for shard_window in [0.5 * DAY, 7.0 * DAY, 1_000.0 * DAY] {
+            let index = ShardedIndex::from_tail(&track.tail, shard_window, 4).unwrap();
+            let sharded = refit_rates_sharded(&track.tail, &index, window, 8).unwrap();
+            assert_eq!(mono, sharded, "sharded re-fit diverged at shard window {shard_window}");
+        }
+        // Track::refit routes through the shared view and lands the same
+        // rates; an unchanged tail reuses the build.
+        assert_eq!(track.refit(window, 8, 7.0 * DAY).unwrap(), Some(mono));
+        let view = track.sharded.as_ref().expect("first refit builds the view");
+        let (gen_before, built) = (view.generation, view.built_events);
+        assert_eq!(built, track.tail.n_events());
+        assert!(view.index.is_some(), "a current view keeps its index");
+        track.refit(window, 8, 7.0 * DAY).unwrap();
+        assert_eq!(
+            track.sharded.as_ref().unwrap().generation,
+            gen_before,
+            "unchanged tail must not rebuild the sharded view"
+        );
+        // A small mutation stales the view: no rebuild, the index is
+        // freed immediately, and the re-fit falls back to the monolithic
+        // scan — identical rates either way.
+        track.tail.push(0, 100.0 * DAY, 100.0 * DAY + 60.0).unwrap();
+        let after_push = track.refit(window, 8, 7.0 * DAY).unwrap().unwrap();
+        assert_eq!(after_push, refit_rates(&track.tail, window, 8).unwrap());
+        let view = track.sharded.as_ref().unwrap();
+        assert_eq!(view.generation, gen_before, "one mutation must not trigger a rebuild");
+        assert!(view.index.is_none(), "a stale view must free its index");
+        // Enough mutations cross the amortized threshold: rebuilt fresh,
+        // and that refit scans the sharded view again.
+        let mut t = 101.0 * DAY;
+        while track.tail.n_events() < 2 * built {
+            track.tail.push(1, t, t + 120.0).unwrap();
+            t += 3_600.0;
+        }
+        track.refit(window, 8, 7.0 * DAY).unwrap();
+        let view = track.sharded.as_ref().unwrap();
+        assert_eq!(view.generation, track.tail.generation(), "grown tail must rebuild");
+        assert_eq!(view.built_events, track.tail.n_events());
+        assert!(view.index.is_some());
     }
 
     #[test]

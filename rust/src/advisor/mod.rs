@@ -6,8 +6,9 @@
 //! warm-startable builders, the trace index, the rate fitting) already
 //! existed as one-shot machinery; this module keeps it alive.
 //!
-//! * [`protocol`] — hand-rolled JSON wire schema (`select`, `model`,
-//!   `ingest`, `status`), idiom-matching `util::json`/`util::cli`;
+//! * [`protocol`] — hand-rolled JSON wire schema (`select`,
+//!   `select_batch`, `model`, `ingest`, `status`), idiom-matching
+//!   `util::json`/`util::cli`;
 //! * [`cache`] — the sharded concurrent recommendation cache: builders
 //!   keyed by a canonical spec hash, LRU-evicted under a memory budget,
 //!   repeat hits answered in O(1) without touching the model layer;
@@ -16,6 +17,13 @@
 //!   least-squares MTTF/MTTR re-fits;
 //! * [`server`] — the `std::net::TcpListener` HTTP/1.1 front end (with
 //!   keep-alive connections) and the `malleable-ckpt serve` subcommand.
+//!
+//! Selection misses resolve through the batch-first facade
+//! ([`crate::api::SelectBatch`]): `/v1/select` is a one-spec batch, and
+//! `/v1/select_batch` amortizes one HTTP round trip over many systems —
+//! per-item cache lookups and tracked-rate resolution first, then every
+//! miss fans out through one deduped batch (identical specs build once)
+//! whose canonical hashes are, by shared definition, the cache keys.
 //!
 //! With `serve --data-dir`, every track is durably backed by
 //! [`crate::store`]: each accepted outage, rate re-fit, registered
@@ -73,7 +81,9 @@ use std::time::{Duration, Instant};
 
 use anyhow::{Context, Result};
 
+use crate::api::{self, SelectSpec};
 use crate::markov::{BuildOptions, ModelInputs, SharedBuilder};
+use crate::runtime::ComputeEngine;
 use crate::search::{select_interval_shared, SearchConfig};
 use crate::store::{SpecRecord, TraceStore, TrackState};
 use crate::util::json::Json;
@@ -146,6 +156,7 @@ pub struct Advisor {
     bg_cv: Condvar,
     started: Instant,
     selects: AtomicU64,
+    select_batches: AtomicU64,
     ingests: AtomicU64,
     models: AtomicU64,
     bg_completed: AtomicU64,
@@ -173,6 +184,7 @@ impl Advisor {
             bg_cv: Condvar::new(),
             started: Instant::now(),
             selects: AtomicU64::new(0),
+            select_batches: AtomicU64::new(0),
             ingests: AtomicU64::new(0),
             models: AtomicU64::new(0),
             bg_completed: AtomicU64::new(0),
@@ -215,10 +227,17 @@ impl Advisor {
         self.tracks.lock().unwrap().get(track_id).cloned()
     }
 
-    /// Answer one `select`: cache hit in O(1), miss builds a
-    /// [`SharedBuilder`], runs the search and caches both.
-    pub fn select(&self, req: &SelectRequest) -> Result<Json> {
-        self.selects.fetch_add(1, Ordering::Relaxed);
+    /// Resolve one request to model inputs and cache keys — the shared
+    /// front half of `/v1/select` and `/v1/select_batch`: substitute the
+    /// track's re-fitted rates, then decide which key the request serves
+    /// from. A registered request keeps resolving to its current entry
+    /// while a drift re-selection is in flight (the background job owns
+    /// the refresh) AND under sub-threshold rate jitter: the threshold
+    /// that decides when to refresh also decides when to re-key —
+    /// otherwise every routine ingest batch would turn the next select
+    /// into a foreground rebuild and a fresh cache entry. Returns
+    /// `(inputs, serve_key, fresh_key)`; a miss builds under `fresh_key`.
+    fn resolve(&self, req: &SelectRequest) -> Result<(ModelInputs, u64, u64)> {
         let mut system = req.system;
         let handle = req.track.as_deref().and_then(|tid| self.track_handle(tid));
         if let Some(h) = &handle {
@@ -230,12 +249,6 @@ impl Advisor {
         }
         let inputs = ModelInputs::new(system, &req.app, &req.policy)?;
         let fresh_key = canonical_key(&inputs, &req.cfg);
-        // A registered request keeps resolving to its current entry while
-        // a drift re-selection is in flight (the background job owns the
-        // refresh) AND under sub-threshold rate jitter: the threshold
-        // that decides when to refresh also decides when to re-key —
-        // otherwise every routine ingest batch would turn the next
-        // select into a foreground rebuild and a fresh cache entry.
         let mut key = fresh_key;
         if let Some(h) = &handle {
             let identity = Self::spec_identity(&inputs, &req.cfg);
@@ -251,6 +264,44 @@ impl Advisor {
                 }
             }
         }
+        Ok((inputs, key, fresh_key))
+    }
+
+    /// Cache a freshly solved selection and register it under its track;
+    /// the shared back half of the select paths.
+    fn admit(
+        &self,
+        req: &SelectRequest,
+        inputs: &ModelInputs,
+        fresh_key: u64,
+        ok: &api::SelectOk,
+        insert: bool,
+    ) -> Json {
+        let (lambda, theta) = (inputs.system.lambda, inputs.system.theta);
+        if insert {
+            let builder =
+                Arc::clone(ok.builder.as_ref().expect("the native facade returns a builder"));
+            let bytes = entry_bytes(&builder, ok.search.probes.len());
+            self.cache.insert(CacheEntry {
+                key: fresh_key,
+                builder,
+                result: ok.search.clone(),
+                lambda,
+                theta,
+                bytes,
+                stale: false,
+            });
+        }
+        self.register(req.track.as_deref(), fresh_key, inputs, &req.cfg, (lambda, theta));
+        select_response(&ok.search, fresh_key, false, lambda, theta, req.track.as_deref(), false)
+    }
+
+    /// Answer one `select`: cache hit in O(1); a miss resolves through
+    /// the batch facade (a one-spec [`api::SelectBatch`]) and caches the
+    /// returned builder alongside the result.
+    pub fn select(&self, req: &SelectRequest) -> Result<Json> {
+        self.selects.fetch_add(1, Ordering::Relaxed);
+        let (inputs, key, fresh_key) = self.resolve(req)?;
         if let Some(entry) = self.cache.get(key) {
             // Register with the rates the served entry was computed with:
             // the drift reference must describe the recommendation, not
@@ -274,34 +325,65 @@ impl Advisor {
         }
         // Miss: build at the current (possibly re-fitted) rates under the
         // fresh key, whatever registration said.
-        let builder = Arc::new(SharedBuilder::native(inputs.clone(), &req.cfg.build));
-        let result = select_interval_shared(&builder, &req.cfg)?;
-        let bytes = entry_bytes(&builder, result.probes.len());
-        self.cache.insert(CacheEntry {
-            key: fresh_key,
-            builder,
-            result: result.clone(),
-            lambda: system.lambda,
-            theta: system.theta,
-            bytes,
-            stale: false,
-        });
-        self.register(
-            req.track.as_deref(),
-            fresh_key,
-            &inputs,
-            &req.cfg,
-            (system.lambda, system.theta),
-        );
-        Ok(select_response(
-            &result,
-            fresh_key,
-            false,
-            system.lambda,
-            system.theta,
-            req.track.as_deref(),
-            false,
-        ))
+        let spec = SelectSpec::new(inputs.clone(), req.cfg);
+        let ok = api::select_one(spec, &ComputeEngine::native())?;
+        Ok(self.admit(req, &inputs, fresh_key, &ok, true))
+    }
+
+    /// Answer one `/v1/select_batch`: per-item tracked-rate resolution
+    /// and cache lookup first (hits answered O(1)), then every miss fans
+    /// out through ONE [`api::SelectBatch`] — identical specs collapse to
+    /// a single build — and lands in the cache like a singleton select.
+    /// Per-item failures become per-item error objects carrying the item
+    /// index; one bad item never poisons the batch.
+    pub fn select_batch(&self, reqs: &[SelectRequest]) -> Json {
+        self.select_batches.fetch_add(1, Ordering::Relaxed);
+        self.selects.fetch_add(reqs.len() as u64, Ordering::Relaxed);
+        let mut items: Vec<Option<Json>> = (0..reqs.len()).map(|_| None).collect();
+        // (item index, resolved inputs, fresh key) of each cache miss.
+        let mut misses: Vec<(usize, ModelInputs, u64)> = Vec::new();
+        let mut batch = api::SelectBatch::new();
+        for (i, req) in reqs.iter().enumerate() {
+            match self.resolve(req) {
+                Ok((inputs, key, fresh_key)) => {
+                    if let Some(entry) = self.cache.get(key) {
+                        self.register(
+                            req.track.as_deref(),
+                            key,
+                            &inputs,
+                            &req.cfg,
+                            (entry.lambda, entry.theta),
+                        );
+                        items[i] = Some(select_response(
+                            &entry.result,
+                            key,
+                            true,
+                            entry.lambda,
+                            entry.theta,
+                            req.track.as_deref(),
+                            entry.stale,
+                        ));
+                    } else {
+                        batch.push(SelectSpec::new(inputs.clone(), req.cfg));
+                        misses.push((i, inputs, fresh_key));
+                    }
+                }
+                Err(e) => items[i] = Some(protocol::batch_item_error(i, &format!("{e:#}"))),
+            }
+        }
+        let outcomes = batch.run(&ComputeEngine::native());
+        let mut inserted: std::collections::HashSet<u64> = std::collections::HashSet::new();
+        for ((i, inputs, fresh_key), outcome) in misses.into_iter().zip(outcomes) {
+            debug_assert_eq!(outcome.key, fresh_key, "facade and cache keys diverged");
+            items[i] = Some(match &outcome.result {
+                // Duplicates share one build; insert its entry once.
+                Ok(ok) => self.admit(&reqs[i], &inputs, fresh_key, ok, inserted.insert(fresh_key)),
+                Err(e) => protocol::batch_item_error(i, &e.0),
+            });
+        }
+        protocol::select_batch_response(
+            items.into_iter().map(|o| o.expect("every item answered")).collect(),
+        )
     }
 
     /// Fetch a track handle, creating the track on first sight. The
@@ -424,7 +506,11 @@ impl Advisor {
             );
         }
         let (accepted, merged) = track.ingest(&req.events)?;
-        let refit = track.refit(self.cfg.refit_window, self.cfg.min_refit_failures)?;
+        let refit = track.refit(
+            self.cfg.refit_window,
+            self.cfg.min_refit_failures,
+            self.cfg.retention_window,
+        )?;
         let evicted = track.enforce_retention(self.cfg.max_events, self.cfg.retention_window)?;
         let mut enqueued = 0usize;
         if let Some(fresh) = track.rates {
@@ -522,6 +608,9 @@ impl Advisor {
     }
 
     fn reselect(&self, job: &BgJob) -> Result<()> {
+        // Documented exception to the api::SelectBatch front door
+        // (DESIGN.md §11): the refresh must seed π from the pre-drift
+        // recommendation, a warm-start the batch facade does not expose.
         let builder = Arc::new(SharedBuilder::native(job.inputs.clone(), &job.cfg.build));
         if let Some(pi) = &job.seed {
             builder.seed_pi(pi.clone());
@@ -659,6 +748,7 @@ impl Advisor {
         let mut requests = Json::obj();
         requests
             .set("select", Json::from(self.selects.load(Ordering::Relaxed)))
+            .set("select_batch", Json::from(self.select_batches.load(Ordering::Relaxed)))
             .set("ingest", Json::from(self.ingests.load(Ordering::Relaxed)))
             .set("model", Json::from(self.models.load(Ordering::Relaxed)));
 
@@ -768,6 +858,7 @@ fn track_from_state(state: TrackState) -> Result<Track> {
         reselects: state.reselects,
         evicted: state.evicted,
         store: None,
+        sharded: None,
     })
 }
 
@@ -927,6 +1018,50 @@ mod tests {
         let after = advisor.select(&req).unwrap();
         assert_eq!(after.get("cached").unwrap().as_bool(), Some(true));
         assert_eq!(after.get("interval").unwrap().as_f64(), Some(new_interval));
+    }
+
+    #[test]
+    fn select_batch_mixes_cached_cold_duplicate_and_error_items() {
+        let advisor = Advisor::new(AdvisorConfig::default());
+        let warm = advisor.select(&select_req(2.0, None)).unwrap();
+        let mut bad = select_req(8.0, None);
+        bad.cfg.i_min = -1.0;
+        let reqs =
+            vec![select_req(2.0, None), select_req(8.0, None), select_req(8.0, None), bad];
+        let resp = advisor.select_batch(&reqs);
+        assert_eq!(resp.get("ok").unwrap().as_bool(), Some(true));
+        assert_eq!(resp.get("count").unwrap().as_f64(), Some(4.0));
+        let results = resp.get("results").unwrap().as_arr().unwrap();
+        // Item 0: O(1) hit on the entry the singleton select warmed.
+        assert_eq!(results[0].get("cached").unwrap().as_bool(), Some(true));
+        assert_eq!(
+            results[0].get("interval").unwrap().as_f64(),
+            warm.get("interval").unwrap().as_f64()
+        );
+        // Items 1/2: identical cold specs — answered in order, pinned to
+        // the offline oracle, deduped into one build and one cache entry.
+        let want = oracle(&select_req(8.0, None));
+        for r in &results[1..3] {
+            assert_eq!(r.get("cached").unwrap().as_bool(), Some(false));
+            assert_eq!(r.get("interval").unwrap().as_f64(), Some(want.interval));
+            assert_eq!(r.get("uwt").unwrap().as_f64(), Some(want.uwt));
+        }
+        assert_eq!(
+            results[1].get("key").unwrap().as_str(),
+            results[2].get("key").unwrap().as_str()
+        );
+        // Item 3: a per-item error naming its index; siblings unaffected.
+        assert_eq!(results[3].get("ok").unwrap().as_bool(), Some(false));
+        assert_eq!(results[3].get("index").unwrap().as_f64(), Some(3.0));
+        assert!(results[3].get("error").unwrap().as_str().unwrap().contains("i_min"));
+        let stats = advisor.cache.stats();
+        assert_eq!(stats.entries, 2, "duplicate specs must share one cache entry");
+        assert_eq!(stats.insertions, 2);
+        // The batch's cold build now serves repeats from the cache.
+        let again = advisor.select_batch(&reqs[1..2]);
+        let again = &again.get("results").unwrap().as_arr().unwrap()[0];
+        assert_eq!(again.get("cached").unwrap().as_bool(), Some(true));
+        assert_eq!(again.get("interval").unwrap().as_f64(), Some(want.interval));
     }
 
     #[test]

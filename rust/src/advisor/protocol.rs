@@ -29,6 +29,22 @@
 //! `{"rp": [...]}`. All except `system` are optional. `track` opts the
 //! request into ingest-driven refresh (see [`crate::advisor::ingest`]).
 //!
+//! ## `POST /v1/select_batch`
+//!
+//! ```json
+//! {"items": [
+//!   {"system": "system-1/128", "app": "qr"},
+//!   {"system": "condor/64", "app": "md", "track": "cluster-b"}
+//! ]}
+//! ```
+//!
+//! Each item carries the full `select` schema (per-item `track`
+//! included). A malformed item fails the whole request with `400` naming
+//! the offending index (`items[3]: ...`); a *runtime* per-item failure
+//! after parsing becomes a per-item `{"ok": false, "index": ...,
+//! "error": ...}` in `results` without poisoning its siblings. `results`
+//! is positional: `results[i]` answers `items[i]`.
+//!
 //! ## `POST /v1/ingest`
 //!
 //! ```json
@@ -223,6 +239,31 @@ pub fn parse_select(j: &Json) -> Result<SelectRequest> {
     Ok(SelectRequest { system, app, policy, cfg, track })
 }
 
+/// Items accepted per `select_batch` request — past this a client should
+/// split its batch (the body-size cap would bite soon anyway).
+pub const MAX_BATCH_ITEMS: usize = 1024;
+
+/// Parse a `select_batch` body: a non-empty `items` array of `select`
+/// request objects. Any malformed item fails the whole parse with its
+/// index — the caller answers `400`; per-item *runtime* errors are the
+/// advisor's job, not the parser's.
+pub fn parse_select_batch(j: &Json) -> Result<Vec<SelectRequest>> {
+    let arr = j
+        .get("items")
+        .and_then(Json::as_arr)
+        .context("'items' (array of select requests) is required")?;
+    if arr.is_empty() {
+        bail!("'items' must not be empty");
+    }
+    if arr.len() > MAX_BATCH_ITEMS {
+        bail!("batch of {} items exceeds the {MAX_BATCH_ITEMS}-item cap", arr.len());
+    }
+    arr.iter()
+        .enumerate()
+        .map(|(i, item)| parse_select(item).with_context(|| format!("items[{i}]")))
+        .collect()
+}
+
 pub fn parse_model(j: &Json) -> Result<ModelRequest> {
     let system = parse_system(j.get("system").context("'system' is required")?)?;
     let app = parse_app(j.get("app"), system.n)?;
@@ -305,6 +346,26 @@ pub fn select_response(
 pub fn error_response(message: &str) -> Json {
     let mut o = Json::obj();
     o.set("ok", Json::from(false)).set("error", Json::from(message));
+    o
+}
+
+/// One failed `select_batch` item: `results[index]` for the caller, with
+/// the index repeated inline so an error is self-describing when logged.
+pub fn batch_item_error(index: usize, message: &str) -> Json {
+    let mut o = Json::obj();
+    o.set("ok", Json::from(false))
+        .set("index", Json::from(index))
+        .set("error", Json::from(message));
+    o
+}
+
+/// The `select_batch` response envelope: positional `results`, one per
+/// request item.
+pub fn select_batch_response(results: Vec<Json>) -> Json {
+    let mut o = Json::obj();
+    o.set("ok", Json::from(true))
+        .set("count", Json::from(results.len()))
+        .set("results", Json::Arr(results));
     o
 }
 
@@ -415,6 +476,45 @@ mod tests {
             r#"{"track": "c1", "events": [{"proc": -1, "fail": 1, "repair": 2}]}"#
         ))
         .is_err());
+    }
+
+    #[test]
+    fn select_batch_parses_items_and_names_the_bad_one() {
+        let reqs = parse_select_batch(&parse(
+            r#"{"items": [
+                {"system": "system-1/128"},
+                {"system": {"n": 4, "mttf_days": 2, "mttr_min": 45}, "app": "md", "track": "c9"}
+            ]}"#,
+        ))
+        .unwrap();
+        assert_eq!(reqs.len(), 2);
+        assert_eq!(reqs[0].system.n, 128);
+        assert_eq!(reqs[1].system.n, 4);
+        assert_eq!(reqs[1].app.name, "MD");
+        assert_eq!(reqs[1].track.as_deref(), Some("c9"));
+
+        assert!(parse_select_batch(&parse(r#"{}"#)).is_err());
+        assert!(parse_select_batch(&parse(r#"{"items": []}"#)).is_err());
+        assert!(parse_select_batch(&parse(r#"{"items": 3}"#)).is_err());
+        // The failing index travels in the error chain.
+        let err = parse_select_batch(&parse(
+            r#"{"items": [{"system": "system-1/128"}, {"app": "qr"}]}"#,
+        ))
+        .unwrap_err();
+        assert!(format!("{err:#}").contains("items[1]"), "index lost: {err:#}");
+    }
+
+    #[test]
+    fn select_batch_response_shape() {
+        let resp = select_batch_response(vec![error_response("x"), batch_item_error(1, "boom")]);
+        let re = Json::parse(&resp.to_compact()).unwrap();
+        assert_eq!(re.get("ok").unwrap().as_bool(), Some(true));
+        assert_eq!(re.get("count").unwrap().as_f64(), Some(2.0));
+        let results = re.get("results").unwrap().as_arr().unwrap();
+        assert_eq!(results.len(), 2);
+        assert_eq!(results[1].get("index").unwrap().as_f64(), Some(1.0));
+        assert_eq!(results[1].get("error").unwrap().as_str(), Some("boom"));
+        assert_eq!(results[1].get("ok").unwrap().as_bool(), Some(false));
     }
 
     #[test]

@@ -10,6 +10,7 @@
 //! |--------------------|--------|---------------------------------------|
 //! | `/healthz`         | GET    | —                                     |
 //! | `/v1/select`       | POST   | [`protocol::parse_select`]            |
+//! | `/v1/select_batch` | POST   | [`protocol::parse_select_batch`]      |
 //! | `/v1/model`        | POST   | [`protocol::parse_model`]             |
 //! | `/v1/ingest`       | POST   | [`protocol::parse_ingest`]            |
 //! | `/v1/status`       | GET    | —                                     |
@@ -222,6 +223,15 @@ fn route(advisor: &Advisor, req: &HttpRequest, stop: &AtomicBool) -> (u16, Json)
             },
             Err(e) => (400, protocol::error_response(&format!("{e:#}"))),
         },
+        ("POST", "/v1/select_batch") => {
+            match parse_body().and_then(|j| protocol::parse_select_batch(&j)) {
+                // Runtime failures are per-item objects inside the 200
+                // envelope; only a malformed body (failing index named)
+                // is a 400.
+                Ok(reqs) => (200, advisor.select_batch(&reqs)),
+                Err(e) => (400, protocol::error_response(&format!("{e:#}"))),
+            }
+        }
         ("POST", "/v1/model") => match parse_body().and_then(|j| protocol::parse_model(&j)) {
             Ok(r) => match advisor.model(&r) {
                 Ok(j) => (200, j),
@@ -244,8 +254,8 @@ fn route(advisor: &Advisor, req: &HttpRequest, stop: &AtomicBool) -> (u16, Json)
             o.set("ok", Json::from(true)).set("stopping", Json::from(true));
             (200, o)
         }
-        (_, "/healthz" | "/v1/status" | "/v1/select" | "/v1/model" | "/v1/ingest"
-        | "/v1/shutdown") => (405, protocol::error_response("method not allowed")),
+        (_, "/healthz" | "/v1/status" | "/v1/select" | "/v1/select_batch" | "/v1/model"
+        | "/v1/ingest" | "/v1/shutdown") => (405, protocol::error_response("method not allowed")),
         _ => (404, protocol::error_response("no such endpoint")),
     }
 }
@@ -493,6 +503,28 @@ mod tests {
         assert_eq!(route(&advisor, &req("GET", "/v1/select", ""), &stop).0, 405);
         assert_eq!(route(&advisor, &req("POST", "/v1/select", "{"), &stop).0, 400);
         assert_eq!(route(&advisor, &req("POST", "/v1/select", "{}"), &stop).0, 400);
+        assert_eq!(route(&advisor, &req("GET", "/v1/select_batch", ""), &stop).0, 405);
+        assert_eq!(route(&advisor, &req("POST", "/v1/select_batch", "{}"), &stop).0, 400);
+        assert_eq!(
+            route(&advisor, &req("POST", "/v1/select_batch", r#"{"items": []}"#), &stop).0,
+            400
+        );
+        // A malformed item 400s naming its index; parsing never runs the
+        // model, so this stays cheap.
+        let (code, body) = route(
+            &advisor,
+            &req(
+                "POST",
+                "/v1/select_batch",
+                r#"{"items": [{"system": "system-1/128"}, {"app": "qr"}]}"#,
+            ),
+            &stop,
+        );
+        assert_eq!(code, 400);
+        assert!(
+            body.get("error").unwrap().as_str().unwrap().contains("items[1]"),
+            "400 must name the failing index: {body}"
+        );
         assert_eq!(route(&advisor, &req("GET", "/healthz", ""), &stop).0, 200);
         assert!(!stop.load(Ordering::SeqCst));
         assert_eq!(route(&advisor, &req("POST", "/v1/shutdown", ""), &stop).0, 200);

@@ -1,0 +1,458 @@
+//! Batch-first selection facade — the one front door to the interval
+//! search.
+//!
+//! The paper's workflow is inherently batch-shaped: §VI evaluates the
+//! UWT model across many (system, application, policy) combinations and
+//! "a large number of simulations". Before this module every surface
+//! re-plumbed the same request by hand — the CLI called
+//! [`crate::search::select_interval`], the advisor hand-rolled a
+//! [`SharedBuilder`] per cache miss, experiments wired builders into
+//! their segment loops — and nothing could amortize work *across*
+//! requests. [`SelectSpec`] captures the full canonical request tuple
+//! (system, app cost vectors, policy `rp` vector, search shape, build
+//! options); [`SelectBatch`] validates every spec up front, **dedupes**
+//! identical specs by [`SelectSpec::canonical_hash`] (one model build
+//! answers all duplicates), fans the unique specs out over
+//! [`crate::util::pool`] — one [`SharedBuilder`] per unique spec, π
+//! warm-started across that spec's probes — and returns per-spec
+//! [`SelectOutcome`]s **in input order** with per-item errors, so one
+//! bad spec never poisons the batch.
+//!
+//! Every selection caller routes through here: CLI `select` (a one-spec
+//! batch), the advisor's `/v1/select` and `/v1/select_batch` handlers,
+//! the experiment sweeps ([`crate::experiments::common::run_segments`]),
+//! and `benches/perf.rs`.
+//!
+//! ## Equivalence contract
+//!
+//! Batch results are pinned item-for-item to the singleton
+//! [`crate::search::select_interval`] oracle (`rust/tests/
+//! engine_equivalence.rs`): a cold [`SharedBuilder`] reproduces
+//! `select_interval` bit for bit on the native engine, duplicates share
+//! the representative's result (identical inputs give identical floats),
+//! and `BuildOptions::workers` — the only knob the fan-out adjusts — is
+//! pinned worker-invariant, which is also why [`canonical_hash`]
+//! excludes it.
+
+use std::collections::hash_map::Entry;
+use std::collections::HashMap;
+use std::sync::Arc;
+
+use anyhow::{anyhow, Result};
+
+use crate::markov::{ModelInputs, SharedBuilder};
+use crate::runtime::ComputeEngine;
+use crate::search::{select_interval, select_interval_shared, SearchConfig, SearchResult};
+use crate::util::fnv::Fnv64;
+use crate::util::pool;
+
+/// Canonical hash of one selection request — the shared identity under
+/// which the advisor cache keys entries and [`SelectBatch`] dedupes
+/// specs. Hashes the semantic content: system triple, the three
+/// per-processor-count cost vectors, the policy `rp` vector (not its
+/// display name), the search shape and the result-affecting build
+/// options. `BuildOptions::workers` is deliberately excluded: results
+/// are pinned worker-invariant.
+pub fn canonical_hash(inputs: &ModelInputs, cfg: &SearchConfig) -> u64 {
+    let mut h = Fnv64::new();
+    h.u64(0x4144_5631); // layout version tag ("ADV1")
+    let n = inputs.system.n;
+    h.u64(n as u64);
+    h.f64(inputs.system.lambda);
+    h.f64(inputs.system.theta);
+    for a in 1..=n {
+        h.f64(inputs.checkpoint_cost(a));
+        h.f64(inputs.work_per_sec(a));
+        h.f64(inputs.mean_recovery_into(a));
+    }
+    for &rp in inputs.policy.vector() {
+        h.u64(rp as u64);
+    }
+    h.f64(cfg.i_min);
+    h.f64(cfg.i_max);
+    h.u64(cfg.refine_steps as u64);
+    h.f64(cfg.band);
+    match cfg.build.thres {
+        Some(t) => {
+            h.byte(1);
+            h.f64(t);
+        }
+        None => h.byte(0),
+    }
+    h.byte(cfg.build.exact_probes as u8);
+    h.f64(cfg.build.stationary.tol);
+    h.u64(cfg.build.stationary.max_iters as u64);
+    h.f64(cfg.build.stationary.damping);
+    h.finish()
+}
+
+/// One fully specified selection request: everything that determines the
+/// recommendation, and nothing that does not.
+#[derive(Clone)]
+pub struct SelectSpec {
+    pub inputs: ModelInputs,
+    pub cfg: SearchConfig,
+}
+
+impl SelectSpec {
+    pub fn new(inputs: ModelInputs, cfg: SearchConfig) -> SelectSpec {
+        SelectSpec { inputs, cfg }
+    }
+
+    /// The spec's canonical identity (see [`canonical_hash`]).
+    pub fn canonical_hash(&self) -> u64 {
+        canonical_hash(&self.inputs, &self.cfg)
+    }
+
+    /// Reject a spec whose search shape would degenerate the search —
+    /// [`SelectBatch::run`] validates every spec up front so a bad item
+    /// fails alone instead of deep inside a worker.
+    pub fn validate(&self) -> Result<()> {
+        self.cfg.validate()
+    }
+}
+
+/// A failed batch item. Owns its message (rather than an
+/// `anyhow::Error`) so duplicates of a failed spec can share the
+/// representative's outcome like successful ones do.
+#[derive(Debug, Clone)]
+pub struct SelectError(pub String);
+
+impl std::fmt::Display for SelectError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl std::error::Error for SelectError {}
+
+/// A successful batch item.
+#[derive(Clone)]
+pub struct SelectOk {
+    /// The selection, identical to what the singleton
+    /// [`crate::search::select_interval`] oracle returns for this spec.
+    pub search: SearchResult,
+    /// The warm builder that ran the search (native engine only) —
+    /// long-lived callers (the advisor cache) park it for O(1) repeats
+    /// and warm-started refreshes. Duplicates of one spec share the
+    /// `Arc`.
+    pub builder: Option<Arc<SharedBuilder>>,
+}
+
+/// Per-spec result of [`SelectBatch::run`], in input order.
+pub struct SelectOutcome {
+    /// The spec's canonical hash (the dedup identity).
+    pub key: u64,
+    /// Input index of the representative spec whose search produced this
+    /// outcome — equals the item's own index for unique specs, the first
+    /// occurrence's index for duplicates.
+    pub solved_by: usize,
+    pub result: Result<SelectOk, SelectError>,
+}
+
+impl SelectOutcome {
+    /// The selection, or the per-item error as `anyhow`.
+    pub fn search(&self) -> Result<&SearchResult> {
+        match &self.result {
+            Ok(ok) => Ok(&ok.search),
+            Err(e) => Err(anyhow!(e.clone())),
+        }
+    }
+}
+
+/// A batch of selection requests. Push specs in the order answers are
+/// wanted; [`SelectBatch::run`] returns outcomes in that same order.
+#[derive(Default)]
+pub struct SelectBatch {
+    specs: Vec<SelectSpec>,
+}
+
+impl SelectBatch {
+    pub fn new() -> SelectBatch {
+        SelectBatch::default()
+    }
+
+    pub fn from_specs(specs: Vec<SelectSpec>) -> SelectBatch {
+        SelectBatch { specs }
+    }
+
+    /// Append a spec; returns its batch index.
+    pub fn push(&mut self, spec: SelectSpec) -> usize {
+        self.specs.push(spec);
+        self.specs.len() - 1
+    }
+
+    pub fn len(&self) -> usize {
+        self.specs.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.specs.is_empty()
+    }
+
+    /// Run the batch with the pool's default fan-out width, retaining
+    /// each unique spec's builder in its outcome (the advisor parks
+    /// them in its cache).
+    pub fn run(&self, engine: &ComputeEngine) -> Vec<SelectOutcome> {
+        self.run_with_workers(engine, pool::default_workers())
+    }
+
+    /// Like [`SelectBatch::run`], but drops each unique spec's builder
+    /// the moment its search completes (`SelectOk::builder` is `None`
+    /// for every outcome). Sweep-style callers that keep only the
+    /// `SearchResult`s — [`crate::experiments::common::run_segments`] —
+    /// use this so peak builder memory stays with the
+    /// `min(workers, unique specs)` *concurrent* builds instead of one
+    /// retained builder per unique spec (~0.5 GB each at N = 512).
+    pub fn run_discarding_builders(&self, engine: &ComputeEngine) -> Vec<SelectOutcome> {
+        self.execute(engine, pool::default_workers(), false)
+    }
+
+    /// Run the batch: validate every spec, dedupe by canonical hash, fan
+    /// the unique specs out over at most `workers` threads (native
+    /// engines; PJRT engines are thread-affine and evaluate serially),
+    /// and return per-spec outcomes in input order. Each unique spec's
+    /// fan-out share of the worker budget goes to its builder
+    /// (`BuildOptions::workers` is divided, never multiplied — results
+    /// are pinned worker-invariant, so only scheduling changes).
+    pub fn run_with_workers(&self, engine: &ComputeEngine, workers: usize) -> Vec<SelectOutcome> {
+        self.execute(engine, workers, true)
+    }
+
+    fn execute(
+        &self,
+        engine: &ComputeEngine,
+        workers: usize,
+        keep_builders: bool,
+    ) -> Vec<SelectOutcome> {
+        let n = self.specs.len();
+        let keys: Vec<u64> = self.specs.iter().map(SelectSpec::canonical_hash).collect();
+        let mut invalid: Vec<Option<SelectError>> = self
+            .specs
+            .iter()
+            .map(|s| s.validate().err().map(|e| SelectError(format!("{e:#}"))))
+            .collect();
+
+        // Dedup: the first valid occurrence of each key represents it.
+        let mut slot_of: HashMap<u64, usize> = HashMap::new();
+        let mut uniques: Vec<usize> = Vec::new();
+        for i in 0..n {
+            if invalid[i].is_none() {
+                if let Entry::Vacant(slot) = slot_of.entry(keys[i]) {
+                    slot.insert(uniques.len());
+                    uniques.push(i);
+                }
+            }
+        }
+
+        let fan = workers.max(1).min(uniques.len().max(1));
+        let solved: Vec<Result<SelectOk, SelectError>> = match engine {
+            ComputeEngine::Native => pool::run_indexed(uniques.len(), fan, |u| {
+                let spec = &self.specs[uniques[u]];
+                let mut cfg = spec.cfg;
+                cfg.build.workers = (cfg.build.workers / fan).max(1);
+                let builder = Arc::new(SharedBuilder::native(spec.inputs.clone(), &cfg.build));
+                match select_interval_shared(&builder, &cfg) {
+                    // Without `keep_builders` the Arc drops right here,
+                    // as this task ends — not after the whole batch.
+                    Ok(search) => {
+                        Ok(SelectOk { search, builder: keep_builders.then_some(builder) })
+                    }
+                    Err(e) => Err(SelectError(format!("{e:#}"))),
+                }
+            }),
+            ComputeEngine::NativeGeneric => pool::run_indexed(uniques.len(), fan, |u| {
+                // The generic engine is zero-state: each task gets its
+                // own handle (the paper-faithful expm path has no shared
+                // builder to keep).
+                let spec = &self.specs[uniques[u]];
+                let mut cfg = spec.cfg;
+                cfg.build.workers = (cfg.build.workers / fan).max(1);
+                let engine = ComputeEngine::native_generic();
+                match select_interval(&spec.inputs, &engine, &cfg) {
+                    Ok(search) => Ok(SelectOk { search, builder: None }),
+                    Err(e) => Err(SelectError(format!("{e:#}"))),
+                }
+            }),
+            _ => uniques
+                .iter()
+                .map(|&i| {
+                    let spec = &self.specs[i];
+                    match select_interval(&spec.inputs, engine, &spec.cfg) {
+                        Ok(search) => Ok(SelectOk { search, builder: None }),
+                        Err(e) => Err(SelectError(format!("{e:#}"))),
+                    }
+                })
+                .collect(),
+        };
+
+        (0..n)
+            .map(|i| match invalid[i].take() {
+                Some(err) => SelectOutcome { key: keys[i], solved_by: i, result: Err(err) },
+                None => {
+                    let slot = slot_of[&keys[i]];
+                    SelectOutcome {
+                        key: keys[i],
+                        solved_by: uniques[slot],
+                        result: solved[slot].clone(),
+                    }
+                }
+            })
+            .collect()
+    }
+}
+
+/// The facade's singleton path — a one-spec batch. CLI `select`, the
+/// advisor's `/v1/select` miss path and per-segment evaluations resolve
+/// through this, so every selection in the system shares one engine
+/// dispatch.
+pub fn select_one(spec: SelectSpec, engine: &ComputeEngine) -> Result<SelectOk> {
+    let mut outcomes = SelectBatch::from_specs(vec![spec]).run(engine);
+    outcomes
+        .pop()
+        .expect("a one-spec batch yields one outcome")
+        .result
+        .map_err(|e| anyhow!(e))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::SystemParams;
+    use crate::policies::ReschedulingPolicy;
+
+    fn inputs(n: usize, mttf_days: f64) -> ModelInputs {
+        let system = SystemParams::from_mttf_mttr(n, mttf_days, 45.0);
+        ModelInputs::from_raw(
+            system,
+            vec![60.0; n],
+            (1..=n).map(|a| (a as f64).powf(0.85)).collect(),
+            vec![15.0; n],
+            ReschedulingPolicy::greedy(n),
+        )
+        .unwrap()
+    }
+
+    fn quick_cfg() -> SearchConfig {
+        SearchConfig { refine_steps: 2, ..Default::default() }
+    }
+
+    #[test]
+    fn canonical_hash_matches_cache_key() {
+        // One definition: the advisor cache keys and the batch dedup must
+        // agree forever (persisted SpecRecords carry these hashes).
+        let cfg = quick_cfg();
+        let spec = SelectSpec::new(inputs(5, 3.0), cfg);
+        assert_eq!(
+            spec.canonical_hash(),
+            crate::advisor::cache::canonical_key(&inputs(5, 3.0), &cfg)
+        );
+    }
+
+    #[test]
+    fn one_spec_batch_matches_select_interval() {
+        let engine = ComputeEngine::native();
+        let cfg = quick_cfg();
+        let oracle = select_interval(&inputs(6, 2.0), &engine, &cfg).unwrap();
+        let got = select_one(SelectSpec::new(inputs(6, 2.0), cfg), &engine).unwrap();
+        assert_eq!(got.search.probes, oracle.probes);
+        assert_eq!(got.search.interval, oracle.interval);
+        assert_eq!(got.search.uwt, oracle.uwt);
+        assert!(got.builder.is_some(), "native path must return the builder");
+    }
+
+    #[test]
+    fn dedup_builds_once_and_preserves_input_order() {
+        let engine = ComputeEngine::native();
+        let cfg = quick_cfg();
+        // Indices 0, 2, 3 are the same spec; 1 and 4 are distinct.
+        let batch = SelectBatch::from_specs(vec![
+            SelectSpec::new(inputs(5, 2.0), cfg),
+            SelectSpec::new(inputs(5, 6.0), cfg),
+            SelectSpec::new(inputs(5, 2.0), cfg),
+            SelectSpec::new(inputs(5, 2.0), cfg),
+            SelectSpec::new(inputs(6, 2.0), cfg),
+        ]);
+        let out = batch.run(&engine);
+        assert_eq!(out.len(), 5);
+        assert_eq!(out[0].key, out[2].key);
+        assert_eq!(out[0].key, out[3].key);
+        assert_ne!(out[0].key, out[1].key);
+        assert_ne!(out[0].key, out[4].key);
+        // Duplicates are answered by item 0's single build: same
+        // representative, the same builder instance, identical floats.
+        for i in [2usize, 3] {
+            assert_eq!(out[i].solved_by, 0, "duplicate {i} not deduped");
+            let (a, b) = (out[0].result.as_ref().unwrap(), out[i].result.as_ref().unwrap());
+            assert!(
+                Arc::ptr_eq(a.builder.as_ref().unwrap(), b.builder.as_ref().unwrap()),
+                "duplicates must share one SharedBuilder"
+            );
+            assert_eq!(a.search.probes, b.search.probes);
+            assert_eq!(a.search.interval, b.search.interval);
+        }
+        assert_eq!(out[1].solved_by, 1);
+        assert_eq!(out[4].solved_by, 4);
+        // Order: every outcome pinned to its own spec's oracle.
+        for (i, mttf, n) in [(0usize, 2.0, 5usize), (1, 6.0, 5), (4, 2.0, 6)] {
+            let oracle = select_interval(&inputs(n, mttf), &engine, &cfg).unwrap();
+            let got = out[i].search().unwrap();
+            assert_eq!(got.interval, oracle.interval, "item {i} out of order");
+            assert_eq!(got.probes, oracle.probes);
+        }
+    }
+
+    #[test]
+    fn per_item_error_is_isolated() {
+        let engine = ComputeEngine::native();
+        let bad_cfg = SearchConfig { i_min: -5.0, ..quick_cfg() };
+        let batch = SelectBatch::from_specs(vec![
+            SelectSpec::new(inputs(5, 2.0), quick_cfg()),
+            SelectSpec::new(inputs(5, 2.0), bad_cfg),
+            SelectSpec::new(inputs(5, 4.0), quick_cfg()),
+        ]);
+        let out = batch.run(&engine);
+        assert!(out[0].result.is_ok(), "valid item poisoned by a bad sibling");
+        assert!(out[2].result.is_ok());
+        let err = out[1].result.as_ref().unwrap_err();
+        assert!(err.0.contains("i_min"), "error should name the bad field: {err}");
+        assert_eq!(out[1].solved_by, 1, "an invalid item is its own representative");
+    }
+
+    #[test]
+    fn generic_engine_batch_matches_its_oracle() {
+        let engine = ComputeEngine::native_generic();
+        let cfg = SearchConfig { refine_steps: 1, ..Default::default() };
+        let oracle = select_interval(&inputs(4, 3.0), &engine, &cfg).unwrap();
+        let out = SelectBatch::from_specs(vec![SelectSpec::new(inputs(4, 3.0), cfg)]).run(&engine);
+        let got = out[0].search().unwrap();
+        assert_eq!(got.interval, oracle.interval);
+        assert_eq!(got.probes, oracle.probes);
+        assert!(out[0].result.as_ref().unwrap().builder.is_none());
+    }
+
+    #[test]
+    fn discarding_run_matches_but_keeps_no_builders() {
+        let engine = ComputeEngine::native();
+        let cfg = quick_cfg();
+        let specs =
+            vec![SelectSpec::new(inputs(5, 2.0), cfg), SelectSpec::new(inputs(5, 6.0), cfg)];
+        let kept = SelectBatch::from_specs(specs.clone()).run(&engine);
+        let lean = SelectBatch::from_specs(specs).run_discarding_builders(&engine);
+        for (a, b) in kept.iter().zip(&lean) {
+            assert_eq!(a.key, b.key);
+            let (a, b) = (a.result.as_ref().unwrap(), b.result.as_ref().unwrap());
+            assert!(a.builder.is_some());
+            assert!(b.builder.is_none(), "discarding run must not retain builders");
+            assert_eq!(a.search.probes, b.search.probes);
+            assert_eq!(a.search.interval, b.search.interval);
+            assert_eq!(a.search.uwt, b.search.uwt);
+        }
+    }
+
+    #[test]
+    fn empty_batch_is_empty() {
+        assert!(SelectBatch::new().run(&ComputeEngine::native()).is_empty());
+        assert!(SelectBatch::new().is_empty());
+    }
+}

@@ -1,14 +1,19 @@
 //! Shared experiment plumbing: segment sampling, trace construction from
 //! the paper's published system rows, report tables.
 
+use crate::api::{SelectBatch, SelectSpec};
 use crate::apps::AppProfile;
 use crate::config::SystemParams;
-use crate::metrics::{evaluate_segment, evaluate_segment_reference, AggregateEvaluation, SegmentEvaluation};
+use crate::markov::ModelInputs;
+use crate::metrics::{
+    evaluate_segment_reference, evaluate_segment_simulated, segment_rates, AggregateEvaluation,
+    SegmentEvaluation,
+};
 use crate::policies::ReschedulingPolicy;
 use crate::runtime::ComputeEngine;
-use crate::search::SearchConfig;
+use crate::search::{SearchConfig, SearchResult};
 use crate::traces::synth::{generate, SynthSpec};
-use crate::traces::FailureTrace;
+use crate::traces::{FailureTrace, ShardedIndex};
 use crate::util::pool;
 use crate::util::rng::Rng;
 use anyhow::Result;
@@ -28,6 +33,9 @@ pub struct ExperimentOptions {
     pub seed: u64,
     /// Interval-search configuration.
     pub search: SearchConfig,
+    /// Time-window width of the shared [`ShardedIndex`] segment
+    /// evaluations run over, days (see [`run_segments`]).
+    pub shard_window_days: f64,
 }
 
 impl Default for ExperimentOptions {
@@ -38,6 +46,7 @@ impl Default for ExperimentOptions {
             trace_days: 160.0,
             seed: 20_170_611,
             search: SearchConfig { refine_steps: 2, ..Default::default() },
+            shard_window_days: 7.0,
         }
     }
 }
@@ -66,15 +75,33 @@ fn segment_params(trace: &FailureTrace, opts: &ExperimentOptions, rng: &mut Rng)
         .collect()
 }
 
-/// Run `segments` random-segment evaluations of (trace, app, policy),
-/// fanned out over the scoped thread pool (segments are independent; the
-/// RNG draws are made serially first, so results are identical to the
-/// seed's serial loop). PJRT engines are thread-affine and evaluate
-/// serially.
+/// Run `segments` random-segment evaluations of (trace, app, policy) —
+/// batch-first, in three phases:
 ///
-/// Memory note: each concurrent segment holds its own `ModelBuilder`
-/// caches for the duration of its interval search, so peak memory scales
-/// with `min(workers, segments)` — ~0.5 GB per concurrent segment at
+/// 1. estimate every segment's `(λ̂, θ̂)` from its trace history
+///    (serial, deterministic — the RNG draws were already made by
+///    [`segment_params`]);
+/// 2. push one [`SelectBatch`] of every segment's interval search
+///    through the facade: identical specs (common when segments share
+///    history or fall back to the system rates) **dedupe into a single
+///    model build**, unique specs fan out over the pool, and the engine
+///    dispatch (native parallel / PJRT serial) lives in the facade;
+/// 3. fan the simulations out over the pool, every segment walking one
+///    **shared** [`ShardedIndex`] (window `opts.shard_window_days`) via
+///    `Simulator::run_sharded`/`sweep_par_sharded`, so the merged
+///    timeline is compiled once — in parallel — instead of once per
+///    segment, and each walk touches only the shards its span overlaps.
+///
+/// Results are identical to the seed's serial loop (equivalence-pinned):
+/// the facade's cold builders reproduce `select_interval` bit for bit,
+/// duplicates share floats a re-run would reproduce anyway, and the
+/// sharded walk is pinned field-for-field to the monolithic one.
+///
+/// Memory note: each concurrent search in phase 2 holds its own builder
+/// caches, and every builder is dropped the moment its search completes
+/// ([`SelectBatch::run_discarding_builders`] — only the `SearchResult`s
+/// survive into phase 3), so peak memory scales with
+/// `min(workers, unique specs)` — ~0.5 GB per concurrent build at
 /// N = 512 (see `markov::builder`). Lower `opts.segments` or run the
 /// serial [`run_segments_reference`] on memory-constrained machines.
 pub fn run_segments(
@@ -87,33 +114,48 @@ pub fn run_segments(
     rng: &mut Rng,
 ) -> Result<AggregateEvaluation> {
     let params = segment_params(trace, opts, rng);
-    let workers = pool::default_workers().min(params.len().max(1));
     let fallback = Some((sys.lambda, sys.theta));
-    let evals: Vec<Result<SegmentEvaluation>> = if engine.is_native() && workers > 1 {
-        // Hand each worker its own (zero-state) native engine handle: the
-        // engine value itself must not cross threads when it is PJRT.
-        let generic = matches!(*engine, ComputeEngine::NativeGeneric);
-        // Split the caller's worker budget between the segment fan-out and
-        // each segment's inner model-build pool instead of multiplying
-        // them (worker count affects scheduling only, never results).
-        let mut search_cfg = opts.search;
-        search_cfg.build.workers = (opts.search.build.workers / workers).max(1);
-        pool::map_slice(&params, workers, |&(start, dur)| {
-            let engine = if generic {
-                ComputeEngine::native_generic()
-            } else {
-                ComputeEngine::native()
-            };
-            evaluate_segment(trace, app, policy, &engine, start, dur, &search_cfg, fallback)
-        })
-    } else {
-        params
-            .iter()
-            .map(|&(start, dur)| {
-                evaluate_segment(trace, app, policy, engine, start, dur, &opts.search, fallback)
-            })
-            .collect()
-    };
+
+    // Phase 1: per-segment rates.
+    let rates: Vec<(f64, f64)> = params
+        .iter()
+        .map(|&(start, _)| segment_rates(trace, start, fallback))
+        .collect::<Result<_>>()?;
+
+    // Phase 2: one deduped interval-search batch through the facade.
+    // Builders are discarded as each search completes — a sweep keeps
+    // only the `SearchResult`s, so no builder outlives its build slot.
+    let mut batch = SelectBatch::new();
+    for &(lambda, theta) in &rates {
+        let system = SystemParams::new(trace.n_procs(), lambda, theta);
+        batch.push(SelectSpec::new(ModelInputs::new(system, app, policy)?, opts.search));
+    }
+    let searches: Vec<SearchResult> = batch
+        .run_discarding_builders(engine)
+        .into_iter()
+        .map(|o| o.result.map(|ok| ok.search).map_err(anyhow::Error::from))
+        .collect::<Result<_>>()?;
+
+    // Phase 3: shared sharded index; simulations fan out (the simulator
+    // is engine-independent, so even PJRT-searched segments parallelize).
+    let sharded =
+        ShardedIndex::new(trace, opts.shard_window_days * 86_400.0, pool::default_workers())?;
+    let workers = pool::default_workers().min(params.len().max(1));
+    let evals: Vec<Result<SegmentEvaluation>> = pool::run_indexed(params.len(), workers, |i| {
+        let (start, dur) = params[i];
+        let search = searches[i].clone();
+        evaluate_segment_simulated(
+            trace,
+            app,
+            policy,
+            start,
+            dur,
+            &opts.search,
+            rates[i],
+            search,
+            Some(&sharded),
+        )
+    });
     let mut agg = AggregateEvaluation::default();
     for eval in evals {
         agg.segments.push(eval?);

@@ -249,16 +249,24 @@ pub fn moldable_vs_malleable(opts: &ExperimentOptions) -> Result<Json> {
             report_rows.push(o);
         };
 
-        // Malleable, greedy and AB policies, at the model-selected interval.
-        for policy in [
+        // Malleable, greedy and AB policies, at the model-selected
+        // interval — both selections pushed as one batch through the
+        // facade (the policies differ, so the specs stay unique; the
+        // batch still fans the two builds out in parallel).
+        let policies = [
             ReschedulingPolicy::greedy(sys.n),
             ReschedulingPolicy::availability_based(&trace, 50, &mut rng)?,
-        ] {
-            let inputs = crate::markov::ModelInputs::new(sys, &app, &policy)?;
-            let sel = crate::search::select_interval(&inputs, &engine, &opts.search)?;
+        ];
+        let mut batch = crate::api::SelectBatch::new();
+        for policy in &policies {
+            let inputs = crate::markov::ModelInputs::new(sys, &app, policy)?;
+            batch.push(crate::api::SelectSpec::new(inputs, opts.search));
+        }
+        for (policy, outcome) in policies.iter().zip(batch.run(&engine)) {
+            let sel = outcome.search()?;
             let mut cfg = SimConfig::new(start, dur, sel.interval);
             cfg.prefer_reliable = policy.name == "ab";
-            let r = Simulator::new(&trace, &app, &policy).run(&cfg)?;
+            let r = Simulator::new(&trace, &app, policy).run(&cfg)?;
             push(
                 format!("malleable-{}", policy.name),
                 format!("<={}", sys.n),

@@ -3,12 +3,12 @@
 use anyhow::Result;
 
 use super::common::{run_segments, trace_for_system, ExperimentOptions, TablePrinter};
+use crate::api::{select_one, SelectSpec};
 use crate::apps::{AppKind, AppProfile};
 use crate::config::{paper_system, SystemParams, TABLE2_SYSTEMS};
 use crate::markov::ModelInputs;
 use crate::policies::ReschedulingPolicy;
 use crate::runtime::ComputeEngine;
-use crate::search::select_interval;
 use crate::util::json::Json;
 use crate::util::rng::Rng;
 
@@ -152,7 +152,7 @@ pub fn interval_curve(
 ) -> Result<Json> {
     let policy = ReschedulingPolicy::greedy(sys.n);
     let inputs = ModelInputs::new(*sys, app, &policy)?;
-    let res = select_interval(&inputs, engine, &opts.search)?;
+    let res = select_one(SelectSpec::new(inputs, opts.search), engine)?.search;
     let mut report = Json::obj();
     report
         .set("i_model_hours", Json::from(res.interval / 3_600.0))

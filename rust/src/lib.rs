@@ -51,6 +51,23 @@
 //!   machine-readable `BENCH_perf.json` at the repo root (`make
 //!   bench-smoke` for the CI-sized grid).
 //!
+//! ## Batch-first selection API
+//!
+//! [`api`] is the one front door to the interval search:
+//! [`api::SelectSpec`] captures the full canonical request tuple
+//! (system, app cost vectors, policy vector, search shape, build
+//! options) and [`api::SelectBatch`] validates every spec up front,
+//! dedupes identical specs by canonical hash (one build answers all
+//! duplicates), fans the unique specs out over [`util::pool`] — one
+//! [`markov::SharedBuilder`] per unique spec, π warm-started across its
+//! probes — and returns per-spec outcomes in input order with per-item
+//! errors. Every caller resolves through it: the CLI `select`
+//! subcommand, the advisor's `/v1/select` and `/v1/select_batch`
+//! endpoints, the experiment sweeps and the perf bench. Batch results
+//! are pinned item-for-item to the singleton [`search::select_interval`]
+//! oracle (interval exact, UWT within 1e-9 relative) by
+//! `rust/tests/engine_equivalence.rs`.
+//!
 //! ## Advisor service (Layer 4)
 //!
 //! [`advisor`] keeps the machinery above alive as a long-running
@@ -69,6 +86,7 @@
 //! parallelize over [`util::pool`].
 
 pub mod advisor;
+pub mod api;
 pub mod apps;
 pub mod baselines;
 pub mod config;
@@ -87,6 +105,7 @@ pub mod util;
 
 /// Convenient re-exports of the types most users need.
 pub mod prelude {
+    pub use crate::api::{SelectBatch, SelectSpec};
     pub use crate::apps::AppProfile;
     pub use crate::config::SystemParams;
     pub use crate::markov::{MalleableModel, ModelInputs};

@@ -9,6 +9,7 @@ use std::path::Path;
 
 use malleable_ckpt::advisor::server::{AdvisorServer, ServeOptions};
 use malleable_ckpt::advisor::AdvisorConfig;
+use malleable_ckpt::api::{select_one, SelectSpec};
 use malleable_ckpt::apps::{AppKind, AppProfile};
 use malleable_ckpt::config::{paper_system, SystemParams};
 use malleable_ckpt::experiments::{common::trace_for_system, extensions, figures, tables, ExperimentOptions};
@@ -16,7 +17,7 @@ use malleable_ckpt::markov::{BuildOptions, MalleableModel, ModelInputs};
 use malleable_ckpt::metrics::evaluate_segment;
 use malleable_ckpt::policies::ReschedulingPolicy;
 use malleable_ckpt::runtime::ComputeEngine;
-use malleable_ckpt::search::{select_interval, SearchConfig};
+use malleable_ckpt::search::SearchConfig;
 use malleable_ckpt::store::TraceStore;
 use malleable_ckpt::traces::parse::to_lanl_csv;
 use malleable_ckpt::util::cli::{flag, switch, App, CommandSpec};
@@ -28,7 +29,7 @@ fn app_spec() -> App {
     App::new("malleable-ckpt", "checkpointing intervals for malleable applications (Raghavendra & Vadhiyar 2017)")
         .command(CommandSpec {
             name: "select",
-            about: "select the UWT-optimal checkpointing interval for a system/app/policy",
+            about: "select the UWT-optimal checkpointing interval for a system/app/policy (a one-spec api::SelectBatch — the same facade the daemon serves)",
             flags: vec![
                 flag("system", "NAME", "paper system name (e.g. system-1/128, condor/256)", Some("system-1/128")),
                 flag("app", "NAME", "application: qr, cg or md", Some("qr")),
@@ -44,7 +45,7 @@ fn app_spec() -> App {
         })
         .command(CommandSpec {
             name: "serve",
-            about: "run the advisor daemon: HTTP/1.1 + JSON endpoints /v1/select, /v1/model, /v1/ingest, /v1/status (see DESIGN.md §7)",
+            about: "run the advisor daemon: HTTP/1.1 + JSON endpoints /v1/select, /v1/select_batch, /v1/model, /v1/ingest, /v1/status (see DESIGN.md §7, §11)",
             flags: vec![
                 flag("addr", "HOST:PORT", "bind address (port 0 = ephemeral)", Some("127.0.0.1:7743")),
                 flag("workers", "N", "HTTP handler threads (0 = auto)", Some("0")),
@@ -224,7 +225,7 @@ fn cmd_select(p: &malleable_ckpt::util::cli::Parsed) -> Result<()> {
         policy.name,
         engine.name()
     );
-    let res = select_interval(&inputs, &engine, &SearchConfig::default())?;
+    let res = select_one(SelectSpec::new(inputs, SearchConfig::default()), &engine)?.search;
     if p.switch("json") {
         let mut o = Json::obj();
         o.set("interval", Json::from(res.interval))
@@ -318,6 +319,9 @@ fn cmd_serve(p: &malleable_ckpt::util::cli::Parsed) -> Result<()> {
     println!("try:");
     println!(
         "  curl -s http://{addr}/v1/select -d '{{\"system\": \"system-1/128\", \"app\": \"qr\"}}'"
+    );
+    println!(
+        "  curl -s http://{addr}/v1/select_batch -d '{{\"items\": [{{\"system\": \"system-1/128\"}}, {{\"system\": \"condor/64\"}}]}}'"
     );
     println!("  curl -s http://{addr}/v1/status");
     server.run()

@@ -16,13 +16,14 @@
 
 use anyhow::Result;
 
+use crate::api::{select_one, SelectSpec};
 use crate::apps::AppProfile;
 use crate::markov::ModelInputs;
 use crate::policies::ReschedulingPolicy;
 use crate::runtime::ComputeEngine;
-use crate::search::{select_interval, select_interval_uncached, SearchConfig, SearchResult};
+use crate::search::{select_interval_uncached, SearchConfig, SearchResult};
 use crate::simulator::{SimConfig, Simulator};
-use crate::traces::{stats::estimate_rates, FailureTrace};
+use crate::traces::{stats::estimate_rates, FailureTrace, ShardedIndex};
 use crate::config::SystemParams;
 
 /// One segment evaluation.
@@ -64,14 +65,33 @@ pub fn sweep_grid(i_min: f64, i_max: f64, points: usize) -> Vec<f64> {
     v
 }
 
+/// Rates for a segment: estimated from the failure history before
+/// `start` (the paper's protocol), falling back to `fallback` when the
+/// history is unusable. Hoisted out of [`evaluate_segment`] so batch
+/// callers ([`crate::experiments::common::run_segments`]) can resolve
+/// every segment's rates up front and push one deduped
+/// [`crate::api::SelectBatch`].
+pub fn segment_rates(
+    trace: &FailureTrace,
+    start: f64,
+    fallback: Option<(f64, f64)>,
+) -> Result<(f64, f64)> {
+    match estimate_rates(trace, start) {
+        Ok(r) => Ok(r),
+        Err(e) => fallback.ok_or(e),
+    }
+}
+
 /// Evaluate model efficiency on one execution segment of a trace.
 ///
 /// `(λ, θ)` are estimated from the failure history before `start` (the
 /// paper's protocol); if there is no usable history, falls back to
 /// `fallback` rates.
 ///
-/// Runs on the optimized engine: cached interval search
-/// ([`select_interval`]), indexed simulator, parallel oracle sweep.
+/// Runs on the optimized engine: the interval search resolves through
+/// the batch facade (a one-spec [`crate::api::SelectBatch`] — identical
+/// floats to [`crate::search::select_interval`]), then the indexed
+/// simulator and parallel oracle sweep.
 /// [`evaluate_segment_reference`] keeps the pre-optimization serial path
 /// for equivalence testing and perf tracking.
 #[allow(clippy::too_many_arguments)]
@@ -118,38 +138,84 @@ fn evaluate_segment_impl(
     fallback: Option<(f64, f64)>,
     reference: bool,
 ) -> Result<SegmentEvaluation> {
-    let (lambda, theta) = match estimate_rates(trace, start) {
-        Ok(r) => r,
-        Err(e) => fallback.ok_or(e)?,
-    };
-
-    let system = SystemParams::new(trace.n_procs(), lambda, theta);
+    let rates = segment_rates(trace, start, fallback)?;
+    let system = SystemParams::new(trace.n_procs(), rates.0, rates.1);
     let inputs = ModelInputs::new(system, app, policy)?;
-    let search = if reference {
-        select_interval_uncached(&inputs, engine, search_cfg)?
-    } else {
-        select_interval(&inputs, engine, search_cfg)?
-    };
-    let i_model = search.interval;
+    if !reference {
+        let search = select_one(SelectSpec::new(inputs, *search_cfg), engine)?.search;
+        return evaluate_segment_simulated(
+            trace, app, policy, start, duration, search_cfg, rates, search, None,
+        );
+    }
 
+    // The seed serial path: reference simulator, serial oracle sweep.
+    let search = select_interval_uncached(&inputs, engine, search_cfg)?;
     let sim = Simulator::new(trace, app, policy);
-    let base = SimConfig::new(start, duration, i_model);
-    let at_model = if reference { sim.run_reference(&base)? } else { sim.run(&base)? };
+    let base = SimConfig::new(start, duration, search.interval);
+    let at_model = sim.run_reference(&base)?;
+    let grid = oracle_grid(search_cfg, duration, search.interval);
+    let sweep_results = grid
+        .iter()
+        .map(|&iv| {
+            let mut cfg = base.clone();
+            cfg.interval = iv;
+            Ok((iv, sim.run_reference(&cfg)?))
+        })
+        .collect::<Result<Vec<_>>>()?;
+    Ok(finish_segment(start, duration, rates, search, at_model, sweep_results))
+}
 
-    // Simulator oracle sweep for UW_highest / I_sim.
+/// The simulation half of a segment evaluation, given an already-run
+/// interval search (the batch-first callers run their searches through
+/// one [`crate::api::SelectBatch`] first): simulate at `I_model`, sweep
+/// the oracle grid for `UW_highest`/`I_sim`, report the paper's
+/// `pd`/efficiency. With a shared [`ShardedIndex`] the run and the sweep
+/// touch only the shards the segment overlaps
+/// ([`Simulator::run_sharded`], [`Simulator::sweep_par_sharded`]) —
+/// field-for-field identical to the monolithic walk.
+#[allow(clippy::too_many_arguments)]
+pub fn evaluate_segment_simulated(
+    trace: &FailureTrace,
+    app: &AppProfile,
+    policy: &ReschedulingPolicy,
+    start: f64,
+    duration: f64,
+    search_cfg: &SearchConfig,
+    rates: (f64, f64),
+    search: SearchResult,
+    sharded: Option<&ShardedIndex>,
+) -> Result<SegmentEvaluation> {
+    let sim = Simulator::new(trace, app, policy);
+    let base = SimConfig::new(start, duration, search.interval);
+    let at_model = match sharded {
+        Some(index) => sim.run_sharded(index, &base)?,
+        None => sim.run(&base)?,
+    };
+    let grid = oracle_grid(search_cfg, duration, search.interval);
+    let sweep_results = match sharded {
+        Some(index) => sim.sweep_par_sharded(index, &base, &grid)?,
+        None => sim.sweep_par(&base, &grid)?,
+    };
+    Ok(finish_segment(start, duration, rates, search, at_model, sweep_results))
+}
+
+/// The sweep grid for `UW_highest`/`I_sim`: log-spaced plus `I_model`.
+fn oracle_grid(search_cfg: &SearchConfig, duration: f64, i_model: f64) -> Vec<f64> {
     let mut grid = sweep_grid(search_cfg.i_min, search_cfg.i_max.min(duration / 2.0), 24);
     grid.push(i_model);
-    let sweep_results = if reference {
-        grid.iter()
-            .map(|&iv| {
-                let mut cfg = base.clone();
-                cfg.interval = iv;
-                Ok((iv, sim.run_reference(&cfg)?))
-            })
-            .collect::<Result<Vec<_>>>()?
-    } else {
-        sim.sweep_par(&base, &grid)?
-    };
+    grid
+}
+
+/// Fold the simulated results into the paper's per-segment report.
+fn finish_segment(
+    start: f64,
+    duration: f64,
+    (lambda, theta): (f64, f64),
+    search: SearchResult,
+    at_model: crate::simulator::SimResult,
+    sweep_results: Vec<(f64, crate::simulator::SimResult)>,
+) -> SegmentEvaluation {
+    let i_model = search.interval;
     let mut uw_highest = f64::NEG_INFINITY;
     let mut i_sim = i_model;
     let mut uwt_sim = 0.0;
@@ -167,7 +233,7 @@ fn evaluate_segment_impl(
         0.0
     };
 
-    Ok(SegmentEvaluation {
+    SegmentEvaluation {
         start,
         duration,
         lambda,
@@ -181,7 +247,7 @@ fn evaluate_segment_impl(
         pd,
         efficiency: 100.0 - pd,
         search,
-    })
+    }
 }
 
 /// Aggregate over several random segments (the paper averages segments per

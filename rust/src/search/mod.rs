@@ -116,6 +116,18 @@ fn run_search(
     cfg.validate()?;
     let mut probes: Vec<(f64, f64)> = Vec::new();
 
+    // A degenerate spec can drive the model to a NaN/inf UWT; rejecting
+    // it here (instead of letting the probe comparisons below panic)
+    // turns the footgun into a per-request error the daemon can answer.
+    let mut eval = |i: f64| -> Result<f64> {
+        let uwt = eval(i)?;
+        ensure!(
+            uwt.is_finite(),
+            "non-finite UWT {uwt} at interval {i} (degenerate model inputs)"
+        );
+        Ok(uwt)
+    };
+
     // Phase 1: doubling from I_min until UWT decreases.
     let mut i = cfg.i_min;
     let mut prev: Option<f64> = None;
@@ -147,7 +159,7 @@ fn run_search(
     // probed intervals.
     for _ in 0..cfg.refine_steps {
         let mut sorted = probes.clone();
-        sorted.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap());
+        sorted.sort_by(|a, b| b.1.total_cmp(&a.1));
         let top: Vec<f64> = sorted.iter().take(3).map(|&(iv, _)| iv).collect();
         let lo = top.iter().copied().fold(f64::INFINITY, f64::min);
         let hi = top.iter().copied().fold(f64::NEG_INFINITY, f64::max);
@@ -180,12 +192,12 @@ fn run_search(
         }
     }
 
-    probes.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+    probes.sort_by(|a, b| a.0.total_cmp(&b.0));
     let (best_probed, best_uwt) = probes
         .iter()
         .copied()
-        .max_by(|a, b| a.1.partial_cmp(&b.1).unwrap())
-        .unwrap();
+        .max_by(|a, b| a.1.total_cmp(&b.1))
+        .expect("the doubling phase probes at least i_min");
 
     // Band-average: mean of intervals whose UWT is within `band` of best.
     let in_band: Vec<f64> = probes
@@ -401,6 +413,37 @@ mod tests {
             let rel = (a.1 - b.1).abs() / a.1.abs().max(1e-300);
             assert!(rel < 1e-9, "warm repeat moved UWT by {rel}");
         }
+    }
+
+    #[test]
+    fn non_finite_probe_uwt_is_rejected_not_panicked() {
+        // A NaN on the very first probe.
+        let cfg = SearchConfig { refine_steps: 2, ..Default::default() };
+        let err = run_search(&cfg, &mut |_| Ok(f64::NAN)).unwrap_err();
+        assert!(format!("{err:#}").contains("non-finite"), "unexpected error: {err:#}");
+        // An inf appearing mid-doubling (previously reached the
+        // partial_cmp(..).unwrap() sorts and panicked).
+        let mut k = 0usize;
+        let err = run_search(&cfg, &mut |_| {
+            k += 1;
+            Ok(if k < 3 { k as f64 } else { f64::INFINITY })
+        })
+        .unwrap_err();
+        assert!(format!("{err:#}").contains("non-finite"), "unexpected error: {err:#}");
+        // A -inf in the refinement phase (the doubling peaks cleanly
+        // first, so the failure lands on a bracket midpoint probe).
+        let mut m = 0usize;
+        let err = run_search(&cfg, &mut |_| {
+            m += 1;
+            Ok(match m {
+                1 => 5.0,
+                2 => 6.0,
+                3 => 5.5,
+                _ => f64::NEG_INFINITY,
+            })
+        })
+        .unwrap_err();
+        assert!(format!("{err:#}").contains("non-finite"), "unexpected error: {err:#}");
     }
 
     #[test]

@@ -481,6 +481,31 @@ impl<'a> Simulator<'a> {
         .into_iter()
         .collect()
     }
+
+    /// [`Simulator::sweep_par`] over a shared [`ShardedIndex`]: every
+    /// parallel run opens its own cursor on the one compiled index
+    /// ([`Simulator::run_sharded`] per interval), so a sweep touches only
+    /// the shards its segment overlaps and never recompiles the timeline.
+    /// Numerically identical to [`Simulator::sweep`] — `run_sharded` is
+    /// pinned field-for-field to `run`. Timelines forced off, as in
+    /// `sweep`.
+    pub fn sweep_par_sharded(
+        &self,
+        index: &ShardedIndex,
+        cfg_base: &SimConfig,
+        intervals: &[f64],
+    ) -> Result<Vec<(f64, SimResult)>> {
+        let mut base = cfg_base.clone();
+        base.record_timeline = false;
+        let workers = pool::default_workers().min(intervals.len().max(1));
+        pool::run_indexed(intervals.len(), workers, |i| {
+            let mut cfg = base.clone();
+            cfg.interval = intervals[i];
+            self.run_sharded(index, &cfg).map(|r| (intervals[i], r))
+        })
+        .into_iter()
+        .collect()
+    }
 }
 
 #[cfg(test)]
@@ -711,6 +736,28 @@ mod tests {
         );
         let foreign = ShardedIndex::new(&other, 86_400.0, 2).unwrap();
         assert!(sim.run_sharded(&foreign, &SimConfig::new(0.0, 86_400.0, 600.0)).is_err());
+    }
+
+    #[test]
+    fn sharded_sweep_matches_serial_sweep() {
+        let mut rng = Rng::new(35);
+        let trace = generate(
+            &SynthSpec::exponential(8, 1.0 / 86_400.0, 1.0 / 1_200.0, 25.0 * 86_400.0),
+            &mut rng,
+        );
+        let app = flat_app(8);
+        let policy = ReschedulingPolicy::greedy(8);
+        let sim = Simulator::new(&trace, &app, &policy);
+        let sharded = ShardedIndex::new(&trace, 2.0 * 86_400.0, 4).unwrap();
+        let cfg = SimConfig::new(86_400.0, 15.0 * 86_400.0, 1.0);
+        let grid: Vec<f64> = (0..9).map(|i| 300.0 * (2.0f64).powi(i)).collect();
+        let serial = sim.sweep(&cfg, &grid).unwrap();
+        let shrd = sim.sweep_par_sharded(&sharded, &cfg, &grid).unwrap();
+        assert_eq!(serial.len(), shrd.len());
+        for ((i1, r1), (i2, r2)) in serial.iter().zip(&shrd) {
+            assert_eq!(i1, i2);
+            assert_eq!(r1, r2, "sharded sweep diverged at interval {i1}");
+        }
     }
 
     #[test]

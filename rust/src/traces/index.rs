@@ -293,6 +293,11 @@ pub struct TraceTail {
     /// Per-processor sorted, non-overlapping `(fail, repair)` intervals.
     outages: Vec<Vec<(f64, f64)>>,
     index: TraceIndex,
+    /// Bumped on every mutation (new outage accepted, eviction that
+    /// removed something) — derived caches over the tail (the advisor's
+    /// shared [`super::ShardedIndex`] view) key their staleness on this.
+    /// Merged duplicates leave it untouched: the timeline is unchanged.
+    generation: u64,
 }
 
 impl TraceTail {
@@ -304,11 +309,17 @@ impl TraceTail {
             n_procs,
             outages: vec![Vec::new(); n_procs],
             index: TraceIndex::empty(n_procs),
+            generation: 0,
         })
     }
 
     pub fn n_procs(&self) -> usize {
         self.n_procs
+    }
+
+    /// Mutation counter: changes iff the merged timeline changed.
+    pub fn generation(&self) -> u64 {
+        self.generation
     }
 
     /// Total events (2 per outage) in the merged timeline.
@@ -357,6 +368,7 @@ impl TraceTail {
         }
         if changed {
             self.index = TraceIndex::from_outage_lists(self.n_procs, &self.outages);
+            self.generation += 1;
         }
         before - self.index.n_events()
     }
@@ -392,6 +404,7 @@ impl TraceTail {
         }
         list.insert(i, (fail, repair));
         self.index.insert_outage(proc, fail, repair);
+        self.generation += 1;
         Ok(true)
     }
 

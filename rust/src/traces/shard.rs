@@ -35,7 +35,7 @@
 
 use anyhow::{ensure, Result};
 
-use super::index::EventCursor;
+use super::index::{EventCursor, TraceTail};
 use super::FailureTrace;
 use crate::util::pool;
 
@@ -97,18 +97,36 @@ impl ShardedIndex {
     /// Partition and compile `trace` with `window`-second shards, sorting
     /// the shards in parallel on `workers` threads (1 = serial).
     pub fn new(trace: &FailureTrace, window: f64, workers: usize) -> Result<ShardedIndex> {
+        Self::build(trace.n_procs(), |p| trace.outages(p), window, workers)
+    }
+
+    /// Compile the advisor's appendable [`TraceTail`] into the same
+    /// sharded form — the substrate the drift re-fit path scans (see
+    /// [`ShardedIndex::events_since`]). Same invariants and the same
+    /// total order as [`ShardedIndex::new`]: the tail's per-processor
+    /// outage lists satisfy the validated-trace contract by
+    /// construction.
+    pub fn from_tail(tail: &TraceTail, window: f64, workers: usize) -> Result<ShardedIndex> {
+        Self::build(tail.n_procs(), |p| tail.outages(p), window, workers)
+    }
+
+    fn build<'a>(
+        n: usize,
+        outages: impl Fn(usize) -> &'a [(f64, f64)],
+        window: f64,
+        workers: usize,
+    ) -> Result<ShardedIndex> {
         ensure!(
             window > 0.0 && window.is_finite(),
             "shard window must be positive and finite, got {window}"
         );
-        let n = trace.n_procs();
 
         // Bucket events by window id; BTreeMap yields shards in order.
         let mut buckets: std::collections::BTreeMap<u64, Vec<(f64, u32, bool)>> =
             std::collections::BTreeMap::new();
         let mut n_events = 0usize;
         for p in 0..n {
-            for &(f, r) in trace.outages(p) {
+            for &(f, r) in outages(p) {
                 buckets.entry(wid(f, window)).or_default().push((f, p as u32, false));
                 buckets.entry(wid(r, window)).or_default().push((r, p as u32, true));
                 n_events += 2;
@@ -251,6 +269,22 @@ impl ShardedIndex {
     pub fn events(&self) -> impl Iterator<Item = (f64, usize, bool)> + '_ {
         self.shards.iter().flat_map(|s| {
             (0..s.times.len()).map(move |i| (s.times[i], s.procs[i] as usize, s.repair[i]))
+        })
+    }
+
+    /// Events with time `>= t0` in timeline order — the sharded
+    /// counterpart of [`super::TraceIndex::events_since`] (pinned equal
+    /// element for element by the tests below). Shards whose window
+    /// closes before `t0` are skipped without being decoded: `wid` is a
+    /// floor of a monotone division, so `wid(t_e) < wid(t0)` implies
+    /// `t_e < t0` exactly, and one `partition_point` inside the boundary
+    /// shard finds the first qualifying event.
+    pub fn events_since(&self, t0: f64) -> impl Iterator<Item = (f64, usize, bool)> + '_ {
+        let w = wid(t0.max(0.0), self.window);
+        let start = self.shards.partition_point(|s| s.wid < w);
+        self.shards[start..].iter().enumerate().flat_map(move |(k, s)| {
+            let lo = if k == 0 { s.times.partition_point(|&t| t < t0) } else { 0 };
+            (lo..s.times.len()).map(move |i| (s.times[i], s.procs[i] as usize, s.repair[i]))
         })
     }
 
@@ -651,5 +685,51 @@ mod tests {
         assert!(ShardedIndex::new(&trace, 0.0, 1).is_err());
         assert!(ShardedIndex::new(&trace, -5.0, 1).is_err());
         assert!(ShardedIndex::new(&trace, f64::INFINITY, 1).is_err());
+        let tail = TraceTail::new(2).unwrap();
+        assert!(ShardedIndex::from_tail(&tail, 0.0, 1).is_err());
+    }
+
+    #[test]
+    fn from_tail_matches_trace_build() {
+        // The same outages through the appendable tail (shuffled arrival)
+        // and through a FailureTrace must compile identically.
+        let trace = random_trace(17, 6, 30.0);
+        let mut tail = TraceTail::new(6).unwrap();
+        let mut events: Vec<(usize, f64, f64)> = (0..6)
+            .flat_map(|p| trace.outages(p).iter().map(move |&(f, r)| (p, f, r)))
+            .collect();
+        let mut rng = Rng::new(23);
+        for i in (1..events.len()).rev() {
+            events.swap(i, rng.below(i as u64 + 1) as usize);
+        }
+        for (p, f, r) in events {
+            tail.push(p, f, r).unwrap();
+        }
+        let from_trace = ShardedIndex::new(&trace, 3.0 * DAY, 4).unwrap();
+        let from_tail = ShardedIndex::from_tail(&tail, 3.0 * DAY, 4).unwrap();
+        let a: Vec<(f64, usize, bool)> = from_trace.events().collect();
+        let b: Vec<(f64, usize, bool)> = from_tail.events().collect();
+        assert_eq!(a, b, "tail and trace builds diverged");
+        assert_eq!(from_tail.n_events(), tail.n_events());
+    }
+
+    #[test]
+    fn events_since_matches_monolithic() {
+        let trace = random_trace(41, 8, 40.0);
+        let mono = TraceIndex::new(&trace);
+        for window in [0.3 * DAY, 2.0 * DAY, 500.0 * DAY] {
+            let sharded = ShardedIndex::new(&trace, window, 3).unwrap();
+            let mut rng = Rng::new(5);
+            let mut cuts: Vec<f64> =
+                (0..40).map(|_| rng.range(-DAY, trace.horizon() + DAY)).collect();
+            cuts.push(0.0);
+            // Exact event times too: the `t >= t0` boundary must agree.
+            cuts.extend(mono.events_since(0.0).take(5).map(|(t, _, _)| t));
+            for t0 in cuts {
+                let got: Vec<(f64, usize, bool)> = sharded.events_since(t0).collect();
+                let want: Vec<(f64, usize, bool)> = mono.events_since(t0).collect();
+                assert_eq!(got, want, "events_since({t0}) diverged at window {window}");
+            }
+        }
     }
 }

@@ -417,6 +417,72 @@ fn daemon_restart_on_data_dir_restores_tracks_and_recommendations() {
     let _ = std::fs::remove_dir_all(&data_dir);
 }
 
+#[test]
+fn select_batch_endpoint_round_trip() {
+    let (addr, handle) = boot(AdvisorConfig::default());
+
+    // Warm one spec, then batch [cached, cold, duplicate-of-cold].
+    let (code, warm) = http(addr, "POST", "/v1/select", &select_body(6, 2.0, "qr", None));
+    assert_eq!(code, 200);
+    let body = format!(
+        r#"{{"items": [{}, {}, {}]}}"#,
+        select_body(6, 2.0, "qr", None),
+        select_body(8, 4.0, "cg", None),
+        select_body(8, 4.0, "cg", None)
+    );
+    let (code, resp) = http(addr, "POST", "/v1/select_batch", &body);
+    assert_eq!(code, 200, "select_batch failed: {resp}");
+    assert_eq!(resp.get("ok").unwrap().as_bool(), Some(true));
+    assert_eq!(resp.get("count").unwrap().as_f64(), Some(3.0));
+    let results = resp.get("results").unwrap().as_arr().unwrap();
+
+    // Item 0: a hit on the warmed entry, byte-identical floats.
+    assert_eq!(results[0].get("cached").unwrap().as_bool(), Some(true));
+    assert_eq!(f(&results[0], "interval"), f(&warm, "interval"));
+    assert_eq!(f(&results[0], "uwt"), f(&warm, "uwt"));
+
+    // Items 1/2: one cold build answers both, pinned to the offline
+    // oracle (interval exact, UWT within the pinned tolerance).
+    let want = oracle(8, 4.0, "cg", None);
+    for r in &results[1..3] {
+        assert_eq!(r.get("cached").unwrap().as_bool(), Some(false));
+        assert_eq!(f(r, "interval"), want.interval, "batch item != offline oracle");
+        let rel = (f(r, "uwt") - want.uwt).abs() / want.uwt;
+        assert!(rel < 1e-9, "batch item UWT off by {rel}");
+    }
+    assert_eq!(
+        results[1].get("key").unwrap().as_str(),
+        results[2].get("key").unwrap().as_str(),
+        "duplicate items must share a cache key"
+    );
+
+    // The batch's cold build is now cached for singleton selects too.
+    let (_, repeat) = http(addr, "POST", "/v1/select", &select_body(8, 4.0, "cg", None));
+    assert_eq!(repeat.get("cached").unwrap().as_bool(), Some(true));
+    assert_eq!(f(&repeat, "interval"), want.interval);
+
+    // Malformed item: 400 naming the failing index, nothing served.
+    let (code, err) = http(
+        addr,
+        "POST",
+        "/v1/select_batch",
+        r#"{"items": [{"system": "system-1/128"}, {"app": "qr"}]}"#,
+    );
+    assert_eq!(code, 400);
+    assert!(
+        err.get("error").unwrap().as_str().unwrap().contains("items[1]"),
+        "400 must name the failing index: {err}"
+    );
+
+    // Status reflects the batch traffic.
+    let (_, status) = http(addr, "GET", "/v1/status", "");
+    assert_eq!(status.path("requests.select_batch").unwrap().as_f64(), Some(1.0));
+
+    let (code, _) = http(addr, "POST", "/v1/shutdown", "");
+    assert_eq!(code, 200);
+    handle.join().expect("server thread");
+}
+
 // The concurrent phase needs `Copy` values inside `move` closures; the
 // oracle intervals are deterministic, so compute them once per call.
 fn want_a_interval() -> f64 {

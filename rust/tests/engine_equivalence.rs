@@ -37,6 +37,7 @@
 //! with a hair's-width diff should be read as a knife-edge draw, not an
 //! engine bug.
 
+use malleable_ckpt::api::{SelectBatch, SelectSpec};
 use malleable_ckpt::apps::AppProfile;
 use malleable_ckpt::config::SystemParams;
 use malleable_ckpt::experiments::common::{run_segments, run_segments_reference};
@@ -414,6 +415,88 @@ fn probe_matches_build_on_fixed_grid_with_elimination() {
             uwt_tol.assert_close(&format!("UWT (N={n}, I={interval})"), probe.uwt, model.uwt());
         }
     }
+}
+
+#[test]
+fn prop_select_batch_pinned_to_singleton_oracle() {
+    // The batch facade's acceptance property: every item of a
+    // duplicate-heavy batch resolves item-for-item to the singleton
+    // `select_interval` oracle — probed intervals and the selected
+    // interval exact, UWT within the pinned tolerance — in input order,
+    // with duplicates sharing exactly one SharedBuilder and an invalid
+    // item failing alone.
+    let engine = ComputeEngine::native();
+    let uwt_tol = Tol::rel(UWT_TOL);
+    check(
+        "select-batch-equivalence",
+        0xBA7C,
+        6,
+        |g| {
+            let a = random_model_inputs(g);
+            let b = random_model_inputs(g);
+            (a, b)
+        },
+        |(a, b)| {
+            let cfg = SearchConfig { refine_steps: 2, ..Default::default() };
+            let bad = SearchConfig { band: -1.0, ..cfg };
+            // Input order: a, b, a (dup), invalid, b (dup).
+            let batch = SelectBatch::from_specs(vec![
+                SelectSpec::new(a.clone(), cfg),
+                SelectSpec::new(b.clone(), cfg),
+                SelectSpec::new(a.clone(), cfg),
+                SelectSpec::new(a.clone(), bad),
+                SelectSpec::new(b.clone(), cfg),
+            ]);
+            let out = batch.run(&engine);
+            if out.len() != 5 {
+                return Outcome::Fail(format!("{} outcomes for 5 specs", out.len()));
+            }
+            if out[3].result.is_ok() {
+                return Outcome::Fail("invalid spec did not fail".into());
+            }
+            for (i, inputs) in [(0usize, a), (1, b), (2, a), (4, b)] {
+                let oracle = match select_interval(inputs, &engine, &cfg) {
+                    Ok(r) => r,
+                    Err(e) => return Outcome::Fail(format!("oracle failed: {e}")),
+                };
+                let got = match out[i].search() {
+                    Ok(r) => r,
+                    Err(e) => return Outcome::Fail(format!("item {i} failed: {e}")),
+                };
+                if got.interval != oracle.interval || got.best_probed != oracle.best_probed {
+                    return Outcome::Fail(format!(
+                        "item {i} selection diverged: {} vs {}",
+                        got.interval, oracle.interval
+                    ));
+                }
+                if got.probes.len() != oracle.probes.len() {
+                    return Outcome::Fail(format!("item {i} probe count diverged"));
+                }
+                for ((ia, ua), (ib, ub)) in got.probes.iter().zip(&oracle.probes) {
+                    if ia != ib {
+                        return Outcome::Fail(format!("item {i} probed {ia} vs {ib}"));
+                    }
+                    if let Err(msg) = uwt_tol.check(*ua, *ub) {
+                        return Outcome::Fail(format!("item {i} UWT at {ia}: {msg}"));
+                    }
+                }
+            }
+            // Dedup: one SharedBuilder per unique spec, shared by Arc.
+            let builder = |i: usize| {
+                out[i].result.as_ref().unwrap().builder.clone().expect("native builder")
+            };
+            if !std::sync::Arc::ptr_eq(&builder(0), &builder(2)) {
+                return Outcome::Fail("duplicate specs built twice".into());
+            }
+            if std::sync::Arc::ptr_eq(&builder(0), &builder(1)) {
+                return Outcome::Fail("distinct specs shared a builder".into());
+            }
+            if out[2].solved_by != 0 || out[4].solved_by != 1 {
+                return Outcome::Fail("dedup representatives wrong".into());
+            }
+            Outcome::Pass
+        },
+    );
 }
 
 #[test]

@@ -13,7 +13,11 @@
 #      shutdown — WAL replay with no snapshot), reboot on the same dir,
 #      and assert /v1/status still shows the track (events + re-fitted
 #      rates identical) and a repeat tracked select matches the offline
-#      oracle at the re-fitted rates; `store verify` must pass throughout.
+#      oracle at the re-fitted rates; `store verify` must pass throughout,
+#   5. batch surface: POST /v1/select_batch with a mixed batch (a cached
+#      item, a cold item, a tracked item at re-fitted rates) diffed
+#      item-for-item against the offline oracle, and a malformed-item
+#      body that must 400 naming the failing index.
 #
 # Used by the `serve-smoke` CI job; runnable locally after
 # `cargo build --release`.
@@ -74,6 +78,22 @@ cache = status["cache"]
 assert cache["entries"] >= 1 and cache["hits"] >= 1, f"cache never engaged: {cache}"
 print("serve smoke: daemon == offline oracle, repeat served from cache")
 EOF
+
+# Malformed batch item: 400 carrying the failing index in the error.
+batch_err_body=$(mktemp)
+code=$(curl -s -o "$batch_err_body" -w '%{http_code}' "http://${ADDR}/v1/select_batch" \
+    -d '{"items": [{"system": "system-1/128"}, {"app": "qr"}]}')
+if [ "$code" != "400" ]; then
+    echo "error: malformed batch item returned HTTP $code, want 400" >&2
+    exit 1
+fi
+grep -q 'items\[1\]' "$batch_err_body" || {
+    echo "error: select_batch 400 body does not name the failing index:" >&2
+    cat "$batch_err_body" >&2
+    exit 1
+}
+rm -f "$batch_err_body"
+echo "serve smoke: malformed batch item rejected with the failing index"
 
 curl -sf -X POST "http://${ADDR}/v1/shutdown" >/dev/null
 wait "$SERVE_PID"
@@ -206,10 +226,67 @@ assert rel < 1e-9, f"restored UWT off by {rel}"
 print("restart roundtrip: WAL replay restored the track; select == offline oracle")
 EOF
 
+# ---------------------------------------------------------------------------
+# Phase 3: /v1/select_batch over a mixed batch — a repeat of the tracked
+# spec (cache hit, served at the re-fitted rates), a cold untracked spec,
+# and a duplicate of the cold spec (deduped into one build) — each item
+# diffed against its offline `select --json` oracle.
+# ---------------------------------------------------------------------------
+batch_req=$(python3 - "$tracked_req" <<'EOF'
+import json
+import sys
+
+tracked = json.loads(sys.argv[1])
+cold = {"system": "system-1/128", "app": "qr"}
+print(json.dumps({"items": [tracked, cold, cold]}))
+EOF
+)
+batch_resp=$(curl -sf "http://${ADDR2}/v1/select_batch" -d "$batch_req")
+# The cold spec is phase 1's spec: its offline oracle is already in hand.
+cold_oracle="$oracle"
+
+python3 - "$batch_resp" "$post_select" "$oracle2" "$cold_oracle" <<'EOF'
+import json
+import sys
+
+batch, tracked_single, tracked_oracle, cold_oracle = (json.loads(a) for a in sys.argv[1:5])
+
+assert batch["ok"] and batch["count"] == 3, f"bad envelope: {batch}"
+tracked, cold_a, cold_b = batch["results"]
+
+assert tracked["ok"] and tracked["cached"] is True, "tracked batch item must hit the cache"
+assert tracked["track"] == "c1"
+for field in ("interval", "uwt", "best_probed", "evaluations", "key", "lambda", "theta"):
+    assert tracked[field] == tracked_single[field], (
+        f"tracked batch item {field}={tracked[field]!r} != /v1/select {tracked_single[field]!r}"
+    )
+assert tracked["interval"] == tracked_oracle["interval"], "tracked item != oracle at re-fitted rates"
+
+assert cold_a["ok"] and cold_a["cached"] is False, "cold item must miss"
+for field in ("interval", "uwt", "best_probed", "evaluations"):
+    assert cold_a[field] == cold_oracle[field], (
+        f"cold batch item {field}={cold_a[field]!r} != offline oracle {cold_oracle[field]!r}"
+    )
+    assert cold_b[field] == cold_oracle[field], "duplicate item diverged from its twin"
+assert cold_a["key"] == cold_b["key"], "duplicate items must share a cache key"
+print("select_batch: mixed batch pinned item-for-item to the offline oracle")
+EOF
+
+# The batch's cold build must now serve singleton selects from the cache.
+repeat=$(curl -sf "http://${ADDR2}/v1/select" -d '{"system": "system-1/128", "app": "qr"}')
+python3 - "$repeat" "$cold_oracle" <<'EOF'
+import json
+import sys
+
+repeat, oracle = (json.loads(a) for a in sys.argv[1:3])
+assert repeat["cached"] is True, "batch-built entry must serve repeats from the cache"
+assert repeat["interval"] == oracle["interval"]
+EOF
+
 curl -sf -X POST "http://${ADDR2}/v1/shutdown" >/dev/null
 wait "$SERVE_PID" 2>/dev/null || true
 "$BIN" store verify --data-dir "$DATA_DIR"
 "$BIN" store inspect --data-dir "$DATA_DIR"
 rm -rf "$DATA_DIR"
 trap - EXIT
-echo "serve smoke (durable restart): OK"
+echo "serve smoke (durable restart + select_batch): OK"
