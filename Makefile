@@ -1,6 +1,6 @@
 # Tier-1 verification and perf tracking for the malleable-ckpt repo.
 
-.PHONY: verify build test lint fmt serve-smoke bench-smoke bench clean
+.PHONY: verify build test lint fmt serve-smoke fuzz-smoke bench-smoke bench clean
 
 # Tier-1: release build + full test suite (see ROADMAP.md).
 verify: build test
@@ -24,6 +24,13 @@ fmt:
 # HTTP against the offline oracle (mirrors the CI `serve-smoke` job).
 serve-smoke: build
 	bash scripts/serve_smoke.sh
+
+# Deterministic robustness fuzzing (DESIGN.md §12), mirroring the CI
+# `fuzz-smoke` job: any panic in a parser or reader fails the run.
+fuzz-smoke: build
+	./target/release/malleable-ckpt fuzz http --iters 5000 --seed 1
+	./target/release/malleable-ckpt fuzz wal --iters 5000 --seed 2
+	./target/release/malleable-ckpt fuzz snapshot --iters 5000 --seed 3
 
 # Short smoke bench: regenerates BENCH_perf.json at the repo root with the
 # reduced size grid, so perf regressions show up in every PR.

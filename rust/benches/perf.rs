@@ -11,7 +11,11 @@
 //!   (`api::SelectBatch`, dedup + fan-out) vs a singleton loop,
 //!   multi-year segment sweeps over one shared `ShardedIndex` vs
 //!   per-segment monolithic index compiles, and an end-to-end
-//!   experiment-suite slice (`run_segments` vs `run_segments_reference`).
+//!   experiment-suite slice (`run_segments` vs `run_segments_reference`);
+//! * serve_load: the advisor daemon under concurrent keep-alive socket
+//!   load — mixed select/select_batch/ingest/status traffic with
+//!   p50/p99/p99.9 latencies and throughput, plus a saturation probe
+//!   counting 503 sheds against a deliberately tiny daemon.
 //!
 //! Writes a machine-readable `BENCH_perf.json` at the repo root so the
 //! perf trajectory is tracked PR over PR (`make bench-smoke` regenerates
@@ -23,6 +27,8 @@
 //! engine's acceptance metric — steady-state seconds per
 //! `select_interval` probe, cold vs cached-exact vs probe engine.
 
+use malleable_ckpt::advisor::server::{AdvisorServer, ServeOptions};
+use malleable_ckpt::advisor::AdvisorConfig;
 use malleable_ckpt::api::{SelectBatch, SelectSpec};
 use malleable_ckpt::apps::AppProfile;
 use malleable_ckpt::config::{paper_system, SystemParams};
@@ -40,6 +46,10 @@ use malleable_ckpt::util::bench::{bench, bench_once, header, BenchResult};
 use malleable_ckpt::util::json::Json;
 use malleable_ckpt::util::pool;
 use malleable_ckpt::util::rng::Rng;
+
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpStream};
+use std::time::{Duration, Instant};
 
 const DAY: f64 = 86_400.0;
 
@@ -401,6 +411,157 @@ fn main() {
     suite.set("overall_speedup", Json::from(overall));
     report.set("suite", suite);
 
+    // --- serve_load: the daemon under concurrent keep-alive load --------
+    // Real sockets against a real AdvisorServer on an ephemeral port: a
+    // mixed select / select_batch / ingest / status stream from keep-alive
+    // clients with per-request tail latencies, plus a saturation probe
+    // against a deliberately tiny daemon counting 503 sheds. No speedup
+    // field here — the gate for this section is the latency/throughput
+    // numbers themselves (validated by scripts/check_perf_baseline.py).
+    header("serve_load: advisor daemon under concurrent keep-alive load");
+    {
+        let opts = ServeOptions {
+            addr: "127.0.0.1:0".to_string(),
+            workers: pool::default_workers().clamp(2, 8),
+            queue_depth: 128,
+            advisor: AdvisorConfig::default(),
+        };
+        let workers = opts.workers;
+        let server = AdvisorServer::bind(&opts).unwrap();
+        let addr = server.local_addr().unwrap();
+        let server_thread = std::thread::spawn(move || server.run().unwrap());
+
+        let clients = if smoke { 4usize } else { 8 };
+        let per_client = if smoke { 240usize } else { 720 };
+        let select_a = r#"{"system": {"n": 32, "mttf_days": 4, "mttr_min": 40}, "app": "qr", "search": {"refine_steps": 2}}"#;
+        let select_b = r#"{"system": {"n": 48, "mttf_days": 8, "mttr_min": 40}, "app": "cg", "search": {"refine_steps": 2}}"#;
+        let batch = format!(r#"{{"items": [{select_a}, {select_b}, {select_a}]}}"#);
+
+        // Warm the cache so the timed phase measures serving, not the two
+        // cold model builds.
+        let mut warm = LoadClient::new(addr);
+        for body in [select_a, select_b] {
+            let (code, text) = warm.request("POST", "/v1/select", body);
+            assert_eq!(code, 200, "warmup select failed: {text}");
+        }
+        drop(warm);
+
+        let started = Instant::now();
+        let mut threads = Vec::new();
+        for c in 0..clients {
+            let batch = batch.clone();
+            threads.push(std::thread::spawn(move || {
+                let mut client = LoadClient::new(addr);
+                let mut lat_ms = Vec::with_capacity(per_client);
+                for i in 0..per_client {
+                    let (method, path, body) = match i % 8 {
+                        0 | 1 | 2 => ("POST", "/v1/select", select_a.to_string()),
+                        3 | 4 => ("POST", "/v1/select", select_b.to_string()),
+                        5 => ("POST", "/v1/select_batch", batch.clone()),
+                        6 => {
+                            // Per-client track, strictly increasing times:
+                            // every ingest is accepted, none degenerate.
+                            let t = (i as f64 + 1.0) * 1_000.0;
+                            (
+                                "POST",
+                                "/v1/ingest",
+                                format!(
+                                    r#"{{"track": "bench-{c}", "n_procs": 6, "events": [{{"proc": {}, "fail": {t}, "repair": {}}}]}}"#,
+                                    i % 6,
+                                    t + 60.0,
+                                ),
+                            )
+                        }
+                        _ => ("GET", "/v1/status", String::new()),
+                    };
+                    let t0 = Instant::now();
+                    let (code, text) = client.request(method, path, &body);
+                    lat_ms.push(t0.elapsed().as_secs_f64() * 1e3);
+                    assert_eq!(code, 200, "load request {method} {path} failed: {text}");
+                }
+                lat_ms
+            }));
+        }
+        let mut lat_ms: Vec<f64> = Vec::new();
+        for t in threads {
+            lat_ms.extend(t.join().expect("load client thread"));
+        }
+        let elapsed = started.elapsed().as_secs_f64();
+        lat_ms.sort_by(|a, b| a.total_cmp(b));
+        let total = lat_ms.len();
+        let throughput = total as f64 / elapsed.max(1e-9);
+        let (p50, p99, p999) = (
+            percentile(&lat_ms, 0.50),
+            percentile(&lat_ms, 0.99),
+            percentile(&lat_ms, 0.999),
+        );
+        println!(
+            "  {total} requests, {clients} clients, {workers} workers: {throughput:.0} req/s, \
+             p50 {p50:.2} ms, p99 {p99:.2} ms, p99.9 {p999:.2} ms"
+        );
+        let (code, text) = LoadClient::new(addr).request("POST", "/v1/shutdown", "{}");
+        assert_eq!(code, 200, "load shutdown failed: {text}");
+        server_thread.join().expect("load server thread");
+
+        // Saturation probe: a deliberately tiny daemon (one worker, a
+        // one-deep queue) with its worker and queue slot pinned by
+        // half-sent requests — every probe connection must be shed with
+        // 503 + Retry-After, never queued unboundedly or left hanging.
+        let tiny = AdvisorServer::bind(&ServeOptions {
+            addr: "127.0.0.1:0".to_string(),
+            workers: 1,
+            queue_depth: 1,
+            advisor: AdvisorConfig::default(),
+        })
+        .unwrap();
+        let tiny_addr = tiny.local_addr().unwrap();
+        let tiny_thread = std::thread::spawn(move || tiny.run().unwrap());
+        let pin = |addr: SocketAddr| {
+            let mut s = TcpStream::connect(addr).unwrap();
+            s.write_all(b"POST /v1/select HTTP/1.1\r\nContent-Length: 64\r\n").unwrap();
+            s
+        };
+        let worker_pin = pin(tiny_addr);
+        std::thread::sleep(Duration::from_millis(300));
+        let queue_pin = pin(tiny_addr);
+        std::thread::sleep(Duration::from_millis(300));
+        let shed_probes = 20usize;
+        let mut shed_503 = 0usize;
+        for _ in 0..shed_probes {
+            let mut s = TcpStream::connect(tiny_addr).unwrap();
+            s.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+            s.write_all(b"GET /healthz HTTP/1.1\r\n\r\n").unwrap();
+            let mut text = String::new();
+            // A probe that times out or errors simply does not count as
+            // shed; the checker requires at least one observed 503.
+            let _ = s.read_to_string(&mut text);
+            if text.starts_with("HTTP/1.1 503") && text.contains("Retry-After: 1") {
+                shed_503 += 1;
+            }
+        }
+        println!(
+            "  saturation probe: {shed_503}/{shed_probes} connections shed with 503 + Retry-After"
+        );
+        drop(worker_pin);
+        drop(queue_pin);
+        std::thread::sleep(Duration::from_millis(300));
+        let (code, text) = LoadClient::new(tiny_addr).request("POST", "/v1/shutdown", "{}");
+        assert_eq!(code, 200, "tiny shutdown failed: {text}");
+        tiny_thread.join().expect("tiny server thread");
+
+        let mut o = Json::obj();
+        o.set("clients", Json::from(clients as f64))
+            .set("workers", Json::from(workers as f64))
+            .set("requests", Json::from(total as f64))
+            .set("throughput_rps", Json::from(throughput))
+            .set("p50_ms", Json::from(p50))
+            .set("p99_ms", Json::from(p99))
+            .set("p999_ms", Json::from(p999))
+            .set("shed_probes", Json::from(shed_probes as f64))
+            .set("shed_503", Json::from(shed_503 as f64));
+        report.set("serve_load", o);
+    }
+
     let path = "BENCH_perf.json";
     // The checked-in copy (when present) is the perf baseline; read it
     // (text and parsed) before overwriting so the regression gate below
@@ -503,4 +664,86 @@ fn main() {
             "perf gate: no checked-in {path} baseline (commit one from a CI run to arm the gate)"
         );
     }
+}
+
+/// Minimal keep-alive HTTP/1.1 load client for the `serve_load` section.
+/// Reconnects transparently before the daemon's per-connection request
+/// cap (256) is reached, so every request is measured on a warm socket.
+struct LoadClient {
+    addr: SocketAddr,
+    stream: Option<TcpStream>,
+    buf: Vec<u8>,
+    served: usize,
+}
+
+impl LoadClient {
+    fn new(addr: SocketAddr) -> LoadClient {
+        LoadClient { addr, stream: None, buf: Vec::new(), served: 0 }
+    }
+
+    fn request(&mut self, method: &str, path: &str, body: &str) -> (u16, String) {
+        if self.stream.is_none() || self.served >= 200 {
+            let s = TcpStream::connect(self.addr).expect("connect load client");
+            s.set_read_timeout(Some(Duration::from_secs(30))).unwrap();
+            let _ = s.set_nodelay(true);
+            self.stream = Some(s);
+            self.buf.clear();
+            self.served = 0;
+        }
+        let stream = self.stream.as_mut().unwrap();
+        let req = format!(
+            "{method} {path} HTTP/1.1\r\nHost: {}\r\nContent-Type: application/json\r\n\
+             Content-Length: {}\r\nConnection: keep-alive\r\n\r\n{body}",
+            self.addr,
+            body.len()
+        );
+        stream.write_all(req.as_bytes()).expect("send load request");
+        // Frame the response by Content-Length (keep-alive socket).
+        let (head_end, content_length) = loop {
+            if let Some(pos) = self.buf.windows(4).position(|w| w == b"\r\n\r\n") {
+                let head = std::str::from_utf8(&self.buf[..pos]).expect("UTF-8 response head");
+                let len = head
+                    .lines()
+                    .find_map(|l| {
+                        let (name, value) = l.split_once(':')?;
+                        if name.eq_ignore_ascii_case("content-length") {
+                            value.trim().parse::<usize>().ok()
+                        } else {
+                            None
+                        }
+                    })
+                    .expect("Content-Length in response");
+                break (pos, len);
+            }
+            let mut chunk = [0u8; 4096];
+            let n = stream.read(&mut chunk).expect("read load response");
+            assert!(n > 0, "server closed a keep-alive load connection mid-response");
+            self.buf.extend_from_slice(&chunk[..n]);
+        };
+        while self.buf.len() < head_end + 4 + content_length {
+            let mut chunk = [0u8; 4096];
+            let n = stream.read(&mut chunk).expect("read load response body");
+            assert!(n > 0, "server closed mid-body");
+            self.buf.extend_from_slice(&chunk[..n]);
+        }
+        let code: u16 = std::str::from_utf8(&self.buf[..head_end])
+            .unwrap()
+            .split_whitespace()
+            .nth(1)
+            .and_then(|s| s.parse().ok())
+            .expect("status code");
+        let body_text =
+            String::from_utf8_lossy(&self.buf[head_end + 4..head_end + 4 + content_length])
+                .into_owned();
+        self.buf.drain(..head_end + 4 + content_length);
+        self.served += 1;
+        (code, body_text)
+    }
+}
+
+/// Nearest-rank percentile over an ascending-sorted slice.
+fn percentile(sorted_ms: &[f64], q: f64) -> f64 {
+    assert!(!sorted_ms.is_empty());
+    let rank = (sorted_ms.len() as f64 * q).ceil() as usize;
+    sorted_ms[rank.clamp(1, sorted_ms.len()) - 1]
 }

@@ -18,10 +18,30 @@
 //! |                    |        | and the CI smoke job)                 |
 //!
 //! Malformed requests get `400` with `{"ok": false, "error": ...}`;
-//! unknown paths `404`; wrong methods `405`; oversized frames `413`.
+//! unknown paths `404`; wrong methods `405`; a POST without a
+//! `Content-Length` `411` (the daemon never reads until EOF); oversized
+//! frames `413`; a request that dribbles in past the read deadline `408`.
 //! Model-layer failures surface as `500` — by the time a request reaches
 //! the model layer its fields are validated, so a 500 is a bug, not bad
 //! input.
+//!
+//! ## Overload and shedding
+//!
+//! Accepted connections wait in a **bounded** FIFO for one of the fixed
+//! worker threads. When the queue is full — or the daemon is draining —
+//! newcomers are shed immediately with `503` + `Retry-After: 1` instead
+//! of piling up: under saturation the daemon degrades to fast rejections,
+//! never to unbounded memory or hung clients. Per-connection socket
+//! timeouts plus a whole-request read deadline ([`REQUEST_DEADLINE`])
+//! bound how long a slow-loris client can hold a worker.
+//!
+//! ## Graceful drain
+//!
+//! `POST /v1/shutdown` flips the stop flag: the accept loop stops
+//! queueing (shedding new connections with `503`), workers finish every
+//! queued and in-flight request (keep-alive connections close after their
+//! current response), and only when the last connection completes does
+//! `run` return — snapshotting all persisted tracks on the way out.
 //!
 //! ## Keep-alive
 //!
@@ -37,9 +57,9 @@
 
 use std::io::{Read, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream};
-use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 use anyhow::{Context, Result};
 
@@ -60,6 +80,11 @@ const MAX_REQUESTS_PER_CONN: usize = 256;
 /// Doubles as the keep-alive idle timeout between requests.
 const IO_TIMEOUT: Duration = Duration::from_secs(10);
 
+/// Whole-request read deadline, counted from the first byte of a request
+/// to its last: a slow-loris client dribbling one byte per socket-timeout
+/// window still loses its worker after this long (`408`).
+pub(crate) const REQUEST_DEADLINE: Duration = Duration::from_secs(10);
+
 /// `serve` front-end options.
 #[derive(Debug, Clone)]
 pub struct ServeOptions {
@@ -67,6 +92,10 @@ pub struct ServeOptions {
     pub addr: String,
     /// Handler threads.
     pub workers: usize,
+    /// Accepted connections allowed to wait for a worker; past this the
+    /// daemon sheds newcomers with `503` + `Retry-After` instead of
+    /// queueing without bound.
+    pub queue_depth: usize,
     pub advisor: AdvisorConfig,
 }
 
@@ -75,19 +104,20 @@ impl Default for ServeOptions {
         ServeOptions {
             addr: "127.0.0.1:7743".to_string(),
             workers: crate::util::pool::default_workers().clamp(2, 8),
+            queue_depth: 128,
             advisor: AdvisorConfig::default(),
         }
     }
 }
 
 /// A parsed request frame.
-struct HttpRequest {
-    method: String,
-    path: String,
-    body: String,
+pub(crate) struct HttpRequest {
+    pub(crate) method: String,
+    pub(crate) path: String,
+    pub(crate) body: String,
     /// Client wants the connection kept open after the response
     /// (HTTP/1.1 default; overridden by a `Connection` header).
-    keep_alive: bool,
+    pub(crate) keep_alive: bool,
 }
 
 /// What one read attempt on a (possibly reused) connection produced.
@@ -96,33 +126,29 @@ enum ReadOutcome {
     /// The client hung up (or idled past the timeout) between requests —
     /// a normal keep-alive end, nothing to answer.
     Closed,
-    /// Bytes arrived but do not form a valid request — answer 400.
-    Malformed(String),
+    /// Bytes arrived but do not form a valid request — answer with the
+    /// carried status code (`400`/`408`/`411`/`413`) and close.
+    Malformed(u16, String),
 }
 
-/// Read one request from `stream`, carrying leftover bytes across calls
-/// in `buf` (pipelined requests on a keep-alive connection must not be
-/// dropped with the frame that preceded them).
-fn read_request(stream: &mut TcpStream, buf: &mut Vec<u8>) -> ReadOutcome {
-    let mut chunk = [0u8; 4096];
-    let head_end = loop {
-        if let Some(pos) = find_head_end(buf) {
-            break pos;
-        }
+/// Try to parse one complete request frame from `buf` without touching a
+/// socket — the byte-level core of [`read_request`] and the entry point
+/// the fuzz harness's `http` target hammers. Returns `Ok(Some((request,
+/// consumed_bytes)))` for a complete frame, `Ok(None)` when more bytes
+/// are needed, `Err((status, reason))` when the bytes can never become a
+/// valid request. Never panics, never allocates beyond the framing caps.
+pub(crate) fn try_parse_request(
+    buf: &[u8],
+) -> std::result::Result<Option<(HttpRequest, usize)>, (u16, String)> {
+    let Some(head_end) = find_head_end(buf) else {
         if buf.len() > MAX_HEAD_BYTES {
-            return ReadOutcome::Malformed(format!("header block exceeds {MAX_HEAD_BYTES} bytes"));
+            return Err((400, format!("header block exceeds {MAX_HEAD_BYTES} bytes")));
         }
-        match stream.read(&mut chunk) {
-            Ok(0) if buf.is_empty() => return ReadOutcome::Closed,
-            Ok(0) => return ReadOutcome::Malformed("connection closed mid-request".to_string()),
-            Ok(n) => buf.extend_from_slice(&chunk[..n]),
-            Err(_) if buf.is_empty() => return ReadOutcome::Closed, // idle timeout
-            Err(e) => return ReadOutcome::Malformed(format!("reading request head: {e}")),
-        }
+        return Ok(None);
     };
     let head = match std::str::from_utf8(&buf[..head_end]) {
         Ok(h) => h,
-        Err(_) => return ReadOutcome::Malformed("non-UTF-8 request head".to_string()),
+        Err(_) => return Err((400, "non-UTF-8 request head".to_string())),
     };
     let mut lines = head.split("\r\n");
     let request_line = lines.next().unwrap_or("");
@@ -131,21 +157,23 @@ fn read_request(stream: &mut TcpStream, buf: &mut Vec<u8>) -> ReadOutcome {
     let path = parts.next().unwrap_or("").to_string();
     let version = parts.next().unwrap_or("HTTP/1.1");
     if method.is_empty() || path.is_empty() {
-        return ReadOutcome::Malformed(format!("malformed request line '{request_line}'"));
+        return Err((400, format!("malformed request line '{request_line}'")));
     }
     // HTTP/1.1 defaults to persistent connections; 1.0 to closing.
     let mut keep_alive = version != "HTTP/1.0";
-    let mut content_length = 0usize;
+    let mut content_length: Option<usize> = None;
     for line in lines {
         if let Some((name, value)) = line.split_once(':') {
             let value = value.trim();
             if name.eq_ignore_ascii_case("content-length") {
                 content_length = match value.parse::<usize>() {
-                    Ok(n) => n,
-                    Err(_) => {
-                        return ReadOutcome::Malformed(format!("bad Content-Length '{value}'"))
-                    }
+                    Ok(n) => Some(n),
+                    Err(_) => return Err((400, format!("bad Content-Length '{value}'"))),
                 };
+            } else if name.eq_ignore_ascii_case("transfer-encoding") {
+                // Never read-until-EOF or dechunk: bodies must be framed
+                // by an explicit Content-Length.
+                return Err((411, "Transfer-Encoding unsupported; send Content-Length".to_string()));
             } else if name.eq_ignore_ascii_case("connection") {
                 if value.eq_ignore_ascii_case("close") {
                     keep_alive = false;
@@ -155,26 +183,70 @@ fn read_request(stream: &mut TcpStream, buf: &mut Vec<u8>) -> ReadOutcome {
             }
         }
     }
+    let content_length = match content_length {
+        Some(n) => n,
+        // Bodyless methods default to an empty body; a POST/PUT without a
+        // length would mean reading until EOF — refuse instead.
+        None if matches!(method.as_str(), "POST" | "PUT" | "PATCH") => {
+            return Err((411, format!("{method} requires a Content-Length")));
+        }
+        None => 0,
+    };
     if content_length > MAX_BODY_BYTES {
-        return ReadOutcome::Malformed(format!(
-            "body of {content_length} bytes exceeds {MAX_BODY_BYTES}"
-        ));
+        return Err((413, format!("body of {content_length} bytes exceeds {MAX_BODY_BYTES}")));
     }
     let frame_end = head_end + 4 + content_length;
-    while buf.len() < frame_end {
-        match stream.read(&mut chunk) {
-            Ok(0) => return ReadOutcome::Malformed("connection closed mid-body".to_string()),
-            Ok(n) => buf.extend_from_slice(&chunk[..n]),
-            Err(e) => return ReadOutcome::Malformed(format!("reading request body: {e}")),
-        }
+    if buf.len() < frame_end {
+        return Ok(None);
     }
     let body = match std::str::from_utf8(&buf[head_end + 4..frame_end]) {
         Ok(b) => b.to_string(),
-        Err(_) => return ReadOutcome::Malformed("non-UTF-8 request body".to_string()),
+        Err(_) => return Err((400, "non-UTF-8 request body".to_string())),
     };
-    // Keep pipelined bytes beyond this frame for the next read.
-    buf.drain(..frame_end);
-    ReadOutcome::Request(HttpRequest { method, path, body, keep_alive })
+    Ok(Some((HttpRequest { method, path, body, keep_alive }, frame_end)))
+}
+
+/// Read one request from `stream`, carrying leftover bytes across calls
+/// in `buf` (pipelined requests on a keep-alive connection must not be
+/// dropped with the frame that preceded them). The [`REQUEST_DEADLINE`]
+/// clock starts at the request's first byte, so keep-alive idle time does
+/// not count against it.
+fn read_request(stream: &mut TcpStream, buf: &mut Vec<u8>) -> ReadOutcome {
+    let mut chunk = [0u8; 4096];
+    let mut deadline: Option<Instant> =
+        (!buf.is_empty()).then(|| Instant::now() + REQUEST_DEADLINE);
+    loop {
+        match try_parse_request(buf) {
+            Ok(Some((req, consumed))) => {
+                // Keep pipelined bytes beyond this frame for the next read.
+                buf.drain(..consumed);
+                return ReadOutcome::Request(req);
+            }
+            Ok(None) => {}
+            Err((code, msg)) => return ReadOutcome::Malformed(code, msg),
+        }
+        if deadline.is_some_and(|d| Instant::now() >= d) {
+            return ReadOutcome::Malformed(408, "request read deadline exceeded".to_string());
+        }
+        match stream.read(&mut chunk) {
+            Ok(0) if buf.is_empty() => return ReadOutcome::Closed,
+            Ok(0) => return ReadOutcome::Malformed(400, "connection closed mid-request".to_string()),
+            Ok(n) => {
+                buf.extend_from_slice(&chunk[..n]);
+                deadline.get_or_insert_with(|| Instant::now() + REQUEST_DEADLINE);
+            }
+            Err(_) if buf.is_empty() => return ReadOutcome::Closed, // idle timeout
+            Err(e)
+                if matches!(
+                    e.kind(),
+                    std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut
+                ) =>
+            {
+                return ReadOutcome::Malformed(408, format!("timed out mid-request: {e}"));
+            }
+            Err(e) => return ReadOutcome::Malformed(400, format!("reading request: {e}")),
+        }
+    }
 }
 
 fn find_head_end(buf: &[u8]) -> Option<usize> {
@@ -187,15 +259,21 @@ fn status_text(code: u16) -> &'static str {
         400 => "Bad Request",
         404 => "Not Found",
         405 => "Method Not Allowed",
+        408 => "Request Timeout",
+        411 => "Length Required",
         413 => "Payload Too Large",
+        503 => "Service Unavailable",
         _ => "Internal Server Error",
     }
 }
 
 fn write_response(stream: &mut TcpStream, code: u16, body: &Json, keep_alive: bool) {
     let payload = body.to_compact();
+    // The 503 shedding contract: tell well-behaved clients when to come
+    // back instead of letting them hammer a saturated daemon.
+    let retry_after = if code == 503 { "Retry-After: 1\r\n" } else { "" };
     let head = format!(
-        "HTTP/1.1 {code} {}\r\nContent-Type: application/json\r\nContent-Length: {}\r\nConnection: {}\r\n\r\n",
+        "HTTP/1.1 {code} {}\r\nContent-Type: application/json\r\nContent-Length: {}\r\n{retry_after}Connection: {}\r\n\r\n",
         status_text(code),
         payload.len(),
         if keep_alive { "keep-alive" } else { "close" }
@@ -204,6 +282,16 @@ fn write_response(stream: &mut TcpStream, code: u16, body: &Json, keep_alive: bo
     let _ = stream.write_all(head.as_bytes());
     let _ = stream.write_all(payload.as_bytes());
     let _ = stream.flush();
+}
+
+/// Best-effort `503 Retry-After` on a connection the daemon will not
+/// serve (queue full or draining), then drop it. A short write timeout
+/// keeps shedding itself from blocking the accept loop.
+fn shed(mut stream: TcpStream, why: &str) {
+    let _ = stream.set_nonblocking(false);
+    let _ = stream.set_write_timeout(Some(Duration::from_millis(500)));
+    let _ = stream.set_nodelay(true);
+    write_response(&mut stream, 503, &protocol::error_response(why), false);
 }
 
 /// Route one request. Parse errors are 400s; model-layer errors 500s.
@@ -284,8 +372,8 @@ fn handle_connection(advisor: &Advisor, mut stream: TcpStream, stop: &AtomicBool
                 }
             }
             ReadOutcome::Closed => return,
-            ReadOutcome::Malformed(msg) => {
-                write_response(&mut stream, 400, &protocol::error_response(&msg), false);
+            ReadOutcome::Malformed(code, msg) => {
+                write_response(&mut stream, code, &protocol::error_response(&msg), false);
                 return;
             }
         }
@@ -298,6 +386,7 @@ pub struct AdvisorServer {
     listener: TcpListener,
     advisor: Arc<Advisor>,
     workers: usize,
+    queue_depth: usize,
 }
 
 impl AdvisorServer {
@@ -316,6 +405,7 @@ impl AdvisorServer {
             listener,
             advisor: Arc::new(advisor),
             workers: opts.workers.max(1),
+            queue_depth: opts.queue_depth.max(1),
         })
     }
 
@@ -329,12 +419,18 @@ impl AdvisorServer {
     }
 
     /// Serve until shutdown: `workers` handler threads plus one
-    /// background re-selection thread, fed by this accept loop.
+    /// background re-selection thread, fed by this accept loop through a
+    /// bounded queue. Shutdown is a graceful drain: stop queueing (shed
+    /// newcomers with `503`), finish every queued and in-flight request,
+    /// then snapshot-all.
     pub fn run(self) -> Result<()> {
         self.listener.set_nonblocking(true).context("nonblocking listener")?;
         let stop = AtomicBool::new(false);
+        // Connections queued or in a handler; the drain waits on it.
+        let active = AtomicUsize::new(0);
         // FIFO: a burst larger than the worker pool must drain in arrival
-        // order, not starve the oldest connection.
+        // order, not starve the oldest connection. Bounded: past
+        // `queue_depth` waiters, newcomers are shed with 503.
         let queue: Mutex<std::collections::VecDeque<TcpStream>> =
             Mutex::new(std::collections::VecDeque::new());
         let ready = Condvar::new();
@@ -358,7 +454,10 @@ impl AdvisorServer {
                         }
                     };
                     match conn {
-                        Some(c) => handle_connection(advisor, c, &stop),
+                        Some(c) => {
+                            handle_connection(advisor, c, &stop);
+                            active.fetch_sub(1, Ordering::SeqCst);
+                        }
                         None => break,
                     }
                 });
@@ -371,10 +470,29 @@ impl AdvisorServer {
                     }
                 }
             });
-            while !stop.load(Ordering::SeqCst) {
+            // Accept until the drain completes: after stop, keep running
+            // only to shed newcomers while queued + in-flight connections
+            // finish.
+            loop {
+                let draining = stop.load(Ordering::SeqCst);
+                if draining && active.load(Ordering::SeqCst) == 0 {
+                    break;
+                }
                 match self.listener.accept() {
                     Ok((stream, _)) => {
-                        queue.lock().unwrap().push_back(stream);
+                        if draining {
+                            shed(stream, "shutting down");
+                            continue;
+                        }
+                        let mut q = queue.lock().unwrap();
+                        if q.len() >= self.queue_depth {
+                            drop(q);
+                            shed(stream, "server saturated; retry");
+                            continue;
+                        }
+                        active.fetch_add(1, Ordering::SeqCst);
+                        q.push_back(stream);
+                        drop(q);
                         ready.notify_one();
                     }
                     Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
@@ -413,8 +531,58 @@ mod tests {
     fn status_lines() {
         assert_eq!(status_text(200), "OK");
         assert_eq!(status_text(404), "Not Found");
+        assert_eq!(status_text(408), "Request Timeout");
+        assert_eq!(status_text(411), "Length Required");
+        assert_eq!(status_text(503), "Service Unavailable");
         assert_eq!(status_text(500), "Internal Server Error");
         assert_eq!(status_text(418), "Internal Server Error");
+    }
+
+    #[test]
+    fn try_parse_frames_and_rejects() {
+        // Complete frame: parsed, consumed length reported.
+        let (req, used) =
+            try_parse_request(b"POST /a HTTP/1.1\r\nContent-Length: 2\r\n\r\nhiXX")
+                .unwrap()
+                .unwrap();
+        assert_eq!((req.method.as_str(), req.body.as_str()), ("POST", "hi"));
+        assert_eq!(used, b"POST /a HTTP/1.1\r\nContent-Length: 2\r\n\r\nhi".len());
+
+        // Incomplete head and incomplete body both ask for more bytes.
+        assert!(try_parse_request(b"POST /a HTT").unwrap().is_none());
+        assert!(try_parse_request(b"POST /a HTTP/1.1\r\nContent-Length: 5\r\n\r\nhi")
+            .unwrap()
+            .is_none());
+
+        // POST without a Content-Length is 411, never read-until-EOF.
+        let (code, msg) = try_parse_request(b"POST /a HTTP/1.1\r\n\r\n").unwrap_err();
+        assert_eq!(code, 411, "{msg}");
+        // ... and so is a chunked body.
+        let (code, _) =
+            try_parse_request(b"POST /a HTTP/1.1\r\nTransfer-Encoding: chunked\r\n\r\n")
+                .unwrap_err();
+        assert_eq!(code, 411);
+        // GET without a length is fine (empty body).
+        assert!(try_parse_request(b"GET /b HTTP/1.1\r\n\r\n").unwrap().is_some());
+
+        // An attacker-controlled Content-Length is rejected before any
+        // allocation happens.
+        let huge = format!("POST /a HTTP/1.1\r\nContent-Length: {}\r\n\r\n", usize::MAX);
+        let (code, _) = try_parse_request(huge.as_bytes()).unwrap_err();
+        assert!(code == 413 || code == 400, "huge length must be refused, got {code}");
+        let (code, _) = try_parse_request(
+            format!("POST /a HTTP/1.1\r\nContent-Length: {}\r\n\r\n", MAX_BODY_BYTES + 1)
+                .as_bytes(),
+        )
+        .unwrap_err();
+        assert_eq!(code, 413);
+
+        // Garbage request lines and unparseable lengths are 400s.
+        let (code, _) = try_parse_request(b"\r\n\r\n").unwrap_err();
+        assert_eq!(code, 400);
+        let (code, _) =
+            try_parse_request(b"POST /a HTTP/1.1\r\nContent-Length: x\r\n\r\n").unwrap_err();
+        assert_eq!(code, 400);
     }
 
     #[test]

@@ -1,0 +1,415 @@
+//! Structured fuzzing of every byte-level parser the daemon trusts —
+//! the `malleable-ckpt fuzz {http,wal,snapshot}` subcommand (DESIGN.md
+//! §12).
+//!
+//! Each target starts from **valid seed bytes** (a well-formed HTTP/1.1
+//! request frame, a WAL image with every record kind, an encoded
+//! snapshot) and applies deterministic [`crate::util::rng`]-driven
+//! mutations: truncations at arbitrary offsets, bit flips, length-field
+//! lies, header/frame splices, duplicated and pipelined garbage. The
+//! mutated input is then fed to the real production parser under
+//! [`std::panic::catch_unwind`].
+//!
+//! The invariant is the robustness contract of DESIGN.md §12: **every
+//! input produces a clean parse or a typed error — never a panic and
+//! never an allocation proportional to a length field the input merely
+//! *claims*.** Mutated inputs are bounded (seed size + a small splice
+//! budget), so any blow-up an iteration could observe would have to come
+//! from trusting a lied length.
+//!
+//! Determinism: `fuzz <target> --iters N --seed S` replays identically —
+//! iteration `i` derives its mutations from `Rng::new(seed).fork()`
+//! chains only, so a CI failure reproduces locally from the two numbers
+//! in the log line.
+
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::path::Path;
+
+use anyhow::{anyhow, Result};
+
+use crate::advisor::protocol;
+use crate::advisor::server::try_parse_request;
+use crate::apps::AppProfile;
+use crate::config::SystemParams;
+use crate::markov::ModelInputs;
+use crate::policies::ReschedulingPolicy;
+use crate::search::SearchConfig;
+use crate::store::wal::{self, encode_frame, SpecRecord, WalRecord, WAL_MAGIC};
+use crate::store::{snapshot, TrackState};
+use crate::util::json::Json;
+use crate::util::rng::Rng;
+
+/// What one fuzz run drove and what came back.
+#[derive(Debug, Clone)]
+pub struct FuzzReport {
+    pub target: FuzzTarget,
+    pub iters: u64,
+    /// Inputs the parser accepted cleanly.
+    pub accepted: u64,
+    /// Inputs rejected with a typed error (or a torn-tail stop).
+    pub rejected: u64,
+    /// Inputs that panicked the parser — any is a bug.
+    pub panics: u64,
+    /// `(iteration, payload)` of the first panic, for reproduction.
+    pub first_panic: Option<(u64, String)>,
+}
+
+impl FuzzReport {
+    /// `Err` with a reproduction recipe when any iteration panicked.
+    pub fn into_result(self, seed: u64) -> Result<FuzzReport> {
+        if self.panics > 0 {
+            let (iter, msg) = self.first_panic.clone().unwrap_or((0, "?".into()));
+            return Err(anyhow!(
+                "fuzz {}: {} panic(s) in {} iters; first at iter {iter} ({msg}); \
+                 reproduce with --seed {seed} --iters {}",
+                self.target.name(),
+                self.panics,
+                self.iters,
+                self.iters,
+            ));
+        }
+        Ok(self)
+    }
+}
+
+/// The parser a fuzz run attacks.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FuzzTarget {
+    /// HTTP/1.1 request framing + the JSON protocol parsers.
+    Http,
+    /// The WAL scanner ([`wal::scan_bytes`]).
+    Wal,
+    /// The snapshot decoder ([`snapshot::decode`]).
+    Snapshot,
+}
+
+impl FuzzTarget {
+    pub fn from_name(name: &str) -> Result<FuzzTarget> {
+        match name {
+            "http" => Ok(FuzzTarget::Http),
+            "wal" => Ok(FuzzTarget::Wal),
+            "snapshot" => Ok(FuzzTarget::Snapshot),
+            other => Err(anyhow!("unknown fuzz target '{other}' (http | wal | snapshot)")),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            FuzzTarget::Http => "http",
+            FuzzTarget::Wal => "wal",
+            FuzzTarget::Snapshot => "snapshot",
+        }
+    }
+}
+
+/// Run `iters` mutated inputs against `target`. Never fails on rejected
+/// inputs — only a panic (reported in the [`FuzzReport`]) is a defect.
+pub fn run(target: FuzzTarget, iters: u64, seed: u64) -> FuzzReport {
+    let mut rng = Rng::new(seed ^ 0xF0F0_F0F0_F0F0_F0F0);
+    let seeds = seed_corpus(target);
+    let mut report = FuzzReport {
+        target,
+        iters,
+        accepted: 0,
+        rejected: 0,
+        panics: 0,
+        first_panic: None,
+    };
+    // Panics inside catch_unwind would spam stderr through the default
+    // hook; silence it for the duration and restore afterwards.
+    let prev_hook = std::panic::take_hook();
+    std::panic::set_hook(Box::new(|_| {}));
+    for i in 0..iters {
+        let mut it = rng.fork();
+        let base = &seeds[it.usize_range(0, seeds.len())];
+        let input = mutate(&mut it, base);
+        let outcome = catch_unwind(AssertUnwindSafe(|| drive(target, &input, &mut it)));
+        match outcome {
+            Ok(Verdict::Accepted) => report.accepted += 1,
+            Ok(Verdict::Rejected) => report.rejected += 1,
+            Err(panic) => {
+                report.panics += 1;
+                if report.first_panic.is_none() {
+                    report.first_panic = Some((i, panic_message(&panic)));
+                }
+            }
+        }
+    }
+    std::panic::set_hook(prev_hook);
+    report
+}
+
+/// How one input fared (absent a panic).
+enum Verdict {
+    Accepted,
+    Rejected,
+}
+
+/// Feed one mutated input to the target's production parser and check
+/// the post-conditions a *successful* parse promises.
+fn drive(target: FuzzTarget, input: &[u8], rng: &mut Rng) -> Verdict {
+    match target {
+        FuzzTarget::Wal => match wal::scan_bytes(input, Path::new("<fuzz>")) {
+            Ok(scan) => {
+                // A scan that "succeeds" must still be internally
+                // consistent: the valid prefix cannot exceed the input.
+                assert!(
+                    scan.valid_len <= input.len() as u64,
+                    "scan.valid_len {} > input {}",
+                    scan.valid_len,
+                    input.len()
+                );
+                if scan.torn() {
+                    Verdict::Rejected
+                } else {
+                    Verdict::Accepted
+                }
+            }
+            Err(_) => Verdict::Rejected,
+        },
+        FuzzTarget::Snapshot => match snapshot::decode(input, Path::new("<fuzz>")) {
+            Ok(_) => Verdict::Accepted,
+            Err(_) => Verdict::Rejected,
+        },
+        FuzzTarget::Http => {
+            let framed = try_parse_request(input);
+            // Whatever the frame parser said, also attack the JSON
+            // protocol layer with the same mutated bytes — that is the
+            // parser a framed body would reach next.
+            let text = String::from_utf8_lossy(input);
+            let mut ok = false;
+            if let Ok(j) = Json::parse(&text) {
+                // Every endpoint parser must hold the no-panic contract
+                // for arbitrary *valid JSON* too.
+                let which = rng.below(4);
+                ok = match which {
+                    0 => protocol::parse_select(&j).is_ok(),
+                    1 => protocol::parse_select_batch(&j).is_ok(),
+                    2 => protocol::parse_model(&j).is_ok(),
+                    _ => protocol::parse_ingest(&j).is_ok(),
+                };
+            }
+            match framed {
+                Ok(Some(_)) => Verdict::Accepted,
+                Ok(None) => Verdict::Rejected, // incomplete: server would keep reading
+                Err(_) if ok => Verdict::Accepted,
+                Err(_) => Verdict::Rejected,
+            }
+        }
+    }
+}
+
+/// Apply 1–4 random byte-level mutations to a copy of `base`.
+///
+/// The menu deliberately mirrors real corruption and real attacks:
+/// truncation (torn writes), bit flips (media rot), length-field lies
+/// (malicious frames), splices (misdirected writes / header smuggling),
+/// duplicated tails (re-sent frames) and appended garbage (pipelined
+/// trailing junk).
+fn mutate(rng: &mut Rng, base: &[u8]) -> Vec<u8> {
+    let mut bytes = base.to_vec();
+    for _ in 0..rng.usize_range(1, 5) {
+        if bytes.is_empty() {
+            bytes.extend((0..rng.usize_range(1, 65)).map(|_| rng.below(256) as u8));
+            continue;
+        }
+        let len = bytes.len();
+        match rng.below(7) {
+            // Truncate at an arbitrary offset.
+            0 => {
+                let at = rng.usize_range(0, len);
+                bytes.truncate(at);
+            }
+            // Flip a single bit.
+            1 => {
+                let at = rng.usize_range(0, len);
+                bytes[at] ^= 1u8 << (rng.below(8) as u32);
+            }
+            // Length-field lie: overwrite 4 bytes at a random offset
+            // with a huge little-endian count.
+            2 => {
+                if len >= 4 {
+                    let at = rng.usize_range(0, len - 3);
+                    let lie: u32 = match rng.below(3) {
+                        0 => u32::MAX,
+                        1 => (64 << 20) + rng.below(1 << 20) as u32,
+                        _ => rng.below(u32::MAX as u64 + 1) as u32,
+                    };
+                    bytes[at..at + 4].copy_from_slice(&lie.to_le_bytes());
+                }
+            }
+            // Splice: replace a random range with random bytes.
+            3 => {
+                let start = rng.usize_range(0, len);
+                let end = start + rng.below(((len - start).min(256) + 1) as u64) as usize;
+                let fill: Vec<u8> =
+                    (0..rng.usize_range(0, 65)).map(|_| rng.below(256) as u8).collect();
+                bytes.splice(start..end, fill);
+            }
+            // Duplicate a tail chunk (a re-sent frame / doubled header).
+            4 => {
+                let at = rng.usize_range(0, len);
+                let chunk: Vec<u8> = bytes[at..].iter().copied().take(256).collect();
+                bytes.extend_from_slice(&chunk);
+            }
+            // Append garbage (pipelined junk after a valid message).
+            5 => {
+                bytes.extend((0..rng.usize_range(1, 129)).map(|_| rng.below(256) as u8));
+            }
+            // Byte swap across the input.
+            _ => {
+                let a = rng.usize_range(0, len);
+                let b = rng.usize_range(0, len);
+                bytes.swap(a, b);
+            }
+        }
+    }
+    // Bound the worst case so the harness itself cannot amplify.
+    bytes.truncate(base.len() + 4096);
+    bytes
+}
+
+/// Valid seed inputs per target — mutations start from bytes the parser
+/// accepts, so the interesting near-valid corruption space gets hit.
+fn seed_corpus(target: FuzzTarget) -> Vec<Vec<u8>> {
+    match target {
+        FuzzTarget::Http => vec![
+            b"GET /v1/status HTTP/1.1\r\nHost: x\r\n\r\n".to_vec(),
+            b"POST /v1/select HTTP/1.1\r\nContent-Length: 49\r\n\r\n\
+              {\"system\": {\"n\": 4, \"mttf_days\": 5}, \"app\": \"qr\"}"
+                .to_vec(),
+            b"POST /v1/select_batch HTTP/1.1\r\nContent-Length: 55\r\n\r\n\
+              {\"items\": [{\"system\": {\"n\": 4}}, {\"system\": {\"n\": 8}}]}"
+                .to_vec(),
+            b"POST /v1/ingest HTTP/1.1\r\nConnection: keep-alive\r\nContent-Length: 77\r\n\r\n\
+              {\"track\": \"t\", \"n_procs\": 2, \"events\": [{\"proc\": 0, \"fail\": 1, \"repair\": 2}]}"
+                .to_vec(),
+            // Two pipelined requests in one buffer.
+            b"GET /v1/status HTTP/1.1\r\n\r\nPOST /v1/model HTTP/1.1\r\nContent-Length: 2\r\n\r\n{}"
+                .to_vec(),
+            // Raw JSON bodies (the protocol layer sees these directly).
+            br#"{"system": {"n": 6, "mttf_days": 8, "mttr_min": 40}, "search": {"refine_steps": 3}}"#
+                .to_vec(),
+            br#"{"track": "c1", "n_procs": 4, "events": [{"proc": 3, "fail": 10.5, "repair": 99}]}"#
+                .to_vec(),
+        ],
+        FuzzTarget::Wal => vec![wal_image()],
+        FuzzTarget::Snapshot => vec![snapshot_image()],
+    }
+}
+
+/// A valid WAL byte image containing every record kind.
+fn wal_image() -> Vec<u8> {
+    let mut bytes = WAL_MAGIC.to_vec();
+    let records = [
+        WalRecord::Create { n_procs: 4 },
+        WalRecord::Outage { proc: 1, fail: 1_000.0, repair: 2_500.0 },
+        WalRecord::Refit { lambda: 1.0 / 86_400.0, theta: 1.0 / 2_400.0 },
+        WalRecord::Recommendation(Box::new(sample_spec())),
+        WalRecord::Evict { cutoff: 3_000.0 },
+        WalRecord::Outage { proc: 0, fail: 9_000.0, repair: 9_800.0 },
+    ];
+    for rec in &records {
+        bytes.extend_from_slice(&encode_frame(rec));
+    }
+    bytes
+}
+
+/// A valid snapshot byte image with rates and a registered spec.
+fn snapshot_image() -> Vec<u8> {
+    let mut state = TrackState::new(4).expect("4 procs is valid");
+    state.rates = Some((1.0 / 86_400.0, 1.0 / 2_400.0));
+    state.specs.push(sample_spec());
+    state.accepted = 7;
+    state.merged = 1;
+    snapshot::encode(3, 42, &state)
+}
+
+/// A fully-populated recommendation record — the deepest decoder the
+/// WAL and snapshot share.
+fn sample_spec() -> SpecRecord {
+    let system = SystemParams::new(4, 1.0 / (5.0 * 86_400.0), 1.0 / 2_400.0);
+    let app = AppProfile::qr(4);
+    let policy = ReschedulingPolicy::greedy(4);
+    let inputs = ModelInputs::new(system, &app, &policy).expect("sample inputs are valid");
+    SpecRecord {
+        identity: 0x1234_5678_9ABC_DEF0,
+        key: 0x0FED_CBA9_8765_4321,
+        rates_used: (system.lambda, system.theta),
+        refresh: false,
+        inputs,
+        cfg: SearchConfig::default(),
+    }
+}
+
+/// Best-effort text of a caught panic payload.
+fn panic_message(panic: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = panic.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = panic.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "non-string panic payload".to_string()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn seed_corpora_are_valid_for_their_parsers() {
+        // Unmutated seeds must parse cleanly — otherwise the fuzzer
+        // never explores the near-valid space it exists for.
+        let scan = wal::scan_bytes(&wal_image(), Path::new("<seed>")).unwrap();
+        assert_eq!(scan.records.len(), 6);
+        assert!(!scan.torn(), "seed WAL image has a torn tail: {:?}", scan.error);
+
+        let snap = snapshot::decode(&snapshot_image(), Path::new("<seed>")).unwrap();
+        assert_eq!((snap.gen, snap.covered), (3, 42));
+
+        for seed in seed_corpus(FuzzTarget::Http).iter().take(5) {
+            // The HTTP seeds (first five) are complete frames.
+            let parsed = try_parse_request(seed).expect("seed frame must parse");
+            assert!(parsed.is_some(), "seed frame incomplete: {:?}", String::from_utf8_lossy(seed));
+        }
+    }
+
+    #[test]
+    fn http_seed_content_lengths_are_exact_or_pipelined() {
+        // Each POST seed's Content-Length must cover exactly the bytes
+        // present, so `Ok(Some)` consumed the whole (or prefix) frame.
+        for seed in seed_corpus(FuzzTarget::Http) {
+            if let Ok(Some((req, consumed))) = try_parse_request(&seed) {
+                assert!(consumed <= seed.len());
+                if req.method == "POST" && consumed == seed.len() {
+                    assert!(!req.body.is_empty());
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn fuzz_targets_survive_a_smoke_burst_deterministically() {
+        for target in [FuzzTarget::Http, FuzzTarget::Wal, FuzzTarget::Snapshot] {
+            let a = run(target, 300, 7);
+            assert_eq!(a.panics, 0, "{}: {:?}", target.name(), a.first_panic);
+            assert_eq!(a.iters, 300);
+            assert_eq!(a.accepted + a.rejected, 300);
+            // Replay determinism: same seed, same split.
+            let b = run(target, 300, 7);
+            assert_eq!((a.accepted, a.rejected), (b.accepted, b.rejected));
+            // The mutation engine must leave some inputs parseable and
+            // break others — both halves of the space get exercised.
+            assert!(a.rejected > 0, "{}: nothing rejected", target.name());
+        }
+    }
+
+    #[test]
+    fn target_names_round_trip() {
+        for name in ["http", "wal", "snapshot"] {
+            assert_eq!(FuzzTarget::from_name(name).unwrap().name(), name);
+        }
+        assert!(FuzzTarget::from_name("tcp").is_err());
+    }
+}

@@ -92,6 +92,7 @@ pub mod baselines;
 pub mod config;
 pub mod experiments;
 pub mod fitting;
+pub mod fuzz;
 pub mod linalg;
 pub mod markov;
 pub mod metrics;

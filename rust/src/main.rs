@@ -45,10 +45,11 @@ fn app_spec() -> App {
         })
         .command(CommandSpec {
             name: "serve",
-            about: "run the advisor daemon: HTTP/1.1 + JSON endpoints /v1/select, /v1/select_batch, /v1/model, /v1/ingest, /v1/status (see DESIGN.md §7, §11)",
+            about: "run the advisor daemon: HTTP/1.1 + JSON endpoints /v1/select, /v1/select_batch, /v1/model, /v1/ingest, /v1/status; overload-hardened — bounded worker pool + connection queue shedding 503 at saturation, per-request read deadlines, graceful drain on shutdown (see DESIGN.md §7, §11, §12)",
             flags: vec![
                 flag("addr", "HOST:PORT", "bind address (port 0 = ephemeral)", Some("127.0.0.1:7743")),
                 flag("workers", "N", "HTTP handler threads (0 = auto)", Some("0")),
+                flag("queue-depth", "N", "pending-connection queue bound; past it new connections are shed with 503 + Retry-After", Some("128")),
                 flag("shards", "N", "recommendation-cache shards", Some("8")),
                 flag("cache-mb", "F", "recommendation-cache memory budget (MB)", Some("256")),
                 flag("drift", "F", "relative rate drift that re-selects a cached recommendation", Some("0.10")),
@@ -134,6 +135,15 @@ fn app_spec() -> App {
             positionals: vec![("path", "trace file (LANL-style CSV or Condor-style rows)")],
         })
         .command(CommandSpec {
+            name: "fuzz",
+            about: "deterministic robustness fuzzing (DESIGN.md §12): mutate valid seed bytes (truncations, bit flips, length lies, splices, pipelined garbage) against a production parser and fail on any panic; same --seed + --iters replays identically",
+            flags: vec![
+                flag("iters", "N", "mutated inputs to drive", Some("5000")),
+                flag("seed", "U64", "mutation RNG seed", Some("1")),
+            ],
+            positionals: vec![("target", "http (request framing + JSON protocol) | wal (scanner) | snapshot (decoder)")],
+        })
+        .command(CommandSpec {
             name: "info",
             about: "report engine/artifact status",
             flags: vec![],
@@ -185,6 +195,7 @@ fn run(p: &malleable_ckpt::util::cli::Parsed) -> Result<()> {
         "gen-trace" => cmd_gen_trace(p),
         "experiment" => cmd_experiment(p),
         "analyze-trace" => cmd_analyze_trace(p),
+        "fuzz" => cmd_fuzz(p),
         "info" => cmd_info(),
         other => Err(anyhow!("unhandled command {other}")),
     }
@@ -294,16 +305,21 @@ fn cmd_serve(p: &malleable_ckpt::util::cli::Parsed) -> Result<()> {
             opts.workers = w;
         }
     }
+    if let Some(q) = p.get_usize("queue-depth")? {
+        anyhow::ensure!(q >= 1, "--queue-depth must be at least 1");
+        opts.queue_depth = q;
+    }
     let server = AdvisorServer::bind_with_store(&opts, store)?;
     let addr = server.local_addr()?;
     println!("advisor listening on http://{addr}");
     println!(
-        "  drift threshold {:.3}, re-fit window {:.1} d, cache {} MB / {} shards, {} workers",
+        "  drift threshold {:.3}, re-fit window {:.1} d, cache {} MB / {} shards, {} workers, queue depth {}",
         opts.advisor.drift_threshold,
         opts.advisor.refit_window / 86_400.0,
         opts.advisor.cache_bytes >> 20,
         opts.advisor.shards,
-        opts.workers
+        opts.workers,
+        opts.queue_depth
     );
     match p.get("data-dir") {
         Some(dir) => println!(
@@ -556,6 +572,28 @@ fn cmd_analyze_trace(p: &malleable_ckpt::util::cli::Parsed) -> Result<()> {
         }
         Err(e) => println!("Weibull TTF fit     : unavailable ({e})"),
     }
+    Ok(())
+}
+
+fn cmd_fuzz(p: &malleable_ckpt::util::cli::Parsed) -> Result<()> {
+    use malleable_ckpt::fuzz;
+
+    let target = fuzz::FuzzTarget::from_name(
+        p.positionals
+            .first()
+            .ok_or_else(|| anyhow!("missing fuzz target (http | wal | snapshot)"))?,
+    )?;
+    let iters = p.get_u64("iters")?.unwrap_or(5_000);
+    let seed = p.get_u64("seed")?.unwrap_or(1);
+    anyhow::ensure!(iters >= 1, "--iters must be at least 1");
+    let report = fuzz::run(target, iters, seed).into_result(seed)?;
+    println!(
+        "fuzz {}: {} iters (seed {seed}) — {} accepted, {} rejected, 0 panics",
+        report.target.name(),
+        report.iters,
+        report.accepted,
+        report.rejected
+    );
     Ok(())
 }
 

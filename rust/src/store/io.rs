@@ -1,0 +1,404 @@
+//! Injectable file I/O for the durable store, so the WAL/snapshot stack
+//! can be exercised under deterministic fault injection.
+//!
+//! Production code paths use [`RealIo`] (plain `std::fs`); the
+//! fault-injection tests wrap it in [`FaultIo`], which counts every
+//! fallible operation and fails the Nth one with a chosen
+//! [`std::io::ErrorKind`] — optionally after letting a *prefix* of a write
+//! reach the file (a torn frame, exactly what a crash mid-`write(2)`
+//! leaves behind).
+//!
+//! Everything that touches bytes-on-disk in `store::wal`,
+//! `store::snapshot`, and `TrackStore::{open, compact}` is routed through
+//! these traits; directory *listing* (generation discovery) stays on
+//! `std::fs` because it only selects which files to read — every byte
+//! actually read or written goes through here.
+//!
+//! Failures surface as [`StoreError`], a typed error callers can
+//! `downcast_ref` out of the `anyhow` chain: `Io` for an operation that
+//! failed (with the op name and path), `Corrupt` for bytes that were read
+//! fine but are not a valid WAL/snapshot. The store never maps either one
+//! to "empty state" — a fault is loud or it is absent.
+
+use std::io;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+
+/// Typed store failure: either an I/O operation failed, or bytes on disk
+/// are not a valid store file. Travels inside `anyhow::Error` (the store's
+/// public `Result` type) and is recoverable via `err.downcast_ref`.
+#[derive(Debug)]
+pub enum StoreError {
+    /// A file-system operation failed. `op` names the operation
+    /// (`"append"`, `"snapshot-rename"`, ...), `path` the file it was
+    /// aimed at.
+    Io { op: &'static str, path: PathBuf, source: io::Error },
+    /// Bytes read successfully but do not form a valid store file (bad
+    /// magic, failed checksum, undecodable state).
+    Corrupt { path: PathBuf, detail: String },
+}
+
+impl StoreError {
+    pub(crate) fn io(op: &'static str, path: &Path, source: io::Error) -> StoreError {
+        StoreError::Io { op, path: path.to_path_buf(), source }
+    }
+
+    pub(crate) fn corrupt(path: &Path, detail: impl Into<String>) -> StoreError {
+        StoreError::Corrupt { path: path.to_path_buf(), detail: detail.into() }
+    }
+}
+
+impl std::fmt::Display for StoreError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            StoreError::Io { op, path, source } => {
+                write!(f, "store i/o failure: {op} on {}: {source}", path.display())
+            }
+            StoreError::Corrupt { path, detail } => {
+                write!(f, "store corruption: {}: {detail}", path.display())
+            }
+        }
+    }
+}
+
+impl std::error::Error for StoreError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            StoreError::Io { source, .. } => Some(source),
+            StoreError::Corrupt { .. } => None,
+        }
+    }
+}
+
+/// An open, writable store file (one WAL generation or a snapshot tmp).
+pub trait StoreFile: Send {
+    fn write_all(&mut self, buf: &[u8]) -> io::Result<()>;
+    fn flush(&mut self) -> io::Result<()>;
+    /// `fdatasync`: contents to stable storage.
+    fn sync_data(&mut self) -> io::Result<()>;
+    /// `fsync`: contents + metadata to stable storage.
+    fn sync_all(&mut self) -> io::Result<()>;
+}
+
+/// The file-system surface the store needs. Every method is fallible and
+/// every implementation must behave like `std::fs` on success — the fault
+/// injector only decides *whether* an operation runs, never what it does.
+pub trait StoreIo: Send + Sync {
+    fn read(&self, path: &Path) -> io::Result<Vec<u8>>;
+    /// Create (truncating) and open for write.
+    fn create(&self, path: &Path) -> io::Result<Box<dyn StoreFile>>;
+    /// Open an existing file for append.
+    fn open_append(&self, path: &Path) -> io::Result<Box<dyn StoreFile>>;
+    /// Truncate an existing file to `len` bytes and fsync it (torn-tail
+    /// repair).
+    fn truncate(&self, path: &Path, len: u64) -> io::Result<()>;
+    fn rename(&self, from: &Path, to: &Path) -> io::Result<()>;
+    fn remove_file(&self, path: &Path) -> io::Result<()>;
+    /// fsync a directory so renames/unlinks inside it are durable.
+    fn sync_dir(&self, dir: &Path) -> io::Result<()>;
+}
+
+/// Production I/O: plain `std::fs`.
+#[derive(Debug, Default, Clone, Copy)]
+pub struct RealIo;
+
+impl StoreFile for std::fs::File {
+    fn write_all(&mut self, buf: &[u8]) -> io::Result<()> {
+        io::Write::write_all(self, buf)
+    }
+
+    fn flush(&mut self) -> io::Result<()> {
+        io::Write::flush(self)
+    }
+
+    fn sync_data(&mut self) -> io::Result<()> {
+        std::fs::File::sync_data(self)
+    }
+
+    fn sync_all(&mut self) -> io::Result<()> {
+        std::fs::File::sync_all(self)
+    }
+}
+
+impl StoreIo for RealIo {
+    fn read(&self, path: &Path) -> io::Result<Vec<u8>> {
+        std::fs::read(path)
+    }
+
+    fn create(&self, path: &Path) -> io::Result<Box<dyn StoreFile>> {
+        Ok(Box::new(std::fs::File::create(path)?))
+    }
+
+    fn open_append(&self, path: &Path) -> io::Result<Box<dyn StoreFile>> {
+        Ok(Box::new(std::fs::OpenOptions::new().append(true).open(path)?))
+    }
+
+    fn truncate(&self, path: &Path, len: u64) -> io::Result<()> {
+        let f = std::fs::OpenOptions::new().write(true).open(path)?;
+        f.set_len(len)?;
+        f.sync_all()
+    }
+
+    fn rename(&self, from: &Path, to: &Path) -> io::Result<()> {
+        std::fs::rename(from, to)
+    }
+
+    fn remove_file(&self, path: &Path) -> io::Result<()> {
+        std::fs::remove_file(path)
+    }
+
+    fn sync_dir(&self, dir: &Path) -> io::Result<()> {
+        std::fs::File::open(dir)?.sync_all()
+    }
+}
+
+/// One scheduled fault for [`FaultIo`].
+#[derive(Debug, Clone)]
+pub struct FaultPlan {
+    /// Zero-based index of the fallible operation to fail (operations are
+    /// counted across the whole `FaultIo`, files included).
+    pub fail_at: usize,
+    /// The error kind the failed operation reports.
+    pub kind: io::ErrorKind,
+    /// For a faulted `write_all`: how many prefix bytes still reach the
+    /// file before the error (a torn frame). `None` writes nothing.
+    /// Ignored by non-write operations.
+    pub short_write: Option<usize>,
+}
+
+struct FaultState {
+    counter: AtomicUsize,
+    plan: Mutex<Option<FaultPlan>>,
+}
+
+impl FaultState {
+    /// Count one fallible operation; return the fault to inject, if this
+    /// is the chosen one.
+    fn tick(&self) -> Option<FaultPlan> {
+        let idx = self.counter.fetch_add(1, Ordering::SeqCst);
+        let guard = self.plan.lock().unwrap();
+        guard.as_ref().filter(|p| p.fail_at == idx).cloned()
+    }
+}
+
+/// Deterministic fault injector over [`RealIo`]. Counts every fallible
+/// operation (reads, creates, opens, writes, flushes, syncs, truncates,
+/// renames, unlinks, dir-syncs) in program order; when armed, the
+/// `fail_at`-th operation fails with the planned [`io::ErrorKind`] —
+/// writes optionally land a prefix first, producing a torn frame exactly
+/// where a real crash would.
+///
+/// Clone handles share the counter and plan, so a test can keep one handle
+/// while the store owns another.
+#[derive(Clone)]
+pub struct FaultIo {
+    state: Arc<FaultState>,
+}
+
+impl Default for FaultIo {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl FaultIo {
+    /// A counting-only injector (no fault armed).
+    pub fn new() -> FaultIo {
+        FaultIo {
+            state: Arc::new(FaultState {
+                counter: AtomicUsize::new(0),
+                plan: Mutex::new(None),
+            }),
+        }
+    }
+
+    /// Arm (or re-arm) the fault plan.
+    pub fn arm(&self, plan: FaultPlan) {
+        *self.state.plan.lock().unwrap() = Some(plan);
+    }
+
+    /// Disarm: subsequent operations succeed (the counter keeps running).
+    pub fn disarm(&self) {
+        *self.state.plan.lock().unwrap() = None;
+    }
+
+    /// Fallible operations observed so far.
+    pub fn ops(&self) -> usize {
+        self.state.counter.load(Ordering::SeqCst)
+    }
+
+    fn guard(&self, op: &'static str) -> io::Result<()> {
+        match self.state.tick() {
+            Some(p) => Err(io::Error::new(p.kind, format!("injected fault: {op}"))),
+            None => Ok(()),
+        }
+    }
+}
+
+struct FaultFile {
+    inner: Box<dyn StoreFile>,
+    state: Arc<FaultState>,
+}
+
+impl FaultFile {
+    fn guard(&mut self, op: &'static str) -> io::Result<()> {
+        match self.state.tick() {
+            Some(p) => Err(io::Error::new(p.kind, format!("injected fault: {op}"))),
+            None => Ok(()),
+        }
+    }
+}
+
+impl StoreFile for FaultFile {
+    fn write_all(&mut self, buf: &[u8]) -> io::Result<()> {
+        if let Some(p) = self.state.tick() {
+            // A torn write: some prefix may have hit the disk before the
+            // failure. Land it through the real file so recovery sees
+            // exactly what a crashed process would have left.
+            let keep = p.short_write.unwrap_or(0).min(buf.len());
+            if keep > 0 {
+                self.inner.write_all(&buf[..keep])?;
+                let _ = self.inner.flush();
+            }
+            return Err(io::Error::new(p.kind, "injected fault: write_all"));
+        }
+        self.inner.write_all(buf)
+    }
+
+    fn flush(&mut self) -> io::Result<()> {
+        self.guard("flush")?;
+        self.inner.flush()
+    }
+
+    fn sync_data(&mut self) -> io::Result<()> {
+        self.guard("sync_data")?;
+        self.inner.sync_data()
+    }
+
+    fn sync_all(&mut self) -> io::Result<()> {
+        self.guard("sync_all")?;
+        self.inner.sync_all()
+    }
+}
+
+impl StoreIo for FaultIo {
+    fn read(&self, path: &Path) -> io::Result<Vec<u8>> {
+        self.guard("read")?;
+        RealIo.read(path)
+    }
+
+    fn create(&self, path: &Path) -> io::Result<Box<dyn StoreFile>> {
+        self.guard("create")?;
+        let inner = RealIo.create(path)?;
+        Ok(Box::new(FaultFile { inner, state: Arc::clone(&self.state) }))
+    }
+
+    fn open_append(&self, path: &Path) -> io::Result<Box<dyn StoreFile>> {
+        self.guard("open_append")?;
+        let inner = RealIo.open_append(path)?;
+        Ok(Box::new(FaultFile { inner, state: Arc::clone(&self.state) }))
+    }
+
+    fn truncate(&self, path: &Path, len: u64) -> io::Result<()> {
+        self.guard("truncate")?;
+        RealIo.truncate(path, len)
+    }
+
+    fn rename(&self, from: &Path, to: &Path) -> io::Result<()> {
+        self.guard("rename")?;
+        RealIo.rename(from, to)
+    }
+
+    fn remove_file(&self, path: &Path) -> io::Result<()> {
+        self.guard("remove_file")?;
+        RealIo.remove_file(path)
+    }
+
+    fn sync_dir(&self, dir: &Path) -> io::Result<()> {
+        self.guard("sync_dir")?;
+        RealIo.sync_dir(dir)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp(tag: &str) -> PathBuf {
+        static SEQ: AtomicUsize = AtomicUsize::new(0);
+        let n = SEQ.fetch_add(1, Ordering::Relaxed);
+        std::env::temp_dir().join(format!("mckpt-io-{tag}-{}-{n}", std::process::id()))
+    }
+
+    #[test]
+    fn real_io_roundtrip() {
+        let path = tmp("real");
+        let mut f = RealIo.create(&path).unwrap();
+        f.write_all(b"hello").unwrap();
+        f.flush().unwrap();
+        f.sync_data().unwrap();
+        drop(f);
+        let mut f = RealIo.open_append(&path).unwrap();
+        f.write_all(b" world").unwrap();
+        f.sync_all().unwrap();
+        drop(f);
+        assert_eq!(RealIo.read(&path).unwrap(), b"hello world");
+        RealIo.truncate(&path, 5).unwrap();
+        assert_eq!(RealIo.read(&path).unwrap(), b"hello");
+        let renamed = tmp("real-renamed");
+        RealIo.rename(&path, &renamed).unwrap();
+        assert!(RealIo.read(&path).is_err());
+        RealIo.remove_file(&renamed).unwrap();
+    }
+
+    #[test]
+    fn fault_io_fails_exactly_the_chosen_op() {
+        let path = tmp("fault");
+        // Count ops in a fault-free pass: create, write, flush = 3.
+        let io = FaultIo::new();
+        let mut f = io.create(&path).unwrap();
+        f.write_all(b"abc").unwrap();
+        f.flush().unwrap();
+        drop(f);
+        assert_eq!(io.ops(), 3);
+
+        // Fail op 1 (the write); op 0 (create) must still succeed.
+        let io = FaultIo::new();
+        io.arm(FaultPlan { fail_at: 1, kind: io::ErrorKind::Other, short_write: None });
+        let mut f = io.create(&path).unwrap();
+        let err = f.write_all(b"abc").unwrap_err();
+        assert_eq!(err.kind(), io::ErrorKind::Other);
+        drop(f);
+        // Nothing was kept: the file is empty (created fresh, write failed).
+        assert_eq!(RealIo.read(&path).unwrap(), b"");
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn fault_io_short_write_keeps_prefix() {
+        let path = tmp("short");
+        let io = FaultIo::new();
+        io.arm(FaultPlan {
+            fail_at: 1,
+            kind: io::ErrorKind::WriteZero,
+            short_write: Some(4),
+        });
+        let mut f = io.create(&path).unwrap();
+        assert!(f.write_all(b"abcdefgh").is_err());
+        drop(f);
+        assert_eq!(RealIo.read(&path).unwrap(), b"abcd");
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn store_error_display_and_downcast() {
+        let e = StoreError::io("append", Path::new("/x/wal-1.log"), io::Error::other("boom"));
+        let msg = format!("{e}");
+        assert!(msg.contains("append") && msg.contains("wal-1.log"), "{msg}");
+        let any: anyhow::Error = e.into();
+        assert!(any.downcast_ref::<StoreError>().is_some());
+        let c = StoreError::corrupt(Path::new("/x/snapshot.bin"), "bad magic");
+        assert!(format!("{c}").contains("bad magic"));
+    }
+}

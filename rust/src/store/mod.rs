@@ -33,13 +33,16 @@
 //! The `malleable-ckpt store` subcommand fronts [`inspect`], [`verify`]
 //! and [`compact_all`] for operating on a data dir offline.
 
+pub mod io;
 pub mod snapshot;
 pub mod wal;
 
 use std::path::{Path, PathBuf};
+use std::sync::Arc;
 
 use anyhow::{bail, ensure, Context, Result};
 
+pub use io::{FaultIo, FaultPlan, RealIo, StoreError, StoreIo};
 pub use wal::{SpecRecord, Wal, WalRecord};
 
 use crate::traces::TraceTail;
@@ -231,19 +234,32 @@ impl TraceStore {
 
 /// Per-track durable handle: the active WAL generation plus the snapshot
 /// machinery. All appends go through this; compaction snapshots the
-/// caller-provided state and rolls the generation.
+/// caller-provided state and rolls the generation. Every byte read or
+/// written goes through the track's [`StoreIo`] (production: [`RealIo`];
+/// the fault-injection tests pass a [`FaultIo`]).
 pub struct TrackStore {
     dir: PathBuf,
     wal: Wal,
     gen: u64,
+    io: Arc<dyn StoreIo>,
 }
 
 impl TrackStore {
     /// Recover a track from its directory (see the module docs for the
     /// generation protocol), creating it if nothing exists yet.
     pub fn open(dir: &Path, n_if_new: Option<usize>) -> Result<(TrackStore, TrackState)> {
+        Self::open_with_io(Arc::new(RealIo), dir, n_if_new)
+    }
+
+    /// [`TrackStore::open`] over an injectable I/O layer, retained for the
+    /// store's lifetime (compaction uses it too).
+    pub fn open_with_io(
+        io: Arc<dyn StoreIo>,
+        dir: &Path,
+        n_if_new: Option<usize>,
+    ) -> Result<(TrackStore, TrackState)> {
         std::fs::create_dir_all(dir)?;
-        let snap = snapshot::load(dir)?;
+        let snap = snapshot::load_with(io.as_ref(), dir)?;
         let (mut state, start_gen, covered) = match snap {
             Some(s) => (Some(s.state), s.gen, s.covered),
             None => (None, 0, 0),
@@ -255,10 +271,10 @@ impl TrackStore {
             if gen < start_gen {
                 // Fully covered by the snapshot; a leftover from a crash
                 // mid-compaction.
-                let _ = std::fs::remove_file(&path);
+                let _ = io.remove_file(&path);
                 continue;
             }
-            let (wal, records) = Wal::open(&path)?;
+            let (wal, records) = Wal::open_with(io.as_ref(), &path)?;
             let skip = if gen == start_gen { (covered as usize).min(records.len()) } else { 0 };
             for rec in &records[skip..] {
                 match &mut state {
@@ -276,7 +292,24 @@ impl TrackStore {
 
         let (gen, wal, state) = match (active, state) {
             (Some((gen, wal)), Some(state)) => (gen, wal, state),
-            (Some(_), None) => bail!("WAL holds no Create record and no snapshot exists"),
+            (Some((gen, mut wal)), None) => {
+                // A generation exists but replayed nothing and no snapshot
+                // covers it: the only way to get here is a crash between
+                // WAL creation and the Create record becoming durable (a
+                // torn tail can only eat un-synced records, and Create is
+                // always first). Nothing acknowledged was lost, so
+                // re-initialize in place when the caller can supply the
+                // processor count; otherwise fail loudly and typed.
+                let n = n_if_new.ok_or_else(|| {
+                    StoreError::corrupt(
+                        dir,
+                        "WAL holds no Create record and no snapshot exists",
+                    )
+                })?;
+                wal.append(&WalRecord::Create { n_procs: n })?;
+                wal.sync()?;
+                (gen, wal, TrackState::new(n)?)
+            }
             (None, prior) => {
                 // Fresh track (or snapshot-only after an interrupted
                 // compaction): start a new generation.
@@ -285,7 +318,7 @@ impl TrackStore {
                     None => n_if_new.context("new track needs a processor count")?,
                 };
                 let gen = start_gen + 1;
-                let mut wal = Wal::create(&wal_path(dir, gen))?;
+                let mut wal = Wal::create_with(io.as_ref(), &wal_path(dir, gen))?;
                 wal.append(&WalRecord::Create { n_procs: n })?;
                 wal.sync()?;
                 let state = match prior {
@@ -295,7 +328,7 @@ impl TrackStore {
                 (gen, wal, state)
             }
         };
-        Ok((TrackStore { dir: dir.to_path_buf(), wal, gen }, state))
+        Ok((TrackStore { dir: dir.to_path_buf(), wal, gen, io }, state))
     }
 
     pub fn append(&mut self, rec: &WalRecord) -> Result<()> {
@@ -322,20 +355,18 @@ impl TrackStore {
     /// old log. Crash-safe at every step (module docs).
     pub fn compact(&mut self, state: &TrackState) -> Result<()> {
         self.wal.sync()?;
-        snapshot::write(&self.dir, self.gen, self.wal.records(), state)?;
+        snapshot::write_with(self.io.as_ref(), &self.dir, self.gen, self.wal.records(), state)?;
         let next = self.gen + 1;
-        let mut wal = Wal::create(&wal_path(&self.dir, next))?;
+        let mut wal = Wal::create_with(self.io.as_ref(), &wal_path(&self.dir, next))?;
         wal.append(&WalRecord::Create { n_procs: state.n_procs() })?;
         wal.sync()?;
         let old = wal_path(&self.dir, self.gen);
         self.wal = wal;
         self.gen = next;
-        let _ = std::fs::remove_file(old);
+        let _ = self.io.remove_file(&old);
         // Make the rename + new file + unlink durable as a set. Best
         // effort: a lost dir entry only re-runs an idempotent replay.
-        if let Ok(d) = std::fs::File::open(&self.dir) {
-            let _ = d.sync_all();
-        }
+        let _ = self.io.sync_dir(&self.dir);
         Ok(())
     }
 }

@@ -26,6 +26,7 @@ use std::path::Path;
 
 use anyhow::{ensure, Context, Result};
 
+use super::io::{RealIo, StoreError, StoreIo};
 use super::wal::{ByteReader, ByteWriter, SpecRecord};
 use super::TrackState;
 use crate::traces::TraceTail;
@@ -107,8 +108,9 @@ fn decode_state(r: &mut ByteReader) -> Result<TrackState> {
     Ok(TrackState { tail, rates, specs, accepted, merged, reselects, evicted })
 }
 
-/// Atomically write `state` as the track's snapshot.
-pub fn write(dir: &Path, gen: u64, covered: u64, state: &TrackState) -> Result<()> {
+/// Encode a complete snapshot file (magic + body + checksum) in memory.
+/// Shared by [`write`] and the tests/fuzz harness that mutate the bytes.
+pub fn encode(gen: u64, covered: u64, state: &TrackState) -> Vec<u8> {
     let mut w = ByteWriter::new();
     w.u64(u64::from(SNAP_VERSION));
     w.u64(gen);
@@ -120,24 +122,63 @@ pub fn write(dir: &Path, gen: u64, covered: u64, state: &TrackState) -> Result<(
     bytes.extend_from_slice(&SNAP_MAGIC);
     bytes.extend_from_slice(&body);
     bytes.extend_from_slice(&fnv1a_64(&body).to_le_bytes());
+    bytes
+}
 
+/// Decode snapshot bytes — the shared core of [`load`] and the fuzz
+/// harness's `snapshot` target. Every failure is a typed
+/// [`StoreError::Corrupt`] naming `origin`; arbitrary input must produce a
+/// clean decode or that error, never a panic or an oversized allocation.
+pub fn decode(bytes: &[u8], origin: &Path) -> Result<Snapshot> {
+    let corrupt = |detail: String| StoreError::corrupt(origin, detail);
+    if bytes.len() < SNAP_MAGIC.len() + 8 || bytes[..SNAP_MAGIC.len()] != SNAP_MAGIC {
+        return Err(corrupt("not a snapshot (bad magic)".to_string()).into());
+    }
+    let body = &bytes[SNAP_MAGIC.len()..bytes.len() - 8];
+    let stored = u64::from_le_bytes(bytes[bytes.len() - 8..].try_into().unwrap());
+    if fnv1a_64(body) != stored {
+        return Err(corrupt("failed its checksum".to_string()).into());
+    }
+    let mut r = ByteReader::new(body);
+    let decoded = (|| -> Result<Snapshot> {
+        let version = r.u64()?;
+        ensure!(version == u64::from(SNAP_VERSION), "unsupported snapshot version {version}");
+        let gen = r.u64()?;
+        let covered = r.u64()?;
+        let state = decode_state(&mut r)?;
+        r.done()?;
+        Ok(Snapshot { gen, covered, state })
+    })();
+    decoded.map_err(|e| corrupt(format!("undecodable snapshot: {e:#}")).into())
+}
+
+/// Atomically write `state` as the track's snapshot.
+pub fn write(dir: &Path, gen: u64, covered: u64, state: &TrackState) -> Result<()> {
+    write_with(&RealIo, dir, gen, covered, state)
+}
+
+/// [`write`] over an injectable I/O layer.
+pub fn write_with(
+    io: &dyn StoreIo,
+    dir: &Path,
+    gen: u64,
+    covered: u64,
+    state: &TrackState,
+) -> Result<()> {
+    let bytes = encode(gen, covered, state);
     let tmp = dir.join(SNAPSHOT_TMP);
     {
-        let mut f = std::fs::File::create(&tmp)
-            .with_context(|| format!("creating {}", tmp.display()))?;
-        use std::io::Write as _;
-        f.write_all(&bytes)?;
-        f.sync_all()?;
+        let mut f =
+            io.create(&tmp).map_err(|e| StoreError::io("snapshot-create", &tmp, e))?;
+        f.write_all(&bytes).map_err(|e| StoreError::io("snapshot-write", &tmp, e))?;
+        f.sync_all().map_err(|e| StoreError::io("snapshot-sync", &tmp, e))?;
     }
     let dst = dir.join(SNAPSHOT_FILE);
-    std::fs::rename(&tmp, &dst)
-        .with_context(|| format!("renaming snapshot into {}", dst.display()))?;
+    io.rename(&tmp, &dst).map_err(|e| StoreError::io("snapshot-rename", &dst, e))?;
     // Best-effort directory fsync so the rename itself survives a power
     // loss (losing it merely replays the covered WAL records, which are
     // idempotent).
-    if let Ok(d) = std::fs::File::open(dir) {
-        let _ = d.sync_all();
-    }
+    let _ = io.sync_dir(dir);
     Ok(())
 }
 
@@ -145,29 +186,19 @@ pub fn write(dir: &Path, gen: u64, covered: u64, state: &TrackState) -> Result<(
 /// crashed write is deleted; a corrupt `snapshot.bin` is an error (the
 /// data it covered is unrecoverable — surface it, don't guess).
 pub fn load(dir: &Path) -> Result<Option<Snapshot>> {
-    let _ = std::fs::remove_file(dir.join(SNAPSHOT_TMP));
+    load_with(&RealIo, dir)
+}
+
+/// [`load`] over an injectable I/O layer.
+pub fn load_with(io: &dyn StoreIo, dir: &Path) -> Result<Option<Snapshot>> {
+    let _ = io.remove_file(&dir.join(SNAPSHOT_TMP));
     let path = dir.join(SNAPSHOT_FILE);
-    let bytes = match std::fs::read(&path) {
+    let bytes = match io.read(&path) {
         Ok(b) => b,
         Err(e) if e.kind() == std::io::ErrorKind::NotFound => return Ok(None),
-        Err(e) => return Err(e).with_context(|| format!("reading {}", path.display())),
+        Err(e) => return Err(StoreError::io("snapshot-read", &path, e).into()),
     };
-    ensure!(
-        bytes.len() >= SNAP_MAGIC.len() + 8 && bytes[..SNAP_MAGIC.len()] == SNAP_MAGIC,
-        "{} is not a snapshot (bad magic)",
-        path.display()
-    );
-    let body = &bytes[SNAP_MAGIC.len()..bytes.len() - 8];
-    let stored = u64::from_le_bytes(bytes[bytes.len() - 8..].try_into().unwrap());
-    ensure!(fnv1a_64(body) == stored, "{} failed its checksum", path.display());
-    let mut r = ByteReader::new(body);
-    let version = r.u64()?;
-    ensure!(version == u64::from(SNAP_VERSION), "unsupported snapshot version {version}");
-    let gen = r.u64()?;
-    let covered = r.u64()?;
-    let state = decode_state(&mut r).with_context(|| format!("decoding {}", path.display()))?;
-    r.done()?;
-    Ok(Some(Snapshot { gen, covered, state }))
+    decode(&bytes, &path).map(Some)
 }
 
 #[cfg(test)]

@@ -27,11 +27,11 @@
 //! never earlier records (fuzzed at every byte offset in the tests below
 //! and in `rust/tests/store_recovery.rs`).
 
-use std::fs::{File, OpenOptions};
-use std::io::Write as _;
 use std::path::{Path, PathBuf};
 
 use anyhow::{bail, ensure, Context, Result};
+
+use super::io::{RealIo, StoreError, StoreFile, StoreIo};
 
 use crate::config::SystemParams;
 use crate::markov::{BuildOptions, ModelInputs};
@@ -313,19 +313,32 @@ impl WalScan {
 
 /// Read-only scan of a WAL file: walk frames until the first invalid one,
 /// never panicking on truncated or corrupt input. Errors only on I/O
-/// failure or a missing/forged magic header (not a WAL file at all).
+/// failure or a missing/forged magic header (not a WAL file at all), both
+/// typed as [`StoreError`].
 pub fn scan(path: &Path) -> Result<WalScan> {
-    let bytes = std::fs::read(path).with_context(|| format!("reading {}", path.display()))?;
+    scan_with(&RealIo, path)
+}
+
+/// [`scan`] over an injectable I/O layer.
+pub fn scan_with(io: &dyn StoreIo, path: &Path) -> Result<WalScan> {
+    let bytes = io.read(path).map_err(|e| StoreError::io("scan", path, e))?;
+    scan_bytes(&bytes, path)
+}
+
+/// Scan WAL bytes already in memory — the shared core of [`scan`] and the
+/// fuzz harness's `wal` target. Errors ([`StoreError::Corrupt`]) only when
+/// the bytes are not a WAL at all (forged magic); torn tails and mid-file
+/// damage stop the walk and are reported in [`WalScan::error`]. `origin`
+/// names the bytes in errors.
+pub fn scan_bytes(bytes: &[u8], origin: &Path) -> Result<WalScan> {
     if bytes.len() < WAL_MAGIC.len() {
-        // A crash between File::create and the magic write (track
+        // A crash between file creation and the magic write (track
         // creation or a compaction generation roll) leaves a sub-magic
         // file: a torn header, not a foreign file — recovery recreates
         // it. Anything that is not a magic prefix IS foreign.
-        ensure!(
-            WAL_MAGIC.starts_with(&bytes),
-            "{} is not a WAL file (bad magic)",
-            path.display()
-        );
+        if !WAL_MAGIC.starts_with(bytes) {
+            return Err(StoreError::corrupt(origin, "not a WAL file (bad magic)").into());
+        }
         return Ok(WalScan {
             records: Vec::new(),
             valid_len: 0,
@@ -333,11 +346,9 @@ pub fn scan(path: &Path) -> Result<WalScan> {
             error: Some("torn magic header".to_string()),
         });
     }
-    ensure!(
-        bytes[..WAL_MAGIC.len()] == WAL_MAGIC,
-        "{} is not a WAL file (bad magic)",
-        path.display()
-    );
+    if bytes[..WAL_MAGIC.len()] != WAL_MAGIC {
+        return Err(StoreError::corrupt(origin, "not a WAL file (bad magic)").into());
+    }
     let mut records = Vec::new();
     let mut i = WAL_MAGIC.len();
     let mut error = None;
@@ -367,9 +378,11 @@ pub fn scan(path: &Path) -> Result<WalScan> {
     Ok(WalScan { records, valid_len: i as u64, file_len: bytes.len() as u64, error })
 }
 
-/// An open, appendable WAL.
+/// An open, appendable WAL. File operations go through
+/// [`super::io::StoreIo`] so the fault-injection tests can fail any of
+/// them deterministically; production uses [`RealIo`].
 pub struct Wal {
-    file: File,
+    file: Box<dyn StoreFile>,
     path: PathBuf,
     bytes: u64,
     records: u64,
@@ -379,9 +392,14 @@ impl Wal {
     /// Create a fresh WAL (truncating any existing file) with just the
     /// magic header.
     pub fn create(path: &Path) -> Result<Wal> {
-        let mut file = File::create(path).with_context(|| format!("creating {}", path.display()))?;
-        file.write_all(&WAL_MAGIC)?;
-        file.flush()?;
+        Self::create_with(&RealIo, path)
+    }
+
+    /// [`Wal::create`] over an injectable I/O layer.
+    pub fn create_with(io: &dyn StoreIo, path: &Path) -> Result<Wal> {
+        let mut file = io.create(path).map_err(|e| StoreError::io("wal-create", path, e))?;
+        file.write_all(&WAL_MAGIC).map_err(|e| StoreError::io("wal-write-magic", path, e))?;
+        file.flush().map_err(|e| StoreError::io("wal-flush", path, e))?;
         Ok(Wal { file, path: path.to_path_buf(), bytes: WAL_MAGIC.len() as u64, records: 0 })
     }
 
@@ -390,23 +408,22 @@ impl Wal {
     /// A file torn inside the magic header (crash during creation) is
     /// recreated empty rather than refused.
     pub fn open(path: &Path) -> Result<(Wal, Vec<WalRecord>)> {
-        let s = scan(path)?;
+        Self::open_with(&RealIo, path)
+    }
+
+    /// [`Wal::open`] over an injectable I/O layer.
+    pub fn open_with(io: &dyn StoreIo, path: &Path) -> Result<(Wal, Vec<WalRecord>)> {
+        let s = scan_with(io, path)?;
         if s.valid_len < WAL_MAGIC.len() as u64 {
-            let wal = Self::create(path)?;
+            let wal = Self::create_with(io, path)?;
             return Ok((wal, Vec::new()));
         }
         if s.torn() {
-            let f = OpenOptions::new()
-                .write(true)
-                .open(path)
-                .with_context(|| format!("truncating torn tail of {}", path.display()))?;
-            f.set_len(s.valid_len)?;
-            f.sync_all()?;
+            io.truncate(path, s.valid_len)
+                .map_err(|e| StoreError::io("wal-truncate-torn-tail", path, e))?;
         }
-        let file = OpenOptions::new()
-            .append(true)
-            .open(path)
-            .with_context(|| format!("opening {} for append", path.display()))?;
+        let file =
+            io.open_append(path).map_err(|e| StoreError::io("wal-open-append", path, e))?;
         let wal = Wal {
             file,
             path: path.to_path_buf(),
@@ -420,7 +437,7 @@ impl Wal {
         let frame = encode_frame(rec);
         self.file
             .write_all(&frame)
-            .with_context(|| format!("appending to {}", self.path.display()))?;
+            .map_err(|e| StoreError::io("wal-append", &self.path, e))?;
         self.bytes += frame.len() as u64;
         self.records += 1;
         Ok(())
@@ -428,13 +445,15 @@ impl Wal {
 
     /// Push buffered bytes to the OS (called once per mutation batch).
     pub fn flush(&mut self) -> Result<()> {
-        Ok(self.file.flush()?)
+        self.file.flush().map_err(|e| StoreError::io("wal-flush", &self.path, e))?;
+        Ok(())
     }
 
     /// Force bytes to stable storage (compaction boundaries).
     pub fn sync(&mut self) -> Result<()> {
-        self.file.flush()?;
-        Ok(self.file.sync_data()?)
+        self.file.flush().map_err(|e| StoreError::io("wal-flush", &self.path, e))?;
+        self.file.sync_data().map_err(|e| StoreError::io("wal-sync", &self.path, e))?;
+        Ok(())
     }
 
     pub fn bytes(&self) -> u64 {

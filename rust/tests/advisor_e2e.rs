@@ -26,7 +26,12 @@ const DAY: f64 = 86_400.0;
 /// Boot a daemon on an ephemeral port; returns the address and the join
 /// handle (joined after `/v1/shutdown`).
 fn boot(cfg: AdvisorConfig) -> (SocketAddr, std::thread::JoinHandle<()>) {
-    let opts = ServeOptions { addr: "127.0.0.1:0".to_string(), workers: 4, advisor: cfg };
+    let opts = ServeOptions {
+        addr: "127.0.0.1:0".to_string(),
+        workers: 4,
+        advisor: cfg,
+        ..Default::default()
+    };
     let server = AdvisorServer::bind(&opts).expect("bind ephemeral port");
     let addr = server.local_addr().unwrap();
     let handle = std::thread::spawn(move || server.run().expect("serve loop"));
@@ -343,8 +348,12 @@ fn daemon_restart_on_data_dir_restores_tracks_and_recommendations() {
         ..Default::default()
     };
     let boot_with_store = |cfg: AdvisorConfig| {
-        let opts =
-            ServeOptions { addr: "127.0.0.1:0".to_string(), workers: 4, advisor: cfg };
+        let opts = ServeOptions {
+            addr: "127.0.0.1:0".to_string(),
+            workers: 4,
+            advisor: cfg,
+            ..Default::default()
+        };
         let store = TraceStore::open(&data_dir).expect("open data dir");
         let server =
             AdvisorServer::bind_with_store(&opts, Some(store)).expect("bind with store");

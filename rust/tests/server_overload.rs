@@ -1,0 +1,298 @@
+//! Overload and graceful-drain end-to-end tests (DESIGN.md §12): a real
+//! daemon on an ephemeral port, driven with raw sockets so the tests can
+//! half-send requests, pin workers, and inspect status lines and headers
+//! the higher-level JSON helpers would hide.
+//!
+//! Covered contracts:
+//! - at saturation (worker pool busy + connection queue full) newcomers
+//!   are shed with `503` and a `Retry-After` header — never queued
+//!   unboundedly, never left hanging;
+//! - `POST /v1/shutdown` drains gracefully: in-flight requests (even ones
+//!   only half-received at shutdown time) complete with real answers,
+//!   new connections are shed, keep-alive is revoked, and a store-backed
+//!   daemon snapshots every track before exiting;
+//! - framing abuse is refused with the right status: `411` for a POST
+//!   without a `Content-Length`, `413` for a body over the cap.
+
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpStream};
+use std::path::Path;
+use std::time::Duration;
+
+use malleable_ckpt::advisor::server::{AdvisorServer, ServeOptions};
+use malleable_ckpt::advisor::AdvisorConfig;
+use malleable_ckpt::apps::AppProfile;
+use malleable_ckpt::config::SystemParams;
+use malleable_ckpt::markov::ModelInputs;
+use malleable_ckpt::policies::ReschedulingPolicy;
+use malleable_ckpt::runtime::ComputeEngine;
+use malleable_ckpt::search::{select_interval, SearchConfig, SearchResult};
+use malleable_ckpt::store::TraceStore;
+use malleable_ckpt::util::json::Json;
+
+/// Give the single-threaded accept loop (2 ms poll) ample time to move a
+/// connection from the listener into the queue or a worker.
+const SETTLE: Duration = Duration::from_millis(300);
+
+fn boot_opts(opts: &ServeOptions) -> (SocketAddr, std::thread::JoinHandle<()>) {
+    let server = AdvisorServer::bind(opts).expect("bind ephemeral port");
+    let addr = server.local_addr().unwrap();
+    let handle = std::thread::spawn(move || server.run().expect("serve loop"));
+    (addr, handle)
+}
+
+/// Send raw bytes, read to EOF, return the full response text.
+fn raw(addr: SocketAddr, bytes: &[u8]) -> String {
+    let mut stream = TcpStream::connect(addr).expect("connect");
+    stream.set_read_timeout(Some(Duration::from_secs(30))).unwrap();
+    stream.write_all(bytes).expect("send raw request");
+    let mut text = String::new();
+    stream.read_to_string(&mut text).expect("read raw response");
+    text
+}
+
+fn status_code(response: &str) -> u16 {
+    response
+        .split_whitespace()
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .unwrap_or_else(|| panic!("malformed status line in {response:?}"))
+}
+
+fn body_json(response: &str) -> Json {
+    let at = response.find("\r\n\r\n").expect("header/body separator") + 4;
+    Json::parse(&response[at..]).unwrap_or_else(|e| panic!("bad body: {e}\n{response}"))
+}
+
+/// One `Connection: close` request via a real socket.
+fn http(addr: SocketAddr, method: &str, path: &str, body: &str) -> (u16, Json) {
+    let req = format!(
+        "{method} {path} HTTP/1.1\r\nHost: {addr}\r\nContent-Type: application/json\r\n\
+         Content-Length: {}\r\nConnection: close\r\n\r\n{body}",
+        body.len()
+    );
+    let text = raw(addr, req.as_bytes());
+    (status_code(&text), body_json(&text))
+}
+
+fn select_body(n: usize, mttf_days: f64, app: &str, track: Option<&str>) -> String {
+    let mut s = format!(
+        r#"{{"system": {{"n": {n}, "mttf_days": {mttf_days}, "mttr_min": 40}}, "app": "{app}", "search": {{"refine_steps": 3}}"#
+    );
+    if let Some(t) = track {
+        s.push_str(&format!(r#", "track": "{t}""#));
+    }
+    s.push('}');
+    s
+}
+
+/// The offline oracle for the spec `select_body` describes.
+fn oracle(n: usize, mttf_days: f64, app: &str) -> SearchResult {
+    let system = SystemParams::from_mttf_mttr(n, mttf_days, 40.0);
+    let app = match app {
+        "cg" => AppProfile::cg(n),
+        "md" => AppProfile::md(n),
+        _ => AppProfile::qr(n),
+    };
+    let policy = ReschedulingPolicy::greedy(n);
+    let inputs = ModelInputs::new(system, &app, &policy).unwrap();
+    let cfg = SearchConfig { refine_steps: 3, ..Default::default() };
+    select_interval(&inputs, &ComputeEngine::native(), &cfg).unwrap()
+}
+
+/// Open a connection and half-send a request (head only, no terminator)
+/// so whichever worker picks it up blocks waiting for the rest.
+fn pin_connection(addr: SocketAddr) -> TcpStream {
+    let mut stream = TcpStream::connect(addr).expect("connect pinned conn");
+    stream.set_read_timeout(Some(Duration::from_secs(30))).unwrap();
+    stream
+        .write_all(b"POST /v1/select HTTP/1.1\r\nContent-Length: 64\r\n")
+        .expect("half-send request head");
+    stream
+}
+
+#[test]
+fn saturated_server_sheds_with_503_and_retry_after() {
+    // One worker, a one-deep queue: two pinned connections saturate the
+    // daemon completely and deterministically.
+    let (addr, handle) = boot_opts(&ServeOptions {
+        addr: "127.0.0.1:0".to_string(),
+        workers: 1,
+        queue_depth: 1,
+        advisor: AdvisorConfig::default(),
+    });
+
+    // Pin the worker, then fill the queue. The settle sleeps let the
+    // accept loop hand the first connection to the worker before the
+    // second arrives, so the second occupies the queue slot.
+    let pinned_worker = pin_connection(addr);
+    std::thread::sleep(SETTLE);
+    let pinned_queue = pin_connection(addr);
+    std::thread::sleep(SETTLE);
+
+    // Saturation: the next connection must be shed immediately — a 503
+    // with the Retry-After contract — without waiting on the worker.
+    let text = raw(addr, b"GET /healthz HTTP/1.1\r\n\r\n");
+    assert_eq!(status_code(&text), 503, "expected a shed, got: {text}");
+    assert!(
+        text.contains("Retry-After: 1"),
+        "503 must carry Retry-After: {text}"
+    );
+    let err = body_json(&text);
+    assert_eq!(err.get("ok").unwrap().as_bool(), Some(false));
+    assert!(
+        err.get("error").unwrap().as_str().unwrap().contains("saturated"),
+        "shed body should say why: {err}"
+    );
+
+    // Releasing the pinned connections frees the daemon: service resumes
+    // for well-behaved clients, and a clean shutdown still works.
+    drop(pinned_worker);
+    drop(pinned_queue);
+    std::thread::sleep(SETTLE);
+    let (code, health) = http(addr, "GET", "/healthz", "");
+    assert_eq!(code, 200, "daemon must recover after the burst");
+    assert_eq!(health.get("ok").unwrap().as_bool(), Some(true));
+    let (code, _) = http(addr, "POST", "/v1/shutdown", "{}");
+    assert_eq!(code, 200);
+    handle.join().expect("server thread");
+}
+
+#[test]
+fn framing_abuse_is_refused_with_411_and_413() {
+    let (addr, handle) = boot_opts(&ServeOptions {
+        addr: "127.0.0.1:0".to_string(),
+        workers: 2,
+        queue_depth: 8,
+        advisor: AdvisorConfig::default(),
+    });
+
+    // POST without a Content-Length: 411, connection closed — the daemon
+    // must never fall back to read-until-EOF framing.
+    let text = raw(addr, b"POST /v1/select HTTP/1.1\r\nHost: x\r\n\r\n");
+    assert_eq!(status_code(&text), 411, "missing length: {text}");
+
+    // A declared body over the cap: refused up front, before any bytes of
+    // the body are read or buffered.
+    let text = raw(
+        addr,
+        b"POST /v1/select HTTP/1.1\r\nContent-Length: 67108864\r\n\r\n",
+    );
+    assert_eq!(status_code(&text), 413, "oversized body: {text}");
+
+    // Well-formed traffic still works on a fresh connection.
+    let (code, _) = http(addr, "GET", "/healthz", "");
+    assert_eq!(code, 200);
+    let (code, _) = http(addr, "POST", "/v1/shutdown", "{}");
+    assert_eq!(code, 200);
+    handle.join().expect("server thread");
+}
+
+/// Any `snapshot.bin` under `dir`, recursively.
+fn has_snapshot(dir: &Path) -> bool {
+    let Ok(entries) = std::fs::read_dir(dir) else { return false };
+    for entry in entries.flatten() {
+        let path = entry.path();
+        if path.is_dir() {
+            if has_snapshot(&path) {
+                return true;
+            }
+        } else if path.file_name().is_some_and(|n| n == "snapshot.bin") {
+            return true;
+        }
+    }
+    false
+}
+
+#[test]
+fn graceful_drain_finishes_in_flight_sheds_newcomers_and_snapshots() {
+    let data_dir = std::env::temp_dir().join(format!(
+        "mckpt-drain-{}-{}",
+        std::process::id(),
+        line!()
+    ));
+    let _ = std::fs::remove_dir_all(&data_dir);
+    let boot_with_store = || {
+        let opts = ServeOptions {
+            addr: "127.0.0.1:0".to_string(),
+            workers: 2,
+            queue_depth: 8,
+            advisor: AdvisorConfig::default(),
+        };
+        let store = TraceStore::open(&data_dir).expect("open data dir");
+        let server =
+            AdvisorServer::bind_with_store(&opts, Some(store)).expect("bind with store");
+        let addr = server.local_addr().unwrap();
+        let handle = std::thread::spawn(move || server.run().expect("serve loop"));
+        (addr, handle)
+    };
+
+    // --- Session 1: a request is mid-flight when shutdown lands.
+    let (addr, handle) = boot_with_store();
+    let body = select_body(6, 2.0, "qr", Some("d1"));
+    let head = format!(
+        "POST /v1/select HTTP/1.1\r\nHost: {addr}\r\nContent-Type: application/json\r\n\
+         Content-Length: {}\r\nConnection: keep-alive\r\n\r\n",
+        body.len()
+    );
+    let mut inflight = TcpStream::connect(addr).expect("connect in-flight conn");
+    inflight.set_read_timeout(Some(Duration::from_secs(30))).unwrap();
+    // Send the head and half the body: worker 1 is now blocked reading.
+    inflight.write_all(head.as_bytes()).expect("send head");
+    inflight.write_all(&body.as_bytes()[..body.len() / 2]).expect("send half body");
+    std::thread::sleep(SETTLE);
+
+    // Shutdown on a second connection while the first is still incomplete.
+    let (code, bye) = http(addr, "POST", "/v1/shutdown", "{}");
+    assert_eq!(code, 200);
+    assert_eq!(bye.get("stopping").unwrap().as_bool(), Some(true));
+    std::thread::sleep(SETTLE);
+
+    // Newcomers are shed while the drain is in progress.
+    let text = raw(addr, b"GET /healthz HTTP/1.1\r\n\r\n");
+    assert_eq!(status_code(&text), 503, "drain must shed newcomers: {text}");
+    assert!(
+        body_json(&text).get("error").unwrap().as_str().unwrap().contains("shutting down"),
+        "drain shed should say why: {text}"
+    );
+
+    // Complete the in-flight request: it must be answered for real — the
+    // full oracle-pinned selection — with keep-alive revoked.
+    inflight.write_all(&body.as_bytes()[body.len() / 2..]).expect("send rest of body");
+    let mut text = String::new();
+    inflight.read_to_string(&mut text).expect("read in-flight response");
+    assert_eq!(status_code(&text), 200, "in-flight request dropped by drain: {text}");
+    assert!(
+        text.to_ascii_lowercase().contains("connection: close"),
+        "drain must revoke keep-alive: {text}"
+    );
+    let want = oracle(6, 2.0, "qr");
+    let resp = body_json(&text);
+    let got = resp.get("interval").and_then(Json::as_f64).expect("interval in response");
+    assert_eq!(got, want.interval, "drained select != offline oracle");
+    handle.join().expect("server thread");
+
+    // Clean shutdown snapshots every track before exit.
+    assert!(
+        has_snapshot(&data_dir),
+        "clean shutdown must leave a snapshot under {}",
+        data_dir.display()
+    );
+
+    // --- Session 2: the drained state recovers, pinned to the oracle.
+    let (addr, handle) = boot_with_store();
+    let (code, status) = http(addr, "GET", "/v1/status", "");
+    assert_eq!(code, 200);
+    assert!(
+        status.path("tracks.d1").is_some(),
+        "track from the drained session must survive restart: {status}"
+    );
+    let (code, resp) = http(addr, "POST", "/v1/select", &select_body(6, 2.0, "qr", Some("d1")));
+    assert_eq!(code, 200);
+    let got = resp.get("interval").and_then(Json::as_f64).expect("interval");
+    assert_eq!(got, want.interval, "restored recommendation != offline oracle");
+    let (code, _) = http(addr, "POST", "/v1/shutdown", "{}");
+    assert_eq!(code, 200);
+    handle.join().expect("server thread");
+    let _ = std::fs::remove_dir_all(&data_dir);
+}

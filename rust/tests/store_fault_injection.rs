@@ -1,0 +1,291 @@
+//! Deterministic fault-injection sweep over the durable store (DESIGN.md
+//! §12): run a scripted append → compact → append → compact workload with
+//! a [`FaultIo`] that fails the Nth file operation — for **every** N and
+//! for both a clean error and a torn (short) write — then recover the
+//! directory with real I/O and pin the recovered state against prefix
+//! oracles.
+//!
+//! The contract under test:
+//!
+//! 1. an injected fault either surfaces as a typed [`StoreError`]
+//!    somewhere in the error chain or lands on a best-effort operation
+//!    whose failure is deliberately tolerated (old-WAL unlink, dir sync,
+//!    stale-tmp cleanup) — never a panic, never a silent `Ok`;
+//! 2. recovery after the fault replays to a state **bit-identical** to
+//!    some prefix of the oracle record sequence, at least everything
+//!    synced (acknowledged) before the fault and at most everything
+//!    issued — records are never reordered, duplicated, or invented;
+//! 3. compaction faults lose nothing: the workload syncs before every
+//!    compact, so recovery must produce the full pre-compact state.
+
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+
+use malleable_ckpt::apps::AppProfile;
+use malleable_ckpt::config::SystemParams;
+use malleable_ckpt::markov::ModelInputs;
+use malleable_ckpt::policies::ReschedulingPolicy;
+use malleable_ckpt::search::SearchConfig;
+use malleable_ckpt::store::{
+    FaultIo, FaultPlan, SpecRecord, StoreError, TrackState, TrackStore, WalRecord,
+};
+
+const N_PROCS: usize = 2;
+
+fn tmp_dir(tag: &str, n: usize) -> PathBuf {
+    std::env::temp_dir().join(format!("mckpt-faults-{tag}-{}-{n}", std::process::id()))
+}
+
+fn sample_spec() -> SpecRecord {
+    let system = SystemParams::new(N_PROCS, 1.0 / (4.0 * 86_400.0), 1.0 / 1_800.0);
+    let app = AppProfile::qr(N_PROCS);
+    let policy = ReschedulingPolicy::greedy(N_PROCS);
+    let inputs = ModelInputs::new(system, &app, &policy).expect("valid sample inputs");
+    SpecRecord {
+        identity: 0xAB,
+        key: 0xCD,
+        rates_used: (system.lambda, system.theta),
+        refresh: false,
+        inputs,
+        cfg: SearchConfig::default(),
+    }
+}
+
+/// The oracle record sequence; every fault run replays a prefix of it.
+fn records() -> Vec<WalRecord> {
+    vec![
+        WalRecord::Outage { proc: 0, fail: 100.5, repair: 220.25 },
+        WalRecord::Refit { lambda: 1.25e-6, theta: 3.5e-4 },
+        WalRecord::Outage { proc: 1, fail: 400.0, repair: 460.125 },
+        WalRecord::Recommendation(Box::new(sample_spec())),
+        WalRecord::Outage { proc: 0, fail: 9_000.0, repair: 9_050.0 },
+        WalRecord::Evict { cutoff: 500.0 },
+        WalRecord::Outage { proc: 1, fail: 12_000.0, repair: 12_345.5 },
+        WalRecord::Refit { lambda: 2.5e-6, theta: 4.0e-4 },
+    ]
+}
+
+/// Oracle state after applying the first `k` records.
+fn prefix_state(k: usize) -> TrackState {
+    let mut state = TrackState::new(N_PROCS).unwrap();
+    for rec in records().iter().take(k) {
+        state.apply(rec).unwrap();
+    }
+    state
+}
+
+/// How far a (possibly faulted) workload run got, in oracle records.
+#[derive(Default)]
+struct Progress {
+    /// Records known durable: advanced at each successful sync boundary.
+    acked: usize,
+    /// Records whose `append` returned Ok (an upper bound on recovery).
+    issued: usize,
+}
+
+/// The scripted workload: three append batches with sync boundaries, a
+/// compaction after each of the first two. Mirrors the advisor's real
+/// sequence (append per mutation, `flush` per acknowledged batch,
+/// `compact` in the background), hitting every store operation class.
+fn run_workload(io: Arc<dyn malleable_ckpt::store::StoreIo>, dir: &Path, p: &mut Progress) -> anyhow::Result<()> {
+    let recs = records();
+    let (mut ts, mut state) = TrackStore::open_with_io(io, dir, Some(N_PROCS))?;
+    for (lo, hi, compact_after) in [(0usize, 3usize, true), (3, 6, true), (6, 8, false)] {
+        for rec in &recs[lo..hi] {
+            ts.append(rec)?;
+            state.apply(rec)?;
+            p.issued += 1;
+        }
+        ts.flush()?;
+        p.acked = p.issued;
+        if compact_after {
+            ts.compact(&state)?;
+        }
+    }
+    Ok(())
+}
+
+/// Bit-exact state equality: tails compared by `f64::to_bits`, counters
+/// and rates exactly, specs by identity/key/rate bits.
+fn states_match(a: &TrackState, b: &TrackState) -> bool {
+    if a.n_procs() != b.n_procs()
+        || a.accepted != b.accepted
+        || a.merged != b.merged
+        || a.reselects != b.reselects
+        || a.evicted != b.evicted
+    {
+        return false;
+    }
+    match (a.rates, b.rates) {
+        (None, None) => {}
+        (Some(x), Some(y)) => {
+            if x.0.to_bits() != y.0.to_bits() || x.1.to_bits() != y.1.to_bits() {
+                return false;
+            }
+        }
+        _ => return false,
+    }
+    if a.specs.len() != b.specs.len() {
+        return false;
+    }
+    for (s, t) in a.specs.iter().zip(&b.specs) {
+        if s.identity != t.identity
+            || s.key != t.key
+            || s.rates_used.0.to_bits() != t.rates_used.0.to_bits()
+            || s.rates_used.1.to_bits() != t.rates_used.1.to_bits()
+        {
+            return false;
+        }
+    }
+    for proc in 0..a.n_procs() {
+        let (x, y) = (a.tail.outages(proc), b.tail.outages(proc));
+        if x.len() != y.len() {
+            return false;
+        }
+        for (u, v) in x.iter().zip(y) {
+            if u.0.to_bits() != v.0.to_bits() || u.1.to_bits() != v.1.to_bits() {
+                return false;
+            }
+        }
+    }
+    true
+}
+
+/// Ops the fault-free workload performs — the sweep range.
+fn fault_free_op_count(tag: &str) -> usize {
+    let dir = tmp_dir(tag, 0);
+    let _ = std::fs::remove_dir_all(&dir);
+    let io = FaultIo::new();
+    let mut p = Progress::default();
+    run_workload(Arc::new(io.clone()), &dir, &mut p).expect("fault-free workload");
+    assert_eq!(p.issued, records().len(), "workload must issue every record");
+    let _ = std::fs::remove_dir_all(&dir);
+    io.ops()
+}
+
+#[test]
+fn every_op_fault_recovers_to_a_prefix_oracle_or_errors_typed() {
+    let total_ops = fault_free_op_count("baseline-sweep");
+    assert!(total_ops >= 20, "workload too small to be interesting: {total_ops} ops");
+    let oracles: Vec<TrackState> = (0..=records().len()).map(prefix_state).collect();
+
+    // Two fault flavors per op: a clean error, and a torn write that
+    // lands a 3-byte prefix (mid-frame for every record we write).
+    let flavors: [(std::io::ErrorKind, Option<usize>, &str); 2] = [
+        (std::io::ErrorKind::Other, None, "clean"),
+        (std::io::ErrorKind::WriteZero, Some(3), "torn"),
+    ];
+
+    for (kind, short_write, flavor) in flavors {
+        for fail_at in 0..total_ops {
+            let dir = tmp_dir(flavor, fail_at);
+            let _ = std::fs::remove_dir_all(&dir);
+            let io = FaultIo::new();
+            io.arm(FaultPlan { fail_at, kind, short_write });
+            let mut p = Progress::default();
+            let outcome = run_workload(Arc::new(io.clone()), &dir, &mut p);
+            io.disarm();
+
+            // (1) A surfaced failure must be typed, never a bare panic
+            // or an untyped string error.
+            if let Err(e) = &outcome {
+                assert!(
+                    e.chain().any(|c| c.downcast_ref::<StoreError>().is_some()),
+                    "{flavor} fault at op {fail_at}: untyped error: {e:#}"
+                );
+            }
+
+            // (2) Recovery with real I/O must succeed and land on a
+            // prefix oracle within [acked, issued].
+            let outcome_desc = match &outcome {
+                Ok(()) => "completed".to_string(),
+                Err(e) => format!("{e:#}"),
+            };
+            let (_, recovered) = TrackStore::open(&dir, Some(N_PROCS))
+                .unwrap_or_else(|e| {
+                    panic!("{flavor} fault at op {fail_at}: recovery failed: {e:#}")
+                });
+            let matched = (p.acked..=p.issued)
+                .find(|&k| states_match(&recovered, &oracles[k]));
+            assert!(
+                matched.is_some(),
+                "{flavor} fault at op {fail_at}: recovered state matches no oracle \
+                 prefix in [{}, {}] (workload outcome: {outcome_desc})",
+                p.acked,
+                p.issued,
+            );
+
+            // (3) If the workload finished despite the fault, the fault
+            // landed on a tolerated best-effort op — then nothing at all
+            // may be missing.
+            if outcome.is_ok() {
+                assert_eq!(
+                    matched,
+                    Some(records().len()),
+                    "{flavor} fault at op {fail_at}: workload completed but state is partial"
+                );
+            }
+            let _ = std::fs::remove_dir_all(&dir);
+        }
+    }
+}
+
+#[test]
+fn recovered_dir_remains_fully_operational_after_a_mid_compaction_fault() {
+    // Beyond state equality: a dir recovered from a faulted compaction
+    // must accept appends and compact cleanly afterwards.
+    let total_ops = fault_free_op_count("baseline-reuse");
+    for fail_at in 0..total_ops {
+        let dir = tmp_dir("reuse", fail_at);
+        let _ = std::fs::remove_dir_all(&dir);
+        let io = FaultIo::new();
+        io.arm(FaultPlan { fail_at, kind: std::io::ErrorKind::Other, short_write: None });
+        let mut p = Progress::default();
+        let _ = run_workload(Arc::new(io.clone()), &dir, &mut p);
+        io.disarm();
+
+        let (mut ts, mut state) = TrackStore::open(&dir, Some(N_PROCS)).expect("recovery");
+        let extra = WalRecord::Outage { proc: 0, fail: 50_000.0, repair: 50_060.0 };
+        ts.append(&extra).expect("append after recovery");
+        state.apply(&extra).expect("apply after recovery");
+        ts.flush().expect("flush after recovery");
+        ts.compact(&state).expect("compact after recovery");
+        drop(ts);
+        let (_, re) = TrackStore::open(&dir, None).expect("reopen after compaction");
+        assert!(
+            states_match(&re, &state),
+            "fault at op {fail_at}: post-recovery writes lost"
+        );
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}
+
+#[test]
+fn fault_on_snapshot_read_is_loud_not_empty() {
+    // A failed snapshot read at open must error out, never silently open
+    // an empty track over real data.
+    let dir = tmp_dir("loudread", 0);
+    let _ = std::fs::remove_dir_all(&dir);
+    {
+        let (mut ts, mut state) = TrackStore::open(&dir, Some(N_PROCS)).unwrap();
+        let rec = WalRecord::Outage { proc: 0, fail: 1.0, repair: 2.0 };
+        ts.append(&rec).unwrap();
+        state.apply(&rec).unwrap();
+        ts.flush().unwrap();
+        ts.compact(&state).unwrap();
+    }
+    let io = FaultIo::new();
+    // Op 0 is the stale-tmp cleanup (tolerated), op 1 the snapshot read.
+    io.arm(FaultPlan { fail_at: 1, kind: std::io::ErrorKind::PermissionDenied, short_write: None });
+    let err = TrackStore::open_with_io(Arc::new(io), &dir, None)
+        .err()
+        .expect("faulted snapshot read must fail the open");
+    assert!(
+        err.chain().any(|c| matches!(
+            c.downcast_ref::<StoreError>(),
+            Some(StoreError::Io { op: "snapshot-read", .. })
+        )),
+        "expected a typed snapshot-read failure, got: {err:#}"
+    );
+    let _ = std::fs::remove_dir_all(&dir);
+}

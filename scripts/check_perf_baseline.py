@@ -11,7 +11,10 @@ A baseline is sane when:
   * every timed section carries positive baseline/optimized seconds;
   * the optimized paths did not regress below 0.2x of their seed baseline
     (smoke-mode CI runners are noisy, but a 5x slowdown in the very file
-    that defines "no regression" means the measurement itself is broken).
+    that defines "no regression" means the measurement itself is broken);
+  * the `serve_load` daemon section is present with ordered, finite tail
+    latencies (p50 <= p99 <= p99.9), positive throughput, and a
+    saturation probe that actually observed 503 sheds.
 
 Usage: check_perf_baseline.py [BENCH_perf.json]
 Exits non-zero (with a reason) on an insane file.
@@ -38,6 +41,35 @@ def walk_speedups(node, path="") -> list[tuple[str, dict]]:
     return found
 
 
+def is_positive_number(v) -> bool:
+    return isinstance(v, (int, float)) and math.isfinite(v) and v > 0
+
+
+def check_serve_load(report: dict) -> None:
+    """The daemon-load section has no speedup; its gate is the latency and
+    shedding fields themselves."""
+    serve = report.get("serve_load")
+    if not isinstance(serve, dict):
+        fail("missing 'serve_load' section (daemon load benchmark)")
+    for key in ("p50_ms", "p99_ms", "p999_ms", "throughput_rps", "requests"):
+        if not is_positive_number(serve.get(key)):
+            fail(f"serve_load.{key} = {serve.get(key)!r} (want a finite positive number)")
+    p50, p99, p999 = serve["p50_ms"], serve["p99_ms"], serve["p999_ms"]
+    if not p50 <= p99 <= p999:
+        fail(
+            f"serve_load latency tails out of order: "
+            f"p50 {p50} <= p99 {p99} <= p99.9 {p999} does not hold"
+        )
+    probes, shed = serve.get("shed_probes"), serve.get("shed_503")
+    if not is_positive_number(probes) or not isinstance(shed, (int, float)):
+        fail(f"serve_load saturation probe malformed: {shed!r}/{probes!r}")
+    if not 1 <= shed <= probes:
+        fail(
+            f"serve_load saturation probe: {shed}/{probes} connections shed "
+            "(a saturated daemon must shed with 503, and never more than probed)"
+        )
+
+
 def main() -> None:
     path = sys.argv[1] if len(sys.argv) > 1 else "BENCH_perf.json"
     try:
@@ -53,6 +85,8 @@ def main() -> None:
         fail("missing 'suite' section (the gate reads suite.*.speedup)")
     if not isinstance(suite.get("overall_speedup"), (int, float)):
         fail("missing numeric suite.overall_speedup")
+
+    check_serve_load(report)
 
     entries = walk_speedups(report)
     if not entries:

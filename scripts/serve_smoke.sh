@@ -95,7 +95,7 @@ grep -q 'items\[1\]' "$batch_err_body" || {
 rm -f "$batch_err_body"
 echo "serve smoke: malformed batch item rejected with the failing index"
 
-curl -sf -X POST "http://${ADDR}/v1/shutdown" >/dev/null
+curl -sf "http://${ADDR}/v1/shutdown" -d '{}' >/dev/null
 wait "$SERVE_PID"
 trap - EXIT
 echo "serve smoke: OK"
@@ -283,7 +283,7 @@ assert repeat["cached"] is True, "batch-built entry must serve repeats from the 
 assert repeat["interval"] == oracle["interval"]
 EOF
 
-curl -sf -X POST "http://${ADDR2}/v1/shutdown" >/dev/null
+curl -sf "http://${ADDR2}/v1/shutdown" -d '{}' >/dev/null
 wait "$SERVE_PID" 2>/dev/null || true
 "$BIN" store verify --data-dir "$DATA_DIR"
 "$BIN" store inspect --data-dir "$DATA_DIR"
