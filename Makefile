@@ -31,6 +31,7 @@ fuzz-smoke: build
 	./target/release/malleable-ckpt fuzz http --iters 5000 --seed 1
 	./target/release/malleable-ckpt fuzz wal --iters 5000 --seed 2
 	./target/release/malleable-ckpt fuzz snapshot --iters 5000 --seed 3
+	./target/release/malleable-ckpt fuzz replicate --iters 5000 --seed 4
 
 # Short smoke bench: regenerates BENCH_perf.json at the repo root with the
 # reduced size grid, so perf regressions show up in every PR.

@@ -71,6 +71,7 @@
 pub mod cache;
 pub mod ingest;
 pub mod protocol;
+pub mod replicate;
 pub mod server;
 
 use std::collections::hash_map::Entry;
@@ -211,6 +212,41 @@ impl Advisor {
     /// `true` when tracks persist across restarts.
     pub fn persistent(&self) -> bool {
         self.store.is_some()
+    }
+
+    /// The durable store backing this advisor, if any — the replication
+    /// manifest/segment endpoints read segments straight from its root.
+    pub fn store(&self) -> Option<&TraceStore> {
+        self.store.as_ref()
+    }
+
+    /// `true` when `track_id` is registered (brief map lock only).
+    pub fn has_track(&self, track_id: &str) -> bool {
+        self.tracks.lock().unwrap().contains_key(track_id)
+    }
+
+    /// Install (or refresh) a track from replicated durable state — the
+    /// replica puller's apply path. The rebuilt track carries no store
+    /// handle of its own: a replica must never append to the replicated
+    /// files (that would diverge them from the primary's history), so
+    /// `record_spec`/ingest persistence all no-op and only the puller
+    /// mutates the data dir. An existing handle is refreshed in place
+    /// under its own lock, so concurrent selects see either the old or
+    /// the new state, never a torn mix.
+    pub fn install_replica_track(&self, track_id: &str, state: TrackState) -> Result<()> {
+        let track = track_from_state(state)?;
+        let handle = {
+            let mut map = self.tracks.lock().unwrap();
+            match map.entry(track_id.to_string()) {
+                Entry::Occupied(e) => Arc::clone(e.get()),
+                Entry::Vacant(v) => {
+                    v.insert(Arc::new(Mutex::new(track)));
+                    return Ok(());
+                }
+            }
+        };
+        *handle.lock().unwrap() = track;
+        Ok(())
     }
 
     /// Rate-independent identity of a request spec — what ties a track's

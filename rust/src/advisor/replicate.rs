@@ -1,0 +1,957 @@
+//! Pull-based WAL replication: the advisor's read-replica subsystem
+//! (DESIGN.md §13).
+//!
+//! The durable store already *is* a replication log — per-track WALs of
+//! checksummed frames plus `(gen, covered)` snapshots, replayed
+//! bit-identically. This module ships those files between nodes:
+//!
+//! * **Primary side** — [`manifest_json`] lists every track's snapshot +
+//!   WAL segments with lengths, generations, covered positions and
+//!   fnv64-per-chunk checksums (served as `GET /v1/replicate/manifest`);
+//!   [`segment_json`] range-reads one named segment (`GET
+//!   /v1/replicate/segment?track=..&name=..&offset=..`). Both are plain
+//!   reads of the data dir — the primary keeps no replica state.
+//! * **Replica side** — [`run_puller`] (started by `serve --replica-of`)
+//!   repeatedly diffs the remote manifest against the local files,
+//!   fetches only the missing suffix of each segment, verifies both the
+//!   transport checksum and the manifest checksum, structurally validates
+//!   the bytes (`wal::scan_bytes` / `snapshot::decode`), and installs
+//!   them atomically (tmp + fsync + rename) through [`StoreIo`] — so the
+//!   fault-injection tests can kill every install op and pin that a
+//!   replica never holds a torn segment. Installed tracks are reloaded
+//!   into the advisor via the read-only replay path
+//!   ([`store::replay_readonly`]), which never mutates the replicated
+//!   files; bit-identical float replay makes the replica's tracked
+//!   selections exact.
+//!
+//! Failure policy: connection errors and mid-fetch races (the primary
+//! compacting a generation away under us) abort the *round*, never the
+//! process — the puller re-diffs from a fresh manifest after a capped
+//! exponential backoff with jitter. A kill-9'd replica reboots from
+//! whatever clean prefix it had installed.
+
+use std::collections::BTreeSet;
+use std::io::{Read, Write};
+use std::net::TcpStream;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, ensure, Context, Result};
+
+use super::Advisor;
+use crate::store::io::{RealIo, StoreError, StoreIo};
+use crate::store::{self, encode_track_id, snapshot, wal, TraceStore};
+use crate::util::fnv::fnv1a_64;
+use crate::util::json::Json;
+use crate::util::rng::Rng;
+
+/// Chunk size for manifest checksums. Small enough that a replica resumes
+/// an interrupted segment fetch near where it stopped, large enough that
+/// a 4 MiB WAL lists in 64 sums.
+pub const CHUNK_BYTES: u64 = 64 * 1024;
+
+/// Raw bytes served per `/v1/replicate/segment` response (hex-encoded on
+/// the wire, so twice this many body bytes). Larger segments take
+/// multiple range fetches.
+pub const MAX_SEGMENT_FETCH_BYTES: u64 = 1 << 20;
+
+/// Hard cap on a manifest/segment-response JSON document, so a hostile or
+/// confused primary cannot balloon the replica.
+const MAX_RESPONSE_BYTES: u64 = 64 << 20;
+
+const POLL_INTERVAL: Duration = Duration::from_millis(250);
+const BACKOFF_BASE: Duration = Duration::from_millis(250);
+const BACKOFF_CAP: Duration = Duration::from_secs(5);
+const IO_TIMEOUT: Duration = Duration::from_secs(10);
+
+fn hex64(v: u64) -> String {
+    format!("{v:016x}")
+}
+
+/// Typed parse failure for replicated metadata: always a
+/// [`StoreError::Corrupt`] (the fuzz target's invariant), never a panic.
+fn mal(origin: &str, detail: impl Into<String>) -> anyhow::Error {
+    StoreError::corrupt(Path::new(origin), detail).into()
+}
+
+fn parse_hex64(origin: &str, s: &str) -> Result<u64> {
+    if s.len() != 16 || !s.bytes().all(|b| b.is_ascii_hexdigit()) {
+        return Err(mal(origin, format!("bad checksum literal '{s}'")));
+    }
+    u64::from_str_radix(s, 16).map_err(|e| mal(origin, format!("bad checksum literal: {e}")))
+}
+
+/// Lowercase hex of a byte slice (segment payload transport encoding —
+/// the store's JSON layer has no raw-byte type, and the protocol already
+/// ships 64-bit cache keys as hex for the same reason).
+pub fn hex_encode(bytes: &[u8]) -> String {
+    let mut s = String::with_capacity(bytes.len() * 2);
+    for b in bytes {
+        s.push_str(&format!("{b:02x}"));
+    }
+    s
+}
+
+pub fn hex_decode(origin: &str, s: &str) -> Result<Vec<u8>> {
+    if s.len() % 2 != 0 {
+        return Err(mal(origin, "odd-length hex payload"));
+    }
+    let bytes = s.as_bytes();
+    let mut out = Vec::with_capacity(s.len() / 2);
+    for pair in bytes.chunks_exact(2) {
+        let hi = (pair[0] as char).to_digit(16);
+        let lo = (pair[1] as char).to_digit(16);
+        match (hi, lo) {
+            (Some(h), Some(l)) => out.push(((h << 4) | l) as u8),
+            _ => return Err(mal(origin, "non-hex byte in payload")),
+        }
+    }
+    Ok(out)
+}
+
+/// Per-chunk fnv64 checksums over `bytes` (the last chunk may be short).
+pub fn chunk_sums(bytes: &[u8]) -> Vec<u64> {
+    bytes.chunks(CHUNK_BYTES as usize).map(fnv1a_64).collect()
+}
+
+/// What a segment name says it is. Only these two shapes are replicable;
+/// everything else (traversal attempts included) is a typed error.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SegmentKind {
+    Snapshot,
+    Wal(u64),
+}
+
+pub fn parse_segment_name(name: &str) -> Result<SegmentKind> {
+    if name == snapshot::SNAPSHOT_FILE {
+        return Ok(SegmentKind::Snapshot);
+    }
+    if let Some(num) = name.strip_prefix("wal-").and_then(|s| s.strip_suffix(".log")) {
+        if !num.is_empty() && num.len() <= 20 && num.bytes().all(|b| b.is_ascii_digit()) {
+            if let Ok(gen) = num.parse::<u64>() {
+                return Ok(SegmentKind::Wal(gen));
+            }
+        }
+    }
+    Err(mal(name, "not a replicable segment name"))
+}
+
+/// One replicable file as the manifest describes it.
+#[derive(Debug, Clone)]
+pub struct SegmentMeta {
+    pub name: String,
+    pub kind: SegmentKind,
+    /// Generation: the WAL's own for `wal-*.log`, the covered generation
+    /// for the snapshot (what decides which local WALs are obsolete).
+    pub gen: u64,
+    /// On-disk length at manifest time.
+    pub len: u64,
+    /// Length of the clean prefix (== `len` for snapshots; a WAL may
+    /// carry a transient torn tail mid-append that replicas skip).
+    pub valid_len: u64,
+    /// fnv64 of the whole file.
+    pub fnv64: u64,
+    /// fnv64 of the clean prefix — what an installed segment must hash to.
+    pub valid_fnv64: u64,
+    /// fnv64 per [`CHUNK_BYTES`] chunk of the whole file.
+    pub chunks: Vec<u64>,
+}
+
+#[derive(Debug, Clone)]
+pub struct TrackManifest {
+    pub id: String,
+    pub encoded: String,
+    pub segments: Vec<SegmentMeta>,
+}
+
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub chunk_bytes: u64,
+    pub tracks: Vec<TrackManifest>,
+}
+
+/// Manifest entry for one segment file already read into memory. Shared
+/// by the primary's manifest route and the fuzz harness's seed corpus.
+pub fn segment_entry_json(name: &str, bytes: &[u8]) -> Result<Json> {
+    let kind = parse_segment_name(name)?;
+    let mut e = Json::obj();
+    e.set("name", Json::from(name))
+        .set("len", Json::from(bytes.len()))
+        .set("fnv64", Json::from(hex64(fnv1a_64(bytes)).as_str()))
+        .set(
+            "chunks",
+            Json::Arr(chunk_sums(bytes).into_iter().map(|c| Json::from(hex64(c).as_str())).collect()),
+        );
+    match kind {
+        SegmentKind::Snapshot => {
+            let snap = snapshot::decode(bytes, Path::new(name))?;
+            e.set("kind", Json::from("snapshot"))
+                .set("gen", Json::from(snap.gen))
+                .set("covered", Json::from(snap.covered))
+                .set("valid_len", Json::from(bytes.len()))
+                .set("valid_fnv64", Json::from(hex64(fnv1a_64(bytes)).as_str()));
+        }
+        SegmentKind::Wal(gen) => {
+            let scan = wal::scan_bytes(bytes, Path::new(name))?;
+            let valid = &bytes[..scan.valid_len as usize];
+            e.set("kind", Json::from("wal"))
+                .set("gen", Json::from(gen))
+                .set("records", Json::from(scan.records.len()))
+                .set("valid_len", Json::from(scan.valid_len))
+                .set("valid_fnv64", Json::from(hex64(fnv1a_64(valid)).as_str()));
+        }
+    }
+    Ok(e)
+}
+
+/// The full `/v1/replicate/manifest` response for a data dir: every
+/// track, every replicable segment, checksummed. Read-only — races with
+/// concurrent appends at worst list a segment mid-frame, which the
+/// `valid_len`/`valid_fnv64` pair already accounts for.
+pub fn manifest_json(store: &TraceStore) -> Result<Json> {
+    let mut tracks = Json::obj();
+    for id in store.track_ids()? {
+        let dir = store.track_dir(&id);
+        let mut segments: Vec<Json> = Vec::new();
+        let snap_path = dir.join(snapshot::SNAPSHOT_FILE);
+        match std::fs::read(&snap_path) {
+            Ok(bytes) => segments.push(segment_entry_json(snapshot::SNAPSHOT_FILE, &bytes)?),
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => {}
+            Err(e) => return Err(StoreError::io("replicate-manifest-read", &snap_path, e).into()),
+        }
+        for gen in store::wal_gens(&dir)? {
+            let path = store::wal_path(&dir, gen);
+            match std::fs::read(&path) {
+                Ok(bytes) => {
+                    segments.push(segment_entry_json(&format!("wal-{gen}.log"), &bytes)?)
+                }
+                // Raced a compaction unlink; the next manifest settles it.
+                Err(e) if e.kind() == std::io::ErrorKind::NotFound => {}
+                Err(e) => return Err(StoreError::io("replicate-manifest-read", &path, e).into()),
+            }
+        }
+        let mut tj = Json::obj();
+        tj.set("encoded", Json::from(encode_track_id(&id).as_str()))
+            .set("segments", Json::Arr(segments));
+        tracks.set(&id, tj);
+    }
+    let mut o = Json::obj();
+    o.set("ok", Json::from(true))
+        .set("chunk_bytes", Json::from(CHUNK_BYTES))
+        .set("tracks", tracks);
+    Ok(o)
+}
+
+const MANIFEST_ORIGIN: &str = "<replicate-manifest>";
+const SEGMENT_ORIGIN: &str = "<replicate-segment>";
+
+fn u64_field(origin: &str, obj: &Json, key: &str) -> Result<u64> {
+    let v = obj
+        .get(key)
+        .and_then(Json::as_f64)
+        .ok_or_else(|| mal(origin, format!("missing numeric field '{key}'")))?;
+    if !(v.is_finite() && v >= 0.0 && v.fract() == 0.0 && v <= 9_007_199_254_740_992.0) {
+        return Err(mal(origin, format!("field '{key}' = {v} is not a valid u64")));
+    }
+    Ok(v as u64)
+}
+
+fn str_field<'a>(origin: &str, obj: &'a Json, key: &str) -> Result<&'a str> {
+    obj.get(key)
+        .and_then(Json::as_str)
+        .ok_or_else(|| mal(origin, format!("missing string field '{key}'")))
+}
+
+fn parse_segment_meta(origin: &str, chunk_bytes: u64, j: &Json) -> Result<SegmentMeta> {
+    let name = str_field(origin, j, "name")?;
+    if name.len() > 64 {
+        return Err(mal(origin, "segment name too long"));
+    }
+    let kind = parse_segment_name(name)?;
+    let kind_str = str_field(origin, j, "kind")?;
+    let kind_ok = matches!(
+        (kind, kind_str),
+        (SegmentKind::Snapshot, "snapshot") | (SegmentKind::Wal(_), "wal")
+    );
+    if !kind_ok {
+        return Err(mal(origin, format!("segment '{name}' claims kind '{kind_str}'")));
+    }
+    let gen = u64_field(origin, j, "gen")?;
+    if let SegmentKind::Wal(g) = kind {
+        if g != gen {
+            return Err(mal(origin, format!("segment '{name}' claims generation {gen}")));
+        }
+    }
+    let len = u64_field(origin, j, "len")?;
+    let valid_len = u64_field(origin, j, "valid_len")?;
+    if valid_len > len {
+        return Err(mal(origin, format!("segment '{name}': valid_len {valid_len} > len {len}")));
+    }
+    let fnv = parse_hex64(origin, str_field(origin, j, "fnv64")?)?;
+    let valid_fnv = parse_hex64(origin, str_field(origin, j, "valid_fnv64")?)?;
+    let chunks_json = j
+        .get("chunks")
+        .and_then(Json::as_arr)
+        .ok_or_else(|| mal(origin, format!("segment '{name}' has no chunk list")))?;
+    let want_chunks = len.div_ceil(chunk_bytes);
+    if chunks_json.len() as u64 != want_chunks {
+        return Err(mal(
+            origin,
+            format!(
+                "segment '{name}': {} chunk sums for {len} bytes (want {want_chunks})",
+                chunks_json.len()
+            ),
+        ));
+    }
+    let mut chunks = Vec::with_capacity(chunks_json.len());
+    for c in chunks_json {
+        let s = c.as_str().ok_or_else(|| mal(origin, "non-string chunk sum"))?;
+        chunks.push(parse_hex64(origin, s)?);
+    }
+    Ok(SegmentMeta {
+        name: name.to_string(),
+        kind,
+        gen,
+        len,
+        valid_len,
+        fnv64: fnv,
+        valid_fnv64: valid_fnv,
+        chunks,
+    })
+}
+
+/// Validated parse of a manifest document. Every rejection is a typed
+/// [`StoreError::Corrupt`] — the replica treats a malformed manifest like
+/// a corrupt file, never installs from it, and re-diffs next round.
+pub fn parse_manifest(j: &Json) -> Result<Manifest> {
+    let o = MANIFEST_ORIGIN;
+    if j.get("ok").and_then(Json::as_bool) != Some(true) {
+        return Err(mal(o, "manifest is not an ok response"));
+    }
+    let chunk_bytes = u64_field(o, j, "chunk_bytes")?;
+    if !(1..=(16 << 20)).contains(&chunk_bytes) {
+        return Err(mal(o, format!("implausible chunk_bytes {chunk_bytes}")));
+    }
+    let tracks_obj = j
+        .get("tracks")
+        .and_then(Json::as_obj)
+        .ok_or_else(|| mal(o, "missing tracks object"))?;
+    let mut tracks = Vec::with_capacity(tracks_obj.len());
+    for (id, tj) in tracks_obj {
+        let encoded = str_field(o, tj, "encoded")?;
+        if encoded != encode_track_id(id) {
+            return Err(mal(o, format!("track '{id}' lists a mismatched directory name")));
+        }
+        let segs = tj
+            .get("segments")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| mal(o, format!("track '{id}' has no segment list")))?;
+        if segs.len() > 1024 {
+            return Err(mal(o, format!("track '{id}' lists {} segments", segs.len())));
+        }
+        let mut segments = Vec::with_capacity(segs.len());
+        let mut snapshots = 0usize;
+        let mut last_wal_gen: Option<u64> = None;
+        for sj in segs {
+            let seg = parse_segment_meta(o, chunk_bytes, sj)?;
+            match seg.kind {
+                SegmentKind::Snapshot => {
+                    snapshots += 1;
+                    if snapshots > 1 {
+                        return Err(mal(o, format!("track '{id}' lists two snapshots")));
+                    }
+                }
+                SegmentKind::Wal(g) => {
+                    if last_wal_gen.is_some_and(|prev| g <= prev) {
+                        return Err(mal(o, format!("track '{id}' WAL gens not ascending")));
+                    }
+                    last_wal_gen = Some(g);
+                }
+            }
+            segments.push(seg);
+        }
+        tracks.push(TrackManifest {
+            id: id.clone(),
+            encoded: encoded.to_string(),
+            segments,
+        });
+    }
+    Ok(Manifest { chunk_bytes, tracks })
+}
+
+/// One range of one segment, as fetched from the primary. `data` is
+/// already hex-decoded and transport-checksummed.
+#[derive(Debug, Clone)]
+pub struct SegmentChunk {
+    pub track: String,
+    pub name: String,
+    pub offset: u64,
+    pub total_len: u64,
+    pub data: Vec<u8>,
+}
+
+/// Build a `/v1/replicate/segment` response body. Shared by the primary
+/// route and the fuzz seed corpus.
+pub fn segment_response_json(
+    track_enc: &str,
+    name: &str,
+    offset: u64,
+    total_len: u64,
+    data: &[u8],
+) -> Json {
+    let mut o = Json::obj();
+    o.set("ok", Json::from(true))
+        .set("track", Json::from(track_enc))
+        .set("name", Json::from(name))
+        .set("offset", Json::from(offset))
+        .set("total_len", Json::from(total_len))
+        .set("len", Json::from(data.len()))
+        .set("fnv64", Json::from(hex64(fnv1a_64(data)).as_str()))
+        .set("data", Json::from(hex_encode(data).as_str()));
+    o
+}
+
+/// Validated parse of a segment response: name re-validated, payload
+/// hex-decoded and checked against its transport checksum. Typed
+/// [`StoreError::Corrupt`] on any mismatch.
+pub fn parse_segment(j: &Json) -> Result<SegmentChunk> {
+    let o = SEGMENT_ORIGIN;
+    if j.get("ok").and_then(Json::as_bool) != Some(true) {
+        return Err(mal(o, "segment response is not ok"));
+    }
+    let track = str_field(o, j, "track")?;
+    if track.len() > 512 {
+        return Err(mal(o, "track name too long"));
+    }
+    let name = str_field(o, j, "name")?;
+    parse_segment_name(name)?;
+    let offset = u64_field(o, j, "offset")?;
+    let total_len = u64_field(o, j, "total_len")?;
+    let len = u64_field(o, j, "len")?;
+    let hex = str_field(o, j, "data")?;
+    if hex.len() as u64 > 2 * MAX_SEGMENT_FETCH_BYTES {
+        return Err(mal(o, format!("oversized segment payload ({} hex chars)", hex.len())));
+    }
+    let data = hex_decode(o, hex)?;
+    if data.len() as u64 != len {
+        return Err(mal(o, format!("payload is {} bytes, response claims {len}", data.len())));
+    }
+    if offset.saturating_add(len) > total_len {
+        return Err(mal(o, "range extends past total_len"));
+    }
+    let sum = parse_hex64(o, str_field(o, j, "fnv64")?)?;
+    if fnv1a_64(&data) != sum {
+        return Err(mal(o, "segment payload failed its transport checksum"));
+    }
+    Ok(SegmentChunk {
+        track: track.to_string(),
+        name: name.to_string(),
+        offset,
+        total_len,
+        data,
+    })
+}
+
+/// Serve one segment range from the data dir (the primary's
+/// `/v1/replicate/segment` route). `track` is the *encoded* directory
+/// name as listed in the manifest; it must round-trip through the track
+/// id codec, which confines it to the store's own layout (no traversal).
+pub fn segment_json(store: &TraceStore, track_enc: &str, name: &str, offset: u64) -> Result<Json> {
+    let id = store::decode_track_id(track_enc).context("bad track parameter")?;
+    ensure!(encode_track_id(&id) == track_enc, "non-canonical track parameter");
+    parse_segment_name(name)?;
+    let path = store.track_dir(&id).join(name);
+    let bytes = std::fs::read(&path)
+        .map_err(|e| StoreError::io("replicate-segment-read", &path, e))?;
+    let total = bytes.len() as u64;
+    let start = offset.min(total) as usize;
+    let end = offset.saturating_add(MAX_SEGMENT_FETCH_BYTES).min(total) as usize;
+    Ok(segment_response_json(track_enc, name, start as u64, total, &bytes[start..end]))
+}
+
+/// Validate segment bytes exactly as the install path will: structural
+/// decode, returning the installable (clean-prefix) length. The fuzz
+/// target drives mutated bytes straight in here — any outcome other than
+/// a clean validation must be a typed [`StoreError`].
+pub fn validate_segment_bytes(name: &str, bytes: &[u8]) -> Result<u64> {
+    match parse_segment_name(name)? {
+        SegmentKind::Snapshot => {
+            snapshot::decode(bytes, Path::new(name))?;
+            Ok(bytes.len() as u64)
+        }
+        SegmentKind::Wal(_) => {
+            let scan = wal::scan_bytes(bytes, Path::new(name))?;
+            if scan.torn() {
+                return Err(mal(name, "refusing to install torn WAL bytes"));
+            }
+            if scan.valid_len < wal::WAL_MAGIC.len() as u64 {
+                return Err(mal(name, "WAL bytes have no clean prefix"));
+            }
+            Ok(scan.valid_len)
+        }
+    }
+}
+
+/// Atomically install one verified segment into a track dir: validate
+/// structurally, write to `<name>.tmp`, fsync, rename into place. Every
+/// file operation goes through `io`, so [`crate::store::FaultIo`] can
+/// kill any of them — a failed install leaves the previous file (or no
+/// file) intact, never a torn one; a stray `.tmp` is inert (neither
+/// replay nor verify reads it) and is overwritten by the next attempt.
+pub fn install_segment(io: &dyn StoreIo, dir: &Path, name: &str, bytes: &[u8]) -> Result<()> {
+    let keep = validate_segment_bytes(name, bytes)? as usize;
+    std::fs::create_dir_all(dir)
+        .with_context(|| format!("creating replica track dir {}", dir.display()))?;
+    let tmp = dir.join(format!("{name}.tmp"));
+    let dest = dir.join(name);
+    let written = (|| -> Result<()> {
+        let mut f = io
+            .create(&tmp)
+            .map_err(|e| StoreError::io("replicate-install-create", &tmp, e))?;
+        f.write_all(&bytes[..keep])
+            .map_err(|e| StoreError::io("replicate-install-write", &tmp, e))?;
+        f.sync_all().map_err(|e| StoreError::io("replicate-install-sync", &tmp, e))?;
+        drop(f);
+        io.rename(&tmp, &dest)
+            .map_err(|e| StoreError::io("replicate-install-rename", &tmp, e))?;
+        Ok(())
+    })();
+    if written.is_err() {
+        let _ = io.remove_file(&tmp);
+        return written;
+    }
+    // Best effort, like the store's own compaction: a lost dir entry only
+    // re-runs an idempotent install next round.
+    let _ = io.sync_dir(dir);
+    Ok(())
+}
+
+/// HTTP pull client for the replication endpoints. Plain HTTP/1.1 over
+/// `TcpStream` with `Connection: close` per request — catch-up rounds are
+/// rare enough that connection reuse isn't worth the state.
+pub struct ReplicaClient {
+    /// Primary address, `host:port` (an `http://` prefix is tolerated).
+    pub primary: String,
+    /// Bearer token forwarded as `Authorization` when the primary
+    /// requires `--auth-token`.
+    pub token: Option<String>,
+}
+
+impl ReplicaClient {
+    pub fn addr(&self) -> &str {
+        self.primary.trim_start_matches("http://").trim_end_matches('/')
+    }
+
+    fn get_json(&self, path_query: &str) -> Result<Json> {
+        let addr = self.addr();
+        let mut stream = TcpStream::connect(addr)
+            .with_context(|| format!("connecting to primary {addr}"))?;
+        stream.set_read_timeout(Some(IO_TIMEOUT))?;
+        stream.set_write_timeout(Some(IO_TIMEOUT))?;
+        let auth = match &self.token {
+            Some(t) => format!("Authorization: Bearer {t}\r\n"),
+            None => String::new(),
+        };
+        let req = format!(
+            "GET {path_query} HTTP/1.1\r\nHost: {addr}\r\n{auth}Connection: close\r\n\r\n"
+        );
+        stream.write_all(req.as_bytes()).context("sending replicate request")?;
+        let mut raw = Vec::new();
+        stream
+            .take(MAX_RESPONSE_BYTES)
+            .read_to_end(&mut raw)
+            .context("reading replicate response")?;
+        let text = String::from_utf8_lossy(&raw);
+        let Some((head, body)) = text.split_once("\r\n\r\n") else {
+            bail!("malformed response from primary {addr} (no header terminator)");
+        };
+        let status = head.lines().next().unwrap_or_default();
+        let code = status.split_whitespace().nth(1).unwrap_or_default();
+        if code != "200" {
+            let snippet: String = body.chars().take(200).collect();
+            bail!("primary {addr} answered {status}: {snippet}");
+        }
+        Json::parse(body)
+            .map_err(|e| anyhow::anyhow!("primary {addr} sent unparseable JSON: {e}"))
+    }
+
+    pub fn fetch_manifest(&self) -> Result<Manifest> {
+        parse_manifest(&self.get_json("/v1/replicate/manifest")?)
+    }
+
+    pub fn fetch_segment(&self, track_enc: &str, name: &str, offset: u64) -> Result<SegmentChunk> {
+        let j = self.get_json(&format!(
+            "/v1/replicate/segment?track={track_enc}&name={name}&offset={offset}"
+        ))?;
+        let seg = parse_segment(&j)?;
+        ensure!(
+            seg.track == track_enc && seg.name == name && seg.offset == offset,
+            "segment response answers a different request ({}/{} @ {})",
+            seg.track,
+            seg.name,
+            seg.offset
+        );
+        Ok(seg)
+    }
+}
+
+/// Bring one local segment up to the manifest's clean prefix. Fetches
+/// only the suffix past the longest whole-chunk prefix that still matches
+/// the manifest's chunk sums; verifies the assembled bytes against
+/// `valid_fnv64` before installing. Returns whether anything changed.
+fn sync_segment(
+    client: &ReplicaClient,
+    io: &dyn StoreIo,
+    dir: &Path,
+    chunk_bytes: u64,
+    track_enc: &str,
+    seg: &SegmentMeta,
+) -> Result<bool> {
+    let local_path = dir.join(&seg.name);
+    let local = match std::fs::read(&local_path) {
+        Ok(b) => b,
+        Err(e) if e.kind() == std::io::ErrorKind::NotFound => Vec::new(),
+        Err(e) => return Err(StoreError::io("replicate-local-read", &local_path, e).into()),
+    };
+    if local.len() as u64 == seg.valid_len && fnv1a_64(&local) == seg.valid_fnv64 {
+        return Ok(false);
+    }
+    // Longest prefix of whole chunks on which we already agree.
+    let cb = chunk_bytes as usize;
+    let mut keep = 0usize;
+    for (k, sum) in seg.chunks.iter().enumerate() {
+        let end = match (k + 1).checked_mul(cb) {
+            Some(e) if e <= local.len() && e as u64 <= seg.valid_len => e,
+            _ => break,
+        };
+        if fnv1a_64(&local[k * cb..end]) != *sum {
+            break;
+        }
+        keep = end;
+    }
+    let mut candidate = local[..keep].to_vec();
+    while (candidate.len() as u64) < seg.valid_len {
+        let part = client.fetch_segment(track_enc, &seg.name, candidate.len() as u64)?;
+        // The primary compacted or rolled the file out from under the
+        // manifest we diffed against: abort the round, re-diff fresh.
+        ensure!(
+            !part.data.is_empty() && part.total_len >= seg.valid_len,
+            "segment {} changed on the primary mid-fetch",
+            seg.name
+        );
+        let want = (seg.valid_len - candidate.len() as u64) as usize;
+        let take = part.data.len().min(want);
+        candidate.extend_from_slice(&part.data[..take]);
+    }
+    ensure!(
+        fnv1a_64(&candidate) == seg.valid_fnv64,
+        "segment {} failed its manifest checksum after assembly (primary moved on?)",
+        seg.name
+    );
+    install_segment(io, dir, &seg.name, &candidate)?;
+    Ok(true)
+}
+
+fn sync_track(
+    client: &ReplicaClient,
+    io: &dyn StoreIo,
+    root: &Path,
+    chunk_bytes: u64,
+    track: &TrackManifest,
+) -> Result<bool> {
+    let dir = root.join("tracks").join(&track.encoded);
+    let mut changed = false;
+    // Snapshot first: once it lands, every WAL generation below it is
+    // replay-covered, so any intermediate crash state is a consistent
+    // prefix of the primary's history.
+    let mut ordered: Vec<&SegmentMeta> = track.segments.iter().collect();
+    ordered.sort_by_key(|s| match s.kind {
+        SegmentKind::Snapshot => (0, s.gen),
+        SegmentKind::Wal(g) => (1, g),
+    });
+    for seg in &ordered {
+        if sync_segment(client, io, &dir, chunk_bytes, &track.encoded, seg)? {
+            changed = true;
+        }
+    }
+    // Drop local generations the primary has compacted away.
+    let snap_gen = ordered.iter().find_map(|s| match s.kind {
+        SegmentKind::Snapshot => Some(s.gen),
+        SegmentKind::Wal(_) => None,
+    });
+    if let Some(snap_gen) = snap_gen {
+        let remote: BTreeSet<u64> = ordered
+            .iter()
+            .filter_map(|s| match s.kind {
+                SegmentKind::Wal(g) => Some(g),
+                SegmentKind::Snapshot => None,
+            })
+            .collect();
+        if dir.is_dir() {
+            for gen in store::wal_gens(&dir)? {
+                if gen < snap_gen && !remote.contains(&gen) {
+                    if io.remove_file(&store::wal_path(&dir, gen)).is_ok() {
+                        changed = true;
+                    }
+                }
+            }
+        }
+    }
+    Ok(changed)
+}
+
+/// One full catch-up pass: fetch the manifest, bring every listed track's
+/// files up to it. Returns `(track id, changed)` for every manifest
+/// track. Any error aborts the pass (the caller backs off and re-diffs);
+/// everything already installed stays — installs are atomic and ordered
+/// so every intermediate state is a consistent prefix.
+pub fn sync_once(
+    client: &ReplicaClient,
+    io: &dyn StoreIo,
+    root: &Path,
+) -> Result<Vec<(String, bool)>> {
+    let manifest = client.fetch_manifest()?;
+    let mut out = Vec::with_capacity(manifest.tracks.len());
+    for track in &manifest.tracks {
+        let changed = sync_track(client, io, root, manifest.chunk_bytes, track)?;
+        out.push((track.id.clone(), changed));
+    }
+    Ok(out)
+}
+
+/// Reload one track from its replicated files into the advisor, via the
+/// read-only replay path (never mutates the files — a normal open would
+/// roll a generation the primary doesn't have).
+pub fn reload_track(advisor: &Advisor, root: &Path, id: &str) -> Result<()> {
+    let dir = root.join("tracks").join(encode_track_id(id));
+    let (state, _torn, problems) = store::replay_readonly(&dir)?;
+    for p in &problems {
+        eprintln!("[replica] track '{id}': {p}");
+    }
+    let state = state
+        .with_context(|| format!("no recoverable state in {}", dir.display()))?;
+    advisor.install_replica_track(id, state)
+}
+
+/// Boot-time load of every locally replicated track (reboot recovery: a
+/// kill-9'd replica resumes from whatever clean prefix it installed).
+/// Per-track problems are logged, not fatal — the puller re-fetches.
+pub fn load_local_tracks(advisor: &Advisor, root: &Path) -> Result<usize> {
+    let store = TraceStore::open(root)?;
+    let mut loaded = 0usize;
+    for id in store.track_ids()? {
+        match reload_track(advisor, root, &id) {
+            Ok(()) => loaded += 1,
+            Err(e) => eprintln!("[replica] boot load of track '{id}' failed: {e:#}"),
+        }
+    }
+    Ok(loaded)
+}
+
+/// Capped exponential backoff with jitter: 0.25 s · 2^(failures-1), capped
+/// at 5 s, scaled by a uniform [0.5, 1.5) factor so a replica fleet never
+/// retries in lockstep.
+pub fn backoff_delay(failures: u32, rng: &mut Rng) -> Duration {
+    let exp = failures.saturating_sub(1).min(16);
+    let base = BACKOFF_BASE.as_secs_f64() * 2f64.powi(exp as i32);
+    Duration::from_secs_f64(base.min(BACKOFF_CAP.as_secs_f64()) * (0.5 + rng.f64()))
+}
+
+fn sleep_interruptible(stop: &AtomicBool, total: Duration) {
+    let deadline = Instant::now() + total;
+    while !stop.load(Ordering::SeqCst) {
+        let left = deadline.saturating_duration_since(Instant::now());
+        if left.is_zero() {
+            break;
+        }
+        std::thread::sleep(left.min(Duration::from_millis(50)));
+    }
+}
+
+/// The replica's background catch-up loop (one thread inside the serve
+/// scope). Never exits on error: failed rounds back off exponentially
+/// (with jitter) and re-diff from a fresh manifest; `stop` is the serve
+/// loop's shutdown flag.
+pub fn run_puller(advisor: &Advisor, client: &ReplicaClient, root: &Path, stop: &AtomicBool) {
+    let io = RealIo;
+    let mut rng = Rng::new(0x5EED_u64 ^ fnv1a_64(client.primary.as_bytes()));
+    let mut failures: u32 = 0;
+    while !stop.load(Ordering::SeqCst) {
+        match sync_once(client, &io, root) {
+            Ok(tracks) => {
+                failures = 0;
+                for (id, changed) in tracks {
+                    if changed || !advisor.has_track(&id) {
+                        if let Err(e) = reload_track(advisor, root, &id) {
+                            eprintln!("[replica] reload of track '{id}' failed: {e:#}");
+                        }
+                    }
+                }
+                sleep_interruptible(stop, POLL_INTERVAL);
+            }
+            Err(e) => {
+                failures = failures.saturating_add(1);
+                let delay = backoff_delay(failures, &mut rng);
+                eprintln!(
+                    "[replica] catch-up from {} failed (attempt {failures}): {e:#}; retrying in {delay:?}",
+                    client.primary
+                );
+                sleep_interruptible(stop, delay);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::store::{TrackState, WalRecord};
+
+    fn tmp(tag: &str) -> PathBuf {
+        static SEQ: std::sync::atomic::AtomicU64 = std::sync::atomic::AtomicU64::new(0);
+        let n = SEQ.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+        std::env::temp_dir().join(format!("mckpt-repl-{tag}-{}-{n}", std::process::id()))
+    }
+
+    fn wal_bytes(recs: &[WalRecord]) -> Vec<u8> {
+        let mut b = wal::WAL_MAGIC.to_vec();
+        for r in recs {
+            b.extend_from_slice(&wal::encode_frame(r));
+        }
+        b
+    }
+
+    #[test]
+    fn hex_roundtrip_and_rejections() {
+        let bytes = [0u8, 1, 0x7f, 0xff, 0xab];
+        assert_eq!(hex_decode("t", &hex_encode(&bytes)).unwrap(), bytes);
+        assert!(hex_decode("t", "abc").is_err(), "odd length");
+        assert!(hex_decode("t", "zz").is_err(), "non-hex");
+        assert_eq!(parse_hex64("t", &hex64(0xdead_beef_0102_0304)).unwrap(), 0xdead_beef_0102_0304);
+        assert!(parse_hex64("t", "dead").is_err(), "short literal");
+    }
+
+    #[test]
+    fn segment_names_are_strictly_validated() {
+        assert_eq!(parse_segment_name("snapshot.bin").unwrap(), SegmentKind::Snapshot);
+        assert_eq!(parse_segment_name("wal-7.log").unwrap(), SegmentKind::Wal(7));
+        for bad in [
+            "../snapshot.bin",
+            "wal-.log",
+            "wal-7.log.tmp",
+            "snapshot.tmp",
+            "wal-x.log",
+            "wal-99999999999999999999999.log",
+            "",
+        ] {
+            let err = parse_segment_name(bad).unwrap_err();
+            assert!(err.downcast_ref::<StoreError>().is_some(), "untyped error for '{bad}'");
+        }
+    }
+
+    #[test]
+    fn manifest_roundtrips_through_parse() {
+        let recs = [
+            WalRecord::Create { n_procs: 3 },
+            WalRecord::Outage { proc: 0, fail: 10.0, repair: 20.0 },
+            WalRecord::Refit { lambda: 2.5e-6, theta: 1.0e-3 },
+        ];
+        let bytes = wal_bytes(&recs);
+        let entry = segment_entry_json("wal-4.log", &bytes).unwrap();
+        let mut tj = Json::obj();
+        tj.set("encoded", Json::from(encode_track_id("a/b").as_str()))
+            .set("segments", Json::Arr(vec![entry]));
+        let mut tracks = Json::obj();
+        tracks.set("a/b", tj);
+        let mut doc = Json::obj();
+        doc.set("ok", Json::from(true))
+            .set("chunk_bytes", Json::from(CHUNK_BYTES))
+            .set("tracks", tracks);
+
+        let m = parse_manifest(&doc).unwrap();
+        assert_eq!(m.chunk_bytes, CHUNK_BYTES);
+        assert_eq!(m.tracks.len(), 1);
+        let t = &m.tracks[0];
+        assert_eq!((t.id.as_str(), t.encoded.as_str()), ("a/b", "a%2Fb"));
+        let seg = &t.segments[0];
+        assert_eq!(seg.kind, SegmentKind::Wal(4));
+        assert_eq!(seg.len, bytes.len() as u64);
+        assert_eq!(seg.valid_len, seg.len, "clean WAL has no torn tail");
+        assert_eq!(seg.fnv64, fnv1a_64(&bytes));
+        assert_eq!(seg.chunks, chunk_sums(&bytes));
+
+        // Tampering with any field is a typed rejection.
+        let mut bad = doc.clone();
+        bad.set("chunk_bytes", Json::from(0u64));
+        assert!(parse_manifest(&bad).unwrap_err().downcast_ref::<StoreError>().is_some());
+        assert!(parse_manifest(&Json::obj()).is_err());
+    }
+
+    #[test]
+    fn segment_response_roundtrips_and_checks_payload() {
+        let data = wal_bytes(&[WalRecord::Create { n_procs: 2 }]);
+        let j = segment_response_json("c1", "wal-1.log", 0, data.len() as u64, &data);
+        let seg = parse_segment(&j).unwrap();
+        assert_eq!((seg.track.as_str(), seg.name.as_str(), seg.offset), ("c1", "wal-1.log", 0));
+        assert_eq!(seg.data, data);
+
+        let mut forged = j.clone();
+        forged.set("fnv64", Json::from(hex64(0).as_str()));
+        let err = parse_segment(&forged).unwrap_err();
+        assert!(err.downcast_ref::<StoreError>().is_some(), "forged checksum must be typed");
+    }
+
+    #[test]
+    fn install_rejects_garbage_and_lands_clean_segments() {
+        let dir = tmp("install");
+        let io = RealIo;
+
+        // Garbage never lands, and never leaves a file behind.
+        let err = install_segment(&io, &dir, "wal-1.log", b"not a wal at all").unwrap_err();
+        assert!(err.downcast_ref::<StoreError>().is_some());
+        assert!(!dir.join("wal-1.log").exists());
+
+        // A torn WAL image is refused outright (the puller only assembles
+        // verified clean prefixes, so reaching install with torn bytes
+        // means the source lied).
+        let mut torn = wal_bytes(&[WalRecord::Create { n_procs: 2 }]);
+        torn.extend_from_slice(&[9, 9, 9]);
+        assert!(install_segment(&io, &dir, "wal-1.log", &torn).is_err());
+
+        let good = wal_bytes(&[
+            WalRecord::Create { n_procs: 2 },
+            WalRecord::Outage { proc: 1, fail: 5.0, repair: 6.0 },
+        ]);
+        install_segment(&io, &dir, "wal-1.log", &good).unwrap();
+        assert_eq!(std::fs::read(dir.join("wal-1.log")).unwrap(), good);
+
+        let mut state = TrackState::new(2).unwrap();
+        state.apply(&WalRecord::Outage { proc: 0, fail: 1.0, repair: 2.0 }).unwrap();
+        let snap = snapshot::encode(1, 2, &state);
+        install_segment(&io, &dir, "snapshot.bin", &snap).unwrap();
+        let (replayed, torn_tail, problems) = store::replay_readonly(&dir).unwrap();
+        assert!(!torn_tail && problems.is_empty(), "{problems:?}");
+        let replayed = replayed.unwrap();
+        // Snapshot gen 1 covers 2 records of wal-1: exactly one outage
+        // replays on top of the snapshotted one.
+        assert_eq!(replayed.accepted, 2);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn backoff_is_capped_and_jittered() {
+        let mut rng = Rng::new(7);
+        for failures in 1..40u32 {
+            let d = backoff_delay(failures, &mut rng).as_secs_f64();
+            assert!(d >= 0.25 * 0.5 - 1e-12, "attempt {failures}: {d}");
+            assert!(d < 5.0 * 1.5 + 1e-12, "attempt {failures}: {d}");
+        }
+        // First retry is fast, deep retries hug the cap.
+        let mut rng = Rng::new(8);
+        let first = backoff_delay(1, &mut rng).as_secs_f64();
+        assert!(first < 0.25 * 1.5 + 1e-12);
+        let deep = backoff_delay(30, &mut rng).as_secs_f64();
+        assert!(deep >= 5.0 * 0.5 - 1e-12);
+    }
+}

@@ -16,6 +16,15 @@
 //! | `/v1/status`       | GET    | —                                     |
 //! | `/v1/shutdown`     | POST   | — (stops the daemon; used by tests    |
 //! |                    |        | and the CI smoke job)                 |
+//! | `/v1/replicate/manifest` | GET | — (segment manifest; `--data-dir`) |
+//! | `/v1/replicate/segment`  | GET | `?track=&name=&offset=` range fetch |
+//!
+//! With `serve --auth-token T`, every `/v1/*` route requires
+//! `Authorization: Bearer T` (`401` JSON otherwise); `/healthz` stays
+//! open so load balancers can probe without credentials. With
+//! `serve --replica-of URL` the daemon is a read replica: a background
+//! puller mirrors the primary's store ([`super::replicate`]) and
+//! `POST /v1/ingest` answers `409` pointing writers at the primary.
 //!
 //! Malformed requests get `400` with `{"ok": false, "error": ...}`;
 //! unknown paths `404`; wrong methods `405`; a POST without a
@@ -63,7 +72,7 @@ use std::time::{Duration, Instant};
 
 use anyhow::{Context, Result};
 
-use super::{protocol, Advisor, AdvisorConfig};
+use super::{protocol, replicate, Advisor, AdvisorConfig};
 use crate::store::TraceStore;
 use crate::util::json::Json;
 
@@ -97,6 +106,13 @@ pub struct ServeOptions {
     /// queueing without bound.
     pub queue_depth: usize,
     pub advisor: AdvisorConfig,
+    /// Require `Authorization: Bearer <token>` on every `/v1/*` route
+    /// (`/healthz` stays open for unauthenticated health probes).
+    pub auth_token: Option<String>,
+    /// Run as a read replica of this primary (`host:port` or
+    /// `http://host:port`): a background puller mirrors the primary's
+    /// store into `--data-dir` and ingest is rejected with `409`.
+    pub replica_of: Option<String>,
 }
 
 impl Default for ServeOptions {
@@ -106,6 +122,8 @@ impl Default for ServeOptions {
             workers: crate::util::pool::default_workers().clamp(2, 8),
             queue_depth: 128,
             advisor: AdvisorConfig::default(),
+            auth_token: None,
+            replica_of: None,
         }
     }
 }
@@ -118,6 +136,17 @@ pub(crate) struct HttpRequest {
     /// Client wants the connection kept open after the response
     /// (HTTP/1.1 default; overridden by a `Connection` header).
     pub(crate) keep_alive: bool,
+    /// Raw `Authorization` header value, if the client sent one.
+    pub(crate) authorization: Option<String>,
+}
+
+/// Per-daemon routing configuration threaded into [`route`]: the auth
+/// token requests must carry and, for a read replica, the primary
+/// address writes are redirected to.
+#[derive(Debug, Clone, Copy, Default)]
+pub(crate) struct RouteContext<'a> {
+    pub(crate) auth_token: Option<&'a str>,
+    pub(crate) replica_of: Option<&'a str>,
 }
 
 /// What one read attempt on a (possibly reused) connection produced.
@@ -162,6 +191,7 @@ pub(crate) fn try_parse_request(
     // HTTP/1.1 defaults to persistent connections; 1.0 to closing.
     let mut keep_alive = version != "HTTP/1.0";
     let mut content_length: Option<usize> = None;
+    let mut authorization: Option<String> = None;
     for line in lines {
         if let Some((name, value)) = line.split_once(':') {
             let value = value.trim();
@@ -180,6 +210,8 @@ pub(crate) fn try_parse_request(
                 } else if value.eq_ignore_ascii_case("keep-alive") {
                     keep_alive = true;
                 }
+            } else if name.eq_ignore_ascii_case("authorization") {
+                authorization = Some(value.to_string());
             }
         }
     }
@@ -203,7 +235,7 @@ pub(crate) fn try_parse_request(
         Ok(b) => b.to_string(),
         Err(_) => return Err((400, "non-UTF-8 request body".to_string())),
     };
-    Ok(Some((HttpRequest { method, path, body, keep_alive }, frame_end)))
+    Ok(Some((HttpRequest { method, path, body, keep_alive, authorization }, frame_end)))
 }
 
 /// Read one request from `stream`, carrying leftover bytes across calls
@@ -257,9 +289,11 @@ fn status_text(code: u16) -> &'static str {
     match code {
         200 => "OK",
         400 => "Bad Request",
+        401 => "Unauthorized",
         404 => "Not Found",
         405 => "Method Not Allowed",
         408 => "Request Timeout",
+        409 => "Conflict",
         411 => "Length Required",
         413 => "Payload Too Large",
         503 => "Service Unavailable",
@@ -294,16 +328,70 @@ fn shed(mut stream: TcpStream, why: &str) {
     write_response(&mut stream, 503, &protocol::error_response(why), false);
 }
 
+/// First `name=value` query parameter called `name`, raw (no percent
+/// decoding: segment and track names are already in their wire form).
+fn query_param<'a>(query: &'a str, name: &str) -> Option<&'a str> {
+    query
+        .split('&')
+        .filter_map(|pair| pair.split_once('='))
+        .find(|(k, _)| *k == name)
+        .map(|(_, v)| v)
+}
+
 /// Route one request. Parse errors are 400s; model-layer errors 500s.
-fn route(advisor: &Advisor, req: &HttpRequest, stop: &AtomicBool) -> (u16, Json) {
+fn route(advisor: &Advisor, req: &HttpRequest, stop: &AtomicBool, ctx: RouteContext) -> (u16, Json) {
     let parse_body = || -> Result<Json> { Ok(Json::parse(&req.body)?) };
-    match (req.method.as_str(), req.path.as_str()) {
+    let (path, query) = req.path.split_once('?').unwrap_or((req.path.as_str(), ""));
+    // The auth gate runs before any dispatch: with a configured token,
+    // every route except the load-balancer health probe requires
+    // `Authorization: Bearer <token>` verbatim.
+    if let Some(token) = ctx.auth_token {
+        if path != "/healthz" {
+            let want = format!("Bearer {token}");
+            if req.authorization.as_deref() != Some(want.as_str()) {
+                return (401, protocol::error_response("missing or invalid bearer token"));
+            }
+        }
+    }
+    match (req.method.as_str(), path) {
         ("GET", "/healthz") => {
             let mut o = Json::obj();
             o.set("ok", Json::from(true));
             (200, o)
         }
         ("GET", "/v1/status") => (200, advisor.status()),
+        ("GET", "/v1/replicate/manifest") => match advisor.store() {
+            Some(st) => match replicate::manifest_json(st) {
+                Ok(j) => (200, j),
+                Err(e) => (500, protocol::error_response(&format!("{e:#}"))),
+            },
+            None => (400, protocol::error_response("replication requires serve --data-dir")),
+        },
+        ("GET", "/v1/replicate/segment") => match advisor.store() {
+            Some(st) => {
+                let track = query_param(query, "track").unwrap_or("");
+                let name = query_param(query, "name").unwrap_or("");
+                let offset = match query_param(query, "offset").unwrap_or("0").parse::<u64>() {
+                    Ok(n) => n,
+                    Err(_) => {
+                        return (400, protocol::error_response("bad 'offset' query parameter"))
+                    }
+                };
+                if track.is_empty() || name.is_empty() {
+                    return (
+                        400,
+                        protocol::error_response("'track' and 'name' query parameters required"),
+                    );
+                }
+                match replicate::segment_json(st, track, name, offset) {
+                    Ok(j) => (200, j),
+                    // Segment errors are client mistakes (bad names, raced
+                    // compaction unlinks), not daemon bugs.
+                    Err(e) => (400, protocol::error_response(&format!("{e:#}"))),
+                }
+            }
+            None => (400, protocol::error_response("replication requires serve --data-dir")),
+        },
         ("POST", "/v1/select") => match parse_body().and_then(|j| protocol::parse_select(&j)) {
             Ok(r) => match advisor.select(&r) {
                 Ok(j) => (200, j),
@@ -327,15 +415,25 @@ fn route(advisor: &Advisor, req: &HttpRequest, stop: &AtomicBool) -> (u16, Json)
             },
             Err(e) => (400, protocol::error_response(&format!("{e:#}"))),
         },
-        ("POST", "/v1/ingest") => match parse_body().and_then(|j| protocol::parse_ingest(&j)) {
-            Ok(r) => match advisor.ingest(&r) {
-                // Ingest validation happens against track state, so its
-                // failures are client errors, not daemon bugs.
-                Ok(j) => (200, j),
+        ("POST", "/v1/ingest") => {
+            // A read replica owns no track history of its own — writes
+            // must go to the primary the puller mirrors.
+            if let Some(primary) = ctx.replica_of {
+                let mut o =
+                    protocol::error_response("read replica: ingest on the primary instead");
+                o.set("primary", Json::from(primary));
+                return (409, o);
+            }
+            match parse_body().and_then(|j| protocol::parse_ingest(&j)) {
+                Ok(r) => match advisor.ingest(&r) {
+                    // Ingest validation happens against track state, so its
+                    // failures are client errors, not daemon bugs.
+                    Ok(j) => (200, j),
+                    Err(e) => (400, protocol::error_response(&format!("{e:#}"))),
+                },
                 Err(e) => (400, protocol::error_response(&format!("{e:#}"))),
-            },
-            Err(e) => (400, protocol::error_response(&format!("{e:#}"))),
-        },
+            }
+        }
         ("POST", "/v1/shutdown") => {
             stop.store(true, Ordering::SeqCst);
             let mut o = Json::obj();
@@ -343,12 +441,19 @@ fn route(advisor: &Advisor, req: &HttpRequest, stop: &AtomicBool) -> (u16, Json)
             (200, o)
         }
         (_, "/healthz" | "/v1/status" | "/v1/select" | "/v1/select_batch" | "/v1/model"
-        | "/v1/ingest" | "/v1/shutdown") => (405, protocol::error_response("method not allowed")),
+        | "/v1/ingest" | "/v1/shutdown" | "/v1/replicate/manifest" | "/v1/replicate/segment") => {
+            (405, protocol::error_response("method not allowed"))
+        }
         _ => (404, protocol::error_response("no such endpoint")),
     }
 }
 
-fn handle_connection(advisor: &Advisor, mut stream: TcpStream, stop: &AtomicBool) {
+fn handle_connection(
+    advisor: &Advisor,
+    mut stream: TcpStream,
+    stop: &AtomicBool,
+    ctx: RouteContext,
+) {
     // Accepted sockets may inherit the listener's nonblocking mode on
     // some platforms; the handler wants plain blocking reads + timeouts.
     let _ = stream.set_nonblocking(false);
@@ -359,7 +464,7 @@ fn handle_connection(advisor: &Advisor, mut stream: TcpStream, stop: &AtomicBool
     for served in 1..=MAX_REQUESTS_PER_CONN {
         match read_request(&mut stream, &mut buf) {
             ReadOutcome::Request(req) => {
-                let (code, body) = route(advisor, &req, stop);
+                let (code, body) = route(advisor, &req, stop, ctx);
                 if code != 200 {
                     eprintln!("[advisor] {} {} -> {code}", req.method, req.path);
                 }
@@ -387,6 +492,9 @@ pub struct AdvisorServer {
     advisor: Arc<Advisor>,
     workers: usize,
     queue_depth: usize,
+    auth_token: Option<String>,
+    /// Replica mode: `(primary address, local replica data dir)`.
+    replica: Option<(String, std::path::PathBuf)>,
 }
 
 impl AdvisorServer {
@@ -397,8 +505,30 @@ impl AdvisorServer {
     /// Bind with an optional durable store: persisted tracks are
     /// recovered before the listener accepts its first connection, and a
     /// clean shutdown snapshots everything back.
+    ///
+    /// With `opts.replica_of`, the store's root becomes the **replica
+    /// data dir**: the advisor is built *without* a store of its own (a
+    /// replica never appends — only the puller mutates the dir), any
+    /// already-replicated tracks are loaded read-only, and `run` spawns
+    /// the background puller alongside the workers.
     pub fn bind_with_store(opts: &ServeOptions, store: Option<TraceStore>) -> Result<AdvisorServer> {
-        let advisor = Advisor::with_store(opts.advisor, store)?;
+        let mut replica = None;
+        let advisor = match &opts.replica_of {
+            Some(primary) => {
+                let st = store
+                    .as_ref()
+                    .context("serve --replica-of requires --data-dir for the replicated store")?;
+                let root = st.root().to_path_buf();
+                let advisor = Advisor::with_store(opts.advisor, None)?;
+                let loaded = replicate::load_local_tracks(&advisor, &root)?;
+                if loaded > 0 {
+                    eprintln!("[advisor] replica loaded {loaded} track(s) from {}", root.display());
+                }
+                replica = Some((primary.clone(), root));
+                advisor
+            }
+            None => Advisor::with_store(opts.advisor, store)?,
+        };
         let listener = TcpListener::bind(&opts.addr)
             .with_context(|| format!("binding {}", opts.addr))?;
         Ok(AdvisorServer {
@@ -406,6 +536,8 @@ impl AdvisorServer {
             advisor: Arc::new(advisor),
             workers: opts.workers.max(1),
             queue_depth: opts.queue_depth.max(1),
+            auth_token: opts.auth_token.clone(),
+            replica,
         })
     }
 
@@ -435,8 +567,24 @@ impl AdvisorServer {
             Mutex::new(std::collections::VecDeque::new());
         let ready = Condvar::new();
         let advisor = &self.advisor;
+        let ctx = RouteContext {
+            auth_token: self.auth_token.as_deref(),
+            replica_of: self.replica.as_ref().map(|(p, _)| p.as_str()),
+        };
 
         std::thread::scope(|scope| {
+            if let Some((primary, root)) = &self.replica {
+                let client = replicate::ReplicaClient {
+                    primary: primary.clone(),
+                    token: self.auth_token.clone(),
+                };
+                let root = root.clone();
+                let stop = &stop;
+                let advisor = Arc::clone(advisor);
+                scope.spawn(move || {
+                    replicate::run_puller(&advisor, &client, &root, stop);
+                });
+            }
             for _ in 0..self.workers {
                 scope.spawn(|| loop {
                     let conn = {
@@ -455,7 +603,7 @@ impl AdvisorServer {
                     };
                     match conn {
                         Some(c) => {
-                            handle_connection(advisor, c, &stop);
+                            handle_connection(advisor, c, &stop, ctx);
                             active.fetch_sub(1, Ordering::SeqCst);
                         }
                         None => break,
@@ -530,8 +678,10 @@ mod tests {
     #[test]
     fn status_lines() {
         assert_eq!(status_text(200), "OK");
+        assert_eq!(status_text(401), "Unauthorized");
         assert_eq!(status_text(404), "Not Found");
         assert_eq!(status_text(408), "Request Timeout");
+        assert_eq!(status_text(409), "Conflict");
         assert_eq!(status_text(411), "Length Required");
         assert_eq!(status_text(503), "Service Unavailable");
         assert_eq!(status_text(500), "Internal Server Error");
@@ -656,25 +806,30 @@ mod tests {
         client.join().unwrap();
     }
 
-    #[test]
-    fn route_rejects_unknown_and_wrong_method() {
-        let advisor = Advisor::new(AdvisorConfig::default());
-        let stop = AtomicBool::new(false);
-        let req = |method: &str, path: &str, body: &str| HttpRequest {
+    fn req(method: &str, path: &str, body: &str) -> HttpRequest {
+        HttpRequest {
             method: method.to_string(),
             path: path.to_string(),
             body: body.to_string(),
             keep_alive: true,
-        };
-        assert_eq!(route(&advisor, &req("GET", "/nope", ""), &stop).0, 404);
-        assert_eq!(route(&advisor, &req("POST", "/healthz", ""), &stop).0, 405);
-        assert_eq!(route(&advisor, &req("GET", "/v1/select", ""), &stop).0, 405);
-        assert_eq!(route(&advisor, &req("POST", "/v1/select", "{"), &stop).0, 400);
-        assert_eq!(route(&advisor, &req("POST", "/v1/select", "{}"), &stop).0, 400);
-        assert_eq!(route(&advisor, &req("GET", "/v1/select_batch", ""), &stop).0, 405);
-        assert_eq!(route(&advisor, &req("POST", "/v1/select_batch", "{}"), &stop).0, 400);
+            authorization: None,
+        }
+    }
+
+    #[test]
+    fn route_rejects_unknown_and_wrong_method() {
+        let advisor = Advisor::new(AdvisorConfig::default());
+        let stop = AtomicBool::new(false);
+        let ctx = RouteContext::default();
+        assert_eq!(route(&advisor, &req("GET", "/nope", ""), &stop, ctx).0, 404);
+        assert_eq!(route(&advisor, &req("POST", "/healthz", ""), &stop, ctx).0, 405);
+        assert_eq!(route(&advisor, &req("GET", "/v1/select", ""), &stop, ctx).0, 405);
+        assert_eq!(route(&advisor, &req("POST", "/v1/select", "{"), &stop, ctx).0, 400);
+        assert_eq!(route(&advisor, &req("POST", "/v1/select", "{}"), &stop, ctx).0, 400);
+        assert_eq!(route(&advisor, &req("GET", "/v1/select_batch", ""), &stop, ctx).0, 405);
+        assert_eq!(route(&advisor, &req("POST", "/v1/select_batch", "{}"), &stop, ctx).0, 400);
         assert_eq!(
-            route(&advisor, &req("POST", "/v1/select_batch", r#"{"items": []}"#), &stop).0,
+            route(&advisor, &req("POST", "/v1/select_batch", r#"{"items": []}"#), &stop, ctx).0,
             400
         );
         // A malformed item 400s naming its index; parsing never runs the
@@ -687,15 +842,63 @@ mod tests {
                 r#"{"items": [{"system": "system-1/128"}, {"app": "qr"}]}"#,
             ),
             &stop,
+            ctx,
         );
         assert_eq!(code, 400);
         assert!(
             body.get("error").unwrap().as_str().unwrap().contains("items[1]"),
             "400 must name the failing index: {body}"
         );
-        assert_eq!(route(&advisor, &req("GET", "/healthz", ""), &stop).0, 200);
+        // Replication endpoints exist (405 on wrong method) but need a
+        // store behind them (400 without --data-dir).
+        assert_eq!(route(&advisor, &req("POST", "/v1/replicate/manifest", ""), &stop, ctx).0, 405);
+        assert_eq!(route(&advisor, &req("GET", "/v1/replicate/manifest", ""), &stop, ctx).0, 400);
+        assert_eq!(
+            route(&advisor, &req("GET", "/v1/replicate/segment?track=t&name=wal-1.log", ""), &stop, ctx).0,
+            400
+        );
+        assert_eq!(route(&advisor, &req("GET", "/healthz", ""), &stop, ctx).0, 200);
         assert!(!stop.load(Ordering::SeqCst));
-        assert_eq!(route(&advisor, &req("POST", "/v1/shutdown", ""), &stop).0, 200);
+        assert_eq!(route(&advisor, &req("POST", "/v1/shutdown", ""), &stop, ctx).0, 200);
         assert!(stop.load(Ordering::SeqCst));
+    }
+
+    #[test]
+    fn auth_token_gates_every_v1_route_but_not_healthz() {
+        let advisor = Advisor::new(AdvisorConfig::default());
+        let stop = AtomicBool::new(false);
+        let ctx = RouteContext { auth_token: Some("s3cret"), replica_of: None };
+        // No header, wrong scheme, wrong token: all 401 with a JSON body.
+        let (code, body) = route(&advisor, &req("GET", "/v1/status", ""), &stop, ctx);
+        assert_eq!(code, 401);
+        assert_eq!(body.get("ok").unwrap().as_bool(), Some(false));
+        let mut r = req("GET", "/v1/status", "");
+        r.authorization = Some("Basic s3cret".to_string());
+        assert_eq!(route(&advisor, &r, &stop, ctx).0, 401);
+        r.authorization = Some("Bearer wrong".to_string());
+        assert_eq!(route(&advisor, &r, &stop, ctx).0, 401);
+        // The exact bearer token passes; the health probe never needs it.
+        r.authorization = Some("Bearer s3cret".to_string());
+        assert_eq!(route(&advisor, &r, &stop, ctx).0, 200);
+        assert_eq!(route(&advisor, &req("GET", "/healthz", ""), &stop, ctx).0, 200);
+        // The gate runs before dispatch: even unknown paths 401 first.
+        assert_eq!(route(&advisor, &req("GET", "/nope", ""), &stop, ctx).0, 401);
+        // Shutdown is token-gated too — the flag must not have flipped.
+        assert_eq!(route(&advisor, &req("POST", "/v1/shutdown", ""), &stop, ctx).0, 401);
+        assert!(!stop.load(Ordering::SeqCst));
+    }
+
+    #[test]
+    fn replica_mode_rejects_ingest_with_409_naming_the_primary() {
+        let advisor = Advisor::new(AdvisorConfig::default());
+        let stop = AtomicBool::new(false);
+        let ctx = RouteContext { auth_token: None, replica_of: Some("127.0.0.1:7743") };
+        let body = r#"{"track": "t", "n_procs": 4, "events": []}"#;
+        let (code, resp) = route(&advisor, &req("POST", "/v1/ingest", body), &stop, ctx);
+        assert_eq!(code, 409);
+        assert_eq!(resp.get("ok").unwrap().as_bool(), Some(false));
+        assert_eq!(resp.get("primary").unwrap().as_str(), Some("127.0.0.1:7743"));
+        // Reads still serve.
+        assert_eq!(route(&advisor, &req("GET", "/v1/status", ""), &stop, ctx).0, 200);
     }
 }

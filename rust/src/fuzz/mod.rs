@@ -1,6 +1,6 @@
 //! Structured fuzzing of every byte-level parser the daemon trusts —
-//! the `malleable-ckpt fuzz {http,wal,snapshot}` subcommand (DESIGN.md
-//! §12).
+//! the `malleable-ckpt fuzz {http,wal,snapshot,replicate}` subcommand
+//! (DESIGN.md §12).
 //!
 //! Each target starts from **valid seed bytes** (a well-formed HTTP/1.1
 //! request frame, a WAL image with every record kind, an encoded
@@ -28,6 +28,7 @@ use std::path::Path;
 use anyhow::{anyhow, Result};
 
 use crate::advisor::protocol;
+use crate::advisor::replicate;
 use crate::advisor::server::try_parse_request;
 use crate::apps::AppProfile;
 use crate::config::SystemParams;
@@ -81,6 +82,9 @@ pub enum FuzzTarget {
     Wal,
     /// The snapshot decoder ([`snapshot::decode`]).
     Snapshot,
+    /// The replication manifest/segment parsers and the replica's
+    /// install-side segment validator ([`crate::advisor::replicate`]).
+    Replicate,
 }
 
 impl FuzzTarget {
@@ -89,7 +93,10 @@ impl FuzzTarget {
             "http" => Ok(FuzzTarget::Http),
             "wal" => Ok(FuzzTarget::Wal),
             "snapshot" => Ok(FuzzTarget::Snapshot),
-            other => Err(anyhow!("unknown fuzz target '{other}' (http | wal | snapshot)")),
+            "replicate" => Ok(FuzzTarget::Replicate),
+            other => {
+                Err(anyhow!("unknown fuzz target '{other}' (http | wal | snapshot | replicate)"))
+            }
         }
     }
 
@@ -98,6 +105,7 @@ impl FuzzTarget {
             FuzzTarget::Http => "http",
             FuzzTarget::Wal => "wal",
             FuzzTarget::Snapshot => "snapshot",
+            FuzzTarget::Replicate => "replicate",
         }
     }
 }
@@ -194,6 +202,41 @@ fn drive(target: FuzzTarget, input: &[u8], rng: &mut Rng) -> Verdict {
                 Ok(None) => Verdict::Rejected, // incomplete: server would keep reading
                 Err(_) if ok => Verdict::Accepted,
                 Err(_) => Verdict::Rejected,
+            }
+        }
+        FuzzTarget::Replicate => {
+            let text = String::from_utf8_lossy(input);
+            if let Ok(j) = Json::parse(&text) {
+                // Valid JSON attacks the wire parsers a replica trusts.
+                let ok = if rng.below(2) == 0 {
+                    replicate::parse_manifest(&j).is_ok()
+                } else {
+                    match replicate::parse_segment(&j) {
+                        // A whole-segment fetch would reach the install
+                        // validator next — drive that layer too.
+                        Ok(chunk) if chunk.offset == 0
+                            && chunk.data.len() as u64 == chunk.total_len =>
+                        {
+                            replicate::validate_segment_bytes(&chunk.name, &chunk.data).is_ok()
+                        }
+                        Ok(_) => true,
+                        Err(_) => false,
+                    }
+                };
+                if ok {
+                    Verdict::Accepted
+                } else {
+                    Verdict::Rejected
+                }
+            } else {
+                // Raw bytes attack the install-side segment validator
+                // directly (the byte layer a verified fetch hands to the
+                // installer).
+                let name = if rng.below(2) == 0 { "snapshot.bin" } else { "wal-1.log" };
+                match replicate::validate_segment_bytes(name, input) {
+                    Ok(_) => Verdict::Accepted,
+                    Err(_) => Verdict::Rejected,
+                }
             }
         }
     }
@@ -295,6 +338,37 @@ fn seed_corpus(target: FuzzTarget) -> Vec<Vec<u8>> {
         ],
         FuzzTarget::Wal => vec![wal_image()],
         FuzzTarget::Snapshot => vec![snapshot_image()],
+        FuzzTarget::Replicate => {
+            let snap = snapshot_image();
+            let walb = wal_image();
+            // A valid manifest over one track: its snapshot plus two WAL
+            // generations, entries built by the primary's own encoder.
+            let segs = vec![
+                replicate::segment_entry_json(snapshot::SNAPSHOT_FILE, &snap)
+                    .expect("seed snapshot entry"),
+                replicate::segment_entry_json("wal-3.log", &walb).expect("seed wal entry"),
+                replicate::segment_entry_json("wal-4.log", &walb).expect("seed wal entry"),
+            ];
+            let mut track = Json::obj();
+            track.set("encoded", Json::from("c1")).set("segments", Json::Arr(segs));
+            let mut tracks = Json::obj();
+            tracks.set("c1", track);
+            let mut manifest = Json::obj();
+            manifest
+                .set("ok", Json::from(true))
+                .set("chunk_bytes", Json::from(replicate::CHUNK_BYTES))
+                .set("tracks", tracks);
+            // A valid whole-segment fetch response.
+            let seg_resp =
+                replicate::segment_response_json("c1", "wal-3.log", 0, walb.len() as u64, &walb);
+            vec![
+                manifest.to_compact().into_bytes(),
+                seg_resp.to_compact().into_bytes(),
+                // Raw segment bytes for the install-side validator.
+                walb,
+                snap,
+            ]
+        }
     }
 }
 
@@ -373,6 +447,18 @@ mod tests {
             let parsed = try_parse_request(seed).expect("seed frame must parse");
             assert!(parsed.is_some(), "seed frame incomplete: {:?}", String::from_utf8_lossy(seed));
         }
+
+        // The replicate seeds must satisfy the wire parsers unmutated.
+        let rep = seed_corpus(FuzzTarget::Replicate);
+        let manifest = Json::parse(&String::from_utf8(rep[0].clone()).unwrap()).unwrap();
+        let parsed = replicate::parse_manifest(&manifest).expect("seed manifest must parse");
+        assert_eq!(parsed.tracks.len(), 1);
+        assert_eq!(parsed.tracks[0].segments.len(), 3);
+        let seg = Json::parse(&String::from_utf8(rep[1].clone()).unwrap()).unwrap();
+        let chunk = replicate::parse_segment(&seg).expect("seed segment must parse");
+        assert_eq!(chunk.offset, 0);
+        replicate::validate_segment_bytes(&chunk.name, &chunk.data)
+            .expect("seed segment bytes must validate");
     }
 
     #[test]
@@ -391,7 +477,9 @@ mod tests {
 
     #[test]
     fn fuzz_targets_survive_a_smoke_burst_deterministically() {
-        for target in [FuzzTarget::Http, FuzzTarget::Wal, FuzzTarget::Snapshot] {
+        for target in
+            [FuzzTarget::Http, FuzzTarget::Wal, FuzzTarget::Snapshot, FuzzTarget::Replicate]
+        {
             let a = run(target, 300, 7);
             assert_eq!(a.panics, 0, "{}: {:?}", target.name(), a.first_panic);
             assert_eq!(a.iters, 300);
@@ -407,7 +495,7 @@ mod tests {
 
     #[test]
     fn target_names_round_trip() {
-        for name in ["http", "wal", "snapshot"] {
+        for name in ["http", "wal", "snapshot", "replicate"] {
             assert_eq!(FuzzTarget::from_name(name).unwrap().name(), name);
         }
         assert!(FuzzTarget::from_name("tcp").is_err());

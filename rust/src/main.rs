@@ -59,6 +59,8 @@ fn app_spec() -> App {
                 flag("max-events", "N", "per-track event-retention cap, oldest windows evicted past it (0 = unlimited)", Some("0")),
                 flag("retention-days", "F", "width of the retention/shard windows eviction rides on (days)", Some("7")),
                 flag("compact-mb", "F", "WAL size that triggers background compaction (MB)", Some("4")),
+                flag("auth-token", "TOKEN", "require 'Authorization: Bearer TOKEN' on every /v1/* route (401 otherwise; /healthz stays open)", None),
+                flag("replica-of", "HOST:PORT", "run as a read replica of this primary: a background puller mirrors its store into --data-dir (required), ingest answers 409 (see DESIGN.md §13)", None),
             ],
             positionals: vec![],
         })
@@ -141,7 +143,7 @@ fn app_spec() -> App {
                 flag("iters", "N", "mutated inputs to drive", Some("5000")),
                 flag("seed", "U64", "mutation RNG seed", Some("1")),
             ],
-            positionals: vec![("target", "http (request framing + JSON protocol) | wal (scanner) | snapshot (decoder)")],
+            positionals: vec![("target", "http (request framing + JSON protocol) | wal (scanner) | snapshot (decoder) | replicate (manifest/segment install path)")],
         })
         .command(CommandSpec {
             name: "info",
@@ -309,6 +311,14 @@ fn cmd_serve(p: &malleable_ckpt::util::cli::Parsed) -> Result<()> {
         anyhow::ensure!(q >= 1, "--queue-depth must be at least 1");
         opts.queue_depth = q;
     }
+    opts.auth_token = p.get("auth-token").map(str::to_string);
+    opts.replica_of = p.get("replica-of").map(str::to_string);
+    if opts.replica_of.is_some() {
+        anyhow::ensure!(
+            store.is_some(),
+            "--replica-of requires --data-dir (the replica's local copy of the primary's store)"
+        );
+    }
     let server = AdvisorServer::bind_with_store(&opts, store)?;
     let addr = server.local_addr()?;
     println!("advisor listening on http://{addr}");
@@ -331,6 +341,12 @@ fn cmd_serve(p: &malleable_ckpt::util::cli::Parsed) -> Result<()> {
             }
         ),
         None => println!("  in-memory only (pass --data-dir to persist tracks across restarts)"),
+    }
+    if let Some(primary) = &opts.replica_of {
+        println!("  read replica of {primary} (ingest rejected with 409; puller mirrors the primary's store)");
+    }
+    if opts.auth_token.is_some() {
+        println!("  bearer-token auth required on /v1/* (use 'Authorization: Bearer <token>')");
     }
     println!("try:");
     println!(
@@ -581,7 +597,7 @@ fn cmd_fuzz(p: &malleable_ckpt::util::cli::Parsed) -> Result<()> {
     let target = fuzz::FuzzTarget::from_name(
         p.positionals
             .first()
-            .ok_or_else(|| anyhow!("missing fuzz target (http | wal | snapshot)"))?,
+            .ok_or_else(|| anyhow!("missing fuzz target (http | wal | snapshot | replicate)"))?,
     )?;
     let iters = p.get_u64("iters")?.unwrap_or(5_000);
     let seed = p.get_u64("seed")?.unwrap_or(1);

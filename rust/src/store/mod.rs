@@ -156,12 +156,14 @@ pub fn decode_track_id(name: &str) -> Result<String> {
     String::from_utf8(out).context("track id is not UTF-8")
 }
 
-fn wal_path(dir: &Path, gen: u64) -> PathBuf {
+/// Path of one WAL generation inside a track dir (`wal-<gen>.log`).
+/// `pub(crate)` so the replication layer can name segments consistently.
+pub(crate) fn wal_path(dir: &Path, gen: u64) -> PathBuf {
     dir.join(format!("wal-{gen}.log"))
 }
 
 /// WAL generations present in a track dir, ascending.
-fn wal_gens(dir: &Path) -> Result<Vec<u64>> {
+pub(crate) fn wal_gens(dir: &Path) -> Result<Vec<u64>> {
     let mut gens = Vec::new();
     for entry in std::fs::read_dir(dir).with_context(|| format!("listing {}", dir.display()))? {
         let name = entry?.file_name();
@@ -372,8 +374,13 @@ impl TrackStore {
 }
 
 /// Read-only replay of a track dir (no torn-tail truncation, no new WAL
-/// generation) — the substrate `inspect` and `verify` share.
-fn replay_readonly(dir: &Path) -> Result<(Option<TrackState>, bool, Vec<String>)> {
+/// generation) — the substrate `inspect` and `verify` share, and the load
+/// path of a read replica (which must never mutate the replicated files:
+/// a normal `open_track` would roll a generation and append a `Create`
+/// record the primary doesn't have). Returns the recovered state (the
+/// clean prefix — a torn tail is skipped, not fatal), whether a tail was
+/// torn, and any problems encountered.
+pub fn replay_readonly(dir: &Path) -> Result<(Option<TrackState>, bool, Vec<String>)> {
     let mut problems: Vec<String> = Vec::new();
     let mut torn = false;
     let snap = match snapshot::load(dir) {

@@ -1,0 +1,503 @@
+//! Replication end-to-end (DESIGN.md §13): boot a primary+replica pair
+//! over real sockets, drive ingest → drift → re-selection on the primary,
+//! wait for the replica to catch up, kill the primary — and pin that the
+//! replica's tracked selects stay bit-identical to the offline
+//! `select --json` oracle at the replicated rates. Catch-up itself is
+//! pinned byte-for-byte: the replica's track directory must become
+//! file-identical to the primary's, both before and after the primary
+//! compacts a generation out from under the puller.
+//!
+//! A second test sweeps [`FaultIo`] over every file-operation index of a
+//! segment install and pins the no-torn-install contract: after any
+//! injected fault the replica directory replays to either its previous
+//! consistent state or a fully-installed one — never a torn or invented
+//! intermediate — and a disarmed retry lands the verified segment.
+
+use std::collections::BTreeMap;
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpStream};
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use malleable_ckpt::advisor::replicate;
+use malleable_ckpt::advisor::server::{AdvisorServer, ServeOptions};
+use malleable_ckpt::advisor::{Advisor, AdvisorConfig};
+use malleable_ckpt::apps::AppProfile;
+use malleable_ckpt::config::SystemParams;
+use malleable_ckpt::markov::ModelInputs;
+use malleable_ckpt::policies::ReschedulingPolicy;
+use malleable_ckpt::runtime::ComputeEngine;
+use malleable_ckpt::search::{select_interval, SearchConfig, SearchResult};
+use malleable_ckpt::store::{
+    self, snapshot, wal, FaultIo, FaultPlan, StoreError, TraceStore, TrackState, WalRecord,
+};
+use malleable_ckpt::traces::synth::{generate, SynthSpec};
+use malleable_ckpt::util::json::Json;
+use malleable_ckpt::util::rng::Rng;
+
+const DAY: f64 = 86_400.0;
+const TOKEN: &str = "replication-e2e-token";
+
+fn tmp_dir(tag: &str) -> PathBuf {
+    std::env::temp_dir().join(format!("mckpt-repl-e2e-{tag}-{}", std::process::id()))
+}
+
+/// Boot a daemon on an ephemeral port with a data dir; returns the
+/// address, the advisor handle (for driving compaction from the test)
+/// and the join handle.
+fn boot(
+    data_dir: &Path,
+    replica_of: Option<String>,
+) -> (SocketAddr, Arc<Advisor>, std::thread::JoinHandle<()>) {
+    let opts = ServeOptions {
+        addr: "127.0.0.1:0".to_string(),
+        workers: 4,
+        advisor: AdvisorConfig {
+            drift_threshold: 0.5,
+            refit_window: 400.0 * DAY,
+            min_refit_failures: 8,
+            ..Default::default()
+        },
+        auth_token: Some(TOKEN.to_string()),
+        replica_of,
+        ..Default::default()
+    };
+    let store = TraceStore::open(data_dir).expect("open data dir");
+    let server = AdvisorServer::bind_with_store(&opts, Some(store)).expect("bind with store");
+    let addr = server.local_addr().unwrap();
+    let advisor = server.advisor();
+    let handle = std::thread::spawn(move || server.run().expect("serve loop"));
+    (addr, advisor, handle)
+}
+
+/// One-shot HTTP/1.1 client with an optional bearer token.
+fn http(
+    addr: SocketAddr,
+    method: &str,
+    path: &str,
+    body: &str,
+    token: Option<&str>,
+) -> (u16, Json) {
+    let mut stream = TcpStream::connect(addr).expect("connect");
+    stream.set_read_timeout(Some(Duration::from_secs(30))).unwrap();
+    let auth = match token {
+        Some(t) => format!("Authorization: Bearer {t}\r\n"),
+        None => String::new(),
+    };
+    let req = format!(
+        "{method} {path} HTTP/1.1\r\nHost: {addr}\r\nContent-Type: application/json\r\n\
+         Content-Length: {}\r\n{auth}Connection: close\r\n\r\n{body}",
+        body.len()
+    );
+    stream.write_all(req.as_bytes()).expect("send request");
+    let mut text = String::new();
+    stream.read_to_string(&mut text).expect("read response");
+    let code: u16 = text
+        .split_whitespace()
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .unwrap_or_else(|| panic!("malformed status line in {text:?}"));
+    let at = text.find("\r\n\r\n").expect("header/body separator") + 4;
+    let json = Json::parse(&text[at..]).unwrap_or_else(|e| panic!("bad body: {e}\n{text}"));
+    (code, json)
+}
+
+fn select_body(n: usize, mttf_days: f64, app: &str, track: Option<&str>) -> String {
+    let mut s = format!(
+        r#"{{"system": {{"n": {n}, "mttf_days": {mttf_days}, "mttr_min": 40}}, "app": "{app}", "search": {{"refine_steps": 3}}"#
+    );
+    if let Some(t) = track {
+        s.push_str(&format!(r#", "track": "{t}""#));
+    }
+    s.push('}');
+    s
+}
+
+/// The offline oracle for the same spec `select_body` describes.
+fn oracle(n: usize, mttf_days: f64, app: &str, rates: Option<(f64, f64)>) -> SearchResult {
+    let mut system = SystemParams::from_mttf_mttr(n, mttf_days, 40.0);
+    if let Some((l, t)) = rates {
+        system.lambda = l;
+        system.theta = t;
+    }
+    let app = match app {
+        "cg" => AppProfile::cg(n),
+        "md" => AppProfile::md(n),
+        _ => AppProfile::qr(n),
+    };
+    let policy = ReschedulingPolicy::greedy(n);
+    let inputs = ModelInputs::new(system, &app, &policy).unwrap();
+    let cfg = SearchConfig { refine_steps: 3, ..Default::default() };
+    select_interval(&inputs, &ComputeEngine::native(), &cfg).unwrap()
+}
+
+fn f(j: &Json, key: &str) -> f64 {
+    j.get(key)
+        .and_then(Json::as_f64)
+        .unwrap_or_else(|| panic!("missing number '{key}' in {j}"))
+}
+
+/// The replicable files of one track dir, name → bytes. Only segment
+/// names count (a stray `.tmp` is inert and must not fail the compare).
+fn track_files(dir: &Path) -> BTreeMap<String, Vec<u8>> {
+    let mut out = BTreeMap::new();
+    let Ok(entries) = std::fs::read_dir(dir) else { return out };
+    for entry in entries.flatten() {
+        let name = entry.file_name();
+        let Some(name) = name.to_str() else { continue };
+        if replicate::parse_segment_name(name).is_ok() {
+            out.insert(name.to_string(), std::fs::read(entry.path()).expect("read segment"));
+        }
+    }
+    out
+}
+
+/// Poll until the replica's track dir is byte-identical to the primary's.
+fn wait_files_identical(primary: &Path, replica: &Path, what: &str) {
+    let deadline = Instant::now() + Duration::from_secs(60);
+    loop {
+        let (p, r) = (track_files(primary), track_files(replica));
+        if !p.is_empty() && p == r {
+            return;
+        }
+        assert!(
+            Instant::now() < deadline,
+            "{what}: replica never caught up: primary has {:?}, replica has {:?}",
+            p.keys().collect::<Vec<_>>(),
+            r.keys().collect::<Vec<_>>(),
+        );
+        std::thread::sleep(Duration::from_millis(50));
+    }
+}
+
+#[test]
+fn replica_catches_up_bit_identical_and_survives_primary_death() {
+    let primary_dir = tmp_dir("primary");
+    let replica_dir = tmp_dir("replica");
+    let _ = std::fs::remove_dir_all(&primary_dir);
+    let _ = std::fs::remove_dir_all(&replica_dir);
+
+    // --- Primary up, token-gated. ---
+    let (paddr, padvisor, phandle) = boot(&primary_dir, None);
+    let (code, health) = http(paddr, "GET", "/healthz", "", None);
+    assert_eq!(code, 200, "healthz must stay open without a token");
+    assert_eq!(health.get("ok").unwrap().as_bool(), Some(true));
+    let (code, err) = http(paddr, "GET", "/v1/status", "", None);
+    assert_eq!(code, 401, "missing token must be rejected");
+    assert_eq!(err.get("ok").unwrap().as_bool(), Some(false));
+    let (code, _) = http(paddr, "GET", "/v1/status", "", Some("wrong-token"));
+    assert_eq!(code, 401, "wrong token must be rejected");
+    let (code, _) = http(paddr, "GET", "/v1/status", "", Some(TOKEN));
+    assert_eq!(code, 200);
+
+    // --- Tracked select + volatile ingest: drift forces a re-fit and an
+    // async re-selection, all durably recorded on the primary. ---
+    let (code, _) =
+        http(paddr, "POST", "/v1/select", &select_body(6, 8.0, "qr", Some("c1")), Some(TOKEN));
+    assert_eq!(code, 200);
+    let mut rng = Rng::new(77);
+    let trace =
+        generate(&SynthSpec::exponential(6, 1.0 / DAY, 1.0 / 2_400.0, 200.0 * DAY), &mut rng);
+    let mut events = Vec::new();
+    for p in 0..6 {
+        for &(fail, repair) in trace.outages(p) {
+            events.push(format!(r#"{{"proc": {p}, "fail": {fail}, "repair": {repair}}}"#));
+        }
+    }
+    let ingest_body =
+        format!(r#"{{"track": "c1", "n_procs": 6, "events": [{}]}}"#, events.join(","));
+    let (code, ing) = http(paddr, "POST", "/v1/ingest", &ingest_body, Some(TOKEN));
+    assert_eq!(code, 200, "ingest failed: {ing}");
+    let lam_hat = f(&ing, "lambda");
+    let theta_hat = f(&ing, "theta");
+    let deadline = Instant::now() + Duration::from_secs(30);
+    let primary_events = loop {
+        let (_, status) = http(paddr, "GET", "/v1/status", "", Some(TOKEN));
+        let track = status.path("tracks.c1").expect("track in status");
+        if track.path("reselects").and_then(Json::as_f64) == Some(1.0) {
+            break f(track, "events");
+        }
+        assert!(Instant::now() < deadline, "re-selection never landed");
+        std::thread::sleep(Duration::from_millis(50));
+    };
+    // Compact so everything the advisor holds (recommendation included)
+    // is on disk before the replica diffs it.
+    padvisor.persist_all().expect("primary compaction");
+
+    // The manifest route itself answers under the token.
+    let (code, manifest) = http(paddr, "GET", "/v1/replicate/manifest", "", Some(TOKEN));
+    assert_eq!(code, 200, "manifest failed: {manifest}");
+    assert!(manifest.path("tracks.c1").is_some(), "manifest must list the track: {manifest}");
+
+    // --- Replica up, pulling from the primary with the same token. ---
+    let (raddr, _radvisor, rhandle) = boot(&replica_dir, Some(paddr.to_string()));
+    let ptrack = primary_dir.join("tracks").join("c1");
+    let rtrack = replica_dir.join("tracks").join("c1");
+    wait_files_identical(&ptrack, &rtrack, "initial catch-up");
+
+    // The replicated rates surface in replica status, bit-exact (floats
+    // cross both the wire and the WAL as lossless decimals/bits).
+    let deadline = Instant::now() + Duration::from_secs(30);
+    loop {
+        let (code, status) = http(raddr, "GET", "/v1/status", "", Some(TOKEN));
+        assert_eq!(code, 200);
+        if let Some(track) = status.path("tracks.c1") {
+            if track.path("lambda").and_then(Json::as_f64) == Some(lam_hat) {
+                assert_eq!(f(track, "events"), primary_events, "replica event count diverged");
+                break;
+            }
+        }
+        assert!(Instant::now() < deadline, "replica never loaded the track: {status}");
+        std::thread::sleep(Duration::from_millis(50));
+    }
+
+    // Replica is read-only: ingest redirects to the primary with 409.
+    let (code, rej) = http(raddr, "POST", "/v1/ingest", &ingest_body, Some(TOKEN));
+    assert_eq!(code, 409, "replica must reject writes: {rej}");
+    assert_eq!(
+        rej.get("primary").unwrap().as_str(),
+        Some(paddr.to_string().as_str()),
+        "409 must name the primary"
+    );
+    // A replica has no local store to serve manifests from (no chaining).
+    let (code, _) = http(raddr, "GET", "/v1/replicate/manifest", "", Some(TOKEN));
+    assert_eq!(code, 400);
+    // The replica enforces the same token on its own reads.
+    let (code, _) = http(raddr, "GET", "/v1/status", "", None);
+    assert_eq!(code, 401);
+
+    // --- Compaction tolerance: roll the primary's generation out from
+    // under the puller; the replica must re-diff and converge again,
+    // dropping the WAL generations the primary deleted. ---
+    padvisor.persist_all().expect("second primary compaction");
+    wait_files_identical(&ptrack, &rtrack, "post-compaction catch-up");
+
+    // --- Kill the primary; the replica keeps serving reads. ---
+    let (code, _) = http(paddr, "POST", "/v1/shutdown", "", Some(TOKEN));
+    assert_eq!(code, 200);
+    phandle.join().expect("primary thread");
+
+    // Tracked select on the orphaned replica: resolves through the
+    // replicated re-fitted rates and pins bit-identically to the offline
+    // oracle at those rates — the ISSUE's failover contract.
+    let (code, resp) =
+        http(raddr, "POST", "/v1/select", &select_body(6, 8.0, "qr", Some("c1")), Some(TOKEN));
+    assert_eq!(code, 200, "replica select failed: {resp}");
+    assert_eq!(f(&resp, "lambda"), lam_hat, "replica select must use the replicated rates");
+    let want = oracle(6, 8.0, "qr", Some((lam_hat, theta_hat)));
+    assert_eq!(f(&resp, "interval"), want.interval, "replica != offline oracle interval");
+    let rel = (f(&resp, "uwt") - want.uwt).abs() / want.uwt;
+    assert!(rel < 1e-9, "replica UWT off by {rel}");
+    // Batch reads keep working too.
+    let (code, batch) = http(
+        raddr,
+        "POST",
+        "/v1/select_batch",
+        &format!(r#"{{"items": [{}]}}"#, select_body(6, 8.0, "qr", Some("c1"))),
+        Some(TOKEN),
+    );
+    assert_eq!(code, 200, "replica select_batch failed: {batch}");
+    assert_eq!(f(&batch.get("results").unwrap().as_arr().unwrap()[0], "interval"), want.interval);
+
+    let (code, _) = http(raddr, "POST", "/v1/shutdown", "", Some(TOKEN));
+    assert_eq!(code, 200);
+    rhandle.join().expect("replica thread");
+
+    // Both data dirs verify clean.
+    for (name, dir) in [("primary", &primary_dir), ("replica", &replica_dir)] {
+        let (report, ok) = store::verify(dir).expect("verify");
+        assert!(ok, "{name} store failed verify: {report}");
+    }
+
+    // --- Kill-9 recovery: corrupt the replica's newest WAL tail, reboot
+    // it with the primary already dead — it must come back from the clean
+    // prefix and still answer the pinned select. ---
+    {
+        let newest_wal = track_files(&rtrack)
+            .into_keys()
+            .filter(|n| n.starts_with("wal-"))
+            .next_back()
+            .expect("replica has a WAL");
+        let mut file = std::fs::OpenOptions::new()
+            .append(true)
+            .open(rtrack.join(&newest_wal))
+            .expect("open replica WAL");
+        file.write_all(&[0x07, 0x07, 0x07]).expect("append torn tail");
+    }
+    let (raddr, _radvisor, rhandle) = boot(&replica_dir, Some(paddr.to_string()));
+    let (code, resp) =
+        http(raddr, "POST", "/v1/select", &select_body(6, 8.0, "qr", Some("c1")), Some(TOKEN));
+    assert_eq!(code, 200, "rebooted replica select failed: {resp}");
+    assert_eq!(f(&resp, "interval"), want.interval, "rebooted replica != offline oracle");
+    assert_eq!(f(&resp, "lambda"), lam_hat, "rebooted replica lost the replicated rates");
+    let (code, _) = http(raddr, "POST", "/v1/shutdown", "", Some(TOKEN));
+    assert_eq!(code, 200);
+    rhandle.join().expect("rebooted replica thread");
+
+    let _ = std::fs::remove_dir_all(&primary_dir);
+    let _ = std::fs::remove_dir_all(&replica_dir);
+}
+
+// ---------------------------------------------------------------------
+// Fault-injection sweep over the install path.
+// ---------------------------------------------------------------------
+
+fn wal_bytes(recs: &[WalRecord]) -> Vec<u8> {
+    let mut b = wal::WAL_MAGIC.to_vec();
+    for r in recs {
+        b.extend_from_slice(&wal::encode_frame(r));
+    }
+    b
+}
+
+fn records() -> Vec<WalRecord> {
+    vec![
+        WalRecord::Create { n_procs: 2 },
+        WalRecord::Outage { proc: 0, fail: 100.5, repair: 220.25 },
+        WalRecord::Outage { proc: 1, fail: 400.0, repair: 460.125 },
+        WalRecord::Refit { lambda: 1.25e-6, theta: 3.5e-4 },
+    ]
+}
+
+fn prefix_state(k: usize) -> TrackState {
+    let mut state = TrackState::new(2).unwrap();
+    for rec in records().iter().take(k) {
+        state.apply(rec).unwrap();
+    }
+    state
+}
+
+/// Bit-exact comparison of the state fields this scenario exercises.
+fn states_match(a: &TrackState, b: &TrackState) -> bool {
+    if a.n_procs() != b.n_procs() || a.accepted != b.accepted || a.evicted != b.evicted {
+        return false;
+    }
+    match (a.rates, b.rates) {
+        (None, None) => {}
+        (Some(x), Some(y)) => {
+            if x.0.to_bits() != y.0.to_bits() || x.1.to_bits() != y.1.to_bits() {
+                return false;
+            }
+        }
+        _ => return false,
+    }
+    for proc in 0..a.n_procs() {
+        let (x, y) = (a.tail.outages(proc), b.tail.outages(proc));
+        if x.len() != y.len() {
+            return false;
+        }
+        for (u, v) in x.iter().zip(y) {
+            if u.0.to_bits() != v.0.to_bits() || u.1.to_bits() != v.1.to_bits() {
+                return false;
+            }
+        }
+    }
+    true
+}
+
+/// Lay down the replica's previous consistent image: `wal-1.log` holding
+/// only the first two oracle records.
+fn seed_old_image(dir: &Path) {
+    std::fs::create_dir_all(dir).unwrap();
+    std::fs::write(dir.join("wal-1.log"), wal_bytes(&records()[..2])).unwrap();
+}
+
+/// The new primary image the puller installs, in [`replicate`]'s
+/// snapshot-first order: snapshot (gen 1, covers 3 records of wal-1),
+/// the full wal-1, then wal-2 with the remaining record.
+fn new_segments() -> Vec<(&'static str, Vec<u8>)> {
+    let recs = records();
+    vec![
+        ("snapshot.bin", snapshot::encode(1, 3, &prefix_state(3))),
+        ("wal-1.log", wal_bytes(&recs[..3])),
+        ("wal-2.log", wal_bytes(&recs[3..])),
+    ]
+}
+
+/// Install the whole image, aborting at the first error exactly like the
+/// puller aborts a catch-up round.
+fn install_all(io: &FaultIo, dir: &Path) -> anyhow::Result<()> {
+    for (name, bytes) in new_segments() {
+        replicate::install_segment(io, dir, name, &bytes)?;
+    }
+    Ok(())
+}
+
+#[test]
+fn install_faults_never_leave_a_torn_replica() {
+    // Fault-free baseline: how many I/O ops a full catch-up performs.
+    let base = tmp_dir("faults-base");
+    let _ = std::fs::remove_dir_all(&base);
+    seed_old_image(&base);
+    let io = FaultIo::new();
+    install_all(&io, &base).expect("fault-free install");
+    let total_ops = io.ops();
+    assert!(total_ops >= 12, "install too small to sweep: {total_ops} ops");
+    let _ = std::fs::remove_dir_all(&base);
+
+    // The only states a replica may ever replay to: its previous image
+    // (2 records), the snapshot-covered prefix (3 — the snapshot lands
+    // before the WAL that extends past it), or the full new image (4).
+    // The snapshot alone already covers more of wal-1 than the old image
+    // holds; `covered.min(records)` makes that a clean skip-all replay.
+    let oracles = [prefix_state(2), prefix_state(3), prefix_state(4)];
+
+    let flavors: [(std::io::ErrorKind, Option<usize>, &str); 2] = [
+        (std::io::ErrorKind::Other, None, "clean"),
+        (std::io::ErrorKind::WriteZero, Some(3), "torn"),
+    ];
+    for (kind, short_write, flavor) in flavors {
+        for fail_at in 0..total_ops {
+            let dir = tmp_dir(&format!("faults-{flavor}-{fail_at}"));
+            let _ = std::fs::remove_dir_all(&dir);
+            seed_old_image(&dir);
+            let io = FaultIo::new();
+            io.arm(FaultPlan { fail_at, kind, short_write });
+            let outcome = install_all(&io, &dir);
+            io.disarm();
+
+            // A surfaced failure must be typed, never a panic or a bare
+            // string error.
+            if let Err(e) = &outcome {
+                assert!(
+                    e.chain().any(|c| c.downcast_ref::<StoreError>().is_some()),
+                    "{flavor} fault at op {fail_at}: untyped error: {e:#}"
+                );
+            }
+
+            // Whatever happened, the dir replays to a consistent image —
+            // never torn, never silently empty.
+            let (state, torn, problems) =
+                store::replay_readonly(&dir).expect("post-fault replay");
+            assert!(!torn, "{flavor} fault at op {fail_at}: replica holds a torn WAL");
+            assert!(
+                problems.is_empty(),
+                "{flavor} fault at op {fail_at}: replay problems {problems:?}"
+            );
+            let state = state.unwrap_or_else(|| {
+                panic!("{flavor} fault at op {fail_at}: replica store silently empty")
+            });
+            let matched = oracles.iter().any(|o| states_match(&state, o));
+            assert!(matched, "{flavor} fault at op {fail_at}: state matches no oracle");
+
+            // A completed install must be the full new image...
+            if outcome.is_ok() {
+                assert!(
+                    states_match(&state, &oracles[2]),
+                    "{flavor} fault at op {fail_at}: install completed but state is partial"
+                );
+            }
+            // ...and after the fault clears, the retry always lands it.
+            install_all(&io, &dir).unwrap_or_else(|e| {
+                panic!("{flavor} fault at op {fail_at}: disarmed retry failed: {e:#}")
+            });
+            let (state, _, _) = store::replay_readonly(&dir).expect("post-retry replay");
+            assert!(
+                states_match(&state.unwrap(), &oracles[2]),
+                "{flavor} fault at op {fail_at}: retry did not land the new image"
+            );
+            let _ = std::fs::remove_dir_all(&dir);
+        }
+    }
+}

@@ -290,3 +290,123 @@ wait "$SERVE_PID" 2>/dev/null || true
 rm -rf "$DATA_DIR"
 trap - EXIT
 echo "serve smoke (durable restart + select_batch): OK"
+
+# ---------------------------------------------------------------------------
+# Phase 4: replication failover — boot a token-gated primary and a read
+# replica pulling from it, ingest on the primary, wait for catch-up,
+# kill -9 the primary, and pin a tracked select on the orphaned replica
+# against the offline oracle at the replicated re-fitted rates. Both data
+# dirs must pass `store verify` at the end.
+# ---------------------------------------------------------------------------
+PRIMARY_DIR=$(mktemp -d)
+REPLICA_DIR=$(mktemp -d)
+PORT3=$((PORT + 2))
+PORT4=$((PORT + 3))
+ADDR3="127.0.0.1:${PORT3}"
+ADDR4="127.0.0.1:${PORT4}"
+TOKEN="smoke-replication-token"
+AUTH="Authorization: Bearer ${TOKEN}"
+
+"$BIN" serve --addr "$ADDR3" --data-dir "$PRIMARY_DIR" --auth-token "$TOKEN" \
+    --drift 0.5 --window-days 400 &
+PRIMARY_PID=$!
+trap 'kill -9 "$PRIMARY_PID" 2>/dev/null || true; rm -rf "$PRIMARY_DIR" "$REPLICA_DIR"' EXIT
+wait_healthy "$ADDR3"
+
+# The token gate: /healthz stays open, /v1/* without the token is 401.
+code=$(curl -s -o /dev/null -w '%{http_code}' "http://${ADDR3}/v1/status")
+if [ "$code" != "401" ]; then
+    echo "error: tokenless /v1/status returned HTTP $code, want 401" >&2
+    exit 1
+fi
+curl -sf -H "$AUTH" "http://${ADDR3}/v1/status" >/dev/null
+
+curl -sf -H "$AUTH" "http://${ADDR3}/v1/select" -d "$tracked_req" >/dev/null
+curl -sf -H "$AUTH" "http://${ADDR3}/v1/ingest" -d "$ingest_body" >/dev/null
+for _ in $(seq 1 100); do
+    if curl -sf -H "$AUTH" "http://${ADDR3}/v1/status" | python3 -c '
+import json, sys
+s = json.load(sys.stdin)
+raise SystemExit(0 if s["tracks"]["c1"]["reselects"] >= 1 else 1)
+' 2>/dev/null; then
+        break
+    fi
+    sleep 0.2
+done
+primary_status=$(curl -sf -H "$AUTH" "http://${ADDR3}/v1/status")
+primary_lam=$(python3 -c "import json,sys; print(repr(json.loads(sys.argv[1])['tracks']['c1']['lambda']))" "$primary_status")
+
+"$BIN" serve --addr "$ADDR4" --data-dir "$REPLICA_DIR" --replica-of "$ADDR3" \
+    --auth-token "$TOKEN" &
+REPLICA_PID=$!
+trap 'kill -9 "$PRIMARY_PID" "$REPLICA_PID" 2>/dev/null || true; rm -rf "$PRIMARY_DIR" "$REPLICA_DIR"' EXIT
+wait_healthy "$ADDR4"
+
+# Catch-up: the replica's status must show the track at the primary's
+# re-fitted rates, bit-for-bit.
+caught_up=0
+for _ in $(seq 1 150); do
+    if curl -sf -H "$AUTH" "http://${ADDR4}/v1/status" | python3 -c "
+import json, sys
+s = json.load(sys.stdin)
+t = s.get('tracks', {}).get('c1')
+raise SystemExit(0 if t and repr(t['lambda']) == '''$primary_lam''' and t['reselects'] >= 1 else 1)
+" 2>/dev/null; then
+        caught_up=1
+        break
+    fi
+    sleep 0.2
+done
+if [ "$caught_up" != "1" ]; then
+    echo "error: replica never caught up to the primary's rates" >&2
+    curl -s -H "$AUTH" "http://${ADDR4}/v1/status" >&2 || true
+    exit 1
+fi
+echo "replication smoke: replica caught up (lambda ${primary_lam})"
+
+# Writes are rejected on the replica, pointing at the primary.
+code=$(curl -s -o /dev/null -w '%{http_code}' -H "$AUTH" "http://${ADDR4}/v1/ingest" -d "$ingest_body")
+if [ "$code" != "409" ]; then
+    echo "error: replica ingest returned HTTP $code, want 409" >&2
+    exit 1
+fi
+
+# Failover: crash the primary, then pin a tracked select served by the
+# orphaned replica against the offline oracle at the replicated rates.
+kill -9 "$PRIMARY_PID"
+wait "$PRIMARY_PID" 2>/dev/null || true
+
+replica_status=$(curl -sf -H "$AUTH" "http://${ADDR4}/v1/status")
+replica_select=$(curl -sf -H "$AUTH" "http://${ADDR4}/v1/select" -d "$tracked_req")
+lam=$(python3 -c "import json,sys; print(repr(json.loads(sys.argv[1])['tracks']['c1']['lambda']))" "$replica_status")
+theta=$(python3 -c "import json,sys; print(repr(json.loads(sys.argv[1])['tracks']['c1']['theta']))" "$replica_status")
+mttf_days=$(roundtrip_inverse "$lam" 86400.0)
+mttr_min=$(roundtrip_inverse "$theta" 60.0)
+replica_oracle=$("$BIN" select --system system-1/128 --procs 6 --mttf-days "$mttf_days" --mttr-min "$mttr_min" --json)
+
+python3 - "$replica_select" "$replica_oracle" "$primary_lam" <<'EOF'
+import json
+import sys
+
+select, oracle = json.loads(sys.argv[1]), json.loads(sys.argv[2])
+primary_lam = sys.argv[3]
+
+assert select["ok"], f"replica select failed after primary death: {select}"
+assert repr(select["lambda"]) == primary_lam, (
+    f"replica select lambda {select['lambda']!r} != primary's {primary_lam}"
+)
+assert select["interval"] == oracle["interval"], (
+    f"replica interval {select['interval']!r} != offline oracle {oracle['interval']!r}"
+)
+rel = abs(select["uwt"] - oracle["uwt"]) / oracle["uwt"]
+assert rel < 1e-9, f"replica UWT off by {rel}"
+print("replication smoke: orphaned replica select == offline oracle at replicated rates")
+EOF
+
+curl -sf -H "$AUTH" "http://${ADDR4}/v1/shutdown" -d '{}' >/dev/null
+wait "$REPLICA_PID" 2>/dev/null || true
+"$BIN" store verify --data-dir "$PRIMARY_DIR"
+"$BIN" store verify --data-dir "$REPLICA_DIR"
+rm -rf "$PRIMARY_DIR" "$REPLICA_DIR"
+trap - EXIT
+echo "serve smoke (replication failover): OK"
