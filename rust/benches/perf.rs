@@ -28,7 +28,7 @@
 //! `select_interval` probe, cold vs cached-exact vs probe engine.
 
 use malleable_ckpt::advisor::server::{AdvisorServer, ServeOptions};
-use malleable_ckpt::advisor::AdvisorConfig;
+use malleable_ckpt::advisor::{protocol, Advisor, AdvisorConfig};
 use malleable_ckpt::api::{SelectBatch, SelectSpec};
 use malleable_ckpt::apps::AppProfile;
 use malleable_ckpt::config::{paper_system, SystemParams};
@@ -36,6 +36,7 @@ use malleable_ckpt::experiments::common::{run_segments, run_segments_reference};
 use malleable_ckpt::experiments::ExperimentOptions;
 use malleable_ckpt::markov::birth_death::bd_generator;
 use malleable_ckpt::markov::{BuildOptions, MalleableModel, ModelBuilder, ModelInputs};
+use malleable_ckpt::obs;
 use malleable_ckpt::policies::ReschedulingPolicy;
 use malleable_ckpt::runtime::{native_chain_probs, native_chain_probs_fast, ComputeEngine};
 use malleable_ckpt::search::{select_interval, select_interval_uncached, SearchConfig};
@@ -425,6 +426,7 @@ fn main() {
             workers: pool::default_workers().clamp(2, 8),
             queue_depth: 128,
             advisor: AdvisorConfig::default(),
+            ..Default::default()
         };
         let workers = opts.workers;
         let server = AdvisorServer::bind(&opts).unwrap();
@@ -512,6 +514,7 @@ fn main() {
             workers: 1,
             queue_depth: 1,
             advisor: AdvisorConfig::default(),
+            ..Default::default()
         })
         .unwrap();
         let tiny_addr = tiny.local_addr().unwrap();
@@ -560,6 +563,45 @@ fn main() {
             .set("shed_probes", Json::from(shed_probes as f64))
             .set("shed_503", Json::from(shed_503 as f64));
         report.set("serve_load", o);
+    }
+
+    // --- obs_overhead: instrumentation cost on the hot path -------------
+    // The acceptance gate for the observability layer (DESIGN.md §14):
+    // cached `Advisor::select` throughput with the registry fully armed vs
+    // `--no-obs` (timers disarmed). The checker requires the overhead to
+    // stay under 5%; `speedup` here is instrumented/no-obs, ~1.0x.
+    header("obs_overhead: cached selects, instrumented vs --no-obs");
+    {
+        let advisor = Advisor::new(AdvisorConfig::default());
+        let body = r#"{"system": {"n": 32, "mttf_days": 4, "mttr_min": 40}, "app": "qr", "search": {"refine_steps": 2}}"#;
+        let req = protocol::parse_select(&Json::parse(body).unwrap()).unwrap();
+        advisor.select(&req).unwrap(); // warm: the timed loops are pure cache hits
+        let iters = if smoke { 20_000usize } else { 100_000 };
+        obs::set_enabled(true);
+        let instrumented = bench(&format!("{iters} cached selects (obs on)"), 1, 5, 10.0, || {
+            for _ in 0..iters {
+                std::hint::black_box(advisor.select(&req).unwrap());
+            }
+        });
+        obs::set_enabled(false);
+        let no_obs = bench(&format!("{iters} cached selects (--no-obs)"), 1, 5, 10.0, || {
+            for _ in 0..iters {
+                std::hint::black_box(advisor.select(&req).unwrap());
+            }
+        });
+        obs::set_enabled(true);
+        let overhead_pct = (instrumented.min_s / no_obs.min_s.max(1e-12) - 1.0) * 100.0;
+        println!(
+            "    => obs overhead: {overhead_pct:+.2}% ({:.0} ns/select instrumented, {:.0} ns/select bare)",
+            instrumented.min_s / iters as f64 * 1e9,
+            no_obs.min_s / iters as f64 * 1e9,
+        );
+        let mut o = speedup_obj("obs overhead (instrumented vs no-obs)", &instrumented, &no_obs);
+        o.set("iters", Json::from(iters as f64))
+            .set("instrumented_s", Json::from(instrumented.min_s))
+            .set("no_obs_s", Json::from(no_obs.min_s))
+            .set("overhead_pct", Json::from(overhead_pct));
+        report.set("obs_overhead", o);
     }
 
     let path = "BENCH_perf.json";

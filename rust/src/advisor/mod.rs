@@ -76,14 +76,14 @@ pub mod server;
 
 use std::collections::hash_map::Entry;
 use std::collections::{HashMap, VecDeque};
-use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::{Arc, Condvar, Mutex};
+use std::sync::{Arc, Condvar, Mutex, OnceLock};
 use std::time::{Duration, Instant};
 
 use anyhow::{Context, Result};
 
 use crate::api::{self, SelectSpec};
 use crate::markov::{BuildOptions, ModelInputs, SharedBuilder};
+use crate::obs::{self, log as olog};
 use crate::runtime::ComputeEngine;
 use crate::search::{select_interval_shared, SearchConfig};
 use crate::store::{SpecRecord, TraceStore, TrackState};
@@ -156,13 +156,17 @@ pub struct Advisor {
     bg: Mutex<VecDeque<BgJob>>,
     bg_cv: Condvar,
     started: Instant,
-    selects: AtomicU64,
-    select_batches: AtomicU64,
-    ingests: AtomicU64,
-    models: AtomicU64,
-    bg_completed: AtomicU64,
-    bg_errors: AtomicU64,
-    compactions: AtomicU64,
+    /// Request/background counters are [`obs::Counter`]s owned by the
+    /// instance (so `/v1/status` stays exact per advisor — tests build
+    /// many advisors in one process) and mirrored into the process-global
+    /// registry by [`Advisor::publish_obs`] via `set_max`.
+    selects: obs::Counter,
+    select_batches: obs::Counter,
+    ingests: obs::Counter,
+    models: obs::Counter,
+    bg_completed: obs::Counter,
+    bg_errors: obs::Counter,
+    compactions: obs::Counter,
     /// Rate limiter for the background compaction sweep.
     last_compact_check: Mutex<Instant>,
 }
@@ -184,13 +188,13 @@ impl Advisor {
             bg: Mutex::new(VecDeque::new()),
             bg_cv: Condvar::new(),
             started: Instant::now(),
-            selects: AtomicU64::new(0),
-            select_batches: AtomicU64::new(0),
-            ingests: AtomicU64::new(0),
-            models: AtomicU64::new(0),
-            bg_completed: AtomicU64::new(0),
-            bg_errors: AtomicU64::new(0),
-            compactions: AtomicU64::new(0),
+            selects: obs::Counter::default(),
+            select_batches: obs::Counter::default(),
+            ingests: obs::Counter::default(),
+            models: obs::Counter::default(),
+            bg_completed: obs::Counter::default(),
+            bg_errors: obs::Counter::default(),
+            compactions: obs::Counter::default(),
             last_compact_check: Mutex::new(Instant::now()),
         };
         if let Some(st) = &advisor.store {
@@ -336,7 +340,16 @@ impl Advisor {
     /// the batch facade (a one-spec [`api::SelectBatch`]) and caches the
     /// returned builder alongside the result.
     pub fn select(&self, req: &SelectRequest) -> Result<Json> {
-        self.selects.fetch_add(1, Ordering::Relaxed);
+        self.selects.inc();
+        // The only instrumentation on the cached hot path: with
+        // `serve --no-obs` the timer is disarmed and reads no clock.
+        let timer = obs::timer();
+        let out = self.select_impl(req);
+        timer.observe(&advisor_obs().select_seconds);
+        out
+    }
+
+    fn select_impl(&self, req: &SelectRequest) -> Result<Json> {
         let (inputs, key, fresh_key) = self.resolve(req)?;
         if let Some(entry) = self.cache.get(key) {
             // Register with the rates the served entry was computed with:
@@ -373,8 +386,8 @@ impl Advisor {
     /// Per-item failures become per-item error objects carrying the item
     /// index; one bad item never poisons the batch.
     pub fn select_batch(&self, reqs: &[SelectRequest]) -> Json {
-        self.select_batches.fetch_add(1, Ordering::Relaxed);
-        self.selects.fetch_add(reqs.len() as u64, Ordering::Relaxed);
+        self.select_batches.inc();
+        self.selects.add(reqs.len() as u64);
         let mut items: Vec<Option<Json>> = (0..reqs.len()).map(|_| None).collect();
         // (item index, resolved inputs, fresh key) of each cache miss.
         let mut misses: Vec<(usize, ModelInputs, u64)> = Vec::new();
@@ -441,9 +454,17 @@ impl Advisor {
                         restored.store = Some(ts);
                         track = restored;
                     }
-                    Err(e) => eprintln!("[advisor] track '{tid}' not restorable: {e:#}"),
+                    Err(e) => {
+                        let err = Json::from(format!("{e:#}"));
+                        let fields = [("track", Json::from(tid)), ("error", err)];
+                        olog::error("advisor", "track not restorable", &fields);
+                    }
                 },
-                Err(e) => eprintln!("[advisor] track '{tid}' not persisted: {e:#}"),
+                Err(e) => {
+                    let err = Json::from(format!("{e:#}"));
+                    let fields = [("track", Json::from(tid)), ("error", err)];
+                    olog::error("advisor", "track not persisted", &fields);
+                }
             }
         }
         let fresh = Arc::new(Mutex::new(track));
@@ -511,7 +532,9 @@ impl Advisor {
                 cfg: *cfg,
             };
             if let Err(e) = track.record_spec(rec) {
-                eprintln!("[advisor] recommendation for '{tid}' not persisted: {e:#}");
+                let err = Json::from(format!("{e:#}"));
+                let fields = [("track", Json::from(tid)), ("error", err)];
+                olog::error("advisor", "recommendation not persisted", &fields);
             }
         }
     }
@@ -521,7 +544,7 @@ impl Advisor {
     /// rates drifted beyond the threshold. Only this track's lock is
     /// held across the splice — other tracks stay fully concurrent.
     pub fn ingest(&self, req: &IngestRequest) -> Result<Json> {
-        self.ingests.fetch_add(1, Ordering::Relaxed);
+        self.ingests.inc();
         let handle = match self.track_handle(&req.track) {
             Some(h) => h,
             None => {
@@ -593,7 +616,7 @@ impl Advisor {
 
     /// One `model` probe (diagnostics; not cached).
     pub fn model(&self, req: &ModelRequest) -> Result<Json> {
-        self.models.fetch_add(1, Ordering::Relaxed);
+        self.models.inc();
         let inputs = ModelInputs::new(req.system, &req.app, &req.policy)?;
         let builder = SharedBuilder::native(inputs, &BuildOptions::default());
         let probe = builder.probe(req.interval)?;
@@ -620,10 +643,13 @@ impl Advisor {
         };
         match self.reselect(&job) {
             Ok(()) => {
-                self.bg_completed.fetch_add(1, Ordering::Relaxed);
+                self.bg_completed.inc();
             }
-            Err(_) => {
-                self.bg_errors.fetch_add(1, Ordering::Relaxed);
+            Err(e) => {
+                self.bg_errors.inc();
+                let err = Json::from(format!("{e:#}"));
+                let fields = [("track", Json::from(job.track.as_str())), ("error", err)];
+                olog::warn("advisor", "background re-select failed", &fields);
                 // Unblock the spec AND restore its drift reference: the
                 // enqueue advanced rates_used to the re-fitted rates, so
                 // without the rollback the next ingest would measure
@@ -687,10 +713,9 @@ impl Advisor {
             }
             for rec in refreshed {
                 if let Err(e) = track.record_spec(rec) {
-                    eprintln!(
-                        "[advisor] refreshed recommendation for '{}' not persisted: {e:#}",
-                        job.track
-                    );
+                    let err = Json::from(format!("{e:#}"));
+                    let fields = [("track", Json::from(job.track.as_str())), ("error", err)];
+                    olog::error("advisor", "refreshed recommendation not persisted", &fields);
                 }
             }
         }
@@ -715,7 +740,7 @@ impl Advisor {
                 let state = state_of_track(&track);
                 track.store.as_mut().unwrap().compact(&state)?;
                 compacted += 1;
-                self.compactions.fetch_add(1, Ordering::Relaxed);
+                self.compactions.inc();
             }
         }
         Ok(compacted)
@@ -747,9 +772,13 @@ impl Advisor {
                 let state = state_of_track(&track);
                 match track.store.as_mut().unwrap().compact(&state) {
                     Ok(()) => {
-                        self.compactions.fetch_add(1, Ordering::Relaxed);
+                        self.compactions.inc();
                     }
-                    Err(e) => eprintln!("[advisor] compacting '{id}' failed: {e:#}"),
+                    Err(e) => {
+                        let err = Json::from(format!("{e:#}"));
+                        let fields = [("track", Json::from(id.as_str())), ("error", err)];
+                        olog::error("advisor", "compaction failed", &fields);
+                    }
                 }
             }
         }
@@ -783,16 +812,16 @@ impl Advisor {
 
         let mut requests = Json::obj();
         requests
-            .set("select", Json::from(self.selects.load(Ordering::Relaxed)))
-            .set("select_batch", Json::from(self.select_batches.load(Ordering::Relaxed)))
-            .set("ingest", Json::from(self.ingests.load(Ordering::Relaxed)))
-            .set("model", Json::from(self.models.load(Ordering::Relaxed)));
+            .set("select", Json::from(self.selects.get()))
+            .set("select_batch", Json::from(self.select_batches.get()))
+            .set("ingest", Json::from(self.ingests.get()))
+            .set("model", Json::from(self.models.get()));
 
         let mut background = Json::obj();
         background
             .set("pending", Json::from(self.bg_pending()))
-            .set("completed", Json::from(self.bg_completed.load(Ordering::Relaxed)))
-            .set("errors", Json::from(self.bg_errors.load(Ordering::Relaxed)));
+            .set("completed", Json::from(self.bg_completed.get()))
+            .set("errors", Json::from(self.bg_errors.get()));
 
         // Snapshot the handles under the map lock, then visit each track
         // under its own lock.
@@ -844,7 +873,7 @@ impl Advisor {
             store_json
                 .set("dir", Json::from(st.root().display().to_string().as_str()))
                 .set("compact_wal_bytes", Json::from(st.compact_wal_bytes()))
-                .set("compactions", Json::from(self.compactions.load(Ordering::Relaxed)));
+                .set("compactions", Json::from(self.compactions.get()));
         }
 
         let mut o = Json::obj();
@@ -860,6 +889,138 @@ impl Advisor {
             .set("tracks", tracks_json);
         o
     }
+
+    /// Refresh the process-global registry from this advisor's state —
+    /// called by the server right before rendering `/metrics`. Touching
+    /// every layer's handle struct here also guarantees the very first
+    /// scrape already lists the server, cache, store, replication and
+    /// search families. Counters mirror via `set_max` (monotone even if
+    /// several advisors share the process); gauges are last-write-wins.
+    pub fn publish_obs(&self) {
+        let o = advisor_obs();
+        server::http_obs();
+        crate::store::store_obs();
+        replicate::replication_obs();
+        crate::search::search_obs();
+
+        o.req_select.set_max(self.selects.get());
+        o.req_select_batch.set_max(self.select_batches.get());
+        o.req_ingest.set_max(self.ingests.get());
+        o.req_model.set_max(self.models.get());
+        o.bg_completed.set_max(self.bg_completed.get());
+        o.bg_errors.set_max(self.bg_errors.get());
+        o.compactions.set_max(self.compactions.get());
+        o.bg_pending.set(self.bg_pending() as f64);
+
+        let cs = self.cache.stats();
+        o.cache_hits.set_max(cs.hits);
+        o.cache_misses.set_max(cs.misses);
+        o.cache_insertions.set_max(cs.insertions);
+        o.cache_evictions.set_max(cs.evictions);
+        o.cache_entries.set(cs.entries as f64);
+        o.cache_bytes.set(cs.bytes as f64);
+        o.cache_budget_bytes.set(cs.budget_bytes as f64);
+
+        let handles: Vec<(String, TrackHandle)> = {
+            let map = self.tracks.lock().unwrap();
+            map.iter().map(|(k, h)| (k.clone(), Arc::clone(h))).collect()
+        };
+        let reg = obs::global();
+        for (id, handle) in handles {
+            let track = handle.lock().unwrap();
+            let labels = [("track", id.as_str())];
+            let events =
+                reg.gauge_with("mckpt_track_events", "Events in the track's tail.", &labels);
+            events.set(track.tail.n_events() as f64);
+            if let Some((l, t)) = track.rates {
+                reg.gauge_with("mckpt_track_lambda", "Fitted failure rate (1/s).", &labels)
+                    .set(l);
+                reg.gauge_with("mckpt_track_theta", "Fitted repair rate (1/s).", &labels)
+                    .set(t);
+            }
+            // Worst relative drift of any served recommendation against
+            // the current re-fit — the distance to the next re-select.
+            let drift = track
+                .rates
+                .map(|fresh| {
+                    track
+                        .specs
+                        .iter()
+                        .filter(|s| !s.pending)
+                        .map(|s| relative_drift(s.rates_used, fresh))
+                        .fold(0.0, f64::max)
+                })
+                .unwrap_or(0.0);
+            reg.gauge_with(
+                "mckpt_track_drift",
+                "Max relative rate drift of a served recommendation.",
+                &labels,
+            )
+            .set(drift);
+            if let Some(store) = &track.store {
+                reg.gauge_with("mckpt_track_wal_bytes", "Track WAL size, bytes.", &labels)
+                    .set(store.wal_bytes() as f64);
+            }
+        }
+    }
+}
+
+/// Registry handles for the advisor layer, resolved once.
+struct AdvisorObs {
+    req_select: Arc<obs::Counter>,
+    req_select_batch: Arc<obs::Counter>,
+    req_ingest: Arc<obs::Counter>,
+    req_model: Arc<obs::Counter>,
+    bg_completed: Arc<obs::Counter>,
+    bg_errors: Arc<obs::Counter>,
+    compactions: Arc<obs::Counter>,
+    bg_pending: Arc<obs::Gauge>,
+    cache_hits: Arc<obs::Counter>,
+    cache_misses: Arc<obs::Counter>,
+    cache_insertions: Arc<obs::Counter>,
+    cache_evictions: Arc<obs::Counter>,
+    cache_entries: Arc<obs::Gauge>,
+    cache_bytes: Arc<obs::Gauge>,
+    cache_budget_bytes: Arc<obs::Gauge>,
+    select_seconds: Arc<obs::Histogram>,
+}
+
+fn advisor_obs() -> &'static AdvisorObs {
+    static OBS: OnceLock<AdvisorObs> = OnceLock::new();
+    OBS.get_or_init(|| {
+        let r = obs::global();
+        let req = "Requests handled, by advisor endpoint.";
+        let bg = "Background re-selections, by outcome.";
+        AdvisorObs {
+            req_select: r.counter_with("mckpt_requests_total", req, &[("endpoint", "select")]),
+            req_select_batch: r.counter_with(
+                "mckpt_requests_total",
+                req,
+                &[("endpoint", "select_batch")],
+            ),
+            req_ingest: r.counter_with("mckpt_requests_total", req, &[("endpoint", "ingest")]),
+            req_model: r.counter_with("mckpt_requests_total", req, &[("endpoint", "model")]),
+            bg_completed: r.counter_with("mckpt_bg_jobs_total", bg, &[("outcome", "completed")]),
+            bg_errors: r.counter_with("mckpt_bg_jobs_total", bg, &[("outcome", "error")]),
+            compactions: r.counter("mckpt_compactions_total", "Track WAL compactions."),
+            bg_pending: r.gauge("mckpt_bg_pending", "Queued background re-selections."),
+            cache_hits: r.counter("mckpt_cache_hits_total", "Recommendation cache hits."),
+            cache_misses: r.counter("mckpt_cache_misses_total", "Recommendation cache misses."),
+            cache_insertions: r
+                .counter("mckpt_cache_insertions_total", "Recommendation cache insertions."),
+            cache_evictions: r
+                .counter("mckpt_cache_evictions_total", "Recommendation cache evictions."),
+            cache_entries: r.gauge("mckpt_cache_entries", "Live recommendation cache entries."),
+            cache_bytes: r.gauge("mckpt_cache_bytes", "Recommendation cache footprint, bytes."),
+            cache_budget_bytes: r
+                .gauge("mckpt_cache_budget_bytes", "Recommendation cache budget, bytes."),
+            select_seconds: r.histogram(
+                "mckpt_advisor_select_seconds",
+                "Advisor select latency (cache hits and misses).",
+                obs::LATENCY_BUCKETS,
+            ),
+        }
+    })
 }
 
 /// Bytes a cache entry charges against the budget: the builder's
@@ -1160,7 +1321,7 @@ mod tests {
             bg.front_mut().unwrap().cfg.i_min = -1.0; // fails validation
         }
         assert!(advisor.run_bg_once());
-        assert_eq!(advisor.bg_errors.load(Ordering::Relaxed), 1);
+        assert_eq!(advisor.bg_errors.get(), 1);
         // The spec is unblocked and its drift reference restored...
         {
             let handle = advisor.track_handle("c1").unwrap();
@@ -1187,7 +1348,7 @@ mod tests {
         let resp = advisor.ingest(&more).unwrap();
         assert_eq!(resp.get("reselects_enqueued").unwrap().as_f64(), Some(1.0));
         assert!(advisor.run_bg_once());
-        assert_eq!(advisor.bg_completed.load(Ordering::Relaxed), 1);
+        assert_eq!(advisor.bg_completed.get(), 1);
     }
 
     #[test]

@@ -35,16 +35,52 @@ use std::io::{Read, Write};
 use std::net::TcpStream;
 use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, OnceLock};
 use std::time::{Duration, Instant};
 
 use anyhow::{bail, ensure, Context, Result};
 
 use super::Advisor;
+use crate::obs::{self, log as olog};
 use crate::store::io::{RealIo, StoreError, StoreIo};
 use crate::store::{self, encode_track_id, snapshot, wal, TraceStore};
 use crate::util::fnv::fnv1a_64;
 use crate::util::json::Json;
 use crate::util::rng::Rng;
+
+/// Registry handles for the replication layer, resolved once
+/// (DESIGN.md §14). The per-track lag gauge lives in [`sync_track`]:
+/// manifest clean-prefix bytes minus local bytes before the pull, 0 after
+/// a successful track sync — the replica e2e pins its convergence.
+pub(crate) struct ReplicationObs {
+    pub(crate) rounds: Arc<obs::Counter>,
+    pub(crate) round_aborts: Arc<obs::Counter>,
+    pub(crate) backoff_failures: Arc<obs::Gauge>,
+    pub(crate) bytes_pulled: Arc<obs::Counter>,
+}
+
+pub(crate) fn replication_obs() -> &'static ReplicationObs {
+    static OBS: OnceLock<ReplicationObs> = OnceLock::new();
+    OBS.get_or_init(|| {
+        let r = obs::global();
+        ReplicationObs {
+            rounds: r
+                .counter("mckpt_replication_rounds_total", "Completed replica catch-up rounds."),
+            round_aborts: r.counter(
+                "mckpt_replication_round_aborts_total",
+                "Replica catch-up rounds aborted by an error.",
+            ),
+            backoff_failures: r.gauge(
+                "mckpt_replication_backoff_failures",
+                "Consecutive failed rounds driving the current backoff (0 = healthy).",
+            ),
+            bytes_pulled: r.counter(
+                "mckpt_replication_bytes_pulled_total",
+                "Segment bytes fetched from the primary.",
+            ),
+        }
+    })
+}
 
 /// Chunk size for manifest checksums. Small enough that a replica resumes
 /// an interrupted segment fetch near where it stopped, large enough that
@@ -642,6 +678,7 @@ fn sync_segment(
         );
         let want = (seg.valid_len - candidate.len() as u64) as usize;
         let take = part.data.len().min(want);
+        replication_obs().bytes_pulled.add(take as u64);
         candidate.extend_from_slice(&part.data[..take]);
     }
     ensure!(
@@ -662,6 +699,22 @@ fn sync_track(
 ) -> Result<bool> {
     let dir = root.join("tracks").join(&track.encoded);
     let mut changed = false;
+    // Lag before this pull: manifest clean-prefix bytes not yet on disk
+    // locally. Converges to 0 once every segment below is installed.
+    let lag: u64 = track
+        .segments
+        .iter()
+        .map(|s| {
+            let local = std::fs::metadata(dir.join(&s.name)).map(|m| m.len()).unwrap_or(0);
+            s.valid_len.saturating_sub(local)
+        })
+        .sum();
+    let lag_gauge = obs::global().gauge_with(
+        "mckpt_replication_lag_bytes",
+        "Manifest bytes not yet replicated locally, per track.",
+        &[("track", track.id.as_str())],
+    );
+    lag_gauge.set(lag as f64);
     // Snapshot first: once it lands, every WAL generation below it is
     // replay-covered, so any intermediate crash state is a consistent
     // prefix of the primary's history.
@@ -698,6 +751,7 @@ fn sync_track(
             }
         }
     }
+    lag_gauge.set(0.0);
     Ok(changed)
 }
 
@@ -727,7 +781,8 @@ pub fn reload_track(advisor: &Advisor, root: &Path, id: &str) -> Result<()> {
     let dir = root.join("tracks").join(encode_track_id(id));
     let (state, _torn, problems) = store::replay_readonly(&dir)?;
     for p in &problems {
-        eprintln!("[replica] track '{id}': {p}");
+        let fields = [("track", Json::from(id)), ("problem", Json::from(p.as_str()))];
+        olog::warn("replica", "replay problem in replicated track", &fields);
     }
     let state = state
         .with_context(|| format!("no recoverable state in {}", dir.display()))?;
@@ -743,7 +798,11 @@ pub fn load_local_tracks(advisor: &Advisor, root: &Path) -> Result<usize> {
     for id in store.track_ids()? {
         match reload_track(advisor, root, &id) {
             Ok(()) => loaded += 1,
-            Err(e) => eprintln!("[replica] boot load of track '{id}' failed: {e:#}"),
+            Err(e) => {
+                let err = Json::from(format!("{e:#}"));
+                let fields = [("track", Json::from(id.as_str())), ("error", err)];
+                olog::error("replica", "boot load of replicated track failed", &fields);
+            }
         }
     }
     Ok(loaded)
@@ -781,10 +840,15 @@ pub fn run_puller(advisor: &Advisor, client: &ReplicaClient, root: &Path, stop: 
         match sync_once(client, &io, root) {
             Ok(tracks) => {
                 failures = 0;
+                let o = replication_obs();
+                o.rounds.inc();
+                o.backoff_failures.set(0.0);
                 for (id, changed) in tracks {
                     if changed || !advisor.has_track(&id) {
                         if let Err(e) = reload_track(advisor, root, &id) {
-                            eprintln!("[replica] reload of track '{id}' failed: {e:#}");
+                            let err = Json::from(format!("{e:#}"));
+                            let fields = [("track", Json::from(id.as_str())), ("error", err)];
+                            olog::error("replica", "reload of replicated track failed", &fields);
                         }
                     }
                 }
@@ -792,11 +856,17 @@ pub fn run_puller(advisor: &Advisor, client: &ReplicaClient, root: &Path, stop: 
             }
             Err(e) => {
                 failures = failures.saturating_add(1);
+                let o = replication_obs();
+                o.round_aborts.inc();
+                o.backoff_failures.set(failures as f64);
                 let delay = backoff_delay(failures, &mut rng);
-                eprintln!(
-                    "[replica] catch-up from {} failed (attempt {failures}): {e:#}; retrying in {delay:?}",
-                    client.primary
-                );
+                let fields = [
+                    ("primary", Json::from(client.primary.as_str())),
+                    ("attempt", Json::from(failures as f64)),
+                    ("retry_in_s", Json::from(delay.as_secs_f64())),
+                    ("error", Json::from(format!("{e:#}"))),
+                ];
+                olog::warn("replica", "catch-up round failed", &fields);
                 sleep_interruptible(stop, delay);
             }
         }

@@ -67,12 +67,13 @@
 use std::io::{Read, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
-use std::sync::{Arc, Condvar, Mutex};
+use std::sync::{Arc, Condvar, Mutex, OnceLock};
 use std::time::{Duration, Instant};
 
 use anyhow::{Context, Result};
 
 use super::{protocol, replicate, Advisor, AdvisorConfig};
+use crate::obs::{self, log as olog};
 use crate::store::TraceStore;
 use crate::util::json::Json;
 
@@ -138,6 +139,12 @@ pub(crate) struct HttpRequest {
     pub(crate) keep_alive: bool,
     /// Raw `Authorization` header value, if the client sent one.
     pub(crate) authorization: Option<String>,
+    /// Monotonic per-process request id ([`obs::next_request_id`]),
+    /// assigned when the handler picks the frame up (0 = unassigned, e.g.
+    /// inside the parser-level fuzz target). Echoed as `X-Request-Id` and
+    /// carried through routing so one slow select can be traced from
+    /// accept to response in the structured logs.
+    pub(crate) id: u64,
 }
 
 /// Per-daemon routing configuration threaded into [`route`]: the auth
@@ -235,7 +242,7 @@ pub(crate) fn try_parse_request(
         Ok(b) => b.to_string(),
         Err(_) => return Err((400, "non-UTF-8 request body".to_string())),
     };
-    Ok(Some((HttpRequest { method, path, body, keep_alive, authorization }, frame_end)))
+    Ok(Some((HttpRequest { method, path, body, keep_alive, authorization, id: 0 }, frame_end)))
 }
 
 /// Read one request from `stream`, carrying leftover bytes across calls
@@ -285,6 +292,126 @@ fn find_head_end(buf: &[u8]) -> Option<usize> {
     buf.windows(4).position(|w| w == b"\r\n\r\n")
 }
 
+/// Every route the daemon serves, in the label form the metric families
+/// use. Unknown paths fall into the `other` series so a path scan cannot
+/// grow the exposition (DESIGN.md §14 cardinality rules).
+const ROUTES: &[&str] = &[
+    "/healthz",
+    "/metrics",
+    "/v1/status",
+    "/v1/select",
+    "/v1/select_batch",
+    "/v1/model",
+    "/v1/ingest",
+    "/v1/shutdown",
+    "/v1/replicate/manifest",
+    "/v1/replicate/segment",
+];
+
+/// Every status code routing can produce (`status_lines_cover_every_
+/// emitted_code` pins `status_text` over the same list).
+const EMITTED_CODES: &[u16] = &[200, 400, 401, 404, 405, 408, 409, 411, 413, 500, 503];
+
+/// Resolved-once handles for the server's metric families; every request
+/// after the first costs only relaxed atomic ops.
+pub(crate) struct HttpObs {
+    requests: Vec<Arc<obs::Counter>>,
+    latency: Vec<Arc<obs::Histogram>>,
+    other_requests: Arc<obs::Counter>,
+    other_latency: Arc<obs::Histogram>,
+    responses: Vec<Arc<obs::Counter>>,
+    other_responses: Arc<obs::Counter>,
+    in_flight: Arc<obs::Gauge>,
+    queue_depth: Arc<obs::Gauge>,
+    shed_total: Arc<obs::Counter>,
+}
+
+impl HttpObs {
+    fn new() -> HttpObs {
+        let reg = obs::global();
+        const REQ_HELP: &str = "HTTP requests accepted, by route.";
+        const LAT_HELP: &str = "Request latency from parse to response flush, by route.";
+        const RESP_HELP: &str = "HTTP responses written, by status code.";
+        let requests = ROUTES
+            .iter()
+            .map(|r| reg.counter_with("mckpt_http_requests_total", REQ_HELP, &[("route", r)]))
+            .collect();
+        let latency = ROUTES
+            .iter()
+            .map(|r| {
+                reg.histogram_with(
+                    "mckpt_http_request_seconds",
+                    LAT_HELP,
+                    obs::LATENCY_BUCKETS,
+                    &[("route", r)],
+                )
+            })
+            .collect();
+        let responses = EMITTED_CODES
+            .iter()
+            .map(|c| {
+                let code = c.to_string();
+                reg.counter_with("mckpt_http_responses_total", RESP_HELP, &[("code", &code)])
+            })
+            .collect();
+        HttpObs {
+            requests,
+            latency,
+            other_requests: reg.counter_with(
+                "mckpt_http_requests_total",
+                REQ_HELP,
+                &[("route", "other")],
+            ),
+            other_latency: reg.histogram_with(
+                "mckpt_http_request_seconds",
+                LAT_HELP,
+                obs::LATENCY_BUCKETS,
+                &[("route", "other")],
+            ),
+            responses,
+            other_responses: reg.counter_with(
+                "mckpt_http_responses_total",
+                RESP_HELP,
+                &[("code", "other")],
+            ),
+            in_flight: reg.gauge("mckpt_http_in_flight", "Requests currently being handled."),
+            queue_depth: reg
+                .gauge("mckpt_http_queue_depth", "Accepted connections waiting for a worker."),
+            shed_total: reg.counter(
+                "mckpt_http_shed_total",
+                "Connections shed with 503 (queue full or draining).",
+            ),
+        }
+    }
+
+    /// Request counter + latency histogram for a path (query stripped by
+    /// the caller); unknown paths share the `other` series.
+    fn route_handles(&self, path: &str) -> (&obs::Counter, &obs::Histogram) {
+        match ROUTES.iter().position(|r| *r == path) {
+            Some(i) => (&self.requests[i], &self.latency[i]),
+            None => (&self.other_requests, &self.other_latency),
+        }
+    }
+
+    fn response(&self, code: u16) {
+        match EMITTED_CODES.iter().position(|c| *c == code) {
+            Some(i) => self.responses[i].inc(),
+            None => self.other_responses.inc(),
+        }
+    }
+}
+
+/// The server's metric handles (also the family pre-registration hook
+/// `Advisor::publish_obs` touches so a first scrape lists every family).
+pub(crate) fn http_obs() -> &'static HttpObs {
+    static OBS: OnceLock<HttpObs> = OnceLock::new();
+    OBS.get_or_init(HttpObs::new)
+}
+
+/// Reason phrase for every code routing emits ([`EMITTED_CODES`]). The
+/// fallback is deliberately *not* a real reason phrase: an unknown code
+/// reaching the wire means a dispatch arm forgot to register here, and
+/// `status_lines_cover_every_emitted_code` pins that it never happens.
 fn status_text(code: u16) -> &'static str {
     match code {
         200 => "OK",
@@ -296,26 +423,52 @@ fn status_text(code: u16) -> &'static str {
         409 => "Conflict",
         411 => "Length Required",
         413 => "Payload Too Large",
+        500 => "Internal Server Error",
         503 => "Service Unavailable",
-        _ => "Internal Server Error",
+        _ => "Unknown Status",
     }
 }
 
-fn write_response(stream: &mut TcpStream, code: u16, body: &Json, keep_alive: bool) {
-    let payload = body.to_compact();
+/// Write one response frame. `req_id` (when the request got far enough to
+/// be assigned one) is echoed as `X-Request-Id` so a client-observed
+/// latency can be matched to the daemon's structured logs.
+fn write_response_raw(
+    stream: &mut TcpStream,
+    code: u16,
+    content_type: &str,
+    payload: &[u8],
+    keep_alive: bool,
+    req_id: Option<u64>,
+) {
     // The 503 shedding contract: tell well-behaved clients when to come
     // back instead of letting them hammer a saturated daemon.
     let retry_after = if code == 503 { "Retry-After: 1\r\n" } else { "" };
+    let req_id_hdr = match req_id {
+        Some(id) => format!("X-Request-Id: {id}\r\n"),
+        None => String::new(),
+    };
     let head = format!(
-        "HTTP/1.1 {code} {}\r\nContent-Type: application/json\r\nContent-Length: {}\r\n{retry_after}Connection: {}\r\n\r\n",
+        "HTTP/1.1 {code} {}\r\nContent-Type: {content_type}\r\nContent-Length: {}\r\n{retry_after}{req_id_hdr}Connection: {}\r\n\r\n",
         status_text(code),
         payload.len(),
         if keep_alive { "keep-alive" } else { "close" }
     );
     // Best effort: the client may already be gone.
     let _ = stream.write_all(head.as_bytes());
-    let _ = stream.write_all(payload.as_bytes());
+    let _ = stream.write_all(payload);
     let _ = stream.flush();
+    http_obs().response(code);
+}
+
+fn write_response(
+    stream: &mut TcpStream,
+    code: u16,
+    body: &Json,
+    keep_alive: bool,
+    req_id: Option<u64>,
+) {
+    let payload = body.to_compact();
+    write_response_raw(stream, code, "application/json", payload.as_bytes(), keep_alive, req_id);
 }
 
 /// Best-effort `503 Retry-After` on a connection the daemon will not
@@ -325,7 +478,8 @@ fn shed(mut stream: TcpStream, why: &str) {
     let _ = stream.set_nonblocking(false);
     let _ = stream.set_write_timeout(Some(Duration::from_millis(500)));
     let _ = stream.set_nodelay(true);
-    write_response(&mut stream, 503, &protocol::error_response(why), false);
+    http_obs().shed_total.inc();
+    write_response(&mut stream, 503, &protocol::error_response(why), false, None);
 }
 
 /// First `name=value` query parameter called `name`, raw (no percent
@@ -393,10 +547,27 @@ fn route(advisor: &Advisor, req: &HttpRequest, stop: &AtomicBool, ctx: RouteCont
             None => (400, protocol::error_response("replication requires serve --data-dir")),
         },
         ("POST", "/v1/select") => match parse_body().and_then(|j| protocol::parse_select(&j)) {
-            Ok(r) => match advisor.select(&r) {
-                Ok(j) => (200, j),
-                Err(e) => (500, protocol::error_response(&format!("{e:#}"))),
-            },
+            Ok(r) => {
+                let timer = obs::timer();
+                match advisor.select(&r) {
+                    Ok(j) => {
+                        // The request id links this model-layer timing to
+                        // the access-log line for the same request.
+                        if olog::enabled(olog::Level::Debug) {
+                            let mut fields = vec![
+                                ("req", Json::from(req.id)),
+                                ("cached", j.get("cached").cloned().unwrap_or(Json::Null)),
+                            ];
+                            if let Some(s) = timer.elapsed_s() {
+                                fields.push(("ms", Json::from(s * 1e3)));
+                            }
+                            olog::debug("server", "select", &fields);
+                        }
+                        (200, j)
+                    }
+                    Err(e) => (500, protocol::error_response(&format!("{e:#}"))),
+                }
+            }
             Err(e) => (400, protocol::error_response(&format!("{e:#}"))),
         },
         ("POST", "/v1/select_batch") => {
@@ -463,22 +634,76 @@ fn handle_connection(
     let mut buf: Vec<u8> = Vec::with_capacity(1024);
     for served in 1..=MAX_REQUESTS_PER_CONN {
         match read_request(&mut stream, &mut buf) {
-            ReadOutcome::Request(req) => {
-                let (code, body) = route(advisor, &req, stop, ctx);
-                if code != 200 {
-                    eprintln!("[advisor] {} {} -> {code}", req.method, req.path);
-                }
+            ReadOutcome::Request(mut req) => {
+                req.id = obs::next_request_id();
+                let o = http_obs();
+                let path = req.path.split_once('?').map_or(req.path.as_str(), |(p, _)| p);
+                let (requests, latency) = o.route_handles(path);
+                requests.inc();
+                o.in_flight.add(1.0);
+                let timer = obs::timer();
                 let keep = req.keep_alive
                     && served < MAX_REQUESTS_PER_CONN
                     && !stop.load(Ordering::SeqCst);
-                write_response(&mut stream, code, &body, keep);
+                // `/metrics` is answered here, before the JSON route
+                // dispatch: it is the one text/plain endpoint, and — like
+                // `/healthz` — it stays open when an auth token is set so
+                // scrapers need no credentials.
+                let code = if path == "/metrics" {
+                    if req.method == "GET" {
+                        advisor.publish_obs();
+                        let text = obs::global().render();
+                        write_response_raw(
+                            &mut stream,
+                            200,
+                            "text/plain; version=0.0.4; charset=utf-8",
+                            text.as_bytes(),
+                            keep,
+                            Some(req.id),
+                        );
+                        200
+                    } else {
+                        let body = protocol::error_response("method not allowed");
+                        write_response(&mut stream, 405, &body, keep, Some(req.id));
+                        405
+                    }
+                } else {
+                    let (code, body) = route(advisor, &req, stop, ctx);
+                    write_response(&mut stream, code, &body, keep, Some(req.id));
+                    code
+                };
+                o.in_flight.add(-1.0);
+                let elapsed_ms = timer.elapsed_s().map(|s| s * 1e3);
+                timer.observe(latency);
+                let mut fields = vec![
+                    ("req", Json::from(req.id)),
+                    ("method", Json::from(req.method.as_str())),
+                    ("path", Json::from(req.path.as_str())),
+                    ("code", Json::from(u64::from(code))),
+                ];
+                if let Some(ms) = elapsed_ms {
+                    fields.push(("ms", Json::from(ms)));
+                }
+                let level = if code < 400 { olog::Level::Debug } else { olog::Level::Warn };
+                olog::log(level, "server", "request", &fields);
                 if !keep {
                     return;
                 }
             }
             ReadOutcome::Closed => return,
             ReadOutcome::Malformed(code, msg) => {
-                write_response(&mut stream, code, &protocol::error_response(&msg), false);
+                let req_id = obs::next_request_id();
+                olog::warn(
+                    "server",
+                    "malformed request",
+                    &[
+                        ("req", Json::from(req_id)),
+                        ("code", Json::from(u64::from(code))),
+                        ("error", Json::from(msg.as_str())),
+                    ],
+                );
+                let body = protocol::error_response(&msg);
+                write_response(&mut stream, code, &body, false, Some(req_id));
                 return;
             }
         }
@@ -522,7 +747,14 @@ impl AdvisorServer {
                 let advisor = Advisor::with_store(opts.advisor, None)?;
                 let loaded = replicate::load_local_tracks(&advisor, &root)?;
                 if loaded > 0 {
-                    eprintln!("[advisor] replica loaded {loaded} track(s) from {}", root.display());
+                    olog::info(
+                        "server",
+                        "replica loaded tracks",
+                        &[
+                            ("tracks", Json::from(loaded)),
+                            ("dir", Json::from(format!("{}", root.display()))),
+                        ],
+                    );
                 }
                 replica = Some((primary.clone(), root));
                 advisor
@@ -608,6 +840,7 @@ impl AdvisorServer {
                         }
                         None => break,
                     }
+                    http_obs().queue_depth.set(queue.lock().unwrap().len() as f64);
                 });
             }
             scope.spawn(|| {
@@ -640,6 +873,7 @@ impl AdvisorServer {
                         }
                         active.fetch_add(1, Ordering::SeqCst);
                         q.push_back(stream);
+                        http_obs().queue_depth.set(q.len() as f64);
                         drop(q);
                         ready.notify_one();
                     }
@@ -647,7 +881,11 @@ impl AdvisorServer {
                         std::thread::sleep(Duration::from_millis(2));
                     }
                     Err(e) => {
-                        eprintln!("[advisor] accept error: {e}");
+                        olog::warn(
+                            "server",
+                            "accept error",
+                            &[("error", Json::from(format!("{e}")))],
+                        );
                         std::thread::sleep(Duration::from_millis(20));
                     }
                 }
@@ -658,8 +896,14 @@ impl AdvisorServer {
         // next boot replays a compact image instead of a long WAL.
         match self.advisor.persist_all() {
             Ok(0) => {}
-            Ok(n) => eprintln!("[advisor] snapshotted {n} track(s) on shutdown"),
-            Err(e) => eprintln!("[advisor] shutdown snapshot failed: {e:#}"),
+            Ok(n) => {
+                olog::info("server", "snapshotted tracks on shutdown", &[("tracks", Json::from(n))])
+            }
+            Err(e) => olog::error(
+                "server",
+                "shutdown snapshot failed",
+                &[("error", Json::from(format!("{e:#}")))],
+            ),
         }
         Ok(())
     }
@@ -676,16 +920,35 @@ mod tests {
     }
 
     #[test]
-    fn status_lines() {
+    fn status_lines_cover_every_emitted_code() {
+        // Every code routing can produce has an explicit reason phrase —
+        // the fallback is reserved for genuinely unknown codes, so a new
+        // dispatch arm emitting an unregistered code fails loudly here.
+        for &code in EMITTED_CODES {
+            assert_ne!(
+                status_text(code),
+                "Unknown Status",
+                "code {code} is emitted by routing but has no explicit reason phrase"
+            );
+        }
         assert_eq!(status_text(200), "OK");
+        assert_eq!(status_text(400), "Bad Request");
         assert_eq!(status_text(401), "Unauthorized");
         assert_eq!(status_text(404), "Not Found");
+        assert_eq!(status_text(405), "Method Not Allowed");
         assert_eq!(status_text(408), "Request Timeout");
         assert_eq!(status_text(409), "Conflict");
         assert_eq!(status_text(411), "Length Required");
-        assert_eq!(status_text(503), "Service Unavailable");
+        assert_eq!(status_text(413), "Payload Too Large");
         assert_eq!(status_text(500), "Internal Server Error");
-        assert_eq!(status_text(418), "Internal Server Error");
+        assert_eq!(status_text(503), "Service Unavailable");
+        // Codes the server never produces hit the explicit fallback
+        // instead of masquerading as internal errors (418 used to map to
+        // "Internal Server Error" silently).
+        assert_eq!(status_text(418), "Unknown Status");
+        assert_eq!(status_text(999), "Unknown Status");
+        // The response-counter label space matches the same list.
+        assert_eq!(EMITTED_CODES.len(), http_obs().responses.len());
     }
 
     #[test]
@@ -813,6 +1076,7 @@ mod tests {
             body: body.to_string(),
             keep_alive: true,
             authorization: None,
+            id: obs::next_request_id(),
         }
     }
 

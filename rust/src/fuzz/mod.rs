@@ -318,6 +318,7 @@ fn seed_corpus(target: FuzzTarget) -> Vec<Vec<u8>> {
     match target {
         FuzzTarget::Http => vec![
             b"GET /v1/status HTTP/1.1\r\nHost: x\r\n\r\n".to_vec(),
+            b"GET /metrics HTTP/1.1\r\nHost: x\r\nAccept: text/plain\r\n\r\n".to_vec(),
             b"POST /v1/select HTTP/1.1\r\nContent-Length: 49\r\n\r\n\
               {\"system\": {\"n\": 4, \"mttf_days\": 5}, \"app\": \"qr\"}"
                 .to_vec(),
@@ -330,6 +331,9 @@ fn seed_corpus(target: FuzzTarget) -> Vec<Vec<u8>> {
             // Two pipelined requests in one buffer.
             b"GET /v1/status HTTP/1.1\r\n\r\nPOST /v1/model HTTP/1.1\r\nContent-Length: 2\r\n\r\n{}"
                 .to_vec(),
+            // A scrape pipelined ahead of an API call — the mix a
+            // monitoring agent sharing a connection would produce.
+            b"GET /metrics HTTP/1.1\r\n\r\nGET /v1/status HTTP/1.1\r\nHost: x\r\n\r\n".to_vec(),
             // Raw JSON bodies (the protocol layer sees these directly).
             br#"{"system": {"n": 6, "mttf_days": 8, "mttr_min": 40}, "search": {"refine_steps": 3}}"#
                 .to_vec(),
@@ -442,8 +446,8 @@ mod tests {
         let snap = snapshot::decode(&snapshot_image(), Path::new("<seed>")).unwrap();
         assert_eq!((snap.gen, snap.covered), (3, 42));
 
-        for seed in seed_corpus(FuzzTarget::Http).iter().take(5) {
-            // The HTTP seeds (first five) are complete frames.
+        for seed in seed_corpus(FuzzTarget::Http).iter().take(7) {
+            // The HTTP seeds (first seven) are complete frames.
             let parsed = try_parse_request(seed).expect("seed frame must parse");
             assert!(parsed.is_some(), "seed frame incomplete: {:?}", String::from_utf8_lossy(seed));
         }

@@ -96,6 +96,7 @@ pub mod fuzz;
 pub mod linalg;
 pub mod markov;
 pub mod metrics;
+pub mod obs;
 pub mod policies;
 pub mod runtime;
 pub mod search;

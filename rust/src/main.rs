@@ -45,7 +45,7 @@ fn app_spec() -> App {
         })
         .command(CommandSpec {
             name: "serve",
-            about: "run the advisor daemon: HTTP/1.1 + JSON endpoints /v1/select, /v1/select_batch, /v1/model, /v1/ingest, /v1/status; overload-hardened — bounded worker pool + connection queue shedding 503 at saturation, per-request read deadlines, graceful drain on shutdown (see DESIGN.md §7, §11, §12)",
+            about: "run the advisor daemon: HTTP/1.1 + JSON endpoints /v1/select, /v1/select_batch, /v1/model, /v1/ingest, /v1/status, plus Prometheus text metrics on GET /metrics (auth-exempt); overload-hardened — bounded worker pool + connection queue shedding 503 at saturation, per-request read deadlines, graceful drain on shutdown (see DESIGN.md §7, §11, §12, §14)",
             flags: vec![
                 flag("addr", "HOST:PORT", "bind address (port 0 = ephemeral)", Some("127.0.0.1:7743")),
                 flag("workers", "N", "HTTP handler threads (0 = auto)", Some("0")),
@@ -61,6 +61,9 @@ fn app_spec() -> App {
                 flag("compact-mb", "F", "WAL size that triggers background compaction (MB)", Some("4")),
                 flag("auth-token", "TOKEN", "require 'Authorization: Bearer TOKEN' on every /v1/* route (401 otherwise; /healthz stays open)", None),
                 flag("replica-of", "HOST:PORT", "run as a read replica of this primary: a background puller mirrors its store into --data-dir (required), ingest answers 409 (see DESIGN.md §13)", None),
+                flag("log-level", "LEVEL", "stderr log verbosity: error, warn, info or debug (see DESIGN.md §14)", Some("info")),
+                switch("log-json", "emit logs as one JSON object per line instead of text"),
+                switch("no-obs", "disable latency timers (counters stay live; /metrics still serves)"),
             ],
             positionals: vec![],
         })
@@ -264,6 +267,12 @@ fn cmd_select(p: &malleable_ckpt::util::cli::Parsed) -> Result<()> {
 }
 
 fn cmd_serve(p: &malleable_ckpt::util::cli::Parsed) -> Result<()> {
+    let level_name = p.get_or("log-level", "info");
+    let level = malleable_ckpt::obs::log::Level::parse(&level_name)
+        .ok_or_else(|| anyhow!("unknown --log-level '{level_name}' (error|warn|info|debug)"))?;
+    malleable_ckpt::obs::log::set_level(level);
+    malleable_ckpt::obs::log::set_json(p.switch("log-json"));
+    malleable_ckpt::obs::set_enabled(!p.switch("no-obs"));
     let mut advisor = AdvisorConfig::default();
     if let Some(s) = p.get_usize("shards")? {
         advisor.shards = s.max(1);
@@ -356,6 +365,7 @@ fn cmd_serve(p: &malleable_ckpt::util::cli::Parsed) -> Result<()> {
         "  curl -s http://{addr}/v1/select_batch -d '{{\"items\": [{{\"system\": \"system-1/128\"}}, {{\"system\": \"condor/64\"}}]}}'"
     );
     println!("  curl -s http://{addr}/v1/status");
+    println!("  curl -s http://{addr}/metrics");
     server.run()
 }
 

@@ -58,7 +58,7 @@
 //! that: its caches are O(N²) (bands, `y` vectors, scatter maps) plus the
 //! spectral bases of the small chains.
 
-use std::sync::{Mutex, OnceLock};
+use std::sync::{Arc, Mutex, OnceLock};
 use std::time::Instant;
 
 use anyhow::{bail, ensure, Result};
@@ -1041,6 +1041,12 @@ impl SharedBuilder {
 
     /// One probe-engine evaluation (see [`ModelBuilder::probe`]).
     pub fn probe(&self, interval: f64) -> Result<ProbeResult> {
+        let o = builder_obs();
+        if self.warm.lock().unwrap().is_some() {
+            o.warm_probes.inc();
+        } else {
+            o.cold_probes.inc();
+        }
         probe_cached(&self.cache, &self.inputs, &self.opts, interval, &self.warm)
     }
 
@@ -1066,6 +1072,25 @@ impl SharedBuilder {
     pub fn warm_pi(&self) -> Option<Vec<f64>> {
         self.warm.lock().unwrap().clone()
     }
+}
+
+/// Registry handles for the shared-builder probe engine (DESIGN.md §14):
+/// how often the daemon's probes start from a warm π vs cold-start.
+struct BuilderObs {
+    warm_probes: Arc<crate::obs::Counter>,
+    cold_probes: Arc<crate::obs::Counter>,
+}
+
+fn builder_obs() -> &'static BuilderObs {
+    static OBS: OnceLock<BuilderObs> = OnceLock::new();
+    OBS.get_or_init(|| {
+        let r = crate::obs::global();
+        let help = "Shared-builder probe evaluations, by warm-start state.";
+        BuilderObs {
+            warm_probes: r.counter_with("mckpt_builder_probes_total", help, &[("start", "warm")]),
+            cold_probes: r.counter_with("mckpt_builder_probes_total", help, &[("start", "cold")]),
+        }
+    })
 }
 
 #[cfg(test)]

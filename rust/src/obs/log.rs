@@ -1,0 +1,152 @@
+//! Leveled structured logging to stderr (DESIGN.md §14).
+//!
+//! Two output modes share one call site: human-readable text (default)
+//! and one-JSON-object-per-line (`serve --log-json`), encoded through
+//! `util::json` so field values survive quoting/escaping. The level
+//! (`serve --log-level error|warn|info|debug`) and mode are process
+//! globals, like the metric registry they accompany; checking whether a
+//! level is live is a single relaxed atomic load, so `debug`-level call
+//! sites cost nothing when the daemon runs at `info`.
+
+use crate::util::json::Json;
+use std::sync::atomic::{AtomicBool, AtomicU8, Ordering};
+use std::time::{SystemTime, UNIX_EPOCH};
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Level {
+    Error = 0,
+    Warn = 1,
+    Info = 2,
+    Debug = 3,
+}
+
+impl Level {
+    pub fn parse(s: &str) -> Option<Level> {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "error" => Some(Level::Error),
+            "warn" | "warning" => Some(Level::Warn),
+            "info" => Some(Level::Info),
+            "debug" => Some(Level::Debug),
+            _ => None,
+        }
+    }
+
+    pub fn as_str(self) -> &'static str {
+        match self {
+            Level::Error => "error",
+            Level::Warn => "warn",
+            Level::Info => "info",
+            Level::Debug => "debug",
+        }
+    }
+
+    fn from_u8(v: u8) -> Level {
+        match v {
+            0 => Level::Error,
+            1 => Level::Warn,
+            3 => Level::Debug,
+            _ => Level::Info,
+        }
+    }
+}
+
+static LEVEL: AtomicU8 = AtomicU8::new(Level::Info as u8);
+static JSON: AtomicBool = AtomicBool::new(false);
+
+pub fn set_level(l: Level) {
+    LEVEL.store(l as u8, Ordering::Relaxed);
+}
+
+pub fn level() -> Level {
+    Level::from_u8(LEVEL.load(Ordering::Relaxed))
+}
+
+pub fn set_json(on: bool) {
+    JSON.store(on, Ordering::Relaxed);
+}
+
+/// Whether a record at `l` would be emitted at the current level.
+pub fn enabled(l: Level) -> bool {
+    (l as u8) <= LEVEL.load(Ordering::Relaxed)
+}
+
+fn now_unix_s() -> f64 {
+    SystemTime::now().duration_since(UNIX_EPOCH).map(|d| d.as_secs_f64()).unwrap_or(0.0)
+}
+
+/// Emit one record. `target` names the subsystem (`server`, `replica`,
+/// `advisor`, ...); `fields` carry the structured payload (request ids,
+/// routes, durations). Formats (see DESIGN.md §14):
+///
+/// * text: `[<unix_ts> <level> <target>] <msg> k=v k=v`
+/// * json: `{"ts":..,"level":"..","target":"..","msg":"..","k":v,...}`
+pub fn log(l: Level, target: &str, msg: &str, fields: &[(&str, Json)]) {
+    if !enabled(l) {
+        return;
+    }
+    let ts = now_unix_s();
+    if JSON.load(Ordering::Relaxed) {
+        let mut obj = Json::obj();
+        obj.set("ts", Json::from(ts));
+        obj.set("level", Json::from(l.as_str()));
+        obj.set("target", Json::from(target));
+        obj.set("msg", Json::from(msg));
+        for (k, v) in fields {
+            obj.set(k, v.clone());
+        }
+        eprintln!("{}", obj.to_compact());
+    } else {
+        let mut line = format!("[{ts:.3} {} {target}] {msg}", l.as_str());
+        for (k, v) in fields {
+            let rendered = match v {
+                Json::Str(s) => s.clone(),
+                other => other.to_compact(),
+            };
+            line.push(' ');
+            line.push_str(k);
+            line.push('=');
+            line.push_str(&rendered);
+        }
+        eprintln!("{line}");
+    }
+}
+
+pub fn error(target: &str, msg: &str, fields: &[(&str, Json)]) {
+    log(Level::Error, target, msg, fields);
+}
+
+pub fn warn(target: &str, msg: &str, fields: &[(&str, Json)]) {
+    log(Level::Warn, target, msg, fields);
+}
+
+pub fn info(target: &str, msg: &str, fields: &[(&str, Json)]) {
+    log(Level::Info, target, msg, fields);
+}
+
+pub fn debug(target: &str, msg: &str, fields: &[(&str, Json)]) {
+    log(Level::Debug, target, msg, fields);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn levels_parse_and_order() {
+        assert_eq!(Level::parse("debug"), Some(Level::Debug));
+        assert_eq!(Level::parse("WARN"), Some(Level::Warn));
+        assert_eq!(Level::parse("warning"), Some(Level::Warn));
+        assert_eq!(Level::parse(" info "), Some(Level::Info));
+        assert_eq!(Level::parse("verbose"), None);
+        assert!(Level::Error < Level::Warn);
+        assert!(Level::Warn < Level::Info);
+        assert!(Level::Info < Level::Debug);
+    }
+
+    #[test]
+    fn round_trips_through_u8() {
+        for l in [Level::Error, Level::Warn, Level::Info, Level::Debug] {
+            assert_eq!(Level::from_u8(l as u8), l);
+        }
+    }
+}

@@ -1,0 +1,608 @@
+//! Process-global observability: counters, gauges, fixed-bucket latency
+//! histograms, and a hand-rolled Prometheus text-exposition encoder
+//! (DESIGN.md §14).
+//!
+//! The layer is dependency-free and follows the crate's existing idiom:
+//! lock-free atomics on the hot path (like `advisor::cache`'s sharded
+//! counters) and hand-written encoding (like `util::json`). Call sites
+//! resolve an [`Arc`] handle once — typically into a `OnceLock`'d struct of
+//! handles per subsystem — after which every increment is a single relaxed
+//! atomic op; the registry mutex is only taken at registration and render
+//! time.
+//!
+//! Cardinality is bounded by construction: label sets are small static
+//! tuples chosen at the call site (route names, status codes, track ids)
+//! and each family holds at most [`MAX_SERIES_PER_FAMILY`] series — the
+//! first overflowing registration is collapsed into a single
+//! `{overflow="true"}` series so a hostile stream of track ids cannot grow
+//! the exposition without bound.
+//!
+//! Counters are always live (cheap, and `/v1/status` reads them — one
+//! source of truth); only the *timing* wrappers honor the global
+//! [`enabled`] switch (`serve --no-obs`), so disabling observability
+//! removes the clock reads from the hot path without desynchronizing the
+//! request counters.
+
+pub mod log;
+
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+use std::time::Instant;
+
+/// Default latency buckets (seconds) shared by every `*_seconds` family:
+/// 0.5 ms up to 10 s, roughly logarithmic.
+pub const LATENCY_BUCKETS: &[f64] = &[
+    0.0005, 0.001, 0.0025, 0.005, 0.01, 0.025, 0.05, 0.1, 0.25, 0.5, 1.0, 2.5, 5.0, 10.0,
+];
+
+/// Hard per-family series cap; past it, new label sets collapse into one
+/// `{overflow="true"}` series.
+pub const MAX_SERIES_PER_FAMILY: usize = 64;
+
+/// Monotone counter. `u64`, relaxed ordering, never reset.
+#[derive(Debug, Default)]
+pub struct Counter {
+    v: AtomicU64,
+}
+
+impl Counter {
+    pub fn inc(&self) {
+        self.add(1);
+    }
+
+    pub fn add(&self, n: u64) {
+        self.v.fetch_add(n, Ordering::Relaxed);
+    }
+
+    /// Raise the counter to `n` if it is below it. Used to mirror an
+    /// externally-maintained monotone total (e.g. the cache's own hit
+    /// count) without double counting.
+    pub fn set_max(&self, n: u64) {
+        self.v.fetch_max(n, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.v.load(Ordering::Relaxed)
+    }
+}
+
+/// Last-write-wins gauge storing `f64` bits. Non-finite writes are ignored
+/// (the NaN guard mirrors `util::json`'s "non-finite encodes as null"
+/// policy: the exposition never carries a NaN).
+#[derive(Debug)]
+pub struct Gauge {
+    bits: AtomicU64,
+}
+
+impl Default for Gauge {
+    fn default() -> Gauge {
+        Gauge { bits: AtomicU64::new(0f64.to_bits()) }
+    }
+}
+
+impl Gauge {
+    pub fn set(&self, v: f64) {
+        if v.is_finite() {
+            self.bits.store(v.to_bits(), Ordering::Relaxed);
+        }
+    }
+
+    pub fn add(&self, d: f64) {
+        if !d.is_finite() {
+            return;
+        }
+        let mut cur = self.bits.load(Ordering::Relaxed);
+        loop {
+            let next = f64::from_bits(cur) + d;
+            if !next.is_finite() {
+                return;
+            }
+            match self.bits.compare_exchange_weak(
+                cur,
+                next.to_bits(),
+                Ordering::Relaxed,
+                Ordering::Relaxed,
+            ) {
+                Ok(_) => return,
+                Err(seen) => cur = seen,
+            }
+        }
+    }
+
+    pub fn get(&self) -> f64 {
+        f64::from_bits(self.bits.load(Ordering::Relaxed))
+    }
+}
+
+/// Fixed-bucket histogram. Bucket `i` counts observations `v <= bounds[i]`
+/// (Prometheus `le` semantics, cumulated at render time); one implicit
+/// `+Inf` bucket catches the rest. Non-finite observations are dropped.
+#[derive(Debug)]
+pub struct Histogram {
+    bounds: Vec<f64>,
+    buckets: Vec<AtomicU64>,
+    count: AtomicU64,
+    sum_bits: AtomicU64,
+}
+
+impl Histogram {
+    fn new(bounds: &[f64]) -> Histogram {
+        let mut b: Vec<f64> = bounds.iter().copied().filter(|x| x.is_finite()).collect();
+        b.sort_by(f64::total_cmp);
+        b.dedup();
+        let buckets = (0..=b.len()).map(|_| AtomicU64::new(0)).collect();
+        Histogram {
+            bounds: b,
+            buckets,
+            count: AtomicU64::new(0),
+            sum_bits: AtomicU64::new(0f64.to_bits()),
+        }
+    }
+
+    pub fn observe(&self, v: f64) {
+        if !v.is_finite() {
+            return;
+        }
+        // First bucket whose upper bound admits v (le is inclusive).
+        let idx = self.bounds.partition_point(|&b| b < v);
+        self.buckets[idx].fetch_add(1, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        let mut cur = self.sum_bits.load(Ordering::Relaxed);
+        loop {
+            let next = f64::from_bits(cur) + v;
+            match self.sum_bits.compare_exchange_weak(
+                cur,
+                next.to_bits(),
+                Ordering::Relaxed,
+                Ordering::Relaxed,
+            ) {
+                Ok(_) => return,
+                Err(seen) => cur = seen,
+            }
+        }
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    pub fn sum(&self) -> f64 {
+        f64::from_bits(self.sum_bits.load(Ordering::Relaxed))
+    }
+
+    /// Per-bucket (non-cumulative) counts, `bounds.len() + 1` entries with
+    /// the `+Inf` bucket last. Test/inspection helper.
+    pub fn bucket_counts(&self) -> Vec<u64> {
+        self.buckets.iter().map(|b| b.load(Ordering::Relaxed)).collect()
+    }
+
+    pub fn bounds(&self) -> &[f64] {
+        &self.bounds
+    }
+}
+
+#[derive(Clone)]
+enum Metric {
+    Counter(Arc<Counter>),
+    Gauge(Arc<Gauge>),
+    Histogram(Arc<Histogram>),
+}
+
+impl Metric {
+    fn kind(&self) -> &'static str {
+        match self {
+            Metric::Counter(_) => "counter",
+            Metric::Gauge(_) => "gauge",
+            Metric::Histogram(_) => "histogram",
+        }
+    }
+}
+
+struct Family {
+    help: &'static str,
+    kind: &'static str,
+    // Keyed by the rendered label block (`{route="/v1/select"}` or "") so
+    // iteration order — and therefore the exposition — is stable.
+    series: BTreeMap<String, Metric>,
+}
+
+/// The metric registry. One process-global instance lives behind
+/// [`global`]; fresh instances are only constructed in tests.
+pub struct Registry {
+    enabled: AtomicBool,
+    families: Mutex<BTreeMap<&'static str, Family>>,
+}
+
+impl Default for Registry {
+    fn default() -> Registry {
+        Registry::new()
+    }
+}
+
+impl Registry {
+    pub fn new() -> Registry {
+        Registry { enabled: AtomicBool::new(true), families: Mutex::new(BTreeMap::new()) }
+    }
+
+    pub fn counter(&self, name: &'static str, help: &'static str) -> Arc<Counter> {
+        self.counter_with(name, help, &[])
+    }
+
+    pub fn counter_with(
+        &self,
+        name: &'static str,
+        help: &'static str,
+        labels: &[(&'static str, &str)],
+    ) -> Arc<Counter> {
+        let fresh = || Metric::Counter(Arc::new(Counter::default()));
+        let made = self.series(name, help, labels, fresh);
+        match made {
+            Metric::Counter(c) => c,
+            // Name re-registered under a different kind: hand back a
+            // detached (never rendered) instance rather than panicking.
+            _ => Arc::new(Counter::default()),
+        }
+    }
+
+    pub fn gauge(&self, name: &'static str, help: &'static str) -> Arc<Gauge> {
+        self.gauge_with(name, help, &[])
+    }
+
+    pub fn gauge_with(
+        &self,
+        name: &'static str,
+        help: &'static str,
+        labels: &[(&'static str, &str)],
+    ) -> Arc<Gauge> {
+        let made = self.series(name, help, labels, || Metric::Gauge(Arc::new(Gauge::default())));
+        match made {
+            Metric::Gauge(g) => g,
+            _ => Arc::new(Gauge::default()),
+        }
+    }
+
+    pub fn histogram(
+        &self,
+        name: &'static str,
+        help: &'static str,
+        bounds: &[f64],
+    ) -> Arc<Histogram> {
+        self.histogram_with(name, help, bounds, &[])
+    }
+
+    pub fn histogram_with(
+        &self,
+        name: &'static str,
+        help: &'static str,
+        bounds: &[f64],
+        labels: &[(&'static str, &str)],
+    ) -> Arc<Histogram> {
+        let fresh = || Metric::Histogram(Arc::new(Histogram::new(bounds)));
+        let made = self.series(name, help, labels, fresh);
+        match made {
+            Metric::Histogram(h) => h,
+            _ => Arc::new(Histogram::new(bounds)),
+        }
+    }
+
+    fn series(
+        &self,
+        name: &'static str,
+        help: &'static str,
+        labels: &[(&'static str, &str)],
+        make: impl Fn() -> Metric,
+    ) -> Metric {
+        let mut fams = self.families.lock().unwrap();
+        let fam = fams.entry(name).or_insert_with(|| {
+            let m = make();
+            Family { help, kind: m.kind(), series: BTreeMap::new() }
+        });
+        if fam.kind != make().kind() {
+            return make();
+        }
+        let mut key = label_block(labels);
+        // The sink itself counts toward the cap: at most MAX-1 real series
+        // plus one `{overflow="true"}` series.
+        if !fam.series.contains_key(&key) && fam.series.len() >= MAX_SERIES_PER_FAMILY - 1 {
+            key = label_block(&[("overflow", "true")]);
+        }
+        fam.series.entry(key).or_insert_with(make).clone()
+    }
+
+    pub fn is_enabled(&self) -> bool {
+        self.enabled.load(Ordering::Relaxed)
+    }
+
+    pub fn set_enabled(&self, on: bool) {
+        self.enabled.store(on, Ordering::Relaxed);
+    }
+
+    /// Encode every family in Prometheus text-exposition format (version
+    /// 0.0.4). Deterministic: families and series render in sorted order.
+    /// Counters print as exact `u64` decimals (a `u64::MAX` mirror must
+    /// not round through `f64`); gauges are finite by construction.
+    pub fn render(&self) -> String {
+        let fams = self.families.lock().unwrap();
+        let mut out = String::new();
+        for (name, fam) in fams.iter() {
+            let _ = writeln!(out, "# HELP {name} {}", fam.help);
+            let _ = writeln!(out, "# TYPE {name} {}", fam.kind);
+            for (labels, metric) in &fam.series {
+                match metric {
+                    Metric::Counter(c) => {
+                        let _ = writeln!(out, "{name}{labels} {}", c.get());
+                    }
+                    Metric::Gauge(g) => {
+                        let _ = writeln!(out, "{name}{labels} {}", fmt_f64(g.get()));
+                    }
+                    Metric::Histogram(h) => {
+                        let counts = h.bucket_counts();
+                        let mut cum: u64 = 0;
+                        for (i, n) in counts.iter().enumerate() {
+                            cum = cum.saturating_add(*n);
+                            let le = match h.bounds.get(i) {
+                                Some(b) => fmt_f64(*b),
+                                None => "+Inf".to_string(),
+                            };
+                            let lab = with_label(labels, "le", &le);
+                            let _ = writeln!(out, "{name}_bucket{lab} {cum}");
+                        }
+                        let _ = writeln!(out, "{name}_sum{labels} {}", fmt_f64(h.sum()));
+                        let _ = writeln!(out, "{name}_count{labels} {}", h.count());
+                    }
+                }
+            }
+        }
+        out
+    }
+}
+
+/// Render a label tuple as `{k="v",...}` with Prometheus escaping; empty
+/// tuples render as the empty string.
+fn label_block(labels: &[(&'static str, &str)]) -> String {
+    if labels.is_empty() {
+        return String::new();
+    }
+    let mut s = String::from("{");
+    for (i, (k, v)) in labels.iter().enumerate() {
+        if i > 0 {
+            s.push(',');
+        }
+        s.push_str(k);
+        s.push_str("=\"");
+        escape_into(&mut s, v);
+        s.push('"');
+    }
+    s.push('}');
+    s
+}
+
+fn escape_into(out: &mut String, v: &str) {
+    for c in v.chars() {
+        match c {
+            '\\' => out.push_str("\\\\"),
+            '"' => out.push_str("\\\""),
+            '\n' => out.push_str("\\n"),
+            _ => out.push(c),
+        }
+    }
+}
+
+/// Splice one more label into an already-rendered block.
+fn with_label(block: &str, k: &str, v: &str) -> String {
+    let mut s = String::new();
+    escape_into(&mut s, v);
+    if block.is_empty() {
+        format!("{{{k}=\"{s}\"}}")
+    } else {
+        format!("{},{k}=\"{s}\"}}", &block[..block.len() - 1])
+    }
+}
+
+/// Finite floats via the shortest round-trip `Display`; non-finite (only
+/// reachable through histogram sums fed by `add` races, never by gauges)
+/// degrade to 0 rather than emitting a token scrapers reject.
+fn fmt_f64(v: f64) -> String {
+    if v.is_finite() {
+        format!("{v}")
+    } else {
+        "0".to_string()
+    }
+}
+
+static GLOBAL: OnceLock<Registry> = OnceLock::new();
+
+/// The process-global registry `/metrics` renders.
+pub fn global() -> &'static Registry {
+    GLOBAL.get_or_init(Registry::new)
+}
+
+/// Whether timing instrumentation is on (`serve --no-obs` turns it off).
+pub fn enabled() -> bool {
+    global().is_enabled()
+}
+
+pub fn set_enabled(on: bool) {
+    global().set_enabled(on);
+}
+
+/// Monotonic process-wide request id; first id is 1.
+pub fn next_request_id() -> u64 {
+    static NEXT: AtomicU64 = AtomicU64::new(0);
+    NEXT.fetch_add(1, Ordering::Relaxed) + 1
+}
+
+/// Latency timer gated on [`enabled`]: when observability is off no clock
+/// is read at all.
+#[derive(Debug)]
+pub struct Timer(Option<Instant>);
+
+pub fn timer() -> Timer {
+    Timer(if enabled() { Some(Instant::now()) } else { None })
+}
+
+impl Timer {
+    pub fn observe(self, h: &Histogram) {
+        if let Some(t0) = self.0 {
+            h.observe(t0.elapsed().as_secs_f64());
+        }
+    }
+
+    /// Elapsed seconds, if the timer was armed.
+    pub fn elapsed_s(&self) -> Option<f64> {
+        self.0.map(|t0| t0.elapsed().as_secs_f64())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::thread;
+
+    #[test]
+    fn concurrent_increments_lose_no_updates() {
+        let reg = Registry::new();
+        let c = reg.counter("t_total", "test counter");
+        let h = reg.histogram("t_seconds", "test histogram", &[0.5, 1.0]);
+        let g = reg.gauge("t_gauge", "test gauge");
+        thread::scope(|s| {
+            for t in 0..8 {
+                let (c, h, g) = (Arc::clone(&c), Arc::clone(&h), Arc::clone(&g));
+                s.spawn(move || {
+                    for i in 0..10_000u64 {
+                        c.inc();
+                        h.observe((i % 3) as f64);
+                        g.add(1.0);
+                        let _ = t;
+                    }
+                });
+            }
+        });
+        assert_eq!(c.get(), 80_000);
+        assert_eq!(h.count(), 80_000);
+        assert_eq!(g.get(), 80_000.0);
+        let total: f64 = 8.0 * (0..10_000u64).map(|i| (i % 3) as f64).sum::<f64>();
+        assert!((h.sum() - total).abs() < 1e-6, "sum {} vs {total}", h.sum());
+    }
+
+    #[test]
+    fn bucket_boundaries_are_inclusive_upper_bounds() {
+        let h = Histogram::new(&[1.0, 2.0]);
+        h.observe(0.5); // le=1
+        h.observe(1.0); // le=1 (boundary lands in its own bucket)
+        h.observe(1.0000001); // le=2
+        h.observe(2.0); // le=2
+        h.observe(3.0); // +Inf
+        h.observe(-1.0); // le=1 (negatives fall in the lowest bucket)
+        h.observe(f64::NAN); // dropped
+        assert_eq!(h.bucket_counts(), vec![3, 2, 1]);
+        assert_eq!(h.count(), 6);
+    }
+
+    #[test]
+    fn exposition_is_parseable_and_stable_ordered() {
+        let reg = Registry::new();
+        // Register intentionally out of order; render must sort.
+        reg.gauge("zz_gauge", "last family");
+        reg.counter_with("aa_total", "first family", &[("route", "/b")]).add(2);
+        reg.counter_with("aa_total", "first family", &[("route", "/a")]).inc();
+        reg.histogram("mm_seconds", "middle family", &[0.1, 1.0]).observe(0.05);
+        let text = reg.render();
+        assert_eq!(text, reg.render(), "render must be deterministic");
+        let lines: Vec<&str> = text.lines().collect();
+        let first_aa = lines.iter().position(|l| l.starts_with("# HELP aa_total")).unwrap();
+        let first_mm = lines.iter().position(|l| l.starts_with("# HELP mm_seconds")).unwrap();
+        let first_zz = lines.iter().position(|l| l.starts_with("# HELP zz_gauge")).unwrap();
+        assert!(first_aa < first_mm && first_mm < first_zz);
+        // Series sorted within the family.
+        let a = lines.iter().position(|l| l.starts_with("aa_total{route=\"/a\"}")).unwrap();
+        let b = lines.iter().position(|l| l.starts_with("aa_total{route=\"/b\"}")).unwrap();
+        assert!(a < b);
+        assert!(lines.contains(&"aa_total{route=\"/a\"} 1"));
+        assert!(lines.contains(&"aa_total{route=\"/b\"} 2"));
+        // Every sample line is `name[{labels}] value` with a finite value.
+        for line in &lines {
+            if line.starts_with('#') {
+                continue;
+            }
+            let (name, value) = line.rsplit_once(' ').expect("sample line has a value");
+            assert!(!name.is_empty());
+            let finite = value.parse::<f64>().map(|v| v.is_finite()).unwrap_or(false);
+            assert!(value == "+Inf" || finite, "unparseable value in {line:?}");
+        }
+        // Histogram cumulates into _bucket/_sum/_count.
+        assert!(lines.contains(&"mm_seconds_bucket{le=\"0.1\"} 1"));
+        assert!(lines.contains(&"mm_seconds_bucket{le=\"1\"} 1"));
+        assert!(lines.contains(&"mm_seconds_bucket{le=\"+Inf\"} 1"));
+        assert!(lines.contains(&"mm_seconds_count 1"));
+    }
+
+    #[test]
+    fn encoder_survives_extreme_values() {
+        let reg = Registry::new();
+        reg.counter("zero_total", "never incremented");
+        reg.counter("max_total", "saturated").set_max(u64::MAX);
+        let g = reg.gauge("guarded_gauge", "NaN-guarded");
+        g.set(1.5);
+        g.set(f64::NAN); // ignored
+        g.set(f64::INFINITY); // ignored
+        g.add(f64::NEG_INFINITY); // ignored
+        let h = reg.histogram("wide_seconds", "extremes", LATENCY_BUCKETS);
+        h.observe(0.0);
+        h.observe(f64::MAX);
+        h.observe(f64::NAN);
+        let text = reg.render();
+        assert!(text.contains("zero_total 0\n"));
+        let max_line = format!("max_total {}\n", u64::MAX);
+        assert!(text.contains(&max_line), "u64::MAX must render exactly");
+        assert!(text.contains("guarded_gauge 1.5\n"));
+        assert!(text.contains("wide_seconds_count 2\n"));
+        assert!(!text.contains("NaN") && !text.contains("inf"), "no non-finite tokens:\n{text}");
+    }
+
+    #[test]
+    fn series_cardinality_is_capped_with_overflow_sink() {
+        let reg = Registry::new();
+        for i in 0..(MAX_SERIES_PER_FAMILY + 40) {
+            let id = format!("track-{i}");
+            reg.counter_with("cap_total", "capped", &[("track", &id)]).inc();
+        }
+        let text = reg.render();
+        let series = text.lines().filter(|l| l.starts_with("cap_total{")).count();
+        assert_eq!(series, MAX_SERIES_PER_FAMILY);
+        let overflow = text
+            .lines()
+            .find(|l| l.starts_with("cap_total{overflow=\"true\"}"))
+            .expect("overflow sink present");
+        let n: u64 = overflow.rsplit_once(' ').unwrap().1.parse().unwrap();
+        assert_eq!(n as usize, 40 + 1, "every overflowing registration lands in the sink");
+    }
+
+    #[test]
+    fn label_values_are_escaped() {
+        let reg = Registry::new();
+        reg.counter_with("esc_total", "escapes", &[("k", "a\"b\\c\nd")]).inc();
+        let text = reg.render();
+        assert!(text.contains("esc_total{k=\"a\\\"b\\\\c\\nd\"} 1"), "got:\n{text}");
+    }
+
+    #[test]
+    fn kind_mismatch_returns_detached_metric() {
+        let reg = Registry::new();
+        reg.counter("mixed_total", "counter first").add(7);
+        let g = reg.gauge("mixed_total", "gauge second");
+        g.set(3.0); // must not corrupt the registered counter
+        let text = reg.render();
+        assert!(text.contains("mixed_total 7"));
+        assert!(!text.contains("mixed_total 3"));
+    }
+
+    #[test]
+    fn request_ids_are_monotonic() {
+        let a = next_request_id();
+        let b = next_request_id();
+        assert!(b > a);
+    }
+}

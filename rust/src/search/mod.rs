@@ -24,6 +24,8 @@
 //! bracket is always closed (previously the bracket stayed open and the
 //! refinement degenerated to re-probing the doubling points).
 
+use std::sync::{Arc, OnceLock};
+
 use anyhow::{ensure, Result};
 
 use crate::markov::{BuildOptions, MalleableModel, ModelBuilder, ModelInputs, SharedBuilder};
@@ -232,7 +234,36 @@ pub fn select_interval(
 /// as in [`select_interval`]. A cold builder reproduces
 /// [`select_interval`] bit for bit.
 pub fn select_interval_shared(builder: &SharedBuilder, cfg: &SearchConfig) -> Result<SearchResult> {
-    run_search(cfg, &mut |i| builder.uwt(i))
+    let result = run_search(cfg, &mut |i| builder.uwt(i));
+    if let Ok(r) = &result {
+        let o = search_obs();
+        o.selects.inc();
+        o.probes.add(r.evaluations as u64);
+    }
+    result
+}
+
+/// Registry handles for the search engine, resolved once (DESIGN.md §14).
+pub(crate) struct SearchObs {
+    pub(crate) selects: Arc<crate::obs::Counter>,
+    pub(crate) probes: Arc<crate::obs::Counter>,
+}
+
+pub(crate) fn search_obs() -> &'static SearchObs {
+    static OBS: OnceLock<SearchObs> = OnceLock::new();
+    OBS.get_or_init(|| {
+        let r = crate::obs::global();
+        SearchObs {
+            selects: r.counter(
+                "mckpt_search_selects_total",
+                "Interval searches run on long-lived builders.",
+            ),
+            probes: r.counter(
+                "mckpt_search_probes_total",
+                "UWT probes evaluated across those searches.",
+            ),
+        }
+    })
 }
 
 /// The pre-cache path: every probe builds `M^mall` from scratch. Kept as

@@ -38,15 +38,53 @@ pub mod snapshot;
 pub mod wal;
 
 use std::path::{Path, PathBuf};
-use std::sync::Arc;
+use std::sync::{Arc, OnceLock};
 
 use anyhow::{bail, ensure, Context, Result};
 
 pub use io::{FaultIo, FaultPlan, RealIo, StoreError, StoreIo};
 pub use wal::{SpecRecord, Wal, WalRecord};
 
+use crate::obs;
 use crate::traces::TraceTail;
 use crate::util::json::Json;
+
+/// Registry handles for the store layer, resolved once (DESIGN.md §14).
+pub(crate) struct StoreObs {
+    pub(crate) wal_appends: Arc<obs::Counter>,
+    pub(crate) wal_append_bytes: Arc<obs::Counter>,
+    pub(crate) wal_fsync_seconds: Arc<obs::Histogram>,
+    pub(crate) recovery_truncations: Arc<obs::Counter>,
+    pub(crate) compactions: Arc<obs::Counter>,
+    pub(crate) compaction_seconds: Arc<obs::Histogram>,
+}
+
+pub(crate) fn store_obs() -> &'static StoreObs {
+    static OBS: OnceLock<StoreObs> = OnceLock::new();
+    OBS.get_or_init(|| {
+        let r = obs::global();
+        StoreObs {
+            wal_appends: r.counter("mckpt_store_wal_appends_total", "WAL records appended."),
+            wal_append_bytes: r
+                .counter("mckpt_store_wal_append_bytes_total", "WAL bytes appended."),
+            wal_fsync_seconds: r.histogram(
+                "mckpt_store_wal_fsync_seconds",
+                "WAL fsync latency.",
+                obs::LATENCY_BUCKETS,
+            ),
+            recovery_truncations: r.counter(
+                "mckpt_store_recovery_truncations_total",
+                "Torn WAL tails truncated during crash recovery.",
+            ),
+            compactions: r.counter("mckpt_store_compactions_total", "Track snapshot compactions."),
+            compaction_seconds: r.histogram(
+                "mckpt_store_compaction_seconds",
+                "Snapshot compaction latency (sync + snapshot + generation roll).",
+                obs::LATENCY_BUCKETS,
+            ),
+        }
+    })
+}
 
 /// Default WAL size that triggers a background compaction.
 pub const DEFAULT_COMPACT_WAL_BYTES: u64 = 4 << 20;
@@ -356,6 +394,15 @@ impl TrackStore {
     /// covering everything appended so far, start `wal-(gen+1)`, drop the
     /// old log. Crash-safe at every step (module docs).
     pub fn compact(&mut self, state: &TrackState) -> Result<()> {
+        let timer = obs::timer();
+        self.compact_inner(state)?;
+        let o = store_obs();
+        o.compactions.inc();
+        timer.observe(&o.compaction_seconds);
+        Ok(())
+    }
+
+    fn compact_inner(&mut self, state: &TrackState) -> Result<()> {
         self.wal.sync()?;
         snapshot::write_with(self.io.as_ref(), &self.dir, self.gen, self.wal.records(), state)?;
         let next = self.gen + 1;

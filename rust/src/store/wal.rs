@@ -32,9 +32,11 @@ use std::path::{Path, PathBuf};
 use anyhow::{bail, ensure, Context, Result};
 
 use super::io::{RealIo, StoreError, StoreFile, StoreIo};
+use super::store_obs;
 
 use crate::config::SystemParams;
 use crate::markov::{BuildOptions, ModelInputs};
+use crate::obs;
 use crate::policies::ReschedulingPolicy;
 use crate::search::SearchConfig;
 use crate::util::fnv::fnv1a_64;
@@ -421,6 +423,7 @@ impl Wal {
         if s.torn() {
             io.truncate(path, s.valid_len)
                 .map_err(|e| StoreError::io("wal-truncate-torn-tail", path, e))?;
+            store_obs().recovery_truncations.inc();
         }
         let file =
             io.open_append(path).map_err(|e| StoreError::io("wal-open-append", path, e))?;
@@ -440,6 +443,9 @@ impl Wal {
             .map_err(|e| StoreError::io("wal-append", &self.path, e))?;
         self.bytes += frame.len() as u64;
         self.records += 1;
+        let o = store_obs();
+        o.wal_appends.inc();
+        o.wal_append_bytes.add(frame.len() as u64);
         Ok(())
     }
 
@@ -451,8 +457,10 @@ impl Wal {
 
     /// Force bytes to stable storage (compaction boundaries).
     pub fn sync(&mut self) -> Result<()> {
+        let timer = obs::timer();
         self.file.flush().map_err(|e| StoreError::io("wal-flush", &self.path, e))?;
         self.file.sync_data().map_err(|e| StoreError::io("wal-sync", &self.path, e))?;
+        timer.observe(&store_obs().wal_fsync_seconds);
         Ok(())
     }
 

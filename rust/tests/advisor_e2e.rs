@@ -60,6 +60,55 @@ fn http(addr: SocketAddr, method: &str, path: &str, body: &str) -> (u16, Json) {
     (code, json)
 }
 
+/// Raw variant of [`http`]: returns the status code, the full header
+/// block, and the body text without assuming JSON (used for `/metrics`).
+fn http_raw(addr: SocketAddr, method: &str, path: &str, body: &str) -> (u16, String, String) {
+    let mut stream = TcpStream::connect(addr).expect("connect");
+    stream.set_read_timeout(Some(Duration::from_secs(30))).unwrap();
+    let req = format!(
+        "{method} {path} HTTP/1.1\r\nHost: {addr}\r\nContent-Type: application/json\r\n\
+         Content-Length: {}\r\nConnection: close\r\n\r\n{body}",
+        body.len()
+    );
+    stream.write_all(req.as_bytes()).expect("send request");
+    let mut text = String::new();
+    stream.read_to_string(&mut text).expect("read response");
+    let code: u16 = text
+        .split_whitespace()
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .unwrap_or_else(|| panic!("malformed status line in {text:?}"));
+    let at = text.find("\r\n\r\n").expect("header/body separator");
+    (code, text[..at].to_string(), text[at + 4..].to_string())
+}
+
+/// The value of one exposition series, matched by line prefix (family
+/// name or `family{labels...}`).
+fn metric_value(exposition: &str, prefix: &str) -> Option<f64> {
+    exposition.lines().find_map(|l| {
+        let rest = l.strip_prefix(prefix)?;
+        let (sep, val) = rest.split_at(1);
+        if sep != " " && sep != "{" {
+            return None;
+        }
+        let val = if sep == "{" { val.split_once("} ").map(|(_, v)| v)? } else { val };
+        val.trim().parse().ok()
+    })
+}
+
+fn request_id(head: &str) -> u64 {
+    head.lines()
+        .find_map(|l| {
+            let (name, value) = l.split_once(':')?;
+            if name.eq_ignore_ascii_case("x-request-id") {
+                value.trim().parse().ok()
+            } else {
+                None
+            }
+        })
+        .unwrap_or_else(|| panic!("missing X-Request-Id in {head:?}"))
+}
+
 fn select_body(n: usize, mttf_days: f64, app: &str, track: Option<&str>) -> String {
     let mut s = format!(
         r#"{{"system": {{"n": {n}, "mttf_days": {mttf_days}, "mttr_min": 40}}, "app": "{app}", "search": {{"refine_steps": 3}}"#
@@ -486,6 +535,79 @@ fn select_batch_endpoint_round_trip() {
     // Status reflects the batch traffic.
     let (_, status) = http(addr, "GET", "/v1/status", "");
     assert_eq!(status.path("requests.select_batch").unwrap().as_f64(), Some(1.0));
+
+    let (code, _) = http(addr, "POST", "/v1/shutdown", "");
+    assert_eq!(code, 200);
+    handle.join().expect("server thread");
+}
+
+#[test]
+fn metrics_endpoint_exposes_every_layer_and_tracks_cache_hits() {
+    let (addr, handle) = boot(AdvisorConfig::default());
+
+    // One cold select, then a repeat that must hit the cache.
+    let (code, _) = http(addr, "POST", "/v1/select", &select_body(6, 3.0, "md", None));
+    assert_eq!(code, 200);
+    let (code, repeat) = http(addr, "POST", "/v1/select", &select_body(6, 3.0, "md", None));
+    assert_eq!(code, 200);
+    assert_eq!(repeat.get("cached").unwrap().as_bool(), Some(true));
+
+    let (code, head, text) = http_raw(addr, "GET", "/metrics", "");
+    assert_eq!(code, 200, "scrape failed: {text}");
+    assert!(
+        head.contains("text/plain; version=0.0.4"),
+        "missing Prometheus content type in {head:?}"
+    );
+
+    // Every subsystem's families are listed on the very first scrape,
+    // even the ones idle in this configuration (store, replication).
+    for family in [
+        "mckpt_http_requests_total",
+        "mckpt_http_request_seconds",
+        "mckpt_requests_total",
+        "mckpt_cache_hits_total",
+        "mckpt_cache_misses_total",
+        "mckpt_store_wal_appends_total",
+        "mckpt_replication_rounds_total",
+        "mckpt_search_selects_total",
+        "mckpt_builder_probes_total",
+    ] {
+        assert!(text.contains(&format!("# HELP {family} ")), "family {family} missing");
+        assert!(text.contains(&format!("# TYPE {family} ")), "family {family} untyped");
+    }
+
+    // The registry is process-global and other tests share it, so pin
+    // lower bounds, not exact counts.
+    assert!(metric_value(&text, "mckpt_cache_hits_total").unwrap() >= 1.0, "no hit: {text}");
+    assert!(metric_value(&text, "mckpt_cache_misses_total").unwrap() >= 1.0);
+    assert!(metric_value(&text, "mckpt_search_selects_total").unwrap() >= 1.0);
+    let select_series = r#"mckpt_http_requests_total{route="/v1/select"}"#;
+    assert!(metric_value(&text, select_series).unwrap() >= 2.0);
+
+    // Exposition syntax: every sample line is `name[{labels}] value`
+    // with a parseable finite value, and comments only HELP/TYPE.
+    for line in text.lines().filter(|l| !l.is_empty()) {
+        if let Some(comment) = line.strip_prefix('#') {
+            let word = comment.split_whitespace().next().unwrap_or_default();
+            assert!(word == "HELP" || word == "TYPE", "unknown comment {line:?}");
+            continue;
+        }
+        assert!(line.starts_with("mckpt_"), "foreign sample {line:?}");
+        let value = line.rsplit(' ').next().unwrap();
+        let parsed: f64 = value.parse().unwrap_or_else(|e| panic!("bad value {line:?}: {e}"));
+        assert!(parsed.is_finite(), "non-finite sample {line:?}");
+    }
+
+    // Request ids are echoed and strictly increase across requests on
+    // this daemon — the loopback that ties a response to its log lines.
+    let (_, head_a, _) = http_raw(addr, "GET", "/healthz", "");
+    let (_, head_b, _) = http_raw(addr, "GET", "/v1/status", "");
+    assert!(request_id(&head_b) > request_id(&head_a), "{head_a:?} vs {head_b:?}");
+
+    // A second scrape is monotone in the counters the first one showed.
+    let before = metric_value(&text, select_series).unwrap();
+    let (_, _, text2) = http_raw(addr, "GET", "/metrics", "");
+    assert!(metric_value(&text2, select_series).unwrap() >= before);
 
     let (code, _) = http(addr, "POST", "/v1/shutdown", "");
     assert_eq!(code, 200);

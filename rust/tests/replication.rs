@@ -103,6 +103,37 @@ fn http(
     (code, json)
 }
 
+/// One-shot GET returning the raw body text (used for `/metrics`, the
+/// one non-JSON endpoint).
+fn http_text(addr: SocketAddr, path: &str) -> (u16, String) {
+    let mut stream = TcpStream::connect(addr).expect("connect");
+    stream.set_read_timeout(Some(Duration::from_secs(30))).unwrap();
+    let req = format!("GET {path} HTTP/1.1\r\nHost: {addr}\r\nConnection: close\r\n\r\n");
+    stream.write_all(req.as_bytes()).expect("send request");
+    let mut text = String::new();
+    stream.read_to_string(&mut text).expect("read response");
+    let code: u16 = text
+        .split_whitespace()
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .unwrap_or_else(|| panic!("malformed status line in {text:?}"));
+    let at = text.find("\r\n\r\n").expect("header/body separator") + 4;
+    (code, text[at..].to_string())
+}
+
+/// The value of one exposition series, matched by line prefix.
+fn metric_value(exposition: &str, prefix: &str) -> Option<f64> {
+    exposition.lines().find_map(|l| {
+        let rest = l.strip_prefix(prefix)?;
+        let (sep, val) = rest.split_at(1);
+        if sep != " " && sep != "{" {
+            return None;
+        }
+        let val = if sep == "{" { val.split_once("} ").map(|(_, v)| v)? } else { val };
+        val.trim().parse().ok()
+    })
+}
+
 fn select_body(n: usize, mttf_days: f64, app: &str, track: Option<&str>) -> String {
     let mut s = format!(
         r#"{{"system": {{"n": {n}, "mttf_days": {mttf_days}, "mttr_min": 40}}, "app": "{app}", "search": {{"refine_steps": 3}}"#
@@ -272,6 +303,26 @@ fn replica_catches_up_bit_identical_and_survives_primary_death() {
     // dropping the WAL generations the primary deleted. ---
     padvisor.persist_all().expect("second primary compaction");
     wait_files_identical(&ptrack, &rtrack, "post-compaction catch-up");
+
+    // --- Observability: the replica's /metrics answers without a token
+    // (the daemon is token-gated otherwise, asserted above) and pins
+    // convergence — at least one completed round, bytes actually pulled,
+    // and the per-track lag gauge down to exactly 0. The round counter
+    // lands just after the files do, so poll briefly.
+    let deadline = Instant::now() + Duration::from_secs(30);
+    loop {
+        let (code, text) = http_text(raddr, "/metrics");
+        assert_eq!(code, 200, "scrape must be auth-exempt: {text}");
+        let rounds = metric_value(&text, "mckpt_replication_rounds_total").unwrap_or(0.0);
+        let lag = metric_value(&text, r#"mckpt_replication_lag_bytes{track="c1"}"#);
+        if rounds >= 1.0 && lag == Some(0.0) {
+            let pulled = metric_value(&text, "mckpt_replication_bytes_pulled_total").unwrap();
+            assert!(pulled >= 1.0, "catch-up pulled no bytes: {text}");
+            break;
+        }
+        assert!(Instant::now() < deadline, "replication metrics never converged: {text}");
+        std::thread::sleep(Duration::from_millis(50));
+    }
 
     // --- Kill the primary; the replica keeps serving reads. ---
     let (code, _) = http(paddr, "POST", "/v1/shutdown", "", Some(TOKEN));

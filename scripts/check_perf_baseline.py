@@ -14,7 +14,10 @@ A baseline is sane when:
     that defines "no regression" means the measurement itself is broken);
   * the `serve_load` daemon section is present with ordered, finite tail
     latencies (p50 <= p99 <= p99.9), positive throughput, and a
-    saturation probe that actually observed 503 sheds.
+    saturation probe that actually observed 503 sheds;
+  * the `obs_overhead` section shows the observability layer costing the
+    cached-select hot path less than 5% vs `--no-obs` (negative overhead
+    is measurement noise and clamps to 0).
 
 Usage: check_perf_baseline.py [BENCH_perf.json]
 Exits non-zero (with a reason) on an insane file.
@@ -70,6 +73,26 @@ def check_serve_load(report: dict) -> None:
         )
 
 
+def check_obs_overhead(report: dict) -> None:
+    """The observability acceptance gate: instrumentation must cost the
+    cached-select hot path under 5%."""
+    obs = report.get("obs_overhead")
+    if not isinstance(obs, dict):
+        fail("missing 'obs_overhead' section (instrumented vs --no-obs selects)")
+    for key in ("instrumented_s", "no_obs_s", "iters"):
+        if not is_positive_number(obs.get(key)):
+            fail(f"obs_overhead.{key} = {obs.get(key)!r} (want a finite positive number)")
+    pct = obs.get("overhead_pct")
+    if not isinstance(pct, (int, float)) or not math.isfinite(pct):
+        fail(f"obs_overhead.overhead_pct = {pct!r} (want a finite number)")
+    overhead = max(0.0, float(pct))
+    if overhead >= 5.0:
+        fail(
+            f"obs_overhead.overhead_pct = {pct:.2f}% >= 5% — instrumentation "
+            "is too expensive for the hot path"
+        )
+
+
 def main() -> None:
     path = sys.argv[1] if len(sys.argv) > 1 else "BENCH_perf.json"
     try:
@@ -87,6 +110,7 @@ def main() -> None:
         fail("missing numeric suite.overall_speedup")
 
     check_serve_load(report)
+    check_obs_overhead(report)
 
     entries = walk_speedups(report)
     if not entries:

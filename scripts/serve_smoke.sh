@@ -17,7 +17,11 @@
 #   5. batch surface: POST /v1/select_batch with a mixed batch (a cached
 #      item, a cold item, a tracked item at re-fitted rates) diffed
 #      item-for-item against the offline oracle, and a malformed-item
-#      body that must 400 naming the failing index.
+#      body that must 400 naming the failing index,
+#   6. observability: scrape GET /metrics twice with traffic in between —
+#      the exposition must parse, list every subsystem's families
+#      (server, advisor/cache, store, replication, search), and every
+#      counter must be monotone across the two scrapes.
 #
 # Used by the `serve-smoke` CI job; runnable locally after
 # `cargo build --release`.
@@ -94,6 +98,60 @@ grep -q 'items\[1\]' "$batch_err_body" || {
 }
 rm -f "$batch_err_body"
 echo "serve smoke: malformed batch item rejected with the failing index"
+
+# Observability: two scrapes with a (cached) select in between. The
+# exposition must be parseable, cover every subsystem, and be monotone.
+scrape1=$(curl -sf "http://${ADDR}/metrics")
+curl -sf "http://${ADDR}/v1/select" -d "$req" >/dev/null
+scrape2=$(curl -sf "http://${ADDR}/metrics")
+
+python3 - "$scrape1" "$scrape2" <<'EOF'
+import sys
+
+def parse(text):
+    series = {}
+    for line in text.splitlines():
+        if not line:
+            continue
+        if line.startswith("#"):
+            assert line.startswith("# HELP ") or line.startswith("# TYPE "), f"bad comment: {line!r}"
+            continue
+        name, _, value = line.rpartition(" ")
+        assert name.startswith("mckpt_"), f"foreign sample: {line!r}"
+        v = float(value)
+        assert v == v and abs(v) != float("inf"), f"non-finite sample: {line!r}"
+        series[name] = v
+    return series
+
+s1, s2 = parse(sys.argv[1]), parse(sys.argv[2])
+
+families = [
+    "mckpt_http_requests_total",    # server
+    "mckpt_requests_total",         # advisor endpoints
+    "mckpt_cache_hits_total",       # recommendation cache
+    "mckpt_store_wal_appends_total",  # store/WAL
+    "mckpt_replication_rounds_total", # replication
+    "mckpt_search_selects_total",   # search engine
+]
+for fam in families:
+    for text in (sys.argv[1], sys.argv[2]):
+        assert f"# HELP {fam} " in text, f"family {fam} missing from scrape"
+        assert f"# TYPE {fam} " in text, f"family {fam} untyped"
+
+# Counters are monotone: nothing present in scrape 1 may shrink or vanish.
+for name, v1 in s1.items():
+    if "_total" in name:
+        v2 = s2.get(name)
+        assert v2 is not None, f"counter {name} vanished between scrapes"
+        assert v2 >= v1, f"counter {name} went backwards: {v1} -> {v2}"
+
+hits = 'mckpt_cache_hits_total'
+assert s2[hits] >= s1[hits] + 1, f"the in-between select must land a cache hit: {s1[hits]} -> {s2[hits]}"
+sel = 'mckpt_http_requests_total{route="/v1/select"}'
+assert s2[sel] >= s1[sel] + 1, f"select route counter must advance: {s1[sel]} -> {s2[sel]}"
+assert s2['mckpt_search_selects_total'] >= 1, "search layer never counted a select"
+print("serve smoke: /metrics parseable, all subsystems listed, counters monotone")
+EOF
 
 curl -sf "http://${ADDR}/v1/shutdown" -d '{}' >/dev/null
 wait "$SERVE_PID"
@@ -363,6 +421,26 @@ if [ "$caught_up" != "1" ]; then
     exit 1
 fi
 echo "replication smoke: replica caught up (lambda ${primary_lam})"
+
+# /metrics stays open on the token-gated replica (no Authorization header
+# here), and the replication families pin convergence: at least one
+# completed round, bytes pulled, and the track's lag gauge at exactly 0.
+replica_metrics=$(curl -sf "http://${ADDR4}/metrics")
+python3 - "$replica_metrics" <<'EOF'
+import sys
+
+series = {}
+for line in sys.argv[1].splitlines():
+    if line and not line.startswith("#"):
+        name, _, value = line.rpartition(" ")
+        series[name] = float(value)
+
+assert series.get("mckpt_replication_rounds_total", 0) >= 1, "no completed catch-up round"
+assert series.get("mckpt_replication_bytes_pulled_total", 0) >= 1, "no bytes pulled"
+lag = series.get('mckpt_replication_lag_bytes{track="c1"}')
+assert lag == 0.0, f"replication lag must converge to 0, got {lag!r}"
+print("replication smoke: tokenless /metrics shows rounds>=1 and zero lag")
+EOF
 
 # Writes are rejected on the replica, pointing at the primary.
 code=$(curl -s -o /dev/null -w '%{http_code}' -H "$AUTH" "http://${ADDR4}/v1/ingest" -d "$ingest_body")
