@@ -604,6 +604,53 @@ fn main() {
         report.set("obs_overhead", o);
     }
 
+    // --- trace_overhead: span recording cost on the hot path ------------
+    // The acceptance gate for the tracing layer (DESIGN.md §15): cached
+    // `Advisor::select` under a per-request root span with `--trace-sample
+    // always` (every tree recorded and pushed through the ring) vs
+    // `--trace-sample off` (root bails to an inert guard, spans are
+    // no-ops). Both loops open the root, so the delta is exactly what
+    // sampling buys back. The checker requires < 5% overhead.
+    header("trace_overhead: cached selects, span recording vs --trace-sample off");
+    {
+        use malleable_ckpt::obs::trace;
+        let advisor = Advisor::new(AdvisorConfig::default());
+        let body = r#"{"system": {"n": 32, "mttf_days": 4, "mttr_min": 40}, "app": "qr", "search": {"refine_steps": 2}}"#;
+        let req = protocol::parse_select(&Json::parse(body).unwrap()).unwrap();
+        advisor.select(&req).unwrap(); // warm: the timed loops are pure cache hits
+        let iters = if smoke { 20_000usize } else { 100_000 };
+        trace::configure_ring(trace::DEFAULT_RING_TREES);
+        trace::set_sampling(trace::Sampling::Always);
+        let traced = bench(&format!("{iters} cached selects (trace always)"), 1, 5, 10.0, || {
+            for i in 0..iters {
+                let root = trace::root("request", i as u64);
+                std::hint::black_box(advisor.select(&req).unwrap());
+                root.finish(200);
+            }
+        });
+        trace::set_sampling(trace::Sampling::Off);
+        let untraced = bench(&format!("{iters} cached selects (trace off)"), 1, 5, 10.0, || {
+            for i in 0..iters {
+                let root = trace::root("request", i as u64);
+                std::hint::black_box(advisor.select(&req).unwrap());
+                root.finish(200);
+            }
+        });
+        trace::set_sampling(trace::Sampling::Always);
+        let overhead_pct = (traced.min_s / untraced.min_s.max(1e-12) - 1.0) * 100.0;
+        println!(
+            "    => trace overhead: {overhead_pct:+.2}% ({:.0} ns/select traced, {:.0} ns/select off)",
+            traced.min_s / iters as f64 * 1e9,
+            untraced.min_s / iters as f64 * 1e9,
+        );
+        let mut o = speedup_obj("trace overhead (always vs off)", &traced, &untraced);
+        o.set("iters", Json::from(iters as f64))
+            .set("traced_s", Json::from(traced.min_s))
+            .set("no_trace_s", Json::from(untraced.min_s))
+            .set("overhead_pct", Json::from(overhead_pct));
+        report.set("trace_overhead", o);
+    }
+
     let path = "BENCH_perf.json";
     // The checked-in copy (when present) is the perf baseline; read it
     // (text and parsed) before overwriting so the regression gate below

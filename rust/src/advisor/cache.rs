@@ -24,7 +24,7 @@ use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
 
 use crate::markov::{ModelInputs, SharedBuilder};
-use crate::search::{SearchConfig, SearchResult};
+use crate::search::{SearchConfig, SearchResult, SearchTrace};
 
 /// Canonical cache key of one recommendation request — the same
 /// definition [`crate::api::SelectBatch`] dedupes batches by
@@ -44,6 +44,9 @@ pub struct CacheEntry {
     pub key: u64,
     pub builder: Arc<SharedBuilder>,
     pub result: SearchResult,
+    /// The search trajectory behind `result` — served by `/v1/explain`.
+    /// Shared (`Arc`) so cloning entries out of the cache stays cheap.
+    pub trace: Arc<SearchTrace>,
     /// Failure/repair rates the result was computed with (the drift
     /// reference for ingest-tracked systems).
     pub lambda: f64,
@@ -240,6 +243,7 @@ mod tests {
                 probes: vec![(3_600.0, 1.0)],
                 evaluations: 1,
             },
+            trace: Arc::new(SearchTrace::default()),
             lambda: inp.system.lambda,
             theta: inp.system.theta,
             bytes,

@@ -83,9 +83,9 @@ use anyhow::{Context, Result};
 
 use crate::api::{self, SelectSpec};
 use crate::markov::{BuildOptions, ModelInputs, SharedBuilder};
-use crate::obs::{self, log as olog};
+use crate::obs::{self, log as olog, trace};
 use crate::runtime::ComputeEngine;
-use crate::search::{select_interval_shared, SearchConfig};
+use crate::search::{select_interval_shared_traced, SearchConfig};
 use crate::store::{SpecRecord, TraceStore, TrackState};
 use crate::util::json::Json;
 
@@ -326,6 +326,7 @@ impl Advisor {
                 key: fresh_key,
                 builder,
                 result: ok.search.clone(),
+                trace: Arc::clone(&ok.trace),
                 lambda,
                 theta,
                 bytes,
@@ -351,7 +352,11 @@ impl Advisor {
 
     fn select_impl(&self, req: &SelectRequest) -> Result<Json> {
         let (inputs, key, fresh_key) = self.resolve(req)?;
-        if let Some(entry) = self.cache.get(key) {
+        let hit = {
+            let _lookup = trace::span("cache_lookup");
+            self.cache.get(key)
+        };
+        if let Some(entry) = hit {
             // Register with the rates the served entry was computed with:
             // the drift reference must describe the recommendation, not
             // the request.
@@ -614,6 +619,58 @@ impl Advisor {
         Ok(o)
     }
 
+    /// Answer `GET /v1/explain?key=<16 hex>`: the full search trajectory
+    /// behind one cached recommendation (every probed δ with its UWT,
+    /// search phase, warm/cold π start and solve iterations — DESIGN.md
+    /// §15). Peeks only: explain must not perturb the cache's LRU order
+    /// or its hit/miss counters. `None` when the key is not cached
+    /// (evicted or never selected) — the server answers 404.
+    pub fn explain_key(&self, key: u64) -> Option<Json> {
+        let entry = self.cache.peek(key)?;
+        Some(protocol::explain_response(
+            entry.key,
+            &entry.result,
+            &entry.trace,
+            entry.lambda,
+            entry.theta,
+            entry.stale,
+            None,
+        ))
+    }
+
+    /// Answer `GET /v1/explain?track=<id>`: one explain payload per
+    /// registered spec of the track (in registration order), wrapped in
+    /// a `{"track", "count", "results"}` envelope. Specs whose entries
+    /// were evicted are skipped — `count` reports what survives. `None`
+    /// when the track does not exist.
+    pub fn explain_track(&self, track_id: &str) -> Option<Json> {
+        let handle = self.track_handle(track_id)?;
+        let keys: Vec<u64> = {
+            let track = handle.lock().unwrap();
+            track.specs.iter().map(|s| s.key).collect()
+        };
+        let mut results = Vec::new();
+        for key in keys {
+            if let Some(entry) = self.cache.peek(key) {
+                results.push(protocol::explain_response(
+                    entry.key,
+                    &entry.result,
+                    &entry.trace,
+                    entry.lambda,
+                    entry.theta,
+                    entry.stale,
+                    Some(track_id),
+                ));
+            }
+        }
+        let mut o = Json::obj();
+        o.set("ok", Json::from(true))
+            .set("track", Json::from(track_id))
+            .set("count", Json::from(results.len()))
+            .set("results", Json::Arr(results));
+        Some(o)
+    }
+
     /// One `model` probe (diagnostics; not cached).
     pub fn model(&self, req: &ModelRequest) -> Result<Json> {
         self.models.inc();
@@ -677,13 +734,14 @@ impl Advisor {
         if let Some(pi) = &job.seed {
             builder.seed_pi(pi.clone());
         }
-        let result = select_interval_shared(&builder, &job.cfg)?;
+        let (result, trace) = select_interval_shared_traced(&builder, &job.cfg)?;
         let new_key = canonical_key(&job.inputs, &job.cfg);
         let bytes = entry_bytes(&builder, result.probes.len());
         self.cache.insert(CacheEntry {
             key: new_key,
             builder,
             result,
+            trace: Arc::new(trace),
             lambda: job.inputs.system.lambda,
             theta: job.inputs.system.theta,
             bytes,
@@ -1154,6 +1212,62 @@ mod tests {
             other.get("key").unwrap().as_str(),
             first.get("key").unwrap().as_str()
         );
+    }
+
+    #[test]
+    fn explain_serves_the_cached_search_trajectory() {
+        let advisor = Advisor::new(AdvisorConfig::default());
+        assert!(advisor.explain_key(0xdead).is_none(), "unknown key must 404");
+        assert!(advisor.explain_track("nope").is_none(), "unknown track must 404");
+        let req = select_req(2.0, Some("c1"));
+        let resp = advisor.select(&req).unwrap();
+        let key = u64::from_str_radix(resp.get("key").unwrap().as_str().unwrap(), 16).unwrap();
+        let ex = advisor.explain_key(key).unwrap();
+        assert_eq!(ex.get("ok").unwrap().as_bool(), Some(true));
+        assert_eq!(ex.get("stale").unwrap().as_bool(), Some(false));
+        assert_eq!(
+            ex.get("interval").unwrap().as_f64(),
+            resp.get("interval").unwrap().as_f64()
+        );
+        // One trace probe per evaluation; re-sorted by interval they are
+        // exactly the result's probed (interval, UWT) pairs.
+        let probes = ex.get("probes").unwrap().as_arr().unwrap();
+        assert_eq!(
+            probes.len() as f64,
+            resp.get("evaluations").unwrap().as_f64().unwrap()
+        );
+        let mut pairs: Vec<(f64, f64)> = probes
+            .iter()
+            .map(|p| {
+                (
+                    p.get("interval").unwrap().as_f64().unwrap(),
+                    p.get("uwt").unwrap().as_f64().unwrap(),
+                )
+            })
+            .collect();
+        pairs.sort_by(|a, b| a.0.total_cmp(&b.0));
+        let want: Vec<(f64, f64)> = resp
+            .get("probes")
+            .unwrap()
+            .as_arr()
+            .unwrap()
+            .iter()
+            .map(|p| {
+                let p = p.as_arr().unwrap();
+                (p[0].as_f64().unwrap(), p[1].as_f64().unwrap())
+            })
+            .collect();
+        assert_eq!(pairs, want, "trace probes must mirror the result's probe set");
+        // The first probe is the cold doubling probe at i_min.
+        assert_eq!(probes[0].get("phase").unwrap().as_str(), Some("doubling"));
+        assert_eq!(probes[0].get("warm").unwrap().as_bool(), Some(false));
+        // The track view wraps the same payload per registered spec.
+        let tv = advisor.explain_track("c1").unwrap();
+        assert_eq!(tv.get("count").unwrap().as_f64(), Some(1.0));
+        let r0 = &tv.get("results").unwrap().as_arr().unwrap()[0];
+        assert_eq!(r0.get("key").unwrap().as_str(), resp.get("key").unwrap().as_str());
+        assert_eq!(r0.get("track").unwrap().as_str(), Some("c1"));
+        assert_eq!(r0.get("interval").unwrap().as_f64(), resp.get("interval").unwrap().as_f64());
     }
 
     #[test]

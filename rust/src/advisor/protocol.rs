@@ -58,7 +58,7 @@ use super::ingest::IngestEvent;
 use crate::apps::AppProfile;
 use crate::config::{paper_system, SystemParams};
 use crate::policies::ReschedulingPolicy;
-use crate::search::{SearchConfig, SearchResult};
+use crate::search::{SearchConfig, SearchResult, SearchTrace};
 use crate::util::json::Json;
 
 /// A parsed, validated `select` request (rates not yet track-adjusted —
@@ -343,6 +343,32 @@ pub fn select_response(
     o
 }
 
+/// The `GET /v1/explain` response body: a small server envelope (key,
+/// rates, staleness) around [`SearchTrace::explain_json`]. The trace
+/// fields are emitted verbatim so `scripts/serve_smoke.sh` can diff the
+/// payload against `select --json --explain` (only the per-probe
+/// `seconds` differ between a daemon run and an offline run).
+pub fn explain_response(
+    entry_key: u64,
+    result: &SearchResult,
+    trace: &SearchTrace,
+    lambda: f64,
+    theta: f64,
+    stale: bool,
+    track: Option<&str>,
+) -> Json {
+    let mut o = trace.explain_json(result);
+    o.set("ok", Json::from(true))
+        .set("key", Json::from(key_hex(entry_key)))
+        .set("stale", Json::from(stale))
+        .set("lambda", Json::from(lambda))
+        .set("theta", Json::from(theta));
+    if let Some(t) = track {
+        o.set("track", Json::from(t));
+    }
+    o
+}
+
 pub fn error_response(message: &str) -> Json {
     let mut o = Json::obj();
     o.set("ok", Json::from(false)).set("error", Json::from(message));
@@ -522,6 +548,54 @@ mod tests {
         let r = parse_model(&parse(r#"{"system": "condor/64"}"#)).unwrap();
         assert_eq!(r.interval, 3_600.0);
         assert!(parse_model(&parse(r#"{"system": "condor/64", "interval": -5}"#)).is_err());
+    }
+
+    #[test]
+    fn explain_response_wraps_the_trace_verbatim() {
+        use crate::search::{ProbePhase, ProbeTrace};
+        let res = SearchResult {
+            interval: 4_200.0,
+            uwt: 7.25,
+            best_probed: 4_800.0,
+            probes: vec![(300.0, 1.5), (4_800.0, 7.5)],
+            evaluations: 2,
+        };
+        let trace = SearchTrace {
+            probes: vec![
+                ProbeTrace {
+                    interval: 300.0,
+                    uwt: 1.5,
+                    phase: ProbePhase::Doubling,
+                    warm_start: false,
+                    solve_iters: 41,
+                    seconds: 0.001,
+                },
+                ProbeTrace {
+                    interval: 4_800.0,
+                    uwt: 7.5,
+                    phase: ProbePhase::Refinement,
+                    warm_start: true,
+                    solve_iters: 9,
+                    seconds: 0.0005,
+                },
+            ],
+        };
+        let j = explain_response(0xabcd, &res, &trace, 1.1e-7, 3.7e-4, true, Some("c1"));
+        let re = Json::parse(&j.to_compact()).unwrap();
+        assert_eq!(re.get("ok").unwrap().as_bool(), Some(true));
+        assert_eq!(re.get("key").unwrap().as_str(), Some("000000000000abcd"));
+        assert_eq!(re.get("stale").unwrap().as_bool(), Some(true));
+        assert_eq!(re.get("track").unwrap().as_str(), Some("c1"));
+        assert_eq!(re.get("interval").unwrap().as_f64(), Some(res.interval));
+        assert_eq!(re.get("evaluations").unwrap().as_f64(), Some(2.0));
+        let probes = re.get("probes").unwrap().as_arr().unwrap();
+        assert_eq!(probes.len(), 2);
+        assert_eq!(probes[0].get("phase").unwrap().as_str(), Some("doubling"));
+        assert_eq!(probes[0].get("warm").unwrap().as_bool(), Some(false));
+        assert_eq!(probes[0].get("iters").unwrap().as_f64(), Some(41.0));
+        assert_eq!(probes[1].get("phase").unwrap().as_str(), Some("refinement"));
+        assert_eq!(probes[1].get("warm").unwrap().as_bool(), Some(true));
+        assert_eq!(probes[1].get("interval").unwrap().as_f64(), Some(4_800.0));
     }
 
     #[test]

@@ -41,7 +41,7 @@ use std::time::{Duration, Instant};
 use anyhow::{bail, ensure, Context, Result};
 
 use super::Advisor;
-use crate::obs::{self, log as olog};
+use crate::obs::{self, log as olog, trace};
 use crate::store::io::{RealIo, StoreError, StoreIo};
 use crate::store::{self, encode_track_id, snapshot, wal, TraceStore};
 use crate::util::fnv::fnv1a_64;
@@ -837,12 +837,18 @@ pub fn run_puller(advisor: &Advisor, client: &ReplicaClient, root: &Path, stop: 
     let mut rng = Rng::new(0x5EED_u64 ^ fnv1a_64(client.primary.as_bytes()));
     let mut failures: u32 = 0;
     while !stop.load(Ordering::SeqCst) {
+        // Each catch-up round is its own span tree in the trace ring —
+        // the puller has no HTTP request, so it mints a request id of its
+        // own; a failed round finishes with a synthetic 500 status so the
+        // errors-and-slow sampler keeps it.
+        let span = trace::root("replication_round", obs::next_request_id());
         match sync_once(client, &io, root) {
             Ok(tracks) => {
                 failures = 0;
                 let o = replication_obs();
                 o.rounds.inc();
                 o.backoff_failures.set(0.0);
+                span.attr("tracks", tracks.len() as u64);
                 for (id, changed) in tracks {
                     if changed || !advisor.has_track(&id) {
                         if let Err(e) = reload_track(advisor, root, &id) {
@@ -852,6 +858,7 @@ pub fn run_puller(advisor: &Advisor, client: &ReplicaClient, root: &Path, stop: 
                         }
                     }
                 }
+                span.finish(200);
                 sleep_interruptible(stop, POLL_INTERVAL);
             }
             Err(e) => {
@@ -867,6 +874,7 @@ pub fn run_puller(advisor: &Advisor, client: &ReplicaClient, root: &Path, stop: 
                     ("error", Json::from(format!("{e:#}"))),
                 ];
                 olog::warn("replica", "catch-up round failed", &fields);
+                span.finish(500);
                 sleep_interruptible(stop, delay);
             }
         }

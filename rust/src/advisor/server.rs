@@ -18,6 +18,11 @@
 //! |                    |        | and the CI smoke job)                 |
 //! | `/v1/replicate/manifest` | GET | — (segment manifest; `--data-dir`) |
 //! | `/v1/replicate/segment`  | GET | `?track=&name=&offset=` range fetch |
+//! | `/v1/explain`      | GET    | `?key=<16 hex>` or `?track=<id>` — the  |
+//! |                    |        | search trajectory behind a cached       |
+//! |                    |        | recommendation (DESIGN.md §15)          |
+//! | `/v1/debug/trace`  | GET    | `?request_id=<id>` filter — recent      |
+//! |                    |        | request span trees from the trace ring  |
 //!
 //! With `serve --auth-token T`, every `/v1/*` route requires
 //! `Authorization: Bearer T` (`401` JSON otherwise); `/healthz` stays
@@ -73,7 +78,7 @@ use std::time::{Duration, Instant};
 use anyhow::{Context, Result};
 
 use super::{protocol, replicate, Advisor, AdvisorConfig};
-use crate::obs::{self, log as olog};
+use crate::obs::{self, log as olog, trace};
 use crate::store::TraceStore;
 use crate::util::json::Json;
 
@@ -306,6 +311,8 @@ const ROUTES: &[&str] = &[
     "/v1/shutdown",
     "/v1/replicate/manifest",
     "/v1/replicate/segment",
+    "/v1/explain",
+    "/v1/debug/trace",
 ];
 
 /// Every status code routing can produce (`status_lines_cover_every_
@@ -501,6 +508,7 @@ fn route(advisor: &Advisor, req: &HttpRequest, stop: &AtomicBool, ctx: RouteCont
     // `Authorization: Bearer <token>` verbatim.
     if let Some(token) = ctx.auth_token {
         if path != "/healthz" {
+            let _auth = trace::span("auth");
             let want = format!("Bearer {token}");
             if req.authorization.as_deref() != Some(want.as_str()) {
                 return (401, protocol::error_response("missing or invalid bearer token"));
@@ -514,6 +522,40 @@ fn route(advisor: &Advisor, req: &HttpRequest, stop: &AtomicBool, ctx: RouteCont
             (200, o)
         }
         ("GET", "/v1/status") => (200, advisor.status()),
+        ("GET", "/v1/explain") => {
+            // Addressed by cache key (the 16-hex `key` every select
+            // response carries) or by tracked id; peeks only, so probing
+            // explain never perturbs LRU order.
+            match (query_param(query, "key"), query_param(query, "track")) {
+                (Some(hex), _) => match u64::from_str_radix(hex, 16) {
+                    Ok(k) => match advisor.explain_key(k) {
+                        Some(j) => (200, j),
+                        None => (
+                            404,
+                            protocol::error_response("no cached entry for that key"),
+                        ),
+                    },
+                    Err(_) => {
+                        (400, protocol::error_response("bad 'key' (expected 16 hex digits)"))
+                    }
+                },
+                (None, Some(t)) => match advisor.explain_track(t) {
+                    Some(j) => (200, j),
+                    None => (404, protocol::error_response("no such track")),
+                },
+                (None, None) => (
+                    400,
+                    protocol::error_response("'key' or 'track' query parameter required"),
+                ),
+            }
+        }
+        ("GET", "/v1/debug/trace") => match query_param(query, "request_id") {
+            Some(raw) => match raw.parse::<u64>() {
+                Ok(id) => (200, trace::ring().export(Some(id))),
+                Err(_) => (400, protocol::error_response("bad 'request_id' query parameter")),
+            },
+            None => (200, trace::ring().export(None)),
+        },
         ("GET", "/v1/replicate/manifest") => match advisor.store() {
             Some(st) => match replicate::manifest_json(st) {
                 Ok(j) => (200, j),
@@ -612,7 +654,8 @@ fn route(advisor: &Advisor, req: &HttpRequest, stop: &AtomicBool, ctx: RouteCont
             (200, o)
         }
         (_, "/healthz" | "/v1/status" | "/v1/select" | "/v1/select_batch" | "/v1/model"
-        | "/v1/ingest" | "/v1/shutdown" | "/v1/replicate/manifest" | "/v1/replicate/segment") => {
+        | "/v1/ingest" | "/v1/shutdown" | "/v1/replicate/manifest" | "/v1/replicate/segment"
+        | "/v1/explain" | "/v1/debug/trace") => {
             (405, protocol::error_response("method not allowed"))
         }
         _ => (404, protocol::error_response("no such endpoint")),
@@ -633,9 +676,16 @@ fn handle_connection(
     let _ = stream.set_nodelay(true);
     let mut buf: Vec<u8> = Vec::with_capacity(1024);
     for served in 1..=MAX_REQUESTS_PER_CONN {
+        let t_read = Instant::now();
         match read_request(&mut stream, &mut buf) {
             ReadOutcome::Request(mut req) => {
                 req.id = obs::next_request_id();
+                // One span tree per request, keyed by the id the response
+                // echoes as `X-Request-Id` — `GET /v1/debug/trace` joins
+                // on it. The parse span is recorded retroactively: the
+                // bytes were read before the tree existed.
+                let root = trace::root("request", req.id);
+                trace::retro_span("parse", t_read.elapsed());
                 let o = http_obs();
                 let path = req.path.split_once('?').map_or(req.path.as_str(), |(p, _)| p);
                 let (requests, latency) = o.route_handles(path);
@@ -653,6 +703,7 @@ fn handle_connection(
                     if req.method == "GET" {
                         advisor.publish_obs();
                         let text = obs::global().render();
+                        let _respond = trace::span("respond");
                         write_response_raw(
                             &mut stream,
                             200,
@@ -664,14 +715,18 @@ fn handle_connection(
                         200
                     } else {
                         let body = protocol::error_response("method not allowed");
+                        let _respond = trace::span("respond");
                         write_response(&mut stream, 405, &body, keep, Some(req.id));
                         405
                     }
                 } else {
                     let (code, body) = route(advisor, &req, stop, ctx);
+                    let respond = trace::span("respond");
                     write_response(&mut stream, code, &body, keep, Some(req.id));
+                    drop(respond);
                     code
                 };
+                root.finish(code);
                 o.in_flight.add(-1.0);
                 let elapsed_ms = timer.elapsed_s().map(|s| s * 1e3);
                 timer.observe(latency);
@@ -1121,6 +1176,24 @@ mod tests {
             route(&advisor, &req("GET", "/v1/replicate/segment?track=t&name=wal-1.log", ""), &stop, ctx).0,
             400
         );
+        // Explain needs an addressing parameter and 404s on unknown keys
+        // and tracks; the trace dump is GET-only.
+        assert_eq!(route(&advisor, &req("POST", "/v1/explain", ""), &stop, ctx).0, 405);
+        assert_eq!(route(&advisor, &req("GET", "/v1/explain", ""), &stop, ctx).0, 400);
+        assert_eq!(route(&advisor, &req("GET", "/v1/explain?key=zzz", ""), &stop, ctx).0, 400);
+        assert_eq!(
+            route(&advisor, &req("GET", "/v1/explain?key=00000000deadbeef", ""), &stop, ctx).0,
+            404
+        );
+        assert_eq!(route(&advisor, &req("GET", "/v1/explain?track=nope", ""), &stop, ctx).0, 404);
+        assert_eq!(route(&advisor, &req("POST", "/v1/debug/trace", ""), &stop, ctx).0, 405);
+        assert_eq!(
+            route(&advisor, &req("GET", "/v1/debug/trace?request_id=x", ""), &stop, ctx).0,
+            400
+        );
+        let (code, dump) = route(&advisor, &req("GET", "/v1/debug/trace", ""), &stop, ctx);
+        assert_eq!(code, 200);
+        assert!(dump.get("trees").is_some(), "trace dump must carry a trees array: {dump}");
         assert_eq!(route(&advisor, &req("GET", "/healthz", ""), &stop, ctx).0, 200);
         assert!(!stop.load(Ordering::SeqCst));
         assert_eq!(route(&advisor, &req("POST", "/v1/shutdown", ""), &stop, ctx).0, 200);
@@ -1147,6 +1220,9 @@ mod tests {
         assert_eq!(route(&advisor, &req("GET", "/healthz", ""), &stop, ctx).0, 200);
         // The gate runs before dispatch: even unknown paths 401 first.
         assert_eq!(route(&advisor, &req("GET", "/nope", ""), &stop, ctx).0, 401);
+        // The debug/explain surfaces are token-gated like every v1 route.
+        assert_eq!(route(&advisor, &req("GET", "/v1/explain?key=0", ""), &stop, ctx).0, 401);
+        assert_eq!(route(&advisor, &req("GET", "/v1/debug/trace", ""), &stop, ctx).0, 401);
         // Shutdown is token-gated too — the flag must not have flipped.
         assert_eq!(route(&advisor, &req("POST", "/v1/shutdown", ""), &stop, ctx).0, 401);
         assert!(!stop.load(Ordering::SeqCst));

@@ -42,7 +42,9 @@ use anyhow::{anyhow, Result};
 
 use crate::markov::{ModelInputs, SharedBuilder};
 use crate::runtime::ComputeEngine;
-use crate::search::{select_interval, select_interval_shared, SearchConfig, SearchResult};
+use crate::search::{
+    select_interval_shared_traced, select_interval_traced, SearchConfig, SearchResult, SearchTrace,
+};
 use crate::util::fnv::Fnv64;
 use crate::util::pool;
 
@@ -132,6 +134,10 @@ pub struct SelectOk {
     /// The selection, identical to what the singleton
     /// [`crate::search::select_interval`] oracle returns for this spec.
     pub search: SearchResult,
+    /// The probe-by-probe trajectory behind `search` (DESIGN.md §15) —
+    /// what `/v1/explain` and `select --explain` render. Duplicates of
+    /// one spec share the `Arc`.
+    pub trace: Arc<SearchTrace>,
     /// The warm builder that ran the search (native engine only) —
     /// long-lived callers (the advisor cache) park it for O(1) repeats
     /// and warm-started refreshes. Duplicates of one spec share the
@@ -252,12 +258,14 @@ impl SelectBatch {
                 let mut cfg = spec.cfg;
                 cfg.build.workers = (cfg.build.workers / fan).max(1);
                 let builder = Arc::new(SharedBuilder::native(spec.inputs.clone(), &cfg.build));
-                match select_interval_shared(&builder, &cfg) {
+                match select_interval_shared_traced(&builder, &cfg) {
                     // Without `keep_builders` the Arc drops right here,
                     // as this task ends — not after the whole batch.
-                    Ok(search) => {
-                        Ok(SelectOk { search, builder: keep_builders.then_some(builder) })
-                    }
+                    Ok((search, trace)) => Ok(SelectOk {
+                        search,
+                        trace: Arc::new(trace),
+                        builder: keep_builders.then_some(builder),
+                    }),
                     Err(e) => Err(SelectError(format!("{e:#}"))),
                 }
             }),
@@ -269,8 +277,10 @@ impl SelectBatch {
                 let mut cfg = spec.cfg;
                 cfg.build.workers = (cfg.build.workers / fan).max(1);
                 let engine = ComputeEngine::native_generic();
-                match select_interval(&spec.inputs, &engine, &cfg) {
-                    Ok(search) => Ok(SelectOk { search, builder: None }),
+                match select_interval_traced(&spec.inputs, &engine, &cfg) {
+                    Ok((search, trace)) => {
+                        Ok(SelectOk { search, trace: Arc::new(trace), builder: None })
+                    }
                     Err(e) => Err(SelectError(format!("{e:#}"))),
                 }
             }),
@@ -278,8 +288,10 @@ impl SelectBatch {
                 .iter()
                 .map(|&i| {
                     let spec = &self.specs[i];
-                    match select_interval(&spec.inputs, engine, &spec.cfg) {
-                        Ok(search) => Ok(SelectOk { search, builder: None }),
+                    match select_interval_traced(&spec.inputs, engine, &spec.cfg) {
+                        Ok((search, trace)) => {
+                            Ok(SelectOk { search, trace: Arc::new(trace), builder: None })
+                        }
                         Err(e) => Err(SelectError(format!("{e:#}"))),
                     }
                 })

@@ -334,6 +334,11 @@ fn seed_corpus(target: FuzzTarget) -> Vec<Vec<u8>> {
             // A scrape pipelined ahead of an API call — the mix a
             // monitoring agent sharing a connection would produce.
             b"GET /metrics HTTP/1.1\r\n\r\nGET /v1/status HTTP/1.1\r\nHost: x\r\n\r\n".to_vec(),
+            // The explainability surfaces: query-string addressing puts
+            // the `?key=`/`?request_id=` split-points in the corpus.
+            b"GET /v1/explain?key=00000000deadbeef HTTP/1.1\r\nHost: x\r\n\r\n".to_vec(),
+            b"GET /v1/debug/trace?request_id=42 HTTP/1.1\r\nAuthorization: Bearer t\r\n\r\n"
+                .to_vec(),
             // Raw JSON bodies (the protocol layer sees these directly).
             br#"{"system": {"n": 6, "mttf_days": 8, "mttr_min": 40}, "search": {"refine_steps": 3}}"#
                 .to_vec(),
@@ -446,8 +451,8 @@ mod tests {
         let snap = snapshot::decode(&snapshot_image(), Path::new("<seed>")).unwrap();
         assert_eq!((snap.gen, snap.covered), (3, 42));
 
-        for seed in seed_corpus(FuzzTarget::Http).iter().take(7) {
-            // The HTTP seeds (first seven) are complete frames.
+        for seed in seed_corpus(FuzzTarget::Http).iter().take(9) {
+            // The HTTP seeds (first nine) are complete frames.
             let parsed = try_parse_request(seed).expect("seed frame must parse");
             assert!(parsed.is_some(), "seed frame incomplete: {:?}", String::from_utf8_lossy(seed));
         }

@@ -39,13 +39,14 @@ fn app_spec() -> App {
                 flag("mttr-min", "F", "override per-processor MTTR (minutes)", None),
                 flag("procs", "N", "override processor count", None),
                 switch("probes", "print all probed (interval, UWT) pairs"),
-                switch("json", "emit the result as one compact JSON line (oracle for the serve smoke test)"),
+                switch("explain", "print the search trajectory: every probed interval with its phase (doubling/cap/refinement), warm/cold π start and solve iterations — the same payload the daemon serves on GET /v1/explain"),
+                switch("json", "emit the result as one compact JSON line (oracle for the serve smoke test; with --explain, the full explain payload)"),
             ],
             positionals: vec![],
         })
         .command(CommandSpec {
             name: "serve",
-            about: "run the advisor daemon: HTTP/1.1 + JSON endpoints /v1/select, /v1/select_batch, /v1/model, /v1/ingest, /v1/status, plus Prometheus text metrics on GET /metrics (auth-exempt); overload-hardened — bounded worker pool + connection queue shedding 503 at saturation, per-request read deadlines, graceful drain on shutdown (see DESIGN.md §7, §11, §12, §14)",
+            about: "run the advisor daemon: HTTP/1.1 + JSON endpoints /v1/select, /v1/select_batch, /v1/model, /v1/ingest, /v1/status, /v1/explain (search explainability) and /v1/debug/trace (request span trees), plus Prometheus text metrics on GET /metrics (auth-exempt); overload-hardened — bounded worker pool + connection queue shedding 503 at saturation, per-request read deadlines, graceful drain on shutdown (see DESIGN.md §7, §11, §12, §14, §15)",
             flags: vec![
                 flag("addr", "HOST:PORT", "bind address (port 0 = ephemeral)", Some("127.0.0.1:7743")),
                 flag("workers", "N", "HTTP handler threads (0 = auto)", Some("0")),
@@ -62,8 +63,10 @@ fn app_spec() -> App {
                 flag("auth-token", "TOKEN", "require 'Authorization: Bearer TOKEN' on every /v1/* route (401 otherwise; /healthz stays open)", None),
                 flag("replica-of", "HOST:PORT", "run as a read replica of this primary: a background puller mirrors its store into --data-dir (required), ingest answers 409 (see DESIGN.md §13)", None),
                 flag("log-level", "LEVEL", "stderr log verbosity: error, warn, info or debug (see DESIGN.md §14)", Some("info")),
+                flag("trace-ring", "N", "request span trees kept for GET /v1/debug/trace (see DESIGN.md §15)", Some("256")),
+                flag("trace-sample", "MODE", "which request span trees to keep: always, errors-and-slow, off", Some("always")),
                 switch("log-json", "emit logs as one JSON object per line instead of text"),
-                switch("no-obs", "disable latency timers (counters stay live; /metrics still serves)"),
+                switch("no-obs", "disable latency timers (counters stay live; /metrics still serves); also forces --trace-sample off — span timestamps are wall-clock reads, so the no-clock contract covers tracing too"),
             ],
             positionals: vec![],
         })
@@ -241,17 +244,37 @@ fn cmd_select(p: &malleable_ckpt::util::cli::Parsed) -> Result<()> {
         policy.name,
         engine.name()
     );
-    let res = select_one(SelectSpec::new(inputs, SearchConfig::default()), &engine)?.search;
+    let ok = select_one(SelectSpec::new(inputs, SearchConfig::default()), &engine)?;
+    let res = ok.search;
     if p.switch("json") {
-        let mut o = Json::obj();
-        o.set("interval", Json::from(res.interval))
-            .set("uwt", Json::from(res.uwt))
-            .set("best_probed", Json::from(res.best_probed))
-            .set("evaluations", Json::from(res.evaluations));
+        // With --explain, the payload is the daemon's GET /v1/explain body
+        // minus the server envelope — the smoke test diffs the two.
+        let o = if p.switch("explain") {
+            ok.trace.explain_json(&res)
+        } else {
+            let mut o = Json::obj();
+            o.set("interval", Json::from(res.interval))
+                .set("uwt", Json::from(res.uwt))
+                .set("best_probed", Json::from(res.best_probed))
+                .set("evaluations", Json::from(res.evaluations));
+            o
+        };
         println!("{}", o.to_compact());
         return Ok(());
     }
-    if p.switch("probes") {
+    if p.switch("explain") {
+        println!("  {:>12}  {:>9}  {:<10}  {:>5}  {:>6}", "I", "UWT", "phase", "start", "iters");
+        for probe in &ok.trace.probes {
+            println!(
+                "  {:>12}  {:>9.4}  {:<10}  {:>5}  {:>6}",
+                fmt_duration(probe.interval),
+                probe.uwt,
+                probe.phase.as_str(),
+                if probe.warm_start { "warm" } else { "cold" },
+                probe.solve_iters
+            );
+        }
+    } else if p.switch("probes") {
         for (i, u) in &res.probes {
             println!("  I = {:>10}  UWT = {u:.4}", fmt_duration(*i));
         }
@@ -273,6 +296,19 @@ fn cmd_serve(p: &malleable_ckpt::util::cli::Parsed) -> Result<()> {
     malleable_ckpt::obs::log::set_level(level);
     malleable_ckpt::obs::log::set_json(p.switch("log-json"));
     malleable_ckpt::obs::set_enabled(!p.switch("no-obs"));
+    use malleable_ckpt::obs::trace;
+    let sample_name = p.get_or("trace-sample", "always");
+    let mut sampling = trace::Sampling::parse(&sample_name)
+        .ok_or_else(|| anyhow!("unknown --trace-sample '{sample_name}' (always|errors-and-slow|off)"))?;
+    if p.switch("no-obs") {
+        // --no-obs is the "read no clocks on the hot path" contract
+        // (DESIGN.md §14); span timestamps are clock reads, so it forces
+        // sampling off regardless of --trace-sample.
+        sampling = trace::Sampling::Off;
+    }
+    trace::set_sampling(sampling);
+    let ring_trees = p.get_usize("trace-ring")?.unwrap_or(trace::DEFAULT_RING_TREES);
+    trace::configure_ring(ring_trees);
     let mut advisor = AdvisorConfig::default();
     if let Some(s) = p.get_usize("shards")? {
         advisor.shards = s.max(1);
@@ -357,6 +393,11 @@ fn cmd_serve(p: &malleable_ckpt::util::cli::Parsed) -> Result<()> {
     if opts.auth_token.is_some() {
         println!("  bearer-token auth required on /v1/* (use 'Authorization: Bearer <token>')");
     }
+    println!(
+        "  request tracing: sample={}, ring {} trees (GET /v1/debug/trace; explain curves on GET /v1/explain)",
+        sampling.as_str(),
+        trace::ring().capacity()
+    );
     println!("try:");
     println!(
         "  curl -s http://{addr}/v1/select -d '{{\"system\": \"system-1/128\", \"app\": \"qr\"}}'"

@@ -72,6 +72,7 @@ use super::stationary::{stationary, stationary_apply};
 use super::transitions::{TransitionSystem, PRUNE_EPS, W3};
 use super::uwt::{self, UwtBreakdown};
 use crate::linalg::{tridiag_solve, tridiag_solve_vec, tridiag_solve_vec_into, Matrix, Tridiag};
+use crate::obs::trace;
 use crate::runtime::{native_chain_delta_row, native_chain_rec_row, ComputeEngine};
 use crate::util::pool;
 
@@ -202,6 +203,16 @@ pub struct ProbeResult {
     pub solve_iters: usize,
 }
 
+/// Engine metadata for one UWT evaluation, carried into the search's
+/// `SearchTrace` (DESIGN.md §15): whether the stationary solve
+/// warm-started from a previous π, and how many power iterations it took
+/// (0 for paths that do not report it).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct ProbeMeta {
+    pub warm_start: bool,
+    pub solve_iters: u64,
+}
+
 /// Weight triples (up exit, recovery success, recovery failure) for one
 /// chain at one interval — the single copy of the §III-B formulas shared
 /// by the exact pass and the probe pass. (The seed assembly in
@@ -246,11 +257,13 @@ fn up_row_entries(
 
 impl NativeCache {
     fn new(inputs: &ModelInputs, workers: usize) -> NativeCache {
+        let build_span = trace::span("builder_build");
         let n = inputs.system.n;
         let lam = inputs.system.lambda;
         let theta = inputs.system.theta;
         let space = StateSpace::build(n, &inputs.policy);
         let n_states = space.len();
+        build_span.attr("n_states", n_states as u64);
 
         let chain_ids = space.chain_sizes();
         let mut chain_pos = vec![usize::MAX; n + 1];
@@ -307,6 +320,8 @@ impl NativeCache {
             scatter.push(sc);
         }
 
+        let t_eigen = crate::obs::timer();
+        let eigen_span = trace::span("eigen");
         let spectral: Vec<Option<ChainSpectral>> =
             pool::run_indexed(chain_ids.len(), workers.max(1), |ci| {
                 let a = chain_ids[ci];
@@ -324,6 +339,9 @@ impl NativeCache {
                 }
                 ChainSpectral::new(s_max, lam, theta).ok()
             });
+        eigen_span.attr("chains", spectral.iter().filter(|s| s.is_some()).count() as u64);
+        drop(eigen_span);
+        t_eigen.observe(&phase_obs().eigen);
 
         NativeCache {
             space,
@@ -558,9 +576,13 @@ fn build_cached(
     // Force the lazy up-row cache once, outside the parallel pass.
     let up_rows_cached = c.up_rows(inputs).is_some();
 
+    let t_rec = crate::obs::timer();
+    let rec_span = trace::span("recovery_rows");
     let outs: Vec<ChainOut> = pool::run_indexed(c.chain_ids.len(), workers, |ci| {
         chain_pass(c, inputs, interval, thres, up_rows_cached, ci)
     });
+    drop(rec_span);
+    t_rec.observe(&phase_obs().recovery_rows);
 
     // Fold chain-local elimination into the global keep mask.
     let mut keep = vec![true; n_states];
@@ -652,7 +674,12 @@ fn build_cached(
     p.normalize_rows();
     let ts = TransitionSystem { p, kinds, succ: succ_out, fail: fail_out };
 
+    let t_stat = crate::obs::timer();
+    let stat_span = trace::span("stationary");
     let (pi, solve_iters) = stationary(&ts.p, &opts.stationary)?;
+    stat_span.attr("iters", solve_iters as u64);
+    drop(stat_span);
+    t_stat.observe(&phase_obs().stationary);
     let breakdown = uwt::evaluate(&ts, &pi);
 
     Ok(MalleableModel::from_parts(
@@ -720,6 +747,7 @@ fn probe_chain_pass(
         }
     }
 
+    let t_thomas = crate::obs::timer();
     let mut rec_rows = Vec::with_capacity(recs.len());
     for (r, q_row) in recs.iter().zip(&q_rows) {
         let rec_q = native_chain_rec_row(&c.bands_t[ci], &r.y, q_row, a_lam, delta);
@@ -751,6 +779,7 @@ fn probe_chain_pass(
         let mass_up: f64 = entries[..n_succ].iter().map(|&(_, p)| p).sum();
         rec_rows.push(ProbeRecRow { id: r.id, entries, mass_up });
     }
+    t_thomas.observe(&phase_obs().thomas);
 
     let (up_w, rec_succ, rec_fail) = chain_weights(inputs, a, interval, delta);
     ProbeChainOut { keep_up, eliminated, rec_rows, up_w, rec_succ, rec_fail }
@@ -775,9 +804,13 @@ fn probe_cached(
     let down_id = c.space.down_id();
     let rec1 = c.space.recovery_id_for_total(1).unwrap();
 
+    let t_rec = crate::obs::timer();
+    let rec_span = trace::span("recovery_rows");
     let outs: Vec<ProbeChainOut> = pool::run_indexed(c.chain_ids.len(), workers, |ci| {
         probe_chain_pass(c, inputs, interval, thres, ci)
     });
+    drop(rec_span);
+    t_rec.observe(&phase_obs().recovery_rows);
 
     // Fold chain-local elimination into the global keep mask.
     let mut keep = vec![true; n_states];
@@ -820,6 +853,8 @@ fn probe_cached(
     let mut xa: Vec<f64> = Vec::new();
     let mut cp_buf: Vec<f64> = Vec::new();
     let mut z_buf: Vec<f64> = Vec::new();
+    let t_stat = crate::obs::timer();
+    let stat_span = trace::span("stationary");
     let (pi, solve_iters) = stationary_apply(
         n_states,
         |x: &[f64], out: &mut [f64]| {
@@ -861,6 +896,9 @@ fn probe_cached(
         Some(&pi0),
         &opts.stationary,
     )?;
+    stat_span.attr("iters", solve_iters as u64);
+    drop(stat_span);
+    t_stat.observe(&phase_obs().stationary);
 
     // UWT (Eq. 7) without the assembled matrix: up rows always exit to
     // recovery/down, so their whole mass carries the up triple; only the
@@ -978,11 +1016,25 @@ impl<'a> ModelBuilder<'a> {
     /// set (or the engine has no native cache), in which case the exact
     /// cached build answers.
     pub fn uwt(&self, interval: f64) -> Result<f64> {
+        self.uwt_traced(interval).map(|(u, _)| u)
+    }
+
+    /// [`ModelBuilder::uwt`] plus the [`ProbeMeta`] the search trace
+    /// records: warm-start state and stationary-solve iteration count.
+    pub fn uwt_traced(&self, interval: f64) -> Result<(f64, ProbeMeta)> {
         match &self.cache {
             Some(c) if !self.opts.exact_probes => {
-                Ok(probe_cached(c, self.inputs, &self.opts, interval, &self.warm)?.uwt)
+                let warm_start = self.warm.lock().unwrap().is_some();
+                let p = probe_cached(c, self.inputs, &self.opts, interval, &self.warm)?;
+                Ok((p.uwt, ProbeMeta { warm_start, solve_iters: p.solve_iters as u64 }))
             }
-            _ => Ok(self.build(interval)?.uwt()),
+            _ => {
+                let m = self.build(interval)?;
+                Ok((
+                    m.uwt(),
+                    ProbeMeta { warm_start: false, solve_iters: m.solve_iters as u64 },
+                ))
+            }
         }
     }
 }
@@ -1053,10 +1105,21 @@ impl SharedBuilder {
     /// `UWT_I` with the same routing as [`ModelBuilder::uwt`]: the probe
     /// engine unless [`BuildOptions::exact_probes`] is set.
     pub fn uwt(&self, interval: f64) -> Result<f64> {
+        self.uwt_traced(interval).map(|(u, _)| u)
+    }
+
+    /// [`SharedBuilder::uwt`] plus the [`ProbeMeta`] the search trace
+    /// records (the warm flag is read before the probe runs, so it names
+    /// the π *start*, matching the `mckpt_builder_probes_total{start}`
+    /// counters).
+    pub fn uwt_traced(&self, interval: f64) -> Result<(f64, ProbeMeta)> {
         if self.opts.exact_probes {
-            Ok(self.build(interval)?.uwt())
+            let m = self.build(interval)?;
+            Ok((m.uwt(), ProbeMeta { warm_start: false, solve_iters: m.solve_iters as u64 }))
         } else {
-            Ok(self.probe(interval)?.uwt)
+            let warm_start = self.warm.lock().unwrap().is_some();
+            let p = self.probe(interval)?;
+            Ok((p.uwt, ProbeMeta { warm_start, solve_iters: p.solve_iters as u64 }))
         }
     }
 
@@ -1089,6 +1152,41 @@ fn builder_obs() -> &'static BuilderObs {
         BuilderObs {
             warm_probes: r.counter_with("mckpt_builder_probes_total", help, &[("start", "warm")]),
             cold_probes: r.counter_with("mckpt_builder_probes_total", help, &[("start", "cold")]),
+        }
+    })
+}
+
+/// Per-phase hot-path cost histograms (DESIGN.md §15): where inside the
+/// builder a probe's time went, so per-probe regressions localize to an
+/// algebra phase. `thomas` nests inside `recovery_rows` (the per-chain
+/// `Q^Rec` Thomas solves within the fan-out); `eigen` is paid once per
+/// builder, the others once (`recovery_rows`/`stationary`) or
+/// once-per-chain (`thomas`) per probe.
+struct PhaseObs {
+    eigen: Arc<crate::obs::Histogram>,
+    recovery_rows: Arc<crate::obs::Histogram>,
+    thomas: Arc<crate::obs::Histogram>,
+    stationary: Arc<crate::obs::Histogram>,
+}
+
+fn phase_obs() -> &'static PhaseObs {
+    static OBS: OnceLock<PhaseObs> = OnceLock::new();
+    OBS.get_or_init(|| {
+        let r = crate::obs::global();
+        let help = "Builder hot-path phase cost in seconds, by algebra phase.";
+        let h = |phase: &str| {
+            r.histogram_with(
+                "mckpt_builder_phase_seconds",
+                help,
+                crate::obs::LATENCY_BUCKETS,
+                &[("phase", phase)],
+            )
+        };
+        PhaseObs {
+            eigen: h("eigen"),
+            recovery_rows: h("recovery_rows"),
+            thomas: h("thomas"),
+            stationary: h("stationary"),
         }
     })
 }
@@ -1292,6 +1390,24 @@ mod tests {
         let oracle = borrowed.build(7_200.0).unwrap();
         assert_eq!(exact.uwt(), oracle.uwt());
         assert_eq!(exact.stationary_distribution(), oracle.stationary_distribution());
+    }
+
+    #[test]
+    fn phase_histograms_and_probe_meta_fill_in() {
+        let o = phase_obs();
+        let (e0, r0, t0, s0) =
+            (o.eigen.count(), o.recovery_rows.count(), o.thomas.count(), o.stationary.count());
+        let shared = SharedBuilder::native(small_inputs(7), &BuildOptions::default());
+        assert!(o.eigen.count() > e0, "builder construction observes the eigen phase");
+        let (uwt, meta) = shared.uwt_traced(3_600.0).unwrap();
+        assert!(uwt > 0.0);
+        assert!(!meta.warm_start, "first probe starts cold");
+        assert!(meta.solve_iters > 0);
+        let (_, meta2) = shared.uwt_traced(3_600.0).unwrap();
+        assert!(meta2.warm_start, "repeat probe starts warm");
+        assert!(o.recovery_rows.count() > r0);
+        assert!(o.thomas.count() > t0);
+        assert!(o.stationary.count() > s0);
     }
 
     #[test]

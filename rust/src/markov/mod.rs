@@ -39,7 +39,7 @@ pub mod stationary;
 pub mod transitions;
 pub mod uwt;
 
-pub use builder::{ModelBuilder, ProbeResult, SharedBuilder};
+pub use builder::{ModelBuilder, ProbeMeta, ProbeResult, SharedBuilder};
 pub use model::{BuildOptions, MalleableModel, ModelInputs};
 pub use sparse::SparseMatrix;
 pub use states::{StateKind, StateSpace};

@@ -24,6 +24,7 @@
 //! request counters.
 
 pub mod log;
+pub mod trace;
 
 use std::collections::BTreeMap;
 use std::fmt::Write as _;
@@ -206,6 +207,9 @@ struct Family {
     // Keyed by the rendered label block (`{route="/v1/select"}` or "") so
     // iteration order — and therefore the exposition — is stable.
     series: BTreeMap<String, Metric>,
+    // A kind-mismatched re-registration has already been warned about
+    // once for this family; further mismatches stay silent.
+    kind_warned: bool,
 }
 
 /// The metric registry. One process-global instance lives behind
@@ -213,6 +217,7 @@ struct Family {
 pub struct Registry {
     enabled: AtomicBool,
     families: Mutex<BTreeMap<&'static str, Family>>,
+    kind_mismatch_warnings: AtomicU64,
 }
 
 impl Default for Registry {
@@ -223,7 +228,11 @@ impl Default for Registry {
 
 impl Registry {
     pub fn new() -> Registry {
-        Registry { enabled: AtomicBool::new(true), families: Mutex::new(BTreeMap::new()) }
+        Registry {
+            enabled: AtomicBool::new(true),
+            families: Mutex::new(BTreeMap::new()),
+            kind_mismatch_warnings: AtomicU64::new(0),
+        }
     }
 
     pub fn counter(&self, name: &'static str, help: &'static str) -> Arc<Counter> {
@@ -297,10 +306,27 @@ impl Registry {
         let mut fams = self.families.lock().unwrap();
         let fam = fams.entry(name).or_insert_with(|| {
             let m = make();
-            Family { help, kind: m.kind(), series: BTreeMap::new() }
+            Family { help, kind: m.kind(), series: BTreeMap::new(), kind_warned: false }
         });
-        if fam.kind != make().kind() {
-            return make();
+        let requested = make();
+        if fam.kind != requested.kind() {
+            // Misconfiguration: same family name registered under two
+            // kinds. Hand back a detached (never rendered) instance, and
+            // say so once per family so the drop is discoverable.
+            if !fam.kind_warned {
+                fam.kind_warned = true;
+                self.kind_mismatch_warnings.fetch_add(1, Ordering::Relaxed);
+                log::warn(
+                    "obs",
+                    "metric family re-registered with a different kind; returning a detached instance",
+                    &[
+                        ("family", crate::util::json::Json::from(name)),
+                        ("registered_kind", crate::util::json::Json::from(fam.kind)),
+                        ("requested_kind", crate::util::json::Json::from(requested.kind())),
+                    ],
+                );
+            }
+            return requested;
         }
         let mut key = label_block(labels);
         // The sink itself counts toward the cap: at most MAX-1 real series
@@ -309,6 +335,12 @@ impl Registry {
             key = label_block(&[("overflow", "true")]);
         }
         fam.series.entry(key).or_insert_with(make).clone()
+    }
+
+    /// How many families have had a kind-mismatched re-registration
+    /// warned about (each family warns at most once).
+    pub fn kind_mismatch_warnings(&self) -> u64 {
+        self.kind_mismatch_warnings.load(Ordering::Relaxed)
     }
 
     pub fn is_enabled(&self) -> bool {
@@ -589,11 +621,22 @@ mod tests {
     }
 
     #[test]
-    fn kind_mismatch_returns_detached_metric() {
+    fn kind_mismatch_returns_detached_metric_and_warns_once() {
         let reg = Registry::new();
         reg.counter("mixed_total", "counter first").add(7);
+        assert_eq!(reg.kind_mismatch_warnings(), 0);
         let g = reg.gauge("mixed_total", "gauge second");
         g.set(3.0); // must not corrupt the registered counter
+        assert_eq!(reg.kind_mismatch_warnings(), 1, "first mismatch warns");
+        // Repeat offenders for the same family stay silent.
+        reg.gauge("mixed_total", "gauge third");
+        reg.histogram("mixed_total", "histogram fourth", &[1.0]);
+        assert_eq!(reg.kind_mismatch_warnings(), 1, "one warn per family");
+        // A different family gets its own single warn.
+        reg.gauge("other_total", "gauge first");
+        reg.counter("other_total", "counter second");
+        reg.counter("other_total", "counter third");
+        assert_eq!(reg.kind_mismatch_warnings(), 2);
         let text = reg.render();
         assert!(text.contains("mixed_total 7"));
         assert!(!text.contains("mixed_total 3"));

@@ -1,0 +1,753 @@
+//! Request-scoped tracing spans (DESIGN.md §15).
+//!
+//! One span tree per request: the server opens a root span carrying the
+//! request id (the same id echoed as `X-Request-Id`, so logs, metrics and
+//! traces join on one key), layers below add children through a
+//! thread-local cursor, and `util::pool` carries the cursor across the
+//! worker-pool handoff so builder/probe work nests under the request that
+//! caused it. Finished trees land in a bounded lock-sharded ring buffer
+//! exported on `GET /v1/debug/trace`.
+//!
+//! The layer follows the same no-deps idiom as the metric registry next
+//! door: plain atomics for the global switches, one mutex per tree for
+//! span writes (taken only by threads working that request), and eight
+//! ring shards so exporting never blocks recording for long.
+//!
+//! Timestamps are `i64` nanosecond offsets relative to the tree's epoch
+//! (the instant the root opened). Offsets may be *negative*: the server
+//! measures request parsing before it knows the request id, then records
+//! it retroactively via [`retro_span`], which backdates the start.
+//!
+//! Sampling (`serve --trace-sample`) is decided once, when the root
+//! finishes: `always` keeps every tree, `errors` keeps trees whose status
+//! is >= 400 (or 0: abandoned) or whose duration reaches
+//! [`SLOW_REQUEST_S`], `off` records nothing — [`root`] bails before
+//! reading any clock, and with no tree installed every child [`span`] is
+//! a no-op too.
+
+use crate::util::json::Json;
+use std::cell::RefCell;
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicU64, AtomicU8, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+use std::time::{Duration, Instant, SystemTime, UNIX_EPOCH};
+
+/// Requests at least this long are kept by `--trace-sample errors`.
+pub const SLOW_REQUEST_S: f64 = 0.25;
+
+/// Number of lock shards in the trace ring.
+pub const RING_SHARDS: usize = 8;
+
+/// Default ring capacity (`serve --trace-ring`), in finished trees.
+pub const DEFAULT_RING_TREES: usize = 256;
+
+/// When to keep a finished span tree.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Sampling {
+    Always = 0,
+    ErrorsAndSlow = 1,
+    Off = 2,
+}
+
+impl Sampling {
+    pub fn parse(s: &str) -> Option<Sampling> {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "always" => Some(Sampling::Always),
+            "errors" | "errors-and-slow" => Some(Sampling::ErrorsAndSlow),
+            "off" => Some(Sampling::Off),
+            _ => None,
+        }
+    }
+
+    pub fn as_str(self) -> &'static str {
+        match self {
+            Sampling::Always => "always",
+            Sampling::ErrorsAndSlow => "errors",
+            Sampling::Off => "off",
+        }
+    }
+
+    fn from_u8(v: u8) -> Sampling {
+        match v {
+            1 => Sampling::ErrorsAndSlow,
+            2 => Sampling::Off,
+            _ => Sampling::Always,
+        }
+    }
+}
+
+static SAMPLING: AtomicU8 = AtomicU8::new(Sampling::Always as u8);
+
+pub fn set_sampling(s: Sampling) {
+    SAMPLING.store(s as u8, Ordering::Relaxed);
+}
+
+pub fn sampling() -> Sampling {
+    Sampling::from_u8(SAMPLING.load(Ordering::Relaxed))
+}
+
+/// The sampling decision, split out pure so it is testable without
+/// sleeping through [`SLOW_REQUEST_S`]. `status == 0` marks a tree whose
+/// root guard was dropped without an explicit finish (a panic or an early
+/// return) and is kept like an error.
+pub fn kept(s: Sampling, status: u16, duration_s: f64) -> bool {
+    match s {
+        Sampling::Always => true,
+        Sampling::Off => false,
+        Sampling::ErrorsAndSlow => status == 0 || status >= 400 || duration_s >= SLOW_REQUEST_S,
+    }
+}
+
+/// One recorded span. `parent == 0` marks the root; ids are 1-based
+/// insertion order within the tree. `end_ns < 0` marks a span still open
+/// when the tree was exported (a worker outliving the request).
+#[derive(Clone, Debug)]
+pub struct SpanRecord {
+    pub id: u32,
+    pub parent: u32,
+    pub name: &'static str,
+    pub start_ns: i64,
+    pub end_ns: i64,
+    pub attrs: Vec<(&'static str, u64)>,
+}
+
+/// Shared mutable state of one in-flight tree.
+struct TreeInner {
+    epoch: Instant,
+    trace_id: u64,
+    spans: Mutex<Vec<SpanRecord>>,
+}
+
+impl TreeInner {
+    fn now_off(&self) -> i64 {
+        // Saturates around 292 years of request duration.
+        self.epoch.elapsed().as_nanos().min(i64::MAX as u128) as i64
+    }
+
+    fn open(&self, parent: u32, name: &'static str) -> u32 {
+        let start = self.now_off();
+        let mut spans = match self.spans.lock() {
+            Ok(g) => g,
+            Err(p) => p.into_inner(),
+        };
+        let id = (spans.len() + 1) as u32;
+        spans.push(SpanRecord { id, parent, name, start_ns: start, end_ns: -1, attrs: Vec::new() });
+        id
+    }
+
+    fn close(&self, id: u32, end_ns: i64) {
+        let mut spans = match self.spans.lock() {
+            Ok(g) => g,
+            Err(p) => p.into_inner(),
+        };
+        if let Some(s) = spans.get_mut((id as usize).wrapping_sub(1)) {
+            s.end_ns = end_ns;
+        }
+    }
+
+    fn set_attr(&self, id: u32, k: &'static str, v: u64) {
+        let mut spans = match self.spans.lock() {
+            Ok(g) => g,
+            Err(p) => p.into_inner(),
+        };
+        if let Some(s) = spans.get_mut((id as usize).wrapping_sub(1)) {
+            s.attrs.push((k, v));
+        }
+    }
+
+    fn push_closed(&self, parent: u32, name: &'static str, start_ns: i64, end_ns: i64) {
+        let mut spans = match self.spans.lock() {
+            Ok(g) => g,
+            Err(p) => p.into_inner(),
+        };
+        let id = (spans.len() + 1) as u32;
+        spans.push(SpanRecord { id, parent, name, start_ns, end_ns, attrs: Vec::new() });
+    }
+}
+
+/// Thread-local recording cursor: which tree this thread appends to and
+/// which span is the current parent.
+struct Ctx {
+    tree: Arc<TreeInner>,
+    current: u32,
+}
+
+thread_local! {
+    static CTX: RefCell<Option<Ctx>> = const { RefCell::new(None) };
+}
+
+/// Open a root span and install its tree on this thread. `trace_id` is
+/// the request id the response echoes as `X-Request-Id`. Returns a
+/// disabled guard (no tree, no clock read) when sampling is `off`.
+pub fn root(name: &'static str, trace_id: u64) -> RootGuard {
+    if sampling() == Sampling::Off {
+        return RootGuard { tree: None, prev: None, done: true };
+    }
+    let tree =
+        Arc::new(TreeInner { epoch: Instant::now(), trace_id, spans: Mutex::new(Vec::new()) });
+    tree.open(0, name); // id 1: the root span itself
+    let prev = CTX.with(|c| {
+        c.borrow_mut().replace(Ctx { tree: Arc::clone(&tree), current: 1 })
+    });
+    RootGuard { tree: Some(tree), prev, done: false }
+}
+
+/// Guard for the root span. Call [`RootGuard::finish`] with the response
+/// status; dropping without finishing records status 0 (kept by the
+/// `errors` sampler — an abandoned tree is worth looking at).
+pub struct RootGuard {
+    tree: Option<Arc<TreeInner>>,
+    prev: Option<Ctx>,
+    done: bool,
+}
+
+impl RootGuard {
+    /// Whether this guard is actually recording (sampling was not `off`).
+    pub fn active(&self) -> bool {
+        self.tree.is_some()
+    }
+
+    pub fn attr(&self, k: &'static str, v: u64) {
+        if let Some(t) = &self.tree {
+            t.set_attr(1, k, v);
+        }
+    }
+
+    pub fn finish(mut self, status: u16) {
+        self.finish_inner(status);
+    }
+
+    fn finish_inner(&mut self, status: u16) {
+        if self.done {
+            return;
+        }
+        self.done = true;
+        CTX.with(|c| *c.borrow_mut() = self.prev.take());
+        let Some(tree) = self.tree.take() else { return };
+        let end = tree.now_off();
+        tree.close(1, end);
+        let duration_s = end as f64 / 1e9;
+        if !kept(sampling(), status, duration_s) {
+            return;
+        }
+        let spans = match tree.spans.lock() {
+            Ok(g) => g.clone(),
+            Err(p) => p.into_inner().clone(),
+        };
+        let ts_unix = SystemTime::now()
+            .duration_since(UNIX_EPOCH)
+            .map(|d| d.as_secs_f64())
+            .unwrap_or(0.0);
+        ring().push(FinishedTree {
+            seq: 0, // assigned by the ring
+            trace_id: tree.trace_id,
+            status,
+            ts_unix,
+            duration_s,
+            spans,
+        });
+    }
+}
+
+impl Drop for RootGuard {
+    fn drop(&mut self) {
+        self.finish_inner(0);
+    }
+}
+
+/// Open a child span under this thread's current cursor. A no-op (no
+/// clock read) when no tree is installed.
+pub fn span(name: &'static str) -> SpanGuard {
+    CTX.with(|c| {
+        let mut b = c.borrow_mut();
+        match b.as_mut() {
+            None => SpanGuard { tree: None, id: 0, prev: 0 },
+            Some(ctx) => {
+                let id = ctx.tree.open(ctx.current, name);
+                let prev = ctx.current;
+                ctx.current = id;
+                SpanGuard { tree: Some(Arc::clone(&ctx.tree)), id, prev }
+            }
+        }
+    })
+}
+
+/// Guard for a child span; closes on drop and restores the parent cursor.
+pub struct SpanGuard {
+    tree: Option<Arc<TreeInner>>,
+    id: u32,
+    prev: u32,
+}
+
+impl SpanGuard {
+    pub fn attr(&self, k: &'static str, v: u64) {
+        if let Some(t) = &self.tree {
+            t.set_attr(self.id, k, v);
+        }
+    }
+}
+
+impl Drop for SpanGuard {
+    fn drop(&mut self) {
+        let Some(tree) = self.tree.take() else { return };
+        tree.close(self.id, tree.now_off());
+        CTX.with(|c| {
+            if let Some(ctx) = c.borrow_mut().as_mut() {
+                if Arc::ptr_eq(&ctx.tree, &tree) && ctx.current == self.id {
+                    ctx.current = self.prev;
+                }
+            }
+        });
+    }
+}
+
+/// Record an already-elapsed phase as a closed span ending now, starting
+/// `dur` ago — possibly *before* the tree's epoch (negative offset). The
+/// server uses this for request parsing, which happens before the root
+/// can exist. No-op without an installed tree.
+pub fn retro_span(name: &'static str, dur: Duration) {
+    CTX.with(|c| {
+        if let Some(ctx) = c.borrow().as_ref() {
+            let end = ctx.tree.now_off();
+            let start = end.saturating_sub(dur.as_nanos().min(i64::MAX as u128) as i64);
+            ctx.tree.push_closed(ctx.current, name, start, end);
+        }
+    });
+}
+
+/// Portable snapshot of this thread's cursor, for crossing a thread
+/// boundary (the worker pool). Cheap to clone; empty when no tree is
+/// installed.
+#[derive(Clone, Default)]
+pub struct Handoff(Option<(Arc<TreeInner>, u32)>);
+
+pub fn handoff() -> Handoff {
+    CTX.with(|c| Handoff(c.borrow().as_ref().map(|x| (Arc::clone(&x.tree), x.current))))
+}
+
+/// Install a handed-off cursor on this thread; restores the previous
+/// cursor on drop. Installing an empty handoff is a no-op.
+pub fn install(h: &Handoff) -> InstallGuard {
+    match &h.0 {
+        None => InstallGuard { prev: None, installed: false },
+        Some((tree, cur)) => {
+            let prev = CTX.with(|c| {
+                c.borrow_mut().replace(Ctx { tree: Arc::clone(tree), current: *cur })
+            });
+            InstallGuard { prev, installed: true }
+        }
+    }
+}
+
+pub struct InstallGuard {
+    prev: Option<Ctx>,
+    installed: bool,
+}
+
+impl Drop for InstallGuard {
+    fn drop(&mut self) {
+        if self.installed {
+            CTX.with(|c| *c.borrow_mut() = self.prev.take());
+        }
+    }
+}
+
+/// One finished, sampled-in span tree.
+#[derive(Clone, Debug)]
+pub struct FinishedTree {
+    pub seq: u64,
+    pub trace_id: u64,
+    pub status: u16,
+    pub ts_unix: f64,
+    pub duration_s: f64,
+    pub spans: Vec<SpanRecord>,
+}
+
+/// Bounded lock-sharded ring of finished trees. Trees shard by their
+/// global sequence number, so sequential pushes round-robin the shards
+/// and per-shard FIFO eviction approximates global oldest-first — exact
+/// when the capacity is a multiple of [`RING_SHARDS`] (the configured
+/// capacity is rounded up to one).
+pub struct Ring {
+    next_seq: AtomicU64,
+    shard_cap: AtomicUsize,
+    shards: [Mutex<VecDeque<Arc<FinishedTree>>>; RING_SHARDS],
+}
+
+impl Ring {
+    pub fn new(cap_trees: usize) -> Ring {
+        let ring = Ring {
+            next_seq: AtomicU64::new(0),
+            shard_cap: AtomicUsize::new(1),
+            shards: std::array::from_fn(|_| Mutex::new(VecDeque::new())),
+        };
+        ring.set_capacity(cap_trees);
+        ring
+    }
+
+    /// Reconfigure total capacity (rounded up to a multiple of
+    /// [`RING_SHARDS`], minimum one tree per shard). Shrinking evicts
+    /// oldest-first on the next push into each shard.
+    pub fn set_capacity(&self, cap_trees: usize) {
+        self.shard_cap.store(cap_trees.div_ceil(RING_SHARDS).max(1), Ordering::Relaxed);
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.shard_cap.load(Ordering::Relaxed) * RING_SHARDS
+    }
+
+    pub fn push(&self, mut tree: FinishedTree) {
+        let seq = self.next_seq.fetch_add(1, Ordering::Relaxed) + 1;
+        tree.seq = seq;
+        let cap = self.shard_cap.load(Ordering::Relaxed);
+        let shard = &self.shards[(seq % RING_SHARDS as u64) as usize];
+        let mut q = match shard.lock() {
+            Ok(g) => g,
+            Err(p) => p.into_inner(),
+        };
+        while q.len() >= cap {
+            q.pop_front();
+        }
+        q.push_back(Arc::new(tree));
+    }
+
+    pub fn len(&self) -> usize {
+        self.shards
+            .iter()
+            .map(|s| match s.lock() {
+                Ok(g) => g.len(),
+                Err(p) => p.into_inner().len(),
+            })
+            .sum()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Snapshot matching trees, newest-first by sequence number.
+    pub fn snapshot(&self, request_id: Option<u64>) -> Vec<Arc<FinishedTree>> {
+        let mut out: Vec<Arc<FinishedTree>> = Vec::new();
+        for s in &self.shards {
+            let q = match s.lock() {
+                Ok(g) => g,
+                Err(p) => p.into_inner(),
+            };
+            out.extend(q.iter().filter(|t| request_id.is_none_or(|id| t.trace_id == id)).cloned());
+        }
+        out.sort_by(|a, b| b.seq.cmp(&a.seq));
+        out
+    }
+
+    /// JSON export for `GET /v1/debug/trace`: newest-first trees with
+    /// span offsets in nanoseconds relative to each tree's epoch.
+    pub fn export(&self, request_id: Option<u64>) -> Json {
+        let trees = self.snapshot(request_id);
+        let mut arr = Vec::with_capacity(trees.len());
+        for t in &trees {
+            let mut spans = Vec::with_capacity(t.spans.len());
+            for s in &t.spans {
+                let mut sj = Json::obj();
+                sj.set("id", Json::from(s.id as f64));
+                sj.set("parent", Json::from(s.parent as f64));
+                sj.set("name", Json::from(s.name));
+                sj.set("start_ns", Json::from(s.start_ns as f64));
+                sj.set("end_ns", Json::from(s.end_ns as f64));
+                if !s.attrs.is_empty() {
+                    let mut aj = Json::obj();
+                    for (k, v) in &s.attrs {
+                        aj.set(k, Json::from(*v as f64));
+                    }
+                    sj.set("attrs", aj);
+                }
+                spans.push(sj);
+            }
+            let mut tj = Json::obj();
+            tj.set("request_id", Json::from(t.trace_id as f64));
+            tj.set("seq", Json::from(t.seq as f64));
+            tj.set("status", Json::from(t.status as f64));
+            tj.set("ts_unix", Json::from(t.ts_unix));
+            tj.set("duration_ms", Json::from(t.duration_s * 1e3));
+            tj.set("spans", Json::Arr(spans));
+            arr.push(tj);
+        }
+        let mut out = Json::obj();
+        out.set("trees", Json::Arr(arr));
+        out.set("count", Json::from(trees.len() as f64));
+        out.set("capacity", Json::from(self.capacity() as f64));
+        out.set("sampling", Json::from(sampling().as_str()));
+        out
+    }
+}
+
+/// Serializes unit tests (here and in `util::pool`) that depend on the
+/// process-global sampling mode, so a mode-flipping test cannot race a
+/// root-opening one.
+#[cfg(test)]
+pub(crate) fn sampling_test_lock() -> &'static Mutex<()> {
+    static L: OnceLock<Mutex<()>> = OnceLock::new();
+    L.get_or_init(|| Mutex::new(()))
+}
+
+static RING: OnceLock<Ring> = OnceLock::new();
+
+/// The process-global ring `GET /v1/debug/trace` exports.
+pub fn ring() -> &'static Ring {
+    RING.get_or_init(|| Ring::new(DEFAULT_RING_TREES))
+}
+
+/// Set the global ring capacity (`serve --trace-ring N`).
+pub fn configure_ring(cap_trees: usize) {
+    ring().set_capacity(cap_trees);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::thread;
+
+    fn sampling_lock() -> &'static Mutex<()> {
+        sampling_test_lock()
+    }
+
+    fn tree_of(root: &RootGuard) -> Arc<TreeInner> {
+        Arc::clone(root.tree.as_ref().expect("active root"))
+    }
+
+    #[test]
+    fn spans_nest_and_link_parents() {
+        let _g = sampling_lock().lock().unwrap();
+        set_sampling(Sampling::Always);
+        let r = root("request", 4242);
+        assert!(r.active());
+        r.attr("route", 7);
+        let tree = tree_of(&r);
+        {
+            let outer = span("outer");
+            outer.attr("k", 1);
+            {
+                let _inner = span("inner");
+            }
+            let _sibling = span("sibling");
+        }
+        retro_span("parse", Duration::from_micros(50));
+        r.finish(200);
+        let spans = tree.spans.lock().unwrap();
+        assert_eq!(spans.len(), 5);
+        assert_eq!(spans[0].name, "request");
+        assert_eq!(spans[0].parent, 0);
+        assert_eq!(spans[1].name, "outer");
+        assert_eq!(spans[1].parent, 1);
+        assert_eq!(spans[1].attrs, vec![("k", 1)]);
+        assert_eq!(spans[2].name, "inner");
+        assert_eq!(spans[2].parent, 2, "inner nests under outer");
+        assert_eq!(spans[3].name, "sibling");
+        assert_eq!(spans[3].parent, 2, "sibling opened while outer was current");
+        assert_eq!(spans[4].name, "parse");
+        assert_eq!(spans[4].parent, 1, "retro span hangs off the root");
+        assert!(spans[4].start_ns < spans[4].end_ns);
+        for s in spans.iter() {
+            assert!(s.end_ns >= 0, "{} closed", s.name);
+        }
+        // The finished tree is in the global ring, findable by request id.
+        let hit = ring().snapshot(Some(4242));
+        assert!(!hit.is_empty());
+        assert_eq!(hit[0].status, 200);
+    }
+
+    #[test]
+    fn retro_span_may_start_before_the_epoch() {
+        let _g = sampling_lock().lock().unwrap();
+        set_sampling(Sampling::Always);
+        let r = root("request", 993001);
+        let tree = tree_of(&r);
+        retro_span("parse", Duration::from_secs(5));
+        drop(r);
+        let spans = tree.spans.lock().unwrap();
+        let parse = spans.iter().find(|s| s.name == "parse").unwrap();
+        assert!(parse.start_ns < 0, "parse started before the root epoch: {}", parse.start_ns);
+        assert!(parse.end_ns >= parse.start_ns);
+    }
+
+    #[test]
+    fn span_without_installed_tree_is_a_noop() {
+        let s = span("orphan");
+        s.attr("k", 1);
+        drop(s);
+        retro_span("also-orphan", Duration::from_millis(1));
+        let h = handoff();
+        let _g = install(&h); // empty handoff: no-op
+    }
+
+    #[test]
+    fn sampling_modes_gate_ring_admission() {
+        let _g = sampling_lock().lock().unwrap();
+
+        // Pure decision table, including the slow path that would need a
+        // 250 ms sleep to exercise end to end.
+        assert!(kept(Sampling::Always, 200, 0.0));
+        assert!(!kept(Sampling::Off, 500, 10.0));
+        assert!(!kept(Sampling::ErrorsAndSlow, 200, 0.01));
+        assert!(kept(Sampling::ErrorsAndSlow, 404, 0.0));
+        assert!(kept(Sampling::ErrorsAndSlow, 500, 0.0));
+        assert!(kept(Sampling::ErrorsAndSlow, 200, SLOW_REQUEST_S));
+        assert!(kept(Sampling::ErrorsAndSlow, 0, 0.0), "abandoned tree kept");
+
+        // Off: root() is inert — no tree, no ring entry.
+        set_sampling(Sampling::Off);
+        let r = root("request", 661001);
+        assert!(!r.active());
+        let _child = span("never-recorded");
+        r.finish(500);
+        assert!(ring().snapshot(Some(661001)).is_empty());
+
+        // ErrorsAndSlow: fast 200 dropped, 500 kept.
+        set_sampling(Sampling::ErrorsAndSlow);
+        root("request", 661002).finish(200);
+        root("request", 661003).finish(500);
+        assert!(ring().snapshot(Some(661002)).is_empty());
+        assert_eq!(ring().snapshot(Some(661003)).len(), 1);
+
+        set_sampling(Sampling::Always);
+    }
+
+    #[test]
+    fn ring_evicts_oldest_first_and_exports_newest_first() {
+        let ring = Ring::new(8);
+        assert_eq!(ring.capacity(), 8);
+        for i in 0..16u64 {
+            ring.push(FinishedTree {
+                seq: 0,
+                trace_id: 100 + i,
+                status: 200,
+                ts_unix: 0.0,
+                duration_s: 0.001,
+                spans: Vec::new(),
+            });
+        }
+        assert_eq!(ring.len(), 8);
+        let snap = ring.snapshot(None);
+        let ids: Vec<u64> = snap.iter().map(|t| t.trace_id).collect();
+        // Newest-first export; the 8 oldest pushes were evicted exactly.
+        assert_eq!(ids, vec![115, 114, 113, 112, 111, 110, 109, 108]);
+        // Filter matches a single id.
+        assert_eq!(ring.snapshot(Some(110)).len(), 1);
+        assert!(ring.snapshot(Some(100)).is_empty(), "evicted id not found");
+    }
+
+    #[test]
+    fn ring_capacity_rounds_up_and_reconfigures() {
+        let ring = Ring::new(3);
+        assert_eq!(ring.capacity(), RING_SHARDS, "minimum one tree per shard");
+        let ring = Ring::new(0);
+        assert_eq!(ring.capacity(), RING_SHARDS);
+        ring.set_capacity(20);
+        assert_eq!(ring.capacity(), 24, "rounded up to a shard multiple");
+    }
+
+    #[test]
+    fn export_shape_is_stable_json() {
+        let ring = Ring::new(8);
+        ring.push(FinishedTree {
+            seq: 0,
+            trace_id: 77,
+            status: 503,
+            ts_unix: 1.5,
+            duration_s: 0.002,
+            spans: vec![SpanRecord {
+                id: 1,
+                parent: 0,
+                name: "request",
+                start_ns: 0,
+                end_ns: 2_000_000,
+                attrs: vec![("code", 503)],
+            }],
+        });
+        let j = ring.export(None);
+        assert_eq!(j.path("count").and_then(Json::as_f64), Some(1.0));
+        assert_eq!(j.path("capacity").and_then(Json::as_f64), Some(8.0));
+        let trees = j.path("trees").and_then(Json::as_arr).unwrap();
+        assert_eq!(trees.len(), 1);
+        assert_eq!(trees[0].path("request_id").and_then(Json::as_f64), Some(77.0));
+        assert_eq!(trees[0].path("status").and_then(Json::as_f64), Some(503.0));
+        let spans = trees[0].path("spans").and_then(Json::as_arr).unwrap();
+        assert_eq!(spans[0].path("name").and_then(Json::as_str), Some("request"));
+        assert_eq!(spans[0].path("attrs.code").and_then(Json::as_f64), Some(503.0));
+        // Round-trips through the compact encoder.
+        let reparsed = Json::parse(&j.to_compact()).unwrap();
+        assert_eq!(reparsed.path("trees").and_then(Json::as_arr).map(Vec::len), Some(1));
+        // Filter miss yields an empty tree list, not an error.
+        let miss = ring.export(Some(9999));
+        assert_eq!(miss.path("count").and_then(Json::as_f64), Some(0.0));
+    }
+
+    #[test]
+    fn handoff_carries_the_cursor_across_threads() {
+        let _g = sampling_lock().lock().unwrap();
+        set_sampling(Sampling::Always);
+        let r = root("request", 881001);
+        let tree = tree_of(&r);
+        {
+            let probe = span("probe_loop");
+            let h = handoff();
+            thread::scope(|s| {
+                for _ in 0..4 {
+                    let h = h.clone();
+                    s.spawn(move || {
+                        let _g = install(&h);
+                        let w = span("worker");
+                        w.attr("chain", 3);
+                    });
+                }
+            });
+            drop(probe);
+        }
+        r.finish(200);
+        let spans = tree.spans.lock().unwrap();
+        let probe_id = spans.iter().find(|s| s.name == "probe_loop").unwrap().id;
+        let workers: Vec<&SpanRecord> = spans.iter().filter(|s| s.name == "worker").collect();
+        assert_eq!(workers.len(), 4);
+        for w in &workers {
+            assert_eq!(w.parent, probe_id, "worker spans nest under the handed-off parent");
+            assert!(w.end_ns >= 0);
+        }
+    }
+
+    #[test]
+    fn concurrent_writers_keep_the_tree_consistent() {
+        let _g = sampling_lock().lock().unwrap();
+        set_sampling(Sampling::Always);
+        let r = root("request", 881002);
+        let tree = tree_of(&r);
+        let h = handoff();
+        thread::scope(|s| {
+            for _ in 0..8 {
+                let h = h.clone();
+                s.spawn(move || {
+                    let _g = install(&h);
+                    for _ in 0..50 {
+                        let outer = span("w_outer");
+                        let _inner = span("w_inner");
+                        drop(_inner);
+                        drop(outer);
+                    }
+                });
+            }
+        });
+        r.finish(200);
+        let spans = tree.spans.lock().unwrap();
+        assert_eq!(spans.len(), 1 + 8 * 50 * 2);
+        // Ids are dense 1..=n insertion order; every parent precedes its
+        // child; every span closed.
+        for (i, s) in spans.iter().enumerate() {
+            assert_eq!(s.id as usize, i + 1);
+            assert!((s.parent as usize) < s.id as usize || s.parent == 0);
+            assert!(s.end_ns >= 0, "span {} left open", s.id);
+        }
+        let inner_parents_ok = spans
+            .iter()
+            .filter(|s| s.name == "w_inner")
+            .all(|s| spans[(s.parent as usize) - 1].name == "w_outer");
+        assert!(inner_parents_ok, "inner spans nest under their thread's outer span");
+    }
+}

@@ -25,11 +25,16 @@
 //! refinement degenerated to re-probing the doubling points).
 
 use std::sync::{Arc, OnceLock};
+use std::time::Instant;
 
 use anyhow::{ensure, Result};
 
-use crate::markov::{BuildOptions, MalleableModel, ModelBuilder, ModelInputs, SharedBuilder};
+use crate::markov::{
+    BuildOptions, MalleableModel, ModelBuilder, ModelInputs, ProbeMeta, SharedBuilder,
+};
+use crate::obs::trace;
 use crate::runtime::ComputeEngine;
+use crate::util::json::Json;
 
 /// Search configuration.
 #[derive(Debug, Clone, Copy)]
@@ -109,24 +114,110 @@ pub struct SearchResult {
     pub evaluations: usize,
 }
 
+/// Which search phase issued a probe (DESIGN.md §15).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ProbePhase {
+    /// Phase-1 geometric doubling from `i_min`.
+    Doubling,
+    /// The bracket-closing probe of `i_max` when doubling exits rising.
+    Cap,
+    /// Phase-2 bracket-midpoint refinement.
+    Refinement,
+}
+
+impl ProbePhase {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            ProbePhase::Doubling => "doubling",
+            ProbePhase::Cap => "cap",
+            ProbePhase::Refinement => "refinement",
+        }
+    }
+}
+
+/// One probe of the UWT(δ) curve, in evaluation order.
+#[derive(Debug, Clone)]
+pub struct ProbeTrace {
+    pub interval: f64,
+    pub uwt: f64,
+    pub phase: ProbePhase,
+    /// Whether the probe engine warm-started π from a previous solve.
+    pub warm_start: bool,
+    /// Power-iteration count of the stationary solve (0 for exact builds).
+    pub solve_iters: u64,
+    /// Wall-clock cost of this probe; 0 when `obs` timing is disabled.
+    pub seconds: f64,
+}
+
+/// The full search trajectory behind a [`SearchResult`]: every probed δ
+/// in chronological order with its phase and engine details. This is the
+/// payload `/v1/explain` and `select --explain` render.
+#[derive(Debug, Clone, Default)]
+pub struct SearchTrace {
+    pub probes: Vec<ProbeTrace>,
+}
+
+impl SearchTrace {
+    /// The shared explain payload (DESIGN.md §15): the selected interval
+    /// plus the chronological probe trajectory. Served verbatim by
+    /// `GET /v1/explain` (under server envelope fields) and printed by
+    /// `select --json --explain`, so the two can be diffed: every field
+    /// is deterministic for a cold select except the per-probe `seconds`.
+    pub fn explain_json(&self, r: &SearchResult) -> Json {
+        let mut out = Json::obj();
+        out.set("interval", Json::from(r.interval));
+        out.set("uwt", Json::from(r.uwt));
+        out.set("best_probed", Json::from(r.best_probed));
+        out.set("evaluations", Json::from(r.evaluations));
+        let mut arr = Vec::with_capacity(self.probes.len());
+        for p in &self.probes {
+            let mut pj = Json::obj();
+            pj.set("interval", Json::from(p.interval));
+            pj.set("uwt", Json::from(p.uwt));
+            pj.set("phase", Json::from(p.phase.as_str()));
+            pj.set("warm", Json::from(p.warm_start));
+            pj.set("iters", Json::from(p.solve_iters));
+            pj.set("seconds", Json::from(p.seconds));
+            arr.push(pj);
+        }
+        out.set("probes", Json::Arr(arr));
+        out
+    }
+}
+
 /// The doubling + refinement + band-average loop over an arbitrary
-/// `UWT_I` evaluator.
+/// `UWT_I` evaluator. Returns the result plus the [`SearchTrace`]
+/// recording every probe with its phase and engine metadata; recording
+/// is unconditional (the trace rides along with the result into the
+/// advisor cache), but per-probe wall-clock timing honors the global
+/// `obs` switch.
 fn run_search(
     cfg: &SearchConfig,
-    eval: &mut dyn FnMut(f64) -> Result<f64>,
-) -> Result<SearchResult> {
+    eval: &mut dyn FnMut(f64) -> Result<(f64, ProbeMeta)>,
+) -> Result<(SearchResult, SearchTrace)> {
     cfg.validate()?;
+    let span = trace::span("probe_loop");
     let mut probes: Vec<(f64, f64)> = Vec::new();
+    let mut strace = SearchTrace::default();
 
     // A degenerate spec can drive the model to a NaN/inf UWT; rejecting
     // it here (instead of letting the probe comparisons below panic)
     // turns the footgun into a per-request error the daemon can answer.
-    let mut eval = |i: f64| -> Result<f64> {
-        let uwt = eval(i)?;
+    let mut eval = |i: f64, phase: ProbePhase| -> Result<f64> {
+        let t0 = crate::obs::enabled().then(Instant::now);
+        let (uwt, meta) = eval(i)?;
         ensure!(
             uwt.is_finite(),
             "non-finite UWT {uwt} at interval {i} (degenerate model inputs)"
         );
+        strace.probes.push(ProbeTrace {
+            interval: i,
+            uwt,
+            phase,
+            warm_start: meta.warm_start,
+            solve_iters: meta.solve_iters,
+            seconds: t0.map(|t| t.elapsed().as_secs_f64()).unwrap_or(0.0),
+        });
         Ok(uwt)
     };
 
@@ -135,7 +226,7 @@ fn run_search(
     let mut prev: Option<f64> = None;
     let mut peaked = false;
     loop {
-        let uwt = eval(i)?;
+        let uwt = eval(i, ProbePhase::Doubling)?;
         probes.push((i, uwt));
         if let Some(p) = prev {
             if uwt < p {
@@ -153,7 +244,7 @@ fn run_search(
         // Bugfix: the doubling exited at the cap with UWT still rising, so
         // no probe bounds the optimum from above — probe `i_max` itself to
         // close the bracket for phase 2.
-        let uwt = eval(cfg.i_max)?;
+        let uwt = eval(cfg.i_max, ProbePhase::Cap)?;
         probes.push((cfg.i_max, uwt));
     }
 
@@ -184,7 +275,7 @@ fn run_search(
         let mut added = false;
         for m in mids {
             if probes.iter().all(|&(iv, _)| (iv / m - 1.0).abs() > 1e-3) {
-                let uwt = eval(m)?;
+                let uwt = eval(m, ProbePhase::Refinement)?;
                 probes.push((m, uwt));
                 added = true;
             }
@@ -209,7 +300,11 @@ fn run_search(
         .collect();
     let interval = in_band.iter().sum::<f64>() / in_band.len() as f64;
 
-    Ok(SearchResult { interval, uwt: best_uwt, best_probed, evaluations: probes.len(), probes })
+    span.attr("evaluations", probes.len() as u64);
+    Ok((
+        SearchResult { interval, uwt: best_uwt, best_probed, evaluations: probes.len(), probes },
+        strace,
+    ))
 }
 
 /// Run the paper's doubling + binary-search interval selection, with the
@@ -220,8 +315,17 @@ pub fn select_interval(
     engine: &ComputeEngine,
     cfg: &SearchConfig,
 ) -> Result<SearchResult> {
+    select_interval_traced(inputs, engine, cfg).map(|(r, _)| r)
+}
+
+/// [`select_interval`], also returning the probe-by-probe trajectory.
+pub fn select_interval_traced(
+    inputs: &ModelInputs,
+    engine: &ComputeEngine,
+    cfg: &SearchConfig,
+) -> Result<(SearchResult, SearchTrace)> {
     let builder = ModelBuilder::new(inputs, engine, &cfg.build)?;
-    run_search(cfg, &mut |i| builder.uwt(i))
+    run_search(cfg, &mut |i| builder.uwt_traced(i))
 }
 
 /// Run the search over a long-lived [`SharedBuilder`] (the advisor's
@@ -234,8 +338,18 @@ pub fn select_interval(
 /// as in [`select_interval`]. A cold builder reproduces
 /// [`select_interval`] bit for bit.
 pub fn select_interval_shared(builder: &SharedBuilder, cfg: &SearchConfig) -> Result<SearchResult> {
-    let result = run_search(cfg, &mut |i| builder.uwt(i));
-    if let Ok(r) = &result {
+    select_interval_shared_traced(builder, cfg).map(|(r, _)| r)
+}
+
+/// [`select_interval_shared`], also returning the probe-by-probe
+/// trajectory (`api::SelectOk::trace` carries it to the advisor cache
+/// and `/v1/explain`).
+pub fn select_interval_shared_traced(
+    builder: &SharedBuilder,
+    cfg: &SearchConfig,
+) -> Result<(SearchResult, SearchTrace)> {
+    let result = run_search(cfg, &mut |i| builder.uwt_traced(i));
+    if let Ok((r, _)) = &result {
         let o = search_obs();
         o.selects.inc();
         o.probes.add(r.evaluations as u64);
@@ -276,8 +390,9 @@ pub fn select_interval_uncached(
     cfg: &SearchConfig,
 ) -> Result<SearchResult> {
     run_search(cfg, &mut |i| {
-        Ok(MalleableModel::build(inputs, engine, i, &cfg.build)?.uwt())
+        Ok((MalleableModel::build(inputs, engine, i, &cfg.build)?.uwt(), ProbeMeta::default()))
     })
+    .map(|(r, _)| r)
 }
 
 #[cfg(test)]
@@ -450,14 +565,14 @@ mod tests {
     fn non_finite_probe_uwt_is_rejected_not_panicked() {
         // A NaN on the very first probe.
         let cfg = SearchConfig { refine_steps: 2, ..Default::default() };
-        let err = run_search(&cfg, &mut |_| Ok(f64::NAN)).unwrap_err();
+        let err = run_search(&cfg, &mut |_| Ok((f64::NAN, ProbeMeta::default()))).unwrap_err();
         assert!(format!("{err:#}").contains("non-finite"), "unexpected error: {err:#}");
         // An inf appearing mid-doubling (previously reached the
         // partial_cmp(..).unwrap() sorts and panicked).
         let mut k = 0usize;
         let err = run_search(&cfg, &mut |_| {
             k += 1;
-            Ok(if k < 3 { k as f64 } else { f64::INFINITY })
+            Ok((if k < 3 { k as f64 } else { f64::INFINITY }, ProbeMeta::default()))
         })
         .unwrap_err();
         assert!(format!("{err:#}").contains("non-finite"), "unexpected error: {err:#}");
@@ -466,15 +581,56 @@ mod tests {
         let mut m = 0usize;
         let err = run_search(&cfg, &mut |_| {
             m += 1;
-            Ok(match m {
+            let uwt = match m {
                 1 => 5.0,
                 2 => 6.0,
                 3 => 5.5,
                 _ => f64::NEG_INFINITY,
-            })
+            };
+            Ok((uwt, ProbeMeta::default()))
         })
         .unwrap_err();
         assert!(format!("{err:#}").contains("non-finite"), "unexpected error: {err:#}");
+    }
+
+    #[test]
+    fn trace_mirrors_probes_with_phases() {
+        let cfg = quick_cfg();
+        let shared = SharedBuilder::native(inputs(6, 3.0), &cfg.build);
+        let (res, tr) = select_interval_shared_traced(&shared, &cfg).unwrap();
+        // The trace is the chronological trajectory of exactly the probes
+        // that made up the result.
+        assert_eq!(tr.probes.len(), res.evaluations);
+        let mut traced: Vec<(f64, f64)> = tr.probes.iter().map(|p| (p.interval, p.uwt)).collect();
+        traced.sort_by(|a, b| a.0.total_cmp(&b.0));
+        assert_eq!(traced, res.probes, "trace and result disagree on the probe set");
+        // Doubling comes first and starts cold at i_min; refinement (if
+        // any) never precedes a doubling probe.
+        assert_eq!(tr.probes[0].interval, cfg.i_min);
+        assert_eq!(tr.probes[0].phase, ProbePhase::Doubling);
+        assert!(!tr.probes[0].warm_start, "first probe of a cold builder is cold");
+        let first_refine = tr.probes.iter().position(|p| p.phase == ProbePhase::Refinement);
+        if let Some(fr) = first_refine {
+            assert!(
+                tr.probes[fr..].iter().all(|p| p.phase == ProbePhase::Refinement),
+                "phases out of order: {:?}",
+                tr.probes.iter().map(|p| p.phase).collect::<Vec<_>>()
+            );
+            assert!(tr.probes[fr].warm_start, "refinement probes reuse the warm π");
+        }
+        // A repeat selection warm-starts from the first one's probes.
+        let (_, tr2) = select_interval_shared_traced(&shared, &cfg).unwrap();
+        assert!(tr2.probes[0].warm_start, "repeat selection starts warm");
+        // The explain payload carries every probe with its phase tag.
+        let j = tr.explain_json(&res);
+        let probes = j.path("probes").and_then(Json::as_arr).unwrap();
+        assert_eq!(probes.len(), res.evaluations);
+        assert_eq!(probes[0].path("phase").and_then(Json::as_str), Some("doubling"));
+        assert_eq!(j.path("interval").and_then(Json::as_f64), Some(res.interval));
+        assert_eq!(
+            j.path("evaluations").and_then(Json::as_f64),
+            Some(res.evaluations as f64)
+        );
     }
 
     #[test]

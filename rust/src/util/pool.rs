@@ -7,7 +7,12 @@
 //! over `0..n` on `k` workers and collects results in order.
 //!
 //! Built on `std::thread::scope`, so the closure may borrow from the caller.
+//!
+//! The pool carries the caller's tracing cursor (`obs::trace`) into every
+//! worker, so spans opened inside `f` nest under the request span that
+//! scheduled the work; with no tree installed the handoff is free.
 
+use crate::obs::trace;
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Mutex;
 
@@ -38,17 +43,23 @@ where
 
     let next = AtomicUsize::new(0);
     let slots = Mutex::new(&mut out);
+    let cursor = trace::handoff();
 
     std::thread::scope(|scope| {
+        let (next, slots, f) = (&next, &slots, &f);
         for _ in 0..workers {
-            scope.spawn(|| loop {
-                let i = next.fetch_add(1, Ordering::Relaxed);
-                if i >= n {
-                    break;
+            let cursor = cursor.clone();
+            scope.spawn(move || {
+                let _trace = trace::install(&cursor);
+                loop {
+                    let i = next.fetch_add(1, Ordering::Relaxed);
+                    if i >= n {
+                        break;
+                    }
+                    let v = f(i);
+                    let mut guard = slots.lock().unwrap();
+                    guard[i] = Some(v);
                 }
-                let v = f(i);
-                let mut guard = slots.lock().unwrap();
-                guard[i] = Some(v);
             });
         }
     });
@@ -100,6 +111,33 @@ mod tests {
         let items = vec!["a".to_string(), "bb".to_string(), "ccc".to_string()];
         let lens = map_slice(&items, 2, |s| s.len());
         assert_eq!(lens, vec![1, 2, 3]);
+    }
+
+    #[test]
+    fn workers_inherit_the_tracing_cursor() {
+        let _lock = trace::sampling_test_lock().lock().unwrap();
+        trace::set_sampling(trace::Sampling::Always);
+        let r = trace::root("request", 550_001);
+        let n = {
+            let _outer = trace::span("fanout");
+            run_indexed(8, 4, |i| {
+                let s = trace::span("indexed");
+                s.attr("i", i as u64);
+                i
+            })
+            .len()
+        };
+        assert_eq!(n, 8);
+        r.finish(200);
+        let tree = trace::ring().snapshot(Some(550_001));
+        assert_eq!(tree.len(), 1);
+        let spans = &tree[0].spans;
+        let fanout = spans.iter().find(|s| s.name == "fanout").expect("fanout span");
+        let indexed: Vec<_> = spans.iter().filter(|s| s.name == "indexed").collect();
+        assert_eq!(indexed.len(), 8);
+        for s in &indexed {
+            assert_eq!(s.parent, fanout.id, "worker spans nest under the caller's span");
+        }
     }
 
     #[test]

@@ -614,6 +614,85 @@ fn metrics_endpoint_exposes_every_layer_and_tracks_cache_hits() {
     handle.join().expect("server thread");
 }
 
+#[test]
+fn explain_and_debug_trace_round_trip() {
+    use malleable_ckpt::api::{self, SelectSpec};
+
+    let (addr, handle) = boot(AdvisorConfig::default());
+
+    // Cold select; the echoed X-Request-Id is the trace id to join on.
+    let (code, head, text) = http_raw(addr, "POST", "/v1/select", &select_body(6, 2.0, "qr", None));
+    assert_eq!(code, 200, "select failed: {text}");
+    let select = Json::parse(&text).expect("select body JSON");
+    let rid = request_id(&head);
+    let key = select.get("key").unwrap().as_str().expect("select carries a key").to_string();
+
+    // Offline oracle on the daemon's exact miss path: the same
+    // `api::select_one` call with the same spec replays the identical
+    // search, so every field of the trajectory is pinned bit for bit
+    // (same machine, same engine, lossless wire decimals).
+    let system = SystemParams::from_mttf_mttr(6, 2.0, 40.0);
+    let app = AppProfile::qr(6);
+    let policy = ReschedulingPolicy::greedy(6);
+    let inputs = ModelInputs::new(system, &app, &policy).unwrap();
+    let cfg = SearchConfig { refine_steps: 3, ..Default::default() };
+    let want = api::select_one(SelectSpec::new(inputs, cfg), &ComputeEngine::native())
+        .expect("offline facade select");
+
+    let (code, explain) = http(addr, "GET", &format!("/v1/explain?key={key}"), "");
+    assert_eq!(code, 200, "explain failed: {explain}");
+    assert_eq!(explain.get("ok").unwrap().as_bool(), Some(true));
+    assert_eq!(explain.get("key").unwrap().as_str(), Some(key.as_str()));
+    assert_eq!(explain.get("stale").unwrap().as_bool(), Some(false));
+    assert_eq!(f(&explain, "interval"), want.search.interval, "explain != facade interval");
+    assert_eq!(f(&explain, "uwt"), want.search.uwt, "explain != facade UWT");
+    assert_eq!(f(&explain, "evaluations"), want.search.evaluations as f64);
+    let probes = explain.get("probes").unwrap().as_arr().unwrap();
+    assert_eq!(probes.len(), want.trace.probes.len(), "probe set size diverged");
+    for (got, w) in probes.iter().zip(want.trace.probes.iter()) {
+        assert_eq!(f(got, "interval"), w.interval, "probed interval diverged");
+        assert_eq!(f(got, "uwt"), w.uwt, "probed UWT diverged");
+        assert_eq!(got.get("phase").unwrap().as_str(), Some(w.phase.as_str()));
+        assert_eq!(got.get("warm").unwrap().as_bool(), Some(w.warm_start));
+        assert_eq!(f(got, "iters"), w.solve_iters as f64);
+    }
+
+    // Addressing errors stay loud: unknown key 404, no parameter 400.
+    let (code, _) = http(addr, "GET", "/v1/explain?key=ffffffffffffffff", "");
+    assert_eq!(code, 404);
+    let (code, _) = http(addr, "GET", "/v1/explain", "");
+    assert_eq!(code, 400);
+
+    // The span tree lands in the ring after the response bytes go out
+    // (the root closes post-write), so poll the debug endpoint briefly.
+    let deadline = std::time::Instant::now() + Duration::from_secs(10);
+    let tree = loop {
+        let (code, dump) = http(addr, "GET", &format!("/v1/debug/trace?request_id={rid}"), "");
+        assert_eq!(code, 200);
+        let trees = dump.get("trees").unwrap().as_arr().unwrap();
+        if let Some(t) = trees.iter().find(|t| f(t, "request_id") == rid as f64) {
+            break t.clone();
+        }
+        assert!(
+            std::time::Instant::now() < deadline,
+            "select's span tree never appeared for request id {rid}: {dump}"
+        );
+        std::thread::sleep(Duration::from_millis(20));
+    };
+    assert_eq!(f(&tree, "status"), 200.0, "traced status != served status");
+    assert!(f(&tree, "duration_ms") >= 0.0);
+    let spans = tree.get("spans").unwrap().as_arr().unwrap();
+    let names: Vec<&str> =
+        spans.iter().filter_map(|s| s.get("name").and_then(Json::as_str)).collect();
+    for expect in ["request", "parse", "cache_lookup", "builder_build", "probe_loop", "respond"] {
+        assert!(names.contains(&expect), "span {expect:?} missing from {names:?}");
+    }
+
+    let (code, _) = http(addr, "POST", "/v1/shutdown", "");
+    assert_eq!(code, 200);
+    handle.join().expect("server thread");
+}
+
 // The concurrent phase needs `Copy` values inside `move` closures; the
 // oracle intervals are deterministic, so compute them once per call.
 fn want_a_interval() -> f64 {

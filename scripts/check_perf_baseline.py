@@ -17,7 +17,10 @@ A baseline is sane when:
     saturation probe that actually observed 503 sheds;
   * the `obs_overhead` section shows the observability layer costing the
     cached-select hot path less than 5% vs `--no-obs` (negative overhead
-    is measurement noise and clamps to 0).
+    is measurement noise and clamps to 0);
+  * the `trace_overhead` section shows span recording (`--trace-sample
+    always`, ring pushes included) costing the same hot path less than 5%
+    vs `--trace-sample off`, under the same noise clamp.
 
 Usage: check_perf_baseline.py [BENCH_perf.json]
 Exits non-zero (with a reason) on an insane file.
@@ -93,6 +96,26 @@ def check_obs_overhead(report: dict) -> None:
         )
 
 
+def check_trace_overhead(report: dict) -> None:
+    """The tracing acceptance gate (DESIGN.md §15): recording a span tree
+    per request must cost the cached-select hot path under 5%."""
+    tr = report.get("trace_overhead")
+    if not isinstance(tr, dict):
+        fail("missing 'trace_overhead' section (trace always vs off selects)")
+    for key in ("traced_s", "no_trace_s", "iters"):
+        if not is_positive_number(tr.get(key)):
+            fail(f"trace_overhead.{key} = {tr.get(key)!r} (want a finite positive number)")
+    pct = tr.get("overhead_pct")
+    if not isinstance(pct, (int, float)) or not math.isfinite(pct):
+        fail(f"trace_overhead.overhead_pct = {pct!r} (want a finite number)")
+    overhead = max(0.0, float(pct))
+    if overhead >= 5.0:
+        fail(
+            f"trace_overhead.overhead_pct = {pct:.2f}% >= 5% — span recording "
+            "is too expensive for the hot path"
+        )
+
+
 def main() -> None:
     path = sys.argv[1] if len(sys.argv) > 1 else "BENCH_perf.json"
     try:
@@ -111,6 +134,7 @@ def main() -> None:
 
     check_serve_load(report)
     check_obs_overhead(report)
+    check_trace_overhead(report)
 
     entries = walk_speedups(report)
     if not entries:

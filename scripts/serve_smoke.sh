@@ -488,3 +488,89 @@ wait "$REPLICA_PID" 2>/dev/null || true
 rm -rf "$PRIMARY_DIR" "$REPLICA_DIR"
 trap - EXIT
 echo "serve smoke (replication failover): OK"
+
+# ---------------------------------------------------------------------------
+# Phase 5: explainability + request tracing — a cold select's /v1/explain
+# curve must match `select --json --explain` exactly once the server
+# envelope (ok/key/stale/lambda/theta/track) and the wall-clock per-probe
+# `seconds` are stripped, and GET /v1/debug/trace must serve a span tree
+# joined on the select's echoed X-Request-Id.
+# ---------------------------------------------------------------------------
+PORT5=$((PORT + 4))
+ADDR5="127.0.0.1:${PORT5}"
+
+"$BIN" serve --addr "$ADDR5" --trace-ring 64 --trace-sample always &
+SERVE_PID=$!
+trap 'kill "$SERVE_PID" 2>/dev/null || true' EXIT
+wait_healthy "$ADDR5"
+
+headers=$(mktemp)
+explain_select=$(curl -sf -D "$headers" "http://${ADDR5}/v1/select" -d "$req")
+request_id=$(tr -d '\r' <"$headers" | awk 'tolower($1) == "x-request-id:" {print $2}')
+rm -f "$headers"
+if [ -z "$request_id" ]; then
+    echo "error: /v1/select response carried no X-Request-Id header" >&2
+    exit 1
+fi
+
+key=$(python3 -c "import json,sys; print(json.loads(sys.argv[1])['key'])" "$explain_select")
+explain_daemon=$(curl -sf "http://${ADDR5}/v1/explain?key=${key}")
+explain_oracle=$("$BIN" select --system system-1/128 --app qr --json --explain)
+
+# Bad addressing must fail loudly, not 200 with garbage.
+code=$(curl -s -o /dev/null -w '%{http_code}' "http://${ADDR5}/v1/explain")
+if [ "$code" != "400" ]; then
+    echo "error: parameterless /v1/explain returned HTTP $code, want 400" >&2
+    exit 1
+fi
+code=$(curl -s -o /dev/null -w '%{http_code}' "http://${ADDR5}/v1/explain?key=ffffffffffffffff")
+if [ "$code" != "404" ]; then
+    echo "error: unknown-key /v1/explain returned HTTP $code, want 404" >&2
+    exit 1
+fi
+
+trace_dump=$(curl -sf "http://${ADDR5}/v1/debug/trace?request_id=${request_id}")
+
+python3 - "$explain_daemon" "$explain_oracle" "$explain_select" "$trace_dump" "$request_id" <<'EOF'
+import json
+import sys
+
+daemon, oracle, select, dump = (json.loads(a) for a in sys.argv[1:5])
+request_id = int(sys.argv[5])
+
+assert daemon["ok"], f"/v1/explain reported ok=false: {daemon}"
+assert daemon["key"] == select["key"], "explain key != select key"
+assert daemon["stale"] is False
+
+def curve(payload):
+    trimmed = {
+        k: v for k, v in payload.items()
+        if k not in ("ok", "key", "stale", "lambda", "theta", "track")
+    }
+    trimmed["probes"] = [
+        {k: v for k, v in p.items() if k != "seconds"} for p in payload["probes"]
+    ]
+    return trimmed
+
+d, o = curve(daemon), curve(oracle)
+assert d == o, f"explain curve diverged from offline oracle:\ndaemon: {d}\noracle: {o}"
+assert daemon["interval"] == select["interval"], "explain interval != served interval"
+assert len(daemon["probes"]) == daemon["evaluations"], "probe log incomplete"
+phases = {p["phase"] for p in daemon["probes"]}
+assert "doubling" in phases, f"no doubling probes recorded: {phases}"
+
+trees = [t for t in dump["trees"] if t["request_id"] == request_id]
+assert trees, f"no span tree for request id {request_id} in {len(dump['trees'])} trees"
+tree = trees[0]
+assert tree["status"] == 200, f"traced status {tree['status']} != 200"
+names = {s["name"] for s in tree["spans"]}
+for expected in ("request", "parse", "cache_lookup", "probe_loop", "respond"):
+    assert expected in names, f"span {expected!r} missing from trace: {sorted(names)}"
+assert tree["duration_ms"] >= 0
+print("explain smoke: /v1/explain == offline --explain oracle; trace joined on X-Request-Id")
+EOF
+
+curl -sf "http://${ADDR5}/v1/shutdown" -d '{}' >/dev/null
+wait "$SERVE_PID" 2>/dev/null || true
+trap - EXIT
+echo "serve smoke (explain + trace): OK"
