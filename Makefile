@@ -1,9 +1,10 @@
 # Tier-1 verification and perf tracking for the malleable-ckpt repo.
 
-.PHONY: verify build test lint fmt serve-smoke fuzz-smoke bench-smoke bench clean
+.PHONY: verify build test lint fmt srclint serve-smoke fuzz-smoke bench-smoke bench clean
 
-# Tier-1: release build + full test suite (see ROADMAP.md).
-verify: build test
+# Tier-1: release build + full test suite + the repo-invariant static
+# analyzer (see ROADMAP.md).
+verify: build test srclint
 
 build:
 	cargo build --release
@@ -20,6 +21,12 @@ lint:
 fmt:
 	cargo fmt --all
 
+# Repo-invariant static analyzer (DESIGN.md §16), mirrored by the CI
+# `srclint` job: no-panic-paths, total-cmp-only, lock-order,
+# typed-errors, route-coverage. Any finding fails the run.
+srclint: build
+	./target/release/malleable-ckpt srclint rust/src
+
 # Boot the advisor daemon from the release binary and exercise it over
 # HTTP against the offline oracle (mirrors the CI `serve-smoke` job).
 serve-smoke: build
@@ -32,6 +39,7 @@ fuzz-smoke: build
 	./target/release/malleable-ckpt fuzz wal --iters 5000 --seed 2
 	./target/release/malleable-ckpt fuzz snapshot --iters 5000 --seed 3
 	./target/release/malleable-ckpt fuzz replicate --iters 5000 --seed 4
+	./target/release/malleable-ckpt fuzz srclint --iters 5000 --seed 5
 
 # Short smoke bench: regenerates BENCH_perf.json at the repo root with the
 # reduced size grid, so perf regressions show up in every PR.

@@ -794,9 +794,12 @@ impl Advisor {
         let mut compacted = 0usize;
         for handle in handles {
             let mut track = handle.lock().unwrap();
-            if track.store.is_some() {
-                let state = state_of_track(&track);
-                track.store.as_mut().unwrap().compact(&state)?;
+            if track.store.is_none() {
+                continue;
+            }
+            let state = state_of_track(&track);
+            if let Some(store) = track.store.as_mut() {
+                store.compact(&state)?;
                 compacted += 1;
                 self.compactions.inc();
             }
@@ -826,17 +829,21 @@ impl Advisor {
         for (id, handle) in handles {
             let mut track = handle.lock().unwrap();
             let needs = track.store.as_ref().is_some_and(|s| s.wal_bytes() > threshold);
-            if needs {
-                let state = state_of_track(&track);
-                match track.store.as_mut().unwrap().compact(&state) {
-                    Ok(()) => {
-                        self.compactions.inc();
-                    }
-                    Err(e) => {
-                        let err = Json::from(format!("{e:#}"));
-                        let fields = [("track", Json::from(id.as_str())), ("error", err)];
-                        olog::error("advisor", "compaction failed", &fields);
-                    }
+            if !needs {
+                continue;
+            }
+            let state = state_of_track(&track);
+            let Some(store) = track.store.as_mut() else {
+                continue;
+            };
+            match store.compact(&state) {
+                Ok(()) => {
+                    self.compactions.inc();
+                }
+                Err(e) => {
+                    let err = Json::from(format!("{e:#}"));
+                    let fields = [("track", Json::from(id.as_str())), ("error", err)];
+                    olog::error("advisor", "compaction failed", &fields);
                 }
             }
         }
@@ -851,6 +858,8 @@ impl Advisor {
     pub fn bg_wait(&self, timeout: Duration) {
         let guard = self.bg.lock().unwrap();
         if guard.is_empty() {
+            // Condvar::wait_timeout only errs on a poisoned mutex, which the
+            // lock() above would already have propagated as a panic.
             let _unused = self.bg_cv.wait_timeout(guard, timeout).unwrap();
         }
     }

@@ -51,6 +51,11 @@
 //! {"track": "cluster-a", "n_procs": 128,
 //!  "events": [{"proc": 3, "fail": 120.5, "repair": 2520.0}]}
 //! ```
+//!
+//! This module parses untrusted bytes, so it is under srclint's
+//! whole-file no-panic-paths rule: typed errors only, no unwraps, no
+//! unguarded indexing (DESIGN.md §16).
+#![warn(clippy::unwrap_used, clippy::expect_used, clippy::panic)]
 
 use anyhow::{anyhow, bail, Context, Result};
 
@@ -173,7 +178,13 @@ fn parse_policy(j: Option<&Json>, app: &AppProfile, n: usize) -> Result<Reschedu
         None => Ok(ReschedulingPolicy::greedy(n)),
         Some(Json::Str(name)) => match name.as_str() {
             "greedy" => Ok(ReschedulingPolicy::greedy(n)),
-            "pb" => ReschedulingPolicy::performance_based(&app.work_vector()[..n]),
+            "pb" => {
+                let work = app.work_vector();
+                let work = work.get(..n).ok_or_else(|| {
+                    anyhow!("app vectors cover {} processors, system has {n}", work.len())
+                })?;
+                ReschedulingPolicy::performance_based(work)
+            }
             other => bail!("unknown policy '{other}' (greedy|pb or {{\"rp\": [...]}})"),
         },
         Some(obj @ Json::Obj(_)) => {
@@ -396,6 +407,7 @@ pub fn select_batch_response(results: Vec<Json>) -> Json {
 }
 
 #[cfg(test)]
+#[allow(clippy::unwrap_used, clippy::expect_used, clippy::panic)]
 mod tests {
     use super::*;
 

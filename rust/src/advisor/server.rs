@@ -187,6 +187,7 @@ pub(crate) fn try_parse_request(
         }
         return Ok(None);
     };
+    // srclint: allow(no-panic-paths) — find_head_end returns a window position, so head_end <= buf.len()
     let head = match std::str::from_utf8(&buf[..head_end]) {
         Ok(h) => h,
         Err(_) => return Err((400, "non-UTF-8 request head".to_string())),
@@ -243,6 +244,7 @@ pub(crate) fn try_parse_request(
     if buf.len() < frame_end {
         return Ok(None);
     }
+    // srclint: allow(no-panic-paths) — frame_end <= buf.len() checked above, and head_end + 4 <= frame_end
     let body = match std::str::from_utf8(&buf[head_end + 4..frame_end]) {
         Ok(b) => b.to_string(),
         Err(_) => return Err((400, "non-UTF-8 request body".to_string())),

@@ -1,0 +1,409 @@
+//! Token-level lexer for `srclint` (DESIGN.md §16).
+//!
+//! A deliberately small, dependency-free scanner: full-identifier tokens
+//! (so `unwrap` never matches inside `unwrap_or`), string/char/raw-string
+//! and comment handling, and per-token line numbers. It is *total* — any
+//! byte soup lexes to *some* token stream without panicking, which is
+//! what lets the fuzz harness drive arbitrary mutations straight through
+//! `analysis::scan_source` (srclint holds itself to rule 1).
+//!
+//! The lexer does not try to be a Rust grammar. It produces exactly what
+//! the rules in [`super::rules`] need: identifiers, punctuation, string
+//! literals (with their unescaped-enough content, so route tables can be
+//! cross-checked), and the text of `//` comments (the allow-comment
+//! grammar lives in comments).
+
+/// One lexical token. Numbers, char literals and lifetimes are folded
+/// into [`TokKind::Other`] — the rules never inspect them, but keeping a
+/// placeholder preserves "previous token" queries (e.g. rule 1 must not
+/// mistake `'a'` for an indexable expression).
+#[derive(Debug, Clone, PartialEq)]
+pub enum TokKind {
+    /// Identifier or keyword, complete word.
+    Ident(String),
+    /// String literal (normal, raw, or byte); content with simple escapes
+    /// dropped rather than interpreted.
+    Str(String),
+    /// Single punctuation character.
+    Punct(char),
+    /// Number, char literal, lifetime — opaque filler.
+    Other,
+}
+
+/// A token plus the 1-based source line it starts on.
+#[derive(Debug, Clone)]
+pub struct Tok {
+    pub kind: TokKind,
+    pub line: u32,
+}
+
+impl Tok {
+    /// The identifier text, if this is an identifier.
+    pub fn ident(&self) -> Option<&str> {
+        match &self.kind {
+            TokKind::Ident(s) => Some(s.as_str()),
+            _ => None,
+        }
+    }
+
+    /// True if this token is the identifier `name`.
+    pub fn is_ident(&self, name: &str) -> bool {
+        self.ident() == Some(name)
+    }
+
+    /// True if this token is the punctuation `c`.
+    pub fn is_punct(&self, c: char) -> bool {
+        self.kind == TokKind::Punct(c)
+    }
+
+    /// The string-literal content, if this is a string literal.
+    pub fn str_lit(&self) -> Option<&str> {
+        match &self.kind {
+            TokKind::Str(s) => Some(s.as_str()),
+            _ => None,
+        }
+    }
+}
+
+/// Lexer output: the token stream plus every `//` comment with its line.
+#[derive(Debug, Default)]
+pub struct Lexed {
+    pub toks: Vec<Tok>,
+    /// `(line, text)` for each `//` comment, text without the slashes.
+    pub comments: Vec<(u32, String)>,
+}
+
+/// Longest char literal we will scan for a closing quote before deciding
+/// the `'` was a lifetime or stray punctuation (`'\u{10FFFF}'` is 10).
+const MAX_CHAR_LIT: usize = 24;
+
+/// Lex `src` into tokens and comments. Total: never panics, never errors;
+/// malformed input simply produces a best-effort token stream.
+pub fn lex(src: &str) -> Lexed {
+    let cs: Vec<char> = src.chars().collect();
+    let mut out = Lexed::default();
+    let mut i = 0usize;
+    let mut line = 1u32;
+    while let Some(&c) = cs.get(i) {
+        if c == '\n' {
+            line += 1;
+            i += 1;
+            continue;
+        }
+        if c.is_whitespace() {
+            i += 1;
+            continue;
+        }
+        // Line comment.
+        if c == '/' && cs.get(i + 1) == Some(&'/') {
+            let start = i + 2;
+            let mut j = start;
+            while let Some(&d) = cs.get(j) {
+                if d == '\n' {
+                    break;
+                }
+                j += 1;
+            }
+            let text: String = cs.get(start..j).unwrap_or_default().iter().collect();
+            out.comments.push((line, text));
+            i = j;
+            continue;
+        }
+        // Block comment (nested, as in Rust).
+        if c == '/' && cs.get(i + 1) == Some(&'*') {
+            let mut depth = 1u32;
+            let mut j = i + 2;
+            while depth > 0 {
+                match (cs.get(j).copied(), cs.get(j + 1).copied()) {
+                    (Some('*'), Some('/')) => {
+                        depth -= 1;
+                        j += 2;
+                    }
+                    (Some('/'), Some('*')) => {
+                        depth += 1;
+                        j += 2;
+                    }
+                    (Some('\n'), _) => {
+                        line += 1;
+                        j += 1;
+                    }
+                    (Some(_), _) => j += 1,
+                    (None, _) => break,
+                }
+            }
+            i = j;
+            continue;
+        }
+        // Raw / byte string prefixes: r"", r#""#, b"", br#""#.
+        if c == 'r' || c == 'b' {
+            if let Some((tok, next, nl)) = lex_prefixed_string(&cs, i) {
+                out.toks.push(Tok { kind: tok, line });
+                line += nl;
+                i = next;
+                continue;
+            }
+        }
+        // Plain string literal.
+        if c == '"' {
+            let (content, next, nl) = lex_plain_string(&cs, i + 1);
+            out.toks.push(Tok { kind: TokKind::Str(content), line });
+            line += nl;
+            i = next;
+            continue;
+        }
+        // Identifier / keyword.
+        if c.is_alphabetic() || c == '_' {
+            let start = i;
+            let mut j = i;
+            while let Some(&d) = cs.get(j) {
+                if d.is_alphanumeric() || d == '_' {
+                    j += 1;
+                } else {
+                    break;
+                }
+            }
+            let word: String = cs.get(start..j).unwrap_or_default().iter().collect();
+            out.toks.push(Tok { kind: TokKind::Ident(word), line });
+            i = j;
+            continue;
+        }
+        // Number (opaque). Consume `.` only when a digit follows so range
+        // expressions like `0..n` stay three tokens.
+        if c.is_ascii_digit() {
+            let mut j = i;
+            while let Some(&d) = cs.get(j) {
+                if d.is_alphanumeric() || d == '_' {
+                    j += 1;
+                } else if d == '.' && cs.get(j + 1).is_some_and(|e| e.is_ascii_digit()) {
+                    j += 1;
+                } else {
+                    break;
+                }
+            }
+            out.toks.push(Tok { kind: TokKind::Other, line });
+            i = j;
+            continue;
+        }
+        // Char literal vs lifetime.
+        if c == '\'' {
+            let next_is_word = cs.get(i + 1).is_some_and(|d| d.is_alphabetic() || *d == '_');
+            let closes = cs.get(i + 2) == Some(&'\'');
+            if next_is_word && !closes {
+                // Lifetime: consume the quote and the word.
+                let mut j = i + 1;
+                while let Some(&d) = cs.get(j) {
+                    if d.is_alphanumeric() || d == '_' {
+                        j += 1;
+                    } else {
+                        break;
+                    }
+                }
+                out.toks.push(Tok { kind: TokKind::Other, line });
+                i = j;
+                continue;
+            }
+            // Char literal: bounded scan for the closing quote.
+            let mut j = i + 1;
+            let mut found = false;
+            let mut nl = 0u32;
+            while j < i + MAX_CHAR_LIT {
+                match cs.get(j).copied() {
+                    Some('\\') => j += 2,
+                    Some('\'') => {
+                        j += 1;
+                        found = true;
+                        break;
+                    }
+                    Some('\n') => {
+                        nl += 1;
+                        j += 1;
+                    }
+                    Some(_) => j += 1,
+                    None => break,
+                }
+            }
+            if found {
+                out.toks.push(Tok { kind: TokKind::Other, line });
+                line += nl;
+                i = j;
+            } else {
+                // Stray quote; emit as punctuation and move on.
+                out.toks.push(Tok { kind: TokKind::Punct('\''), line });
+                i += 1;
+            }
+            continue;
+        }
+        out.toks.push(Tok { kind: TokKind::Punct(c), line });
+        i += 1;
+    }
+    out
+}
+
+/// Try to lex a raw/byte string starting at `i` (`r"`, `r#"`, `b"`,
+/// `br#"` …). Returns `(token, next_index, newlines_consumed)` or `None`
+/// when `i` does not start one (then the caller lexes an identifier).
+fn lex_prefixed_string(cs: &[char], i: usize) -> Option<(TokKind, usize, u32)> {
+    let mut j = i;
+    let mut raw = false;
+    match cs.get(j).copied() {
+        Some('b') => {
+            j += 1;
+            if cs.get(j) == Some(&'r') {
+                raw = true;
+                j += 1;
+            }
+        }
+        Some('r') => {
+            raw = true;
+            j += 1;
+        }
+        _ => return None,
+    }
+    let mut hashes = 0usize;
+    if raw {
+        while cs.get(j + hashes) == Some(&'#') {
+            hashes += 1;
+        }
+        j += hashes;
+    }
+    if cs.get(j) != Some(&'"') {
+        return None;
+    }
+    j += 1;
+    let mut content = String::new();
+    let mut nl = 0u32;
+    loop {
+        match cs.get(j).copied() {
+            None => break,
+            Some('\\') if !raw => {
+                // Skip the escape pair wholesale.
+                if cs.get(j + 1) == Some(&'\n') {
+                    nl += 1;
+                }
+                j += 2;
+            }
+            Some('"') => {
+                if raw {
+                    let mut k = 0usize;
+                    while k < hashes && cs.get(j + 1 + k) == Some(&'#') {
+                        k += 1;
+                    }
+                    if k == hashes {
+                        j += 1 + hashes;
+                        break;
+                    }
+                    content.push('"');
+                    j += 1;
+                } else {
+                    j += 1;
+                    break;
+                }
+            }
+            Some('\n') => {
+                nl += 1;
+                content.push('\n');
+                j += 1;
+            }
+            Some(d) => {
+                content.push(d);
+                j += 1;
+            }
+        }
+    }
+    Some((TokKind::Str(content), j, nl))
+}
+
+/// Lex a plain `"` string whose opening quote is already consumed
+/// (`start` is the first content char). Returns `(content, next, nl)`.
+fn lex_plain_string(cs: &[char], start: usize) -> (String, usize, u32) {
+    let mut j = start;
+    let mut content = String::new();
+    let mut nl = 0u32;
+    loop {
+        match cs.get(j).copied() {
+            None => break,
+            Some('\\') => {
+                if cs.get(j + 1) == Some(&'\n') {
+                    nl += 1;
+                }
+                j += 2;
+            }
+            Some('"') => {
+                j += 1;
+                break;
+            }
+            Some('\n') => {
+                nl += 1;
+                content.push('\n');
+                j += 1;
+            }
+            Some(d) => {
+                content.push(d);
+                j += 1;
+            }
+        }
+    }
+    (content, j, nl)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn idents(src: &str) -> Vec<String> {
+        lex(src)
+            .toks
+            .into_iter()
+            .filter_map(|t| match t.kind {
+                TokKind::Ident(s) => Some(s),
+                _ => None,
+            })
+            .collect()
+    }
+
+    #[test]
+    fn identifiers_are_whole_words() {
+        assert_eq!(idents("x.unwrap_or(0)"), ["x", "unwrap_or"]);
+        assert_eq!(idents("y.unwrap()"), ["y", "unwrap"]);
+    }
+
+    #[test]
+    fn strings_and_comments_do_not_leak_tokens() {
+        let l = lex("let s = \"a.unwrap()\"; // b.expect()\n");
+        assert!(l.toks.iter().all(|t| !t.is_ident("unwrap")));
+        assert!(l.toks.iter().all(|t| !t.is_ident("expect")));
+        assert_eq!(l.comments.len(), 1);
+        assert!(l.comments.first().is_some_and(|(_, c)| c.contains("b.expect()")));
+    }
+
+    #[test]
+    fn raw_strings_and_escapes() {
+        let l = lex(r##"let s = r#"quote " inside"#; let t = "esc \" end";"##);
+        let strs: Vec<&str> = l.toks.iter().filter_map(Tok::str_lit).collect();
+        assert_eq!(strs.len(), 2);
+        assert!(strs.first().is_some_and(|s| s.contains("quote \" inside")));
+    }
+
+    #[test]
+    fn lifetimes_and_char_literals() {
+        let l = lex("fn f<'a>(x: &'a str) { let c = 'x'; let n = '\\n'; }");
+        // No stray quote punctuation; lifetime and chars are opaque.
+        assert!(l.toks.iter().all(|t| !t.is_punct('\'')));
+    }
+
+    #[test]
+    fn line_numbers_track_newlines_everywhere() {
+        let src = "a\n\"two\nlines\"\nb";
+        let l = lex(src);
+        let b = l.toks.iter().find(|t| t.is_ident("b"));
+        assert_eq!(b.map(|t| t.line), Some(4));
+    }
+
+    #[test]
+    fn total_on_garbage() {
+        // Unterminated everything; must not panic.
+        for src in ["\"abc", "r#\"abc", "'x", "/* open", "b\"", "'"] {
+            let _ = lex(src);
+        }
+    }
+}

@@ -1,0 +1,79 @@
+//! Rendering for srclint findings: human-readable text for terminals,
+//! `util::json` for CI artifacts and the `--json` flag (DESIGN.md §16).
+
+use super::rules::Finding;
+use crate::util::json::Json;
+
+/// Human-readable report, one finding per line in `file:line [rule]
+/// message` form, followed by a summary line. Empty input renders the
+/// all-clear line only.
+pub fn render_text(findings: &[Finding]) -> String {
+    let mut out = String::new();
+    for f in findings {
+        out.push_str(&format!("{}:{} [{}] {}\n", f.file, f.line, f.rule, f.message));
+    }
+    if findings.is_empty() {
+        out.push_str("srclint: clean\n");
+    } else {
+        out.push_str(&format!("srclint: {} finding(s)\n", findings.len()));
+    }
+    out
+}
+
+/// JSON report: `{"ok": bool, "count": n, "findings": [{rule, file,
+/// line, message}…]}`. Round-trips through [`Json::parse`].
+pub fn render_json(findings: &[Finding]) -> Json {
+    let items: Vec<Json> = findings
+        .iter()
+        .map(|f| {
+            let mut o = Json::obj();
+            o.set("rule", Json::from(f.rule));
+            o.set("file", Json::from(f.file.as_str()));
+            o.set("line", Json::from(f.line as usize));
+            o.set("message", Json::from(f.message.as_str()));
+            o
+        })
+        .collect();
+    let mut root = Json::obj();
+    root.set("ok", Json::from(findings.is_empty()));
+    root.set("count", Json::from(findings.len()));
+    root.set("findings", Json::Arr(items));
+    root
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> Vec<Finding> {
+        vec![Finding {
+            rule: "no-panic-paths",
+            file: "rust/src/x.rs".to_string(),
+            line: 7,
+            message: "boom".to_string(),
+        }]
+    }
+
+    #[test]
+    fn text_report_shape() {
+        let text = render_text(&sample());
+        assert!(text.contains("rust/src/x.rs:7 [no-panic-paths] boom"));
+        assert!(text.contains("1 finding(s)"));
+        assert_eq!(render_text(&[]), "srclint: clean\n");
+    }
+
+    #[test]
+    fn json_report_roundtrips() {
+        let j = render_json(&sample());
+        let parsed = Json::parse(&j.to_compact()).expect("report must be valid JSON");
+        assert_eq!(parsed.get("ok").and_then(Json::as_bool), Some(false));
+        assert_eq!(parsed.get("count").and_then(Json::as_f64), Some(1.0));
+        let first = parsed.get("findings").and_then(Json::as_arr).and_then(<[Json]>::first);
+        assert_eq!(
+            first.and_then(|f| f.get("rule").and_then(Json::as_str)),
+            Some("no-panic-paths")
+        );
+        let clean = Json::parse(&render_json(&[]).to_compact()).expect("clean report parses");
+        assert_eq!(clean.get("ok").and_then(Json::as_bool), Some(true));
+    }
+}

@@ -1,0 +1,1080 @@
+//! The five srclint rules and the analyzer that drives them over a file
+//! set (DESIGN.md §16).
+//!
+//! Each rule encodes an invariant the test suite otherwise checks only
+//! dynamically:
+//!
+//! 1. **no-panic-paths** — fuzz-reachable parse/decode code must return
+//!    typed errors, never panic (`unwrap`/`expect`/`panic!`/indexing).
+//! 2. **total-cmp-only** — float ordering in `search/`, `markov/`,
+//!    `api/`, `metrics/` goes through `total_cmp`, never `partial_cmp`
+//!    or naive `f64::max` folds (the PR 5 NaN class).
+//! 3. **lock-order** — every classified lock acquisition site must
+//!    respect the sanctioned order cache shard < track registry <
+//!    track < trace ring, and the registry lock may never be held
+//!    across a track-lock acquisition.
+//! 4. **typed-errors** — `store/` and `advisor/replicate` surface
+//!    `StoreError`, never a raw `std::io::Error`.
+//! 5. **route-coverage** — the server's route table, dispatch arms,
+//!    metric-family derivation, auth gate, and trace roots must agree.
+//!
+//! Suppression is per-line: `// srclint: allow(<rule>) — reason`. The
+//! reason is mandatory; an allow without one is itself a finding.
+
+use super::lexer::{lex, Lexed, Tok, TokKind};
+
+pub const RULE_PANIC: &str = "no-panic-paths";
+pub const RULE_CMP: &str = "total-cmp-only";
+pub const RULE_LOCK: &str = "lock-order";
+pub const RULE_ERR: &str = "typed-errors";
+pub const RULE_ROUTE: &str = "route-coverage";
+/// Meta-rule: a malformed or reason-less allow comment.
+pub const RULE_ALLOW: &str = "allow-grammar";
+
+/// The five suppressible rules, in catalog order.
+pub const RULE_NAMES: &[&str] = &[RULE_PANIC, RULE_CMP, RULE_LOCK, RULE_ERR, RULE_ROUTE];
+
+/// One analyzer finding: a rule violation at a source location.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Finding {
+    pub rule: &'static str,
+    pub file: String,
+    pub line: u32,
+    pub message: String,
+}
+
+// ---------------------------------------------------------------------
+// Rule scopes
+// ---------------------------------------------------------------------
+
+/// Files where rule 1 covers every non-test token.
+const PANIC_WHOLE_FILES: &[&str] = &["advisor/protocol.rs", "traces/parse.rs"];
+
+/// Files where rule 1 covers only the named functions (the
+/// fuzz-reachable parse/decode cores; the surrounding I/O plumbing may
+/// use idiomatic poison unwraps).
+const PANIC_SCOPED_FNS: &[(&str, &[&str])] = &[
+    ("advisor/server.rs", &["try_parse_request", "find_head_end"]),
+    (
+        "advisor/replicate.rs",
+        &[
+            "mal",
+            "parse_hex64",
+            "hex_decode",
+            "chunk_sums",
+            "parse_segment_name",
+            "parse_segment_meta",
+            "u64_field",
+            "str_field",
+            "parse_manifest",
+            "parse_segment",
+            "validate_segment_bytes",
+            "install_segment",
+        ],
+    ),
+    ("store/wal.rs", &["scan_bytes", "new", "take", "u8", "u64", "f64", "done"]),
+    ("store/snapshot.rs", &["decode", "decode_state"]),
+];
+
+/// Directories (or single-file modules) where rule 2 applies.
+const CMP_SCOPES: &[&str] = &[
+    "/search/", "/search.rs", "/markov/", "/markov.rs", "/api/", "/api.rs", "/metrics/",
+    "/metrics.rs",
+];
+
+/// Files where rule 4 applies. `store/io.rs` is deliberately absent:
+/// it *is* the sanctioned boundary that wraps `std::io::Error` into
+/// `StoreError::Io{op,path}`.
+const ERR_SCOPES: &[&str] =
+    &["store/mod.rs", "store/wal.rs", "store/snapshot.rs", "advisor/replicate.rs"];
+
+/// Keywords that may legitimately precede `[` without the bracket being
+/// a (panicking) index expression — `let [a, b] = …`, `&mut [T]`, etc.
+const INDEX_PREV_KEYWORDS: &[&str] = &[
+    "let", "mut", "ref", "in", "return", "match", "if", "else", "move", "as", "break",
+    "continue", "where", "for", "while", "loop", "impl", "dyn", "pub", "use", "crate", "type",
+    "const", "static", "struct", "enum", "unsafe", "fn", "box", "yield",
+];
+
+/// Routes the auth gate leaves open; everything else requires a token
+/// once `MALLEABLE_API_TOKEN` is set.
+const OPEN_ROUTE_PATHS: &[&str] = &["/healthz", "/metrics"];
+
+// ---------------------------------------------------------------------
+// Lock classes (rule 3)
+// ---------------------------------------------------------------------
+
+/// The lock hierarchy, in sanctioned acquisition order.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum LockClass {
+    CacheShard,
+    Registry,
+    Track,
+    TraceRing,
+}
+
+impl LockClass {
+    fn order(self) -> usize {
+        match self {
+            LockClass::CacheShard => 0,
+            LockClass::Registry => 1,
+            LockClass::Track => 2,
+            LockClass::TraceRing => 3,
+        }
+    }
+
+    fn name(self) -> &'static str {
+        match self {
+            LockClass::CacheShard => "cache shard",
+            LockClass::Registry => "track registry",
+            LockClass::Track => "track",
+            LockClass::TraceRing => "trace ring",
+        }
+    }
+}
+
+const LOCK_CLASSES: &[LockClass] =
+    &[LockClass::CacheShard, LockClass::Registry, LockClass::Track, LockClass::TraceRing];
+
+/// A lock acquired while another classified lock is held.
+#[derive(Debug, Clone)]
+struct LockEdge {
+    from: LockClass,
+    to: LockClass,
+    file: String,
+    line: u32,
+}
+
+// ---------------------------------------------------------------------
+// Per-file context
+// ---------------------------------------------------------------------
+
+/// Token-index span of a function body (`{` .. matching `}`).
+struct FnSpan {
+    name: String,
+    start: usize,
+    end: usize,
+}
+
+struct FileCtx {
+    path: String,
+    toks: Vec<Tok>,
+    /// `(line, rule)` for every well-formed allow comment.
+    allows: Vec<(u32, &'static str)>,
+    /// Token-index spans of `#[cfg(test)]` / `#[test]` items.
+    tests: Vec<(usize, usize)>,
+    fns: Vec<FnSpan>,
+}
+
+impl FileCtx {
+    fn build(path: String, lexed: Lexed, findings: &mut Vec<Finding>) -> FileCtx {
+        let mut allows = Vec::new();
+        for (line, text) in &lexed.comments {
+            let Some(pos) = text.find("srclint:") else {
+                continue;
+            };
+            let rest = text.get(pos + "srclint:".len()..).unwrap_or("").trim_start();
+            match parse_allow(rest) {
+                Ok(rule) => allows.push((*line, rule)),
+                Err(msg) => findings.push(Finding {
+                    rule: RULE_ALLOW,
+                    file: path.clone(),
+                    line: *line,
+                    message: msg,
+                }),
+            }
+        }
+        let toks = lexed.toks;
+        let tests = test_spans(&toks);
+        let fns = fn_spans(&toks);
+        FileCtx { path, toks, allows, tests, fns }
+    }
+
+    fn t(&self, i: usize) -> Option<&Tok> {
+        self.toks.get(i)
+    }
+
+    /// Is this finding suppressed by an allow comment on the same line
+    /// or the line directly above?
+    fn allowed(&self, rule: &str, line: u32) -> bool {
+        self.allows.iter().any(|(l, r)| *r == rule && (*l == line || *l + 1 == line))
+    }
+
+    fn in_test(&self, idx: usize) -> bool {
+        self.tests.iter().any(|(s, e)| (*s..=*e).contains(&idx))
+    }
+
+    /// Name of the innermost function whose body contains `idx`.
+    fn fn_name_at(&self, idx: usize) -> Option<&str> {
+        self.fns
+            .iter()
+            .filter(|f| (f.start..=f.end).contains(&idx))
+            .min_by_key(|f| f.end - f.start)
+            .map(|f| f.name.as_str())
+    }
+
+    fn push(&self, findings: &mut Vec<Finding>, rule: &'static str, line: u32, message: String) {
+        if !self.allowed(rule, line) {
+            findings.push(Finding { rule, file: self.path.clone(), line, message });
+        }
+    }
+}
+
+/// Parse the tail of an allow comment after `srclint:`. Returns the rule
+/// it suppresses, or a grammar-violation message.
+fn parse_allow(rest: &str) -> Result<&'static str, String> {
+    let Some(rest) = rest.strip_prefix("allow(") else {
+        return Err("srclint comment must read `srclint: allow(<rule>) — reason`".to_string());
+    };
+    let Some(close) = rest.find(')') else {
+        return Err("unclosed `allow(` in srclint comment".to_string());
+    };
+    let name = rest.get(..close).unwrap_or("").trim();
+    let Some(rule) = RULE_NAMES.iter().find(|r| **r == name) else {
+        return Err(format!("unknown srclint rule '{name}' in allow comment"));
+    };
+    let after = rest.get(close + 1..).unwrap_or("");
+    let reason = after.trim_start().trim_start_matches(['—', '–', '-']).trim();
+    if reason.chars().count() < 3 {
+        return Err(format!("allow({name}) must carry a reason after the dash"));
+    }
+    Ok(rule)
+}
+
+/// Token index of the `}` matching the `{` at `open` (or the end of the
+/// stream when unbalanced).
+fn match_brace(toks: &[Tok], open: usize) -> usize {
+    let mut depth = 0i64;
+    for (idx, t) in toks.iter().enumerate().skip(open) {
+        if t.is_punct('{') {
+            depth += 1;
+        } else if t.is_punct('}') {
+            depth -= 1;
+            if depth <= 0 {
+                return idx;
+            }
+        }
+    }
+    toks.len()
+}
+
+/// Token index of the `)` matching the `(` at `open`.
+fn match_paren(toks: &[Tok], open: usize) -> usize {
+    let mut depth = 0i64;
+    for (idx, t) in toks.iter().enumerate().skip(open) {
+        if t.is_punct('(') {
+            depth += 1;
+        } else if t.is_punct(')') {
+            depth -= 1;
+            if depth <= 0 {
+                return idx;
+            }
+        }
+    }
+    toks.len()
+}
+
+/// Spans of items behind `#[cfg(test)]` or `#[test]` attributes. All
+/// rules skip these: test code may unwrap freely.
+fn test_spans(toks: &[Tok]) -> Vec<(usize, usize)> {
+    let mut spans = Vec::new();
+    let mut i = 0usize;
+    while i < toks.len() {
+        if !is_test_attr(toks, i) {
+            i += 1;
+            continue;
+        }
+        // Find the attached item's body: first `{` before a `;`.
+        let mut j = i + 1;
+        let mut end = None;
+        while let Some(t) = toks.get(j) {
+            if t.is_punct('{') {
+                end = Some(match_brace(toks, j));
+                break;
+            }
+            if t.is_punct(';') {
+                end = Some(j);
+                break;
+            }
+            j += 1;
+        }
+        match end {
+            Some(e) => {
+                spans.push((i, e));
+                i = e + 1;
+            }
+            None => break,
+        }
+    }
+    spans
+}
+
+fn is_test_attr(toks: &[Tok], i: usize) -> bool {
+    let p = |k: usize, c: char| toks.get(i + k).is_some_and(|t| t.is_punct(c));
+    let w = |k: usize, s: &str| toks.get(i + k).is_some_and(|t| t.is_ident(s));
+    if !p(0, '#') || !p(1, '[') {
+        return false;
+    }
+    // #[test]
+    if w(2, "test") && p(3, ']') {
+        return true;
+    }
+    // #[cfg(test)]
+    w(2, "cfg") && p(3, '(') && w(4, "test") && p(5, ')') && p(6, ']')
+}
+
+/// All function-body spans, by declared name.
+fn fn_spans(toks: &[Tok]) -> Vec<FnSpan> {
+    let mut spans = Vec::new();
+    for i in 0..toks.len() {
+        let is_fn = toks.get(i).is_some_and(|t| t.is_ident("fn"));
+        let Some(name) = (if is_fn { toks.get(i + 1).and_then(Tok::ident) } else { None }) else {
+            continue;
+        };
+        let mut j = i + 2;
+        while let Some(t) = toks.get(j) {
+            if t.is_punct('{') {
+                spans.push(FnSpan {
+                    name: name.to_string(),
+                    start: j,
+                    end: match_brace(toks, j),
+                });
+                break;
+            }
+            if t.is_punct(';') {
+                break;
+            }
+            j += 1;
+        }
+    }
+    spans
+}
+
+// ---------------------------------------------------------------------
+// The analyzer
+// ---------------------------------------------------------------------
+
+/// Accumulates per-file findings plus the cross-file state (the lock
+/// graph and the replication trace-root check). Feed files with
+/// [`Analyzer::add_file`], then call [`Analyzer::finish`].
+#[derive(Default)]
+pub struct Analyzer {
+    findings: Vec<Finding>,
+    edges: Vec<LockEdge>,
+    /// `Some((path, line, has_root))` once `advisor/replicate.rs` was seen.
+    replicate: Option<(String, u32, bool)>,
+}
+
+impl Analyzer {
+    pub fn new() -> Analyzer {
+        Analyzer::default()
+    }
+
+    /// Scan one file. `path` is used for rule scoping and finding
+    /// attribution; it need not exist on disk (fixtures pass virtual
+    /// paths).
+    pub fn add_file(&mut self, path: &str, src: &str) {
+        let norm = path.replace('\\', "/");
+        let ctx = FileCtx::build(norm, lex(src), &mut self.findings);
+        rule_panic(&ctx, &mut self.findings);
+        rule_cmp(&ctx, &mut self.findings);
+        rule_lock(&ctx, &mut self.findings, &mut self.edges);
+        rule_err(&ctx, &mut self.findings);
+        rule_route(&ctx, &mut self.findings);
+        if ctx.path.ends_with("advisor/replicate.rs") {
+            let has_root = (0..ctx.toks.len()).any(|i| {
+                ctx.t(i).is_some_and(|t| t.is_ident("root"))
+                    && ctx.t(i + 1).is_some_and(|t| t.is_punct('('))
+                    && ctx.t(i + 2).is_some_and(|t| t.str_lit() == Some("replication_round"))
+            });
+            self.replicate = Some((ctx.path.clone(), 1, has_root));
+        }
+    }
+
+    /// Run the cross-file checks and return every finding, sorted by
+    /// `(file, line, rule)`.
+    pub fn finish(mut self) -> Vec<Finding> {
+        if let Some((path, line, has_root)) = &self.replicate {
+            if !has_root {
+                self.findings.push(Finding {
+                    rule: RULE_ROUTE,
+                    file: path.clone(),
+                    line: *line,
+                    message: "replication puller must open a 'replication_round' trace root"
+                        .to_string(),
+                });
+            }
+        }
+        self.check_lock_cycles();
+        self.findings.sort_by_key(|f| (f.file.clone(), f.line, f.rule));
+        self.findings.dedup();
+        self.findings
+    }
+
+    /// DFS over the aggregated lock graph; any cycle is a deadlock
+    /// candidate regardless of which file contributed each edge.
+    fn check_lock_cycles(&mut self) {
+        let mut adj = [[false; 4]; 4];
+        for e in &self.edges {
+            adj[e.from.order()][e.to.order()] = true;
+        }
+        // Find a back edge via iterative DFS from each class.
+        for &start in LOCK_CLASSES {
+            let mut on_path = [false; 4];
+            if let Some(cycle_edge) = dfs_back_edge(&adj, start.order(), &mut on_path) {
+                let (u, v) = cycle_edge;
+                let witness = self
+                    .edges
+                    .iter()
+                    .find(|e| e.from.order() == u && e.to.order() == v)
+                    .map(|e| (e.file.clone(), e.line))
+                    .unwrap_or_default();
+                let names: Vec<&str> =
+                    LOCK_CLASSES.iter().filter(|c| on_path[c.order()]).map(|c| c.name()).collect();
+                self.findings.push(Finding {
+                    rule: RULE_LOCK,
+                    file: witness.0,
+                    line: witness.1,
+                    message: format!("lock-order cycle involving: {}", names.join(", ")),
+                });
+                return;
+            }
+        }
+    }
+}
+
+/// Recursive DFS helper: returns the first back edge `(u, v)` found.
+fn dfs_back_edge(adj: &[[bool; 4]; 4], u: usize, on_path: &mut [bool; 4]) -> Option<(usize, usize)> {
+    if let Some(slot) = on_path.get_mut(u) {
+        *slot = true;
+    }
+    for v in 0..4 {
+        let has = adj.get(u).is_some_and(|row| row.get(v).copied().unwrap_or(false));
+        if !has {
+            continue;
+        }
+        if on_path.get(v).copied().unwrap_or(false) {
+            return Some((u, v));
+        }
+        if let Some(hit) = dfs_back_edge(adj, v, on_path) {
+            return Some(hit);
+        }
+    }
+    if let Some(slot) = on_path.get_mut(u) {
+        *slot = false;
+    }
+    None
+}
+
+// ---------------------------------------------------------------------
+// Rule 1: no-panic-paths
+// ---------------------------------------------------------------------
+
+fn rule_panic(ctx: &FileCtx, findings: &mut Vec<Finding>) {
+    let whole = PANIC_WHOLE_FILES.iter().any(|f| ctx.path.ends_with(f));
+    let scoped_fns: Option<&[&str]> = PANIC_SCOPED_FNS
+        .iter()
+        .find(|(f, _)| ctx.path.ends_with(f))
+        .map(|(_, fns)| *fns);
+    if !whole && scoped_fns.is_none() {
+        return;
+    }
+    for idx in 0..ctx.toks.len() {
+        if ctx.in_test(idx) {
+            continue;
+        }
+        if let Some(fns) = scoped_fns {
+            let inside = ctx.fn_name_at(idx).is_some_and(|n| fns.contains(&n));
+            if !inside {
+                continue;
+            }
+        }
+        let Some(tok) = ctx.t(idx) else { continue };
+        let line = tok.line;
+        match &tok.kind {
+            TokKind::Ident(w) if w == "unwrap" || w == "expect" => {
+                let dotted = idx > 0 && ctx.t(idx - 1).is_some_and(|t| t.is_punct('.'));
+                let called = ctx.t(idx + 1).is_some_and(|t| t.is_punct('('));
+                if dotted && called {
+                    ctx.push(
+                        findings,
+                        RULE_PANIC,
+                        line,
+                        format!(".{w}() in fuzz-reachable code — return a typed error instead"),
+                    );
+                }
+            }
+            TokKind::Ident(w) if w == "panic" => {
+                if ctx.t(idx + 1).is_some_and(|t| t.is_punct('!')) {
+                    ctx.push(
+                        findings,
+                        RULE_PANIC,
+                        line,
+                        "panic! in fuzz-reachable code — return a typed error instead".to_string(),
+                    );
+                }
+            }
+            TokKind::Punct('[') if idx > 0 => {
+                let indexes = match ctx.t(idx - 1).map(|t| &t.kind) {
+                    Some(TokKind::Ident(w)) => !INDEX_PREV_KEYWORDS.contains(&w.as_str()),
+                    Some(TokKind::Punct(')' | ']' | '?')) => true,
+                    _ => false,
+                };
+                if indexes {
+                    ctx.push(
+                        findings,
+                        RULE_PANIC,
+                        line,
+                        "slice/array indexing can panic in fuzz-reachable code — use .get() or a \
+                         slice pattern"
+                            .to_string(),
+                    );
+                }
+            }
+            _ => {}
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Rule 2: total-cmp-only
+// ---------------------------------------------------------------------
+
+fn rule_cmp(ctx: &FileCtx, findings: &mut Vec<Finding>) {
+    if !CMP_SCOPES.iter().any(|d| ctx.path.contains(d)) {
+        return;
+    }
+    for idx in 0..ctx.toks.len() {
+        if ctx.in_test(idx) {
+            continue;
+        }
+        let Some(tok) = ctx.t(idx) else { continue };
+        let line = tok.line;
+        let Some(word) = tok.ident() else { continue };
+        if word == "partial_cmp" {
+            ctx.push(
+                findings,
+                RULE_CMP,
+                line,
+                "partial_cmp on floats — use total_cmp (NaN-safe, PR 5 class)".to_string(),
+            );
+            continue;
+        }
+        // `f64::max` / `f64::min` used as a fold function value.
+        if word == "f64"
+            && ctx.t(idx + 1).is_some_and(|t| t.is_punct(':'))
+            && ctx.t(idx + 2).is_some_and(|t| t.is_punct(':'))
+        {
+            let target = ctx.t(idx + 3).and_then(Tok::ident);
+            let called = ctx.t(idx + 4).is_some_and(|t| t.is_punct('('));
+            if matches!(target, Some("max") | Some("min")) && !called {
+                ctx.push(
+                    findings,
+                    RULE_CMP,
+                    line,
+                    "naive f64::max/min fold — NaN poisons the fold silently; use total_cmp \
+                     ordering"
+                        .to_string(),
+                );
+            }
+            continue;
+        }
+        // `.sort_by(..)` and friends whose comparator never says total_cmp.
+        let is_sorter =
+            matches!(word, "sort_by" | "sort_unstable_by" | "max_by" | "min_by");
+        if is_sorter
+            && idx > 0
+            && ctx.t(idx - 1).is_some_and(|t| t.is_punct('.'))
+            && ctx.t(idx + 1).is_some_and(|t| t.is_punct('('))
+        {
+            let close = match_paren(&ctx.toks, idx + 1);
+            let has_total = (idx + 1..close)
+                .any(|k| ctx.t(k).is_some_and(|t| t.is_ident("total_cmp") || t.is_ident("cmp")));
+            if !has_total {
+                ctx.push(
+                    findings,
+                    RULE_CMP,
+                    line,
+                    format!(".{word}() comparator without total_cmp/cmp — float ordering must be \
+                             NaN-safe"),
+                );
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Rule 3: lock-order
+// ---------------------------------------------------------------------
+
+/// A guard currently held at some lexical depth.
+struct Guard {
+    name: Option<String>,
+    class: LockClass,
+    depth: i64,
+}
+
+fn rule_lock(ctx: &FileCtx, findings: &mut Vec<Finding>, edges: &mut Vec<LockEdge>) {
+    for f in &ctx.fns {
+        if ctx.in_test(f.start) {
+            continue;
+        }
+        walk_fn_locks(ctx, f, findings, edges);
+    }
+}
+
+fn walk_fn_locks(ctx: &FileCtx, f: &FnSpan, findings: &mut Vec<Finding>, edges: &mut Vec<LockEdge>) {
+    let mut depth = 0i64;
+    let mut guards: Vec<Guard> = Vec::new();
+    let mut idx = f.start;
+    while idx <= f.end {
+        let Some(tok) = ctx.t(idx) else { break };
+        match &tok.kind {
+            TokKind::Punct('{') => depth += 1,
+            TokKind::Punct('}') => {
+                depth -= 1;
+                guards.retain(|g| g.depth <= depth);
+            }
+            TokKind::Ident(w) if w == "drop" => {
+                // `drop(ident)` releases that guard early.
+                let name = if ctx.t(idx + 1).is_some_and(|t| t.is_punct('(')) {
+                    ctx.t(idx + 2).and_then(Tok::ident).filter(|_| {
+                        ctx.t(idx + 3).is_some_and(|t| t.is_punct(')'))
+                    })
+                } else {
+                    None
+                };
+                if let Some(n) = name {
+                    guards.retain(|g| g.name.as_deref() != Some(n));
+                }
+            }
+            TokKind::Ident(w) if w == "lock" || w == "read" || w == "write" => {
+                let dotted = idx > 0 && ctx.t(idx - 1).is_some_and(|t| t.is_punct('.'));
+                let no_args = ctx.t(idx + 1).is_some_and(|t| t.is_punct('('))
+                    && ctx.t(idx + 2).is_some_and(|t| t.is_punct(')'));
+                if dotted && no_args {
+                    let (class, chain_start) = classify_receiver(ctx, idx - 1);
+                    if let Some(to) = class {
+                        for g in &guards {
+                            record_edge(ctx, g.class, to, tok.line, findings, edges);
+                        }
+                        if let Some(name) = let_binding(ctx, chain_start) {
+                            guards.push(Guard { name: Some(name), class: to, depth });
+                        }
+                    }
+                }
+            }
+            _ => {}
+        }
+        idx += 1;
+    }
+}
+
+fn record_edge(
+    ctx: &FileCtx,
+    from: LockClass,
+    to: LockClass,
+    line: u32,
+    findings: &mut Vec<Finding>,
+    edges: &mut Vec<LockEdge>,
+) {
+    edges.push(LockEdge { from, to, file: ctx.path.clone(), line });
+    if from == LockClass::Registry && to == LockClass::Track {
+        ctx.push(
+            findings,
+            RULE_LOCK,
+            line,
+            "track registry lock held across a track-lock acquisition — snapshot the handles \
+             in a scoped block and release the registry first"
+                .to_string(),
+        );
+    } else if to.order() <= from.order() {
+        ctx.push(
+            findings,
+            RULE_LOCK,
+            line,
+            format!(
+                "{} lock acquired while holding a {} lock — sanctioned order is cache shard < \
+                 track registry < track < trace ring",
+                to.name(),
+                from.name()
+            ),
+        );
+    }
+}
+
+/// Walk the receiver chain backwards from the `.` before `lock`/`read`/
+/// `write`. Returns the lock class (by receiver vocabulary + file path)
+/// and the token index where the chain starts (for let-binding checks).
+fn classify_receiver(ctx: &FileCtx, dot_idx: usize) -> (Option<LockClass>, usize) {
+    let mut start = dot_idx;
+    let mut names = String::new();
+    let mut j = dot_idx;
+    while j > 0 {
+        let Some(prev) = ctx.t(j - 1) else { break };
+        match &prev.kind {
+            TokKind::Ident(w) => {
+                if matches!(w.as_str(), "let" | "mut" | "else" | "return" | "in" | "match" | "if")
+                {
+                    break;
+                }
+                names.push_str(w);
+                names.push(' ');
+                start = j - 1;
+                j -= 1;
+            }
+            TokKind::Punct('.' | ':' | '(' | ')' | '[' | ']' | '&' | ',') => {
+                start = j - 1;
+                j -= 1;
+            }
+            _ => break,
+        }
+    }
+    (classify_names(&names, &ctx.path), start)
+}
+
+fn classify_names(names: &str, path: &str) -> Option<LockClass> {
+    if names.contains("tracks") || names.contains("registry") {
+        return Some(LockClass::Registry);
+    }
+    if names.contains("ring") {
+        return Some(LockClass::TraceRing);
+    }
+    if names.contains("cache") {
+        return Some(LockClass::CacheShard);
+    }
+    if names.contains("shard") {
+        // Sharded locks exist at both ends of the hierarchy; the module
+        // disambiguates.
+        if path.contains("trace") {
+            return Some(LockClass::TraceRing);
+        }
+        return Some(LockClass::CacheShard);
+    }
+    if names.contains("handle") || names.contains("track") || names.trim() == "h" {
+        return Some(LockClass::Track);
+    }
+    None
+}
+
+/// If the chain starting at `chain_start` is the right-hand side of a
+/// `let <name> = …` binding, return the bound name (the guard stays
+/// live to the end of the enclosing block).
+fn let_binding(ctx: &FileCtx, chain_start: usize) -> Option<String> {
+    if chain_start < 2 || !ctx.t(chain_start - 1).is_some_and(|t| t.is_punct('=')) {
+        return None;
+    }
+    let name = ctx.t(chain_start - 2).and_then(Tok::ident)?;
+    if INDEX_PREV_KEYWORDS.contains(&name) {
+        return None;
+    }
+    Some(name.to_string())
+}
+
+// ---------------------------------------------------------------------
+// Rule 4: typed-errors
+// ---------------------------------------------------------------------
+
+fn rule_err(ctx: &FileCtx, findings: &mut Vec<Finding>) {
+    if !ERR_SCOPES.iter().any(|f| ctx.path.ends_with(f)) {
+        return;
+    }
+    for idx in 0..ctx.toks.len() {
+        if ctx.in_test(idx) {
+            continue;
+        }
+        let Some(tok) = ctx.t(idx) else { continue };
+        let line = tok.line;
+        // `io::Result` in a signature — the raw error type is leaking.
+        if tok.is_ident("io")
+            && ctx.t(idx + 1).is_some_and(|t| t.is_punct(':'))
+            && ctx.t(idx + 2).is_some_and(|t| t.is_punct(':'))
+            && ctx.t(idx + 3).is_some_and(|t| t.is_ident("Result"))
+        {
+            ctx.push(
+                findings,
+                RULE_ERR,
+                line,
+                "io::Result in a store API — wrap in StoreError::Io{op,path} at the boundary"
+                    .to_string(),
+            );
+            continue;
+        }
+        // `fs::<call>(..)?` or `.context(..)` — a raw io::Error escaping
+        // into anyhow without the StoreError envelope.
+        if !tok.is_ident("fs") {
+            continue;
+        }
+        let mut j = idx + 1;
+        let mut saw_path = false;
+        loop {
+            let colons = ctx.t(j).is_some_and(|t| t.is_punct(':'))
+                && ctx.t(j + 1).is_some_and(|t| t.is_punct(':'))
+                && ctx.t(j + 2).and_then(Tok::ident).is_some();
+            if !colons {
+                break;
+            }
+            saw_path = true;
+            j += 3;
+        }
+        if !saw_path || !ctx.t(j).is_some_and(|t| t.is_punct('(')) {
+            continue;
+        }
+        let close = match_paren(&ctx.toks, j);
+        let raw = if ctx.t(close + 1).is_some_and(|t| t.is_punct('?')) {
+            true
+        } else {
+            ctx.t(close + 1).is_some_and(|t| t.is_punct('.'))
+                && ctx
+                    .t(close + 2)
+                    .is_some_and(|t| t.is_ident("context") || t.is_ident("with_context"))
+        };
+        if raw {
+            ctx.push(
+                findings,
+                RULE_ERR,
+                line,
+                "std::fs error surfaces untyped — map_err into StoreError::io(op, path, e) so \
+                 callers see the operation and path"
+                    .to_string(),
+            );
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Rule 5: route-coverage
+// ---------------------------------------------------------------------
+
+fn rule_route(ctx: &FileCtx, findings: &mut Vec<Finding>) {
+    // The rule anchors on the route table: `const ROUTES`.
+    let Some(decl) = (0..ctx.toks.len()).find(|&i| {
+        ctx.t(i).is_some_and(|t| t.is_ident("const"))
+            && ctx.t(i + 1).is_some_and(|t| t.is_ident("ROUTES"))
+    }) else {
+        return;
+    };
+    let line = ctx.t(decl).map(|t| t.line).unwrap_or(1);
+    // Route table: string literals between `=` and `;`.
+    let mut table: Vec<String> = Vec::new();
+    let mut j = decl;
+    while let Some(t) = ctx.t(j) {
+        if t.is_punct('=') {
+            break;
+        }
+        j += 1;
+    }
+    while let Some(t) = ctx.t(j) {
+        if t.is_punct(';') {
+            break;
+        }
+        if let Some(s) = t.str_lit() {
+            table.push(s.to_string());
+        }
+        j += 1;
+    }
+    // Dispatch set: '/'-prefixed string literals inside `fn route`.
+    let route_fn = ctx.fns.iter().find(|f| f.name == "route");
+    let mut dispatch: Vec<String> = Vec::new();
+    let mut auth_gate = false;
+    if let Some(f) = route_fn {
+        for k in f.start..=f.end {
+            if let Some(s) = ctx.t(k).and_then(Tok::str_lit) {
+                if s.starts_with('/') && !dispatch.iter().any(|d| d == s) {
+                    dispatch.push(s.to_string());
+                }
+            }
+            // `path != "/healthz"` — the auth gate's open-route exemption.
+            if ctx.t(k).is_some_and(|t| t.is_ident("path"))
+                && ctx.t(k + 1).is_some_and(|t| t.is_punct('!'))
+                && ctx.t(k + 2).is_some_and(|t| t.is_punct('='))
+                && ctx.t(k + 3).is_some_and(|t| t.str_lit() == Some("/healthz"))
+            {
+                auth_gate = true;
+            }
+        }
+    } else {
+        ctx.push(
+            findings,
+            RULE_ROUTE,
+            line,
+            "route table present but no `fn route` dispatcher in this file".to_string(),
+        );
+    }
+    // /metrics is answered pre-dispatch in handle_connection.
+    let metrics_served = ctx
+        .fns
+        .iter()
+        .find(|f| f.name == "handle_connection")
+        .is_some_and(|f| {
+            (f.start..=f.end).any(|k| ctx.t(k).is_some_and(|t| t.str_lit() == Some("/metrics")))
+        });
+    for r in &table {
+        if r == "/metrics" {
+            if !metrics_served {
+                ctx.push(
+                    findings,
+                    RULE_ROUTE,
+                    line,
+                    "/metrics is in ROUTES but handle_connection never serves it".to_string(),
+                );
+            }
+            continue;
+        }
+        if route_fn.is_some() && !dispatch.iter().any(|d| d == r) {
+            ctx.push(
+                findings,
+                RULE_ROUTE,
+                line,
+                format!("route {r} is in ROUTES but fn route never dispatches it"),
+            );
+        }
+    }
+    for d in &dispatch {
+        if !table.iter().any(|r| r == d) {
+            ctx.push(
+                findings,
+                RULE_ROUTE,
+                line,
+                format!(
+                    "fn route dispatches {d} but it is missing from ROUTES — metric families \
+                     and auth gating would not cover it"
+                ),
+            );
+        }
+    }
+    for open in OPEN_ROUTE_PATHS {
+        if !table.iter().any(|r| r == open) {
+            ctx.push(
+                findings,
+                RULE_ROUTE,
+                line,
+                format!("open route {open} missing from ROUTES"),
+            );
+        }
+    }
+    if route_fn.is_some() && !auth_gate {
+        ctx.push(
+            findings,
+            RULE_ROUTE,
+            line,
+            "auth gate missing: fn route must exempt exactly \"/healthz\" (path != \
+             \"/healthz\") before requiring a token"
+                .to_string(),
+        );
+    }
+    // Metric families must be derived from ROUTES (requests + latency).
+    let iter_uses = (0..ctx.toks.len())
+        .filter(|&k| {
+            ctx.t(k).is_some_and(|t| t.is_ident("ROUTES"))
+                && ctx.t(k + 1).is_some_and(|t| t.is_punct('.'))
+                && ctx.t(k + 2).is_some_and(|t| t.is_ident("iter"))
+        })
+        .count();
+    if iter_uses < 2 {
+        ctx.push(
+            findings,
+            RULE_ROUTE,
+            line,
+            "metric families must be derived from ROUTES.iter() (request and latency series) \
+             so a new route cannot land unmetered"
+                .to_string(),
+        );
+    }
+    // Every request must run under a trace root.
+    let has_root = (0..ctx.toks.len()).any(|k| {
+        ctx.t(k).is_some_and(|t| t.is_ident("root"))
+            && ctx.t(k + 1).is_some_and(|t| t.is_punct('('))
+            && ctx.t(k + 2).is_some_and(|t| t.str_lit() == Some("request"))
+    });
+    if !has_root {
+        ctx.push(
+            findings,
+            RULE_ROUTE,
+            line,
+            "the connection loop must open a 'request' trace root around dispatch".to_string(),
+        );
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn scan(path: &str, src: &str) -> Vec<Finding> {
+        let mut a = Analyzer::new();
+        a.add_file(path, src);
+        a.finish()
+    }
+
+    #[test]
+    fn unwrap_in_scoped_fn_fires_and_allows_suppress() {
+        let src = "fn try_parse_request(b: &[u8]) -> usize {\n\
+                   let x = b.first().unwrap();\n\
+                   *x as usize\n\
+                   }\n";
+        let f = scan("rust/src/advisor/server.rs", src);
+        assert_eq!(f.len(), 1, "{f:?}");
+        assert!(f.iter().all(|x| x.rule == RULE_PANIC && x.line == 2));
+
+        let with_allow = "fn try_parse_request(b: &[u8]) -> usize {\n\
+                          // srclint: allow(no-panic-paths) — caller guarantees non-empty\n\
+                          let x = b.first().unwrap();\n\
+                          *x as usize\n\
+                          }\n";
+        assert!(scan("rust/src/advisor/server.rs", with_allow).is_empty());
+    }
+
+    #[test]
+    fn allow_without_reason_is_a_finding() {
+        let src = "fn try_parse_request(b: &[u8]) -> usize {\n\
+                   // srclint: allow(no-panic-paths)\n\
+                   let x = b.first().unwrap();\n\
+                   *x as usize\n\
+                   }\n";
+        let f = scan("rust/src/advisor/server.rs", src);
+        // The allow is malformed, so it does NOT suppress: grammar + panic.
+        assert_eq!(f.len(), 2, "{f:?}");
+        assert!(f.iter().any(|x| x.rule == RULE_ALLOW));
+        assert!(f.iter().any(|x| x.rule == RULE_PANIC));
+    }
+
+    #[test]
+    fn indexing_outside_scope_is_fine() {
+        let src = "fn helper(v: &[u8]) -> u8 { v[0] }\n";
+        assert!(scan("rust/src/search/mod.rs", src).is_empty());
+    }
+
+    #[test]
+    fn test_modules_are_exempt() {
+        let src = "#[cfg(test)]\nmod tests {\n fn f(v: &[u8]) { v[0]; x.unwrap(); }\n}\n";
+        assert!(scan("rust/src/advisor/protocol.rs", src).is_empty());
+    }
+
+    #[test]
+    fn registry_across_track_fires() {
+        let src = "fn bad(&self) {\n\
+                   let map = self.tracks.lock().unwrap();\n\
+                   let t = handle.lock().unwrap();\n\
+                   }\n";
+        let f = scan("rust/src/advisor/mod.rs", src);
+        assert!(
+            f.iter().any(|x| x.rule == RULE_LOCK && x.line == 3),
+            "{f:?}"
+        );
+    }
+
+    #[test]
+    fn scoped_snapshot_pattern_is_clean() {
+        let src = "fn good(&self) {\n\
+                   let handles = {\n\
+                   let map = self.tracks.lock().unwrap();\n\
+                   map.values().cloned().collect::<Vec<_>>()\n\
+                   };\n\
+                   for handle in handles {\n\
+                   let t = handle.lock().unwrap();\n\
+                   }\n\
+                   }\n";
+        assert!(scan("rust/src/advisor/mod.rs", src).is_empty());
+    }
+}

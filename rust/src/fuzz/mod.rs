@@ -85,6 +85,9 @@ pub enum FuzzTarget {
     /// The replication manifest/segment parsers and the replica's
     /// install-side segment validator ([`crate::advisor::replicate`]).
     Replicate,
+    /// The srclint analyzer ([`crate::analysis`]): its lexer must stay
+    /// total on arbitrary bytes decoded as lossy UTF-8.
+    Srclint,
 }
 
 impl FuzzTarget {
@@ -94,9 +97,10 @@ impl FuzzTarget {
             "wal" => Ok(FuzzTarget::Wal),
             "snapshot" => Ok(FuzzTarget::Snapshot),
             "replicate" => Ok(FuzzTarget::Replicate),
-            other => {
-                Err(anyhow!("unknown fuzz target '{other}' (http | wal | snapshot | replicate)"))
-            }
+            "srclint" => Ok(FuzzTarget::Srclint),
+            other => Err(anyhow!(
+                "unknown fuzz target '{other}' (http | wal | snapshot | replicate | srclint)"
+            )),
         }
     }
 
@@ -106,6 +110,7 @@ impl FuzzTarget {
             FuzzTarget::Wal => "wal",
             FuzzTarget::Snapshot => "snapshot",
             FuzzTarget::Replicate => "replicate",
+            FuzzTarget::Srclint => "srclint",
         }
     }
 }
@@ -237,6 +242,19 @@ fn drive(target: FuzzTarget, input: &[u8], rng: &mut Rng) -> Verdict {
                     Ok(_) => Verdict::Accepted,
                     Err(_) => Verdict::Rejected,
                 }
+            }
+        }
+        FuzzTarget::Srclint => {
+            // The lexer and rules must be total on arbitrary bytes: half-open
+            // strings, truncated comments, stray punctuation. Scan under a
+            // whole-file rule-1 path so every rule gets a chance to walk the
+            // token stream; mutated source with findings counts as rejected.
+            let text = String::from_utf8_lossy(input);
+            let findings = crate::analysis::scan_source("rust/src/advisor/protocol.rs", &text);
+            if findings.is_empty() {
+                Verdict::Accepted
+            } else {
+                Verdict::Rejected
             }
         }
     }
@@ -378,6 +396,16 @@ fn seed_corpus(target: FuzzTarget) -> Vec<Vec<u8>> {
                 snap,
             ]
         }
+        FuzzTarget::Srclint => vec![
+            // A clean snippet: mutants of it mostly stay finding-free.
+            b"fn parse(line: &str) -> Option<u32> {\n    let n = line.trim().parse::<u32>().ok()?;\n    Some(n)\n}\n"
+                .to_vec(),
+            // A violating snippet (panicky call + slice index under a
+            // whole-file rule-1 path) so the rejected half of the space
+            // is explored too.
+            b"fn decode(v: &[u8]) -> u32 {\n    let head = v.first().unwrap();\n    u32::from(*head) + u32::from(v[1])\n}\n"
+                .to_vec(),
+        ],
     }
 }
 
@@ -468,6 +496,14 @@ mod tests {
         assert_eq!(chunk.offset, 0);
         replicate::validate_segment_bytes(&chunk.name, &chunk.data)
             .expect("seed segment bytes must validate");
+
+        // The srclint seeds: the first scans clean, the second violates.
+        let lint = seed_corpus(FuzzTarget::Srclint);
+        let path = "rust/src/advisor/protocol.rs";
+        let clean = crate::analysis::scan_source(path, &String::from_utf8(lint[0].clone()).unwrap());
+        assert!(clean.is_empty(), "clean srclint seed has findings: {clean:?}");
+        let dirty = crate::analysis::scan_source(path, &String::from_utf8(lint[1].clone()).unwrap());
+        assert!(!dirty.is_empty(), "violating srclint seed scanned clean");
     }
 
     #[test]
@@ -486,9 +522,13 @@ mod tests {
 
     #[test]
     fn fuzz_targets_survive_a_smoke_burst_deterministically() {
-        for target in
-            [FuzzTarget::Http, FuzzTarget::Wal, FuzzTarget::Snapshot, FuzzTarget::Replicate]
-        {
+        for target in [
+            FuzzTarget::Http,
+            FuzzTarget::Wal,
+            FuzzTarget::Snapshot,
+            FuzzTarget::Replicate,
+            FuzzTarget::Srclint,
+        ] {
             let a = run(target, 300, 7);
             assert_eq!(a.panics, 0, "{}: {:?}", target.name(), a.first_panic);
             assert_eq!(a.iters, 300);
@@ -504,7 +544,7 @@ mod tests {
 
     #[test]
     fn target_names_round_trip() {
-        for name in ["http", "wal", "snapshot", "replicate"] {
+        for name in ["http", "wal", "snapshot", "replicate", "srclint"] {
             assert_eq!(FuzzTarget::from_name(name).unwrap().name(), name);
         }
         assert!(FuzzTarget::from_name("tcp").is_err());

@@ -1,3 +1,4 @@
+#![deny(unsafe_code)]
 //! # malleable-ckpt
 //!
 //! Reproduction of **"Determination of Checkpointing Intervals for Malleable
@@ -86,6 +87,7 @@
 //! parallelize over [`util::pool`].
 
 pub mod advisor;
+pub mod analysis;
 pub mod api;
 pub mod apps;
 pub mod baselines;

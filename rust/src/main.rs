@@ -149,7 +149,13 @@ fn app_spec() -> App {
                 flag("iters", "N", "mutated inputs to drive", Some("5000")),
                 flag("seed", "U64", "mutation RNG seed", Some("1")),
             ],
-            positionals: vec![("target", "http (request framing + JSON protocol) | wal (scanner) | snapshot (decoder) | replicate (manifest/segment install path)")],
+            positionals: vec![("target", "http (request framing + JSON protocol) | wal (scanner) | snapshot (decoder) | replicate (manifest/segment install path) | srclint (analyzer lexer totality)")],
+        })
+        .command(CommandSpec {
+            name: "srclint",
+            about: "repo-invariant static analyzer (DESIGN.md §16): token-level scan enforcing no-panic-paths, total-cmp-only, lock-order, typed-errors, and route-coverage; exits non-zero on any finding",
+            flags: vec![switch("json", "emit findings as a JSON report instead of text")],
+            positionals: vec![("paths...", "files or directories to scan [default: rust/src]")],
         })
         .command(CommandSpec {
             name: "info",
@@ -204,6 +210,7 @@ fn run(p: &malleable_ckpt::util::cli::Parsed) -> Result<()> {
         "experiment" => cmd_experiment(p),
         "analyze-trace" => cmd_analyze_trace(p),
         "fuzz" => cmd_fuzz(p),
+        "srclint" => cmd_srclint(p),
         "info" => cmd_info(),
         other => Err(anyhow!("unhandled command {other}")),
     }
@@ -648,7 +655,7 @@ fn cmd_fuzz(p: &malleable_ckpt::util::cli::Parsed) -> Result<()> {
     let target = fuzz::FuzzTarget::from_name(
         p.positionals
             .first()
-            .ok_or_else(|| anyhow!("missing fuzz target (http | wal | snapshot | replicate)"))?,
+            .ok_or_else(|| anyhow!("missing fuzz target (http | wal | snapshot | replicate | srclint)"))?,
     )?;
     let iters = p.get_u64("iters")?.unwrap_or(5_000);
     let seed = p.get_u64("seed")?.unwrap_or(1);
@@ -662,6 +669,28 @@ fn cmd_fuzz(p: &malleable_ckpt::util::cli::Parsed) -> Result<()> {
         report.rejected
     );
     Ok(())
+}
+
+fn cmd_srclint(p: &malleable_ckpt::util::cli::Parsed) -> Result<()> {
+    use malleable_ckpt::analysis;
+    use std::path::PathBuf;
+
+    let paths: Vec<PathBuf> = if p.positionals.is_empty() {
+        vec![PathBuf::from("rust/src")]
+    } else {
+        p.positionals.iter().map(PathBuf::from).collect()
+    };
+    let findings = analysis::scan_paths(&paths)?;
+    if p.switch("json") {
+        println!("{}", analysis::render_json(&findings).to_compact());
+    } else {
+        print!("{}", analysis::render_text(&findings));
+    }
+    if findings.is_empty() {
+        Ok(())
+    } else {
+        std::process::exit(1);
+    }
 }
 
 fn cmd_info() -> Result<()> {

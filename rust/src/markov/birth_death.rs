@@ -74,6 +74,7 @@ pub fn bd_stationary(s_max: usize, lambda: f64, theta: f64) -> Vec<f64> {
         }
         logs[s] = log_binom + s as f64 * ratio;
     }
+    // srclint: allow(total-cmp-only) — log-sum-exp guard: rates are validated finite, so no NaN reaches the fold
     let m = logs.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
     let mut z = 0.0;
     for s in 0..=s_max {

@@ -330,6 +330,7 @@ impl NativeCache {
                     return None;
                 }
                 let ld = bd_log_symmetrizer(s_max, lam, theta);
+                // srclint: allow(total-cmp-only) — log-symmetrizer entries are finite for validated positive rates
                 let ld_max = ld.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
                 let in_range = recs[ci]
                     .iter()

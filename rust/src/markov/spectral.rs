@@ -95,6 +95,7 @@ impl ChainSpectral {
         }
         let eig = sym_tridiag_eigen(&diag, &off)?;
         let log_d = bd_log_symmetrizer(s_max, lambda, theta);
+        // srclint: allow(total-cmp-only) — log-symmetrizer entries are finite for validated positive rates
         let log_d_max = log_d.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
         Ok(ChainSpectral { s_max, values: eig.values, vectors: eig.vectors, log_d, log_d_max })
     }

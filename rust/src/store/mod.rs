@@ -203,7 +203,7 @@ pub(crate) fn wal_path(dir: &Path, gen: u64) -> PathBuf {
 /// WAL generations present in a track dir, ascending.
 pub(crate) fn wal_gens(dir: &Path) -> Result<Vec<u64>> {
     let mut gens = Vec::new();
-    for entry in std::fs::read_dir(dir).with_context(|| format!("listing {}", dir.display()))? {
+    for entry in std::fs::read_dir(dir).map_err(|e| StoreError::io("list-track-dir", dir, e))? {
         let name = entry?.file_name();
         let Some(name) = name.to_str() else { continue };
         if let Some(num) = name.strip_prefix("wal-").and_then(|s| s.strip_suffix(".log")) {
@@ -231,7 +231,7 @@ impl TraceStore {
     pub fn with_compaction(root: impl Into<PathBuf>, compact_wal_bytes: u64) -> Result<TraceStore> {
         let root = root.into();
         std::fs::create_dir_all(root.join("tracks"))
-            .with_context(|| format!("creating data dir {}", root.display()))?;
+            .map_err(|e| StoreError::io("create-data-dir", &root, e))?;
         Ok(TraceStore { root, compact_wal_bytes: compact_wal_bytes.max(1) })
     }
 
@@ -247,7 +247,10 @@ impl TraceStore {
     /// All persisted track ids, sorted (decoded from directory names).
     pub fn track_ids(&self) -> Result<Vec<String>> {
         let mut ids = Vec::new();
-        for entry in std::fs::read_dir(self.root.join("tracks"))? {
+        let tracks = self.root.join("tracks");
+        for entry in
+            std::fs::read_dir(&tracks).map_err(|e| StoreError::io("list-tracks", &tracks, e))?
+        {
             let entry = entry?;
             if entry.file_type()?.is_dir() {
                 let name = entry.file_name();
@@ -298,7 +301,7 @@ impl TrackStore {
         dir: &Path,
         n_if_new: Option<usize>,
     ) -> Result<(TrackStore, TrackState)> {
-        std::fs::create_dir_all(dir)?;
+        std::fs::create_dir_all(dir).map_err(|e| StoreError::io("create-track-dir", dir, e))?;
         let snap = snapshot::load_with(io.as_ref(), dir)?;
         let (mut state, start_gen, covered) = match snap {
             Some(s) => (Some(s.state), s.gen, s.covered),
@@ -523,7 +526,8 @@ pub fn inspect(root: &Path) -> Result<Json> {
         let mut wal_files = Vec::new();
         for gen in wal_gens(&dir)? {
             let path = wal_path(&dir, gen);
-            let len = std::fs::metadata(&path)?.len();
+            let len =
+                std::fs::metadata(&path).map_err(|e| StoreError::io("stat-wal", &path, e))?.len();
             wal_bytes += len;
             wal_files.push(Json::from(format!("wal-{gen}.log ({len} B)").as_str()));
         }

@@ -131,10 +131,13 @@ pub fn encode(gen: u64, covered: u64, state: &TrackState) -> Vec<u8> {
 /// clean decode or that error, never a panic or an oversized allocation.
 pub fn decode(bytes: &[u8], origin: &Path) -> Result<Snapshot> {
     let corrupt = |detail: String| StoreError::corrupt(origin, detail);
+    // srclint: allow(no-panic-paths) — the length guard runs before the magic slice on the same line
     if bytes.len() < SNAP_MAGIC.len() + 8 || bytes[..SNAP_MAGIC.len()] != SNAP_MAGIC {
         return Err(corrupt("not a snapshot (bad magic)".to_string()).into());
     }
+    // srclint: allow(no-panic-paths) — bytes.len() >= magic + 8 was checked above
     let body = &bytes[SNAP_MAGIC.len()..bytes.len() - 8];
+    // srclint: allow(no-panic-paths) — an 8-byte suffix slice always converts to [u8; 8]
     let stored = u64::from_le_bytes(bytes[bytes.len() - 8..].try_into().unwrap());
     if fnv1a_64(body) != stored {
         return Err(corrupt("failed its checksum".to_string()).into());

@@ -96,16 +96,17 @@ impl<'a> ByteReader<'a> {
 
     fn take(&mut self, n: usize) -> Result<&'a [u8]> {
         ensure!(self.i + n <= self.b.len(), "record payload truncated");
-        let s = &self.b[self.i..self.i + n];
+        let s = &self.b[self.i..self.i + n]; // srclint: allow(no-panic-paths) — bounds ensured on the line above
         self.i += n;
         Ok(s)
     }
 
     pub(crate) fn u8(&mut self) -> Result<u8> {
-        Ok(self.take(1)?[0])
+        Ok(self.take(1)?[0]) // srclint: allow(no-panic-paths) — take(1) yields exactly one byte
     }
 
     pub(crate) fn u64(&mut self) -> Result<u64> {
+        // srclint: allow(no-panic-paths) — take(8) yields exactly 8 bytes, so try_into cannot fail
         Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
     }
 
@@ -348,6 +349,7 @@ pub fn scan_bytes(bytes: &[u8], origin: &Path) -> Result<WalScan> {
             error: Some("torn magic header".to_string()),
         });
     }
+    // srclint: allow(no-panic-paths) — the sub-magic case returned above, so bytes.len() >= WAL_MAGIC.len()
     if bytes[..WAL_MAGIC.len()] != WAL_MAGIC {
         return Err(StoreError::corrupt(origin, "not a WAL file (bad magic)").into());
     }
@@ -356,6 +358,7 @@ pub fn scan_bytes(bytes: &[u8], origin: &Path) -> Result<WalScan> {
     let mut error = None;
     while i < bytes.len() {
         let Some(len_bytes) = bytes.get(i..i + 4) else { break };
+        // srclint: allow(no-panic-paths) — the get() above pinned the slice to 4 bytes
         let len = u32::from_le_bytes(len_bytes.try_into().unwrap()) as usize;
         if len == 0 || len > MAX_BODY_BYTES {
             error = Some(format!("frame at {i} declares {len} bytes"));
@@ -363,6 +366,7 @@ pub fn scan_bytes(bytes: &[u8], origin: &Path) -> Result<WalScan> {
         }
         let Some(body) = bytes.get(i + 4..i + 4 + len) else { break };
         let Some(sum_bytes) = bytes.get(i + 4 + len..i + 12 + len) else { break };
+        // srclint: allow(no-panic-paths) — the get() above pinned the slice to 8 bytes
         let stored = u64::from_le_bytes(sum_bytes.try_into().unwrap());
         if fnv1a_64(body) != stored {
             error = Some(format!("checksum mismatch at {i}"));

@@ -9,6 +9,11 @@
 //!
 //! Both map onto [`FailureTrace`]; hosts/nodes are densely re-indexed in
 //! first-appearance order so arbitrary identifiers work.
+//!
+//! This module is fuzz-reachable end to end, so it is under srclint's
+//! whole-file no-panic-paths rule: typed errors only, no unwraps, no
+//! unguarded indexing (DESIGN.md §16).
+#![warn(clippy::unwrap_used, clippy::expect_used, clippy::panic)]
 
 use super::FailureTrace;
 use anyhow::{bail, Context, Result};
@@ -27,11 +32,12 @@ fn build_trace(rows: Vec<(String, f64, f64)>, horizon: Option<f64>) -> Result<Fa
         if id == outages.len() {
             outages.push(Vec::new());
         }
+        // srclint: allow(no-panic-paths) — `id` is dense by construction: or_insert caps it at outages.len()
         outages[id].push((f, r));
         max_t = max_t.max(r);
     }
     for list in outages.iter_mut() {
-        list.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        list.sort_by(|a, b| a.0.total_cmp(&b.0).then(a.1.total_cmp(&b.1)));
         // Merge overlapping outages (real traces contain duplicates).
         let mut merged: Vec<(f64, f64)> = Vec::with_capacity(list.len());
         for &(f, r) in list.iter() {
@@ -54,17 +60,17 @@ pub fn parse_lanl_csv(text: &str, horizon: Option<f64>) -> Result<FailureTrace> 
             continue;
         }
         let fields: Vec<&str> = line.split(',').map(str::trim).collect();
-        if fields.len() < 3 {
+        let &[host, f_raw, r_raw, ..] = fields.as_slice() else {
             bail!("line {}: expected node,fail_start,repair_end", lineno + 1);
-        }
+        };
         // Skip a header row.
-        if lineno == 0 && fields[1].parse::<f64>().is_err() {
+        if lineno == 0 && f_raw.parse::<f64>().is_err() {
             continue;
         }
-        let f: f64 = fields[1]
+        let f: f64 = f_raw
             .parse()
             .with_context(|| format!("line {}: bad fail_start", lineno + 1))?;
-        let r: f64 = fields[2]
+        let r: f64 = r_raw
             .parse()
             .with_context(|| format!("line {}: bad repair_end", lineno + 1))?;
         // f64::parse accepts "NaN"/"inf"; a NaN would panic only later,
@@ -75,7 +81,7 @@ pub fn parse_lanl_csv(text: &str, horizon: Option<f64>) -> Result<FailureTrace> 
         if r <= f {
             bail!("line {}: repair_end <= fail_start", lineno + 1);
         }
-        rows.push((fields[0].to_string(), f, r));
+        rows.push((host.to_string(), f, r));
     }
     build_trace(rows, horizon)
 }
@@ -89,13 +95,13 @@ pub fn parse_condor(text: &str, horizon: Option<f64>) -> Result<FailureTrace> {
             continue;
         }
         let fields: Vec<&str> = line.split_whitespace().collect();
-        if fields.len() < 3 {
+        let &[host, f_raw, r_raw, ..] = fields.as_slice() else {
             bail!("line {}: expected host vacate_start vacate_end", lineno + 1);
-        }
-        let f: f64 = fields[1]
+        };
+        let f: f64 = f_raw
             .parse()
             .with_context(|| format!("line {}: bad vacate_start", lineno + 1))?;
-        let r: f64 = fields[2]
+        let r: f64 = r_raw
             .parse()
             .with_context(|| format!("line {}: bad vacate_end", lineno + 1))?;
         if !f.is_finite() || !r.is_finite() {
@@ -104,7 +110,7 @@ pub fn parse_condor(text: &str, horizon: Option<f64>) -> Result<FailureTrace> {
         if r <= f {
             bail!("line {}: vacate_end <= vacate_start", lineno + 1);
         }
-        rows.push((fields[0].to_string(), f, r));
+        rows.push((host.to_string(), f, r));
     }
     build_trace(rows, horizon)
 }
@@ -121,6 +127,7 @@ pub fn to_lanl_csv(trace: &FailureTrace) -> String {
 }
 
 #[cfg(test)]
+#[allow(clippy::unwrap_used, clippy::expect_used, clippy::panic)]
 mod tests {
     use super::*;
 

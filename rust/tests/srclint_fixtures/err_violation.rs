@@ -1,0 +1,6 @@
+use std::io;
+
+fn load(path: &std::path::Path) -> io::Result<Vec<u8>> {
+    let bytes = std::fs::read(path)?;
+    Ok(bytes)
+}

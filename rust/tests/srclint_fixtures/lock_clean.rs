@@ -1,0 +1,10 @@
+fn sweep(state: &State) {
+    let handles = {
+        let map = state.tracks.lock();
+        map.collect_handles()
+    };
+    for h in handles {
+        let track = h.lock();
+        track.touch();
+    }
+}

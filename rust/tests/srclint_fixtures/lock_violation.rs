@@ -1,0 +1,7 @@
+fn sweep(state: &State) {
+    let map = state.tracks.lock();
+    for handle in map.values() {
+        let track = handle.lock();
+        track.touch();
+    }
+}

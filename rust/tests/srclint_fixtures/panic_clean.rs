@@ -1,0 +1,9 @@
+fn parse(v: &[u8]) -> Result<u32, String> {
+    let &[a, b, ..] = v else {
+        return Err("short frame".to_string());
+    };
+    let head = v.first().ok_or("empty frame")?;
+    // srclint: allow(no-panic-paths) — the two-byte slice pattern above pins the length
+    let tail = v[1];
+    Ok(u32::from(*head) + u32::from(a) + u32::from(b) + u32::from(tail))
+}

@@ -1,0 +1,7 @@
+fn parse(v: &[u8]) -> u32 {
+    if v.is_empty() {
+        panic!("empty frame");
+    }
+    let head = v.first().unwrap();
+    u32::from(*head) + u32::from(v[1])
+}

